@@ -1,0 +1,83 @@
+//! Topology explorer: prints the actual phase-by-phase edge structure of
+//! the paper's constructions for small n — the programmatic equivalent of
+//! the paper's Figs. 2, 3, 4, 10-17.
+//!
+//! Run: `cargo run --release --offline --example topology_explorer [-- n k]`
+
+use basegraph::topology::{base, simple_base, TopologyKind};
+
+fn show_phases(title: &str, seq: &basegraph::topology::GraphSequence) {
+    println!("\n--- {title} ---");
+    println!(
+        "{} phases, max degree {}, finite-time: {}",
+        seq.len(),
+        seq.max_degree(),
+        seq.is_finite_time(1e-9)
+    );
+    for (i, w) in seq.phases.iter().enumerate() {
+        let mut edges = Vec::new();
+        for a in 0..w.n {
+            for b in (a + 1)..w.n {
+                let wab = w.get(a, b);
+                if wab.abs() > 1e-12 {
+                    edges.push(format!("({a},{b}; {wab:.3})"));
+                }
+            }
+        }
+        println!("  G^({}) = {{ {} }}", i + 1, edges.join(" "));
+    }
+}
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    // Paper Fig. 3 / Fig. 4: Simple Base vs Base.
+    let simple = simple_base::simple_base(n, k)?;
+    show_phases(
+        &format!("Simple Base-{} Graph, n={n} (Alg. 2)", k + 1),
+        &simple,
+    );
+    let b = base::base(n, k)?;
+    show_phases(&format!("Base-{} Graph, n={n} (Alg. 3)", k + 1), &b);
+    println!(
+        "\nAlg. 3 line 12 picked the {} sequence ({} vs {} phases).",
+        if b.len() < simple.len() { "shorter p·q" } else { "simple" },
+        b.len(),
+        simple.len()
+    );
+
+    // The k-peer hyper-hypercube when n is smooth (Fig. 2/10).
+    let hh_result = TopologyKind::HyperHypercube { k }.build(n, 0);
+    if let Ok(hh) = hh_result {
+        show_phases(
+            &format!("{k}-peer Hyper-Hypercube, n={n} (Alg. 1)"),
+            &hh,
+        );
+    } else {
+        println!(
+            "\n({k}-peer hyper-hypercube does not exist for n={n}: not \
+             ({})-smooth)",
+            k + 1
+        );
+    }
+
+    // Consensus demonstration with integer values (easy to eyeball).
+    println!("\n--- consensus walk on the Base-{} Graph ---", k + 1);
+    let mut xs: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64]).collect();
+    let expect: f64 = (0..n).map(|i| i as f64).sum::<f64>() / n as f64;
+    println!(
+        "init:  {:?}  (target consensus {expect})",
+        xs.iter().map(|v| v[0]).collect::<Vec<_>>()
+    );
+    for (i, w) in b.phases.iter().enumerate() {
+        xs = w.apply(&xs);
+        println!(
+            "G^({}): {:?}",
+            i + 1,
+            xs.iter().map(|v| (v[0] * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

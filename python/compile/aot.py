@@ -1,0 +1,162 @@
+"""AOT pipeline: lower every model/kernel entry point to HLO text.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+results via the PJRT C API and Python never appears on the training path.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir:
+
+* ``<model>_<variant>_{train,eval}.hlo.txt`` — flat-ABI train/eval steps for
+  each model in model.MODELS x {pallas, ref} variants (the ``ref`` variant
+  lowers the pure-jnp oracle path and exists for the kernel-vs-reference
+  ablation bench).
+* ``mix_m<m>_d<d>.hlo.txt`` — the Pallas gossip-mixing kernel for each
+  (neighbor-count, model-dimension) pair the examples use.
+* ``manifest.json`` — machine-readable index the Rust runtime validates
+  against at load time.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+import compile.model as M
+from compile.kernels import mixing as mixing_k
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    import numpy as np
+
+    if np.dtype(dt) == np.float32:
+        return "f32"
+    if np.dtype(dt) == np.int32:
+        return "i32"
+    raise ValueError(f"unsupported dtype {dt}")
+
+
+def lower_model(name: str, variant: str, train: bool, out_dir: str) -> dict:
+    use_pallas = variant == "pallas"
+    step = (
+        M.make_train_step(name, use_pallas=use_pallas)
+        if train
+        else M.make_eval_step(name, use_pallas=use_pallas)
+    )
+    flat, _ = M.flat_init(name)
+    x_spec, y_spec = M.example_batch(name, train)
+    p_spec = jax.ShapeDtypeStruct(flat.shape, flat.dtype)
+    lowered = jax.jit(step).lower(p_spec, x_spec, y_spec)
+    text = to_hlo_text(lowered)
+    kind = "train" if train else "eval"
+    fname = f"{name}_{variant}_{kind}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "hlo": fname,
+        "batch": x_spec.shape[0],
+        "x_shape": list(x_spec.shape),
+        "x_dtype": _dtype_tag(x_spec.dtype),
+        "y_shape": list(y_spec.shape),
+        "y_dtype": _dtype_tag(y_spec.dtype),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def lower_mix(m: int, d: int, out_dir: str) -> dict:
+    import jax.numpy as jnp
+
+    nb = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((m,), jnp.float32)
+    lowered = jax.jit(lambda n_, w_: (mixing_k.mix(n_, w_),)).lower(nb, w)
+    text = to_hlo_text(lowered)
+    fname = f"mix_m{m}_d{d}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "name": f"mix_m{m}_d{d}",
+        "hlo": fname,
+        "m": m,
+        "d": d,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="mlp,cnn,transformer",
+        help="comma-separated subset of models to lower",
+    )
+    ap.add_argument(
+        "--variants",
+        default="pallas,ref",
+        help="comma-separated subset of {pallas,ref}",
+    )
+    ap.add_argument(
+        "--skip-mix", action="store_true", help="skip mixing-kernel artifacts"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": [], "mix": []}
+    names = [n for n in args.models.split(",") if n]
+    variants = [v for v in args.variants.split(",") if v]
+    for name in names:
+        d = M.d_params(name)
+        # Dump the exact JAX initialization so the Rust coordinator starts
+        # training from the same point (little-endian f32).
+        import numpy as np
+
+        flat, _ = M.flat_init(name)
+        init_file = f"{name}_init.f32"
+        np.asarray(flat, dtype="<f4").tofile(
+            os.path.join(args.out_dir, init_file)
+        )
+        for variant in variants:
+            entry = {
+                "name": name,
+                "variant": variant,
+                "d_params": d,
+                "init": init_file,
+            }
+            print(f"[aot] lowering {name}/{variant} (D={d}) ...", flush=True)
+            entry["train"] = lower_model(name, variant, True, args.out_dir)
+            entry["eval"] = lower_model(name, variant, False, args.out_dir)
+            manifest["models"].append(entry)
+
+    if not args.skip_mix:
+        # Mixing-kernel artifacts for the gossip-ablation bench: m = k+1
+        # partners for the degrees the examples exercise, at each model's D.
+        for name in names:
+            d = M.d_params(name)
+            for m in (2, 3, 5):
+                print(f"[aot] lowering mix m={m} d={d} ...", flush=True)
+                manifest["mix"].append(lower_mix(m, d, args.out_dir))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} model "
+          f"entries and {len(manifest['mix'])} mix entries to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

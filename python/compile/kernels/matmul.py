@@ -1,0 +1,228 @@
+"""Layer-1 Pallas kernel: blocked matmul + fused dense layer.
+
+This is the compute hot spot of every model in the repo (MLP/CNN dense
+layers, transformer projections). The kernel follows the TPU idiom even
+though we execute it with ``interpret=True`` on CPU (the CPU PJRT plugin
+cannot run Mosaic custom-calls):
+
+* the grid is ``(M/bm, N/bn, K/bk)`` and each step consumes an
+  ``(bm, bk) x (bk, bn)`` tile — the HBM->VMEM schedule is expressed with
+  ``BlockSpec`` index maps rather than CUDA-style threadblocks;
+* the K axis is the innermost ("arbitrary") grid dimension and the output
+  block is revisited across it, accumulating in f32 — the standard MXU
+  accumulation pattern;
+* block defaults are MXU-shaped (128x128) and shrink to the problem size.
+
+VMEM footprint per grid step = (bm*bk + bk*bn + bm*bn) * 4 bytes; the
+default 128^3 tiling uses 192 KiB, well under the ~16 MiB VMEM budget
+(see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf for the
+block-shape sweep).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_to(arr, axis, multiple):
+    size = arr.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(arr, pad)
+
+
+def _matmul_impl(x, y, bm: int, bn: int, bk: int, interpret: bool):
+    """Blocked Pallas matmul: ``(M, K) @ (K, N) -> (M, N)`` in f32.
+
+    Shapes that do not tile evenly are zero-padded up to the block grid and
+    the result is sliced back; zero padding is exact for matmul.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+# Pallas kernels are not auto-differentiable (the grid/program_id machinery
+# has no JVP rule), so the public entry points carry custom VJPs whose
+# backward passes are themselves expressed with the same blocked kernel:
+# d/dx (x@y) = g @ y^T and d/dy (x@y) = x^T @ g.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _matmul_diff(x, y, bm, bn, bk, interpret):
+    return _matmul_impl(x, y, bm, bn, bk, interpret)
+
+
+def _matmul_fwd(x, y, bm, bn, bk, interpret):
+    return _matmul_impl(x, y, bm, bn, bk, interpret), (x, y)
+
+
+def _matmul_bwd(bm, bn, bk, interpret, res, g):
+    x, y = res
+    dx = _matmul_impl(g, y.T, bm, bn, bk, interpret)
+    dy = _matmul_impl(x.T, g, bm, bn, bk, interpret)
+    return dx.astype(x.dtype), dy.astype(y.dtype)
+
+
+_matmul_diff.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: bool = True):
+    """Differentiable blocked Pallas matmul (see `_matmul_impl`)."""
+    return _matmul_diff(x, y, bm, bn, bk, interpret)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """Fused tile: o = act(x @ w + b), bias+activation applied on the last
+    K step so intermediate accumulation stays pre-activation f32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif act == "tanh":
+            out = jnp.tanh(out)
+        elif act == "gelu":
+            c = jnp.sqrt(2.0 / jnp.pi).astype(out.dtype)
+            out = 0.5 * out * (1.0 + jnp.tanh(c * (out + 0.044715 * out**3)))
+        o_ref[...] = out
+
+
+def _dense_impl(x, w, b, act: str, bm: int, bn: int, bk: int,
+                interpret: bool):
+    """Fused dense layer ``act(x @ w + b)`` as a single Pallas kernel.
+
+    x: (M, K), w: (K, N), b: (N,). Fusing bias+activation into the matmul
+    epilogue avoids a second HBM round-trip over the (M, N) output.
+    """
+    assert act in ("none", "relu", "tanh", "gelu"), act
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b.reshape(1, -1), 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, nk=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _act_grad(pre, act: str):
+    """Elementwise d(act)/d(pre) on the recomputed pre-activation. Cheap VPU
+    work; the heavy contractions in the VJP go through the Pallas matmul."""
+    if act == "none":
+        return jnp.ones_like(pre)
+    if act == "relu":
+        return (pre > 0).astype(pre.dtype)
+    if act == "tanh":
+        t = jnp.tanh(pre)
+        return 1.0 - t * t
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        u = c * (pre + 0.044715 * pre**3)
+        t = jnp.tanh(u)
+        du = c * (1.0 + 3.0 * 0.044715 * pre**2)
+        return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t * t) * du
+    raise ValueError(act)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _dense_diff(x, w, b, act, bm, bn, bk, interpret):
+    return _dense_impl(x, w, b, act, bm, bn, bk, interpret)
+
+
+def _dense_fwd(x, w, b, act, bm, bn, bk, interpret):
+    return _dense_impl(x, w, b, act, bm, bn, bk, interpret), (x, w, b)
+
+
+def _dense_bwd(act, bm, bn, bk, interpret, res, g):
+    x, w, b = res
+    # Recompute the pre-activation (rematerialization trades one extra
+    # kernel launch for not storing the (M, N) intermediate).
+    pre = _dense_impl(x, w, b, "none", bm, bn, bk, interpret)
+    gp = g * _act_grad(pre, act)
+    dx = _matmul_impl(gp, w.T, bm, bn, bk, interpret)
+    dw = _matmul_impl(x.T, gp, bm, bn, bk, interpret)
+    db = jnp.sum(gp, axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+_dense_diff.defvjp(_dense_fwd, _dense_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
+def dense(x, w, b, act: str = "none", bm: int = 128, bn: int = 128,
+          bk: int = 128, interpret: bool = True):
+    """Differentiable fused dense layer (see `_dense_impl`)."""
+    return _dense_diff(x, w, b, act, bm, bn, bk, interpret)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Layer-1 kernel in this package has a reference implementation here;
+pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+allclose between kernel and oracle. The oracles are also what the models can
+fall back to (``use_pallas=False``) for the kernel-vs-reference ablation.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain matmul oracle: (M, K) @ (K, N) -> (M, N) in f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def matmul_bias_act_ref(x, w, b, act="none"):
+    """Fused dense-layer oracle: act(x @ w + b)."""
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out + b.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "tanh":
+        out = jnp.tanh(out)
+    elif act == "gelu":
+        # tanh-approximation GELU, matching kernels/matmul.py
+        c = jnp.sqrt(2.0 / jnp.pi).astype(out.dtype)
+        out = 0.5 * out * (1.0 + jnp.tanh(c * (out + 0.044715 * out**3)))
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    return out
+
+
+def mixing_ref(neighbors, weights):
+    """Gossip-mixing oracle.
+
+    neighbors: (m, d) — the local parameter vector and its m-1 neighbor
+    vectors stacked row-wise. weights: (m,) — the corresponding row of the
+    doubly-stochastic mixing matrix. Output: (d,) weighted combination.
+    """
+    return jnp.einsum(
+        "m,md->d",
+        weights.astype(jnp.float32),
+        neighbors.astype(jnp.float32),
+    )
+
+
+def softmax_ref(x, axis=-1):
+    """Numerically-stable softmax oracle."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Single-head scaled-dot-product attention oracle.
+
+    q, k, v: (T, H). Returns (T, H).
+    """
+    t = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = softmax_ref(scores, axis=-1)
+    return jnp.matmul(probs, v.astype(jnp.float32))

@@ -1,0 +1,354 @@
+"""Layer-2: JAX model definitions with a flat-parameter ABI.
+
+Three model families back the paper's experiments (see DESIGN.md for the
+substitution table):
+
+* ``mlp``         — Gaussian-mixture classification (stands in for
+                    FashionMNIST + LeNet in Fig. 7a).
+* ``cnn``         — synthetic 12x12x3 images, conv + group-norm stack
+                    (stands in for CIFAR-10 + VGG-11 / ResNet-18).
+* ``transformer`` — character LM for the end-to-end example
+                    (examples/e2e_transformer.rs).
+
+Every model is exposed to the Rust coordinator through two pure functions
+with a **flat f32 parameter vector** so the gossip engine can treat model
+state as an opaque ``f32[D]``:
+
+    train_step: (params f32[D], x, y) -> (loss f32[], grads f32[D])
+    eval_step:  (params f32[D], x, y) -> (loss f32[], correct f32[])
+
+Dense layers and attention go through the Pallas kernels in
+``compile/kernels`` when ``use_pallas=True`` (the default for shipped
+artifacts); ``use_pallas=False`` lowers the pure-jnp oracle path instead and
+is emitted as the ``ref`` artifact variant for the kernel-vs-reference
+ablation bench.
+"""
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels import attention as attn_k
+from compile.kernels import matmul as matmul_k
+from compile.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def _dense(x, w, b, act: str, use_pallas: bool):
+    if use_pallas:
+        return matmul_k.dense(x, w, b, act=act)
+    return kref.matmul_bias_act_ref(x, w, b, act=act)
+
+
+def _group_norm(x, gamma, beta, groups: int = 4, eps: float = 1e-5):
+    """GroupNorm (Wu & He 2018) for NHWC inputs, as in the paper's setup:
+    per-sample statistics over (H, W, C/groups) within each channel group."""
+    n, h, w, c = x.shape
+    assert c % groups == 0, (c, groups)
+    xg = x.reshape(n, h, w, groups, c // groups)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(x.shape) * gamma + beta
+
+
+def _layer_norm(x, gamma, beta, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def _softmax_xent(logits, labels):
+    """Mean cross-entropy; labels are int class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def _accuracy_count(logits, labels):
+    return jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+MLP_IN = 64
+MLP_HIDDEN = (128, 128)
+MLP_CLASSES = 10
+
+
+def mlp_init(key) -> Dict[str, Any]:
+    dims = (MLP_IN,) + MLP_HIDDEN + (MLP_CLASSES,)
+    params = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / din)
+        params[f"w{i}"] = jax.random.normal(sub, (din, dout)) * scale
+        params[f"b{i}"] = jnp.zeros((dout,))
+    return params
+
+
+def mlp_apply(params, x, use_pallas: bool):
+    h = x
+    n_layers = len(MLP_HIDDEN) + 1
+    for i in range(n_layers):
+        act = "relu" if i < n_layers - 1 else "none"
+        h = _dense(h, params[f"w{i}"], params[f"b{i}"], act, use_pallas)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# CNN classifier (VGG-ish: conv/GN/relu x2 with pooling, then dense head)
+# ---------------------------------------------------------------------------
+
+CNN_HW = 12
+CNN_CIN = 3
+CNN_CLASSES = 10
+_CNN_CH = (16, 32)
+
+
+def cnn_init(key) -> Dict[str, Any]:
+    params = {}
+    cin = CNN_CIN
+    for i, cout in enumerate(_CNN_CH):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / (9 * cin))
+        params[f"conv{i}"] = jax.random.normal(sub, (3, 3, cin, cout)) * scale
+        params[f"gn_g{i}"] = jnp.ones((cout,))
+        params[f"gn_b{i}"] = jnp.zeros((cout,))
+        cin = cout
+    flat = (CNN_HW // 4) ** 2 * _CNN_CH[-1]  # two 2x2 pools
+    key, sub = jax.random.split(key)
+    params["w_fc0"] = jax.random.normal(sub, (flat, 128)) * jnp.sqrt(2.0 / flat)
+    params["b_fc0"] = jnp.zeros((128,))
+    key, sub = jax.random.split(key)
+    params["w_fc1"] = jax.random.normal(sub, (128, CNN_CLASSES)) * jnp.sqrt(2.0 / 128)
+    params["b_fc1"] = jnp.zeros((CNN_CLASSES,))
+    return params
+
+
+def _max_pool_2x2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params, x, use_pallas: bool):
+    h = x  # NHWC
+    for i in range(len(_CNN_CH)):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = _group_norm(h, params[f"gn_g{i}"], params[f"gn_b{i}"])
+        h = jax.nn.relu(h)
+        h = _max_pool_2x2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = _dense(h, params["w_fc0"], params["b_fc0"], "relu", use_pallas)
+    return _dense(h, params["w_fc1"], params["b_fc1"], "none", use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Transformer character LM
+# ---------------------------------------------------------------------------
+
+LM_VOCAB = 64
+LM_SEQ = 64
+LM_DIM = 128
+LM_HEADS = 4
+LM_LAYERS = 2
+LM_FF = 512
+
+
+def transformer_init(key) -> Dict[str, Any]:
+    params = {}
+    key, sub = jax.random.split(key)
+    params["emb"] = jax.random.normal(sub, (LM_VOCAB, LM_DIM)) * 0.02
+    key, sub = jax.random.split(key)
+    params["pos"] = jax.random.normal(sub, (LM_SEQ, LM_DIM)) * 0.02
+    for l in range(LM_LAYERS):
+        for name, shape in (
+            ("wq", (LM_DIM, LM_DIM)),
+            ("wk", (LM_DIM, LM_DIM)),
+            ("wv", (LM_DIM, LM_DIM)),
+            ("wo", (LM_DIM, LM_DIM)),
+            ("wf1", (LM_DIM, LM_FF)),
+            ("wf2", (LM_FF, LM_DIM)),
+        ):
+            key, sub = jax.random.split(key)
+            scale = jnp.sqrt(2.0 / shape[0])
+            params[f"{name}{l}"] = jax.random.normal(sub, shape) * scale
+        params[f"bf1{l}"] = jnp.zeros((LM_FF,))
+        params[f"bf2{l}"] = jnp.zeros((LM_DIM,))
+        params[f"ln1g{l}"] = jnp.ones((LM_DIM,))
+        params[f"ln1b{l}"] = jnp.zeros((LM_DIM,))
+        params[f"ln2g{l}"] = jnp.ones((LM_DIM,))
+        params[f"ln2b{l}"] = jnp.zeros((LM_DIM,))
+    params["lnfg"] = jnp.ones((LM_DIM,))
+    params["lnfb"] = jnp.zeros((LM_DIM,))
+    key, sub = jax.random.split(key)
+    params["head"] = jax.random.normal(sub, (LM_DIM, LM_VOCAB)) * 0.02
+    return params
+
+
+def _mha(params, l: int, h, use_pallas: bool):
+    """Multi-head causal self-attention over h: (B, T, D)."""
+    b, t, d = h.shape
+    hd = d // LM_HEADS
+
+    def proj(w):
+        # (B*T, D) @ (D, D) through the Pallas matmul.
+        flat = h.reshape(b * t, d)
+        if use_pallas:
+            out = matmul_k.matmul(flat, w)
+        else:
+            out = kref.matmul_ref(flat, w)
+        return out.reshape(b, t, LM_HEADS, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj(params[f"wq{l}"]), proj(params[f"wk{l}"]), proj(params[f"wv{l}"])
+    if use_pallas:
+        att = jax.vmap(jax.vmap(
+            lambda qq, kk, vv: attn_k.attention(qq, kk, vv, causal=True)
+        ))(q, k, v)
+    else:
+        att = jax.vmap(jax.vmap(
+            lambda qq, kk, vv: kref.attention_ref(qq, kk, vv, causal=True)
+        ))(q, k, v)
+    att = att.transpose(0, 2, 1, 3).reshape(b * t, d)
+    if use_pallas:
+        out = matmul_k.matmul(att, params[f"wo{l}"])
+    else:
+        out = kref.matmul_ref(att, params[f"wo{l}"])
+    return out.reshape(b, t, d)
+
+
+def transformer_apply(params, x, use_pallas: bool):
+    """x: (B, T) int32 token ids -> logits (B, T, V)."""
+    b, t = x.shape
+    h = params["emb"][x] + params["pos"][None, :t, :]
+    for l in range(LM_LAYERS):
+        hn = _layer_norm(h, params[f"ln1g{l}"], params[f"ln1b{l}"])
+        h = h + _mha(params, l, hn, use_pallas)
+        hn = _layer_norm(h, params[f"ln2g{l}"], params[f"ln2b{l}"])
+        ff = _dense(
+            hn.reshape(b * t, LM_DIM),
+            params[f"wf1{l}"], params[f"bf1{l}"], "gelu", use_pallas,
+        )
+        ff = _dense(ff, params[f"wf2{l}"], params[f"bf2{l}"], "none", use_pallas)
+        h = h + ff.reshape(b, t, LM_DIM)
+    h = _layer_norm(h, params["lnfg"], params["lnfb"])
+    flat = h.reshape(b * t, LM_DIM)
+    if use_pallas:
+        logits = matmul_k.matmul(flat, params["head"])
+    else:
+        logits = kref.matmul_ref(flat, params["head"])
+    return logits.reshape(b, t, LM_VOCAB)
+
+
+# ---------------------------------------------------------------------------
+# flat-ABI wrappers
+# ---------------------------------------------------------------------------
+
+class ModelDef(NamedTuple):
+    name: str
+    init: Callable[[Any], Dict[str, Any]]
+    apply: Callable[..., jnp.ndarray]
+    x_spec: Tuple[Tuple[int, ...], Any]       # (shape-sans-batch, dtype)
+    y_spec: Tuple[Tuple[int, ...], Any]
+    train_batch: int
+    eval_batch: int
+    seq_labels: bool  # True when y is (B, T) next-token ids
+
+
+MODELS: Dict[str, ModelDef] = {
+    "mlp": ModelDef(
+        "mlp", mlp_init, mlp_apply,
+        ((MLP_IN,), jnp.float32), ((), jnp.int32), 32, 256, False,
+    ),
+    "cnn": ModelDef(
+        "cnn", cnn_init, cnn_apply,
+        ((CNN_HW, CNN_HW, CNN_CIN), jnp.float32), ((), jnp.int32), 16, 128,
+        False,
+    ),
+    "transformer": ModelDef(
+        "transformer", transformer_init, transformer_apply,
+        ((LM_SEQ,), jnp.int32), ((LM_SEQ,), jnp.int32), 8, 16, True,
+    ),
+}
+
+
+def flat_init(name: str, seed: int = 0):
+    """Initialize a model; returns (flat_params f32[D], unravel_fn)."""
+    mdef = MODELS[name]
+    params = mdef.init(jax.random.PRNGKey(seed))
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def _loss_from_logits(mdef: ModelDef, logits, y):
+    if mdef.seq_labels:
+        v = logits.shape[-1]
+        return _softmax_xent(logits.reshape(-1, v), y.reshape(-1))
+    return _softmax_xent(logits, y)
+
+
+def make_train_step(name: str, use_pallas: bool = True, seed: int = 0):
+    """Build ``(params f32[D], x, y) -> (loss f32[], grads f32[D])``."""
+    mdef = MODELS[name]
+    _, unravel = flat_init(name, seed)
+
+    def loss_fn(flat_params, x, y):
+        params = unravel(flat_params)
+        logits = mdef.apply(params, x, use_pallas)
+        return _loss_from_logits(mdef, logits, y)
+
+    def train_step(flat_params, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(flat_params, x, y)
+        return loss, grads
+
+    return train_step
+
+
+def make_eval_step(name: str, use_pallas: bool = True, seed: int = 0):
+    """Build ``(params f32[D], x, y) -> (loss f32[], correct f32[])``.
+
+    ``correct`` counts per-example hits (per-token for the LM).
+    """
+    mdef = MODELS[name]
+    _, unravel = flat_init(name, seed)
+
+    def eval_step(flat_params, x, y):
+        params = unravel(flat_params)
+        logits = mdef.apply(params, x, use_pallas)
+        loss = _loss_from_logits(mdef, logits, y)
+        if mdef.seq_labels:
+            v = logits.shape[-1]
+            correct = _accuracy_count(logits.reshape(-1, v), y.reshape(-1))
+        else:
+            correct = _accuracy_count(logits, y)
+        return loss, correct
+
+    return eval_step
+
+
+def example_batch(name: str, train: bool):
+    """ShapeDtypeStructs for AOT lowering."""
+    mdef = MODELS[name]
+    b = mdef.train_batch if train else mdef.eval_batch
+    x = jax.ShapeDtypeStruct((b,) + mdef.x_spec[0], mdef.x_spec[1])
+    y = jax.ShapeDtypeStruct((b,) + mdef.y_spec[0], mdef.y_spec[1])
+    return x, y
+
+
+def d_params(name: str) -> int:
+    flat, _ = flat_init(name)
+    return int(flat.shape[0])

@@ -1,0 +1,72 @@
+"""AOT pipeline tests: HLO text is parseable, manifests are consistent, and
+the lowered computation has the flat-ABI entry layout the Rust runtime
+expects."""
+
+import json
+import os
+
+import jax
+import pytest
+
+import compile.aot as aot
+import compile.model as M
+
+
+def test_to_hlo_text_basic():
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4,4]" in text
+
+
+def test_lowered_train_step_entry_layout(tmp_path):
+    entry = aot.lower_model("mlp", "ref", True, str(tmp_path))
+    text = (tmp_path / entry["hlo"]).read_text()
+    d = M.d_params("mlp")
+    # Entry signature: (params, x, y) -> (loss, grads)
+    assert f"f32[{d}]" in text
+    assert "s32[32]" in text
+    assert entry["batch"] == 32
+    assert entry["x_shape"] == [32, M.MLP_IN]
+
+
+def test_lower_mix_artifact(tmp_path):
+    entry = aot.lower_mix(3, 128, str(tmp_path))
+    text = (tmp_path / entry["hlo"]).read_text()
+    assert "f32[3,128]" in text
+    assert entry["m"] == 3 and entry["d"] == 128
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                     "manifest.json")
+    ),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_shipped_manifest_consistent():
+    """Every manifest entry must point at an existing HLO file whose hash
+    matches, and d_params must agree with the live model definitions."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(art, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    import hashlib
+
+    for entry in manifest["models"]:
+        assert entry["d_params"] == M.d_params(entry["name"])
+        for kind in ("train", "eval"):
+            path = os.path.join(art, entry[kind]["hlo"])
+            assert os.path.exists(path), path
+            text = open(path).read()
+            assert (
+                hashlib.sha256(text.encode()).hexdigest()
+                == entry[kind]["sha256"]
+            ), f"stale artifact {path}: re-run `make artifacts`"
+    for entry in manifest["mix"]:
+        assert os.path.exists(os.path.join(art, entry["hlo"]))

@@ -1,0 +1,222 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the core
+correctness signal for the compute layer (the kernels run under
+interpret=True, exactly as they are lowered into the shipped artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import matmul as matmul_k
+from compile.kernels import mixing as mixing_k
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, bm, bn, bk, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    got = matmul_k.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(0, (32, 48)).astype(dtype)
+    y = _rand(1, (48, 24)).astype(dtype)
+    got = matmul_k.matmul(x, y, bm=16, bn=16, bk=16)
+    want = ref.matmul_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_matmul_identity():
+    x = _rand(2, (17, 17))
+    eye = jnp.eye(17)
+    np.testing.assert_allclose(
+        matmul_k.matmul(x, eye, bm=8, bn=8, bk=8), x, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_matmul_gradients_match_ref():
+    x = _rand(3, (24, 40))
+    y = _rand(4, (40, 12))
+
+    def f_kernel(x, y):
+        return jnp.sum(matmul_k.matmul(x, y, bm=16, bn=16, bk=16) ** 2)
+
+    def f_ref(x, y):
+        return jnp.sum(ref.matmul_ref(x, y) ** 2)
+
+    gx, gy = jax.grad(f_kernel, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused dense
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    act=st.sampled_from(["none", "relu", "tanh", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = matmul_k.dense(x, w, b, act=act, bm=16, bn=16, bk=16)
+    want = ref.matmul_bias_act_ref(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "tanh", "gelu"])
+def test_dense_gradients_match_ref(act):
+    x = _rand(5, (16, 20))
+    w = _rand(6, (20, 12))
+    b = _rand(7, (12,))
+
+    def f_kernel(x, w, b):
+        return jnp.sum(matmul_k.dense(x, w, b, act=act, bm=8, bn=8, bk=8) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.matmul_bias_act_ref(x, w, b, act=act) ** 2)
+
+    g = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    r = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gi, ri in zip(g, r):
+        np.testing.assert_allclose(gi, ri, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mixing
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 9),
+    d=st.integers(1, 5000),
+    bd=st.sampled_from([64, 256, 65536]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mixing_matches_ref(m, d, bd, seed):
+    nb = _rand(seed, (m, d))
+    w = jax.nn.softmax(_rand(seed + 1, (m,)))  # row of a stochastic matrix
+    got = mixing_k.mix(nb, w, bd=bd)
+    want = ref.mixing_ref(nb, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mixing_uniform_weights_is_mean():
+    nb = _rand(8, (5, 1234))
+    w = jnp.full((5,), 0.2)
+    np.testing.assert_allclose(
+        mixing_k.mix(nb, w, bd=256), jnp.mean(nb, axis=0),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_mixing_identity_weight_row():
+    """Weight row = e_i selects neighbor i exactly."""
+    nb = _rand(9, (4, 777))
+    for i in range(4):
+        w = jnp.zeros((4,)).at[i].set(1.0)
+        np.testing.assert_allclose(
+            mixing_k.mix(nb, w, bd=128), nb[i], rtol=1e-6, atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.sampled_from([32, 64, 128]),
+    h=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    bq=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(t, h, causal, bq, bk, seed):
+    if t % bq != 0 or t % bk != 0:
+        return
+    q = _rand(seed, (t, h))
+    k = _rand(seed + 1, (t, h))
+    v = _rand(seed + 2, (t, h))
+    got = attn_k.attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_multi_block_streaming_softmax():
+    """The online-softmax recurrence must agree with the dense oracle even
+    when K/V is split across several blocks."""
+    q = _rand(10, (128, 16))
+    k = _rand(11, (128, 16))
+    v = _rand(12, (128, 16))
+    got = attn_k.attention(q, k, v, causal=True, bq=32, bk=32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_gradients_match_ref():
+    q = _rand(13, (64, 16))
+    k = _rand(14, (64, 16))
+    v = _rand(15, (64, 16))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(attn_k.attention(q, k, v) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    g = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    r = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for gi, ri in zip(g, r):
+        np.testing.assert_allclose(gi, ri, rtol=1e-3, atol=1e-3)
+
+
+def test_attention_causality():
+    """Future tokens must not influence past outputs."""
+    q = _rand(16, (64, 8))
+    k = _rand(17, (64, 8))
+    v = _rand(18, (64, 8))
+    out1 = attn_k.attention(q, k, v, causal=True)
+    # Perturb the last key/value; outputs at positions < 63 must not move.
+    k2 = k.at[-1].add(100.0)
+    v2 = v.at[-1].add(100.0)
+    out2 = attn_k.attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:-1], out2[:-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[-1], out2[-1])

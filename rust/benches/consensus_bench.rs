@@ -1,0 +1,54 @@
+//! Consensus-simulation benchmarks: gossip iteration throughput per
+//! topology (the inner loop of Figs. 1/6/21/23) and the spectral
+//! consensus-rate estimator.
+
+use basegraph::consensus::{gaussian_init, simulate};
+use basegraph::topology::TopologyKind;
+use basegraph::util::bench::{black_box, Bencher};
+use basegraph::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("# one consensus sweep (d=1, the paper's Sec. 6.1 setting)");
+    for n in [25usize, 128, 512] {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::Exp,
+            TopologyKind::Base { m: 2 },
+            TopologyKind::Base { m: 5 },
+        ] {
+            let seq = match kind.build(n, 0) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let mut rng = Rng::new(0);
+            let init = gaussian_init(n, 1, &mut rng);
+            let iters = seq.len().max(1);
+            b.bench(
+                &format!("sweep {} n={n} ({iters} it)", kind.label()),
+                || {
+                    black_box(simulate(&seq, &init, iters));
+                },
+            );
+        }
+    }
+    println!("\n# high-dimensional gossip (d = 26122, the MLP artifact D)");
+    for n in [8usize, 25] {
+        let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+        let mut rng = Rng::new(1);
+        let init = gaussian_init(n, 26122, &mut rng);
+        b.bench(&format!("sweep base-2 n={n} d=26122"), || {
+            black_box(simulate(&seq, &init, seq.len()));
+        });
+    }
+    println!("\n# spectral consensus-rate estimation (Table 1)");
+    for n in [25usize, 128] {
+        let w = TopologyKind::Exp.build(n, 0).unwrap();
+        let prod = w.product();
+        let mut rng = Rng::new(2);
+        b.bench(&format!("consensus_rate n={n} (300 iters)"), || {
+            black_box(prod.consensus_rate(300, &mut rng));
+        });
+    }
+    b.dump_jsonl("results/bench_consensus.jsonl");
+}

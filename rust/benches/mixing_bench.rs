@@ -1,0 +1,71 @@
+//! Gossip-mixing benchmarks — the L3 hot path. Compares:
+//!
+//! * the trainer's native edge-wise mixing (f64 accumulate),
+//! * a pure-f32 axpy variant (the candidate optimization),
+//! * the AOT Pallas mixing kernel through PJRT (per-call dispatch cost),
+//!
+//! at the parameter dimensions of the shipped artifacts. This is the
+//! "PJRT vs native mixing" ablation in EXPERIMENTS.md §Perf.
+
+use basegraph::runtime::PjrtMixer;
+use basegraph::util::bench::{black_box, Bencher};
+use basegraph::util::rng::Rng;
+
+fn native_mix_f64(neighbors: &[Vec<f32>], weights: &[f64], out: &mut [f32]) {
+    let d = out.len();
+    let mut acc = vec![0.0f64; d];
+    for (nb, &w) in neighbors.iter().zip(weights) {
+        for (a, &x) in acc.iter_mut().zip(nb.iter()) {
+            *a += w * x as f64;
+        }
+    }
+    for (o, a) in out.iter_mut().zip(acc) {
+        *o = a as f32;
+    }
+}
+
+fn native_mix_f32(neighbors: &[Vec<f32>], weights: &[f64], out: &mut [f32]) {
+    out.fill(0.0);
+    for (nb, &w) in neighbors.iter().zip(weights) {
+        let wf = w as f32;
+        for (o, &x) in out.iter_mut().zip(nb.iter()) {
+            *o += wf * x;
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Rng::new(0);
+    for (m, d) in [(3usize, 26122usize), (3, 420352), (5, 420352)] {
+        let neighbors: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let weights = vec![1.0 / m as f64; m];
+        let mut out = vec![0.0f32; d];
+        b.bench(&format!("native mix f64-acc m={m} d={d}"), || {
+            native_mix_f64(&neighbors, &weights, &mut out);
+            black_box(out[0]);
+        });
+        b.bench(&format!("native mix f32-acc m={m} d={d}"), || {
+            native_mix_f32(&neighbors, &weights, &mut out);
+            black_box(out[0]);
+        });
+        // PJRT Pallas kernel (when artifacts exist).
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            if let Ok(mixer) = PjrtMixer::load("artifacts", m, d) {
+                let flat: Vec<f32> =
+                    neighbors.iter().flatten().cloned().collect();
+                let wf: Vec<f32> =
+                    weights.iter().map(|&w| w as f32).collect();
+                b.bench(
+                    &format!("pjrt pallas mix m={m} d={d}"),
+                    || {
+                        black_box(mixer.mix(&flat, &wf).unwrap());
+                    },
+                );
+            }
+        }
+    }
+    b.dump_jsonl("results/bench_mixing.jsonl");
+}

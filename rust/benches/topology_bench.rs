@@ -1,0 +1,41 @@
+//! Topology-construction benchmarks: cost of building each topology
+//! (relevant because time-varying topologies are rebuilt when the cluster
+//! resizes) and of the validity checks. Backs Table 1 / Fig. 5.
+
+use basegraph::topology::{base, simple_base, TopologyKind};
+use basegraph::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("# topology construction");
+    for n in [25usize, 64, 256, 1024] {
+        for m in [2usize, 5] {
+            b.bench(&format!("build base-{m} n={n}"), || {
+                let seq =
+                    TopologyKind::Base { m }.build(n, 0).unwrap();
+                black_box(seq.len());
+            });
+        }
+        b.bench(&format!("build exp n={n}"), || {
+            let seq = TopologyKind::Exp.build(n, 0).unwrap();
+            black_box(seq.len());
+        });
+    }
+    println!("\n# length computation only (no matrices)");
+    for n in [256usize, 4096, 65536] {
+        b.bench(&format!("seq_len base-2 n={n}"), || {
+            black_box(base::seq_len(n, 1));
+        });
+        b.bench(&format!("seq_len simple-base-2 n={n}"), || {
+            black_box(simple_base::seq_len(n, 1));
+        });
+    }
+    println!("\n# validation (finite-time product check)");
+    for n in [25usize, 64] {
+        let seq = TopologyKind::Base { m: 3 }.build(n, 0).unwrap();
+        b.bench(&format!("is_finite_time base-3 n={n}"), || {
+            black_box(seq.is_finite_time(1e-9));
+        });
+    }
+    b.dump_jsonl("results/bench_topology.jsonl");
+}

@@ -1,0 +1,110 @@
+//! End-to-end training-round benchmarks: the full L3 round (local grads +
+//! gossip + optimizer) for the native engine, plus the PJRT per-step
+//! dispatch cost for each artifact — the numbers behind EXPERIMENTS.md
+//! §Perf and the Fig. 7 runtime budget.
+
+use std::sync::Arc;
+
+use basegraph::data::partition::iid_partition;
+use basegraph::data::synth::gaussian_mixture;
+use basegraph::optim::OptimizerKind;
+use basegraph::runtime::provider::{GradProvider, RustMlp};
+use basegraph::runtime::{Batch, Features, PjrtModel};
+use basegraph::topology::TopologyKind;
+use basegraph::train::node_data::{ClassificationShard, NodeData};
+use basegraph::train::{train, TrainConfig};
+use basegraph::util::bench::{black_box, Bencher};
+use basegraph::util::rng::Rng;
+
+fn native_round_bench(b: &mut Bencher, n: usize, threads: usize) {
+    let mut rng = Rng::new(0);
+    let ds = Arc::new(gaussian_mixture(2000, 24, 10, 1.0, 0.9, &mut rng));
+    let part = iid_partition(2000, n, &mut rng);
+    let model = RustMlp::new(24, 32, 10, 0);
+    b.bench(
+        &format!("train 10 rounds native-mlp n={n} threads={threads}"),
+        || {
+            let node_data: Vec<Box<dyn NodeData>> = part
+                .node_indices
+                .iter()
+                .map(|idx| {
+                    Box::new(ClassificationShard::new(
+                        ds.clone(),
+                        idx.clone(),
+                        32,
+                        1,
+                    )) as Box<dyn NodeData>
+                })
+                .collect();
+            let seq = TopologyKind::Base { m: 3 }.build(n, 0).unwrap();
+            let cfg = TrainConfig {
+                rounds: 10,
+                lr: 0.1,
+                warmup: 0,
+                cosine: false,
+                optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+                eval_every: 0,
+                threads,
+                ..Default::default()
+            };
+            black_box(train(&model, &seq, node_data, &[], &cfg).unwrap());
+        },
+    );
+}
+
+fn pjrt_step_bench(b: &mut Bencher, name: &str, variant: &str) {
+    let model = match PjrtModel::load("artifacts", name, variant) {
+        Ok(m) => m,
+        Err(_) => return,
+    };
+    let params = model.init_params();
+    let spec = model.train_spec().clone();
+    let mut rng = Rng::new(3);
+    let xn: usize = spec.x_shape.iter().product();
+    let yn: usize = spec.y_shape.iter().product();
+    let batch = Batch {
+        x: match spec.x_dtype.as_str() {
+            "f32" => Features::F32(
+                (0..xn).map(|_| rng.normal() as f32).collect(),
+            ),
+            _ => Features::I32(
+                (0..xn).map(|_| rng.below(64) as i32).collect(),
+            ),
+        },
+        x_shape: spec.x_shape.clone(),
+        y: (0..yn)
+            .map(|_| {
+                rng.below(if name == "transformer" { 64 } else { 10 }) as i32
+            })
+            .collect(),
+        y_shape: spec.y_shape.clone(),
+    };
+    b.bench(&format!("pjrt train_step {name}/{variant}"), || {
+        black_box(model.train_step(&params, &batch).unwrap());
+    });
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("# native engine full rounds (grads + gossip + optimizer)");
+    for n in [8usize, 25] {
+        for threads in [1usize, 4] {
+            native_round_bench(&mut b, n, threads);
+        }
+    }
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n# PJRT per-step dispatch (AOT artifacts)");
+        for (name, variant) in [
+            ("mlp", "ref"),
+            ("mlp", "pallas"),
+            ("cnn", "ref"),
+            ("transformer", "ref"),
+            ("transformer", "pallas"),
+        ] {
+            pjrt_step_bench(&mut b, name, variant);
+        }
+    } else {
+        println!("\n(artifacts not built; skipping PJRT benches)");
+    }
+    b.dump_jsonl("results/bench_training.jsonl");
+}

@@ -1,0 +1,179 @@
+//! Communication accounting: the "communication efficiency" axis of every
+//! figure in the paper.
+//!
+//! The paper measures communication cost by the topology's maximum degree
+//! (each neighbor exchange moves one full parameter vector). This module
+//! turns that into concrete per-round accounting — bytes sent per node,
+//! aggregate bytes, and an α–β (latency–bandwidth) time model so the
+//! accuracy-vs-cost trade-off can be plotted in seconds as well as rounds.
+
+use crate::topology::{GraphSequence, MixingMatrix};
+
+/// α–β cost model: sending an s-byte message costs `alpha + beta * s`
+/// seconds; a round's cost is the *maximum* over nodes (bulk-synchronous),
+/// with each node's sends serialized over its degree.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-message latency (seconds). Default 1e-4 (LAN-ish RTT/2).
+    pub alpha: f64,
+    /// Per-byte cost (seconds/byte). Default 8e-10 (~10 Gbit/s).
+    pub beta: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { alpha: 1e-4, beta: 8e-10 }
+    }
+}
+
+/// Communication statistics for one gossip phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseComm {
+    /// Directed messages sent this phase (each carries a full vector).
+    pub messages: usize,
+    /// Maximum per-node out-degree this phase.
+    pub max_degree: usize,
+}
+
+/// Per-phase message counts for a sequence.
+pub fn phase_comm(w: &MixingMatrix) -> PhaseComm {
+    PhaseComm { messages: w.edge_count(), max_degree: w.max_degree() }
+}
+
+/// Cumulative communication ledger for a training/consensus run.
+#[derive(Debug, Clone, Default)]
+pub struct CommLedger {
+    /// Total directed messages.
+    pub messages: u64,
+    /// Total payload bytes (messages × d × 4).
+    pub bytes: u64,
+    /// Simulated wall-clock seconds under the α–β model.
+    pub sim_seconds: f64,
+    /// Rounds recorded.
+    pub rounds: u64,
+}
+
+impl CommLedger {
+    /// Record one gossip round over phase `w` with `d`-dimensional f32
+    /// parameters.
+    pub fn record_round(&mut self, w: &MixingMatrix, d: usize, cost: &CostModel) {
+        let pc = phase_comm(w);
+        let payload = (d * 4) as u64;
+        self.messages += pc.messages as u64;
+        self.bytes += pc.messages as u64 * payload;
+        // Bulk-synchronous round time: the busiest node serializes its
+        // sends.
+        self.sim_seconds += pc.max_degree as f64
+            * (cost.alpha + cost.beta * payload as f64);
+        self.rounds += 1;
+    }
+
+    /// Average bytes per node per round.
+    pub fn bytes_per_node_round(&self, n: usize) -> f64 {
+        if self.rounds == 0 || n == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / (self.rounds as f64 * n as f64)
+    }
+}
+
+/// Summary of a full sweep of a sequence: the paper's Table-1 style
+/// communication profile.
+#[derive(Debug, Clone)]
+pub struct SequenceCommProfile {
+    pub name: String,
+    pub n: usize,
+    pub len: usize,
+    pub max_degree: usize,
+    /// Messages for one full sweep of all phases.
+    pub messages_per_sweep: usize,
+    /// Simulated seconds per sweep for d-dimensional params.
+    pub seconds_per_sweep: f64,
+}
+
+pub fn profile(seq: &GraphSequence, d: usize, cost: &CostModel) -> SequenceCommProfile {
+    let mut ledger = CommLedger::default();
+    for w in &seq.phases {
+        ledger.record_round(w, d, cost);
+    }
+    SequenceCommProfile {
+        name: seq.name.clone(),
+        n: seq.n,
+        len: seq.len(),
+        max_degree: seq.max_degree(),
+        messages_per_sweep: ledger.messages as usize,
+        seconds_per_sweep: ledger.sim_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{baselines, base};
+
+    #[test]
+    fn ring_message_count() {
+        // Ring of n: 2n directed messages per round (each node sends to 2
+        // neighbors).
+        let seq = baselines::ring(10);
+        let pc = phase_comm(&seq.phases[0]);
+        assert_eq!(pc.messages, 20);
+        assert_eq!(pc.max_degree, 2);
+    }
+
+    #[test]
+    fn base2_cheaper_than_exp_per_round() {
+        // The headline trade-off: Base-2 (degree 1) moves ~n messages per
+        // round; exp graph moves n·⌈log2 n⌉.
+        let n = 25;
+        let base = base::base(n, 1).unwrap();
+        let exp = baselines::exponential(n);
+        let bmax = base
+            .phases
+            .iter()
+            .map(|w| phase_comm(w).messages)
+            .max()
+            .unwrap();
+        let e = phase_comm(&exp.phases[0]).messages;
+        assert!(bmax <= n, "base-2 sends at most n messages ({bmax})");
+        assert_eq!(e, n * 5); // ⌈log2 25⌉ = 5
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let seq = baselines::ring(8);
+        let cost = CostModel::default();
+        let mut ledger = CommLedger::default();
+        for _ in 0..10 {
+            ledger.record_round(&seq.phases[0], 1000, &cost);
+        }
+        assert_eq!(ledger.rounds, 10);
+        assert_eq!(ledger.messages, 160);
+        assert_eq!(ledger.bytes, 160 * 4000);
+        assert!(ledger.sim_seconds > 0.0);
+        // 640 kB over 10 rounds × 8 nodes = 8 kB per node-round.
+        assert!((ledger.bytes_per_node_round(8) - 8_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_beta_scaling() {
+        let seq = baselines::exponential(32); // degree 5
+        let w = &seq.phases[0];
+        let mut cheap = CommLedger::default();
+        let mut slow = CommLedger::default();
+        cheap.record_round(w, 100, &CostModel { alpha: 1e-5, beta: 1e-10 });
+        slow.record_round(w, 100, &CostModel { alpha: 1e-3, beta: 1e-10 });
+        assert!(slow.sim_seconds > cheap.sim_seconds * 50.0);
+    }
+
+    #[test]
+    fn profile_shape() {
+        let seq = base::base(25, 4).unwrap();
+        let p = profile(&seq, 26122, &CostModel::default());
+        assert_eq!(p.n, 25);
+        assert_eq!(p.len, seq.len());
+        assert!(p.max_degree <= 4);
+        assert!(p.messages_per_sweep > 0);
+        assert!(p.seconds_per_sweep > 0.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Consensus simulation (Sec. 6.1): iterate `x ← W^(t) x` over a topology's
+//! phase sequence and track the consensus error
+//! `(1/n) Σ_i ||x_i − x̄||²` — the quantity plotted in Figs. 1, 6, 21, 23.
+
+use crate::topology::GraphSequence;
+use crate::util::rng::Rng;
+
+/// One consensus experiment's result: per-iteration consensus error
+/// (index 0 = initial error, before any gossip).
+#[derive(Debug, Clone)]
+pub struct ConsensusTrace {
+    pub topology: String,
+    pub n: usize,
+    pub max_degree: usize,
+    pub errors: Vec<f64>,
+}
+
+impl ConsensusTrace {
+    /// First iteration at which the error drops below `tol` (None if never).
+    pub fn iters_to_reach(&self, tol: f64) -> Option<usize> {
+        self.errors.iter().position(|&e| e <= tol)
+    }
+
+    /// Did the run hit (numerically) exact consensus?
+    pub fn reached_exact(&self, tol: f64) -> bool {
+        self.iters_to_reach(tol).is_some()
+    }
+}
+
+/// Consensus error (1/n) Σ_i ||x_i − x̄||².
+pub fn consensus_error(xs: &[Vec<f64>]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let d = xs[0].len();
+    let mut mean = vec![0.0; d];
+    for x in xs {
+        for (m, v) in mean.iter_mut().zip(x) {
+            *m += v;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut err = 0.0;
+    for x in xs {
+        for (m, v) in mean.iter().zip(x) {
+            let dvi = v - m;
+            err += dvi * dvi;
+        }
+    }
+    err / n as f64
+}
+
+/// Gaussian-initialized node values, as in the paper's Sec. 6.1 setup
+/// (d = 1, x_i ~ N(0, 1)).
+pub fn gaussian_init(n: usize, d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+/// Run `iters` gossip iterations of the sequence (cycling through phases)
+/// and record the consensus error after each one.
+pub fn simulate(
+    seq: &GraphSequence,
+    init: &[Vec<f64>],
+    iters: usize,
+) -> ConsensusTrace {
+    assert_eq!(init.len(), seq.n, "init size != topology n");
+    let mut xs = init.to_vec();
+    let mut errors = Vec::with_capacity(iters + 1);
+    errors.push(consensus_error(&xs));
+    for r in 0..iters {
+        if !seq.is_empty() {
+            xs = seq.phase(r).apply(&xs);
+        }
+        errors.push(consensus_error(&xs));
+    }
+    ConsensusTrace {
+        topology: seq.name.clone(),
+        n: seq.n,
+        max_degree: seq.max_degree(),
+        errors,
+    }
+}
+
+/// Convenience: the paper's Sec. 6.1 experiment — scalar Gaussian values,
+/// fixed seed, `iters` iterations.
+pub fn paper_consensus_experiment(
+    seq: &GraphSequence,
+    iters: usize,
+    seed: u64,
+) -> ConsensusTrace {
+    let mut rng = Rng::new(seed);
+    let init = gaussian_init(seq.n, 1, &mut rng);
+    simulate(seq, &init, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{baselines, base, one_peer};
+
+    #[test]
+    fn error_of_equal_values_is_zero() {
+        let xs = vec![vec![2.5, -1.0]; 7];
+        assert_eq!(consensus_error(&xs), 0.0);
+    }
+
+    #[test]
+    fn error_known_value() {
+        // x = {-1, 1}: mean 0, error = (1 + 1)/2 = 1.
+        let xs = vec![vec![-1.0], vec![1.0]];
+        assert!((consensus_error(&xs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn base_graph_hits_exact_consensus_in_one_sweep() {
+        // Fig. 1: the Base-(k+1) Graph reaches *exact* consensus after
+        // len(seq) iterations, for any n.
+        for n in [5usize, 21, 22, 23, 24, 25] {
+            for k in [1usize, 2, 4] {
+                let seq = base::base(n, k).unwrap();
+                let trace = paper_consensus_experiment(&seq, seq.len(), 42);
+                assert!(
+                    *trace.errors.last().unwrap() < 1e-20,
+                    "n={n} k={k}: err={:e}",
+                    trace.errors.last().unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_only_decays_geometrically() {
+        let seq = baselines::ring(25);
+        let trace = paper_consensus_experiment(&seq, 30, 42);
+        // Decreasing but never exactly zero.
+        assert!(trace.errors[30] < trace.errors[0]);
+        assert!(trace.errors[30] > 1e-12);
+        for w in trace.errors.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "ring error must be monotone");
+        }
+    }
+
+    #[test]
+    fn one_peer_exp_non_power_of_two_not_exact() {
+        // Fig. 1's headline observation.
+        let seq = one_peer::one_peer_exp(25);
+        let trace = paper_consensus_experiment(&seq, 40, 42);
+        assert!(trace.errors[40] > 1e-14);
+        // But for powers of 2 it IS exact after one sweep.
+        let seq = one_peer::one_peer_exp(32);
+        let trace = paper_consensus_experiment(&seq, seq.len(), 42);
+        assert!(*trace.errors.last().unwrap() < 1e-20);
+    }
+
+    #[test]
+    fn iters_to_reach() {
+        let seq = base::base(25, 1).unwrap();
+        let trace = paper_consensus_experiment(&seq, 2 * seq.len(), 7);
+        let hit = trace.iters_to_reach(1e-18).unwrap();
+        assert!(hit <= seq.len(), "hit={hit} len={}", seq.len());
+        assert!(trace.reached_exact(1e-18));
+    }
+
+    #[test]
+    fn mean_is_preserved_through_simulation() {
+        let seq = base::base(23, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let init = gaussian_init(23, 4, &mut rng);
+        let mean0: f64 = init.iter().map(|x| x[2]).sum::<f64>() / 23.0;
+        let mut xs = init.clone();
+        for r in 0..seq.len() {
+            xs = seq.phase(r).apply(&xs);
+        }
+        // All nodes now hold the initial mean.
+        for x in &xs {
+            assert!((x[2] - mean0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Synthetic character corpus for the transformer LM (the end-to-end
+//! example): an order-1 Markov chain over the LM vocabulary with a few
+//! distinct "styles" (transition matrices). Styles play the role of data
+//! heterogeneity: nodes can be given style-skewed document shards exactly
+//! like Dirichlet label skew.
+
+use crate::runtime::batch::{Batch, Features};
+use crate::util::rng::Rng;
+
+/// Vocabulary size matching python/compile/model.py::LM_VOCAB.
+pub const VOCAB: usize = 64;
+
+/// A corpus of token documents with per-document style labels.
+#[derive(Debug, Clone)]
+pub struct CharCorpus {
+    pub seq_len: usize,
+    /// Documents, each of length seq_len + 1 (input + shifted target).
+    pub docs: Vec<Vec<i32>>,
+    /// Style id per document (used as the "class" for partitioning).
+    pub styles: Vec<i32>,
+    pub n_styles: usize,
+}
+
+/// Sample a sparse, peaked Markov transition table: each symbol prefers a
+/// handful of successors, so the chain has learnable structure (an LM can
+/// reach much-better-than-uniform loss).
+fn sample_style(rng: &mut Rng) -> Vec<Vec<f64>> {
+    let mut table = Vec::with_capacity(VOCAB);
+    for _ in 0..VOCAB {
+        let mut row = vec![0.01f64; VOCAB];
+        // 3 preferred successors with large mass.
+        for _ in 0..3 {
+            row[rng.below(VOCAB)] += 5.0 + 5.0 * rng.next_f64();
+        }
+        table.push(row);
+    }
+    table
+}
+
+/// Generate a corpus of `n_docs` documents of `seq_len + 1` tokens.
+pub fn generate(
+    n_docs: usize,
+    seq_len: usize,
+    n_styles: usize,
+    rng: &mut Rng,
+) -> CharCorpus {
+    assert!(n_styles >= 1);
+    let tables: Vec<Vec<Vec<f64>>> =
+        (0..n_styles).map(|_| sample_style(rng)).collect();
+    let mut docs = Vec::with_capacity(n_docs);
+    let mut styles = Vec::with_capacity(n_docs);
+    for i in 0..n_docs {
+        let style = i % n_styles;
+        let table = &tables[style];
+        let mut doc = Vec::with_capacity(seq_len + 1);
+        let mut tok = rng.below(VOCAB);
+        doc.push(tok as i32);
+        for _ in 0..seq_len {
+            tok = rng.categorical(&table[tok]);
+            doc.push(tok as i32);
+        }
+        docs.push(doc);
+        styles.push(style as i32);
+    }
+    CharCorpus { seq_len, docs, styles, n_styles }
+}
+
+impl CharCorpus {
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Batch of document indices: x = doc[..T], y = doc[1..=T].
+    pub fn gather(&self, indices: &[usize]) -> Batch {
+        let t = self.seq_len;
+        let mut xs = Vec::with_capacity(indices.len() * t);
+        let mut ys = Vec::with_capacity(indices.len() * t);
+        for &i in indices {
+            let doc = &self.docs[i];
+            xs.extend_from_slice(&doc[..t]);
+            ys.extend_from_slice(&doc[1..=t]);
+        }
+        Batch {
+            x: Features::I32(xs),
+            x_shape: vec![indices.len(), t],
+            y: ys,
+            y_shape: vec![indices.len(), t],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes() {
+        let mut rng = Rng::new(0);
+        let c = generate(100, 64, 4, &mut rng);
+        assert_eq!(c.len(), 100);
+        assert!(c.docs.iter().all(|d| d.len() == 65));
+        assert!(c
+            .docs
+            .iter()
+            .flatten()
+            .all(|&t| (0..VOCAB as i32).contains(&t)));
+        let b = c.gather(&[0, 3]);
+        assert_eq!(b.x_shape, vec![2, 64]);
+        assert_eq!(b.y_shape, vec![2, 64]);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let mut rng = Rng::new(1);
+        let c = generate(5, 16, 1, &mut rng);
+        let b = c.gather(&[2]);
+        if let Features::I32(xs) = &b.x {
+            // y[t] == doc[t+1] == x[t+1] for t < T-1.
+            for t in 0..15 {
+                assert_eq!(b.y[t], xs[t + 1]);
+            }
+        } else {
+            panic!("LM batch must be i32");
+        }
+    }
+
+    #[test]
+    fn chain_has_structure() {
+        // Markov bigram statistics must be far from uniform — otherwise the
+        // LM example cannot demonstrate learning.
+        let mut rng = Rng::new(2);
+        let c = generate(200, 64, 1, &mut rng);
+        let mut bigrams = vec![0usize; VOCAB * VOCAB];
+        let mut total = 0usize;
+        for d in &c.docs {
+            for w in d.windows(2) {
+                bigrams[w[0] as usize * VOCAB + w[1] as usize] += 1;
+                total += 1;
+            }
+        }
+        // Top-heavy distribution: the most frequent 5% of bigrams should
+        // cover most of the mass.
+        let mut counts = bigrams.clone();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top: usize = counts[..VOCAB * VOCAB / 20].iter().sum();
+        assert!(
+            top as f64 > 0.5 * total as f64,
+            "top-5% bigrams cover {}%",
+            100 * top / total
+        );
+    }
+
+    #[test]
+    fn styles_cycle() {
+        let mut rng = Rng::new(3);
+        let c = generate(10, 8, 3, &mut rng);
+        assert_eq!(c.styles, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0]);
+    }
+}

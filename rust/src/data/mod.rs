@@ -1,0 +1,15 @@
+//! Synthetic datasets and the Dirichlet heterogeneity partitioner.
+//!
+//! The paper trains on FashionMNIST / CIFAR with Dirichlet(α)-partitioned
+//! labels (Hsu et al. 2019). The substitution (DESIGN.md): synthetic
+//! Gaussian-mixture classification and image-like tensors reproduce the
+//! heterogeneity *mechanism* exactly — the topology comparisons the paper
+//! makes are about how gossip handles drift between heterogeneous nodes,
+//! not about vision feature extraction.
+
+pub mod corpus;
+pub mod partition;
+pub mod synth;
+
+pub use partition::{dirichlet_partition, iid_partition, Partition};
+pub use synth::{ClassificationDataset, NodeSampler};

@@ -1,0 +1,236 @@
+//! Data partitioning across nodes: IID and Dirichlet(α) label skew
+//! (Hsu et al. 2019) — the heterogeneity protocol the paper uses for every
+//! decentralized-learning experiment. As α → 0 each node sees fewer
+//! classes; α = 10 is near-IID.
+
+use crate::util::rng::Rng;
+
+/// Assignment of dataset example indices to nodes.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub node_indices: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn n_nodes(&self) -> usize {
+        self.node_indices.len()
+    }
+
+    /// Per-node class histograms (for heterogeneity diagnostics).
+    pub fn class_histogram(
+        &self,
+        labels: &[i32],
+        classes: usize,
+    ) -> Vec<Vec<usize>> {
+        self.node_indices
+            .iter()
+            .map(|idx| {
+                let mut h = vec![0usize; classes];
+                for &i in idx {
+                    h[labels[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+
+    /// Mean total-variation distance between node label distributions and
+    /// the global distribution — 0 for IID, → 1 as nodes become pure-class.
+    pub fn heterogeneity(&self, labels: &[i32], classes: usize) -> f64 {
+        let hists = self.class_histogram(labels, classes);
+        let mut global = vec![0.0f64; classes];
+        for &y in labels {
+            global[y as usize] += 1.0;
+        }
+        let total: f64 = global.iter().sum();
+        for g in &mut global {
+            *g /= total;
+        }
+        let mut tv = 0.0;
+        let mut counted = 0;
+        for h in &hists {
+            let s: usize = h.iter().sum();
+            if s == 0 {
+                continue;
+            }
+            let d: f64 = h
+                .iter()
+                .zip(&global)
+                .map(|(&c, &g)| (c as f64 / s as f64 - g).abs())
+                .sum();
+            tv += d / 2.0;
+            counted += 1;
+        }
+        if counted == 0 {
+            0.0
+        } else {
+            tv / counted as f64
+        }
+    }
+}
+
+/// Round-robin IID split (after a shuffle).
+pub fn iid_partition(n_examples: usize, n_nodes: usize, rng: &mut Rng) -> Partition {
+    let mut order: Vec<usize> = (0..n_examples).collect();
+    rng.shuffle(&mut order);
+    let mut node_indices = vec![Vec::new(); n_nodes];
+    for (i, &ex) in order.iter().enumerate() {
+        node_indices[i % n_nodes].push(ex);
+    }
+    Partition { node_indices }
+}
+
+/// Dirichlet(α) label-skew split: for each class, draw node proportions
+/// from Dir(α·1_n) and split that class's examples accordingly. Guarantees
+/// every node ends up with at least one example (steals from the largest
+/// shard if needed, so samplers never starve).
+pub fn dirichlet_partition(
+    labels: &[i32],
+    n_nodes: usize,
+    classes: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Partition {
+    assert!(n_nodes >= 1 && classes >= 1 && alpha > 0.0);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for (i, &y) in labels.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    let mut node_indices = vec![Vec::new(); n_nodes];
+    for class_examples in by_class.iter_mut() {
+        rng.shuffle(class_examples);
+        let props = rng.dirichlet(alpha, n_nodes);
+        // Largest-remainder allocation of counts.
+        let total = class_examples.len();
+        let mut counts: Vec<usize> =
+            props.iter().map(|p| (p * total as f64) as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        // Distribute the remainder to the largest fractional parts.
+        let mut frac: Vec<(f64, usize)> = props
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p * total as f64 - counts[i] as f64, i))
+            .collect();
+        frac.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut fi = 0;
+        while assigned < total {
+            counts[frac[fi % n_nodes].1] += 1;
+            assigned += 1;
+            fi += 1;
+        }
+        let mut pos = 0;
+        for (node, &c) in counts.iter().enumerate() {
+            node_indices[node]
+                .extend_from_slice(&class_examples[pos..pos + c]);
+            pos += c;
+        }
+    }
+    // No node may be empty (it still participates in gossip and needs
+    // batches): steal one example from the largest shard.
+    loop {
+        let empty = node_indices.iter().position(|v| v.is_empty());
+        match empty {
+            None => break,
+            Some(e) => {
+                let largest = (0..n_nodes)
+                    .max_by_key(|&i| node_indices[i].len())
+                    .unwrap();
+                let ex = node_indices[largest].pop().expect("nonempty");
+                node_indices[e].push(ex);
+            }
+        }
+    }
+    Partition { node_indices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn toy_labels(n: usize, classes: usize) -> Vec<i32> {
+        (0..n).map(|i| (i % classes) as i32).collect()
+    }
+
+    #[test]
+    fn iid_covers_everything_evenly() {
+        let mut rng = Rng::new(0);
+        let p = iid_partition(103, 10, &mut rng);
+        let sizes: Vec<usize> =
+            p.node_indices.iter().map(|v| v.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 10 || s == 11));
+        let mut all: Vec<usize> =
+            p.node_indices.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dirichlet_partition_is_exact_cover() {
+        prop::check("dirichlet-cover", prop::default_cases(), |rng| {
+            let n = rng.range(50, 2000);
+            let nodes = rng.range(2, 30);
+            let classes = rng.range(2, 11);
+            let alpha = [0.05, 0.1, 1.0, 10.0][rng.below(4)];
+            let labels = toy_labels(n, classes);
+            let p =
+                dirichlet_partition(&labels, nodes, classes, alpha, rng);
+            let mut all: Vec<usize> =
+                p.node_indices.iter().flatten().cloned().collect();
+            all.sort_unstable();
+            prop_assert!(
+                all == (0..n).collect::<Vec<_>>(),
+                "partition must exactly cover the dataset"
+            );
+            prop_assert!(
+                p.node_indices.iter().all(|v| !v.is_empty()),
+                "no node may be empty"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn small_alpha_is_more_heterogeneous() {
+        let mut rng = Rng::new(5);
+        let labels = toy_labels(5000, 10);
+        let p_hi = dirichlet_partition(&labels, 25, 10, 10.0, &mut rng);
+        let p_lo = dirichlet_partition(&labels, 25, 10, 0.1, &mut rng);
+        let h_hi = p_hi.heterogeneity(&labels, 10);
+        let h_lo = p_lo.heterogeneity(&labels, 10);
+        assert!(
+            h_lo > h_hi + 0.2,
+            "alpha=0.1 ({h_lo:.3}) must be much more skewed than \
+             alpha=10 ({h_hi:.3})"
+        );
+        assert!(h_hi < 0.25, "alpha=10 should be near-IID: {h_hi:.3}");
+    }
+
+    #[test]
+    fn iid_heterogeneity_near_zero() {
+        let mut rng = Rng::new(6);
+        let labels = toy_labels(5000, 10);
+        let p = iid_partition(5000, 20, &mut rng);
+        assert!(p.heterogeneity(&labels, 10) < 0.1);
+    }
+
+    #[test]
+    fn class_histogram_sums() {
+        let mut rng = Rng::new(7);
+        let labels = toy_labels(500, 5);
+        let p = dirichlet_partition(&labels, 10, 5, 0.5, &mut rng);
+        let hist = p.class_histogram(&labels, 5);
+        let total: usize = hist.iter().flatten().sum();
+        assert_eq!(total, 500);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let labels = toy_labels(300, 10);
+        let a = dirichlet_partition(&labels, 8, 10, 0.1, &mut Rng::new(1));
+        let b = dirichlet_partition(&labels, 8, 10, 0.1, &mut Rng::new(1));
+        assert_eq!(a.node_indices, b.node_indices);
+    }
+}

@@ -1,0 +1,281 @@
+//! Synthetic classification datasets (feature vectors and image tensors)
+//! plus the per-node batch sampler.
+
+use crate::runtime::batch::{Batch, Features};
+use crate::util::rng::Rng;
+
+/// An in-memory labeled dataset; `x` is row-major `[n, prod(example_shape)]`.
+#[derive(Debug, Clone)]
+pub struct ClassificationDataset {
+    pub example_shape: Vec<usize>,
+    pub classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+impl ClassificationDataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+    pub fn example_dim(&self) -> usize {
+        self.example_shape.iter().product()
+    }
+
+    /// Materialize a batch from explicit example indices.
+    pub fn gather(&self, indices: &[usize]) -> Batch {
+        let d = self.example_dim();
+        let mut xs = Vec::with_capacity(indices.len() * d);
+        let mut ys = Vec::with_capacity(indices.len());
+        for &i in indices {
+            xs.extend_from_slice(&self.x[i * d..(i + 1) * d]);
+            ys.push(self.y[i]);
+        }
+        let mut x_shape = vec![indices.len()];
+        x_shape.extend_from_slice(&self.example_shape);
+        Batch {
+            x: Features::F32(xs),
+            x_shape,
+            y: ys,
+            y_shape: vec![indices.len()],
+        }
+    }
+
+    /// Class histogram (for partition diagnostics).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &y in &self.y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Gaussian-mixture classification: class c has mean μ_c ~ sep·N(0, I_d);
+/// examples are μ_c + noise·N(0, I_d). `sep/noise` controls difficulty.
+pub fn gaussian_mixture(
+    n: usize,
+    dim: usize,
+    classes: usize,
+    sep: f64,
+    noise: f64,
+    rng: &mut Rng,
+) -> ClassificationDataset {
+    let means: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..dim).map(|_| sep * rng.normal()).collect())
+        .collect();
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes; // balanced classes
+        for j in 0..dim {
+            x.push((means[c][j] + noise * rng.normal()) as f32);
+        }
+        y.push(c as i32);
+    }
+    ClassificationDataset { example_shape: vec![dim], classes, x, y }
+}
+
+/// Image-like synthetic dataset for the CNN: each class has a smooth random
+/// template (low-frequency pattern); examples add pixel noise and a random
+/// global brightness shift. Shape (h, w, ch).
+pub fn synthetic_images(
+    n: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    classes: usize,
+    noise: f64,
+    rng: &mut Rng,
+) -> ClassificationDataset {
+    // Low-frequency templates: sum of a few random 2-D cosine modes per
+    // class/channel.
+    let modes = 3;
+    let mut templates = vec![vec![0.0f64; h * w * ch]; classes];
+    for t in templates.iter_mut() {
+        for c in 0..ch {
+            for _ in 0..modes {
+                let fx = rng.next_f64() * 2.0 + 0.5;
+                let fy = rng.next_f64() * 2.0 + 0.5;
+                let phase = rng.next_f64() * std::f64::consts::TAU;
+                let amp = 0.5 + rng.next_f64();
+                for yy in 0..h {
+                    for xx in 0..w {
+                        let v = amp
+                            * ((fx * xx as f64 / w as f64
+                                + fy * yy as f64 / h as f64)
+                                * std::f64::consts::TAU
+                                + phase)
+                                .cos();
+                        t[(yy * w + xx) * ch + c] += v;
+                    }
+                }
+            }
+        }
+    }
+    let dim = h * w * ch;
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        let brightness = 0.3 * rng.normal();
+        for j in 0..dim {
+            x.push((templates[c][j] + brightness + noise * rng.normal()) as f32);
+        }
+        y.push(c as i32);
+    }
+    ClassificationDataset { example_shape: vec![h, w, ch], classes, x, y }
+}
+
+/// Per-node infinite batch iterator over a fixed index shard: reshuffles
+/// each epoch, pads the final partial batch by wrapping (AOT batch shapes
+/// are static).
+#[derive(Debug, Clone)]
+pub struct NodeSampler {
+    indices: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl NodeSampler {
+    pub fn new(indices: Vec<usize>, seed: u64) -> Self {
+        assert!(!indices.is_empty(), "node shard must be non-empty");
+        let mut rng = Rng::new(seed);
+        let mut indices = indices;
+        rng.shuffle(&mut indices);
+        NodeSampler { indices, pos: 0, rng }
+    }
+
+    pub fn shard_size(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Next `bsz` example indices (wrapping + reshuffling at epoch ends).
+    pub fn next_indices(&mut self, bsz: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(bsz);
+        for _ in 0..bsz {
+            if self.pos >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.pos = 0;
+            }
+            out.push(self.indices[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+
+    /// Next batch materialized from `ds`.
+    pub fn next_batch(
+        &mut self,
+        ds: &ClassificationDataset,
+        bsz: usize,
+    ) -> Batch {
+        let idx = self.next_indices(bsz);
+        ds.gather(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_mixture_shapes_and_balance() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(1000, 16, 10, 1.0, 0.3, &mut rng);
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.example_dim(), 16);
+        let counts = ds.class_counts();
+        assert_eq!(counts.len(), 10);
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn gaussian_mixture_is_separable() {
+        // With large separation, nearest-mean classification on the raw
+        // features should be nearly perfect — the dataset must carry signal.
+        let mut rng = Rng::new(1);
+        let ds = gaussian_mixture(500, 32, 5, 2.0, 0.5, &mut rng);
+        // Compute class means from the data itself.
+        let d = ds.example_dim();
+        let mut means = vec![vec![0.0f64; d]; 5];
+        let counts = ds.class_counts();
+        for i in 0..ds.len() {
+            let c = ds.y[i] as usize;
+            for j in 0..d {
+                means[c][j] += ds.x[i * d + j] as f64 / counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let xi = &ds.x[i * d..(i + 1) * d];
+            let best = (0..5)
+                .min_by(|&a, &b| {
+                    let da: f64 = xi
+                        .iter()
+                        .zip(&means[a])
+                        .map(|(x, m)| (*x as f64 - m).powi(2))
+                        .sum();
+                    let db: f64 = xi
+                        .iter()
+                        .zip(&means[b])
+                        .map(|(x, m)| (*x as f64 - m).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 480, "nearest-mean acc {correct}/500");
+    }
+
+    #[test]
+    fn synthetic_images_shape() {
+        let mut rng = Rng::new(2);
+        let ds = synthetic_images(100, 12, 12, 3, 10, 0.2, &mut rng);
+        assert_eq!(ds.example_shape, vec![12, 12, 3]);
+        assert_eq!(ds.example_dim(), 432);
+        let b = ds.gather(&[0, 5, 7]);
+        assert_eq!(b.x_shape, vec![3, 12, 12, 3]);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn gather_preserves_labels() {
+        let mut rng = Rng::new(3);
+        let ds = gaussian_mixture(50, 4, 5, 1.0, 0.1, &mut rng);
+        let b = ds.gather(&[3, 10, 22]);
+        assert_eq!(b.y, vec![ds.y[3], ds.y[10], ds.y[22]]);
+    }
+
+    #[test]
+    fn sampler_covers_shard_each_epoch() {
+        let sampler_indices: Vec<usize> = (100..120).collect();
+        let mut s = NodeSampler::new(sampler_indices.clone(), 0);
+        let mut seen: Vec<usize> = Vec::new();
+        for _ in 0..4 {
+            seen.extend(s.next_indices(5));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, sampler_indices);
+    }
+
+    #[test]
+    fn sampler_wraps_partial_batches() {
+        let mut s = NodeSampler::new(vec![1, 2, 3], 0);
+        let idx = s.next_indices(8);
+        assert_eq!(idx.len(), 8);
+        assert!(idx.iter().all(|i| [1, 2, 3].contains(i)));
+    }
+
+    #[test]
+    fn sampler_deterministic_by_seed() {
+        let mut a = NodeSampler::new((0..50).collect(), 9);
+        let mut b = NodeSampler::new((0..50).collect(), 9);
+        assert_eq!(a.next_indices(20), b.next_indices(20));
+    }
+}

@@ -1,0 +1,33 @@
+//! # BaseGraph: communication-efficient topologies for decentralized learning
+//!
+//! A Rust + JAX + Pallas reproduction of *"Beyond Exponential Graph:
+//! Communication-Efficient Topologies for Decentralized Learning via
+//! Finite-time Convergence"* (Takezawa, Sato, Bao, Niwa, Yamada — NeurIPS 2023).
+//!
+//! The crate is organized in three layers:
+//!
+//! * **Layer 3 (this crate)** — the decentralized-training coordinator:
+//!   time-varying topology construction (the paper's contribution), mixing /
+//!   gossip engine, decentralized optimizers (DSGD, DSGDm, QG-DSGDm, D²),
+//!   data partitioning (Dirichlet heterogeneity), metrics and the CLI.
+//! * **Layer 2 (`python/compile/model.py`)** — JAX forward/backward graphs of
+//!   the models being trained, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the compute
+//!   hot spots (blocked matmul, gossip mixing), lowered into the same HLO.
+//!
+//! Python never runs on the training path: the Rust binary loads the
+//! artifacts with the PJRT C API (`xla` crate) and drives everything.
+
+pub mod comm;
+pub mod consensus;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod train;
+pub mod topology;
+pub mod util;
+
+pub use topology::{GraphSequence, MixingMatrix, TopologyKind};
+pub use util::rng::Rng;

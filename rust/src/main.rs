@@ -1,0 +1,238 @@
+//! `basegraph` — the command-line launcher for the BaseGraph reproduction.
+//!
+//! Subcommands:
+//!   topology   inspect/validate a topology (length, degree, finite-time, β)
+//!   consensus  run the Sec. 6.1 consensus experiment and dump CSV
+//!   train      run one decentralized training job (native or PJRT engine)
+//!   repro      regenerate a paper table/figure (see DESIGN.md index)
+//!   info       show the artifacts manifest and runtime status
+//!
+//! Run `basegraph <cmd> --help` for per-command flags.
+
+use basegraph::consensus;
+use basegraph::optim::OptimizerKind;
+use basegraph::repro;
+use basegraph::repro::common::{
+    classification_workload, print_table, run_training, Engine,
+};
+use basegraph::topology::TopologyKind;
+use basegraph::util::cli::Args;
+use basegraph::util::rng::Rng;
+
+const USAGE: &str = "\
+basegraph — Base-(k+1) Graph reproduction (NeurIPS 2023)
+
+USAGE:
+  basegraph topology  --kind <name> --n <n> [--seed S] [--validate]
+  basegraph consensus --n <n> [--iters I] [--topos a,b,c] [--out results]
+  basegraph train     --topo <name> --n <n> [--alpha A] [--rounds R]
+                      [--lr LR] [--optimizer dsgd|dsgdm|qg-dsgdm|d2|gt]
+                      [--engine native-mlp|native-linear|pjrt:mlp:ref]
+                      [--out results]
+  basegraph repro     --exp <id> [--fast] [--engine E] [--n N] [--ns a,b]
+                      [--rounds R] [--seed S] [--out results]
+  basegraph info      [--artifacts DIR]
+
+Topology names: ring, torus, exp, onepeer-exp, onepeer-hypercube, complete,
+  base-<m>, simple-base-<m>, hh-<k>, u-equidyn, d-equidyn,
+  u-equistatic-<deg>, d-equistatic-<deg>.
+Experiments: table1 table2 fig5 fig6 fig7 fig8 fig9 fig21 fig22 fig23
+  fig25 fig26 frontier all";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = raw[0].clone();
+    let args = match Args::parse(&raw[1..], &["validate", "fast", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        println!("{USAGE}");
+        return;
+    }
+    let result = match cmd.as_str() {
+        "topology" => cmd_topology(&args),
+        "consensus" => cmd_consensus(&args),
+        "train" => cmd_train(&args),
+        "repro" => repro::run(&args),
+        "info" => cmd_info(&args),
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_topology(args: &Args) -> Result<(), String> {
+    let kind = TopologyKind::parse(&args.str_or("kind", "base-2"))?;
+    let n = args.usize_or("n", 25)?;
+    let seed = args.u64_or("seed", 0)?;
+    let seq = kind.build(n, seed)?;
+    let mut rng = Rng::new(seed);
+    let beta = seq.product().consensus_rate(300, &mut rng);
+    let rows = vec![vec![
+        kind.label(),
+        n.to_string(),
+        seq.len().to_string(),
+        seq.max_degree().to_string(),
+        seq.is_finite_time(1e-9).to_string(),
+        format!("{beta:.6}"),
+    ]];
+    print_table(
+        "topology",
+        &["name", "n", "phases", "max deg", "finite-time", "sweep β"],
+        &rows,
+    );
+    if args.flag("validate") {
+        for (i, p) in seq.phases.iter().enumerate() {
+            if !p.is_doubly_stochastic(1e-9) {
+                return Err(format!("phase {i} is not doubly stochastic"));
+            }
+        }
+        println!(
+            "validation OK: all phases doubly stochastic; degree ≤ {}",
+            seq.max_degree()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_consensus(args: &Args) -> Result<(), String> {
+    let n = args.usize_or("n", 25)?;
+    let iters = args.usize_or("iters", 60)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out_dir = args.str_or("out", "results");
+    let topos = args.str_list_or(
+        "topos",
+        &["ring", "exp", "onepeer-exp", "base-2", "base-4"],
+    );
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let mut rows = Vec::new();
+    let mut header = vec!["iter".to_string()];
+    let mut series = Vec::new();
+    for t in &topos {
+        let kind = TopologyKind::parse(t)?;
+        let seq = kind.build(n, seed)?;
+        let trace = consensus::paper_consensus_experiment(&seq, iters, seed);
+        header.push(kind.label());
+        rows.push(vec![
+            kind.label(),
+            seq.max_degree().to_string(),
+            trace
+                .iters_to_reach(1e-20)
+                .map(|i| i.to_string())
+                .unwrap_or_else(|| "never".into()),
+            format!("{:.3e}", trace.errors[iters]),
+        ]);
+        series.push(trace.errors);
+    }
+    let csv_rows: Vec<Vec<String>> = (0..=iters)
+        .map(|it| {
+            let mut row = vec![it.to_string()];
+            for s in &series {
+                row.push(format!("{:.6e}", s[it]));
+            }
+            row
+        })
+        .collect();
+    let path = format!("{out_dir}/consensus_n{n}.csv");
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    basegraph::util::write_csv(&path, &header_refs, &csv_rows)
+        .map_err(|e| e.to_string())?;
+    print_table(
+        &format!("consensus at n={n} (CSV: {path})"),
+        &["topology", "max deg", "iters to exact", "err@end"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let kind = TopologyKind::parse(&args.str_or("topo", "base-2"))?;
+    let n = args.usize_or("n", 25)?;
+    let alpha = args.f64_or("alpha", 0.1)?;
+    let rounds = args.usize_or("rounds", 200)?;
+    let lr = args.f64_or("lr", 0.5)?;
+    let seed = args.u64_or("seed", 42)?;
+    let momentum = args.f64_or("momentum", 0.9)? as f32;
+    let optimizer =
+        OptimizerKind::parse(&args.str_or("optimizer", "dsgdm"), momentum)?;
+    let engine = Engine::parse(&args.str_or("engine", "native-mlp"))?;
+    let out_dir = args.str_or("out", "results");
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+
+    let workload = classification_workload(&engine, seed)?;
+    println!(
+        "training {} on {} (n={n}, α={alpha}, {} rounds, lr={lr}, {})",
+        workload.provider.name(),
+        kind.label(),
+        rounds,
+        optimizer.label()
+    );
+    let res =
+        run_training(&workload, kind, n, alpha, optimizer, rounds, lr, seed)?;
+    let path = format!(
+        "{out_dir}/train_{}_n{n}.csv",
+        args.str_or("topo", "base-2")
+    );
+    res.write_csv(&path).map_err(|e| e.to_string())?;
+    let evals: Vec<Vec<String>> = res
+        .records
+        .iter()
+        .filter(|r| !r.test_acc.is_nan())
+        .map(|r| {
+            vec![
+                r.round.to_string(),
+                format!("{:.4}", r.train_loss),
+                format!("{:.2}", 100.0 * r.test_acc),
+                format!("{:.2e}", r.consensus_error),
+                format!("{:.1}", r.cum_bytes as f64 / 1e6),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("training curve (CSV: {path})"),
+        &["round", "train loss", "test acc %", "consensus", "comm MB"],
+        &evals,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let dir = args.str_or("artifacts", "artifacts");
+    match basegraph::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            let rows: Vec<Vec<String>> = m
+                .models
+                .iter()
+                .map(|e| {
+                    vec![
+                        e.name.clone(),
+                        e.variant.clone(),
+                        e.d_params.to_string(),
+                        format!("{:?}", e.train.x_shape),
+                        e.train.hlo.clone(),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("artifacts in {dir}"),
+                &["model", "variant", "D", "train x", "hlo"],
+                &rows,
+            );
+            println!("{} mixing kernels", m.mix.len());
+        }
+        Err(e) => {
+            println!("no artifacts loaded ({e}); native engines still work");
+        }
+    }
+    Ok(())
+}

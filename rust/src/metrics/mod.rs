@@ -1,0 +1,125 @@
+//! Metric records for training runs and their CSV/JSONL serialization.
+
+use crate::util::json::Json;
+
+/// One evaluation point along a training run.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean local train loss over nodes this round.
+    pub train_loss: f64,
+    /// Parameter consensus error (1/n) Σ ||x_i − x̄||².
+    pub consensus_error: f64,
+    /// Test loss / accuracy of the node-averaged model (NaN when not
+    /// evaluated this round).
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Cumulative communication.
+    pub cum_messages: u64,
+    pub cum_bytes: u64,
+    pub sim_seconds: f64,
+}
+
+impl RoundRecord {
+    pub fn csv_header() -> Vec<&'static str> {
+        vec![
+            "round",
+            "train_loss",
+            "consensus_error",
+            "test_loss",
+            "test_acc",
+            "cum_messages",
+            "cum_bytes",
+            "sim_seconds",
+        ]
+    }
+
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.round.to_string(),
+            format!("{:.6}", self.train_loss),
+            format!("{:.6e}", self.consensus_error),
+            format!("{:.6}", self.test_loss),
+            format!("{:.4}", self.test_acc),
+            self.cum_messages.to_string(),
+            self.cum_bytes.to_string(),
+            format!("{:.6}", self.sim_seconds),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("consensus_error", Json::num(self.consensus_error)),
+            ("test_loss", Json::num(self.test_loss)),
+            ("test_acc", Json::num(self.test_acc)),
+            ("cum_messages", Json::num(self.cum_messages as f64)),
+            ("cum_bytes", Json::num(self.cum_bytes as f64)),
+            ("sim_seconds", Json::num(self.sim_seconds)),
+        ])
+    }
+}
+
+/// Full run result.
+#[derive(Debug, Clone, Default)]
+pub struct RunResult {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunResult {
+    /// Final test accuracy (last evaluated record).
+    pub fn final_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best test accuracy over the run.
+    pub fn best_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let rows: Vec<Vec<String>> =
+            self.records.iter().map(|r| r.csv_row()).collect();
+        crate::util::write_csv(path, &RoundRecord::csv_header(), &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_and_best_acc_skip_nan() {
+        let mut rr = RunResult { label: "t".into(), records: vec![] };
+        for (i, acc) in [(0, 0.1), (1, f64::NAN), (2, 0.5), (3, f64::NAN)] {
+            rr.records.push(RoundRecord {
+                round: i,
+                test_acc: acc,
+                ..Default::default()
+            });
+        }
+        assert_eq!(rr.final_acc(), 0.5);
+        assert_eq!(rr.best_acc(), 0.5);
+    }
+
+    #[test]
+    fn csv_row_count_matches_header() {
+        let r = RoundRecord::default();
+        assert_eq!(r.csv_row().len(), RoundRecord::csv_header().len());
+    }
+}

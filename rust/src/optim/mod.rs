@@ -1,0 +1,466 @@
+//! Decentralized optimizers evaluated in the paper: DSGD (Eq. 1), DSGD with
+//! momentum (the paper's default), QG-DSGDm (Lin et al. 2021) and D²
+//! (Tang et al. 2018), plus gradient tracking as the documented extension.
+//!
+//! The trainer's round protocol is optimizer-agnostic:
+//!
+//! 1. each node computes local gradients;
+//! 2. [`DecentralizedOptimizer::pre_mix`] turns (params, grads) into one or
+//!    more **messages** (most methods send one vector; gradient tracking
+//!    sends two);
+//! 3. the gossip engine mixes each message over the current phase matrix;
+//! 4. [`DecentralizedOptimizer::post_mix`] consumes the mixed messages and
+//!    produces the new parameters.
+
+/// Per-node optimizer state machine. One instance per node.
+pub trait DecentralizedOptimizer: Send {
+    fn name(&self) -> String;
+
+    /// How many vectors this method gossips per round (comm multiplier).
+    fn n_messages(&self) -> usize {
+        1
+    }
+
+    /// Mixing-matrix damping λ: the gossip engine applies
+    /// W̃ = (1−λ)·W + λ·I instead of W. D² requires a positive-
+    /// semidefinite mixing matrix (Tang et al.'s λ_min(W) > −1/3, and
+    /// stability under time-varying sequences); λ = 1/2 is the standard
+    /// (W+I)/2 damping. Zero for every other method.
+    fn w_damping(&self) -> f64 {
+        0.0
+    }
+
+    /// Produce the pre-mix message(s) from current params and fresh grads.
+    fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
+        -> Vec<Vec<f32>>;
+
+    /// Consume the mixed message(s); returns the new parameters.
+    /// `params_prev` is the parameter vector that produced the messages;
+    /// `active` is false when this node had no gossip partner this phase
+    /// (identity mixing row) — D² falls back to a plain SGD step there,
+    /// since its extrapolation is only stable under actual averaging.
+    fn post_mix(
+        &mut self,
+        mixed: Vec<Vec<f32>>,
+        params_prev: &[f32],
+        lr: f32,
+        active: bool,
+    ) -> Vec<f32>;
+}
+
+/// Which optimizer to build (CLI-facing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    Dsgd,
+    /// DSGD with local heavy-ball momentum (the paper's experiments).
+    Dsgdm { momentum: f32 },
+    /// Quasi-global momentum.
+    QgDsgdm { momentum: f32 },
+    /// D² / Exact diffusion.
+    D2,
+    /// Gradient tracking (2 messages per round).
+    GradientTracking,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str, momentum: f32) -> Result<OptimizerKind, String> {
+        Ok(match s.trim().to_lowercase().as_str() {
+            "dsgd" => OptimizerKind::Dsgd,
+            "dsgdm" => OptimizerKind::Dsgdm { momentum },
+            "qg-dsgdm" | "qgm" => OptimizerKind::QgDsgdm { momentum },
+            "d2" => OptimizerKind::D2,
+            "gt" | "gradient-tracking" => OptimizerKind::GradientTracking,
+            other => return Err(format!("unknown optimizer {other:?}")),
+        })
+    }
+
+    pub fn build(&self, d: usize) -> Box<dyn DecentralizedOptimizer> {
+        match *self {
+            OptimizerKind::Dsgd => Box::new(Dsgd),
+            OptimizerKind::Dsgdm { momentum } => {
+                Box::new(Dsgdm::new(d, momentum))
+            }
+            OptimizerKind::QgDsgdm { momentum } => {
+                Box::new(QgDsgdm::new(d, momentum))
+            }
+            OptimizerKind::D2 => Box::new(D2::new(d)),
+            OptimizerKind::GradientTracking => {
+                Box::new(GradientTracking::new(d))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            OptimizerKind::Dsgd => "DSGD".into(),
+            OptimizerKind::Dsgdm { .. } => "DSGDm".into(),
+            OptimizerKind::QgDsgdm { .. } => "QG-DSGDm".into(),
+            OptimizerKind::D2 => "D2".into(),
+            OptimizerKind::GradientTracking => "GT".into(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DSGD (Lian et al. 2017), Eq. (1) of the paper:
+// x_i <- Σ_j W_ij (x_j − η ∇F_j).
+// ---------------------------------------------------------------------------
+
+pub struct Dsgd;
+
+impl DecentralizedOptimizer for Dsgd {
+    fn name(&self) -> String {
+        "dsgd".into()
+    }
+    fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
+        -> Vec<Vec<f32>> {
+        vec![params
+            .iter()
+            .zip(grads)
+            .map(|(p, g)| p - lr * g)
+            .collect()]
+    }
+    fn post_mix(
+        &mut self,
+        mut mixed: Vec<Vec<f32>>,
+        _prev: &[f32],
+        _lr: f32,
+        _active: bool,
+    ) -> Vec<f32> {
+        mixed.pop().expect("one message")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DSGD with heavy-ball momentum: v <- βv + g; half-step uses v.
+// ---------------------------------------------------------------------------
+
+pub struct Dsgdm {
+    v: Vec<f32>,
+    beta: f32,
+}
+
+impl Dsgdm {
+    pub fn new(d: usize, beta: f32) -> Self {
+        Dsgdm { v: vec![0.0; d], beta }
+    }
+}
+
+impl DecentralizedOptimizer for Dsgdm {
+    fn name(&self) -> String {
+        format!("dsgdm(beta={})", self.beta)
+    }
+    fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
+        -> Vec<Vec<f32>> {
+        for (v, g) in self.v.iter_mut().zip(grads) {
+            *v = self.beta * *v + g;
+        }
+        vec![params
+            .iter()
+            .zip(&self.v)
+            .map(|(p, v)| p - lr * v)
+            .collect()]
+    }
+    fn post_mix(
+        &mut self,
+        mut mixed: Vec<Vec<f32>>,
+        _prev: &[f32],
+        _lr: f32,
+        _active: bool,
+    ) -> Vec<f32> {
+        mixed.pop().expect("one message")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QG-DSGDm (Lin et al. 2021): local step uses the quasi-global momentum
+// m̂, which is updated from the *mixed* displacement — robust to
+// heterogeneity because the momentum tracks the consensus direction.
+//
+//   x^{t+1/2} = x^t − η (g + β m̂^t)
+//   x^{t+1}   = Σ_j W_ij x_j^{t+1/2}
+//   m̂^{t+1}  = β m̂^t + (1−β) (x^t − x^{t+1}) / η
+// ---------------------------------------------------------------------------
+
+pub struct QgDsgdm {
+    m: Vec<f32>,
+    beta: f32,
+}
+
+impl QgDsgdm {
+    pub fn new(d: usize, beta: f32) -> Self {
+        QgDsgdm { m: vec![0.0; d], beta }
+    }
+}
+
+impl DecentralizedOptimizer for QgDsgdm {
+    fn name(&self) -> String {
+        format!("qg-dsgdm(beta={})", self.beta)
+    }
+    fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
+        -> Vec<Vec<f32>> {
+        vec![params
+            .iter()
+            .zip(grads)
+            .zip(&self.m)
+            .map(|((p, g), m)| p - lr * (g + self.beta * m))
+            .collect()]
+    }
+    fn post_mix(
+        &mut self,
+        mut mixed: Vec<Vec<f32>>,
+        prev: &[f32],
+        lr: f32,
+        _active: bool,
+    ) -> Vec<f32> {
+        let new = mixed.pop().expect("one message");
+        let inv_lr = if lr > 0.0 { 1.0 / lr } else { 0.0 };
+        for ((m, p_old), p_new) in
+            self.m.iter_mut().zip(prev).zip(&new)
+        {
+            *m = self.beta * *m
+                + (1.0 - self.beta) * (p_old - p_new) * inv_lr;
+        }
+        new
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D² (Tang et al. 2018): x^{t+1} = W (2x^t − x^{t−1} − η_t g^t + η_{t−1}
+// g^{t−1}). Cancels the data-heterogeneity term from the convergence rate.
+// The previous gradient is stored pre-scaled by its own step size — the
+// recursion telescopes to exact SGD on the consensus subspace only if each
+// gradient keeps the η it was applied with (the original paper uses a
+// constant step; this is the schedule-safe generalization).
+// ---------------------------------------------------------------------------
+
+pub struct D2 {
+    prev_x: Option<Vec<f32>>,
+    /// η_{t−1} · g^{t−1}.
+    prev_eta_g: Option<Vec<f32>>,
+}
+
+impl D2 {
+    pub fn new(_d: usize) -> Self {
+        D2 { prev_x: None, prev_eta_g: None }
+    }
+}
+
+impl DecentralizedOptimizer for D2 {
+    fn name(&self) -> String {
+        "d2".into()
+    }
+    fn w_damping(&self) -> f64 {
+        0.5
+    }
+    fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
+        -> Vec<Vec<f32>> {
+        let msg: Vec<f32> = match (&self.prev_x, &self.prev_eta_g) {
+            (Some(px), Some(peg)) => params
+                .iter()
+                .zip(grads)
+                .zip(px.iter().zip(peg))
+                .map(|((x, g), (xp, eg))| 2.0 * x - xp - lr * g + eg)
+                .collect(),
+            // First round: plain DSGD half-step.
+            _ => params.iter().zip(grads).map(|(x, g)| x - lr * g).collect(),
+        };
+        self.prev_eta_g =
+            Some(grads.iter().map(|g| lr * g).collect());
+        vec![msg]
+    }
+    fn post_mix(
+        &mut self,
+        mut mixed: Vec<Vec<f32>>,
+        prev: &[f32],
+        _lr: f32,
+        active: bool,
+    ) -> Vec<f32> {
+        self.prev_x = Some(prev.to_vec());
+        if active {
+            mixed.pop().expect("one message")
+        } else {
+            // Idle phase: the D² extrapolation is unstable without real
+            // averaging (double unit root); take the plain SGD step
+            // x^{t+1} = x^t − η_t g^t instead. The recursion re-enters
+            // consistently next round (ψ-form telescoping).
+            prev.iter()
+                .zip(self.prev_eta_g.as_ref().expect("set in pre_mix"))
+                .map(|(x, eg)| x - eg)
+                .collect()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gradient tracking (Nedić et al. 2017; the paper's related-work family):
+// tracker y estimates the global gradient. Two messages per round.
+//
+//   x^{t+1} = Σ_j W_ij (x_j − η y_j)
+//   y^{t+1} = Σ_j W_ij y_j + g^{t+1} − g^t
+//
+// Here we gossip (x − η y) and y together, then add the local gradient
+// delta on the next round's pre_mix (g^{t+1} is only available then).
+// ---------------------------------------------------------------------------
+
+pub struct GradientTracking {
+    y: Vec<f32>,
+    prev_g: Option<Vec<f32>>,
+}
+
+impl GradientTracking {
+    pub fn new(d: usize) -> Self {
+        GradientTracking { y: vec![0.0; d], prev_g: None }
+    }
+}
+
+impl DecentralizedOptimizer for GradientTracking {
+    fn name(&self) -> String {
+        "gradient-tracking".into()
+    }
+    fn n_messages(&self) -> usize {
+        2
+    }
+    fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
+        -> Vec<Vec<f32>> {
+        // Fold the fresh gradient into the tracker: y += g^t − g^{t−1}
+        // (y^0 = g^0).
+        match &self.prev_g {
+            None => {
+                self.y.copy_from_slice(grads);
+            }
+            Some(pg) => {
+                for ((y, g), gp) in self.y.iter_mut().zip(grads).zip(pg) {
+                    *y += g - gp;
+                }
+            }
+        }
+        self.prev_g = Some(grads.to_vec());
+        let half: Vec<f32> = params
+            .iter()
+            .zip(&self.y)
+            .map(|(p, y)| p - lr * y)
+            .collect();
+        vec![half, self.y.clone()]
+    }
+    fn post_mix(
+        &mut self,
+        mut mixed: Vec<Vec<f32>>,
+        _prev: &[f32],
+        _lr: f32,
+        _active: bool,
+    ) -> Vec<f32> {
+        let y_mixed = mixed.pop().expect("two messages");
+        let x_new = mixed.pop().expect("two messages");
+        self.y = y_mixed;
+        x_new
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// On a single fully-connected pair of "nodes" with identical
+    /// quadratic objectives, every optimizer must drive params to the
+    /// optimum.
+    fn run_centralized(kind: OptimizerKind, rounds: usize) -> f32 {
+        let d = 4;
+        let target = [1.0f32, -2.0, 3.0, 0.5];
+        let mut opt = kind.build(d);
+        let mut x = vec![0.0f32; d];
+        let lr = 0.2;
+        for _ in 0..rounds {
+            let grads: Vec<f32> =
+                x.iter().zip(&target).map(|(xi, t)| xi - t).collect();
+            let msgs = opt.pre_mix(&x, &grads, lr);
+            // "Mixing" with self only (W = I).
+            let prev = x.clone();
+            x = opt.post_mix(msgs, &prev, lr, true);
+        }
+        x.iter()
+            .zip(&target)
+            .map(|(xi, t)| (xi - t).powi(2))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        for kind in [
+            OptimizerKind::Dsgd,
+            OptimizerKind::Dsgdm { momentum: 0.9 },
+            OptimizerKind::QgDsgdm { momentum: 0.9 },
+            OptimizerKind::D2,
+            OptimizerKind::GradientTracking,
+        ] {
+            let err = run_centralized(kind, 300);
+            assert!(err < 1e-2, "{:?}: final err {err}", kind.label());
+        }
+    }
+
+    #[test]
+    fn dsgd_message_is_halfstep() {
+        let mut opt = Dsgd;
+        let msgs = opt.pre_mix(&[1.0, 2.0], &[0.5, -0.5], 0.1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0], vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Dsgdm::new(1, 0.9);
+        let m1 = opt.pre_mix(&[0.0], &[1.0], 1.0);
+        assert!((m1[0][0] + 1.0).abs() < 1e-6); // v=1, x-v = -1
+        let m2 = opt.pre_mix(&[0.0], &[1.0], 1.0);
+        assert!((m2[0][0] + 1.9).abs() < 1e-6); // v=1.9
+    }
+
+    #[test]
+    fn d2_uses_previous_iterate() {
+        let mut opt = D2::new(2);
+        // Round 1: plain half-step.
+        let m1 = opt.pre_mix(&[1.0, 1.0], &[1.0, 0.0], 0.5);
+        assert_eq!(m1[0], vec![0.5, 1.0]);
+        let x1 = opt.post_mix(m1, &[1.0, 1.0], 0.5, true);
+        // Round 2: 2x − x_prev − η(g − g_prev).
+        let m2 = opt.pre_mix(&x1, &[1.0, 0.0], 0.5);
+        // 2*0.5 − 1.0 − 0.5*(1−1) = 0 ; 2*1.0 − 1.0 − 0 = 1.
+        assert_eq!(m2[0], vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn gradient_tracking_sends_two_messages() {
+        let mut opt = GradientTracking::new(3);
+        assert_eq!(opt.n_messages(), 2);
+        let msgs = opt.pre_mix(&[0.0; 3], &[1.0, 2.0, 3.0], 0.1);
+        assert_eq!(msgs.len(), 2);
+        // y^0 = g^0.
+        assert_eq!(msgs[1], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn qg_momentum_tracks_mixed_displacement() {
+        let mut opt = QgDsgdm::new(1, 0.5);
+        let msgs = opt.pre_mix(&[1.0], &[2.0], 0.1);
+        // half-step: 1 − 0.1*(2 + 0) = 0.8
+        assert!((msgs[0][0] - 0.8).abs() < 1e-6);
+        // Suppose mixing returned 0.6; m = 0.5*0 + 0.5*(1.0−0.6)/0.1 = 2.0
+        let x = opt.post_mix(vec![vec![0.6]], &[1.0], 0.1, true);
+        assert!((x[0] - 0.6).abs() < 1e-6);
+        assert!((opt.m[0] - 2.0).abs() < 1e-5, "m={}", opt.m[0]);
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(
+            OptimizerKind::parse("dsgd", 0.9).unwrap(),
+            OptimizerKind::Dsgd
+        );
+        assert_eq!(
+            OptimizerKind::parse("qg-dsgdm", 0.9).unwrap(),
+            OptimizerKind::QgDsgdm { momentum: 0.9 }
+        );
+        assert!(OptimizerKind::parse("adamw", 0.9).is_err());
+    }
+}

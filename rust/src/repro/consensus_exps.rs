@@ -1,0 +1,201 @@
+//! Consensus-rate reproductions: Figs. 1, 6, 21, 23 and the length
+//! comparison Figs. 5 / 20.
+
+use crate::consensus::paper_consensus_experiment;
+use crate::topology::{base, simple_base, TopologyKind};
+use crate::util::write_csv;
+
+use super::common::{out_path, print_table, standard_roster};
+
+/// Figs. 1/6 (and 23, which is the same experiment at n=21..25): consensus
+/// error vs iteration for every topology in the paper's roster.
+pub fn fig6(ns: &[usize], iters: usize, seed: u64, out_dir: &str) {
+    for &n in ns {
+        let mut header: Vec<String> = vec!["iter".into()];
+        let mut series: Vec<Vec<f64>> = Vec::new();
+        let mut summary_rows: Vec<Vec<String>> = Vec::new();
+        for kind in standard_roster(n) {
+            let seq = match kind.build(n, seed) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let trace = paper_consensus_experiment(&seq, iters, seed);
+            header.push(format!(
+                "{} (deg {})",
+                kind.label(),
+                seq.max_degree()
+            ));
+            summary_rows.push(vec![
+                kind.label(),
+                seq.max_degree().to_string(),
+                seq.len().to_string(),
+                match trace.iters_to_reach(1e-20) {
+                    Some(it) => it.to_string(),
+                    None => "never".into(),
+                },
+                format!("{:.3e}", trace.errors[iters]),
+            ]);
+            series.push(trace.errors);
+        }
+        let rows: Vec<Vec<String>> = (0..=iters)
+            .map(|it| {
+                let mut row = vec![it.to_string()];
+                for s in &series {
+                    row.push(format!("{:.6e}", s[it]));
+                }
+                row
+            })
+            .collect();
+        let path = out_path(out_dir, &format!("fig6_consensus_n{n}.csv"));
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        write_csv(&path, &header_refs, &rows).expect("write csv");
+        print_table(
+            &format!("Fig. 6 — consensus, n={n} (CSV: {path})"),
+            &["topology", "max deg", "seq len", "iters to exact", "err@end"],
+            &summary_rows,
+        );
+    }
+}
+
+/// Fig. 21: n a power of two — Base-2 ≡ 1-peer hypercube, and the 1-peer
+/// exponential graph is also finite-time.
+pub fn fig21(ns: &[usize], iters: usize, seed: u64, out_dir: &str) {
+    for &n in ns {
+        assert!(n.is_power_of_two(), "fig21 needs powers of two");
+        let kinds = vec![
+            TopologyKind::Ring,
+            TopologyKind::Exp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::OnePeerHypercube,
+            TopologyKind::Base { m: 2 },
+            TopologyKind::Base { m: 4 },
+        ];
+        let mut rows = Vec::new();
+        let mut header: Vec<String> = vec!["iter".into()];
+        let mut series = Vec::new();
+        for kind in kinds {
+            let seq = match kind.build(n, seed) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let trace = paper_consensus_experiment(&seq, iters, seed);
+            header.push(kind.label());
+            rows.push(vec![
+                kind.label(),
+                seq.max_degree().to_string(),
+                match trace.iters_to_reach(1e-20) {
+                    Some(it) => it.to_string(),
+                    None => "never".into(),
+                },
+            ]);
+            series.push(trace.errors);
+        }
+        let csv_rows: Vec<Vec<String>> = (0..=iters)
+            .map(|it| {
+                let mut row = vec![it.to_string()];
+                for s in &series {
+                    row.push(format!("{:.6e}", s[it]));
+                }
+                row
+            })
+            .collect();
+        let path = out_path(out_dir, &format!("fig21_consensus_n{n}.csv"));
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        write_csv(&path, &header_refs, &csv_rows).expect("write csv");
+        print_table(
+            &format!("Fig. 21 — consensus, n={n} (power of 2)"),
+            &["topology", "max deg", "iters to exact"],
+            &rows,
+        );
+    }
+}
+
+/// Figs. 5/20: sequence length of the Simple Base-(k+1) vs Base-(k+1)
+/// Graph across n.
+pub fn fig5(n_max: usize, ks: &[usize], out_dir: &str) {
+    let mut header: Vec<String> = vec!["n".into()];
+    for &k in ks {
+        header.push(format!("simple-base-{}", k + 1));
+        header.push(format!("base-{}", k + 1));
+    }
+    let mut rows = Vec::new();
+    let mut shorter_counts = vec![0usize; ks.len()];
+    for n in 2..=n_max {
+        let mut row = vec![n.to_string()];
+        for (i, &k) in ks.iter().enumerate() {
+            let ls = simple_base::seq_len(n, k.min(n - 1).max(1));
+            let lb = base::seq_len(n, k.min(n - 1).max(1));
+            assert!(lb <= ls, "base longer than simple at n={n} k={k}");
+            if lb < ls {
+                shorter_counts[i] += 1;
+            }
+            row.push(ls.to_string());
+            row.push(lb.to_string());
+        }
+        rows.push(row);
+    }
+    let path = out_path(out_dir, "fig5_lengths.csv");
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    write_csv(&path, &header_refs, &rows).expect("write csv");
+    let summary: Vec<Vec<String>> = ks
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| {
+            vec![
+                format!("k={k} (Base-{})", k + 1),
+                format!("{}/{}", shorter_counts[i], n_max - 1),
+                format!("{:.1}%", 100.0 * shorter_counts[i] as f64 / (n_max - 1) as f64),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Fig. 5/20 — Base strictly shorter than Simple Base (n ≤ {n_max}; CSV: {path})"),
+        &["max degree", "strictly shorter", "fraction"],
+        &summary,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("basegraph_repro_{tag}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn fig6_writes_csv_and_base_is_exact() {
+        let dir = tmp_dir("fig6");
+        fig6(&[22], 30, 0, &dir);
+        let text =
+            std::fs::read_to_string(format!("{dir}/fig6_consensus_n22.csv"))
+                .unwrap();
+        assert!(text.lines().count() == 32); // header + 31 iters
+        assert!(text.contains("Base-2"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fig5_runs_small() {
+        let dir = tmp_dir("fig5");
+        fig5(40, &[1, 2], &dir);
+        assert!(std::path::Path::new(&format!("{dir}/fig5_lengths.csv"))
+            .exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fig21_runs_small() {
+        let dir = tmp_dir("fig21");
+        fig21(&[16], 16, 0, &dir);
+        assert!(std::path::Path::new(&format!(
+            "{dir}/fig21_consensus_n16.csv"
+        ))
+        .exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

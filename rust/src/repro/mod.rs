@@ -1,0 +1,106 @@
+//! Reproduction harness: one target per table/figure in the paper's
+//! evaluation (see DESIGN.md's experiment index). Invoked through
+//! `basegraph repro --exp <id>`; each target prints a console table and
+//! writes CSVs under the output directory.
+
+pub mod common;
+pub mod consensus_exps;
+pub mod tables;
+pub mod training_exps;
+
+use crate::util::cli::Args;
+use common::Engine;
+
+/// All experiment ids.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig21",
+    "fig22", "fig23", "fig25", "fig26", "frontier", "all",
+];
+
+/// Entry point for `basegraph repro`.
+pub fn run(args: &Args) -> Result<(), String> {
+    let exp = args.str_or("exp", "all");
+    let out_dir = args.str_or("out", "results");
+    let fast = args.flag("fast");
+    let seed = args.u64_or("seed", 42)?;
+    let engine = Engine::parse(&args.str_or("engine", "native-mlp"))?;
+    let engine_deep =
+        Engine::parse(&args.str_or("engine-deep", "native-mlp-deep"))?;
+    // The paper repeats each training run over 3 seeds.
+    let seeds: Vec<u64> = if fast {
+        vec![seed]
+    } else {
+        vec![seed, seed + 1, seed + 2]
+    };
+    let rounds = args.usize_or("rounds", if fast { 60 } else { 100 })?;
+    let n = args.usize_or("n", 25)?;
+    let ns = args.usize_list_or("ns", &[21, 22, 23, 24, 25])?;
+    std::fs::create_dir_all(&out_dir)
+        .map_err(|e| format!("mkdir {out_dir}: {e}"))?;
+
+    let run_one = |id: &str| -> Result<(), String> {
+        match id {
+            "table1" => tables::table1(n, seed, &out_dir),
+            "table2" => tables::table2(n, 0.01, seed, &out_dir),
+            "frontier" => tables::base_family_frontier(n, seed, &out_dir),
+            "fig5" => consensus_exps::fig5(
+                if fast { 100 } else { 300 },
+                &[1, 2, 3, 4],
+                &out_dir,
+            ),
+            "fig6" => consensus_exps::fig6(
+                &ns,
+                if fast { 40 } else { 60 },
+                seed,
+                &out_dir,
+            ),
+            // Fig. 23 is the Fig. 6 protocol at n = 21..25 explicitly.
+            "fig23" => consensus_exps::fig6(
+                &[21, 22, 23, 24, 25],
+                if fast { 40 } else { 60 },
+                seed,
+                &out_dir,
+            ),
+            "fig21" => consensus_exps::fig21(
+                &[32, 64],
+                if fast { 24 } else { 40 },
+                seed,
+                &out_dir,
+            ),
+            "fig7" => {
+                training_exps::fig7(&engine, n, rounds, &seeds, &out_dir)
+            }
+            "fig8" => {
+                training_exps::fig8(&engine, &ns, rounds, &seeds, &out_dir)
+            }
+            "fig9" => {
+                training_exps::fig9(&engine, n, rounds, &seeds, &out_dir)
+            }
+            "fig22" => {
+                training_exps::fig22(&engine, n, rounds, &seeds, &out_dir)
+            }
+            "fig25" => {
+                training_exps::fig25(&engine, rounds, &seeds, &out_dir)
+            }
+            "fig26" => training_exps::fig26(
+                &engine_deep,
+                n,
+                rounds,
+                &seeds,
+                &out_dir,
+            ),
+            other => return Err(format!("unknown experiment {other:?}")),
+        }
+        Ok(())
+    };
+
+    if exp == "all" {
+        for id in EXPERIMENTS.iter().filter(|&&e| e != "all") {
+            println!("\n########## repro {id} ##########");
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(&exp)
+    }
+}

@@ -1,0 +1,96 @@
+//! The batch type flowing between the data pipeline and gradient providers.
+
+/// Feature tensor payload: f32 for MLP/CNN inputs, i32 for LM token ids.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Features {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Features {
+    pub fn len(&self) -> usize {
+        match self {
+            Features::F32(v) => v.len(),
+            Features::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn dtype_tag(&self) -> &'static str {
+        match self {
+            Features::F32(_) => "f32",
+            Features::I32(_) => "i32",
+        }
+    }
+}
+
+/// One training/eval batch with explicit shapes (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub x: Features,
+    pub x_shape: Vec<usize>,
+    /// Labels (class ids, or next-token ids for the LM).
+    pub y: Vec<i32>,
+    pub y_shape: Vec<usize>,
+}
+
+impl Batch {
+    /// Number of examples (leading axis).
+    pub fn batch_size(&self) -> usize {
+        *self.x_shape.first().unwrap_or(&0)
+    }
+
+    /// Number of label slots (for the LM this is batch × seq).
+    pub fn label_count(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        let expect: usize = self.x_shape.iter().product();
+        if self.x.len() != expect {
+            return Err(format!(
+                "x payload {} != shape product {expect}",
+                self.x.len()
+            ));
+        }
+        let ey: usize = self.y_shape.iter().product();
+        if self.y.len() != ey {
+            return Err(format!(
+                "y payload {} != shape product {ey}",
+                self.y.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accessors() {
+        let b = Batch {
+            x: Features::F32(vec![0.0; 6]),
+            x_shape: vec![2, 3],
+            y: vec![1, 0],
+            y_shape: vec![2],
+        };
+        assert_eq!(b.batch_size(), 2);
+        assert_eq!(b.label_count(), 2);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let b = Batch {
+            x: Features::I32(vec![0; 5]),
+            x_shape: vec![2, 3],
+            y: vec![1, 0],
+            y_shape: vec![2],
+        };
+        assert!(b.validate().is_err());
+    }
+}

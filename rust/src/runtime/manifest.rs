@@ -1,0 +1,237 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::util::json::{self, Json};
+
+/// Input/output description of one lowered step function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSpec {
+    pub hlo: String,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: String,
+    pub sha256: String,
+}
+
+/// One model × variant entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub variant: String,
+    pub d_params: usize,
+    pub init: String,
+    pub train: StepSpec,
+    pub eval: StepSpec,
+}
+
+/// One gossip-mixing kernel artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixEntry {
+    pub name: String,
+    pub hlo: String,
+    pub m: usize,
+    pub d: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: usize,
+    pub models: Vec<ModelEntry>,
+    pub mix: Vec<MixEntry>,
+}
+
+fn field<'a>(v: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("manifest: missing {ctx}.{key}"))
+}
+
+fn str_field(v: &Json, key: &str, ctx: &str) -> Result<String, String> {
+    Ok(field(v, key, ctx)?
+        .as_str()
+        .ok_or_else(|| format!("manifest: {ctx}.{key} not a string"))?
+        .to_string())
+}
+
+fn usize_field(v: &Json, key: &str, ctx: &str) -> Result<usize, String> {
+    field(v, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| format!("manifest: {ctx}.{key} not a number"))
+}
+
+fn shape_field(v: &Json, key: &str, ctx: &str) -> Result<Vec<usize>, String> {
+    field(v, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| format!("manifest: {ctx}.{key} not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| format!("manifest: {ctx}.{key} bad entry"))
+        })
+        .collect()
+}
+
+fn parse_step(v: &Json, ctx: &str) -> Result<StepSpec, String> {
+    Ok(StepSpec {
+        hlo: str_field(v, "hlo", ctx)?,
+        batch: usize_field(v, "batch", ctx)?,
+        x_shape: shape_field(v, "x_shape", ctx)?,
+        x_dtype: str_field(v, "x_dtype", ctx)?,
+        y_shape: shape_field(v, "y_shape", ctx)?,
+        y_dtype: str_field(v, "y_dtype", ctx)?,
+        sha256: str_field(v, "sha256", ctx)?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let root = json::parse(text).map_err(|e| e.to_string())?;
+        let version = usize_field(&root, "version", "root")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let mut models = Vec::new();
+        for (i, m) in field(&root, "models", "root")?
+            .as_arr()
+            .ok_or("manifest: models not an array")?
+            .iter()
+            .enumerate()
+        {
+            let ctx = format!("models[{i}]");
+            models.push(ModelEntry {
+                name: str_field(m, "name", &ctx)?,
+                variant: str_field(m, "variant", &ctx)?,
+                d_params: usize_field(m, "d_params", &ctx)?,
+                init: str_field(m, "init", &ctx)?,
+                train: parse_step(field(m, "train", &ctx)?, &ctx)?,
+                eval: parse_step(field(m, "eval", &ctx)?, &ctx)?,
+            });
+        }
+        let mut mix = Vec::new();
+        for (i, m) in field(&root, "mix", "root")?
+            .as_arr()
+            .ok_or("manifest: mix not an array")?
+            .iter()
+            .enumerate()
+        {
+            let ctx = format!("mix[{i}]");
+            mix.push(MixEntry {
+                name: str_field(m, "name", &ctx)?,
+                hlo: str_field(m, "hlo", &ctx)?,
+                m: usize_field(m, "m", &ctx)?,
+                d: usize_field(m, "d", &ctx)?,
+            });
+        }
+        Ok(Manifest { version, models, mix })
+    }
+
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Find a model by name + variant.
+    pub fn model(&self, name: &str, variant: &str) -> Option<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name && m.variant == variant)
+    }
+
+    /// Find a mix kernel for m partners and dimension d.
+    pub fn mix_kernel(&self, m: usize, d: usize) -> Option<&MixEntry> {
+        self.mix.iter().find(|e| e.m == m && e.d == d)
+    }
+}
+
+/// Read a little-endian f32 file (the init-params dump).
+pub fn read_f32_file(path: &str) -> Result<Vec<f32>, String> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    if bytes.len() % 4 != 0 {
+        return Err(format!("{path}: length {} not divisible by 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": [
+        {"name": "mlp", "variant": "pallas", "d_params": 26122,
+         "init": "mlp_init.f32",
+         "train": {"hlo": "mlp_pallas_train.hlo.txt", "batch": 32,
+                    "x_shape": [32, 64], "x_dtype": "f32",
+                    "y_shape": [32], "y_dtype": "i32", "sha256": "ab"},
+         "eval": {"hlo": "mlp_pallas_eval.hlo.txt", "batch": 256,
+                   "x_shape": [256, 64], "x_dtype": "f32",
+                   "y_shape": [256], "y_dtype": "i32", "sha256": "cd"}}
+      ],
+      "mix": [
+        {"name": "mix_m3_d26122", "hlo": "mix_m3_d26122.hlo.txt",
+         "m": 3, "d": 26122, "sha256": "ef"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let e = m.model("mlp", "pallas").unwrap();
+        assert_eq!(e.d_params, 26122);
+        assert_eq!(e.train.batch, 32);
+        assert_eq!(e.train.x_shape, vec![32, 64]);
+        assert_eq!(e.eval.batch, 256);
+        assert_eq!(e.init, "mlp_init.f32");
+        let k = m.mix_kernel(3, 26122).unwrap();
+        assert_eq!(k.hlo, "mix_m3_d26122.hlo.txt");
+        assert!(m.mix_kernel(4, 26122).is_none());
+        assert!(m.model("mlp", "ref").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_field_reports_path() {
+        let bad = SAMPLE.replace("\"d_params\": 26122,", "");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(err.contains("models[0]"), "{err}");
+        assert!(err.contains("d_params"), "{err}");
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("basegraph_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f32");
+        let vals = [1.5f32, -2.25, 0.0, 3.75e10];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        let got = read_f32_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(got, vals);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        // Integration against the actual artifacts when present.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.models.len() >= 2);
+            for e in &m.models {
+                assert!(e.d_params > 0);
+                assert!(e.train.batch > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime layer: how the Rust coordinator computes gradients.
+//!
+//! * [`pjrt`] — the production path: AOT HLO artifacts executed through the
+//!   PJRT C API (`xla` crate). Python is build-time only.
+//! * [`provider`] — the `GradProvider` trait plus pure-Rust reference models
+//!   (quadratic, softmax regression, small MLP) for artifact-free tests,
+//!   fast topology sweeps and the Table-2 controlled workload.
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`batch`] — the batch type exchanged with the data pipeline.
+
+pub mod batch;
+pub mod manifest;
+pub mod pjrt;
+pub mod provider;
+
+pub use batch::{Batch, Features};
+pub use manifest::Manifest;
+pub use pjrt::{PjrtMixer, PjrtModel};
+pub use provider::{GradProvider, QuadraticModel, RustMlp, SoftmaxRegression};

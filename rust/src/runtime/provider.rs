@@ -1,0 +1,578 @@
+//! The `GradProvider` abstraction: how the coordinator obtains local
+//! gradients.
+//!
+//! The production implementation is `runtime::pjrt::PjrtModel` (AOT HLO
+//! executed through the PJRT C API). The native Rust models here exist so
+//! the training engine, optimizers and repro harness are testable and
+//! benchmarkable without artifacts — and so the controlled convex workload
+//! of the Table-2 experiment is exactly reproducible.
+
+use super::batch::{Batch, Features};
+use crate::util::rng::Rng;
+
+/// A model whose gradients the decentralized trainer can query.
+pub trait GradProvider: Send + Sync {
+    fn name(&self) -> String;
+    /// Flat parameter dimension D.
+    fn d_params(&self) -> usize;
+    /// Initial parameter vector (shared by all nodes, as in the paper).
+    fn init_params(&self) -> Vec<f32>;
+    /// `(loss, grads)` on one batch.
+    fn train_step(&self, params: &[f32], batch: &Batch)
+        -> Result<(f32, Vec<f32>), String>;
+    /// `(loss, correct_count)` on one eval batch.
+    fn eval_step(&self, params: &[f32], batch: &Batch)
+        -> Result<(f32, f64), String>;
+}
+
+// ---------------------------------------------------------------------------
+// Quadratic model: f(x) = 0.5 ||x − c||², c delivered through the batch as
+// the feature vector. The unique minimizer of the *average* objective is the
+// mean of the node targets — ideal for convergence-rate experiments where
+// the optimum is known in closed form (Table 2).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct QuadraticModel {
+    pub d: usize,
+}
+
+impl QuadraticModel {
+    pub fn new(d: usize) -> Self {
+        QuadraticModel { d }
+    }
+
+    /// Build the per-node batch carrying target c.
+    pub fn target_batch(c: Vec<f32>) -> Batch {
+        let d = c.len();
+        Batch {
+            x: Features::F32(c),
+            x_shape: vec![1, d],
+            y: vec![0],
+            y_shape: vec![1],
+        }
+    }
+}
+
+impl GradProvider for QuadraticModel {
+    fn name(&self) -> String {
+        format!("quadratic(d={})", self.d)
+    }
+    fn d_params(&self) -> usize {
+        self.d
+    }
+    fn init_params(&self) -> Vec<f32> {
+        vec![0.0; self.d]
+    }
+    fn train_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<f32>), String> {
+        let c = match &batch.x {
+            Features::F32(v) => v,
+            _ => return Err("quadratic model expects f32 targets".into()),
+        };
+        if c.len() != self.d || params.len() != self.d {
+            return Err(format!(
+                "dim mismatch: d={}, |c|={}, |params|={}",
+                self.d,
+                c.len(),
+                params.len()
+            ));
+        }
+        let mut loss = 0.0f64;
+        let mut grads = vec![0.0f32; self.d];
+        for i in 0..self.d {
+            let diff = params[i] - c[i];
+            loss += 0.5 * (diff as f64) * (diff as f64);
+            grads[i] = diff;
+        }
+        Ok((loss as f32, grads))
+    }
+    fn eval_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, f64), String> {
+        let (loss, _) = self.train_step(params, batch)?;
+        Ok((loss, 0.0))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax regression: linear classifier over f32 features with analytic
+// cross-entropy gradients. Fast enough for full Fig-7-style topology sweeps
+// in pure Rust.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SoftmaxRegression {
+    pub dim: usize,
+    pub classes: usize,
+    pub init_seed: u64,
+}
+
+impl SoftmaxRegression {
+    pub fn new(dim: usize, classes: usize, init_seed: u64) -> Self {
+        SoftmaxRegression { dim, classes, init_seed }
+    }
+    fn logits(&self, params: &[f32], x: &[f32], out: &mut [f64]) {
+        // params layout: W[dim][classes] then b[classes].
+        let (w, b) = params.split_at(self.dim * self.classes);
+        for c in 0..self.classes {
+            out[c] = b[c] as f64;
+        }
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &w[j * self.classes..(j + 1) * self.classes];
+            for c in 0..self.classes {
+                out[c] += xj as f64 * row[c] as f64;
+            }
+        }
+    }
+}
+
+fn softmax_inplace(z: &mut [f64]) {
+    let m = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut s = 0.0;
+    for v in z.iter_mut() {
+        *v = (*v - m).exp();
+        s += *v;
+    }
+    for v in z.iter_mut() {
+        *v /= s;
+    }
+}
+
+impl GradProvider for SoftmaxRegression {
+    fn name(&self) -> String {
+        format!("softmax-reg({}x{})", self.dim, self.classes)
+    }
+    fn d_params(&self) -> usize {
+        self.dim * self.classes + self.classes
+    }
+    fn init_params(&self) -> Vec<f32> {
+        let mut rng = Rng::new(self.init_seed);
+        let scale = (1.0 / self.dim as f64).sqrt();
+        let mut p: Vec<f32> = (0..self.dim * self.classes)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        p
+    }
+    fn train_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<f32>), String> {
+        let x = match &batch.x {
+            Features::F32(v) => v,
+            _ => return Err("softmax-reg expects f32 features".into()),
+        };
+        let bsz = batch.batch_size();
+        if bsz == 0 || x.len() != bsz * self.dim || batch.y.len() != bsz {
+            return Err("softmax-reg: bad batch shape".into());
+        }
+        let mut grads = vec![0.0f32; self.d_params()];
+        let (gw, gb) = grads.split_at_mut(self.dim * self.classes);
+        let mut loss = 0.0f64;
+        let mut probs = vec![0.0f64; self.classes];
+        for i in 0..bsz {
+            let xi = &x[i * self.dim..(i + 1) * self.dim];
+            self.logits(params, xi, &mut probs);
+            softmax_inplace(&mut probs);
+            let yi = batch.y[i] as usize;
+            if yi >= self.classes {
+                return Err(format!("label {yi} out of range"));
+            }
+            loss -= probs[yi].max(1e-30).ln();
+            // dL/dz = p - onehot(y)
+            for c in 0..self.classes {
+                let dz = (probs[c] - if c == yi { 1.0 } else { 0.0 })
+                    / bsz as f64;
+                gb[c] += dz as f32;
+                for (j, &xj) in xi.iter().enumerate() {
+                    if xj != 0.0 {
+                        gw[j * self.classes + c] += (xj as f64 * dz) as f32;
+                    }
+                }
+            }
+        }
+        Ok(((loss / bsz as f64) as f32, grads))
+    }
+    fn eval_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, f64), String> {
+        let x = match &batch.x {
+            Features::F32(v) => v,
+            _ => return Err("softmax-reg expects f32 features".into()),
+        };
+        let bsz = batch.batch_size();
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut probs = vec![0.0f64; self.classes];
+        for i in 0..bsz {
+            let xi = &x[i * self.dim..(i + 1) * self.dim];
+            self.logits(params, xi, &mut probs);
+            softmax_inplace(&mut probs);
+            let yi = batch.y[i] as usize;
+            loss -= probs[yi].max(1e-30).ln();
+            let argmax = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == yi {
+                correct += 1.0;
+            }
+        }
+        Ok(((loss / bsz as f64) as f32, correct))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One-hidden-layer MLP with ReLU and analytic backprop: the non-convex
+// native workload (closest pure-Rust analogue of the paper's LeNet runs).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct RustMlp {
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub init_seed: u64,
+}
+
+impl RustMlp {
+    pub fn new(dim: usize, hidden: usize, classes: usize, init_seed: u64) -> Self {
+        RustMlp { dim, hidden, classes, init_seed }
+    }
+    fn split<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let w1 = self.dim * self.hidden;
+        let b1 = self.hidden;
+        let w2 = self.hidden * self.classes;
+        let (a, rest) = p.split_at(w1);
+        let (b, rest) = rest.split_at(b1);
+        let (c, d) = rest.split_at(w2);
+        (a, b, c, d)
+    }
+}
+
+impl GradProvider for RustMlp {
+    fn name(&self) -> String {
+        format!("rust-mlp({}-{}-{})", self.dim, self.hidden, self.classes)
+    }
+    fn d_params(&self) -> usize {
+        self.dim * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes
+    }
+    fn init_params(&self) -> Vec<f32> {
+        let mut rng = Rng::new(self.init_seed);
+        let mut p = Vec::with_capacity(self.d_params());
+        let s1 = (2.0 / self.dim as f64).sqrt();
+        p.extend(
+            (0..self.dim * self.hidden).map(|_| (rng.normal() * s1) as f32),
+        );
+        p.extend(std::iter::repeat(0.0f32).take(self.hidden));
+        let s2 = (2.0 / self.hidden as f64).sqrt();
+        p.extend(
+            (0..self.hidden * self.classes)
+                .map(|_| (rng.normal() * s2) as f32),
+        );
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        p
+    }
+    fn train_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<f32>), String> {
+        let x = match &batch.x {
+            Features::F32(v) => v,
+            _ => return Err("rust-mlp expects f32 features".into()),
+        };
+        let bsz = batch.batch_size();
+        if x.len() != bsz * self.dim || batch.y.len() != bsz {
+            return Err("rust-mlp: bad batch shape".into());
+        }
+        let (w1, b1, w2, b2) = self.split(params);
+        let mut grads = vec![0.0f32; self.d_params()];
+        let mut loss = 0.0f64;
+        let mut h = vec![0.0f64; self.hidden];
+        let mut z = vec![0.0f64; self.classes];
+        let mut dh = vec![0.0f64; self.hidden];
+        for i in 0..bsz {
+            let xi = &x[i * self.dim..(i + 1) * self.dim];
+            // Forward.
+            for j in 0..self.hidden {
+                h[j] = b1[j] as f64;
+            }
+            for (jf, &xf) in xi.iter().enumerate() {
+                if xf == 0.0 {
+                    continue;
+                }
+                let row = &w1[jf * self.hidden..(jf + 1) * self.hidden];
+                for j in 0..self.hidden {
+                    h[j] += xf as f64 * row[j] as f64;
+                }
+            }
+            for hj in h.iter_mut() {
+                if *hj < 0.0 {
+                    *hj = 0.0;
+                }
+            }
+            for c in 0..self.classes {
+                z[c] = b2[c] as f64;
+            }
+            for j in 0..self.hidden {
+                if h[j] == 0.0 {
+                    continue;
+                }
+                let row = &w2[j * self.classes..(j + 1) * self.classes];
+                for c in 0..self.classes {
+                    z[c] += h[j] * row[c] as f64;
+                }
+            }
+            softmax_inplace(&mut z);
+            let yi = batch.y[i] as usize;
+            loss -= z[yi].max(1e-30).ln();
+            // Backward: dz = p - onehot.
+            let inv = 1.0 / bsz as f64;
+            for c in 0..self.classes {
+                z[c] = (z[c] - if c == yi { 1.0 } else { 0.0 }) * inv;
+            }
+            let off_w1 = 0;
+            let off_b1 = self.dim * self.hidden;
+            let off_w2 = off_b1 + self.hidden;
+            let off_b2 = off_w2 + self.hidden * self.classes;
+            for j in 0..self.hidden {
+                let mut acc = 0.0f64;
+                if h[j] > 0.0 {
+                    let row = &w2[j * self.classes..(j + 1) * self.classes];
+                    for c in 0..self.classes {
+                        acc += row[c] as f64 * z[c];
+                        grads[off_w2 + j * self.classes + c] +=
+                            (h[j] * z[c]) as f32;
+                    }
+                }
+                dh[j] = acc;
+            }
+            for c in 0..self.classes {
+                grads[off_b2 + c] += z[c] as f32;
+            }
+            for (jf, &xf) in xi.iter().enumerate() {
+                if xf == 0.0 {
+                    continue;
+                }
+                let g = &mut grads
+                    [off_w1 + jf * self.hidden..off_w1 + (jf + 1) * self.hidden];
+                for j in 0..self.hidden {
+                    g[j] += (xf as f64 * dh[j]) as f32;
+                }
+            }
+            for j in 0..self.hidden {
+                grads[off_b1 + j] += dh[j] as f32;
+            }
+        }
+        Ok(((loss / bsz as f64) as f32, grads))
+    }
+    fn eval_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, f64), String> {
+        let x = match &batch.x {
+            Features::F32(v) => v,
+            _ => return Err("rust-mlp expects f32 features".into()),
+        };
+        let bsz = batch.batch_size();
+        let (w1, b1, w2, b2) = self.split(params);
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut h = vec![0.0f64; self.hidden];
+        let mut z = vec![0.0f64; self.classes];
+        for i in 0..bsz {
+            let xi = &x[i * self.dim..(i + 1) * self.dim];
+            for j in 0..self.hidden {
+                h[j] = b1[j] as f64;
+            }
+            for (jf, &xf) in xi.iter().enumerate() {
+                if xf == 0.0 {
+                    continue;
+                }
+                let row = &w1[jf * self.hidden..(jf + 1) * self.hidden];
+                for j in 0..self.hidden {
+                    h[j] += xf as f64 * row[j] as f64;
+                }
+            }
+            for hj in h.iter_mut() {
+                if *hj < 0.0 {
+                    *hj = 0.0;
+                }
+            }
+            for c in 0..self.classes {
+                z[c] = b2[c] as f64;
+            }
+            for j in 0..self.hidden {
+                if h[j] == 0.0 {
+                    continue;
+                }
+                let row = &w2[j * self.classes..(j + 1) * self.classes];
+                for c in 0..self.classes {
+                    z[c] += h[j] * row[c] as f64;
+                }
+            }
+            softmax_inplace(&mut z);
+            let yi = batch.y[i] as usize;
+            loss -= z[yi].max(1e-30).ln();
+            let argmax = z
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == yi {
+                correct += 1.0;
+            }
+        }
+        Ok(((loss / bsz as f64) as f32, correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check(
+        model: &dyn GradProvider,
+        batch: &Batch,
+        idxs: &[usize],
+        tol: f64,
+    ) {
+        let params = model.init_params();
+        let (_, grads) = model.train_step(&params, batch).unwrap();
+        let eps = 1e-3f32;
+        for &i in idxs {
+            let mut p1 = params.clone();
+            p1[i] += eps;
+            let (l1, _) = model.train_step(&p1, batch).unwrap();
+            let mut p2 = params.clone();
+            p2[i] -= eps;
+            let (l2, _) = model.train_step(&p2, batch).unwrap();
+            let fd = (l1 as f64 - l2 as f64) / (2.0 * eps as f64);
+            assert!(
+                (fd - grads[i] as f64).abs() < tol,
+                "param {i}: fd={fd} grad={}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn quadratic_gradient_exact() {
+        let m = QuadraticModel::new(4);
+        let batch = QuadraticModel::target_batch(vec![1.0, -2.0, 0.5, 3.0]);
+        let params = vec![0.0f32; 4];
+        let (loss, grads) = m.train_step(&params, &batch).unwrap();
+        let expect = 0.5 * (1.0 + 4.0 + 0.25 + 9.0);
+        assert!((loss as f64 - expect).abs() < 1e-6);
+        assert_eq!(grads, vec![-1.0, 2.0, -0.5, -3.0]);
+    }
+
+    fn toy_batch(dim: usize, bsz: usize, classes: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        Batch {
+            x: Features::F32(
+                (0..bsz * dim).map(|_| rng.normal() as f32).collect(),
+            ),
+            x_shape: vec![bsz, dim],
+            y: (0..bsz).map(|_| rng.below(classes) as i32).collect(),
+            y_shape: vec![bsz],
+        }
+    }
+
+    #[test]
+    fn softmax_reg_gradients_match_finite_diff() {
+        let m = SoftmaxRegression::new(6, 3, 0);
+        let batch = toy_batch(6, 8, 3, 1);
+        finite_diff_check(&m, &batch, &[0, 5, 10, 18, 19, 20], 2e-3);
+    }
+
+    #[test]
+    fn rust_mlp_gradients_match_finite_diff() {
+        let m = RustMlp::new(5, 7, 3, 0);
+        let batch = toy_batch(5, 6, 3, 2);
+        let d = m.d_params();
+        finite_diff_check(&m, &batch, &[0, 3, 20, d - 25, d - 2, d - 1], 5e-3);
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_native_models() {
+        let models: Vec<Box<dyn GradProvider>> = vec![
+            Box::new(SoftmaxRegression::new(8, 4, 0)),
+            Box::new(RustMlp::new(8, 16, 4, 0)),
+        ];
+        for m in &models {
+            let batch = toy_batch(8, 32, 4, 3);
+            let mut p = m.init_params();
+            let (l0, _) = m.train_step(&p, &batch).unwrap();
+            for _ in 0..30 {
+                let (_, g) = m.train_step(&p, &batch).unwrap();
+                for (pi, gi) in p.iter_mut().zip(&g) {
+                    *pi -= 0.5 * gi;
+                }
+            }
+            let (l1, _) = m.train_step(&p, &batch).unwrap();
+            assert!(l1 < l0 * 0.7, "{}: {l0} -> {l1}", m.name());
+        }
+    }
+
+    #[test]
+    fn eval_counts_correct() {
+        let m = SoftmaxRegression::new(4, 2, 0);
+        // Train to fit a linearly-separable toy problem, then eval.
+        let mut rng = Rng::new(5);
+        let bsz = 64;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..bsz {
+            let cls = rng.below(2);
+            let base = if cls == 0 { -2.0 } else { 2.0 };
+            for _ in 0..4 {
+                xs.push((base + 0.1 * rng.normal()) as f32);
+            }
+            ys.push(cls as i32);
+        }
+        let batch = Batch {
+            x: Features::F32(xs),
+            x_shape: vec![bsz, 4],
+            y: ys,
+            y_shape: vec![bsz],
+        };
+        let mut p = m.init_params();
+        for _ in 0..50 {
+            let (_, g) = m.train_step(&p, &batch).unwrap();
+            for (pi, gi) in p.iter_mut().zip(&g) {
+                *pi -= 1.0 * gi;
+            }
+        }
+        let (_, correct) = m.eval_step(&p, &batch).unwrap();
+        assert!(correct >= 60.0, "correct={correct}/64");
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let m = RustMlp::new(6, 8, 3, 42);
+        assert_eq!(m.init_params(), m.init_params());
+        let m2 = RustMlp::new(6, 8, 3, 43);
+        assert_ne!(m.init_params(), m2.init_params());
+    }
+}

@@ -1,0 +1,235 @@
+//! Algorithm 3: the Base-(k+1) Graph A_k(V) — the paper's headline
+//! construction.
+//!
+//! The Simple Base-(k+1) Graph can contain redundant phases (Sec. C.2, Fig.
+//! 13). Alg. 3 removes them by factoring n = p·q with p the (k+1)-smooth
+//! part and q the rough part:
+//!
+//! * **Step 1** — split V into p subsets V_1..V_p of size q.
+//! * **Step 2** — run the Simple Base-(k+1) Graph on every V_l
+//!   *concurrently* (same size ⇒ same length), making each V_l internally
+//!   consensual; then form q transversals U_1..U_q (|U_t| = p, one node per
+//!   V_l).
+//! * **Step 3** — run the k-peer Hyper-Hypercube Graph on every U_t
+//!   concurrently (p is smooth, so H_k(U_t) exists); averaging across the
+//!   transversals turns the per-subset averages into the global average.
+//!
+//! Line 12: return whichever of A_k^simple(V) and this sequence is shorter.
+
+use super::factorization::smooth_rough_split;
+use super::matrix::MixingMatrix;
+use super::{hyper_hypercube, simple_base, Edge, GraphSequence};
+
+/// Phase edge lists of the Base-(k+1) Graph over node ids 0..n.
+pub fn phases(n: usize, k: usize) -> Vec<Vec<Edge>> {
+    assert!(k >= 1);
+    let nodes: Vec<usize> = (0..n).collect();
+    if n <= 1 {
+        return vec![];
+    }
+    let (p, q) = smooth_rough_split(n, k);
+    let simple = simple_base::phases_over(&nodes, k);
+    if p == 1 || q == 1 {
+        // q == 1: n is smooth and simple == H_k(V) already.
+        // p == 1: Alg. 3 degenerates to the simple graph.
+        return simple;
+    }
+
+    // Step 1: V_l = contiguous blocks of size q.
+    let v_subsets: Vec<&[usize]> = nodes.chunks(q).collect();
+    debug_assert_eq!(v_subsets.len(), p);
+
+    // Step 2: concurrent Simple Base-(k+1) on each V_l.
+    let per = simple_base::phases_over(v_subsets[0], k);
+    let len_simple_q = per.len();
+    let mut seqs: Vec<Vec<Vec<Edge>>> = vec![per];
+    for vl in &v_subsets[1..] {
+        let s = simple_base::phases_over(vl, k);
+        debug_assert_eq!(s.len(), len_simple_q);
+        seqs.push(s);
+    }
+    let mut alt: Vec<Vec<Edge>> = Vec::new();
+    for m in 0..len_simple_q {
+        let mut edges = Vec::new();
+        for s in &seqs {
+            edges.extend_from_slice(&s[m]);
+        }
+        alt.push(edges);
+    }
+
+    // Transversals U_t = {V_1[t], ..., V_p[t]}.
+    // Step 3: concurrent H_k(U_t).
+    let u0: Vec<usize> = v_subsets.iter().map(|vl| vl[0]).collect();
+    let h_len = hyper_hypercube::phases_over(&u0, k)
+        .expect("p is smooth")
+        .len();
+    let mut h_seqs: Vec<Vec<Vec<Edge>>> = Vec::with_capacity(q);
+    for t in 0..q {
+        let ut: Vec<usize> = v_subsets.iter().map(|vl| vl[t]).collect();
+        h_seqs.push(hyper_hypercube::phases_over(&ut, k).expect("smooth p"));
+    }
+    for m in 0..h_len {
+        let mut edges = Vec::new();
+        for s in &h_seqs {
+            edges.extend_from_slice(&s[m]);
+        }
+        alt.push(edges);
+    }
+
+    // Line 12: keep the shorter sequence.
+    if simple.len() < alt.len() {
+        simple
+    } else {
+        alt
+    }
+}
+
+/// Sequence length |A_k(V)| without building edges.
+pub fn seq_len(n: usize, k: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    let (p, q) = smooth_rough_split(n, k);
+    let simple = simple_base::seq_len(n, k);
+    if p == 1 || q == 1 {
+        return simple;
+    }
+    let alt = simple_base::seq_len(q, k)
+        + hyper_hypercube::seq_len(p, k).expect("smooth p");
+    simple.min(alt)
+}
+
+/// Build the Base-(k+1) Graph on nodes 0..n as mixing matrices.
+pub fn base(n: usize, k: usize) -> Result<GraphSequence, String> {
+    if k == 0 {
+        return Err("maximum degree k must be >= 1".into());
+    }
+    let k_eff = k.min(n.saturating_sub(1)).max(1);
+    let phase_edges = phases(n, k_eff);
+    let mats = phase_edges
+        .iter()
+        .map(|edges| MixingMatrix::from_edges(n, edges))
+        .collect();
+    Ok(GraphSequence::new(n, format!("base-{}(n={n})", k + 1), mats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_fig4_example_n6_k1() {
+        // Fig. 4: Base-2 with n=6 has 4 phases (vs 5 for Simple Base-2):
+        // 6 = 2 * 3, simple(3) = 3 phases + H_1(2) = 1 phase.
+        let seq = base(6, 1).unwrap();
+        assert_eq!(seq.len(), 4);
+        assert_eq!(seq.max_degree(), 1);
+        assert!(seq.is_finite_time(1e-9));
+        let simple = simple_base::simple_base(6, 1).unwrap();
+        assert_eq!(simple.len(), 5);
+    }
+
+    #[test]
+    fn base_never_longer_than_simple() {
+        for k in 1..=5usize {
+            for n in 2..=160usize {
+                let b = seq_len(n, k);
+                let s = simple_base::seq_len(n, k);
+                assert!(b <= s, "n={n} k={k}: base {b} > simple {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn theorem1_bound_and_finite_time_exhaustive() {
+        for k in 1..=4usize {
+            for n in 2..=80usize {
+                let seq = base(n, k).unwrap();
+                assert!(seq.is_finite_time(1e-9), "n={n} k={k}");
+                assert!(
+                    seq.max_degree() <= k,
+                    "n={n} k={k} deg={}",
+                    seq.max_degree()
+                );
+                assert!(seq.all_doubly_stochastic(1e-9), "n={n} k={k}");
+                let bound =
+                    2.0 * (n as f64).ln() / ((k + 1) as f64).ln() + 2.0;
+                assert!(
+                    seq.len() as f64 <= bound + 1e-9,
+                    "n={n} k={k} len={} bound={bound:.2}",
+                    seq.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn equivalences_from_paper_appendix() {
+        // Sec. F.2: Base-2 == 1-peer hypercube when n = 2^p.
+        for n in [4usize, 8, 16, 32] {
+            let b = base(n, 1).unwrap();
+            let h = super::super::one_peer::one_peer_hypercube(n).unwrap();
+            assert_eq!(b.len(), h.len(), "n={n}");
+        }
+        // Fig. 21 note: Base-3 == Base-2 and Base-5 == Base-4 for n = 2^p.
+        for n in [8usize, 16, 32] {
+            assert_eq!(seq_len(n, 2), seq_len(n, 1), "n={n}");
+            assert_eq!(seq_len(n, 4), seq_len(n, 3), "n={n}");
+        }
+        // Fig. 23/24 notes: Base-5 == Base-4 when n=24; Base-6 == Base-5
+        // when n=25.
+        assert_eq!(seq_len(24, 4), seq_len(24, 3));
+        assert_eq!(seq_len(25, 5), seq_len(25, 4));
+    }
+
+    #[test]
+    fn fig5_style_lengths_at_n25() {
+        // n=25: Base-2 must hit exact consensus in O(log2 25) ~ <= 2*4.64+2
+        // phases; larger k shortens the sequence.
+        let l2 = seq_len(25, 1);
+        let l5 = seq_len(25, 4);
+        assert!(l2 <= 11, "l2={l2}");
+        assert!(l5 <= l2, "l5={l5} l2={l2}");
+        // 25 = 5^2 is 5-smooth: Base-5 graph is the 4-peer hyper-hypercube,
+        // 2 phases.
+        assert_eq!(l5, 2);
+    }
+
+    #[test]
+    fn property_random_n_k() {
+        prop::check("base-finite-time", 48, |rng| {
+            let n = rng.range(2, 300);
+            let k = rng.range(1, 8).min(n - 1).max(1);
+            let seq =
+                base(n, k).map_err(|e| format!("build failed: {e}"))?;
+            prop_assert!(
+                seq.is_finite_time(1e-8),
+                "n={n} k={k} not finite-time (len={})",
+                seq.len()
+            );
+            prop_assert!(
+                seq.max_degree() <= k,
+                "n={n} k={k} deg={}",
+                seq.max_degree()
+            );
+            prop_assert!(
+                seq.all_doubly_stochastic(1e-9),
+                "n={n} k={k} not doubly stochastic"
+            );
+            prop_assert!(
+                seq_len(n, k) == seq.len(),
+                "seq_len mismatch n={n} k={k}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn large_k_degenerates_to_complete() {
+        let seq = base(9, 20).unwrap();
+        assert!(seq.is_finite_time(1e-9));
+        assert_eq!(seq.len(), 1);
+    }
+}

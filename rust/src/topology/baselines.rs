@@ -1,0 +1,181 @@
+//! Static baseline topologies from Table 1: ring, torus, (static)
+//! exponential graph, and the complete graph.
+
+use super::matrix::MixingMatrix;
+use super::GraphSequence;
+
+/// Ring: node i exchanges with i±1; uniform weight 1/3 (1/2 for n = 2).
+/// Consensus rate 1 − O(n⁻²) — the slow end of Table 1.
+pub fn ring(n: usize) -> GraphSequence {
+    let w = match n {
+        1 => MixingMatrix::identity(1),
+        2 => MixingMatrix::from_edges(2, &[(0, 1, 0.5)]),
+        3 => MixingMatrix::average(3), // ring of 3 == complete graph
+        _ => {
+            let edges: Vec<_> = (0..n)
+                .map(|i| (i, (i + 1) % n, 1.0 / 3.0))
+                .collect();
+            MixingMatrix::from_edges(n, &edges)
+        }
+    };
+    GraphSequence::static_graph(format!("ring(n={n})"), w)
+}
+
+/// Torus: nodes on an r×c grid (r·c = n, r as near √n as possible), each
+/// exchanging with 4 neighbors at weight 1/5. Errors for prime n > 4 where
+/// no 2-D grid exists.
+pub fn torus(n: usize) -> Result<GraphSequence, String> {
+    if n <= 4 {
+        // Degenerate tori: ring is the honest equivalent.
+        return Ok(GraphSequence::static_graph(
+            format!("torus(n={n})"),
+            ring(n).phases[0].clone(),
+        ));
+    }
+    let mut r = (n as f64).sqrt() as usize;
+    while r > 1 && n % r != 0 {
+        r -= 1;
+    }
+    if r <= 1 {
+        return Err(format!(
+            "torus needs composite n (got prime n={n}); use ring instead"
+        ));
+    }
+    let c = n / r;
+    let id = |x: usize, y: usize| x * c + y;
+    let mut edges = Vec::new();
+    for x in 0..r {
+        for y in 0..c {
+            // Right and down neighbors cover each undirected edge once;
+            // wrap-around duplicates (r==2 or c==2) accumulate weight,
+            // which from_edges handles by summing.
+            let right = id(x, (y + 1) % c);
+            let down = id((x + 1) % r, y);
+            if right != id(x, y) {
+                edges.push((id(x, y), right, 0.2));
+            }
+            if down != id(x, y) {
+                edges.push((id(x, y), down, 0.2));
+            }
+        }
+    }
+    Ok(GraphSequence::static_graph(
+        format!("torus({r}x{c})"),
+        MixingMatrix::from_edges(n, &edges),
+    ))
+}
+
+/// Static exponential graph (Ying et al. 2021): node i sends to
+/// i + 2^j (mod n) for j = 0..⌈log₂ n⌉−1; uniform weights
+/// 1/(⌈log₂ n⌉ + 1). Directed but doubly stochastic (a sum of cyclic
+/// permutation matrices). Maximum degree ⌈log₂ n⌉.
+pub fn exponential(n: usize) -> GraphSequence {
+    if n == 1 {
+        return GraphSequence::static_graph(
+            "exp(n=1)",
+            MixingMatrix::identity(1),
+        );
+    }
+    let tau = ((n as f64).log2().ceil() as usize).max(1);
+    let w = 1.0 / (tau + 1) as f64;
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in 0..tau {
+            let dst = (i + (1usize << j)) % n;
+            if dst != i {
+                edges.push((i, dst, w));
+            }
+        }
+    }
+    GraphSequence::static_graph(
+        format!("exp(n={n})"),
+        MixingMatrix::from_directed_edges(n, &edges),
+    )
+}
+
+/// Complete graph: exact averaging every round (W = J/n); degree n−1.
+pub fn complete(n: usize) -> GraphSequence {
+    GraphSequence::static_graph(
+        format!("complete(n={n})"),
+        MixingMatrix::average(n),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ring_degree_and_stochasticity() {
+        for n in [1usize, 2, 3, 4, 5, 8, 25, 64] {
+            let seq = ring(n);
+            assert!(seq.all_doubly_stochastic(1e-12), "n={n}");
+            assert!(seq.phases[0].is_symmetric(1e-12));
+        }
+        assert_eq!(ring(25).max_degree(), 2);
+    }
+
+    #[test]
+    fn ring_consensus_rate_degrades_with_n() {
+        let mut rng = Rng::new(0);
+        let b8 = ring(8).phases[0].consensus_rate(300, &mut rng);
+        let b32 = ring(32).phases[0].consensus_rate(300, &mut rng);
+        let b64 = ring(64).phases[0].consensus_rate(300, &mut rng);
+        assert!(b8 < b32 && b32 < b64, "{b8} {b32} {b64}");
+        // beta(n) = (1 + 2cos(2π/n)) / 3 for the 1/3-weight ring.
+        let expect =
+            (1.0 + 2.0 * (2.0 * std::f64::consts::PI / 64.0).cos()) / 3.0;
+        assert!((b64 - expect).abs() < 1e-4, "b64={b64} expect={expect}");
+    }
+
+    #[test]
+    fn torus_structure() {
+        let seq = torus(25).unwrap();
+        assert_eq!(seq.max_degree(), 4);
+        assert!(seq.all_doubly_stochastic(1e-12));
+        assert!(seq.phases[0].is_symmetric(1e-12));
+        // Prime n fails.
+        assert!(torus(23).is_err());
+        // Composite non-square works.
+        let seq = torus(24).unwrap();
+        assert!(seq.all_doubly_stochastic(1e-12));
+        assert!(seq.max_degree() <= 4);
+    }
+
+    #[test]
+    fn torus_faster_than_ring() {
+        let mut rng = Rng::new(1);
+        let bt = torus(36).unwrap().phases[0].consensus_rate(300, &mut rng);
+        let br = ring(36).phases[0].consensus_rate(300, &mut rng);
+        assert!(bt < br, "torus {bt} vs ring {br}");
+    }
+
+    #[test]
+    fn exponential_structure() {
+        for n in [4usize, 5, 8, 25, 64] {
+            let seq = exponential(n);
+            let tau = (n as f64).log2().ceil() as usize;
+            assert_eq!(seq.max_degree(), tau, "n={n}");
+            assert!(seq.all_doubly_stochastic(1e-9), "n={n}");
+        }
+        // Directed: not symmetric in general.
+        assert!(!exponential(8).phases[0].is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn exponential_faster_than_torus_and_ring() {
+        let mut rng = Rng::new(2);
+        let be = exponential(64).phases[0].consensus_rate(300, &mut rng);
+        let bt = torus(64).unwrap().phases[0].consensus_rate(300, &mut rng);
+        let br = ring(64).phases[0].consensus_rate(300, &mut rng);
+        assert!(be < bt && bt < br, "exp {be} torus {bt} ring {br}");
+    }
+
+    #[test]
+    fn complete_is_one_shot() {
+        let seq = complete(9);
+        assert!(seq.is_finite_time(1e-12));
+        assert_eq!(seq.max_degree(), 8);
+    }
+}

@@ -1,0 +1,213 @@
+//! EquiTopo baselines (Song et al. 2022, "Communication-efficient
+//! topologies for decentralized learning with O(1) consensus rate"),
+//! compared against in Fig. 22 and Sec. F.3.1.
+//!
+//! Reimplemented from the paper's construction idea (the reference
+//! implementation is not vendored here — see DESIGN.md substitution table):
+//!
+//! * **D-EquiStatic(M)**: W = (1/M) Σ_m P^{a_m}, a superposition of M
+//!   random cyclic-shift permutations — directed, degree M.
+//! * **U-EquiStatic(M)**: the symmetrized version
+//!   W = (1/2M) Σ_m (P^{a_m} + P^{−a_m}) — undirected, degree 2M.
+//! * **1-peer D-EquiDyn**: one random shift per round, W_t = (I + P^{a_t})/2.
+//! * **1-peer U-EquiDyn**: one random near-perfect matching per round,
+//!   weight 1/2.
+//!
+//! The randomized sequences are generated with a fixed period so the rest
+//! of the library can treat them like any other `GraphSequence`.
+
+use super::matrix::MixingMatrix;
+use super::GraphSequence;
+use crate::util::rng::Rng;
+
+/// Number of phases generated for the "dynamic" (randomized) variants.
+pub const EQUIDYN_PERIOD: usize = 64;
+
+/// 1-peer directed EquiDyn: each phase applies (I + P^{a})/2 for a random
+/// shift a ∈ [1, n−1]. Maximum degree 1, doubly stochastic.
+pub fn d_equidyn(n: usize, rng: &mut Rng) -> GraphSequence {
+    let mut phases = Vec::with_capacity(EQUIDYN_PERIOD);
+    for _ in 0..EQUIDYN_PERIOD {
+        let mut edges = Vec::new();
+        if n > 1 {
+            let a = rng.range(1, n);
+            for i in 0..n {
+                edges.push((i, (i + a) % n, 0.5));
+            }
+        }
+        phases.push(MixingMatrix::from_directed_edges(n, &edges));
+    }
+    GraphSequence::new(n, format!("d-equidyn(n={n})"), phases)
+}
+
+/// 1-peer undirected EquiDyn: each phase pairs nodes with a random
+/// near-perfect matching (one node idles when n is odd), weight 1/2.
+pub fn u_equidyn(n: usize, rng: &mut Rng) -> GraphSequence {
+    let mut phases = Vec::with_capacity(EQUIDYN_PERIOD);
+    for _ in 0..EQUIDYN_PERIOD {
+        let perm = rng.permutation(n);
+        let mut edges = Vec::new();
+        for pair in perm.chunks(2) {
+            if let [a, b] = pair {
+                edges.push((*a, *b, 0.5));
+            }
+        }
+        phases.push(MixingMatrix::from_edges(n, &edges));
+    }
+    GraphSequence::new(n, format!("u-equidyn(n={n})"), phases)
+}
+
+/// D-EquiStatic with degree M: one static directed matrix built from M
+/// distinct random shifts.
+pub fn d_equistatic(
+    n: usize,
+    degree: usize,
+    rng: &mut Rng,
+) -> Result<GraphSequence, String> {
+    if n < 2 {
+        return Ok(GraphSequence::static_graph(
+            format!("d-equistatic-{degree}(n={n})"),
+            MixingMatrix::identity(n.max(1)),
+        ));
+    }
+    if degree == 0 || degree > n - 1 {
+        return Err(format!(
+            "d-equistatic degree must be in 1..=n-1 (got {degree}, n={n})"
+        ));
+    }
+    let shifts = pick_distinct_shifts(n, degree, rng);
+    let w = 1.0 / (degree + 1) as f64; // +1 keeps a self-loop share
+    let mut edges = Vec::new();
+    for &a in &shifts {
+        for i in 0..n {
+            edges.push((i, (i + a) % n, w));
+        }
+    }
+    Ok(GraphSequence::static_graph(
+        format!("d-equistatic-{degree}(n={n})"),
+        MixingMatrix::from_directed_edges(n, &edges),
+    ))
+}
+
+/// U-EquiStatic with degree parameter M (actual degree ≤ 2M after
+/// symmetrization; shifts equal to their own inverse collapse).
+pub fn u_equistatic(
+    n: usize,
+    degree: usize,
+    rng: &mut Rng,
+) -> Result<GraphSequence, String> {
+    if n < 2 {
+        return Ok(GraphSequence::static_graph(
+            format!("u-equistatic-{degree}(n={n})"),
+            MixingMatrix::identity(n.max(1)),
+        ));
+    }
+    if degree == 0 || degree > n - 1 {
+        return Err(format!(
+            "u-equistatic degree must be in 1..=n-1 (got {degree}, n={n})"
+        ));
+    }
+    let shifts = pick_distinct_shifts(n, degree.div_ceil(2), rng);
+    let w = 1.0 / (2 * shifts.len() + 1) as f64;
+    let mut m = MixingMatrix::zeros(n);
+    for &a in &shifts {
+        for i in 0..n {
+            // Symmetric pair of shifts: i -> i+a and i -> i-a.
+            m.add(i, (i + a) % n, w);
+            m.add(i, (i + n - a % n) % n, w);
+        }
+    }
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| m.get(i, j)).sum();
+        let diag = m.get(i, i);
+        m.set(i, i, diag + 1.0 - off - diag);
+    }
+    // Renormalize diagonal: rows must sum to 1 exactly.
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| m.get(i, j)).sum();
+        m.set(i, i, 1.0 - off);
+    }
+    Ok(GraphSequence::static_graph(
+        format!("u-equistatic-{degree}(n={n})"),
+        m,
+    ))
+}
+
+fn pick_distinct_shifts(n: usize, m: usize, rng: &mut Rng) -> Vec<usize> {
+    let m = m.min(n - 1);
+    let mut all: Vec<usize> = (1..n).collect();
+    rng.shuffle(&mut all);
+    all.truncate(m);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equidyn_phases_are_valid() {
+        let mut rng = Rng::new(0);
+        for n in [2usize, 5, 8, 25] {
+            let d = d_equidyn(n, &mut rng);
+            let u = u_equidyn(n, &mut rng);
+            assert!(d.all_doubly_stochastic(1e-9), "d n={n}");
+            assert!(u.all_doubly_stochastic(1e-9), "u n={n}");
+            assert_eq!(d.max_degree(), 1, "n={n}");
+            assert!(u.max_degree() <= 1, "n={n}");
+            for p in &u.phases {
+                assert!(p.is_symmetric(1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn equidyn_contracts_on_average() {
+        // O(1) consensus-rate claim, qualitatively: a sweep of random
+        // matchings shrinks disagreement.
+        let mut rng = Rng::new(1);
+        let seq = u_equidyn(25, &mut rng);
+        let prod = seq.product();
+        let beta = prod.consensus_rate(200, &mut rng);
+        assert!(beta < 0.2, "64 random matchings should mix well: {beta}");
+    }
+
+    #[test]
+    fn equistatic_degree_and_stochasticity() {
+        let mut rng = Rng::new(2);
+        for deg in [1usize, 2, 4, 6] {
+            let d = d_equistatic(25, deg, &mut rng).unwrap();
+            assert_eq!(d.max_degree(), deg, "deg={deg}");
+            assert!(d.all_doubly_stochastic(1e-9));
+            let u = u_equistatic(25, deg, &mut rng).unwrap();
+            assert!(u.max_degree() <= deg + 1, "deg={deg} got {}", u.max_degree());
+            assert!(u.all_doubly_stochastic(1e-9));
+            assert!(u.phases[0].is_symmetric(1e-12));
+        }
+        assert!(d_equistatic(10, 0, &mut rng).is_err());
+        assert!(d_equistatic(10, 10, &mut rng).is_err());
+    }
+
+    #[test]
+    fn equistatic_more_degree_mixes_faster() {
+        let mut rng = Rng::new(3);
+        let b1 = d_equistatic(64, 1, &mut rng)
+            .unwrap()
+            .phases[0]
+            .consensus_rate(300, &mut rng);
+        let b6 = d_equistatic(64, 6, &mut rng)
+            .unwrap()
+            .phases[0]
+            .consensus_rate(300, &mut rng);
+        assert!(b6 < b1, "deg 6 ({b6}) should beat deg 1 ({b1})");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = u_equidyn(10, &mut Rng::new(7));
+        let b = u_equidyn(10, &mut Rng::new(7));
+        for (pa, pb) in a.phases.iter().zip(&b.phases) {
+            assert!(pa.max_abs_diff(pb) < 1e-15);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Integer factorization utilities behind the Base-(k+1) constructions:
+//! prime factorization, minimal factorization into factors ≤ k+1 (Alg. 1
+//! step 1), base-(k+1) digit decomposition (Alg. 2 step 1), and the
+//! smooth/rough split n = p·q (Alg. 3 step 1).
+
+/// Prime factorization in ascending order (e.g. 12 -> [2, 2, 3]).
+pub fn prime_factors(mut n: usize) -> Vec<usize> {
+    assert!(n >= 1);
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        while n % p == 0 {
+            out.push(p);
+            n /= p;
+        }
+        p += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// True iff every prime factor of n is ≤ bound (n is `bound`-smooth).
+pub fn is_smooth(n: usize, bound: usize) -> bool {
+    prime_factors(n).last().map(|&p| p <= bound).unwrap_or(true)
+}
+
+/// Alg. 1 line 2: decompose `n = n_1 × ··· × n_L` with **minimum L** such
+/// that every `n_l ∈ [k+1]` (i.e. 2..=k+1 for non-trivial factors).
+/// Returns `None` when n has a prime factor > k+1. Factors ascend.
+///
+/// Minimality matters for the length bound (Lemma 1); we find it by DP over
+/// divisors, which is cheap for the n this library targets (≤ ~10^6).
+pub fn min_factorization(n: usize, k: usize) -> Option<Vec<usize>> {
+    assert!(k >= 1);
+    if n == 1 {
+        return Some(vec![1]);
+    }
+    if n <= k + 1 {
+        return Some(vec![n]);
+    }
+    if !is_smooth(n, k + 1) {
+        return None;
+    }
+    // DP over the divisor lattice: best[d] = minimal count for divisor d.
+    let divisors = divisors_of(n);
+    let mut best: std::collections::HashMap<usize, (usize, usize)> =
+        std::collections::HashMap::new(); // d -> (len, last_factor)
+    best.insert(1, (0, 1));
+    for &d in &divisors {
+        if d == 1 {
+            continue;
+        }
+        let mut cand: Option<(usize, usize)> = None;
+        for f in 2..=(k + 1).min(d) {
+            if d % f != 0 {
+                continue;
+            }
+            if let Some(&(len, _)) = best.get(&(d / f)) {
+                let c = (len + 1, f);
+                if cand.map(|x| c.0 < x.0).unwrap_or(true) {
+                    cand = Some(c);
+                }
+            }
+        }
+        if let Some(c) = cand {
+            best.insert(d, c);
+        }
+    }
+    let mut out = Vec::new();
+    let mut d = n;
+    while d > 1 {
+        let &(_, f) = best.get(&d)?;
+        out.push(f);
+        d /= f;
+    }
+    out.sort_unstable();
+    Some(out)
+}
+
+fn divisors_of(n: usize) -> Vec<usize> {
+    let mut ds = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            ds.push(i);
+            if i != n / i {
+                ds.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    ds.sort_unstable();
+    ds
+}
+
+/// One term of the base-(k+1) decomposition of Alg. 2 line 1:
+/// `n = Σ_l a_l (k+1)^{p_l}` with `p_1 > ... > p_L ≥ 0`, `a_l ∈ [k]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BaseDigit {
+    /// digit value a_l ∈ 1..=k
+    pub a: usize,
+    /// power p_l
+    pub p: usize,
+}
+
+impl BaseDigit {
+    /// Subset size |V_l| = a_l (k+1)^{p_l}.
+    pub fn subset_size(&self, k: usize) -> usize {
+        self.a * (k + 1).pow(self.p as u32)
+    }
+}
+
+/// Non-zero digits of n in base k+1, most significant first.
+pub fn base_digits(n: usize, k: usize) -> Vec<BaseDigit> {
+    assert!(n >= 1 && k >= 1);
+    let b = k + 1;
+    let mut digits = Vec::new();
+    let mut m = n;
+    let mut p = 0;
+    while m > 0 {
+        let a = m % b;
+        if a != 0 {
+            digits.push(BaseDigit { a, p });
+        }
+        m /= b;
+        p += 1;
+    }
+    digits.reverse();
+    digits
+}
+
+/// Alg. 3 line 2: split n = p·q where p is the (k+1)-smooth part (all prime
+/// factors ≤ k+1) and q is the rough part (coprime to every prime ≤ k+1).
+pub fn smooth_rough_split(n: usize, k: usize) -> (usize, usize) {
+    assert!(n >= 1 && k >= 1);
+    let mut p = 1;
+    let mut q = n;
+    for f in prime_factors(n) {
+        if f <= k + 1 {
+            p *= f;
+            q /= f;
+        }
+    }
+    (p, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn prime_factors_basic() {
+        assert_eq!(prime_factors(1), vec![]);
+        assert_eq!(prime_factors(2), vec![2]);
+        assert_eq!(prime_factors(12), vec![2, 2, 3]);
+        assert_eq!(prime_factors(97), vec![97]);
+        assert_eq!(prime_factors(360), vec![2, 2, 2, 3, 3, 5]);
+    }
+
+    #[test]
+    fn smoothness() {
+        assert!(is_smooth(1, 2));
+        assert!(is_smooth(8, 2));
+        assert!(!is_smooth(6, 2));
+        assert!(is_smooth(6, 3));
+        assert!(is_smooth(12, 3));
+        assert!(!is_smooth(35, 3));
+    }
+
+    #[test]
+    fn min_factorization_examples() {
+        // Paper's example (Sec. A): n=12, k=2 -> 2×2×3.
+        assert_eq!(min_factorization(12, 2), Some(vec![2, 2, 3]));
+        // n=8, k=1 -> 2×2×2.
+        assert_eq!(min_factorization(8, 1), Some(vec![2, 2, 2]));
+        // n=8, k=3 -> 2×4 (L=2, not 2×2×2).
+        assert_eq!(min_factorization(8, 3), Some(vec![2, 4]));
+        // n=6, k=2 -> 2×3.
+        assert_eq!(min_factorization(6, 2), Some(vec![2, 3]));
+        // n ≤ k+1 is a single factor (complete graph).
+        assert_eq!(min_factorization(4, 3), Some(vec![4]));
+        // Rough n is not factorizable.
+        assert_eq!(min_factorization(5, 1), None);
+        assert_eq!(min_factorization(14, 2), None);
+        assert_eq!(min_factorization(1, 1), Some(vec![1]));
+    }
+
+    #[test]
+    fn min_factorization_is_minimal_lemma1() {
+        // Lemma 1: L ≤ max(1, 2 log_{k+2}(n)).
+        for k in 1..=6usize {
+            for n in 2..=400usize {
+                if let Some(fs) = min_factorization(n, k) {
+                    let prod: usize = fs.iter().product();
+                    assert_eq!(prod, n, "n={n} k={k} fs={fs:?}");
+                    assert!(fs.iter().all(|&f| f >= 1 && f <= k + 1));
+                    let bound = (2.0 * (n as f64).ln()
+                        / ((k + 2) as f64).ln())
+                    .max(1.0);
+                    assert!(
+                        fs.len() as f64 <= bound + 1e-9,
+                        "n={n} k={k} L={} bound={bound}",
+                        fs.len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn base_digits_examples() {
+        // 5 = 2^2 + 2^0 (k=1).
+        assert_eq!(
+            base_digits(5, 1),
+            vec![BaseDigit { a: 1, p: 2 }, BaseDigit { a: 1, p: 0 }]
+        );
+        // 7 = 2·3 + 1 in base 3 (k=2).
+        assert_eq!(
+            base_digits(7, 2),
+            vec![BaseDigit { a: 2, p: 1 }, BaseDigit { a: 1, p: 0 }]
+        );
+        // 25 in base 5 (k=4) = 1·5^2.
+        assert_eq!(base_digits(25, 4), vec![BaseDigit { a: 1, p: 2 }]);
+    }
+
+    #[test]
+    fn base_digits_reconstruct() {
+        prop::check("base-digits-reconstruct", prop::default_cases(), |rng| {
+            let n = rng.range(1, 2000);
+            let k = rng.range(1, 9);
+            let digits = base_digits(n, k);
+            let total: usize =
+                digits.iter().map(|d| d.subset_size(k)).sum();
+            prop_assert!(total == n, "n={n} k={k} digits={digits:?}");
+            // Digits strictly decreasing in p, a in [k].
+            for w in digits.windows(2) {
+                prop_assert!(w[0].p > w[1].p, "p not decreasing");
+            }
+            for d in &digits {
+                prop_assert!(d.a >= 1 && d.a <= k, "a out of range");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smooth_rough_examples() {
+        assert_eq!(smooth_rough_split(6, 1), (2, 3));
+        assert_eq!(smooth_rough_split(6, 2), (6, 1));
+        assert_eq!(smooth_rough_split(5, 1), (1, 5));
+        assert_eq!(smooth_rough_split(40, 1), (8, 5));
+        assert_eq!(smooth_rough_split(45, 2), (9, 5));
+    }
+
+    #[test]
+    fn smooth_rough_property() {
+        prop::check("smooth-rough", prop::default_cases(), |rng| {
+            let n = rng.range(1, 5000);
+            let k = rng.range(1, 8);
+            let (p, q) = smooth_rough_split(n, k);
+            prop_assert!(p * q == n, "p*q != n");
+            prop_assert!(is_smooth(p, k + 1), "p not smooth");
+            for f in prime_factors(q) {
+                prop_assert!(f > k + 1, "q has small factor {f}");
+            }
+            Ok(())
+        });
+    }
+}

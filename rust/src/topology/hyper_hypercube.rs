@@ -1,0 +1,212 @@
+//! Algorithm 1: the k-peer Hyper-Hypercube Graph H_k(V).
+//!
+//! When n factors as n = n_1 × ··· × n_L with every n_l ≤ k+1 (minimal L),
+//! index the nodes in the mixed radix (n_1, ..., n_L). Phase l connects
+//! every set of nodes that agree on all digits except digit l into a
+//! complete graph of size n_l with edge weight 1/n_l — this is exactly the
+//! paper's construction (Alg. 1's stride arithmetic walks the same groups)
+//! and makes the sequence L-finite-time convergent:
+//! after phase l, parameters are averaged over the first l digits.
+//!
+//! Maximum degree per phase is n_l − 1 ≤ k; the complete graph on a digit
+//! group averages it exactly (weights 1/n_l plus the implicit self-loop).
+
+use super::factorization::min_factorization;
+use super::matrix::MixingMatrix;
+use super::{Edge, GraphSequence};
+
+/// Phase edge lists of H_k over an arbitrary node-id set (used as a
+/// component inside Algorithms 2 and 3). Node ids are global; `nodes`
+/// supplies the membership and ordering. Returns `None` when |nodes| has a
+/// prime factor > k+1.
+pub fn phases_over(nodes: &[usize], k: usize) -> Option<Vec<Vec<Edge>>> {
+    let n = nodes.len();
+    assert!(k >= 1, "maximum degree k must be >= 1");
+    if n <= 1 {
+        return Some(vec![]); // single node: already at consensus
+    }
+    let factors = min_factorization(n, k)?;
+    let mut phases = Vec::with_capacity(factors.len());
+    let mut stride = 1usize;
+    for &nl in &factors {
+        // Group = nodes whose index agrees except in digit l. Members of a
+        // group are {base + m * stride : m in 0..nl} where base enumerates
+        // all indices with digit l = 0.
+        let mut edges: Vec<Edge> = Vec::new();
+        let block = stride * nl;
+        let w = 1.0 / nl as f64;
+        for block_start in (0..n).step_by(block) {
+            for lo in 0..stride {
+                // Complete graph among the nl members of this digit group.
+                for a in 0..nl {
+                    for b in (a + 1)..nl {
+                        let ia = block_start + lo + a * stride;
+                        let ib = block_start + lo + b * stride;
+                        edges.push((nodes[ia], nodes[ib], w));
+                    }
+                }
+            }
+        }
+        phases.push(edges);
+        stride = block;
+    }
+    Some(phases)
+}
+
+/// Number of phases |H_k(V)| for |V| = n without building the edges.
+pub fn seq_len(n: usize, k: usize) -> Option<usize> {
+    if n <= 1 {
+        return Some(0);
+    }
+    min_factorization(n, k).map(|f| f.len())
+}
+
+/// Build the k-peer Hyper-Hypercube Graph on nodes 0..n as mixing matrices.
+pub fn hyper_hypercube(n: usize, k: usize) -> Result<GraphSequence, String> {
+    let nodes: Vec<usize> = (0..n).collect();
+    let phases = phases_over(&nodes, k).ok_or_else(|| {
+        format!(
+            "k-peer hyper-hypercube needs (k+1)-smooth n; n={n} has a prime \
+             factor > {}",
+            k + 1
+        )
+    })?;
+    let mats = phases
+        .iter()
+        .map(|edges| MixingMatrix::from_edges(n, edges))
+        .collect();
+    Ok(GraphSequence::new(n, format!("hh-{k}(n={n})"), mats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_fig2_example_n6_k2() {
+        // Fig. 2a: n=6, k=2 -> 2 phases (6 = 2x3 or 3x2).
+        let seq = hyper_hypercube(6, 2).unwrap();
+        assert_eq!(seq.len(), 2);
+        assert!(seq.max_degree() <= 2);
+        assert!(seq.is_finite_time(1e-12));
+    }
+
+    #[test]
+    fn paper_appendix_example_n12_k2() {
+        // Sec. A: n=12 = 2x2x3 -> 3 phases.
+        let seq = hyper_hypercube(12, 2).unwrap();
+        assert_eq!(seq.len(), 3);
+        assert!(seq.max_degree() <= 2);
+        assert!(seq.is_finite_time(1e-12));
+    }
+
+    #[test]
+    fn one_peer_hypercube_special_case() {
+        // k=1, n=2^p: reduces to the 1-peer hypercube graph: p phases of
+        // perfect matchings.
+        for p in 1..=5usize {
+            let n = 1 << p;
+            let seq = hyper_hypercube(n, 1).unwrap();
+            assert_eq!(seq.len(), p, "n={n}");
+            assert_eq!(seq.max_degree(), 1);
+            assert!(seq.is_finite_time(1e-12));
+        }
+    }
+
+    #[test]
+    fn complete_graph_when_n_small() {
+        let seq = hyper_hypercube(4, 3).unwrap();
+        assert_eq!(seq.len(), 1);
+        assert_eq!(seq.max_degree(), 3);
+        assert!(seq.is_finite_time(1e-12));
+    }
+
+    #[test]
+    fn rejects_rough_n() {
+        assert!(hyper_hypercube(5, 1).is_err());
+        assert!(hyper_hypercube(7, 2).is_err());
+        assert!(hyper_hypercube(22, 1).is_err()); // 22 = 2 * 11
+    }
+
+    #[test]
+    fn single_node_is_empty_sequence() {
+        let seq = hyper_hypercube(1, 1).unwrap();
+        assert_eq!(seq.len(), 0);
+    }
+
+    #[test]
+    fn property_finite_time_and_degree_bound() {
+        prop::check("hh-finite-time", prop::default_cases(), |rng| {
+            let k = rng.range(1, 6);
+            // Build a smooth n from random factors <= k+1.
+            let mut n = 1usize;
+            for _ in 0..rng.range(1, 5) {
+                n *= rng.range(2, k + 2);
+                if n > 200 {
+                    break;
+                }
+            }
+            let seq = hyper_hypercube(n, k)
+                .map_err(|e| format!("build failed: {e}"))?;
+            prop_assert!(
+                seq.max_degree() <= k,
+                "n={n} k={k} deg={}",
+                seq.max_degree()
+            );
+            prop_assert!(
+                seq.all_doubly_stochastic(1e-9),
+                "n={n} k={k}: not doubly stochastic"
+            );
+            for (i, p) in seq.phases.iter().enumerate() {
+                prop_assert!(
+                    p.is_symmetric(1e-12),
+                    "n={n} k={k} phase {i} not symmetric"
+                );
+            }
+            prop_assert!(
+                seq.is_finite_time(1e-9),
+                "n={n} k={k}: not finite-time"
+            );
+            // Lemma 1 length bound.
+            let bound =
+                (2.0 * (n as f64).ln() / ((k + 2) as f64).ln()).max(1.0);
+            prop_assert!(
+                seq.len() as f64 <= bound + 1e-9,
+                "n={n} k={k} len={} bound={bound}",
+                seq.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn phases_over_respects_node_ids() {
+        // Run over a shuffled id set; finite-time must still hold on the
+        // relabeled nodes.
+        let nodes = vec![7, 3, 11, 0, 9, 4, 2, 8];
+        let phases = phases_over(&nodes, 1).unwrap();
+        assert_eq!(phases.len(), 3);
+        // All edges stay within the node set.
+        for phase in &phases {
+            for &(a, b, _) in phase {
+                assert!(nodes.contains(&a) && nodes.contains(&b));
+            }
+        }
+        // Build a 12-node matrix (ids up to 11) and check the sub-consensus:
+        // after the sweep every node in `nodes` holds the average of
+        // `nodes`' initial values.
+        let mut xs: Vec<Vec<f64>> =
+            (0..12).map(|i| vec![i as f64]).collect();
+        for phase in &phases {
+            let w = MixingMatrix::from_edges(12, phase);
+            xs = w.apply(&xs);
+        }
+        let avg: f64 =
+            nodes.iter().map(|&i| i as f64).sum::<f64>() / nodes.len() as f64;
+        for &i in &nodes {
+            assert!((xs[i][0] - avg).abs() < 1e-12, "node {i}: {}", xs[i][0]);
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! Dense mixing matrices and the gossip-matrix algebra used throughout the
+//! paper: doubly-stochastic validation, consensus-rate estimation, sequence
+//! products, and the `X W` application the consensus simulator runs.
+//!
+//! Node counts in the paper's experiments are small (n ≤ a few hundred), so
+//! a dense row-major `Vec<f64>` is both the fastest and the simplest
+//! representation; the *training* path never materializes these matrices —
+//! it gossips along edge lists (see `comm`).
+
+use crate::util::rng::Rng;
+
+/// Row-major dense n×n mixing matrix. `w[i][j]` is the weight node i gives
+/// node j's parameters; rows are what a node applies locally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixingMatrix {
+    pub n: usize,
+    data: Vec<f64>,
+}
+
+impl MixingMatrix {
+    pub fn zeros(n: usize) -> Self {
+        MixingMatrix { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// The consensus projector J/n (every entry 1/n).
+    pub fn average(n: usize) -> Self {
+        MixingMatrix { n, data: vec![1.0 / n as f64; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] += v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Build from an undirected weighted edge list; self-loop weights are
+    /// filled so each row sums to 1 (the doubly-stochastic completion the
+    /// paper leaves implicit).
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Self {
+        let mut m = Self::zeros(n);
+        for &(a, b, w) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a},{b}) n={n}");
+            m.add(a, b, w);
+            m.add(b, a, w);
+        }
+        for i in 0..n {
+            let off: f64 =
+                (0..n).filter(|&j| j != i).map(|j| m.get(i, j)).sum();
+            m.set(i, i, 1.0 - off);
+        }
+        m
+    }
+
+    /// Build from a *directed* weighted edge list (weight on (src→dst) means
+    /// dst applies `w` to src's parameters); diagonal filled so rows sum
+    /// to 1. Used by the (1-peer) exponential graph family.
+    pub fn from_directed_edges(
+        n: usize,
+        edges: &[(usize, usize, f64)],
+    ) -> Self {
+        let mut m = Self::zeros(n);
+        for &(src, dst, w) in edges {
+            assert!(src < n && dst < n && src != dst);
+            // Row `dst` mixes in `src`'s parameters.
+            m.add(dst, src, w);
+        }
+        for i in 0..n {
+            let off: f64 =
+                (0..n).filter(|&j| j != i).map(|j| m.get(i, j)).sum();
+            m.set(i, i, 1.0 - off);
+        }
+        m
+    }
+
+    /// Matrix product (self · other), i.e. applying `other` after `self`
+    /// when parameters are row-mixed as X W^(1) W^(2) ···.
+    pub fn matmul(&self, other: &MixingMatrix) -> MixingMatrix {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = MixingMatrix::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.add(i, j, a * other.get(k, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply to a column-stacked parameter set: `out[i] = Σ_j W[i][j] x[j]`.
+    /// `xs` is n rows of dimension d.
+    pub fn apply(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        assert_eq!(xs.len(), self.n);
+        let d = xs.first().map(|x| x.len()).unwrap_or(0);
+        let mut out = vec![vec![0.0; d]; self.n];
+        for i in 0..self.n {
+            let row = self.row(i);
+            let oi = &mut out[i];
+            for (j, &w) in row.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                let xj = &xs[j];
+                for t in 0..d {
+                    oi[t] += w * xj[t];
+                }
+            }
+        }
+        out
+    }
+
+    /// Maximum off-diagonal row degree (the paper's "maximum degree":
+    /// number of neighbors a node exchanges with in this phase).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n)
+            .map(|i| {
+                (0..self.n)
+                    .filter(|&j| j != i && self.get(i, j).abs() > 1e-12)
+                    .count()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total number of undirected communication links in this phase
+    /// (directed edges count once each; used for comm-cost accounting).
+    pub fn edge_count(&self) -> usize {
+        let mut count = 0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j && self.get(i, j).abs() > 1e-12 {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if (self.get(i, j) - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Doubly stochastic: rows and columns sum to 1, entries in [0, 1].
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            let mut rs = 0.0;
+            let mut cs = 0.0;
+            for j in 0..self.n {
+                let v = self.get(i, j);
+                if !(-tol..=1.0 + tol).contains(&v) {
+                    return false;
+                }
+                rs += v;
+                cs += self.get(j, i);
+            }
+            if (rs - 1.0).abs() > tol || (cs - 1.0).abs() > tol {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Spectral consensus rate β of Definition 1: the operator 2-norm of
+    /// `W − J/n` restricted to the consensus-orthogonal subspace, estimated
+    /// by power iteration on `M^T M` with deflation of the all-ones vector.
+    pub fn consensus_rate(&self, iters: usize, rng: &mut Rng) -> f64 {
+        let n = self.n;
+        if n == 1 {
+            return 0.0;
+        }
+        // v ⟂ 1 start.
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        deflate_ones(&mut v);
+        normalize(&mut v);
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            // u = (W - J/n) v  — J/n v = mean(v) * 1; since v ⟂ 1 the mean
+            // is 0, but deflate anyway for numerical hygiene.
+            let mut u = self.apply_vec(&v);
+            deflate_ones(&mut u);
+            // w = (W - J/n)^T u = W^T u - mean(u) 1.
+            let mut w = self.apply_vec_t(&u);
+            deflate_ones(&mut w);
+            sigma = norm(&w).sqrt(); // ||M^T M v||^(1/2) ≈ σ_max
+            if sigma < 1e-15 {
+                return 0.0;
+            }
+            v = w;
+            normalize(&mut v);
+        }
+        // One more application for the Rayleigh-style estimate of σ_max.
+        let mut u = self.apply_vec(&v);
+        deflate_ones(&mut u);
+        let _ = sigma;
+        norm(&u)
+    }
+
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let row = self.row(i);
+            out[i] = row.iter().zip(x).map(|(w, xi)| w * xi).sum();
+        }
+        out
+    }
+
+    fn apply_vec_t(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let row = self.row(i);
+            for j in 0..n {
+                out[j] += row[j] * x[i];
+            }
+        }
+        out
+    }
+
+    /// Max |entry| difference.
+    pub fn max_abs_diff(&self, other: &MixingMatrix) -> f64 {
+        assert_eq!(self.n, other.n);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+fn deflate_ones(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_properties() {
+        let m = MixingMatrix::identity(5);
+        assert!(m.is_doubly_stochastic(1e-12));
+        assert!(m.is_symmetric(1e-12));
+        assert_eq!(m.max_degree(), 0);
+        assert_eq!(m.edge_count(), 0);
+    }
+
+    #[test]
+    fn average_reaches_consensus_immediately() {
+        let m = MixingMatrix::average(4);
+        let xs = vec![
+            vec![1.0, 0.0],
+            vec![2.0, 4.0],
+            vec![3.0, 8.0],
+            vec![6.0, 4.0],
+        ];
+        let out = m.apply(&xs);
+        for row in &out {
+            assert!((row[0] - 3.0).abs() < 1e-12);
+            assert!((row[1] - 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn from_edges_fills_self_loops() {
+        // Pair exchange with weight 1/2 on 2 nodes.
+        let m = MixingMatrix::from_edges(2, &[(0, 1, 0.5)]);
+        assert!((m.get(0, 0) - 0.5).abs() < 1e-12);
+        assert!((m.get(0, 1) - 0.5).abs() < 1e-12);
+        assert!(m.is_doubly_stochastic(1e-12));
+        assert!(m.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn directed_edges_rows_sum_to_one() {
+        // 0 -> 1 -> 2 -> 0 directed cycle with weight 1/2.
+        let m = MixingMatrix::from_directed_edges(
+            3,
+            &[(0, 1, 0.5), (1, 2, 0.5), (2, 0, 0.5)],
+        );
+        assert!(m.is_doubly_stochastic(1e-12));
+        assert!(!m.is_symmetric(1e-12));
+        assert_eq!(m.max_degree(), 1);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = MixingMatrix::from_edges(3, &[(0, 1, 0.5)]);
+        let b = MixingMatrix::from_edges(3, &[(1, 2, 0.5)]);
+        let ab = a.matmul(&b);
+        // Row 0 of ab: x0' = 0.5 x0 + 0.5 x1 then mix with b:
+        // row0 = 0.5*b_row0 + 0.5*b_row1 = 0.5*[1,0,0] + 0.5*[0,.5,.5]
+        assert!((ab.get(0, 0) - 0.5).abs() < 1e-12);
+        assert!((ab.get(0, 1) - 0.25).abs() < 1e-12);
+        assert!((ab.get(0, 2) - 0.25).abs() < 1e-12);
+        assert!(ab.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    fn consensus_rate_of_projector_is_zero() {
+        let mut rng = Rng::new(0);
+        let m = MixingMatrix::average(8);
+        assert!(m.consensus_rate(50, &mut rng) < 1e-10);
+    }
+
+    #[test]
+    fn consensus_rate_of_identity_is_one() {
+        let mut rng = Rng::new(1);
+        let m = MixingMatrix::identity(8);
+        let b = m.consensus_rate(100, &mut rng);
+        assert!((b - 1.0).abs() < 1e-6, "beta={b}");
+    }
+
+    #[test]
+    fn consensus_rate_pair_graph() {
+        // Two nodes exchanging with weight 1/2 reach consensus in one step.
+        let mut rng = Rng::new(2);
+        let m = MixingMatrix::from_edges(2, &[(0, 1, 0.5)]);
+        assert!(m.consensus_rate(100, &mut rng) < 1e-10);
+    }
+
+    #[test]
+    fn consensus_rate_known_ring4() {
+        // Ring of 4 with neighbor weight 1/3: eigvals of W are
+        // {1, 1/3, 1/3, -1/3}; beta = 1/3... wait: W = (I + P + P^T)/3 on C4
+        // has eigenvalues (1 + 2cos(2πk/4))/3 = {1, 1/3, -1/3, 1/3}.
+        let mut rng = Rng::new(3);
+        let m = MixingMatrix::from_edges(
+            4,
+            &[(0, 1, 1.0 / 3.0), (1, 2, 1.0 / 3.0), (2, 3, 1.0 / 3.0),
+              (3, 0, 1.0 / 3.0)],
+        );
+        let b = m.consensus_rate(200, &mut rng);
+        assert!((b - 1.0 / 3.0).abs() < 1e-6, "beta={b}");
+    }
+
+    #[test]
+    fn apply_conserves_mean() {
+        let mut rng = Rng::new(4);
+        let m = MixingMatrix::from_edges(
+            5,
+            &[(0, 1, 0.3), (2, 3, 0.4), (3, 4, 0.2)],
+        );
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..3).map(|_| rng.normal()).collect())
+            .collect();
+        let before: f64 = xs.iter().map(|x| x[1]).sum();
+        let out = m.apply(&xs);
+        let after: f64 = out.iter().map(|x| x[1]).sum();
+        assert!((before - after).abs() < 1e-9);
+    }
+}

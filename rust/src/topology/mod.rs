@@ -1,0 +1,279 @@
+//! Network topologies for decentralized learning.
+//!
+//! The paper's contribution lives here: the k-peer Hyper-Hypercube Graph
+//! (Alg. 1), the Simple Base-(k+1) Graph (Alg. 2) and the Base-(k+1) Graph
+//! (Alg. 3) — time-varying topologies reaching **exact consensus in
+//! O(log_{k+1} n) rounds for any n and any maximum degree k** — plus every
+//! comparator evaluated in the paper (ring, torus, exponential, 1-peer
+//! exponential, 1-peer hypercube, EquiTopo family, complete graph).
+
+pub mod baselines;
+pub mod base;
+pub mod equitopo;
+pub mod factorization;
+pub mod hyper_hypercube;
+pub mod matrix;
+pub mod one_peer;
+pub mod simple_base;
+
+pub use matrix::MixingMatrix;
+
+use crate::util::rng::Rng;
+
+/// An undirected weighted edge within one phase (self-loops implicit).
+pub type Edge = (usize, usize, f64);
+
+/// A (possibly time-varying) topology: the sequence of per-phase mixing
+/// matrices `W^(1), ..., W^(m)`; round r uses phase `r mod m` (Eq. 1).
+#[derive(Debug, Clone)]
+pub struct GraphSequence {
+    pub n: usize,
+    pub name: String,
+    pub phases: Vec<MixingMatrix>,
+}
+
+impl GraphSequence {
+    pub fn new(n: usize, name: impl Into<String>, phases: Vec<MixingMatrix>) -> Self {
+        let name = name.into();
+        for (i, p) in phases.iter().enumerate() {
+            debug_assert_eq!(p.n, n, "{name}: phase {i} has wrong n");
+        }
+        GraphSequence { n, name, phases }
+    }
+
+    /// Static topology: a single repeated matrix.
+    pub fn static_graph(name: impl Into<String>, w: MixingMatrix) -> Self {
+        GraphSequence { n: w.n, name: name.into(), phases: vec![w] }
+    }
+
+    /// Sequence length m (1 for static graphs).
+    pub fn len(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// The mixing matrix used at round r (cycling).
+    pub fn phase(&self, r: usize) -> &MixingMatrix {
+        &self.phases[r % self.phases.len().max(1)]
+    }
+
+    /// Maximum degree over all phases — the paper's communication-cost
+    /// proxy (Table 1).
+    pub fn max_degree(&self) -> usize {
+        self.phases.iter().map(|p| p.max_degree()).max().unwrap_or(0)
+    }
+
+    /// Product W^(1) W^(2) ··· W^(m) (the one-sweep mixing operator).
+    pub fn product(&self) -> MixingMatrix {
+        let mut acc = MixingMatrix::identity(self.n);
+        for w in &self.phases {
+            acc = acc.matmul(w);
+        }
+        acc
+    }
+
+    /// Finite-time convergence check (Definition 2): does one full sweep
+    /// equal the exact averaging operator J/n?
+    pub fn is_finite_time(&self, tol: f64) -> bool {
+        self.product().max_abs_diff(&MixingMatrix::average(self.n)) <= tol
+    }
+
+    /// Every phase must be doubly stochastic for DSGD-style methods.
+    pub fn all_doubly_stochastic(&self, tol: f64) -> bool {
+        self.phases.iter().all(|p| p.is_doubly_stochastic(tol))
+    }
+}
+
+/// All topologies this library can build, by paper name.
+///
+/// Naming of parameters follows the paper: `Base { m }` is the
+/// BASE-m GRAPH with maximum degree `k = m - 1`; `HyperHypercube { k }`
+/// is the k-PEER HYPER-HYPERCUBE GRAPH with maximum degree `k`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    Ring,
+    Torus,
+    /// Static exponential graph (Ying et al. 2021).
+    Exp,
+    /// 1-peer exponential graph (time-varying, directed).
+    OnePeerExp,
+    /// 1-peer hypercube graph (Shi et al. 2016); requires n a power of 2.
+    OnePeerHypercube,
+    /// k-peer hyper-hypercube (Alg. 1); requires n to be (k+1)-smooth.
+    HyperHypercube { k: usize },
+    /// Simple Base-(k+1) Graph (Alg. 2); `m = k + 1`.
+    SimpleBase { m: usize },
+    /// Base-(k+1) Graph (Alg. 3); `m = k + 1`.
+    Base { m: usize },
+    /// 1-peer undirected EquiDyn (Song et al. 2022).
+    UEquiDyn,
+    /// 1-peer directed EquiDyn (Song et al. 2022).
+    DEquiDyn,
+    /// Undirected EquiStatic with degree parameter.
+    UEquiStatic { degree: usize },
+    /// Directed EquiStatic with degree parameter.
+    DEquiStatic { degree: usize },
+    Complete,
+}
+
+impl TopologyKind {
+    /// Parse a CLI topology name: `ring`, `torus`, `exp`, `onepeer-exp`,
+    /// `onepeer-hypercube`, `hh-<k>`, `simple-base-<m>`, `base-<m>`,
+    /// `u-equidyn`, `d-equidyn`, `u-equistatic-<deg>`, `d-equistatic-<deg>`,
+    /// `complete`.
+    pub fn parse(s: &str) -> Result<TopologyKind, String> {
+        let s = s.trim().to_lowercase();
+        let k = |rest: &str, what: &str| -> Result<usize, String> {
+            rest.parse::<usize>()
+                .map_err(|_| format!("bad {what} parameter in {s:?}"))
+        };
+        Ok(match s.as_str() {
+            "ring" => TopologyKind::Ring,
+            "torus" => TopologyKind::Torus,
+            "exp" | "exponential" => TopologyKind::Exp,
+            "onepeer-exp" | "1peer-exp" => TopologyKind::OnePeerExp,
+            "onepeer-hypercube" | "1peer-hypercube" => {
+                TopologyKind::OnePeerHypercube
+            }
+            "u-equidyn" => TopologyKind::UEquiDyn,
+            "d-equidyn" => TopologyKind::DEquiDyn,
+            "complete" | "fully-connected" => TopologyKind::Complete,
+            _ => {
+                if let Some(rest) = s.strip_prefix("hh-") {
+                    TopologyKind::HyperHypercube { k: k(rest, "k")? }
+                } else if let Some(rest) = s.strip_prefix("simple-base-") {
+                    let m = k(rest, "m")?;
+                    if m < 2 {
+                        return Err("simple-base-<m> needs m >= 2".into());
+                    }
+                    TopologyKind::SimpleBase { m }
+                } else if let Some(rest) = s.strip_prefix("base-") {
+                    let m = k(rest, "m")?;
+                    if m < 2 {
+                        return Err("base-<m> needs m >= 2".into());
+                    }
+                    TopologyKind::Base { m }
+                } else if let Some(rest) = s.strip_prefix("u-equistatic-") {
+                    TopologyKind::UEquiStatic { degree: k(rest, "degree")? }
+                } else if let Some(rest) = s.strip_prefix("d-equistatic-") {
+                    TopologyKind::DEquiStatic { degree: k(rest, "degree")? }
+                } else {
+                    return Err(format!("unknown topology {s:?}"));
+                }
+            }
+        })
+    }
+
+    /// Human-readable name matching the paper's figures.
+    pub fn label(&self) -> String {
+        match self {
+            TopologyKind::Ring => "Ring".into(),
+            TopologyKind::Torus => "Torus".into(),
+            TopologyKind::Exp => "Exp.".into(),
+            TopologyKind::OnePeerExp => "1-peer Exp.".into(),
+            TopologyKind::OnePeerHypercube => "1-peer Hypercube".into(),
+            TopologyKind::HyperHypercube { k } => {
+                format!("{k}-peer Hyper-hypercube")
+            }
+            TopologyKind::SimpleBase { m } => format!("Simple Base-{m}"),
+            TopologyKind::Base { m } => format!("Base-{m}"),
+            TopologyKind::UEquiDyn => "1-peer U-EquiDyn".into(),
+            TopologyKind::DEquiDyn => "1-peer D-EquiDyn".into(),
+            TopologyKind::UEquiStatic { degree } => {
+                format!("U-EquiStatic({degree})")
+            }
+            TopologyKind::DEquiStatic { degree } => {
+                format!("D-EquiStatic({degree})")
+            }
+            TopologyKind::Complete => "Complete".into(),
+        }
+    }
+
+    /// Build the graph sequence for `n` nodes. `seed` only matters for the
+    /// randomized EquiTopo family.
+    pub fn build(&self, n: usize, seed: u64) -> Result<GraphSequence, String> {
+        if n == 0 {
+            return Err("n must be >= 1".into());
+        }
+        let mut rng = Rng::new(seed);
+        match *self {
+            TopologyKind::Ring => Ok(baselines::ring(n)),
+            TopologyKind::Torus => baselines::torus(n),
+            TopologyKind::Exp => Ok(baselines::exponential(n)),
+            TopologyKind::Complete => Ok(baselines::complete(n)),
+            TopologyKind::OnePeerExp => Ok(one_peer::one_peer_exp(n)),
+            TopologyKind::OnePeerHypercube => one_peer::one_peer_hypercube(n),
+            TopologyKind::HyperHypercube { k } => {
+                hyper_hypercube::hyper_hypercube(n, k)
+            }
+            TopologyKind::SimpleBase { m } => {
+                simple_base::simple_base(n, m - 1)
+            }
+            TopologyKind::Base { m } => base::base(n, m - 1),
+            TopologyKind::UEquiDyn => {
+                Ok(equitopo::u_equidyn(n, &mut rng))
+            }
+            TopologyKind::DEquiDyn => {
+                Ok(equitopo::d_equidyn(n, &mut rng))
+            }
+            TopologyKind::UEquiStatic { degree } => {
+                equitopo::u_equistatic(n, degree, &mut rng)
+            }
+            TopologyKind::DEquiStatic { degree } => {
+                equitopo::d_equistatic(n, degree, &mut rng)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for (s, want) in [
+            ("ring", TopologyKind::Ring),
+            ("torus", TopologyKind::Torus),
+            ("exp", TopologyKind::Exp),
+            ("onepeer-exp", TopologyKind::OnePeerExp),
+            ("base-2", TopologyKind::Base { m: 2 }),
+            ("base-5", TopologyKind::Base { m: 5 }),
+            ("simple-base-3", TopologyKind::SimpleBase { m: 3 }),
+            ("hh-2", TopologyKind::HyperHypercube { k: 2 }),
+            ("u-equidyn", TopologyKind::UEquiDyn),
+            ("u-equistatic-4", TopologyKind::UEquiStatic { degree: 4 }),
+            ("complete", TopologyKind::Complete),
+        ] {
+            assert_eq!(TopologyKind::parse(s).unwrap(), want, "{s}");
+        }
+        assert!(TopologyKind::parse("base-1").is_err());
+        assert!(TopologyKind::parse("wat").is_err());
+        assert!(TopologyKind::parse("base-x").is_err());
+    }
+
+    #[test]
+    fn sequence_helpers() {
+        let seq = GraphSequence::new(
+            2,
+            "pair",
+            vec![MixingMatrix::from_edges(2, &[(0, 1, 0.5)])],
+        );
+        assert_eq!(seq.len(), 1);
+        assert_eq!(seq.max_degree(), 1);
+        assert!(seq.is_finite_time(1e-12));
+        assert!(seq.all_doubly_stochastic(1e-12));
+        // Cycling.
+        assert_eq!(seq.phase(0).n, 2);
+        assert_eq!(seq.phase(7).n, 2);
+    }
+
+    #[test]
+    fn identity_sequence_is_not_finite_time() {
+        let seq = GraphSequence::new(3, "id", vec![MixingMatrix::identity(3)]);
+        assert!(!seq.is_finite_time(1e-9));
+    }
+}

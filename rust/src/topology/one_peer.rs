@@ -1,0 +1,115 @@
+//! Time-varying 1-peer baselines: the 1-peer exponential graph
+//! (Ying et al. 2021) and the 1-peer hypercube graph (Shi et al. 2016).
+//! Both are finite-time convergent **only when n is a power of two** —
+//! the limitation the Base-(k+1) Graph removes.
+
+use super::matrix::MixingMatrix;
+use super::GraphSequence;
+
+/// 1-peer exponential graph: at phase t (period τ = ⌈log₂ n⌉), node i
+/// mixes with i + 2^t (mod n), weight 1/2: W^(t) = (I + P^{2^t})/2 with P
+/// the cyclic shift. Directed, doubly stochastic, maximum degree 1.
+pub fn one_peer_exp(n: usize) -> GraphSequence {
+    if n == 1 {
+        return GraphSequence::static_graph(
+            "onepeer-exp(n=1)",
+            MixingMatrix::identity(1),
+        );
+    }
+    let tau = ((n as f64).log2().ceil() as usize).max(1);
+    let mut phases = Vec::with_capacity(tau);
+    for t in 0..tau {
+        let off = (1usize << t) % n;
+        let mut edges = Vec::new();
+        if off != 0 {
+            for i in 0..n {
+                edges.push((i, (i + off) % n, 0.5));
+            }
+        }
+        phases.push(MixingMatrix::from_directed_edges(n, &edges));
+    }
+    GraphSequence::new(n, format!("onepeer-exp(n={n})"), phases)
+}
+
+/// 1-peer hypercube graph: requires n = 2^τ; at phase t node i pairs with
+/// i XOR 2^t, weight 1/2. Undirected perfect matchings; finite-time in τ
+/// phases (it is H_1 with the digit groups being hypercube dimensions).
+pub fn one_peer_hypercube(n: usize) -> Result<GraphSequence, String> {
+    if n == 1 {
+        return Ok(GraphSequence::static_graph(
+            "onepeer-hypercube(n=1)",
+            MixingMatrix::identity(1),
+        ));
+    }
+    if !n.is_power_of_two() {
+        return Err(format!(
+            "1-peer hypercube requires n to be a power of 2 (got {n})"
+        ));
+    }
+    let tau = n.trailing_zeros() as usize;
+    let mut phases = Vec::with_capacity(tau);
+    for t in 0..tau {
+        let bit = 1usize << t;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            let j = i ^ bit;
+            if i < j {
+                edges.push((i, j, 0.5));
+            }
+        }
+        phases.push(MixingMatrix::from_edges(n, &edges));
+    }
+    Ok(GraphSequence::new(n, format!("onepeer-hypercube(n={n})"), phases))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_peer_exp_finite_time_iff_power_of_two() {
+        for n in [2usize, 4, 8, 16, 32] {
+            let seq = one_peer_exp(n);
+            assert!(seq.is_finite_time(1e-9), "n={n} should be finite-time");
+            assert_eq!(seq.len(), (n as f64).log2().ceil() as usize);
+            assert_eq!(seq.max_degree(), 1);
+        }
+        for n in [5usize, 6, 7, 12, 25] {
+            let seq = one_peer_exp(n);
+            assert!(
+                !seq.is_finite_time(1e-9),
+                "n={n} should NOT be finite-time (paper Fig. 1)"
+            );
+            assert!(seq.all_doubly_stochastic(1e-9), "n={n}");
+            assert_eq!(seq.max_degree(), 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn one_peer_exp_contracts_even_for_non_powers() {
+        // Still a valid gossip sequence: one sweep strictly contracts
+        // disagreement for any n.
+        let seq = one_peer_exp(25);
+        let prod = seq.product();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let beta = prod.consensus_rate(300, &mut rng);
+        assert!(beta < 1.0, "one sweep must contract (beta={beta})");
+        assert!(beta > 0.0);
+    }
+
+    #[test]
+    fn one_peer_hypercube_matches_base2_equivalence() {
+        // Paper Sec. F.2: Base-2 Graph == 1-peer hypercube when n = 2^p.
+        for n in [2usize, 4, 8, 16, 32, 64] {
+            let seq = one_peer_hypercube(n).unwrap();
+            assert!(seq.is_finite_time(1e-9), "n={n}");
+            assert_eq!(seq.len(), n.trailing_zeros() as usize);
+            assert_eq!(seq.max_degree(), 1);
+            for p in &seq.phases {
+                assert!(p.is_symmetric(1e-12));
+            }
+        }
+        assert!(one_peer_hypercube(12).is_err());
+        assert!(one_peer_hypercube(25).is_err());
+    }
+}

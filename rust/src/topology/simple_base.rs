@@ -1,0 +1,368 @@
+//! Algorithm 2: the Simple Base-(k+1) Graph A_k^simple(V).
+//!
+//! Finite-time convergent for **any** n and maximum degree k ∈ [n−1].
+//! Construction (Sec. 4.2 for k = 1, Sec. B for k ≥ 2):
+//!
+//! * **Step 1** — decompose n in base (k+1): n = Σ_l a_l (k+1)^{p_l} with
+//!   p_1 > ··· > p_L ≥ 0, a_l ∈ [k]; split V into V_1..V_L with
+//!   |V_l| = a_l (k+1)^{p_l}, and each V_l into V_{l,1}..V_{l,a_l} of size
+//!   (k+1)^{p_l}.
+//! * **Step 2** (phases 1..m_1, m_1 = |H_k(V_1)|) — every V_l runs its
+//!   k-peer hyper-hypercube H_k(V_l) concurrently (shorter sequences cycle;
+//!   re-averaging equal values is a no-op).
+//! * **Step 3** (phase m_1 + j, j = 1..L−1) — every node of
+//!   V_{j+1} ∪ ··· ∪ V_L exchanges with a_j not-yet-used nodes of V_j (one
+//!   per V_{j,a}) with weight |V_j| / (a_j Σ_{l'≥j} |V_{l'}|); afterwards
+//!   the average of each V_{j,a} equals the global average. Left-over
+//!   (isolated) nodes of V_j pair into complete graphs of size ≤ k+1 — the
+//!   paper's "not necessary but keeps parameters close" edges (line 20).
+//! * **Step 4** (subset l from phase m_1 + l + 1 on) — V_l re-averages
+//!   internally with H_k(V_{l,a}) per a (or the complete graph on V_l when
+//!   p_l = 0 — line 27's redundant edges), spreading the global average to
+//!   every member. The sequence ends when V_1 finishes: total length
+//!   m_1 + 1 + p_1 ≤ 2 log_{k+1}(n) + 2 (Theorem 1).
+
+use super::factorization::{base_digits, is_smooth};
+use super::hyper_hypercube;
+use super::matrix::MixingMatrix;
+use super::{Edge, GraphSequence};
+
+/// Phase edge lists over an arbitrary node-id set (component form, used by
+/// Alg. 3). Never fails: any n ≥ 1 works.
+pub fn phases_over(nodes: &[usize], k: usize) -> Vec<Vec<Edge>> {
+    let n = nodes.len();
+    assert!(k >= 1, "maximum degree k must be >= 1");
+    if n <= 1 {
+        return vec![];
+    }
+    // Line 2: (k+1)-smooth n short-circuits to the hyper-hypercube.
+    if is_smooth(n, k + 1) {
+        return hyper_hypercube::phases_over(nodes, k)
+            .expect("smooth n must factor");
+    }
+
+    let digits = base_digits(n, k);
+    let ell = digits.len();
+    debug_assert!(ell >= 2, "non-smooth n must have >= 2 digits");
+
+    // Step 1: split V into V_l and V_{l,a}.
+    let mut subsets: Vec<Vec<usize>> = Vec::with_capacity(ell);
+    let mut offset = 0usize;
+    for d in &digits {
+        let size = d.subset_size(k);
+        subsets.push(nodes[offset..offset + size].to_vec());
+        offset += size;
+    }
+    debug_assert_eq!(offset, n);
+    // V_{l,a} slices.
+    let sub_parts: Vec<Vec<Vec<usize>>> = digits
+        .iter()
+        .zip(&subsets)
+        .map(|(d, vl)| {
+            let part = (k + 1).pow(d.p as u32);
+            (0..d.a).map(|a| vl[a * part..(a + 1) * part].to_vec()).collect()
+        })
+        .collect();
+
+    // Hyper-hypercube components. |V_l| = a_l (k+1)^{p_l} is smooth.
+    let h_l: Vec<Vec<Vec<Edge>>> = subsets
+        .iter()
+        .map(|vl| hyper_hypercube::phases_over(vl, k).expect("smooth |V_l|"))
+        .collect();
+    let h_la: Vec<Vec<Vec<Vec<Edge>>>> = sub_parts
+        .iter()
+        .map(|parts| {
+            parts
+                .iter()
+                .map(|vla| {
+                    hyper_hypercube::phases_over(vla, k)
+                        .expect("power |V_{l,a}|")
+                })
+                .collect()
+        })
+        .collect();
+
+    let m1 = h_l[0].len();
+    let p1 = digits[0].p; // |H_k(V_{1,1})| = p_1
+    let total = m1 + 1 + p1;
+    let mut phases: Vec<Vec<Edge>> = Vec::with_capacity(total);
+
+    // Step 2: phases 1..=m1 — concurrent hyper-hypercubes, cycling.
+    for m in 0..m1 {
+        let mut edges = Vec::new();
+        for hl in &h_l {
+            if !hl.is_empty() {
+                edges.extend_from_slice(&hl[m % hl.len()]);
+            }
+        }
+        phases.push(edges);
+    }
+
+    // Interleaved steps 3 and 4: phases m1+1 ..= m1+1+p1; j = phase - m1.
+    let sizes: Vec<usize> = subsets.iter().map(|s| s.len()).collect();
+    // b_l: step-4 phase counter per subset.
+    let mut b = vec![0usize; ell];
+    for j in 1..=(1 + p1) {
+        let mut edges: Vec<Edge> = Vec::new();
+        // Which subset is the receiver this phase (step 3)? Only subsets
+        // 1..=L-1 have a receiver phase (V_L never receives).
+        let receiver = j; // 1-based subset index
+        if receiver <= ell.saturating_sub(1) {
+            let jj = receiver - 1; // 0-based receiver subset
+            let aj = digits[jj].a;
+            let tail: usize = sizes[jj..].iter().sum();
+            let w = sizes[jj] as f64 / (aj as f64 * tail as f64);
+            let mut next_in_part = vec![0usize; aj];
+            // Senders: every node of V_{j+1} ∪ ... ∪ V_L.
+            for l in receiver..ell {
+                for &v in &subsets[l] {
+                    for (a, part) in sub_parts[jj].iter().enumerate() {
+                        let u = part[next_in_part[a]];
+                        next_in_part[a] += 1;
+                        edges.push((v, u, w));
+                    }
+                }
+            }
+            // Line 17-20: left-over isolated nodes of V_j pair up into
+            // complete graphs of size <= k+1 (redundant but keeps
+            // parameters close).
+            let mut isolated: Vec<usize> = Vec::new();
+            for (a, part) in sub_parts[jj].iter().enumerate() {
+                isolated.extend_from_slice(&part[next_in_part[a]..]);
+            }
+            let mut idx = 0;
+            while isolated.len() - idx >= 2 {
+                let take = (k + 1).min(isolated.len() - idx);
+                let group = &isolated[idx..idx + take];
+                let gw = 1.0 / take as f64;
+                for x in 0..take {
+                    for y in (x + 1)..take {
+                        edges.push((group[x], group[y], gw));
+                    }
+                }
+                idx += take;
+            }
+        }
+        // Step 4 for subsets l < j (0-based l <= j-2), plus subset L at
+        // j >= L (it has no receiver phase).
+        for l in 0..ell {
+            let lband = l + 1; // 1-based
+            let in_step4 = if lband < ell {
+                lband < receiver // after its receiver phase
+            } else {
+                lband <= receiver // V_L skips the receiver phase
+            };
+            if !in_step4 {
+                continue;
+            }
+            b[l] += 1;
+            if digits[l].p != 0 {
+                for ha in &h_la[l] {
+                    if !ha.is_empty() {
+                        edges.extend_from_slice(&ha[(b[l] - 1) % ha.len()]);
+                    }
+                }
+            } else if !h_l[l].is_empty() {
+                // p_l = 0: V_{l,a} are singletons; redundant complete graph
+                // on V_l (line 27).
+                edges.extend_from_slice(&h_l[l][(b[l] - 1) % h_l[l].len()]);
+            }
+        }
+        phases.push(edges);
+    }
+    debug_assert_eq!(phases.len(), total);
+    phases
+}
+
+/// Sequence length |A_k^simple(V)| without building edges.
+pub fn seq_len(n: usize, k: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    if is_smooth(n, k + 1) {
+        return hyper_hypercube::seq_len(n, k).expect("smooth");
+    }
+    let digits = base_digits(n, k);
+    let m1 = hyper_hypercube::seq_len(digits[0].subset_size(k), k)
+        .expect("smooth |V_1|");
+    m1 + 1 + digits[0].p
+}
+
+/// Build the Simple Base-(k+1) Graph on nodes 0..n.
+pub fn simple_base(n: usize, k: usize) -> Result<GraphSequence, String> {
+    if k == 0 {
+        return Err("maximum degree k must be >= 1".into());
+    }
+    if k >= n && n > 1 {
+        // Degenerate to the complete graph (k is capped by n-1).
+        let seq = hyper_hypercube::hyper_hypercube(n, n - 1)?;
+        return Ok(GraphSequence::new(
+            n,
+            format!("simple-base-{}(n={n})", k + 1),
+            seq.phases,
+        ));
+    }
+    let nodes: Vec<usize> = (0..n).collect();
+    let phases = phases_over(&nodes, k);
+    let mats = phases
+        .iter()
+        .map(|edges| MixingMatrix::from_edges(n, edges))
+        .collect();
+    Ok(GraphSequence::new(
+        n,
+        format!("simple-base-{}(n={n})", k + 1),
+        mats,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_fig3_example_n5_k1() {
+        // Fig. 3: n=5=2^2+1, k=1 -> 5 phases (m1=2, +1 exchange, +p1=2).
+        let seq = simple_base(5, 1).unwrap();
+        assert_eq!(seq.len(), 5);
+        assert_eq!(seq.max_degree(), 1);
+        assert!(seq.all_doubly_stochastic(1e-9));
+        assert!(seq.is_finite_time(1e-9));
+        // The exchange phase (G^(3)) carries the 4/5 weight of Fig. 3.
+        let w3 = &seq.phases[2];
+        let mut found_45 = false;
+        for i in 0..5 {
+            for j in 0..5 {
+                if i != j && (w3.get(i, j) - 0.8).abs() < 1e-12 {
+                    found_45 = true;
+                }
+            }
+        }
+        assert!(found_45, "expected a 4/5-weight edge in phase 3");
+    }
+
+    #[test]
+    fn paper_fig11_example_n7_k2() {
+        // Fig. 11: n=7=2*3+1, k=2 -> 4 phases, exchange weight 3/7.
+        let seq = simple_base(7, 2).unwrap();
+        assert_eq!(seq.len(), 4);
+        assert!(seq.max_degree() <= 2);
+        assert!(seq.is_finite_time(1e-9));
+        let w3 = &seq.phases[2];
+        let mut found = false;
+        for i in 0..7 {
+            for j in 0..7 {
+                if i != j && (w3.get(i, j) - 3.0 / 7.0).abs() < 1e-12 {
+                    found = true;
+                }
+            }
+        }
+        assert!(found, "expected a 3/7-weight edge in the exchange phase");
+    }
+
+    #[test]
+    fn paper_fig13_example_n6_k1() {
+        // Fig. 13: n=6=2^2+2, k=1 -> 5 phases (simple variant).
+        let seq = simple_base(6, 1).unwrap();
+        assert_eq!(seq.len(), 5);
+        assert_eq!(seq.max_degree(), 1);
+        assert!(seq.is_finite_time(1e-9));
+    }
+
+    #[test]
+    fn smooth_n_equals_hyper_hypercube() {
+        for (n, k) in [(8, 1), (9, 2), (16, 3), (12, 2), (27, 2)] {
+            let sb = simple_base(n, k).unwrap();
+            let hh = hyper_hypercube::hyper_hypercube(n, k).unwrap();
+            assert_eq!(sb.len(), hh.len(), "n={n} k={k}");
+            assert!(sb.is_finite_time(1e-9));
+        }
+    }
+
+    #[test]
+    fn theorem1_length_bound_exhaustive() {
+        // Theorem 1: length <= 2 log_{k+1}(n) + 2, for all n in 2..=160,
+        // k in 1..=5.
+        for k in 1..=5usize {
+            for n in 2..=160usize {
+                let seq = simple_base(n, k).unwrap();
+                let bound =
+                    2.0 * (n as f64).ln() / ((k + 1) as f64).ln() + 2.0;
+                assert!(
+                    seq.len() as f64 <= bound + 1e-9,
+                    "n={n} k={k}: len={} bound={bound:.3}",
+                    seq.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn finite_time_exhaustive_small() {
+        for k in 1..=4usize {
+            for n in 2..=60usize {
+                let seq = simple_base(n, k).unwrap();
+                assert!(
+                    seq.is_finite_time(1e-9),
+                    "n={n} k={k} not finite-time"
+                );
+                assert!(
+                    seq.max_degree() <= k,
+                    "n={n} k={k} degree {} > k",
+                    seq.max_degree()
+                );
+                assert!(
+                    seq.all_doubly_stochastic(1e-9),
+                    "n={n} k={k} not doubly stochastic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_n_k() {
+        prop::check("simple-base-finite-time", 48, |rng| {
+            let n = rng.range(2, 400);
+            let k = rng.range(1, 8).min(n - 1).max(1);
+            let seq = simple_base(n, k)
+                .map_err(|e| format!("build failed: {e}"))?;
+            prop_assert!(
+                seq.is_finite_time(1e-8),
+                "n={n} k={k} not finite-time"
+            );
+            prop_assert!(
+                seq.max_degree() <= k,
+                "n={n} k={k} deg {}",
+                seq.max_degree()
+            );
+            for (i, p) in seq.phases.iter().enumerate() {
+                prop_assert!(
+                    p.is_symmetric(1e-12),
+                    "n={n} k={k} phase {i} asymmetric"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seq_len_matches_built_length() {
+        for k in 1..=5usize {
+            for n in 2..=120usize {
+                assert_eq!(
+                    seq_len(n, k),
+                    simple_base(n, k).unwrap().len(),
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn k_capped_at_complete_graph() {
+        let seq = simple_base(5, 7).unwrap();
+        assert!(seq.is_finite_time(1e-9));
+        assert_eq!(seq.len(), 1);
+    }
+}

@@ -1,0 +1,138 @@
+//! Per-node batch sources feeding the training loop.
+
+use std::sync::Arc;
+
+use crate::data::corpus::CharCorpus;
+use crate::data::synth::{ClassificationDataset, NodeSampler};
+use crate::runtime::batch::Batch;
+
+/// A node's stream of training batches.
+pub trait NodeData: Send {
+    fn next_train_batch(&mut self) -> Batch;
+    /// Number of local examples (for diagnostics).
+    fn shard_size(&self) -> usize;
+}
+
+/// Always returns the same batch (quadratic targets, overfit probes).
+pub struct FixedBatch {
+    batch: Batch,
+}
+
+impl FixedBatch {
+    pub fn new(batch: Batch) -> Self {
+        FixedBatch { batch }
+    }
+}
+
+impl NodeData for FixedBatch {
+    fn next_train_batch(&mut self) -> Batch {
+        self.batch.clone()
+    }
+    fn shard_size(&self) -> usize {
+        self.batch.batch_size()
+    }
+}
+
+/// Classification shard: samples `batch_size` examples per round from this
+/// node's Dirichlet shard.
+pub struct ClassificationShard {
+    ds: Arc<ClassificationDataset>,
+    sampler: NodeSampler,
+    batch_size: usize,
+}
+
+impl ClassificationShard {
+    pub fn new(
+        ds: Arc<ClassificationDataset>,
+        indices: Vec<usize>,
+        batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        ClassificationShard {
+            ds,
+            sampler: NodeSampler::new(indices, seed),
+            batch_size,
+        }
+    }
+}
+
+impl NodeData for ClassificationShard {
+    fn next_train_batch(&mut self) -> Batch {
+        self.sampler.next_batch(&self.ds, self.batch_size)
+    }
+    fn shard_size(&self) -> usize {
+        self.sampler.shard_size()
+    }
+}
+
+/// LM shard over corpus documents.
+pub struct CorpusShard {
+    corpus: Arc<CharCorpus>,
+    sampler: NodeSampler,
+    batch_size: usize,
+}
+
+impl CorpusShard {
+    pub fn new(
+        corpus: Arc<CharCorpus>,
+        indices: Vec<usize>,
+        batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        CorpusShard {
+            corpus,
+            sampler: NodeSampler::new(indices, seed),
+            batch_size,
+        }
+    }
+}
+
+impl NodeData for CorpusShard {
+    fn next_train_batch(&mut self) -> Batch {
+        let idx = self.sampler.next_indices(self.batch_size);
+        self.corpus.gather(&idx)
+    }
+    fn shard_size(&self) -> usize {
+        self.sampler.shard_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn classification_shard_yields_shaped_batches() {
+        let mut rng = Rng::new(0);
+        let ds = Arc::new(gaussian_mixture(100, 8, 4, 1.0, 0.2, &mut rng));
+        let mut shard =
+            ClassificationShard::new(ds, (0..50).collect(), 16, 1);
+        let b = shard.next_train_batch();
+        assert_eq!(b.x_shape, vec![16, 8]);
+        assert_eq!(shard.shard_size(), 50);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn corpus_shard_yields_lm_batches() {
+        let mut rng = Rng::new(1);
+        let corpus =
+            Arc::new(crate::data::corpus::generate(40, 32, 2, &mut rng));
+        let mut shard = CorpusShard::new(corpus, (0..40).collect(), 4, 2);
+        let b = shard.next_train_batch();
+        assert_eq!(b.x_shape, vec![4, 32]);
+        assert_eq!(b.y_shape, vec![4, 32]);
+    }
+
+    #[test]
+    fn fixed_batch_repeats() {
+        let batch = crate::runtime::provider::QuadraticModel::target_batch(
+            vec![1.0, 2.0],
+        );
+        let mut fb = FixedBatch::new(batch.clone());
+        assert_eq!(fb.next_train_batch(), batch);
+        assert_eq!(fb.next_train_batch(), batch);
+    }
+}

@@ -1,0 +1,187 @@
+//! Mini benchmark harness (offline build; replaces criterion).
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and drive
+//! this: warmup, timed iterations until a wall-clock budget, then
+//! mean/median/p95 plus throughput. Results are printed as a table and
+//! optionally appended as JSON lines for EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher for CI (BASEGRAPH_BENCH_FAST=1 shrinks budgets).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("BASEGRAPH_BENCH_FAST").as_deref() == Ok("1") {
+            b.warmup = Duration::from_millis(20);
+            b.budget = Duration::from_millis(200);
+            b.min_iters = 3;
+        }
+        b
+    }
+
+    /// Time `f` repeatedly; returns and records the stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.budget || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            median_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+            min_ns: samples_ns[0],
+        };
+        println!(
+            "{:<52} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            stats.name,
+            stats.iters,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Append one JSON line per result to `path` (best-effort).
+    pub fn dump_jsonl(&self, path: &str) {
+        use crate::util::json::Json;
+        let mut out = String::new();
+        for s in &self.results {
+            let j = Json::obj(vec![
+                ("name", Json::str(&s.name)),
+                ("iters", Json::num(s.iters as f64)),
+                ("mean_ns", Json::num(s.mean_ns)),
+                ("median_ns", Json::num(s.median_ns)),
+                ("p95_ns", Json::num(s.p95_ns)),
+            ]);
+            out.push_str(&crate::util::json::write(&j));
+            out.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            let _ = f.write_all(out.as_bytes());
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: vec![],
+        };
+        let s = b.bench("noop-ish", || {
+            black_box((0..100).sum::<usize>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,167 @@
+//! Tiny CLI argument parser (offline build; replaces clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands; typed getters with defaults and error messages that name the
+//! offending flag.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Flags that take no value must be listed in
+    /// `bool_flags` so `--verbose foo` treats `foo` as positional.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.opts.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    return Err(format!("option --{body} requires a value"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--ns 21,22,25`.
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        format!("--{key}: bad integer {s:?} in list")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&raw("--n 25 --k=3 pos1"), &[]).unwrap();
+        assert_eq!(a.get("n"), Some("25"));
+        assert_eq!(a.get("k"), Some("3"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn bool_flags_do_not_eat_values() {
+        let a = Args::parse(&raw("--verbose train --n 5"), &["verbose"])
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["train".to_string()]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = Args::parse(&raw("--lr 0.05"), &[]).unwrap();
+        assert_eq!(a.f64_or("lr", 0.1).unwrap(), 0.05);
+        assert_eq!(a.f64_or("alpha", 0.1).unwrap(), 0.1);
+        assert_eq!(a.usize_or("rounds", 100).unwrap(), 100);
+        assert!(a.usize_or("lr", 1).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&raw("--ns 21,22,25 --topos ring,base"), &[])
+            .unwrap();
+        assert_eq!(a.usize_list_or("ns", &[]).unwrap(), vec![21, 22, 25]);
+        assert_eq!(a.str_list_or("topos", &[]), vec!["ring", "base"]);
+        assert_eq!(a.usize_list_or("ks", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw("--n"), &[]).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! Small self-contained substrates (the build is fully offline, so these
+//! replace the usual crates.io dependencies: PRNG, JSON, CLI parsing,
+//! thread pool, benchmarking and property-test harnesses).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+/// Write a CSV file (creates parent dirs). Rows are plain strings; the
+/// caller formats numbers so scientific experiments control precision.
+pub fn write_csv(
+    path: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn write_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("basegraph_csv_test");
+        let path = dir.join("t.csv");
+        let p = path.to_str().unwrap();
+        super::write_csv(
+            p,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,107 @@
+//! Seeded randomized property-test runner (offline build; replaces proptest).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure against `cases`
+//! independently-seeded RNGs; on failure it reports the failing case seed so
+//! the case reproduces with `check_one(seed, ...)`. Properties return
+//! `Result<(), String>` so failures carry a message instead of panicking
+//! deep inside the property body.
+
+use crate::util::rng::Rng;
+
+/// Default number of cases; override with BASEGRAPH_PROP_CASES.
+pub fn default_cases() -> usize {
+    std::env::var("BASEGRAPH_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing seed
+/// on the first failure.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = derive_seed(name, case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case} (seed \
+                 {seed:#018x}): {msg}\nreproduce with \
+                 util::prop::check_one({seed:#018x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_one<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed (seed {seed:#018x}): {msg}");
+    }
+}
+
+fn derive_seed(name: &str, case: u64) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ case.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("always-true", 32, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-false\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 8, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeds_are_deterministic_per_name_and_case() {
+        assert_eq!(derive_seed("x", 3), derive_seed("x", 3));
+        assert_ne!(derive_seed("x", 3), derive_seed("x", 4));
+        assert_ne!(derive_seed("x", 3), derive_seed("y", 3));
+    }
+
+    #[test]
+    fn prop_assert_macro_returns_error() {
+        let f = |rng: &mut crate::util::rng::Rng| -> Result<(), String> {
+            let v = rng.below(10);
+            prop_assert!(v < 10, "v={v} out of range");
+            Ok(())
+        };
+        check("macro-smoke", 16, f);
+    }
+}

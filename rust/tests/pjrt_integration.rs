@@ -1,0 +1,193 @@
+//! End-to-end integration of the AOT bridge: python-lowered HLO artifacts
+//! loaded, compiled and executed through the PJRT C API from Rust.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built — run `make artifacts` first for full coverage.
+
+use basegraph::runtime::{Batch, Features, GradProvider, PjrtModel};
+use basegraph::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn mlp_batch(spec: &basegraph::runtime::manifest::StepSpec, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let xn: usize = spec.x_shape.iter().product();
+    Batch {
+        x: Features::F32((0..xn).map(|_| rng.normal() as f32).collect()),
+        x_shape: spec.x_shape.clone(),
+        y: (0..spec.y_shape.iter().product::<usize>())
+            .map(|_| rng.below(10) as i32)
+            .collect(),
+        y_shape: spec.y_shape.clone(),
+    }
+}
+
+#[test]
+fn mlp_ref_train_step_runs_and_is_deterministic() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = PjrtModel::load("artifacts", "mlp", "ref").unwrap();
+    assert!(model.d_params() > 10_000);
+    let params = model.init_params();
+    let batch = mlp_batch(model.train_spec(), 0);
+    let (l1, g1) = model.train_step(&params, &batch).unwrap();
+    let (l2, g2) = model.train_step(&params, &batch).unwrap();
+    assert_eq!(l1, l2, "PJRT execution must be deterministic");
+    assert_eq!(g1, g2);
+    assert!(l1.is_finite() && l1 > 0.0, "loss={l1}");
+    assert_eq!(g1.len(), model.d_params());
+    assert!(g1.iter().all(|g| g.is_finite()));
+    let gnorm: f64 = g1.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(gnorm > 1e-3, "gradient should be non-trivial: {gnorm}");
+}
+
+#[test]
+fn mlp_pallas_variant_matches_ref_variant() {
+    // The Pallas-kernel artifact and the pure-jnp reference artifact must
+    // produce the same numbers through the whole AOT+PJRT path — this is
+    // the Rust-side counterpart of python/tests/test_model.py.
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let m_ref = PjrtModel::load("artifacts", "mlp", "ref").unwrap();
+    let m_pal = PjrtModel::load("artifacts", "mlp", "pallas").unwrap();
+    let params = m_ref.init_params();
+    assert_eq!(params, m_pal.init_params());
+    let batch = mlp_batch(m_ref.train_spec(), 1);
+    let (lr, gr) = m_ref.train_step(&params, &batch).unwrap();
+    let (lp, gp) = m_pal.train_step(&params, &batch).unwrap();
+    assert!((lr - lp).abs() < 1e-4 * lr.abs().max(1.0), "{lr} vs {lp}");
+    let mut max_diff = 0.0f32;
+    for (a, b) in gr.iter().zip(&gp) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-3, "max grad diff {max_diff}");
+}
+
+#[test]
+fn sgd_on_pjrt_mlp_reduces_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = PjrtModel::load("artifacts", "mlp", "ref").unwrap();
+    let mut params = model.init_params();
+    // Learnable separable synthetic task: class = argmax of first 10 dims.
+    let spec = model.train_spec().clone();
+    let mut rng = Rng::new(7);
+    let bsz = spec.x_shape[0];
+    let dim = spec.x_shape[1];
+    let make_batch = |rng: &mut Rng| {
+        let mut xs = vec![0.0f32; bsz * dim];
+        let mut ys = vec![0i32; bsz];
+        for i in 0..bsz {
+            let cls = rng.below(10);
+            for j in 0..dim {
+                xs[i * dim + j] = rng.normal() as f32 * 0.3;
+            }
+            xs[i * dim + cls] += 2.0;
+            ys[i] = cls as i32;
+        }
+        Batch {
+            x: Features::F32(xs),
+            x_shape: spec.x_shape.clone(),
+            y: ys,
+            y_shape: spec.y_shape.clone(),
+        }
+    };
+    let b0 = make_batch(&mut rng);
+    let (l0, _) = model.train_step(&params, &b0).unwrap();
+    for _ in 0..20 {
+        let b = make_batch(&mut rng);
+        let (_, g) = model.train_step(&params, &b).unwrap();
+        for (p, gi) in params.iter_mut().zip(&g) {
+            *p -= 0.2 * gi;
+        }
+    }
+    let (l1, _) = model.train_step(&params, &b0).unwrap();
+    assert!(l1 < l0 * 0.8, "loss should drop: {l0} -> {l1}");
+}
+
+#[test]
+fn eval_step_counts_correct() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = PjrtModel::load("artifacts", "mlp", "ref").unwrap();
+    let params = model.init_params();
+    let spec = model.eval_spec().clone();
+    let mut rng = Rng::new(3);
+    let xn: usize = spec.x_shape.iter().product();
+    let yn: usize = spec.y_shape.iter().product();
+    let batch = Batch {
+        x: Features::F32((0..xn).map(|_| rng.normal() as f32).collect()),
+        x_shape: spec.x_shape.clone(),
+        y: (0..yn).map(|_| rng.below(10) as i32).collect(),
+        y_shape: spec.y_shape.clone(),
+    };
+    let (loss, correct) = model.eval_step(&params, &batch).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=yn as f64).contains(&correct), "correct={correct}");
+}
+
+#[test]
+fn batch_shape_mismatch_is_reported() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = PjrtModel::load("artifacts", "mlp", "ref").unwrap();
+    let params = model.init_params();
+    let bad = Batch {
+        x: Features::F32(vec![0.0; 4]),
+        x_shape: vec![2, 2],
+        y: vec![0, 1],
+        y_shape: vec![2],
+    };
+    let err = model.train_step(&params, &bad).unwrap_err();
+    assert!(err.contains("shape"), "{err}");
+}
+
+#[test]
+fn mixer_kernel_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = basegraph::runtime::Manifest::load("artifacts").unwrap();
+    let entry = match manifest.mix.first() {
+        Some(e) => e.clone(),
+        None => return,
+    };
+    let mixer =
+        basegraph::runtime::PjrtMixer::load("artifacts", entry.m, entry.d)
+            .unwrap();
+    let mut rng = Rng::new(11);
+    let neighbors: Vec<f32> =
+        (0..entry.m * entry.d).map(|_| rng.normal() as f32).collect();
+    let weights: Vec<f32> = {
+        let raw: Vec<f64> = (0..entry.m).map(|_| rng.next_f64()).collect();
+        let s: f64 = raw.iter().sum();
+        raw.iter().map(|&w| (w / s) as f32).collect()
+    };
+    let got = mixer.mix(&neighbors, &weights).unwrap();
+    assert_eq!(got.len(), entry.d);
+    // Native reference.
+    for t in (0..entry.d).step_by(entry.d / 7 + 1) {
+        let mut want = 0.0f64;
+        for m in 0..entry.m {
+            want += weights[m] as f64 * neighbors[m * entry.d + t] as f64;
+        }
+        assert!(
+            (got[t] as f64 - want).abs() < 1e-5,
+            "t={t}: {} vs {want}",
+            got[t]
+        );
+    }
+}

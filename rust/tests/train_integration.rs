@@ -1,0 +1,226 @@
+//! Integration: full decentralized training runs across modules —
+//! topology × data partition × optimizer × (native | PJRT) provider.
+
+use std::sync::Arc;
+
+use basegraph::data::partition::dirichlet_partition;
+use basegraph::data::synth::gaussian_mixture;
+use basegraph::optim::OptimizerKind;
+use basegraph::runtime::provider::{GradProvider, SoftmaxRegression};
+use basegraph::runtime::{Batch, Features, PjrtModel};
+use basegraph::topology::TopologyKind;
+use basegraph::train::node_data::{ClassificationShard, NodeData};
+use basegraph::train::{train, TrainConfig};
+use basegraph::util::rng::Rng;
+
+/// A Fig-7-style mini run: n nodes, Dirichlet(α) label skew, small model.
+/// Returns final test accuracy of the node-averaged model.
+fn run_topology(
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    rounds: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let dim = 16;
+    let classes = 8;
+    let train_ds =
+        Arc::new(gaussian_mixture(2000, dim, classes, 1.2, 0.6, &mut rng));
+    let test_ds = gaussian_mixture(512, dim, classes, 1.2, 0.6, &mut rng);
+    // NOTE: test set shares class means only if generated from the same
+    // mixture draw; regenerate with the same rng stream keeps means fixed?
+    // No — gaussian_mixture draws fresh means. Use a held-out split instead.
+    let _ = test_ds;
+    // Held-out split of the one dataset.
+    let n_train = 1600;
+    let part = dirichlet_partition(
+        &train_ds.y[..n_train],
+        n,
+        classes,
+        alpha,
+        &mut rng,
+    );
+    let model = SoftmaxRegression::new(dim, classes, 7);
+    let node_data: Vec<Box<dyn NodeData>> = part
+        .node_indices
+        .iter()
+        .enumerate()
+        .map(|(i, idx)| {
+            Box::new(ClassificationShard::new(
+                train_ds.clone(),
+                idx.clone(),
+                32,
+                seed * 1000 + i as u64,
+            )) as Box<dyn NodeData>
+        })
+        .collect();
+    // Eval batches from the held-out tail.
+    let eval_idx: Vec<usize> = (n_train..train_ds.len()).collect();
+    let eval_batches: Vec<Batch> = eval_idx
+        .chunks(128)
+        .map(|chunk| train_ds.gather(chunk))
+        .collect();
+    let seq = kind.build(n, seed).unwrap();
+    let cfg = TrainConfig {
+        rounds,
+        lr: 0.5,
+        warmup: 5,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 0,
+        threads: 4,
+        ..Default::default()
+    };
+    let res = train(&model, &seq, node_data, &eval_batches, &cfg).unwrap();
+    res.final_acc()
+}
+
+#[test]
+fn heterogeneous_training_learns_on_all_topologies() {
+    for kind in [
+        TopologyKind::Ring,
+        TopologyKind::Base { m: 2 },
+        TopologyKind::Base { m: 4 },
+        TopologyKind::Exp,
+        TopologyKind::OnePeerExp,
+    ] {
+        let acc = run_topology(kind, 15, 0.1, 60, 1);
+        assert!(
+            acc > 0.5,
+            "{}: acc {acc:.3} — should beat chance (1/8) by a wide margin",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn base_graph_at_least_matches_ring_under_heterogeneity() {
+    // Fig. 7b's qualitative claim. Averaged over seeds to tame noise.
+    let mut base_acc = 0.0;
+    let mut ring_acc = 0.0;
+    for seed in [11, 22, 33] {
+        base_acc += run_topology(TopologyKind::Base { m: 2 }, 15, 0.05, 80, seed);
+        ring_acc += run_topology(TopologyKind::Ring, 15, 0.05, 80, seed);
+    }
+    assert!(
+        base_acc >= ring_acc - 0.03,
+        "base-2 {base_acc:.3} should be >= ring {ring_acc:.3} (3-seed sum)"
+    );
+}
+
+#[test]
+fn d2_and_qg_run_under_heterogeneity() {
+    // Fig. 9's methods complete and learn on a finite-time topology.
+    let mut rng = Rng::new(5);
+    let dim = 12;
+    let classes = 6;
+    let ds = Arc::new(gaussian_mixture(1200, dim, classes, 1.5, 0.5, &mut rng));
+    let part = dirichlet_partition(&ds.y[..1000], 10, classes, 0.1, &mut rng);
+    for opt in [
+        OptimizerKind::D2,
+        OptimizerKind::QgDsgdm { momentum: 0.9 },
+    ] {
+        let model = SoftmaxRegression::new(dim, classes, 3);
+        let node_data: Vec<Box<dyn NodeData>> = part
+            .node_indices
+            .iter()
+            .map(|idx| {
+                Box::new(ClassificationShard::new(
+                    ds.clone(),
+                    idx.clone(),
+                    32,
+                    9,
+                )) as Box<dyn NodeData>
+            })
+            .collect();
+        let eval: Vec<Batch> =
+            vec![ds.gather(&(1000..1200).collect::<Vec<_>>())];
+        let seq = TopologyKind::Base { m: 3 }.build(10, 0).unwrap();
+        let cfg = TrainConfig {
+            rounds: 60,
+            lr: 0.3,
+            warmup: 5,
+            cosine: true,
+            optimizer: opt,
+            eval_every: 0,
+            threads: 4,
+            ..Default::default()
+        };
+        let res = train(&model, &seq, node_data, &eval, &cfg).unwrap();
+        assert!(
+            res.final_acc() > 0.5,
+            "{}: acc {:.3}",
+            opt.label(),
+            res.final_acc()
+        );
+    }
+}
+
+#[test]
+fn pjrt_decentralized_training_smoke() {
+    // The production path: decentralized DSGD where every local gradient
+    // goes through the AOT HLO artifact via PJRT. Small but end-to-end.
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = PjrtModel::load("artifacts", "mlp", "ref").unwrap();
+    let n = 4;
+    let spec = model.train_spec().clone();
+    let dim = spec.x_shape[1];
+    let bsz = spec.x_shape[0];
+    let mut rng = Rng::new(13);
+    let ds = Arc::new(gaussian_mixture(960, dim, 10, 1.5, 0.5, &mut rng));
+    let part = dirichlet_partition(&ds.y[..640], n, 10, 0.5, &mut rng);
+    let node_data: Vec<Box<dyn NodeData>> = part
+        .node_indices
+        .iter()
+        .map(|idx| {
+            Box::new(ClassificationShard::new(ds.clone(), idx.clone(), bsz, 3))
+                as Box<dyn NodeData>
+        })
+        .collect();
+    // Eval: one full eval batch (shape must match the eval artifact).
+    let eval_spec = model.eval_spec().clone();
+    let eb = eval_spec.x_shape[0];
+    let eval_idx: Vec<usize> = (640..640 + eb).collect();
+    let mut eval_batch = ds.gather(&eval_idx);
+    assert_eq!(eval_batch.x_shape, eval_spec.x_shape);
+    eval_batch.y_shape = eval_spec.y_shape.clone();
+    let seq = TopologyKind::Base { m: 3 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 12,
+        lr: 0.1,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 6,
+        threads: 2,
+        ..Default::default()
+    };
+    let res = train(&model, &seq, node_data, &[eval_batch], &cfg).unwrap();
+    let first_eval = res
+        .records
+        .iter()
+        .find(|r| !r.test_acc.is_nan())
+        .expect("has eval");
+    let last = res.records.last().unwrap();
+    assert!(last.train_loss.is_finite());
+    assert!(last.train_loss < res.records[0].train_loss, "loss must drop");
+    assert!(first_eval.test_acc >= 0.0 && first_eval.test_acc <= 1.0);
+    assert!(last.cum_bytes > 0);
+}
+
+#[test]
+fn features_dtype_guard() {
+    // Feeding i32 features to an f32 model is a clean error, not UB.
+    let model = SoftmaxRegression::new(4, 2, 0);
+    let bad = Batch {
+        x: Features::I32(vec![0; 8]),
+        x_shape: vec![2, 4],
+        y: vec![0, 1],
+        y_shape: vec![2],
+    };
+    assert!(model.train_step(&model.init_params(), &bad).is_err());
+}
