@@ -15,13 +15,12 @@ fn show_phases(title: &str, seq: &basegraph::topology::GraphSequence) {
         seq.is_finite_time(1e-9)
     );
     for (i, w) in seq.phases.iter().enumerate() {
+        // Undirected constructions: list each edge once via (a < b) on the
+        // sparse neighbor lists — no dense matrix scan.
         let mut edges = Vec::new();
-        for a in 0..w.n {
-            for b in (a + 1)..w.n {
-                let wab = w.get(a, b);
-                if wab.abs() > 1e-12 {
-                    edges.push(format!("({a},{b}; {wab:.3})"));
-                }
+        for (a, b, wab) in w.directed_edges() {
+            if a < b {
+                edges.push(format!("({a},{b}; {wab:.3})"));
             }
         }
         println!("  G^({}) = {{ {} }}", i + 1, edges.join(" "));
@@ -72,7 +71,7 @@ fn main() -> Result<(), String> {
         xs.iter().map(|v| v[0]).collect::<Vec<_>>()
     );
     for (i, w) in b.phases.iter().enumerate() {
-        xs = w.apply(&xs);
+        xs = w.gossip(&xs);
         println!(
             "G^({}): {:?}",
             i + 1,

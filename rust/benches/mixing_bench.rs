@@ -3,11 +3,15 @@
 //! * the trainer's native edge-wise mixing (f64 accumulate),
 //! * a pure-f32 axpy variant (the candidate optimization),
 //! * the AOT Pallas mixing kernel through PJRT (per-call dispatch cost),
+//! * **sparse `GossipPlan` gossip vs the dense n×n matrix apply** at
+//!   n ∈ {256, 1024, 4096} — the gap the sparse topology redesign buys,
 //!
 //! at the parameter dimensions of the shipped artifacts. This is the
 //! "PJRT vs native mixing" ablation in EXPERIMENTS.md §Perf.
 
+use basegraph::consensus::gaussian_init;
 use basegraph::runtime::PjrtMixer;
+use basegraph::topology::TopologyKind;
 use basegraph::util::bench::{black_box, Bencher};
 use basegraph::util::rng::Rng;
 
@@ -66,6 +70,26 @@ fn main() {
                 );
             }
         }
+    }
+    // Sparse GossipPlan vs dense MixingMatrix: one Base-4 gossip phase at
+    // growing n. The sparse path touches O(n·k) entries; the dense apply
+    // scans all n² weights — the speedup is the whole point of making
+    // per-node neighbor schedules the topology currency.
+    println!("\n# sparse plan vs dense matrix gossip (base-4, d=8)");
+    let d = 8usize;
+    for n in [256usize, 1024, 4096] {
+        let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+        let plan = seq.phase(0);
+        let mut rng2 = Rng::new(42);
+        let xs = gaussian_init(n, d, &mut rng2);
+        b.bench(&format!("sparse plan gossip n={n} d={d}"), || {
+            black_box(plan.gossip(&xs));
+        });
+        // Dense comparison matrix built once, outside the timed region.
+        let dense = plan.to_dense();
+        b.bench(&format!("dense matrix apply n={n} d={d}"), || {
+            black_box(dense.apply(&xs));
+        });
     }
     b.dump_jsonl("results/bench_mixing.jsonl");
 }

@@ -6,8 +6,12 @@
 //! turns that into concrete per-round accounting — bytes sent per node,
 //! aggregate bytes, and an α–β (latency–bandwidth) time model so the
 //! accuracy-vs-cost trade-off can be plotted in seconds as well as rounds.
+//!
+//! Accounting reads the sparse [`GossipPlan`] directly: the message count
+//! is the plan's stored entry count (every entry is one directed
+//! `peer → node` payload), O(1) per phase — no dense matrix is scanned.
 
-use crate::topology::{GraphSequence, MixingMatrix};
+use crate::topology::{GossipPlan, GraphSequence};
 
 /// α–β cost model: sending an s-byte message costs `alpha + beta * s`
 /// seconds; a round's cost is the *maximum* over nodes (bulk-synchronous),
@@ -31,13 +35,13 @@ impl Default for CostModel {
 pub struct PhaseComm {
     /// Directed messages sent this phase (each carries a full vector).
     pub messages: usize,
-    /// Maximum per-node out-degree this phase.
+    /// Maximum per-node degree this phase.
     pub max_degree: usize,
 }
 
-/// Per-phase message counts for a sequence.
-pub fn phase_comm(w: &MixingMatrix) -> PhaseComm {
-    PhaseComm { messages: w.edge_count(), max_degree: w.max_degree() }
+/// Per-phase message counts for a plan.
+pub fn phase_comm(plan: &GossipPlan) -> PhaseComm {
+    PhaseComm { messages: plan.messages(), max_degree: plan.max_degree() }
 }
 
 /// Cumulative communication ledger for a training/consensus run.
@@ -54,10 +58,15 @@ pub struct CommLedger {
 }
 
 impl CommLedger {
-    /// Record one gossip round over phase `w` with `d`-dimensional f32
+    /// Record one gossip round over `plan` with `d`-dimensional f32
     /// parameters.
-    pub fn record_round(&mut self, w: &MixingMatrix, d: usize, cost: &CostModel) {
-        let pc = phase_comm(w);
+    pub fn record_round(
+        &mut self,
+        plan: &GossipPlan,
+        d: usize,
+        cost: &CostModel,
+    ) {
+        let pc = phase_comm(plan);
         let payload = (d * 4) as u64;
         self.messages += pc.messages as u64;
         self.bytes += pc.messages as u64 * payload;
@@ -91,10 +100,14 @@ pub struct SequenceCommProfile {
     pub seconds_per_sweep: f64,
 }
 
-pub fn profile(seq: &GraphSequence, d: usize, cost: &CostModel) -> SequenceCommProfile {
+pub fn profile(
+    seq: &GraphSequence,
+    d: usize,
+    cost: &CostModel,
+) -> SequenceCommProfile {
     let mut ledger = CommLedger::default();
-    for w in &seq.phases {
-        ledger.record_round(w, d, cost);
+    for plan in &seq.phases {
+        ledger.record_round(plan, d, cost);
     }
     SequenceCommProfile {
         name: seq.name.clone(),
@@ -109,7 +122,7 @@ pub fn profile(seq: &GraphSequence, d: usize, cost: &CostModel) -> SequenceCommP
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::{baselines, base};
+    use crate::topology::{base, baselines};
 
     #[test]
     fn ring_message_count() {
@@ -175,5 +188,15 @@ mod tests {
         assert!(p.max_degree <= 4);
         assert!(p.messages_per_sweep > 0);
         assert!(p.seconds_per_sweep > 0.0);
+    }
+
+    #[test]
+    fn large_n_profile_is_cheap() {
+        // O(1) message counting from the plan: profiling Base-2 at n=8192
+        // touches no n×n structure.
+        let seq = base::base(8192, 1).unwrap();
+        let p = profile(&seq, 64, &CostModel::default());
+        assert!(p.messages_per_sweep <= seq.len() * 8192);
+        assert_eq!(p.max_degree, 1);
     }
 }

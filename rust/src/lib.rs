@@ -7,9 +7,14 @@
 //! The crate is organized in three layers:
 //!
 //! * **Layer 3 (this crate)** — the decentralized-training coordinator:
-//!   time-varying topology construction (the paper's contribution), mixing /
-//!   gossip engine, decentralized optimizers (DSGD, DSGDm, QG-DSGDm, D²),
-//!   data partitioning (Dirichlet heterogeneity), metrics and the CLI.
+//!   time-varying topology construction (the paper's contribution) as
+//!   sparse per-node [`GossipPlan`]s, the O(edges·d) gossip engine,
+//!   decentralized optimizers (DSGD, DSGDm, QG-DSGDm, D²), data
+//!   partitioning (Dirichlet heterogeneity), metrics and the CLI. Dense
+//!   [`MixingMatrix`] views are derived on demand (`plan.to_dense()`) for
+//!   spectral analysis and verification only — no per-round path holds an
+//!   n×n matrix, which is what lets consensus and training run at n in the
+//!   thousands.
 //! * **Layer 2 (`python/compile/model.py`)** — JAX forward/backward graphs of
 //!   the models being trained, AOT-lowered to HLO text at build time.
 //! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the compute
@@ -29,5 +34,5 @@ pub mod train;
 pub mod topology;
 pub mod util;
 
-pub use topology::{GraphSequence, MixingMatrix, TopologyKind};
+pub use topology::{GossipPlan, GraphSequence, MixingMatrix, TopologyKind};
 pub use util::rng::Rng;

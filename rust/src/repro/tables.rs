@@ -3,11 +3,7 @@
 
 use crate::comm::{profile, CostModel};
 use crate::consensus::paper_consensus_experiment;
-use crate::optim::OptimizerKind;
-use crate::runtime::provider::QuadraticModel;
 use crate::topology::TopologyKind;
-use crate::train::node_data::{FixedBatch, NodeData};
-use crate::train::{train, TrainConfig};
 use crate::util::rng::Rng;
 use crate::util::write_csv;
 
@@ -28,10 +24,10 @@ pub fn table1(n: usize, seed: u64, out_dir: &str) {
             Ok(s) => s,
             Err(_) => continue,
         };
-        // β of the full-sweep operator.
+        // β of the full-sweep operator (dense view: analysis only).
         let beta = seq.product().consensus_rate(300, &mut rng);
         let finite = seq.is_finite_time(1e-9);
-        let symmetric = seq.phases.iter().all(|p| p.is_symmetric(1e-12));
+        let symmetric = seq.all_symmetric(1e-12);
         let p = profile(&seq, 1, &CostModel::default());
         rows.push(vec![
             kind.label(),
@@ -143,8 +139,8 @@ pub fn table2(n: usize, eps: f64, seed: u64, out_dir: &str) {
                         .collect()
                 })
                 .collect();
-            xs = w.apply(&half);
-            msgs += w.edge_count() as u64;
+            xs = w.gossip(&half);
+            msgs += w.messages() as u64;
             // Mean *local* suboptimality (1/n)Σ_i f(x_i) − f*. For the
             // identical-Hessian quadratic this equals the averaged
             // iterate's gap PLUS half the consensus error — the consensus

@@ -1,137 +1,353 @@
 //! The PJRT execution engine: loads the AOT HLO-text artifacts and runs
 //! them from the Rust training path (Python is never invoked here).
 //!
-//! Pipeline per artifact: `HloModuleProto::from_text_file` → wrap as
-//! `XlaComputation` → `PjRtClient::cpu().compile` → `execute` with
-//! `Literal` inputs. Interchange is HLO **text** because the crate's
+//! The real engine depends on the external `xla` crate (PJRT C API
+//! bindings), which is not available in the offline build environment.
+//! It is therefore compiled only behind the **`pjrt` cargo feature**; the
+//! default build ships an API-compatible stub whose `load` fails with a
+//! clear message, so every call site (CLI `--engine pjrt:...`, repro
+//! targets, benches) degrades gracefully to the native engines.
+//!
+//! Pipeline per artifact (feature `pjrt`): `HloModuleProto::from_text_file`
+//! → wrap as `XlaComputation` → `PjRtClient::cpu().compile` → `execute`
+//! with `Literal` inputs. Interchange is HLO **text** because the crate's
 //! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids).
 //!
-//! Thread-safety: the `xla` crate wraps PJRT handles in `Rc`, making them
-//! `!Send`. The underlying PJRT CPU client *is* thread-safe, but to stay
-//! within safe reasoning we serialize every PJRT call behind one `Mutex`
-//! (the CPU backend already parallelizes each execution internally via its
-//! Eigen thread pool, so concurrent dispatch would buy little). The
-//! `unsafe impl Send/Sync` below is sound because (a) all access goes
-//! through the mutex, so `Rc` refcount updates are never concurrent, and
-//! (b) the engine owns the only `Rc` chain and drops it once.
+//! Thread-safety (feature `pjrt`): the `xla` crate wraps PJRT handles in
+//! `Rc`, making them `!Send`. The underlying PJRT CPU client *is*
+//! thread-safe, but to stay within safe reasoning we serialize every PJRT
+//! call behind one `Mutex` (the CPU backend already parallelizes each
+//! execution internally via its Eigen thread pool, so concurrent dispatch
+//! would buy little). The `unsafe impl Send` below is sound because (a)
+//! all access goes through the mutex, so `Rc` refcount updates are never
+//! concurrent, and (b) the engine owns the only `Rc` chain and drops it
+//! once.
 
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod enabled {
+    use std::sync::Mutex;
 
-use super::batch::{Batch, Features};
-use super::manifest::{read_f32_file, Manifest, ModelEntry, StepSpec};
-use super::provider::GradProvider;
-
-struct Executables {
-    client: xla::PjRtClient,
-    train: xla::PjRtLoadedExecutable,
-    eval: xla::PjRtLoadedExecutable,
-}
-
-struct PjrtInner {
-    exes: Executables,
-}
-
-// SAFETY: see module docs — all uses serialized by the Mutex in PjrtModel;
-// the Rc chains are owned exclusively by this structure.
-unsafe impl Send for PjrtInner {}
-
-/// One compiled model (train + eval executables) implementing
-/// [`GradProvider`].
-pub struct PjrtModel {
-    pub entry: ModelEntry,
-    init: Vec<f32>,
-    inner: Mutex<PjrtInner>,
-}
-
-fn compile(
-    client: &xla::PjRtClient,
-    dir: &str,
-    hlo: &str,
-) -> Result<xla::PjRtLoadedExecutable, String> {
-    let path = format!("{dir}/{hlo}");
-    let proto = xla::HloModuleProto::from_text_file(&path)
-        .map_err(|e| format!("parse {path}: {e}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client.compile(&comp).map_err(|e| format!("compile {path}: {e}"))
-}
-
-fn literal_x(
-    spec: &StepSpec,
-    batch: &Batch,
-) -> Result<xla::Literal, String> {
-    let dims: Vec<i64> = batch.x_shape.iter().map(|&d| d as i64).collect();
-    let lit = match (&batch.x, spec.x_dtype.as_str()) {
-        (Features::F32(v), "f32") => xla::Literal::vec1(v.as_slice()),
-        (Features::I32(v), "i32") => xla::Literal::vec1(v.as_slice()),
-        (x, want) => {
-            return Err(format!(
-                "batch x dtype {} does not match artifact {want}",
-                x.dtype_tag()
-            ))
-        }
+    use crate::runtime::batch::{Batch, Features};
+    use crate::runtime::manifest::{
+        read_f32_file, Manifest, ModelEntry, StepSpec,
     };
-    lit.reshape(&dims).map_err(|e| format!("reshape x: {e}"))
-}
+    use crate::runtime::provider::GradProvider;
 
-fn literal_y(batch: &Batch) -> Result<xla::Literal, String> {
-    let dims: Vec<i64> = batch.y_shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(batch.y.as_slice())
-        .reshape(&dims)
-        .map_err(|e| format!("reshape y: {e}"))
-}
-
-fn check_batch(spec: &StepSpec, batch: &Batch) -> Result<(), String> {
-    batch.validate()?;
-    if batch.x_shape != spec.x_shape {
-        return Err(format!(
-            "batch x shape {:?} != artifact {:?} (AOT shapes are static)",
-            batch.x_shape, spec.x_shape
-        ));
+    struct Executables {
+        client: xla::PjRtClient,
+        train: xla::PjRtLoadedExecutable,
+        eval: xla::PjRtLoadedExecutable,
     }
-    if batch.y_shape != spec.y_shape {
-        return Err(format!(
-            "batch y shape {:?} != artifact {:?}",
-            batch.y_shape, spec.y_shape
-        ));
+
+    struct PjrtInner {
+        exes: Executables,
     }
-    Ok(())
+
+    // SAFETY: see module docs — all uses serialized by the Mutex in
+    // PjrtModel; the Rc chains are owned exclusively by this structure.
+    unsafe impl Send for PjrtInner {}
+
+    /// One compiled model (train + eval executables) implementing
+    /// [`GradProvider`].
+    pub struct PjrtModel {
+        pub entry: ModelEntry,
+        init: Vec<f32>,
+        inner: Mutex<PjrtInner>,
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        dir: &str,
+        hlo: &str,
+    ) -> Result<xla::PjRtLoadedExecutable, String> {
+        let path = format!("{dir}/{hlo}");
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parse {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| format!("compile {path}: {e}"))
+    }
+
+    fn literal_x(
+        spec: &StepSpec,
+        batch: &Batch,
+    ) -> Result<xla::Literal, String> {
+        let dims: Vec<i64> =
+            batch.x_shape.iter().map(|&d| d as i64).collect();
+        let lit = match (&batch.x, spec.x_dtype.as_str()) {
+            (Features::F32(v), "f32") => xla::Literal::vec1(v.as_slice()),
+            (Features::I32(v), "i32") => xla::Literal::vec1(v.as_slice()),
+            (x, want) => {
+                return Err(format!(
+                    "batch x dtype {} does not match artifact {want}",
+                    x.dtype_tag()
+                ))
+            }
+        };
+        lit.reshape(&dims).map_err(|e| format!("reshape x: {e}"))
+    }
+
+    fn literal_y(batch: &Batch) -> Result<xla::Literal, String> {
+        let dims: Vec<i64> =
+            batch.y_shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(batch.y.as_slice())
+            .reshape(&dims)
+            .map_err(|e| format!("reshape y: {e}"))
+    }
+
+    fn check_batch(spec: &StepSpec, batch: &Batch) -> Result<(), String> {
+        batch.validate()?;
+        if batch.x_shape != spec.x_shape {
+            return Err(format!(
+                "batch x shape {:?} != artifact {:?} (AOT shapes are static)",
+                batch.x_shape, spec.x_shape
+            ));
+        }
+        if batch.y_shape != spec.y_shape {
+            return Err(format!(
+                "batch y shape {:?} != artifact {:?}",
+                batch.y_shape, spec.y_shape
+            ));
+        }
+        Ok(())
+    }
+
+    fn run_step(
+        exe: &xla::PjRtLoadedExecutable,
+        params: &[f32],
+        spec: &StepSpec,
+        batch: &Batch,
+    ) -> Result<(f32, xla::Literal), String> {
+        check_batch(spec, batch)?;
+        let p_lit = xla::Literal::vec1(params);
+        let x_lit = literal_x(spec, batch)?;
+        let y_lit = literal_y(batch)?;
+        let result = exe
+            .execute::<xla::Literal>(&[p_lit, x_lit, y_lit])
+            .map_err(|e| format!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e}"))?;
+        // aot.py lowers with return_tuple=True: (loss, second).
+        let (loss_lit, second) = result
+            .to_tuple2()
+            .map_err(|e| format!("expected a 2-tuple output: {e}"))?;
+        let loss = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| format!("loss literal: {e}"))?
+            .first()
+            .copied()
+            .ok_or("empty loss literal")?;
+        Ok((loss, second))
+    }
+
+    impl PjrtModel {
+        /// Load + compile one model/variant from the artifacts directory.
+        pub fn load(
+            dir: &str,
+            name: &str,
+            variant: &str,
+        ) -> Result<Self, String> {
+            let manifest = Manifest::load(dir)?;
+            let entry = manifest
+                .model(name, variant)
+                .ok_or_else(|| {
+                    format!(
+                        "model {name}/{variant} not in manifest (have: {:?})",
+                        manifest
+                            .models
+                            .iter()
+                            .map(|m| format!("{}/{}", m.name, m.variant))
+                            .collect::<Vec<_>>()
+                    )
+                })?
+                .clone();
+            let init = read_f32_file(&format!("{dir}/{}", entry.init))?;
+            if init.len() != entry.d_params {
+                return Err(format!(
+                    "init file has {} params, manifest says {}",
+                    init.len(),
+                    entry.d_params
+                ));
+            }
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("pjrt cpu: {e}"))?;
+            let train = compile(&client, dir, &entry.train.hlo)?;
+            let eval = compile(&client, dir, &entry.eval.hlo)?;
+            Ok(PjrtModel {
+                entry,
+                init,
+                inner: Mutex::new(PjrtInner {
+                    exes: Executables { client, train, eval },
+                }),
+            })
+        }
+
+        /// Expected train-batch shape, for the data pipeline.
+        pub fn train_spec(&self) -> &StepSpec {
+            &self.entry.train
+        }
+        pub fn eval_spec(&self) -> &StepSpec {
+            &self.entry.eval
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.inner.lock().unwrap().exes.client.platform_name()
+        }
+    }
+
+    impl GradProvider for PjrtModel {
+        fn name(&self) -> String {
+            format!("pjrt:{}/{}", self.entry.name, self.entry.variant)
+        }
+
+        fn d_params(&self) -> usize {
+            self.entry.d_params
+        }
+
+        fn init_params(&self) -> Vec<f32> {
+            self.init.clone()
+        }
+
+        fn train_step(
+            &self,
+            params: &[f32],
+            batch: &Batch,
+        ) -> Result<(f32, Vec<f32>), String> {
+            if params.len() != self.entry.d_params {
+                return Err(format!(
+                    "params len {} != D {}",
+                    params.len(),
+                    self.entry.d_params
+                ));
+            }
+            let inner = self.inner.lock().unwrap();
+            let (loss, grads_lit) = run_step(
+                &inner.exes.train,
+                params,
+                &self.entry.train,
+                batch,
+            )?;
+            let grads = grads_lit
+                .to_vec::<f32>()
+                .map_err(|e| format!("grads literal: {e}"))?;
+            if grads.len() != self.entry.d_params {
+                return Err(format!(
+                    "artifact returned {} grads, expected {}",
+                    grads.len(),
+                    self.entry.d_params
+                ));
+            }
+            Ok((loss, grads))
+        }
+
+        fn eval_step(
+            &self,
+            params: &[f32],
+            batch: &Batch,
+        ) -> Result<(f32, f64), String> {
+            let inner = self.inner.lock().unwrap();
+            let (loss, correct_lit) = run_step(
+                &inner.exes.eval,
+                params,
+                &self.entry.eval,
+                batch,
+            )?;
+            let correct = correct_lit
+                .to_vec::<f32>()
+                .map_err(|e| format!("correct literal: {e}"))?
+                .first()
+                .copied()
+                .ok_or("empty correct literal")? as f64;
+            Ok((loss, correct))
+        }
+    }
+
+    /// The standalone gossip-mixing executable (the Pallas L1 kernel), for
+    /// the PJRT-vs-native mixing ablation bench.
+    pub struct PjrtMixer {
+        pub m: usize,
+        pub d: usize,
+        inner: Mutex<PjrtInner2>,
+    }
+
+    struct PjrtInner2 {
+        _client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    // SAFETY: same argument as PjrtInner.
+    unsafe impl Send for PjrtInner2 {}
+
+    impl PjrtMixer {
+        pub fn load(dir: &str, m: usize, d: usize) -> Result<Self, String> {
+            let manifest = Manifest::load(dir)?;
+            let entry = manifest
+                .mix_kernel(m, d)
+                .ok_or_else(|| format!("no mix kernel for m={m} d={d}"))?
+                .clone();
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("pjrt cpu: {e}"))?;
+            let exe = compile(&client, dir, &entry.hlo)?;
+            Ok(PjrtMixer {
+                m,
+                d,
+                inner: Mutex::new(PjrtInner2 { _client: client, exe }),
+            })
+        }
+
+        /// out = weights · neighbors, neighbors row-major (m, d).
+        pub fn mix(
+            &self,
+            neighbors: &[f32],
+            weights: &[f32],
+        ) -> Result<Vec<f32>, String> {
+            if neighbors.len() != self.m * self.d || weights.len() != self.m
+            {
+                return Err("mixer: bad input shapes".into());
+            }
+            let nb = xla::Literal::vec1(neighbors)
+                .reshape(&[self.m as i64, self.d as i64])
+                .map_err(|e| format!("reshape neighbors: {e}"))?;
+            let w = xla::Literal::vec1(weights);
+            let inner = self.inner.lock().unwrap();
+            let result = inner
+                .exe
+                .execute::<xla::Literal>(&[nb, w])
+                .map_err(|e| format!("execute mix: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("to_literal: {e}"))?;
+            let out = result
+                .to_tuple1()
+                .map_err(|e| format!("mix output tuple: {e}"))?;
+            out.to_vec::<f32>().map_err(|e| format!("mix literal: {e}"))
+        }
+    }
 }
 
-fn run_step(
-    exe: &xla::PjRtLoadedExecutable,
-    params: &[f32],
-    spec: &StepSpec,
-    batch: &Batch,
-) -> Result<(f32, xla::Literal), String> {
-    check_batch(spec, batch)?;
-    let p_lit = xla::Literal::vec1(params);
-    let x_lit = literal_x(spec, batch)?;
-    let y_lit = literal_y(batch)?;
-    let result = exe
-        .execute::<xla::Literal>(&[p_lit, x_lit, y_lit])
-        .map_err(|e| format!("execute: {e}"))?[0][0]
-        .to_literal_sync()
-        .map_err(|e| format!("to_literal: {e}"))?;
-    // aot.py lowers with return_tuple=True: (loss, second).
-    let (loss_lit, second) = result
-        .to_tuple2()
-        .map_err(|e| format!("expected a 2-tuple output: {e}"))?;
-    let loss = loss_lit
-        .to_vec::<f32>()
-        .map_err(|e| format!("loss literal: {e}"))?
-        .first()
-        .copied()
-        .ok_or("empty loss literal")?;
-    Ok((loss, second))
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::runtime::batch::Batch;
+    use crate::runtime::manifest::{Manifest, ModelEntry, StepSpec};
+    use crate::runtime::provider::GradProvider;
 
-impl PjrtModel {
-    /// Load + compile one model/variant from the artifacts directory.
-    pub fn load(dir: &str, name: &str, variant: &str) -> Result<Self, String> {
-        let manifest = Manifest::load(dir)?;
-        let entry = manifest
-            .model(name, variant)
-            .ok_or_else(|| {
+    const UNAVAILABLE: &str = "PJRT engine not compiled in: rebuild with \
+         `--features pjrt` (requires the vendored `xla` crate); the native \
+         engines (native-mlp, native-linear) work without it";
+
+    /// API-compatible stand-in for the feature-gated PJRT model. `load`
+    /// still validates the manifest (so error reporting matches the real
+    /// engine) but always fails before touching any XLA machinery.
+    pub struct PjrtModel {
+        pub entry: ModelEntry,
+    }
+
+    impl PjrtModel {
+        pub fn load(
+            dir: &str,
+            name: &str,
+            variant: &str,
+        ) -> Result<Self, String> {
+            let manifest = Manifest::load(dir)?;
+            manifest.model(name, variant).ok_or_else(|| {
                 format!(
                     "model {name}/{variant} not in manifest (have: {:?})",
                     manifest
@@ -140,160 +356,80 @@ impl PjrtModel {
                         .map(|m| format!("{}/{}", m.name, m.variant))
                         .collect::<Vec<_>>()
                 )
-            })?
-            .clone();
-        let init = read_f32_file(&format!("{dir}/{}", entry.init))?;
-        if init.len() != entry.d_params {
-            return Err(format!(
-                "init file has {} params, manifest says {}",
-                init.len(),
-                entry.d_params
-            ));
+            })?;
+            Err(UNAVAILABLE.into())
         }
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu: {e}"))?;
-        let train = compile(&client, dir, &entry.train.hlo)?;
-        let eval = compile(&client, dir, &entry.eval.hlo)?;
-        Ok(PjrtModel {
-            entry,
-            init,
-            inner: Mutex::new(PjrtInner {
-                exes: Executables { client, train, eval },
-            }),
-        })
-    }
 
-    /// Expected train-batch shape, for the data pipeline.
-    pub fn train_spec(&self) -> &StepSpec {
-        &self.entry.train
-    }
-    pub fn eval_spec(&self) -> &StepSpec {
-        &self.entry.eval
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.inner.lock().unwrap().exes.client.platform_name()
-    }
-}
-
-impl GradProvider for PjrtModel {
-    fn name(&self) -> String {
-        format!("pjrt:{}/{}", self.entry.name, self.entry.variant)
-    }
-
-    fn d_params(&self) -> usize {
-        self.entry.d_params
-    }
-
-    fn init_params(&self) -> Vec<f32> {
-        self.init.clone()
-    }
-
-    fn train_step(
-        &self,
-        params: &[f32],
-        batch: &Batch,
-    ) -> Result<(f32, Vec<f32>), String> {
-        if params.len() != self.entry.d_params {
-            return Err(format!(
-                "params len {} != D {}",
-                params.len(),
-                self.entry.d_params
-            ));
+        pub fn train_spec(&self) -> &StepSpec {
+            &self.entry.train
         }
-        let inner = self.inner.lock().unwrap();
-        let (loss, grads_lit) =
-            run_step(&inner.exes.train, params, &self.entry.train, batch)?;
-        let grads = grads_lit
-            .to_vec::<f32>()
-            .map_err(|e| format!("grads literal: {e}"))?;
-        if grads.len() != self.entry.d_params {
-            return Err(format!(
-                "artifact returned {} grads, expected {}",
-                grads.len(),
-                self.entry.d_params
-            ));
+        pub fn eval_spec(&self) -> &StepSpec {
+            &self.entry.eval
         }
-        Ok((loss, grads))
-    }
-
-    fn eval_step(
-        &self,
-        params: &[f32],
-        batch: &Batch,
-    ) -> Result<(f32, f64), String> {
-        let inner = self.inner.lock().unwrap();
-        let (loss, correct_lit) =
-            run_step(&inner.exes.eval, params, &self.entry.eval, batch)?;
-        let correct = correct_lit
-            .to_vec::<f32>()
-            .map_err(|e| format!("correct literal: {e}"))?
-            .first()
-            .copied()
-            .ok_or("empty correct literal")? as f64;
-        Ok((loss, correct))
-    }
-}
-
-/// The standalone gossip-mixing executable (the Pallas L1 kernel), for the
-/// PJRT-vs-native mixing ablation bench.
-pub struct PjrtMixer {
-    pub m: usize,
-    pub d: usize,
-    inner: Mutex<PjrtInner2>,
-}
-
-struct PjrtInner2 {
-    _client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-// SAFETY: same argument as PjrtInner.
-unsafe impl Send for PjrtInner2 {}
-
-impl PjrtMixer {
-    pub fn load(dir: &str, m: usize, d: usize) -> Result<Self, String> {
-        let manifest = Manifest::load(dir)?;
-        let entry = manifest
-            .mix_kernel(m, d)
-            .ok_or_else(|| format!("no mix kernel for m={m} d={d}"))?
-            .clone();
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu: {e}"))?;
-        let exe = compile(&client, dir, &entry.hlo)?;
-        Ok(PjrtMixer {
-            m,
-            d,
-            inner: Mutex::new(PjrtInner2 { _client: client, exe }),
-        })
-    }
-
-    /// out = weights · neighbors, neighbors row-major (m, d).
-    pub fn mix(
-        &self,
-        neighbors: &[f32],
-        weights: &[f32],
-    ) -> Result<Vec<f32>, String> {
-        if neighbors.len() != self.m * self.d || weights.len() != self.m {
-            return Err("mixer: bad input shapes".into());
+        pub fn platform_name(&self) -> String {
+            "unavailable (pjrt feature disabled)".into()
         }
-        let nb = xla::Literal::vec1(neighbors)
-            .reshape(&[self.m as i64, self.d as i64])
-            .map_err(|e| format!("reshape neighbors: {e}"))?;
-        let w = xla::Literal::vec1(weights);
-        let inner = self.inner.lock().unwrap();
-        let result = inner
-            .exe
-            .execute::<xla::Literal>(&[nb, w])
-            .map_err(|e| format!("execute mix: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| format!("to_literal: {e}"))?;
-        let out = result
-            .to_tuple1()
-            .map_err(|e| format!("mix output tuple: {e}"))?;
-        out.to_vec::<f32>().map_err(|e| format!("mix literal: {e}"))
+    }
+
+    impl GradProvider for PjrtModel {
+        fn name(&self) -> String {
+            format!("pjrt:{}/{} (stub)", self.entry.name, self.entry.variant)
+        }
+
+        fn d_params(&self) -> usize {
+            self.entry.d_params
+        }
+
+        fn init_params(&self) -> Vec<f32> {
+            vec![0.0; self.entry.d_params]
+        }
+
+        fn train_step(
+            &self,
+            _params: &[f32],
+            _batch: &Batch,
+        ) -> Result<(f32, Vec<f32>), String> {
+            Err(UNAVAILABLE.into())
+        }
+
+        fn eval_step(
+            &self,
+            _params: &[f32],
+            _batch: &Batch,
+        ) -> Result<(f32, f64), String> {
+            Err(UNAVAILABLE.into())
+        }
+    }
+
+    /// Stand-in for the Pallas mixing-kernel executable.
+    pub struct PjrtMixer {
+        pub m: usize,
+        pub d: usize,
+    }
+
+    impl PjrtMixer {
+        pub fn load(dir: &str, m: usize, d: usize) -> Result<Self, String> {
+            let manifest = Manifest::load(dir)?;
+            manifest
+                .mix_kernel(m, d)
+                .ok_or_else(|| format!("no mix kernel for m={m} d={d}"))?;
+            Err(UNAVAILABLE.into())
+        }
+
+        pub fn mix(
+            &self,
+            _neighbors: &[f32],
+            _weights: &[f32],
+        ) -> Result<Vec<f32>, String> {
+            Err(UNAVAILABLE.into())
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use enabled::{PjrtMixer, PjrtModel};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtMixer, PjrtModel};
 
 #[cfg(test)]
 mod tests {

@@ -17,7 +17,6 @@
 //! Line 12: return whichever of A_k^simple(V) and this sequence is shorter.
 
 use super::factorization::smooth_rough_split;
-use super::matrix::MixingMatrix;
 use super::{hyper_hypercube, simple_base, Edge, GraphSequence};
 
 /// Phase edge lists of the Base-(k+1) Graph over node ids 0..n.
@@ -99,18 +98,18 @@ pub fn seq_len(n: usize, k: usize) -> usize {
     simple.min(alt)
 }
 
-/// Build the Base-(k+1) Graph on nodes 0..n as mixing matrices.
+/// Build the Base-(k+1) Graph on nodes 0..n as sparse gossip plans.
 pub fn base(n: usize, k: usize) -> Result<GraphSequence, String> {
     if k == 0 {
         return Err("maximum degree k must be >= 1".into());
     }
     let k_eff = k.min(n.saturating_sub(1)).max(1);
     let phase_edges = phases(n, k_eff);
-    let mats = phase_edges
-        .iter()
-        .map(|edges| MixingMatrix::from_edges(n, edges))
-        .collect();
-    Ok(GraphSequence::new(n, format!("base-{}(n={n})", k + 1), mats))
+    Ok(GraphSequence::from_undirected_phases(
+        n,
+        format!("base-{}(n={n})", k + 1),
+        &phase_edges,
+    ))
 }
 
 #[cfg(test)]

@@ -1,21 +1,22 @@
 //! Static baseline topologies from Table 1: ring, torus, (static)
-//! exponential graph, and the complete graph.
+//! exponential graph, and the complete graph — all built as sparse
+//! [`GossipPlan`]s (O(n·degree) memory, never an n×n matrix).
 
-use super::matrix::MixingMatrix;
+use super::plan::GossipPlan;
 use super::GraphSequence;
 
 /// Ring: node i exchanges with i±1; uniform weight 1/3 (1/2 for n = 2).
 /// Consensus rate 1 − O(n⁻²) — the slow end of Table 1.
 pub fn ring(n: usize) -> GraphSequence {
     let w = match n {
-        1 => MixingMatrix::identity(1),
-        2 => MixingMatrix::from_edges(2, &[(0, 1, 0.5)]),
-        3 => MixingMatrix::average(3), // ring of 3 == complete graph
+        1 => GossipPlan::identity(1),
+        2 => GossipPlan::from_undirected(2, &[(0, 1, 0.5)]),
+        3 => GossipPlan::average(3), // ring of 3 == complete graph
         _ => {
             let edges: Vec<_> = (0..n)
                 .map(|i| (i, (i + 1) % n, 1.0 / 3.0))
                 .collect();
-            MixingMatrix::from_edges(n, &edges)
+            GossipPlan::from_undirected(n, &edges)
         }
     };
     GraphSequence::static_graph(format!("ring(n={n})"), w)
@@ -48,7 +49,7 @@ pub fn torus(n: usize) -> Result<GraphSequence, String> {
         for y in 0..c {
             // Right and down neighbors cover each undirected edge once;
             // wrap-around duplicates (r==2 or c==2) accumulate weight,
-            // which from_edges handles by summing.
+            // which the plan builder handles by summing.
             let right = id(x, (y + 1) % c);
             let down = id((x + 1) % r, y);
             if right != id(x, y) {
@@ -61,7 +62,7 @@ pub fn torus(n: usize) -> Result<GraphSequence, String> {
     }
     Ok(GraphSequence::static_graph(
         format!("torus({r}x{c})"),
-        MixingMatrix::from_edges(n, &edges),
+        GossipPlan::from_undirected(n, &edges),
     ))
 }
 
@@ -73,7 +74,7 @@ pub fn exponential(n: usize) -> GraphSequence {
     if n == 1 {
         return GraphSequence::static_graph(
             "exp(n=1)",
-            MixingMatrix::identity(1),
+            GossipPlan::identity(1),
         );
     }
     let tau = ((n as f64).log2().ceil() as usize).max(1);
@@ -89,7 +90,7 @@ pub fn exponential(n: usize) -> GraphSequence {
     }
     GraphSequence::static_graph(
         format!("exp(n={n})"),
-        MixingMatrix::from_directed_edges(n, &edges),
+        GossipPlan::from_directed(n, &edges),
     )
 }
 
@@ -97,7 +98,7 @@ pub fn exponential(n: usize) -> GraphSequence {
 pub fn complete(n: usize) -> GraphSequence {
     GraphSequence::static_graph(
         format!("complete(n={n})"),
-        MixingMatrix::average(n),
+        GossipPlan::average(n),
     )
 }
 
@@ -119,9 +120,12 @@ mod tests {
     #[test]
     fn ring_consensus_rate_degrades_with_n() {
         let mut rng = Rng::new(0);
-        let b8 = ring(8).phases[0].consensus_rate(300, &mut rng);
-        let b32 = ring(32).phases[0].consensus_rate(300, &mut rng);
-        let b64 = ring(64).phases[0].consensus_rate(300, &mut rng);
+        let mut rate = |n: usize| {
+            ring(n).phases[0].to_dense().consensus_rate(300, &mut rng)
+        };
+        let b8 = rate(8);
+        let b32 = rate(32);
+        let b64 = rate(64);
         assert!(b8 < b32 && b32 < b64, "{b8} {b32} {b64}");
         // beta(n) = (1 + 2cos(2π/n)) / 3 for the 1/3-weight ring.
         let expect =
@@ -137,7 +141,7 @@ mod tests {
         assert!(seq.phases[0].is_symmetric(1e-12));
         // Prime n fails.
         assert!(torus(23).is_err());
-        // Composite non-square works.
+        // Composite non-square works (wrap-around duplicates merge).
         let seq = torus(24).unwrap();
         assert!(seq.all_doubly_stochastic(1e-12));
         assert!(seq.max_degree() <= 4);
@@ -146,8 +150,12 @@ mod tests {
     #[test]
     fn torus_faster_than_ring() {
         let mut rng = Rng::new(1);
-        let bt = torus(36).unwrap().phases[0].consensus_rate(300, &mut rng);
-        let br = ring(36).phases[0].consensus_rate(300, &mut rng);
+        let bt = torus(36)
+            .unwrap()
+            .phases[0]
+            .to_dense()
+            .consensus_rate(300, &mut rng);
+        let br = ring(36).phases[0].to_dense().consensus_rate(300, &mut rng);
         assert!(bt < br, "torus {bt} vs ring {br}");
     }
 
@@ -166,9 +174,14 @@ mod tests {
     #[test]
     fn exponential_faster_than_torus_and_ring() {
         let mut rng = Rng::new(2);
-        let be = exponential(64).phases[0].consensus_rate(300, &mut rng);
-        let bt = torus(64).unwrap().phases[0].consensus_rate(300, &mut rng);
-        let br = ring(64).phases[0].consensus_rate(300, &mut rng);
+        let be =
+            exponential(64).phases[0].to_dense().consensus_rate(300, &mut rng);
+        let bt = torus(64)
+            .unwrap()
+            .phases[0]
+            .to_dense()
+            .consensus_rate(300, &mut rng);
+        let br = ring(64).phases[0].to_dense().consensus_rate(300, &mut rng);
         assert!(be < bt && bt < br, "exp {be} torus {bt} ring {br}");
     }
 
@@ -177,5 +190,13 @@ mod tests {
         let seq = complete(9);
         assert!(seq.is_finite_time(1e-12));
         assert_eq!(seq.max_degree(), 8);
+    }
+
+    #[test]
+    fn baselines_stay_sparse() {
+        // The whole point of the redesign: a big ring costs O(n) entries.
+        let seq = ring(10_000);
+        assert_eq!(seq.phases[0].messages(), 20_000);
+        assert_eq!(seq.max_degree(), 2);
     }
 }

@@ -16,7 +16,7 @@
 //! The randomized sequences are generated with a fixed period so the rest
 //! of the library can treat them like any other `GraphSequence`.
 
-use super::matrix::MixingMatrix;
+use super::plan::GossipPlan;
 use super::GraphSequence;
 use crate::util::rng::Rng;
 
@@ -35,7 +35,7 @@ pub fn d_equidyn(n: usize, rng: &mut Rng) -> GraphSequence {
                 edges.push((i, (i + a) % n, 0.5));
             }
         }
-        phases.push(MixingMatrix::from_directed_edges(n, &edges));
+        phases.push(GossipPlan::from_directed(n, &edges));
     }
     GraphSequence::new(n, format!("d-equidyn(n={n})"), phases)
 }
@@ -52,12 +52,12 @@ pub fn u_equidyn(n: usize, rng: &mut Rng) -> GraphSequence {
                 edges.push((*a, *b, 0.5));
             }
         }
-        phases.push(MixingMatrix::from_edges(n, &edges));
+        phases.push(GossipPlan::from_undirected(n, &edges));
     }
     GraphSequence::new(n, format!("u-equidyn(n={n})"), phases)
 }
 
-/// D-EquiStatic with degree M: one static directed matrix built from M
+/// D-EquiStatic with degree M: one static directed plan built from M
 /// distinct random shifts.
 pub fn d_equistatic(
     n: usize,
@@ -67,7 +67,7 @@ pub fn d_equistatic(
     if n < 2 {
         return Ok(GraphSequence::static_graph(
             format!("d-equistatic-{degree}(n={n})"),
-            MixingMatrix::identity(n.max(1)),
+            GossipPlan::identity(n.max(1)),
         ));
     }
     if degree == 0 || degree > n - 1 {
@@ -85,7 +85,7 @@ pub fn d_equistatic(
     }
     Ok(GraphSequence::static_graph(
         format!("d-equistatic-{degree}(n={n})"),
-        MixingMatrix::from_directed_edges(n, &edges),
+        GossipPlan::from_directed(n, &edges),
     ))
 }
 
@@ -99,7 +99,7 @@ pub fn u_equistatic(
     if n < 2 {
         return Ok(GraphSequence::static_graph(
             format!("u-equistatic-{degree}(n={n})"),
-            MixingMatrix::identity(n.max(1)),
+            GossipPlan::identity(n.max(1)),
         ));
     }
     if degree == 0 || degree > n - 1 {
@@ -109,27 +109,22 @@ pub fn u_equistatic(
     }
     let shifts = pick_distinct_shifts(n, degree.div_ceil(2), rng);
     let w = 1.0 / (2 * shifts.len() + 1) as f64;
-    let mut m = MixingMatrix::zeros(n);
+    // Each shift a contributes the symmetric pair i ↔ i+a with weight w;
+    // listing the undirected edge (i, i+a) once per i covers both
+    // directions (a self-inverse shift 2a ≡ 0 mod n doubles up, exactly as
+    // the symmetrized matrix construction does).
+    let mut edges = Vec::new();
     for &a in &shifts {
         for i in 0..n {
-            // Symmetric pair of shifts: i -> i+a and i -> i-a.
-            m.add(i, (i + a) % n, w);
-            m.add(i, (i + n - a % n) % n, w);
+            let j = (i + a) % n;
+            if j != i {
+                edges.push((i, j, w));
+            }
         }
-    }
-    for i in 0..n {
-        let off: f64 = (0..n).filter(|&j| j != i).map(|j| m.get(i, j)).sum();
-        let diag = m.get(i, i);
-        m.set(i, i, diag + 1.0 - off - diag);
-    }
-    // Renormalize diagonal: rows must sum to 1 exactly.
-    for i in 0..n {
-        let off: f64 = (0..n).filter(|&j| j != i).map(|j| m.get(i, j)).sum();
-        m.set(i, i, 1.0 - off);
     }
     Ok(GraphSequence::static_graph(
         format!("u-equistatic-{degree}(n={n})"),
-        m,
+        GossipPlan::from_undirected(n, &edges),
     ))
 }
 
@@ -155,9 +150,7 @@ mod tests {
             assert!(u.all_doubly_stochastic(1e-9), "u n={n}");
             assert_eq!(d.max_degree(), 1, "n={n}");
             assert!(u.max_degree() <= 1, "n={n}");
-            for p in &u.phases {
-                assert!(p.is_symmetric(1e-12));
-            }
+            assert!(u.all_symmetric(1e-12));
         }
     }
 
@@ -180,7 +173,11 @@ mod tests {
             assert_eq!(d.max_degree(), deg, "deg={deg}");
             assert!(d.all_doubly_stochastic(1e-9));
             let u = u_equistatic(25, deg, &mut rng).unwrap();
-            assert!(u.max_degree() <= deg + 1, "deg={deg} got {}", u.max_degree());
+            assert!(
+                u.max_degree() <= deg + 1,
+                "deg={deg} got {}",
+                u.max_degree()
+            );
             assert!(u.all_doubly_stochastic(1e-9));
             assert!(u.phases[0].is_symmetric(1e-12));
         }
@@ -194,10 +191,12 @@ mod tests {
         let b1 = d_equistatic(64, 1, &mut rng)
             .unwrap()
             .phases[0]
+            .to_dense()
             .consensus_rate(300, &mut rng);
         let b6 = d_equistatic(64, 6, &mut rng)
             .unwrap()
             .phases[0]
+            .to_dense()
             .consensus_rate(300, &mut rng);
         assert!(b6 < b1, "deg 6 ({b6}) should beat deg 1 ({b1})");
     }
@@ -207,7 +206,7 @@ mod tests {
         let a = u_equidyn(10, &mut Rng::new(7));
         let b = u_equidyn(10, &mut Rng::new(7));
         for (pa, pb) in a.phases.iter().zip(&b.phases) {
-            assert!(pa.max_abs_diff(pb) < 1e-15);
+            assert_eq!(pa, pb);
         }
     }
 }

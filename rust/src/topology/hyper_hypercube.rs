@@ -12,7 +12,6 @@
 //! group averages it exactly (weights 1/n_l plus the implicit self-loop).
 
 use super::factorization::min_factorization;
-use super::matrix::MixingMatrix;
 use super::{Edge, GraphSequence};
 
 /// Phase edge lists of H_k over an arbitrary node-id set (used as a
@@ -61,7 +60,8 @@ pub fn seq_len(n: usize, k: usize) -> Option<usize> {
     min_factorization(n, k).map(|f| f.len())
 }
 
-/// Build the k-peer Hyper-Hypercube Graph on nodes 0..n as mixing matrices.
+/// Build the k-peer Hyper-Hypercube Graph on nodes 0..n as sparse gossip
+/// plans.
 pub fn hyper_hypercube(n: usize, k: usize) -> Result<GraphSequence, String> {
     let nodes: Vec<usize> = (0..n).collect();
     let phases = phases_over(&nodes, k).ok_or_else(|| {
@@ -71,11 +71,11 @@ pub fn hyper_hypercube(n: usize, k: usize) -> Result<GraphSequence, String> {
             k + 1
         )
     })?;
-    let mats = phases
-        .iter()
-        .map(|edges| MixingMatrix::from_edges(n, edges))
-        .collect();
-    Ok(GraphSequence::new(n, format!("hh-{k}(n={n})"), mats))
+    Ok(GraphSequence::from_undirected_phases(
+        n,
+        format!("hh-{k}(n={n})"),
+        &phases,
+    ))
 }
 
 #[cfg(test)]
@@ -165,6 +165,13 @@ mod tests {
                     "n={n} k={k} phase {i} not symmetric"
                 );
             }
+            // Sparse plan and dense view must agree on the degree bound.
+            for p in &seq.phases {
+                prop_assert!(
+                    p.max_degree() == p.to_dense().max_degree(),
+                    "n={n} k={k}: sparse/dense degree mismatch"
+                );
+            }
             prop_assert!(
                 seq.is_finite_time(1e-9),
                 "n={n} k={k}: not finite-time"
@@ -194,14 +201,14 @@ mod tests {
                 assert!(nodes.contains(&a) && nodes.contains(&b));
             }
         }
-        // Build a 12-node matrix (ids up to 11) and check the sub-consensus:
+        // Build a 12-node plan (ids up to 11) and check the sub-consensus:
         // after the sweep every node in `nodes` holds the average of
         // `nodes`' initial values.
         let mut xs: Vec<Vec<f64>> =
             (0..12).map(|i| vec![i as f64]).collect();
         for phase in &phases {
-            let w = MixingMatrix::from_edges(12, phase);
-            xs = w.apply(&xs);
+            let w = super::super::GossipPlan::from_undirected(12, phase);
+            xs = w.gossip(&xs);
         }
         let avg: f64 =
             nodes.iter().map(|&i| i as f64).sum::<f64>() / nodes.len() as f64;

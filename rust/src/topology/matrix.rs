@@ -1,11 +1,13 @@
-//! Dense mixing matrices and the gossip-matrix algebra used throughout the
-//! paper: doubly-stochastic validation, consensus-rate estimation, sequence
-//! products, and the `X W` application the consensus simulator runs.
+//! Dense mixing matrices — the **verification backend** of the topology
+//! layer: doubly-stochastic validation, consensus-rate (spectral β)
+//! estimation, sequence products, and entry-wise dumps.
 //!
-//! Node counts in the paper's experiments are small (n ≤ a few hundred), so
-//! a dense row-major `Vec<f64>` is both the fastest and the simplest
-//! representation; the *training* path never materializes these matrices —
-//! it gossips along edge lists (see `comm`).
+//! Since the sparse redesign, no per-round path builds one of these:
+//! topologies are [`GossipPlan`](super::GossipPlan)s (per-node neighbor
+//! lists), and a `MixingMatrix` is only materialized on demand via
+//! [`GossipPlan::to_dense`](super::GossipPlan::to_dense) for analysis at
+//! small n. The O(n²) memory and O(n²·d) apply cost are acceptable there
+//! and nowhere else.
 
 use crate::util::rng::Rng;
 

@@ -1,4 +1,4 @@
-//! Network topologies for decentralized learning.
+//! Network topologies for decentralized learning, in sparse per-node form.
 //!
 //! The paper's contribution lives here: the k-peer Hyper-Hypercube Graph
 //! (Alg. 1), the Simple Base-(k+1) Graph (Alg. 2) and the Base-(k+1) Graph
@@ -6,44 +6,92 @@
 //! O(log_{k+1} n) rounds for any n and any maximum degree k** — plus every
 //! comparator evaluated in the paper (ring, torus, exponential, 1-peer
 //! exponential, 1-peer hypercube, EquiTopo family, complete graph).
+//!
+//! # Representation: `GossipPlan`, not matrices
+//!
+//! Every builder produces a [`GraphSequence`] of sparse [`GossipPlan`]
+//! phases: per-node `(peer, weight)` neighbor lists plus a self-weight.
+//! That is the paper's own cost language (maximum degree k ≪ n), and it is
+//! what lets consensus and training scale to n in the thousands — one
+//! gossip round is O(edges · d), and nothing on a per-round path allocates
+//! an n×n matrix.
+//!
+//! **Migration note.** Dense [`MixingMatrix`] values are now *derived,
+//! on-demand views*: call [`GossipPlan::to_dense`] (or
+//! [`GraphSequence::product`], which multiplies the dense views) when you
+//! need spectral analysis (consensus rate β), matrix products, or an
+//! entry-wise dump. Code that used to hold `seq.phases[i]` as a matrix
+//! should either use the sparse accessors (`neighbors`, `self_weight`,
+//! `gossip`, `max_degree`, `messages`, `is_doubly_stochastic`,
+//! `is_symmetric`) or explicitly opt into `to_dense()` in
+//! analysis/verification context.
+//!
+//! ```
+//! use basegraph::topology::TopologyKind;
+//!
+//! // Base-4 Graph on 22 nodes: max degree 3, exact consensus in one sweep.
+//! let seq = TopologyKind::Base { m: 4 }.build(22, 0).unwrap();
+//! assert!(seq.max_degree() <= 3);
+//! assert!(seq.is_finite_time(1e-9)); // verification: uses dense views
+//!
+//! // The per-round path stays sparse:
+//! let xs: Vec<Vec<f64>> = (0..22).map(|i| vec![i as f64]).collect();
+//! let mixed = seq.phase(0).gossip(&xs); // O(edges · d)
+//! assert_eq!(mixed.len(), 22);
+//! ```
 
-pub mod baselines;
 pub mod base;
+pub mod baselines;
 pub mod equitopo;
 pub mod factorization;
 pub mod hyper_hypercube;
 pub mod matrix;
 pub mod one_peer;
+pub mod plan;
 pub mod simple_base;
 
 pub use matrix::MixingMatrix;
+pub use plan::GossipPlan;
 
 use crate::util::rng::Rng;
 
 /// An undirected weighted edge within one phase (self-loops implicit).
 pub type Edge = (usize, usize, f64);
 
-/// A (possibly time-varying) topology: the sequence of per-phase mixing
-/// matrices `W^(1), ..., W^(m)`; round r uses phase `r mod m` (Eq. 1).
+/// A (possibly time-varying) topology: the sequence of per-phase gossip
+/// plans `W^(1), ..., W^(m)`; round r uses phase `r mod m` (Eq. 1).
 #[derive(Debug, Clone)]
 pub struct GraphSequence {
     pub n: usize,
     pub name: String,
-    pub phases: Vec<MixingMatrix>,
+    pub phases: Vec<GossipPlan>,
 }
 
 impl GraphSequence {
-    pub fn new(n: usize, name: impl Into<String>, phases: Vec<MixingMatrix>) -> Self {
+    pub fn new(n: usize, name: impl Into<String>, phases: Vec<GossipPlan>) -> Self {
         let name = name.into();
         for (i, p) in phases.iter().enumerate() {
-            debug_assert_eq!(p.n, n, "{name}: phase {i} has wrong n");
+            debug_assert_eq!(p.n(), n, "{name}: phase {i} has wrong n");
         }
         GraphSequence { n, name, phases }
     }
 
-    /// Static topology: a single repeated matrix.
-    pub fn static_graph(name: impl Into<String>, w: MixingMatrix) -> Self {
-        GraphSequence { n: w.n, name: name.into(), phases: vec![w] }
+    /// Static topology: a single repeated plan.
+    pub fn static_graph(name: impl Into<String>, w: GossipPlan) -> Self {
+        GraphSequence { n: w.n(), name: name.into(), phases: vec![w] }
+    }
+
+    /// Build a sequence from per-phase *undirected* edge lists.
+    pub fn from_undirected_phases(
+        n: usize,
+        name: impl Into<String>,
+        phase_edges: &[Vec<Edge>],
+    ) -> Self {
+        let phases = phase_edges
+            .iter()
+            .map(|edges| GossipPlan::from_undirected(n, edges))
+            .collect();
+        GraphSequence::new(n, name, phases)
     }
 
     /// Sequence length m (1 for static graphs).
@@ -55,8 +103,8 @@ impl GraphSequence {
         self.phases.is_empty()
     }
 
-    /// The mixing matrix used at round r (cycling).
-    pub fn phase(&self, r: usize) -> &MixingMatrix {
+    /// The gossip plan used at round r (cycling).
+    pub fn phase(&self, r: usize) -> &GossipPlan {
         &self.phases[r % self.phases.len().max(1)]
     }
 
@@ -66,24 +114,31 @@ impl GraphSequence {
         self.phases.iter().map(|p| p.max_degree()).max().unwrap_or(0)
     }
 
-    /// Product W^(1) W^(2) ··· W^(m) (the one-sweep mixing operator).
+    /// Product W^(1) W^(2) ··· W^(m) (the one-sweep mixing operator), as a
+    /// dense matrix. Analysis/verification only — O(n³) in the worst case.
     pub fn product(&self) -> MixingMatrix {
         let mut acc = MixingMatrix::identity(self.n);
         for w in &self.phases {
-            acc = acc.matmul(w);
+            acc = acc.matmul(&w.to_dense());
         }
         acc
     }
 
     /// Finite-time convergence check (Definition 2): does one full sweep
-    /// equal the exact averaging operator J/n?
+    /// equal the exact averaging operator J/n? Verification only (dense).
     pub fn is_finite_time(&self, tol: f64) -> bool {
         self.product().max_abs_diff(&MixingMatrix::average(self.n)) <= tol
     }
 
     /// Every phase must be doubly stochastic for DSGD-style methods.
+    /// Checked sparsely in O(total edges).
     pub fn all_doubly_stochastic(&self, tol: f64) -> bool {
         self.phases.iter().all(|p| p.is_doubly_stochastic(tol))
+    }
+
+    /// Every phase symmetric (undirected topology), checked sparsely.
+    pub fn all_symmetric(&self, tol: f64) -> bool {
+        self.phases.iter().all(|p| p.is_symmetric(tol))
     }
 }
 
@@ -123,7 +178,7 @@ impl TopologyKind {
     /// Parse a CLI topology name: `ring`, `torus`, `exp`, `onepeer-exp`,
     /// `onepeer-hypercube`, `hh-<k>`, `simple-base-<m>`, `base-<m>`,
     /// `u-equidyn`, `d-equidyn`, `u-equistatic-<deg>`, `d-equistatic-<deg>`,
-    /// `complete`.
+    /// `complete`. Inverse of [`TopologyKind::to_cli_name`].
     pub fn parse(s: &str) -> Result<TopologyKind, String> {
         let s = s.trim().to_lowercase();
         let k = |rest: &str, what: &str| -> Result<usize, String> {
@@ -167,6 +222,30 @@ impl TopologyKind {
         })
     }
 
+    /// The canonical CLI name; `parse(kind.to_cli_name()) == kind` for
+    /// every kind.
+    pub fn to_cli_name(&self) -> String {
+        match self {
+            TopologyKind::Ring => "ring".into(),
+            TopologyKind::Torus => "torus".into(),
+            TopologyKind::Exp => "exp".into(),
+            TopologyKind::OnePeerExp => "onepeer-exp".into(),
+            TopologyKind::OnePeerHypercube => "onepeer-hypercube".into(),
+            TopologyKind::HyperHypercube { k } => format!("hh-{k}"),
+            TopologyKind::SimpleBase { m } => format!("simple-base-{m}"),
+            TopologyKind::Base { m } => format!("base-{m}"),
+            TopologyKind::UEquiDyn => "u-equidyn".into(),
+            TopologyKind::DEquiDyn => "d-equidyn".into(),
+            TopologyKind::UEquiStatic { degree } => {
+                format!("u-equistatic-{degree}")
+            }
+            TopologyKind::DEquiStatic { degree } => {
+                format!("d-equistatic-{degree}")
+            }
+            TopologyKind::Complete => "complete".into(),
+        }
+    }
+
     /// Human-readable name matching the paper's figures.
     pub fn label(&self) -> String {
         match self {
@@ -190,6 +269,31 @@ impl TopologyKind {
             }
             TopologyKind::Complete => "Complete".into(),
         }
+    }
+
+    /// Is every phase of this topology symmetric (undirected) by
+    /// construction?
+    pub fn is_undirected(&self) -> bool {
+        !matches!(
+            self,
+            TopologyKind::Exp
+                | TopologyKind::OnePeerExp
+                | TopologyKind::DEquiDyn
+                | TopologyKind::DEquiStatic { .. }
+        )
+    }
+
+    /// Does the paper guarantee finite-time convergence (Definition 2) for
+    /// this kind at every n where it builds?
+    pub fn is_finite_time_family(&self) -> bool {
+        matches!(
+            self,
+            TopologyKind::HyperHypercube { .. }
+                | TopologyKind::SimpleBase { .. }
+                | TopologyKind::Base { .. }
+                | TopologyKind::OnePeerHypercube
+                | TopologyKind::Complete
+        )
     }
 
     /// Build the graph sequence for `n` nodes. `seed` only matters for the
@@ -229,9 +333,43 @@ impl TopologyKind {
     }
 }
 
+/// The full catalog of buildable kinds, with representative parameters for
+/// the parameterized families — what `basegraph list` enumerates. Some
+/// entries fail to build at a particular n (torus needs composite n,
+/// hh-k needs (k+1)-smooth n, onepeer-hypercube needs a power of two);
+/// `build` reports why.
+pub fn catalog() -> Vec<TopologyKind> {
+    let mut v = vec![
+        TopologyKind::Ring,
+        TopologyKind::Torus,
+        TopologyKind::Exp,
+        TopologyKind::OnePeerExp,
+        TopologyKind::OnePeerHypercube,
+    ];
+    for k in 1..=4 {
+        v.push(TopologyKind::HyperHypercube { k });
+    }
+    for m in 2..=5 {
+        v.push(TopologyKind::SimpleBase { m });
+        v.push(TopologyKind::Base { m });
+    }
+    v.extend([
+        TopologyKind::UEquiDyn,
+        TopologyKind::DEquiDyn,
+        TopologyKind::UEquiStatic { degree: 2 },
+        TopologyKind::UEquiStatic { degree: 4 },
+        TopologyKind::DEquiStatic { degree: 2 },
+        TopologyKind::DEquiStatic { degree: 4 },
+        TopologyKind::Complete,
+    ]);
+    v
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
 
     #[test]
     fn parse_roundtrip() {
@@ -256,24 +394,133 @@ mod tests {
     }
 
     #[test]
+    fn cli_name_round_trips_for_every_kind() {
+        for kind in catalog() {
+            let name = kind.to_cli_name();
+            assert_eq!(
+                TopologyKind::parse(&name).unwrap(),
+                kind,
+                "round-trip failed for {name}"
+            );
+        }
+        // Parameterized values beyond the catalog defaults round-trip too.
+        for kind in [
+            TopologyKind::HyperHypercube { k: 7 },
+            TopologyKind::SimpleBase { m: 9 },
+            TopologyKind::Base { m: 12 },
+            TopologyKind::UEquiStatic { degree: 11 },
+            TopologyKind::DEquiStatic { degree: 3 },
+        ] {
+            assert_eq!(
+                TopologyKind::parse(&kind.to_cli_name()).unwrap(),
+                kind
+            );
+        }
+    }
+
+    #[test]
     fn sequence_helpers() {
         let seq = GraphSequence::new(
             2,
             "pair",
-            vec![MixingMatrix::from_edges(2, &[(0, 1, 0.5)])],
+            vec![GossipPlan::from_undirected(2, &[(0, 1, 0.5)])],
         );
         assert_eq!(seq.len(), 1);
         assert_eq!(seq.max_degree(), 1);
         assert!(seq.is_finite_time(1e-12));
         assert!(seq.all_doubly_stochastic(1e-12));
         // Cycling.
-        assert_eq!(seq.phase(0).n, 2);
-        assert_eq!(seq.phase(7).n, 2);
+        assert_eq!(seq.phase(0).n(), 2);
+        assert_eq!(seq.phase(7).n(), 2);
     }
 
     #[test]
     fn identity_sequence_is_not_finite_time() {
-        let seq = GraphSequence::new(3, "id", vec![MixingMatrix::identity(3)]);
+        let seq = GraphSequence::new(3, "id", vec![GossipPlan::identity(3)]);
         assert!(!seq.is_finite_time(1e-9));
+    }
+
+    /// Satellite property suite: for every catalog kind at several n, the
+    /// sparse plan's dense view is doubly stochastic, symmetric where the
+    /// kind claims undirectedness, and finite-time for the Base /
+    /// Simple-Base / Hyper-Hypercube families (Definition 2).
+    #[test]
+    fn catalog_plans_validate_against_dense_views() {
+        for n in [4usize, 6, 12, 16, 25] {
+            for kind in catalog() {
+                let seq = match kind.build(n, 7) {
+                    Ok(s) => s,
+                    Err(_) => continue, // unbuildable at this n: fine
+                };
+                for (i, p) in seq.phases.iter().enumerate() {
+                    let ctx = format!("{} n={n} phase {i}", kind.label());
+                    assert!(
+                        p.is_doubly_stochastic(1e-9),
+                        "{ctx}: sparse check not doubly stochastic"
+                    );
+                    let dense = p.to_dense();
+                    assert!(
+                        dense.is_doubly_stochastic(1e-9),
+                        "{ctx}: dense view not doubly stochastic"
+                    );
+                    assert_eq!(
+                        p.is_symmetric(1e-12),
+                        dense.is_symmetric(1e-12),
+                        "{ctx}: symmetry checks disagree"
+                    );
+                    assert_eq!(
+                        p.max_degree(),
+                        dense.max_degree(),
+                        "{ctx}: degree mismatch"
+                    );
+                    assert_eq!(
+                        p.messages(),
+                        dense.edge_count(),
+                        "{ctx}: message count mismatch"
+                    );
+                    if kind.is_undirected() {
+                        assert!(p.is_symmetric(1e-9), "{ctx}: asymmetric");
+                    }
+                }
+                if kind.is_finite_time_family() {
+                    assert!(
+                        seq.is_finite_time(1e-8),
+                        "{} n={n}: not finite-time",
+                        kind.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_sparse_gossip_matches_dense_apply() {
+        prop::check("plan-gossip-vs-dense", 32, |rng| {
+            let kinds = catalog();
+            let kind = kinds[rng.below(kinds.len())];
+            let n = rng.range(2, 40);
+            let seq = match kind.build(n, rng.next_u64()) {
+                Ok(s) => s,
+                Err(_) => return Ok(()),
+            };
+            let d = rng.range(1, 4);
+            let xs: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect();
+            for (i, p) in seq.phases.iter().enumerate() {
+                let sparse = p.gossip(&xs);
+                let dense = p.to_dense().apply(&xs);
+                for (a, b) in sparse.iter().zip(&dense) {
+                    for (x, y) in a.iter().zip(b) {
+                        prop_assert!(
+                            (x - y).abs() < 1e-9,
+                            "{} n={n} phase {i}: {x} vs {y}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -3,7 +3,7 @@
 //! Both are finite-time convergent **only when n is a power of two** —
 //! the limitation the Base-(k+1) Graph removes.
 
-use super::matrix::MixingMatrix;
+use super::plan::GossipPlan;
 use super::GraphSequence;
 
 /// 1-peer exponential graph: at phase t (period τ = ⌈log₂ n⌉), node i
@@ -13,7 +13,7 @@ pub fn one_peer_exp(n: usize) -> GraphSequence {
     if n == 1 {
         return GraphSequence::static_graph(
             "onepeer-exp(n=1)",
-            MixingMatrix::identity(1),
+            GossipPlan::identity(1),
         );
     }
     let tau = ((n as f64).log2().ceil() as usize).max(1);
@@ -26,7 +26,7 @@ pub fn one_peer_exp(n: usize) -> GraphSequence {
                 edges.push((i, (i + off) % n, 0.5));
             }
         }
-        phases.push(MixingMatrix::from_directed_edges(n, &edges));
+        phases.push(GossipPlan::from_directed(n, &edges));
     }
     GraphSequence::new(n, format!("onepeer-exp(n={n})"), phases)
 }
@@ -38,7 +38,7 @@ pub fn one_peer_hypercube(n: usize) -> Result<GraphSequence, String> {
     if n == 1 {
         return Ok(GraphSequence::static_graph(
             "onepeer-hypercube(n=1)",
-            MixingMatrix::identity(1),
+            GossipPlan::identity(1),
         ));
     }
     if !n.is_power_of_two() {
@@ -57,7 +57,7 @@ pub fn one_peer_hypercube(n: usize) -> Result<GraphSequence, String> {
                 edges.push((i, j, 0.5));
             }
         }
-        phases.push(MixingMatrix::from_edges(n, &edges));
+        phases.push(GossipPlan::from_undirected(n, &edges));
     }
     Ok(GraphSequence::new(n, format!("onepeer-hypercube(n={n})"), phases))
 }

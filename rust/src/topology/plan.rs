@@ -1,0 +1,400 @@
+//! The sparse gossip schedule — the topology currency of this crate.
+//!
+//! A [`GossipPlan`] stores one phase of a (possibly time-varying) topology
+//! as per-node neighbor lists in CSR form: for node `i`, the `(peer,
+//! weight)` pairs it mixes in plus its self-weight. This is the language
+//! the paper speaks — communication cost is *per-node neighbor exchanges*
+//! (maximum degree k ≪ n), so applying a phase is O(edges · d) work and
+//! O(edges) memory instead of the O(n²) a dense mixing matrix costs.
+//!
+//! Dense [`MixingMatrix`](super::MixingMatrix) views still exist — via
+//! [`GossipPlan::to_dense`] — but only as *derived* artifacts for spectral
+//! analysis (consensus-rate β) and property verification. No per-round
+//! path in `consensus`, `train`, or `comm` materializes them.
+//!
+//! # Example
+//!
+//! ```
+//! use basegraph::topology::GossipPlan;
+//!
+//! // A single pair exchange with weight 1/2: both nodes average exactly.
+//! let plan = GossipPlan::from_undirected(2, &[(0, 1, 0.5)]);
+//! let out = plan.gossip(&[vec![0.0], vec![4.0]]);
+//! assert_eq!(out[0][0], 2.0);
+//! assert_eq!(out[1][0], 2.0);
+//! assert!(plan.is_doubly_stochastic(1e-12));
+//! assert_eq!(plan.max_degree(), 1);
+//! ```
+
+use super::matrix::MixingMatrix;
+use super::Edge;
+
+/// One gossip phase in sparse CSR form: per-node `(peer, weight)` neighbor
+/// lists plus a self-weight, with rows sorted by peer id.
+///
+/// Invariants maintained by the constructors:
+/// * every stored weight is nonzero and every peer is `< n`, `!= self`;
+/// * duplicate `(node, peer)` contributions are merged by summation;
+/// * `self_weight(i) + Σ neighbor weights of i == 1` exactly as computed
+///   (rows are stochastic by construction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GossipPlan {
+    n: usize,
+    /// CSR row offsets, length n + 1.
+    offsets: Vec<usize>,
+    /// Concatenated `(peer, weight)` entries, row-major, sorted by peer
+    /// within each row.
+    entries: Vec<(usize, f64)>,
+    /// Per-node self-weight (the implicit diagonal).
+    self_w: Vec<f64>,
+}
+
+impl GossipPlan {
+    /// The do-nothing phase: every node keeps its own value.
+    pub fn identity(n: usize) -> Self {
+        GossipPlan {
+            n,
+            offsets: vec![0; n + 1],
+            entries: Vec::new(),
+            self_w: vec![1.0; n],
+        }
+    }
+
+    /// Exact averaging (the complete graph / consensus projector J/n).
+    /// Inherently dense — n·(n−1) entries — so only sensible for the
+    /// `complete` baseline and verification at small n.
+    pub fn average(n: usize) -> Self {
+        let w = 1.0 / n as f64;
+        let mut entries = Vec::with_capacity(n.saturating_sub(1) * n);
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        for i in 0..n {
+            for j in 0..n {
+                if j != i {
+                    entries.push((j, w));
+                }
+            }
+            offsets.push(entries.len());
+        }
+        GossipPlan { n, offsets, entries, self_w: vec![w; n] }
+    }
+
+    /// Build from an undirected weighted edge list. Each edge `(a, b, w)`
+    /// makes `a` mix in `b` with weight `w` and vice versa; duplicate
+    /// edges accumulate; self-weights are filled so each row sums to 1
+    /// (the doubly-stochastic completion the paper leaves implicit).
+    pub fn from_undirected(n: usize, edges: &[Edge]) -> Self {
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for &(a, b, w) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a},{b}) n={n}");
+            rows[a].push((b, w));
+            rows[b].push((a, w));
+        }
+        Self::from_rows(n, rows)
+    }
+
+    /// Build from a *directed* weighted edge list: `(src, dst, w)` means
+    /// `dst` mixes in `src`'s parameters with weight `w` (one directed
+    /// message src → dst). Diagonal filled so rows sum to 1.
+    pub fn from_directed(n: usize, edges: &[Edge]) -> Self {
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for &(src, dst, w) in edges {
+            assert!(src < n && dst < n && src != dst, "bad edge ({src},{dst})");
+            rows[dst].push((src, w));
+        }
+        Self::from_rows(n, rows)
+    }
+
+    /// Finish construction from per-node in-neighbor lists: sort rows by
+    /// peer, merge duplicates, drop exact zeros, fill self-weights.
+    fn from_rows(n: usize, rows: Vec<Vec<(usize, f64)>>) -> Self {
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut entries = Vec::new();
+        let mut self_w = Vec::with_capacity(n);
+        offsets.push(0);
+        for mut row in rows {
+            row.sort_unstable_by_key(|&(j, _)| j);
+            let mut off_sum = 0.0;
+            let mut merged: Option<(usize, f64)> = None;
+            for (j, w) in row {
+                match merged {
+                    Some((pj, pw)) if pj == j => merged = Some((pj, pw + w)),
+                    Some((pj, pw)) => {
+                        if pw != 0.0 {
+                            entries.push((pj, pw));
+                            off_sum += pw;
+                        }
+                        merged = Some((j, w));
+                    }
+                    None => merged = Some((j, w)),
+                }
+            }
+            if let Some((pj, pw)) = merged {
+                if pw != 0.0 {
+                    entries.push((pj, pw));
+                    off_sum += pw;
+                }
+            }
+            offsets.push(entries.len());
+            self_w.push(1.0 - off_sum);
+        }
+        GossipPlan { n, offsets, entries, self_w }
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Node `i`'s in-neighbor list: the `(peer, weight)` pairs it applies,
+    /// sorted by peer id.
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[(usize, f64)] {
+        &self.entries[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Node `i`'s self-weight (the diagonal entry of the dense view).
+    #[inline]
+    pub fn self_weight(&self, i: usize) -> f64 {
+        self.self_w[i]
+    }
+
+    /// Node `i`'s degree: how many neighbors it exchanges with this phase.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Did node `i` gossip with anyone this phase?
+    #[inline]
+    pub fn is_active(&self, i: usize) -> bool {
+        self.degree(i) > 0
+    }
+
+    /// Maximum per-node degree — the paper's communication-cost proxy
+    /// (Table 1).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// Total directed messages this phase moves (each stored entry is one
+    /// `peer → node` payload). O(1): the real send count, no matrix scan.
+    #[inline]
+    pub fn messages(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Iterate all directed `(dst, src, weight)` triples of the phase.
+    pub fn directed_edges(
+        &self,
+    ) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.n).flat_map(move |i| {
+            self.neighbors(i).iter().map(move |&(j, w)| (i, j, w))
+        })
+    }
+
+    /// One gossip application: `out[i] = self_w[i]·x[i] + Σ_(j,w) w·x[j]`,
+    /// O(edges · d) — the sparse replacement for the dense `X ← W X`.
+    pub fn gossip(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        assert_eq!(xs.len(), self.n, "state size != plan n");
+        let d = xs.first().map(|x| x.len()).unwrap_or(0);
+        let mut out = vec![vec![0.0; d]; self.n];
+        for (i, oi) in out.iter_mut().enumerate() {
+            self.gossip_row(i, xs, oi);
+        }
+        out
+    }
+
+    /// Compute node `i`'s post-gossip value into `out` (len d), reading
+    /// neighbor values from `xs` — the per-row building block behind
+    /// [`GossipPlan::gossip`], exposed for callers with their own scratch
+    /// buffers.
+    pub fn gossip_row(&self, i: usize, xs: &[Vec<f64>], out: &mut [f64]) {
+        let sw = self.self_w[i];
+        let xi = &xs[i];
+        for (o, &x) in out.iter_mut().zip(xi) {
+            *o = sw * x;
+        }
+        for &(j, w) in self.neighbors(i) {
+            let xj = &xs[j];
+            for (o, &x) in out.iter_mut().zip(xj) {
+                *o += w * x;
+            }
+        }
+    }
+
+    /// Sparse symmetry check: every `(i → j, w)` entry has a matching
+    /// `(j → i, w)` within `tol`. Rows are peer-sorted, so each lookup is
+    /// a binary search.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            for &(j, w) in self.neighbors(i) {
+                let row_j = self.neighbors(j);
+                match row_j.binary_search_by_key(&i, |&(p, _)| p) {
+                    Ok(idx) if (row_j[idx].1 - w).abs() <= tol => {}
+                    _ => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Doubly stochastic: rows and columns sum to 1, entries in [0, 1].
+    /// O(edges), no dense view.
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        let in_range = |v: f64| (-tol..=1.0 + tol).contains(&v);
+        let mut col_sums = self.self_w.clone();
+        for i in 0..self.n {
+            if !in_range(self.self_w[i]) {
+                return false;
+            }
+            let mut row_sum = self.self_w[i];
+            for &(j, w) in self.neighbors(i) {
+                if !in_range(w) {
+                    return false;
+                }
+                row_sum += w;
+                col_sums[j] += w;
+            }
+            if (row_sum - 1.0).abs() > tol {
+                return false;
+            }
+        }
+        col_sums.iter().all(|&c| (c - 1.0).abs() <= tol)
+    }
+
+    /// Derived dense view for spectral analysis and verification — the
+    /// *only* way a dense `MixingMatrix` is produced from a topology since
+    /// the sparse redesign. Allocates O(n²); keep off per-round paths.
+    pub fn to_dense(&self) -> MixingMatrix {
+        let mut m = MixingMatrix::zeros(self.n);
+        for i in 0..self.n {
+            m.set(i, i, self.self_w[i]);
+            for &(j, w) in self.neighbors(i) {
+                m.set(i, j, w);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_and_average() {
+        let id = GossipPlan::identity(5);
+        assert_eq!(id.max_degree(), 0);
+        assert_eq!(id.messages(), 0);
+        assert!(id.is_doubly_stochastic(1e-12));
+        assert!(id.is_symmetric(1e-12));
+        let avg = GossipPlan::average(4);
+        assert_eq!(avg.max_degree(), 3);
+        assert_eq!(avg.messages(), 12);
+        assert!(avg.is_doubly_stochastic(1e-12));
+        let out = avg.gossip(&[vec![1.0], vec![2.0], vec![3.0], vec![6.0]]);
+        for row in &out {
+            assert!((row[0] - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn undirected_pair_fills_self_weight() {
+        let p = GossipPlan::from_undirected(2, &[(0, 1, 0.5)]);
+        assert_eq!(p.self_weight(0), 0.5);
+        assert_eq!(p.neighbors(0), &[(1, 0.5)]);
+        assert_eq!(p.neighbors(1), &[(0, 0.5)]);
+        assert!(p.is_symmetric(1e-15));
+        assert!(p.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    fn duplicate_edges_merge() {
+        // Torus wrap-around style duplicate: (0,1) listed twice sums.
+        let p = GossipPlan::from_undirected(3, &[(0, 1, 0.2), (0, 1, 0.3)]);
+        assert_eq!(p.neighbors(0), &[(1, 0.5)]);
+        assert_eq!(p.degree(0), 1);
+        assert_eq!(p.messages(), 2);
+        assert!((p.self_weight(0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn directed_cycle_is_stochastic_not_symmetric() {
+        let p = GossipPlan::from_directed(
+            3,
+            &[(0, 1, 0.5), (1, 2, 0.5), (2, 0, 0.5)],
+        );
+        assert!(p.is_doubly_stochastic(1e-12));
+        assert!(!p.is_symmetric(1e-12));
+        assert_eq!(p.max_degree(), 1);
+        assert_eq!(p.messages(), 3);
+        // Row 1 mixes in node 0 (the src of edge 0→1).
+        assert_eq!(p.neighbors(1), &[(0, 0.5)]);
+    }
+
+    #[test]
+    fn gossip_matches_dense_apply() {
+        let edges = [(0usize, 1usize, 0.3), (2, 3, 0.4), (3, 4, 0.2)];
+        let p = GossipPlan::from_undirected(5, &edges);
+        let dense = p.to_dense();
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|i| vec![i as f64, (i * i) as f64 - 2.0])
+            .collect();
+        let sparse_out = p.gossip(&xs);
+        let dense_out = dense.apply(&xs);
+        for (a, b) in sparse_out.iter().zip(&dense_out) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_view_round_trips_properties() {
+        let p = GossipPlan::from_undirected(
+            4,
+            &[(0, 1, 1.0 / 3.0), (1, 2, 1.0 / 3.0), (2, 3, 1.0 / 3.0),
+              (3, 0, 1.0 / 3.0)],
+        );
+        let d = p.to_dense();
+        assert_eq!(d.max_degree(), p.max_degree());
+        assert_eq!(d.edge_count(), p.messages());
+        assert_eq!(d.is_symmetric(1e-12), p.is_symmetric(1e-12));
+        assert_eq!(
+            d.is_doubly_stochastic(1e-12),
+            p.is_doubly_stochastic(1e-12)
+        );
+    }
+
+    #[test]
+    fn gossip_preserves_mean() {
+        let p = GossipPlan::from_directed(
+            4,
+            &[(0, 1, 0.25), (1, 2, 0.25), (2, 3, 0.25), (3, 0, 0.25)],
+        );
+        let xs: Vec<Vec<f64>> =
+            (0..4).map(|i| vec![(i * 7 % 5) as f64]).collect();
+        let before: f64 = xs.iter().map(|x| x[0]).sum();
+        let out = p.gossip(&xs);
+        let after: f64 = out.iter().map(|x| x[0]).sum();
+        assert!((before - after).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_phase_is_identity() {
+        let p = GossipPlan::from_undirected(3, &[]);
+        let xs = vec![vec![1.0], vec![2.0], vec![3.0]];
+        assert_eq!(p.gossip(&xs), xs);
+        assert!(!p.is_active(0));
+    }
+
+    #[test]
+    fn directed_edges_iterator_counts_messages() {
+        let p = GossipPlan::from_undirected(3, &[(0, 1, 0.5), (1, 2, 0.25)]);
+        let listed: Vec<_> = p.directed_edges().collect();
+        assert_eq!(listed.len(), p.messages());
+        assert!(listed.contains(&(0, 1, 0.5)));
+        assert!(listed.contains(&(2, 1, 0.25)));
+    }
+}

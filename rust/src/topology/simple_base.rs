@@ -24,7 +24,6 @@
 
 use super::factorization::{base_digits, is_smooth};
 use super::hyper_hypercube;
-use super::matrix::MixingMatrix;
 use super::{Edge, GraphSequence};
 
 /// Phase edge lists over an arbitrary node-id set (component form, used by
@@ -204,14 +203,10 @@ pub fn simple_base(n: usize, k: usize) -> Result<GraphSequence, String> {
     }
     let nodes: Vec<usize> = (0..n).collect();
     let phases = phases_over(&nodes, k);
-    let mats = phases
-        .iter()
-        .map(|edges| MixingMatrix::from_edges(n, edges))
-        .collect();
-    Ok(GraphSequence::new(
+    Ok(GraphSequence::from_undirected_phases(
         n,
         format!("simple-base-{}(n={n})", k + 1),
-        mats,
+        &phases,
     ))
 }
 
@@ -230,15 +225,9 @@ mod tests {
         assert!(seq.all_doubly_stochastic(1e-9));
         assert!(seq.is_finite_time(1e-9));
         // The exchange phase (G^(3)) carries the 4/5 weight of Fig. 3.
-        let w3 = &seq.phases[2];
-        let mut found_45 = false;
-        for i in 0..5 {
-            for j in 0..5 {
-                if i != j && (w3.get(i, j) - 0.8).abs() < 1e-12 {
-                    found_45 = true;
-                }
-            }
-        }
+        let found_45 = seq.phases[2]
+            .directed_edges()
+            .any(|(_, _, w)| (w - 0.8).abs() < 1e-12);
         assert!(found_45, "expected a 4/5-weight edge in phase 3");
     }
 
@@ -249,15 +238,9 @@ mod tests {
         assert_eq!(seq.len(), 4);
         assert!(seq.max_degree() <= 2);
         assert!(seq.is_finite_time(1e-9));
-        let w3 = &seq.phases[2];
-        let mut found = false;
-        for i in 0..7 {
-            for j in 0..7 {
-                if i != j && (w3.get(i, j) - 3.0 / 7.0).abs() < 1e-12 {
-                    found = true;
-                }
-            }
-        }
+        let found = seq.phases[2]
+            .directed_edges()
+            .any(|(_, _, w)| (w - 3.0 / 7.0).abs() < 1e-12);
         assert!(found, "expected a 3/7-weight edge in the exchange phase");
     }
 

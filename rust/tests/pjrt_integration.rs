@@ -8,7 +8,11 @@ use basegraph::runtime::{Batch, Features, GradProvider, PjrtModel};
 use basegraph::util::rng::Rng;
 
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    // The real engine only exists behind the `pjrt` feature; the default
+    // build ships a stub whose `load` always errors, so these tests must
+    // skip (not fail) even when artifacts have been built.
+    cfg!(feature = "pjrt")
+        && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 fn mlp_batch(spec: &basegraph::runtime::manifest::StepSpec, seed: u64) -> Batch {
