@@ -1,0 +1,48 @@
+//! Event-engine throughput: simulated consensus sweeps under ideal and
+//! hostile networks, bulk-synchronous and asynchronous. Each run processes
+//! roughly `n · (1 + degree) · iters` heap events, so these numbers are
+//! the events/second budget available to future scale PRs (sharded
+//! multi-process runs plug into the same drivers).
+
+use basegraph::consensus::gaussian_init;
+use basegraph::simnet::{sim_consensus, ExecMode, Scenario};
+use basegraph::topology::TopologyKind;
+use basegraph::util::bench::{black_box, Bencher};
+use basegraph::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("# simnet event engine (base-2, one sweep per iteration)");
+    for n in [256usize, 1024] {
+        let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+        let mut rng = Rng::new(0);
+        let init = gaussian_init(n, 1, &mut rng);
+        let iters = 2 * seq.len();
+        for sc in [Scenario::Ideal, Scenario::Hostile] {
+            for mode in [ExecMode::BulkSynchronous, ExecMode::Async] {
+                let mut cfg = sc.config(0);
+                cfg.mode = mode;
+                b.bench(
+                    &format!(
+                        "sim_consensus base-2 n={n} {} {} ({iters} it)",
+                        sc.label(),
+                        mode.label()
+                    ),
+                    || {
+                        black_box(sim_consensus(&seq, &init, iters, &cfg));
+                    },
+                );
+            }
+        }
+    }
+    println!("\n# high-dimensional payloads (d = 4096)");
+    let n = 64usize;
+    let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(1);
+    let init = gaussian_init(n, 4096, &mut rng);
+    let cfg = Scenario::Lan.config(0);
+    b.bench(&format!("sim_consensus base-4 n={n} d=4096 lan"), || {
+        black_box(sim_consensus(&seq, &init, seq.len(), &cfg));
+    });
+    b.dump_jsonl("results/bench_simnet.jsonl");
+}

@@ -77,6 +77,30 @@ impl CommLedger {
         self.rounds += 1;
     }
 
+    /// Record `count` directed message sends of `d`-dimensional f32
+    /// payloads *without* advancing the analytic clock — the event-driven
+    /// simnet drivers count real sends one by one and own the clock
+    /// themselves (see [`CommLedger::advance_clock_to`]).
+    pub fn record_sends(&mut self, count: usize, d: usize) {
+        let payload = (d * 4) as u64;
+        self.messages += count as u64;
+        self.bytes += count as u64 * payload;
+    }
+
+    /// Advance the simulated clock to an event-driven timestamp. Monotone:
+    /// never moves the clock backwards.
+    pub fn advance_clock_to(&mut self, t: f64) {
+        if t > self.sim_seconds {
+            self.sim_seconds = t;
+        }
+    }
+
+    /// Count one completed round (event-driven drivers call this at each
+    /// phase barrier / global round completion).
+    pub fn bump_round(&mut self) {
+        self.rounds += 1;
+    }
+
     /// Average bytes per node per round.
     pub fn bytes_per_node_round(&self, n: usize) -> f64 {
         if self.rounds == 0 || n == 0 {
@@ -166,6 +190,53 @@ mod tests {
         assert!(ledger.sim_seconds > 0.0);
         // 640 kB over 10 rounds × 8 nodes = 8 kB per node-round.
         assert!((ledger.bytes_per_node_round(8) - 8_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_beta_round_cost_is_degree_serialized_max() {
+        // The analytic contract the simnet engine generalizes: one
+        // bulk-synchronous round costs exactly max-degree sends of
+        // `alpha + beta·payload` seconds each — the busiest node
+        // serializes its sends, everyone else overlaps under the max.
+        let cost = CostModel { alpha: 3e-3, beta: 2e-9 };
+        let d = 1_000usize;
+        let payload = (d * 4) as f64;
+        // Ring: every node has degree 2.
+        let ring = baselines::ring(8);
+        let mut ledger = CommLedger::default();
+        ledger.record_round(&ring.phases[0], d, &cost);
+        assert_eq!(
+            ledger.sim_seconds,
+            2.0 * (cost.alpha + cost.beta * payload)
+        );
+        // Exp graph at n=32: max degree 5, so 5 serialized sends.
+        let exp = baselines::exponential(32);
+        let mut ledger = CommLedger::default();
+        ledger.record_round(&exp.phases[0], d, &cost);
+        assert_eq!(
+            ledger.sim_seconds,
+            5.0 * (cost.alpha + cost.beta * payload)
+        );
+        // Two rounds accumulate linearly.
+        ledger.record_round(&exp.phases[0], d, &cost);
+        assert_eq!(
+            ledger.sim_seconds,
+            5.0 * (cost.alpha + cost.beta * payload) * 2.0
+        );
+    }
+
+    #[test]
+    fn event_driven_ledger_methods() {
+        let mut ledger = CommLedger::default();
+        ledger.record_sends(3, 100); // 3 payloads of 400 bytes
+        assert_eq!(ledger.messages, 3);
+        assert_eq!(ledger.bytes, 1200);
+        assert_eq!(ledger.sim_seconds, 0.0); // sends don't move the clock
+        ledger.advance_clock_to(1.5);
+        ledger.advance_clock_to(0.5); // monotone: no going back
+        assert_eq!(ledger.sim_seconds, 1.5);
+        ledger.bump_round();
+        assert_eq!(ledger.rounds, 1);
     }
 
     #[test]

@@ -102,6 +102,22 @@ pub fn paper_consensus_experiment(
     simulate(seq, &init, iters)
 }
 
+/// Event-driven counterpart of [`paper_consensus_experiment`]: same
+/// Gaussian scalar init, but gossip unfolds on the simulated network in
+/// `sim` (stragglers, heterogeneous/lossy links, async execution) and the
+/// returned trace carries event-clock timestamps next to the
+/// per-iteration errors — measured, not derived, time-to-consensus.
+pub fn simnet_consensus_experiment(
+    seq: &GraphSequence,
+    iters: usize,
+    seed: u64,
+    sim: &crate::simnet::SimConfig,
+) -> crate::simnet::SimTrace {
+    let mut rng = Rng::new(seed);
+    let init = gaussian_init(seq.n, 1, &mut rng);
+    crate::simnet::sim_consensus(seq, &init, iters, sim)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,7 +8,9 @@
 //!
 //! * **Layer 3 (this crate)** — the decentralized-training coordinator:
 //!   time-varying topology construction (the paper's contribution) as
-//!   sparse per-node [`GossipPlan`]s, the O(edges·d) gossip engine,
+//!   sparse per-node [`GossipPlan`]s, the O(edges·d) gossip engine, the
+//!   [`simnet`] discrete-event network simulator (stragglers, lossy and
+//!   heterogeneous links, asynchronous gossip — measured time-to-accuracy),
 //!   decentralized optimizers (DSGD, DSGDm, QG-DSGDm, D²), data
 //!   partitioning (Dirichlet heterogeneity), metrics and the CLI. Dense
 //!   [`MixingMatrix`] views are derived on demand (`plan.to_dense()`) for
@@ -30,9 +32,11 @@ pub mod metrics;
 pub mod optim;
 pub mod repro;
 pub mod runtime;
+pub mod simnet;
 pub mod train;
 pub mod topology;
 pub mod util;
 
+pub use simnet::SimConfig;
 pub use topology::{GossipPlan, GraphSequence, MixingMatrix, TopologyKind};
 pub use util::rng::Rng;

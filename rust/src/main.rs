@@ -2,20 +2,24 @@
 //!
 //! Subcommands:
 //!   topology   inspect/validate a topology (length, degree, finite-time, β)
-//!   list       print every buildable topology with its max degree at some n
+//!   list       print every buildable topology with degree + consensus horizon
 //!   consensus  run the Sec. 6.1 consensus experiment and dump CSV
 //!   train      run one decentralized training job (native or PJRT engine)
+//!   simnet     race topologies on a simulated network (stragglers, drops)
 //!   repro      regenerate a paper table/figure (see DESIGN.md index)
 //!   info       show the artifacts manifest and runtime status
 //!
 //! Run `basegraph <cmd> --help` for per-command flags.
 
+use basegraph::comm::CostModel;
 use basegraph::consensus;
 use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
-    classification_workload, print_table, run_training, Engine,
+    classification_workload, print_table, run_sim_training,
+    run_training_with_cost, Engine,
 };
+use basegraph::simnet::{ExecMode, Scenario};
 use basegraph::topology::{self, TopologyKind};
 use basegraph::util::cli::Args;
 use basegraph::util::rng::Rng;
@@ -30,7 +34,16 @@ USAGE:
   basegraph train     --topo <name> --n <n> [--alpha A] [--rounds R]
                       [--lr LR] [--optimizer dsgd|dsgdm|qg-dsgdm|d2|gt]
                       [--engine native-mlp|native-linear|pjrt:mlp:ref]
+                      [--net-alpha SEC] [--net-beta SEC_PER_BYTE]
                       [--out results]
+  basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
+                      [--mode bsp|async] [--workload consensus|train]
+                      [--topos a,b,c] [--n N] [--seed S] [--out results]
+                      [--alpha SEC] [--beta SEC_PER_BYTE] [--drop-rate P]
+                      [--straggler-factor F]
+                      consensus: [--iters I] [--tol T]
+                      train:     [--rounds R] [--lr LR] [--optimizer O]
+                                 [--engine E] [--dirichlet A] [--target-acc T]
   basegraph repro     --exp <id> [--fast] [--engine E] [--n N] [--ns a,b]
                       [--rounds R] [--seed S] [--out results]
   basegraph info      [--artifacts DIR]
@@ -39,7 +52,10 @@ Topology names: ring, torus, exp, onepeer-exp, onepeer-hypercube, complete,
   base-<m>, simple-base-<m>, hh-<k>, u-equidyn, d-equidyn,
   u-equistatic-<deg>, d-equistatic-<deg>  (`basegraph list` enumerates them).
 Experiments: table1 table2 fig5 fig6 fig7 fig8 fig9 fig21 fig22 fig23
-  fig25 fig26 frontier all";
+  fig25 fig26 frontier simnet all
+Notes: in `simnet`, --alpha/--beta are the per-link α–β cost overrides and
+  --dirichlet is the data-heterogeneity knob; in `train`, --alpha keeps its
+  historical Dirichlet meaning and --net-alpha/--net-beta set the α–β cost.";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -64,6 +80,7 @@ fn main() {
         "list" => cmd_list(&args),
         "consensus" => cmd_consensus(&args),
         "train" => cmd_train(&args),
+        "simnet" => cmd_simnet(&args),
         "repro" => repro::run(&args),
         "info" => cmd_info(&args),
         other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
@@ -123,8 +140,11 @@ fn cmd_topology(args: &Args) -> Result<(), String> {
 }
 
 /// `basegraph list`: every buildable topology at `--n`, with its CLI name,
-/// phase count, max degree and per-sweep message count — or the reason it
-/// cannot be built at that n.
+/// phase count, max degree, per-sweep message count and finite-time
+/// consensus horizon (iterations of gossip to numerically exact consensus,
+/// measured — `>cap` when the topology only converges geometrically) — or
+/// the reason it cannot be built at that n. Enough to pick simnet scenario
+/// rosters without reading source.
 fn cmd_list(args: &Args) -> Result<(), String> {
     let n = args.usize_or("n", 25)?;
     let seed = args.u64_or("seed", 0)?;
@@ -134,17 +154,28 @@ fn cmd_list(args: &Args) -> Result<(), String> {
             Ok(seq) => {
                 let msgs: usize =
                     seq.phases.iter().map(|p| p.messages()).sum();
+                let horizon = if n <= 2048 {
+                    let cap = (4 * seq.len()).clamp(16, 200);
+                    consensus::paper_consensus_experiment(&seq, cap, seed)
+                        .iters_to_reach(1e-18)
+                        .map(|i| i.to_string())
+                        .unwrap_or_else(|| format!(">{cap}"))
+                } else {
+                    "skipped (n>2048)".into()
+                };
                 vec![
                     kind.to_cli_name(),
                     kind.label(),
                     seq.len().to_string(),
                     seq.max_degree().to_string(),
+                    horizon,
                     msgs.to_string(),
                 ]
             }
             Err(e) => vec![
                 kind.to_cli_name(),
                 kind.label(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 format!("unavailable: {e}"),
@@ -154,7 +185,14 @@ fn cmd_list(args: &Args) -> Result<(), String> {
     }
     print_table(
         &format!("topologies at n={n}"),
-        &["cli name", "label", "phases", "max deg", "msgs/sweep"],
+        &[
+            "cli name",
+            "label",
+            "phases",
+            "max deg",
+            "consensus horizon",
+            "msgs/sweep",
+        ],
         &rows,
     );
     Ok(())
@@ -222,6 +260,12 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         OptimizerKind::parse(&args.str_or("optimizer", "dsgdm"), momentum)?;
     let engine = Engine::parse(&args.str_or("engine", "native-mlp"))?;
     let out_dir = args.str_or("out", "results");
+    // α–β communication cost model, previously hard-coded defaults.
+    let default_cost = CostModel::default();
+    let cost = CostModel {
+        alpha: args.f64_or("net-alpha", default_cost.alpha)?,
+        beta: args.f64_or("net-beta", default_cost.beta)?,
+    };
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let workload = classification_workload(&engine, seed)?;
@@ -232,8 +276,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         rounds,
         optimizer.label()
     );
-    let res =
-        run_training(&workload, kind, n, alpha, optimizer, rounds, lr, seed)?;
+    let res = run_training_with_cost(
+        &workload, kind, n, alpha, optimizer, rounds, lr, seed, &cost,
+    )?;
     let path = format!(
         "{out_dir}/train_{}_n{n}.csv",
         args.str_or("topo", "base-2")
@@ -259,6 +304,227 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         &evals,
     );
     Ok(())
+}
+
+/// `basegraph simnet`: race topologies on the simulated network — scenario
+/// preset + knob overrides, bulk-synchronous or asynchronous execution,
+/// consensus or training workload.
+fn cmd_simnet(args: &Args) -> Result<(), String> {
+    let n = args.usize_or("n", 25)?;
+    let seed = args.u64_or("seed", 42)?;
+    let scenario = Scenario::parse(&args.str_or("scenario", "lan"))?;
+    let mode = ExecMode::parse(&args.str_or("mode", "bsp"))?;
+    let out_dir = args.str_or("out", "results");
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+
+    let mut sim = scenario.config(seed);
+    sim.mode = mode;
+    // Knob overrides layered over the scenario preset.
+    let opt_f64 = |key: &str| -> Result<Option<f64>, String> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<f64>().map(Some).map_err(|_| {
+                format!("--{key}: expected number, got {v:?}")
+            }),
+        }
+    };
+    let alpha = opt_f64("alpha")?;
+    let beta = opt_f64("beta")?;
+    for (name, v) in [("alpha", alpha), ("beta", beta)] {
+        if let Some(v) = v {
+            if v < 0.0 {
+                return Err(format!("--{name} must be >= 0, got {v}"));
+            }
+        }
+    }
+    sim.links.override_cost(alpha, beta);
+    if let Some(p) = opt_f64("drop-rate")? {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("--drop-rate must be in [0,1], got {p}"));
+        }
+        sim.drop_rate = p;
+    }
+    if let Some(f) = opt_f64("straggler-factor")? {
+        if f <= 0.0 {
+            return Err(format!(
+                "--straggler-factor must be > 0, got {f}"
+            ));
+        }
+        sim.compute.straggler_factor = f;
+        // Make the flag effective even from presets without stragglers.
+        if f != 1.0 && sim.compute.straggler_frac == 0.0 {
+            sim.compute.straggler_frac = 0.125;
+        }
+        if f != 1.0 && sim.compute.mean_seconds == 0.0 {
+            sim.compute.mean_seconds = 5e-3;
+        }
+    }
+    let topos = args.str_list_or(
+        "topos",
+        &["ring", "exp", "onepeer-exp", "base-2", "base-4"],
+    );
+
+    match args.str_or("workload", "consensus").as_str() {
+        "consensus" => {
+            let iters = args.usize_or("iters", 80)?;
+            let tol = args.f64_or("tol", 1e-9)?;
+            let mut rows = Vec::new();
+            let mut csv = Vec::new();
+            for t in &topos {
+                let kind = TopologyKind::parse(t)?;
+                let seq = kind.build(n, seed)?;
+                let tr = consensus::simnet_consensus_experiment(
+                    &seq, iters, seed, &sim,
+                );
+                rows.push(vec![
+                    kind.label(),
+                    seq.max_degree().to_string(),
+                    tr.time_to_reach(tol)
+                        .map(|s| format!("{s:.4}"))
+                        .unwrap_or_else(|| "never".into()),
+                    tr.iters_to_reach(tol)
+                        .map(|i| i.to_string())
+                        .unwrap_or_else(|| "never".into()),
+                    format!("{:.2e}", tr.final_error()),
+                    format!("{:.4}", tr.sim_seconds()),
+                    tr.messages.to_string(),
+                    tr.drops.to_string(),
+                ]);
+                for (k, (&e, &s)) in
+                    tr.errors.iter().zip(&tr.times).enumerate()
+                {
+                    csv.push(vec![
+                        kind.to_cli_name(),
+                        k.to_string(),
+                        format!("{s:.6e}"),
+                        format!("{e:.6e}"),
+                    ]);
+                }
+            }
+            let path = format!(
+                "{out_dir}/simnet_{}_{}_n{n}.csv",
+                scenario.label(),
+                mode.label()
+            );
+            basegraph::util::write_csv(
+                &path,
+                &["topology", "iter", "seconds", "error"],
+                &csv,
+            )
+            .map_err(|e| e.to_string())?;
+            let t_head = format!("t→{tol:.0e} (s)");
+            print_table(
+                &format!(
+                    "simnet consensus — scenario {}, mode {}, n={n} \
+                     (CSV: {path})",
+                    scenario.label(),
+                    mode.label()
+                ),
+                &[
+                    "topology",
+                    "max deg",
+                    t_head.as_str(),
+                    "iters",
+                    "err@end",
+                    "sim s",
+                    "msgs",
+                    "drops",
+                ],
+                &rows,
+            );
+            Ok(())
+        }
+        "train" => {
+            let rounds = args.usize_or("rounds", 100)?;
+            let lr = args.f64_or("lr", 0.5)?;
+            let dirichlet = args.f64_or("dirichlet", 10.0)?;
+            let target = args.f64_or("target-acc", 0.6)?;
+            let momentum = args.f64_or("momentum", 0.9)? as f32;
+            let optimizer = OptimizerKind::parse(
+                &args.str_or("optimizer", "dsgdm"),
+                momentum,
+            )?;
+            let engine =
+                Engine::parse(&args.str_or("engine", "native-linear"))?;
+            let workload = classification_workload(&engine, seed)?;
+            let mut rows = Vec::new();
+            let mut csv = Vec::new();
+            for t in &topos {
+                let kind = TopologyKind::parse(t)?;
+                let res = run_sim_training(
+                    &workload, kind, n, dirichlet, optimizer, rounds, lr,
+                    seed, &sim,
+                )?;
+                let tta = res.run.time_to_accuracy(target);
+                rows.push(vec![
+                    kind.label(),
+                    tta.map(|t| format!("{:.4}", t.sim_seconds))
+                        .unwrap_or_else(|| "never".into()),
+                    tta.map(|t| format!("{:.1}", t.cum_bytes as f64 / 1e6))
+                        .unwrap_or_else(|| "-".into()),
+                    format!("{:.2}", 100.0 * res.run.best_acc()),
+                    format!("{:.4}", res.ledger.sim_seconds),
+                    format!("{:.1}", res.ledger.bytes as f64 / 1e6),
+                    res.drops.to_string(),
+                ]);
+                csv.push(vec![
+                    kind.to_cli_name(),
+                    tta.map(|t| format!("{:.6e}", t.sim_seconds))
+                        .unwrap_or_else(|| "inf".into()),
+                    tta.map(|t| t.cum_bytes.to_string())
+                        .unwrap_or_else(|| "inf".into()),
+                    format!("{:.4}", res.run.best_acc()),
+                    format!("{:.6e}", res.ledger.sim_seconds),
+                    res.ledger.bytes.to_string(),
+                    res.drops.to_string(),
+                ]);
+            }
+            let path = format!(
+                "{out_dir}/simnet_train_{}_{}_n{n}.csv",
+                scenario.label(),
+                mode.label()
+            );
+            basegraph::util::write_csv(
+                &path,
+                &[
+                    "topology",
+                    "seconds_to_target",
+                    "bytes_to_target",
+                    "best_acc",
+                    "sim_seconds",
+                    "bytes",
+                    "drops",
+                ],
+                &csv,
+            )
+            .map_err(|e| e.to_string())?;
+            println!("CSV: {path}");
+            print_table(
+                &format!(
+                    "simnet training — scenario {}, mode {}, n={n}, \
+                     {} rounds, target acc {:.0}%",
+                    scenario.label(),
+                    mode.label(),
+                    rounds,
+                    100.0 * target
+                ),
+                &[
+                    "topology",
+                    "t→target (s)",
+                    "MB→target",
+                    "best acc %",
+                    "sim s",
+                    "comm MB",
+                    "drops",
+                ],
+                &rows,
+            );
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown simnet workload {other:?} (consensus|train)"
+        )),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<(), String> {

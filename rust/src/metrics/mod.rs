@@ -61,6 +61,24 @@ impl RoundRecord {
     }
 }
 
+/// When a run first crossed a quality target — the "time-to-accuracy"
+/// record the simnet drivers exist to measure: the paper's
+/// communication-efficiency claim, in simulated seconds and bytes rather
+/// than round counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeToTarget {
+    /// The threshold that was crossed.
+    pub target: f64,
+    /// First round whose record met the target.
+    pub round: usize,
+    /// Simulated event-clock seconds at that round.
+    pub sim_seconds: f64,
+    /// Cumulative payload bytes moved by then.
+    pub cum_bytes: u64,
+    /// Cumulative directed messages by then.
+    pub cum_messages: u64,
+}
+
 /// Full run result.
 #[derive(Debug, Clone, Default)]
 pub struct RunResult {
@@ -69,6 +87,35 @@ pub struct RunResult {
 }
 
 impl RunResult {
+    /// First eval record with `test_acc >= target` (None if the run never
+    /// got there).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<TimeToTarget> {
+        self.records
+            .iter()
+            .find(|r| !r.test_acc.is_nan() && r.test_acc >= target)
+            .map(|r| TimeToTarget {
+                target,
+                round: r.round,
+                sim_seconds: r.sim_seconds,
+                cum_bytes: r.cum_bytes,
+                cum_messages: r.cum_messages,
+            })
+    }
+
+    /// First record with `train_loss <= target` — the eval-free variant
+    /// for workloads without test batches (consensus probes, quadratics).
+    pub fn time_to_train_loss(&self, target: f64) -> Option<TimeToTarget> {
+        self.records
+            .iter()
+            .find(|r| !r.train_loss.is_nan() && r.train_loss <= target)
+            .map(|r| TimeToTarget {
+                target,
+                round: r.round,
+                sim_seconds: r.sim_seconds,
+                cum_bytes: r.cum_bytes,
+                cum_messages: r.cum_messages,
+            })
+    }
     /// Final test accuracy (last evaluated record).
     pub fn final_acc(&self) -> f64 {
         self.records
@@ -115,6 +162,36 @@ mod tests {
         }
         assert_eq!(rr.final_acc(), 0.5);
         assert_eq!(rr.best_acc(), 0.5);
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut rr = RunResult { label: "t".into(), records: vec![] };
+        for (round, acc, loss, secs) in [
+            (1, f64::NAN, 2.0, 0.1),
+            (2, 0.4, 1.0, 0.2),
+            (3, 0.7, 0.5, 0.3),
+            (4, 0.9, 0.1, 0.4),
+        ] {
+            rr.records.push(RoundRecord {
+                round,
+                test_acc: acc,
+                train_loss: loss,
+                sim_seconds: secs,
+                cum_bytes: round as u64 * 1000,
+                cum_messages: round as u64 * 10,
+                ..Default::default()
+            });
+        }
+        let t = rr.time_to_accuracy(0.6).unwrap();
+        assert_eq!(t.round, 3);
+        assert_eq!(t.sim_seconds, 0.3);
+        assert_eq!(t.cum_bytes, 3000);
+        assert_eq!(t.cum_messages, 30);
+        assert!(rr.time_to_accuracy(0.95).is_none());
+        let l = rr.time_to_train_loss(0.6).unwrap();
+        assert_eq!(l.round, 3);
+        assert!(rr.time_to_train_loss(0.01).is_none());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use crate::comm::CostModel;
 use crate::data::partition::dirichlet_partition;
 use crate::data::synth::{gaussian_mixture, ClassificationDataset};
 use crate::metrics::RunResult;
@@ -9,6 +10,7 @@ use crate::optim::OptimizerKind;
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::{GradProvider, RustMlp, SoftmaxRegression};
 use crate::runtime::PjrtModel;
+use crate::simnet::{sim_train, SimConfig, SimRunResult};
 use crate::topology::TopologyKind;
 use crate::train::node_data::{ClassificationShard, NodeData};
 use crate::train::{train, TrainConfig};
@@ -184,7 +186,58 @@ pub fn classification_workload(
     }
 }
 
-/// One decentralized training run for a repro figure.
+/// The Dirichlet-sharded per-node data sources every training-based
+/// experiment (analytic or simulated) starts from.
+pub fn partitioned_node_data(
+    workload: &TrainWorkload,
+    n: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Box<dyn NodeData>> {
+    let mut rng = Rng::new(seed);
+    let ds = &workload.dataset;
+    let part = dirichlet_partition(
+        &ds.y[..workload.train_count],
+        n,
+        ds.classes,
+        alpha,
+        &mut rng,
+    );
+    part.node_indices
+        .iter()
+        .enumerate()
+        .map(|(i, idx)| {
+            Box::new(ClassificationShard::new(
+                ds.clone(),
+                idx.clone(),
+                workload.batch_size,
+                seed.wrapping_mul(31).wrapping_add(i as u64),
+            )) as Box<dyn NodeData>
+        })
+        .collect()
+}
+
+/// The standard repro training configuration at a given round budget.
+fn repro_train_config(
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    cost: &CostModel,
+) -> TrainConfig {
+    TrainConfig {
+        rounds,
+        lr,
+        warmup: rounds / 20,
+        cosine: true,
+        optimizer,
+        eval_every: (rounds / 10).max(1),
+        threads: 0,
+        cost: *cost,
+    }
+}
+
+/// One decentralized training run for a repro figure (default α–β cost
+/// model).
 #[allow(clippy::too_many_arguments)]
 pub fn run_training(
     workload: &TrainWorkload,
@@ -196,45 +249,70 @@ pub fn run_training(
     lr: f64,
     seed: u64,
 ) -> Result<RunResult, String> {
-    let mut rng = Rng::new(seed);
-    let ds = &workload.dataset;
-    let part = dirichlet_partition(
-        &ds.y[..workload.train_count],
+    run_training_with_cost(
+        workload,
+        kind,
         n,
-        ds.classes,
         alpha,
-        &mut rng,
-    );
-    let node_data: Vec<Box<dyn NodeData>> = part
-        .node_indices
-        .iter()
-        .enumerate()
-        .map(|(i, idx)| {
-            Box::new(ClassificationShard::new(
-                ds.clone(),
-                idx.clone(),
-                workload.batch_size,
-                seed.wrapping_mul(31).wrapping_add(i as u64),
-            )) as Box<dyn NodeData>
-        })
-        .collect();
-    let seq = kind.build(n, seed)?;
-    let cfg = TrainConfig {
+        optimizer,
         rounds,
         lr,
-        warmup: rounds / 20,
-        cosine: true,
-        optimizer,
-        eval_every: (rounds / 10).max(1),
-        threads: 0,
-        ..Default::default()
-    };
+        seed,
+        &CostModel::default(),
+    )
+}
+
+/// [`run_training`] with an explicit α–β cost model (the CLI's
+/// `--net-alpha`/`--net-beta` flags land here).
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_with_cost(
+    workload: &TrainWorkload,
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    seed: u64,
+    cost: &CostModel,
+) -> Result<RunResult, String> {
+    let node_data = partitioned_node_data(workload, n, alpha, seed);
+    let seq = kind.build(n, seed)?;
+    let cfg = repro_train_config(optimizer, rounds, lr, cost);
     train(
         workload.provider.as_ref(),
         &seq,
         node_data,
         &workload.eval_batches,
         &cfg,
+    )
+}
+
+/// One decentralized training run on the simulated network — the same
+/// partition/schedule as [`run_training`], but executed event-driven so
+/// the records carry measured event-clock seconds.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sim_training(
+    workload: &TrainWorkload,
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    seed: u64,
+    sim: &SimConfig,
+) -> Result<SimRunResult, String> {
+    let node_data = partitioned_node_data(workload, n, alpha, seed);
+    let seq = kind.build(n, seed)?;
+    let cfg = repro_train_config(optimizer, rounds, lr, &CostModel::default());
+    sim_train(
+        workload.provider.as_ref(),
+        &seq,
+        node_data,
+        &workload.eval_batches,
+        &cfg,
+        sim,
     )
 }
 

@@ -5,6 +5,7 @@
 
 pub mod common;
 pub mod consensus_exps;
+pub mod simnet_exps;
 pub mod tables;
 pub mod training_exps;
 
@@ -14,7 +15,7 @@ use common::Engine;
 /// All experiment ids.
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig21",
-    "fig22", "fig23", "fig25", "fig26", "frontier", "all",
+    "fig22", "fig23", "fig25", "fig26", "frontier", "simnet", "all",
 ];
 
 /// Entry point for `basegraph repro`.
@@ -43,6 +44,13 @@ pub fn run(args: &Args) -> Result<(), String> {
             "table1" => tables::table1(n, seed, &out_dir),
             "table2" => tables::table2(n, 0.01, seed, &out_dir),
             "frontier" => tables::base_family_frontier(n, seed, &out_dir),
+            // The simnet straggler/drop sweep over the standard roster.
+            "simnet" => simnet_exps::simnet_sweep(
+                n,
+                if fast { 40 } else { 100 },
+                seed,
+                &out_dir,
+            )?,
             "fig5" => consensus_exps::fig5(
                 if fast { 100 } else { 300 },
                 &[1, 2, 3, 4],

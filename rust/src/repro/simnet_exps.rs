@@ -1,0 +1,128 @@
+//! Simnet repro target: the straggler/drop sweep over the paper's
+//! standard topology roster.
+//!
+//! This is the measured (not derived) version of the paper's
+//! communication-efficiency claim: for each scenario preset the full
+//! roster races to consensus on the simulated network, in both execution
+//! modes, and the table reports *simulated seconds* to reach a tolerance
+//! — the quantity the analytic α–β model can only approximate and a lossy
+//! or straggling network actively distorts.
+
+use crate::consensus::simnet_consensus_experiment;
+use crate::repro::common::{out_path, print_table, standard_roster};
+use crate::simnet::{ExecMode, Scenario};
+
+/// Consensus tolerance the sweep races to.
+const SWEEP_TOL: f64 = 1e-9;
+
+/// `basegraph repro --exp simnet`: scenario × roster × mode sweep.
+pub fn simnet_sweep(
+    n: usize,
+    iters: usize,
+    seed: u64,
+    out_dir: &str,
+) -> Result<(), String> {
+    let scenarios = [
+        Scenario::Ideal,
+        Scenario::Straggler,
+        Scenario::Lossy,
+        Scenario::Hostile,
+    ];
+    let mut csv: Vec<Vec<String>> = Vec::new();
+    for sc in scenarios {
+        let mut rows = Vec::new();
+        for kind in standard_roster(n) {
+            let seq = match kind.build(n, seed) {
+                Ok(s) => s,
+                Err(_) => continue, // unbuildable at this n
+            };
+            for mode in [ExecMode::BulkSynchronous, ExecMode::Async] {
+                let mut sim = sc.config(seed);
+                sim.mode = mode;
+                let tr = simnet_consensus_experiment(&seq, iters, seed, &sim);
+                let t_tol = tr.time_to_reach(SWEEP_TOL);
+                rows.push(vec![
+                    kind.label(),
+                    mode.label().to_string(),
+                    seq.max_degree().to_string(),
+                    t_tol
+                        .map(|t| format!("{t:.4}"))
+                        .unwrap_or_else(|| "never".into()),
+                    format!("{:.2e}", tr.final_error()),
+                    format!("{:.4}", tr.sim_seconds()),
+                    tr.messages.to_string(),
+                    tr.drops.to_string(),
+                ]);
+                csv.push(vec![
+                    sc.label().to_string(),
+                    kind.to_cli_name(),
+                    mode.label().to_string(),
+                    seq.max_degree().to_string(),
+                    t_tol
+                        .map(|t| format!("{t:.6e}"))
+                        .unwrap_or_else(|| "inf".into()),
+                    format!("{:.6e}", tr.final_error()),
+                    format!("{:.6e}", tr.sim_seconds()),
+                    tr.messages.to_string(),
+                    tr.drops.to_string(),
+                ]);
+            }
+        }
+        print_table(
+            &format!(
+                "simnet sweep — scenario {} (n={n}, {iters} iters, \
+                 tol {SWEEP_TOL:.0e})",
+                sc.label()
+            ),
+            &[
+                "topology",
+                "mode",
+                "max deg",
+                "t→tol (s)",
+                "err@end",
+                "sim s",
+                "msgs",
+                "drops",
+            ],
+            &rows,
+        );
+    }
+    let path = out_path(out_dir, &format!("simnet_sweep_n{n}.csv"));
+    crate::util::write_csv(
+        &path,
+        &[
+            "scenario",
+            "topology",
+            "mode",
+            "max_degree",
+            "seconds_to_tol",
+            "err_end",
+            "sim_seconds",
+            "messages",
+            "drops",
+        ],
+        &csv,
+    )
+    .map_err(|e| e.to_string())?;
+    println!("CSV: {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_and_writes_csv() {
+        let dir = std::env::temp_dir().join("basegraph_simnet_sweep_test");
+        let out = dir.to_str().unwrap().to_string();
+        simnet_sweep(8, 12, 3, &out).unwrap();
+        let csv =
+            std::fs::read_to_string(format!("{out}/simnet_sweep_n8.csv"))
+                .unwrap();
+        assert!(csv.lines().count() > 8, "csv should have many rows");
+        assert!(csv.starts_with("scenario,topology,mode"));
+        assert!(csv.contains("hostile"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,959 @@
+//! Event-driven consensus and training drivers.
+//!
+//! Both drivers seed their sends from the sparse
+//! [`GossipPlan`](crate::topology::GossipPlan) schedules: node `j` sends
+//! its payload to every node whose neighbor list contains `j` in the
+//! current phase (the reverse adjacency), sends serialized per sender, each
+//! one drop-sampled, each arrival an event. The mixing arithmetic is the
+//! *same code* the analytic paths run ([`GossipPlan::gossip_row_partial`]
+//! for f64 consensus, [`train::gossip_combine`](crate::train::gossip_combine)
+//! for f32 training), so the bulk-synchronous drivers under an ideal
+//! network reproduce `consensus::simulate` and `train::train` bit-exactly
+//! — pinned by the `*_matches_*_exactly` tests below.
+
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use super::event::{EventKind, EventQueue, Trace};
+use super::{ExecMode, SimConfig};
+use crate::comm::CommLedger;
+use crate::consensus::consensus_error;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::runtime::batch::Batch;
+use crate::runtime::provider::GradProvider;
+use crate::topology::{GossipPlan, GraphSequence};
+use crate::train::node_data::NodeData;
+use crate::train::{average_params, evaluate, gossip_combine, TrainConfig};
+
+/// Per-phase reverse adjacency: `out[src]` lists every `dst` whose
+/// neighbor list contains `src` — i.e. where a directed message
+/// `src → dst` flows. Lists are dst-ascending, so send order (and with it
+/// the whole event schedule) is deterministic.
+fn out_adjacency(plan: &GossipPlan) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); plan.n()];
+    for (dst, src, _w) in plan.directed_edges() {
+        out[src].push(dst);
+    }
+    out
+}
+
+/// Result of an event-driven consensus run: the per-iteration error curve
+/// of [`ConsensusTrace`](crate::consensus::ConsensusTrace), plus the
+/// event-clock timestamp of every entry and the physical totals.
+#[derive(Debug, Clone)]
+pub struct SimTrace {
+    pub topology: String,
+    pub n: usize,
+    /// Consensus error after each completed iteration (index 0 = initial).
+    pub errors: Vec<f64>,
+    /// Event-clock seconds at which each `errors` entry was measured.
+    pub times: Vec<f64>,
+    /// Directed message sends attempted (dropped ones included — the bytes
+    /// left the NIC either way).
+    pub messages: u64,
+    /// Payload bytes moved.
+    pub bytes: u64,
+    /// Messages lost in flight.
+    pub drops: u64,
+    pub trace: Trace,
+    /// Final node values.
+    pub finals: Vec<Vec<f64>>,
+}
+
+impl SimTrace {
+    /// First iteration at which the error drops below `tol`.
+    pub fn iters_to_reach(&self, tol: f64) -> Option<usize> {
+        self.errors.iter().position(|&e| e <= tol)
+    }
+
+    /// Event-clock seconds at which the error first drops below `tol` —
+    /// the measured time-to-consensus.
+    pub fn time_to_reach(&self, tol: f64) -> Option<f64> {
+        self.iters_to_reach(tol).map(|k| self.times[k])
+    }
+
+    pub fn final_error(&self) -> f64 {
+        *self.errors.last().expect("trace has an initial entry")
+    }
+
+    pub fn sim_seconds(&self) -> f64 {
+        *self.times.last().expect("trace has an initial entry")
+    }
+}
+
+/// Run `iters` gossip iterations of `seq` from `init` on the simulated
+/// network. Bulk-synchronous mode reproduces
+/// [`consensus::simulate`](crate::consensus::simulate) exactly under
+/// [`SimConfig::ideal`].
+pub fn sim_consensus(
+    seq: &GraphSequence,
+    init: &[Vec<f64>],
+    iters: usize,
+    cfg: &SimConfig,
+) -> SimTrace {
+    assert_eq!(init.len(), seq.n, "init size != topology n");
+    let n = seq.n;
+    let d = init.first().map(|x| x.len()).unwrap_or(0);
+    let bytes_per_msg = (d * 8) as u64;
+    let mut net = cfg.network(n);
+    let mut trace = Trace::new(cfg.record_trace);
+    let mut xs: Vec<Vec<f64>> = init.to_vec();
+    let mut errors = vec![consensus_error(&xs)];
+    let mut times = vec![0.0];
+    let mut messages = 0u64;
+    let mut bytes = 0u64;
+    let mut drops = 0u64;
+    if seq.is_empty() || iters == 0 || n == 0 {
+        return SimTrace {
+            topology: seq.name.clone(),
+            n,
+            errors,
+            times,
+            messages,
+            bytes,
+            drops,
+            trace,
+            finals: xs,
+        };
+    }
+    let out_adj: Vec<Vec<Vec<usize>>> =
+        seq.phases.iter().map(out_adjacency).collect();
+
+    match cfg.mode {
+        ExecMode::BulkSynchronous => {
+            let mut clock = 0.0f64;
+            // Persistent mix scratch, swapped with `xs` each barrier — no
+            // allocation on the per-iteration path.
+            let mut next = vec![vec![0.0f64; d]; n];
+            for r in 0..iters {
+                let pidx = r % seq.len();
+                let plan = &seq.phases[pidx];
+                let mut q = EventQueue::new();
+                for i in 0..n {
+                    q.push(
+                        clock + net.compute_seconds(i),
+                        EventKind::ComputeDone { node: i, round: r },
+                    );
+                }
+                // arrived[i][k] <=> the payload of plan.neighbors(i)[k]
+                // made it through this phase.
+                let mut arrived: Vec<Vec<bool>> =
+                    (0..n).map(|i| vec![false; plan.degree(i)]).collect();
+                let mut barrier_t = clock;
+                while let Some(ev) = q.pop() {
+                    barrier_t = ev.t;
+                    trace.record(ev.t, ev.kind);
+                    match ev.kind {
+                        EventKind::ComputeDone { node, .. } => {
+                            let mut t_free = ev.t;
+                            for &dst in &out_adj[pidx][node] {
+                                t_free += net
+                                    .links
+                                    .send_seconds(node, dst, bytes_per_msg);
+                                messages += 1;
+                                bytes += bytes_per_msg;
+                                if net.dropped() {
+                                    drops += 1;
+                                } else {
+                                    q.push(
+                                        t_free,
+                                        EventKind::MessageArrive {
+                                            src: node,
+                                            dst,
+                                            msg: 0,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                        EventKind::MessageArrive { src, dst, .. } => {
+                            let row = plan.neighbors(dst);
+                            if let Ok(k) = row
+                                .binary_search_by_key(&src, |&(p, _)| p)
+                            {
+                                arrived[dst][k] = true;
+                            }
+                        }
+                        EventKind::PhaseBarrier { .. } => {}
+                    }
+                }
+                clock = barrier_t;
+                trace.record(clock, EventKind::PhaseBarrier { round: r });
+                // Barrier: mix with whatever survived the phase.
+                for (i, out) in next.iter_mut().enumerate() {
+                    let row = plan.neighbors(i);
+                    let flags = &arrived[i];
+                    plan.gossip_row_partial(
+                        i,
+                        &xs[i],
+                        |j| {
+                            row.binary_search_by_key(&j, |&(p, _)| p)
+                                .ok()
+                                .filter(|&k| flags[k])
+                                .map(|_| xs[j].as_slice())
+                        },
+                        out,
+                    );
+                }
+                std::mem::swap(&mut xs, &mut next);
+                errors.push(consensus_error(&xs));
+                times.push(clock);
+            }
+        }
+        ExecMode::Async => {
+            let mut q = EventQueue::new();
+            // In-flight payloads, keyed by message id and reclaimed on
+            // arrival — memory stays O(messages currently in the air).
+            let mut store: HashMap<usize, Rc<Vec<f64>>> = HashMap::new();
+            let mut next_msg = 0usize;
+            let mut mailbox: Vec<BTreeMap<usize, Rc<Vec<f64>>>> =
+                vec![BTreeMap::new(); n];
+            let mut completed = vec![0usize; iters];
+            // One NIC per node: sends from consecutive rounds queue behind
+            // each other (compute may overlap transmission, sends may not).
+            let mut nic_free = vec![0.0f64; n];
+            for i in 0..n {
+                q.push(
+                    net.compute_seconds(i),
+                    EventKind::ComputeDone { node: i, round: 0 },
+                );
+            }
+            while let Some(ev) = q.pop() {
+                trace.record(ev.t, ev.kind);
+                match ev.kind {
+                    EventKind::ComputeDone { node, round } => {
+                        let pidx = round % seq.len();
+                        let plan = &seq.phases[pidx];
+                        // Snapshot and send the pre-mix value.
+                        let payload = Rc::new(xs[node].clone());
+                        let mut t_free = ev.t.max(nic_free[node]);
+                        for &dst in &out_adj[pidx][node] {
+                            t_free += net
+                                .links
+                                .send_seconds(node, dst, bytes_per_msg);
+                            messages += 1;
+                            bytes += bytes_per_msg;
+                            if net.dropped() {
+                                drops += 1;
+                            } else {
+                                let msg = next_msg;
+                                next_msg += 1;
+                                store.insert(msg, payload.clone());
+                                q.push(
+                                    t_free,
+                                    EventKind::MessageArrive {
+                                        src: node,
+                                        dst,
+                                        msg,
+                                    },
+                                );
+                            }
+                        }
+                        nic_free[node] = t_free;
+                        // Mix with whatever has arrived (consume-once),
+                        // renormalizing for the missing peers.
+                        let row = plan.neighbors(node);
+                        let avail: Vec<Option<Rc<Vec<f64>>>> = row
+                            .iter()
+                            .map(|&(j, _)| mailbox[node].remove(&j))
+                            .collect();
+                        let mut out = vec![0.0f64; d];
+                        plan.gossip_row_partial(
+                            node,
+                            &xs[node],
+                            |j| {
+                                row.binary_search_by_key(&j, |&(p, _)| p)
+                                    .ok()
+                                    .and_then(|k| avail[k].as_ref())
+                                    .map(|rc| rc.as_slice())
+                            },
+                            &mut out,
+                        );
+                        xs[node] = out;
+                        completed[round] += 1;
+                        if completed[round] == n {
+                            errors.push(consensus_error(&xs));
+                            times.push(ev.t);
+                        }
+                        if round + 1 < iters {
+                            q.push(
+                                ev.t + net.compute_seconds(node),
+                                EventKind::ComputeDone {
+                                    node,
+                                    round: round + 1,
+                                },
+                            );
+                        }
+                    }
+                    EventKind::MessageArrive { src, dst, msg } => {
+                        if let Some(p) = store.remove(&msg) {
+                            mailbox[dst].insert(src, p);
+                        }
+                    }
+                    EventKind::PhaseBarrier { .. } => {}
+                }
+            }
+        }
+    }
+
+    SimTrace {
+        topology: seq.name.clone(),
+        n,
+        errors,
+        times,
+        messages,
+        bytes,
+        drops,
+        trace,
+        finals: xs,
+    }
+}
+
+struct SimNodeState {
+    params: Vec<f32>,
+    opt: Box<dyn crate::optim::DecentralizedOptimizer>,
+    data: Box<dyn NodeData>,
+    last_loss: f64,
+    pending: Vec<Vec<f32>>,
+}
+
+/// Result of an event-driven training run.
+#[derive(Debug)]
+pub struct SimRunResult {
+    /// The usual per-round records; `sim_seconds` carries the event clock
+    /// and the time-to-accuracy queries
+    /// ([`RunResult::time_to_accuracy`]) read it.
+    pub run: RunResult,
+    /// Final communication totals (event-clock seconds).
+    pub ledger: CommLedger,
+    /// Messages lost in flight.
+    pub drops: u64,
+    pub trace: Trace,
+    /// Final per-node parameters (determinism checks, inspection).
+    pub final_params: Vec<Vec<f32>>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn round_record(
+    round: usize,
+    nodes: &[SimNodeState],
+    ledger: &CommLedger,
+    is_eval: bool,
+    provider: &dyn GradProvider,
+    eval_batches: &[Batch],
+    d: usize,
+) -> Result<RoundRecord, String> {
+    let n = nodes.len();
+    let mut rec = RoundRecord {
+        round,
+        train_loss: nodes.iter().map(|s| s.last_loss).sum::<f64>()
+            / n as f64,
+        consensus_error: f64::NAN,
+        test_loss: f64::NAN,
+        test_acc: f64::NAN,
+        cum_messages: ledger.messages,
+        cum_bytes: ledger.bytes,
+        sim_seconds: ledger.sim_seconds,
+    };
+    if is_eval {
+        let params_f64: Vec<Vec<f64>> = nodes
+            .iter()
+            .map(|s| s.params.iter().map(|&x| x as f64).collect())
+            .collect();
+        rec.consensus_error = consensus_error(&params_f64);
+        if !eval_batches.is_empty() {
+            let avg =
+                average_params(nodes.iter().map(|s| s.params.as_slice()), d);
+            let (loss, acc) = evaluate(provider, &avg, eval_batches)?;
+            rec.test_loss = loss;
+            rec.test_acc = acc;
+        }
+    }
+    Ok(rec)
+}
+
+/// Run decentralized training of `provider` over `seq` on the simulated
+/// network. Bulk-synchronous mode reproduces
+/// [`train::train`](crate::train::train) exactly under
+/// [`SimConfig::ideal`] (same seed, same rounds); asynchronous mode lets
+/// every node proceed with whatever neighbor payloads have arrived.
+pub fn sim_train(
+    provider: &dyn GradProvider,
+    seq: &GraphSequence,
+    node_data: Vec<Box<dyn NodeData>>,
+    eval_batches: &[Batch],
+    cfg: &TrainConfig,
+    sim: &SimConfig,
+) -> Result<SimRunResult, String> {
+    let n = seq.n;
+    if node_data.len() != n {
+        return Err(format!(
+            "{} node data sources for {} nodes",
+            node_data.len(),
+            n
+        ));
+    }
+    if n == 0 || seq.is_empty() {
+        return Err("simnet needs n >= 1 and a non-empty sequence".into());
+    }
+    let d = provider.d_params();
+    let init = provider.init_params();
+    let mut nodes: Vec<SimNodeState> = node_data
+        .into_iter()
+        .map(|data| SimNodeState {
+            params: init.clone(),
+            opt: cfg.optimizer.build(d),
+            data,
+            last_loss: f64::NAN,
+            pending: Vec::new(),
+        })
+        .collect();
+    let n_msgs = nodes[0].opt.n_messages();
+    let damping = nodes[0].opt.w_damping() as f32;
+    let bundle_bytes = (n_msgs * d * 4) as u64;
+    let mut net = sim.network(n);
+    let mut trace = Trace::new(sim.record_trace);
+    let mut ledger = CommLedger::default();
+    let mut drops = 0u64;
+    let out_adj: Vec<Vec<Vec<usize>>> =
+        seq.phases.iter().map(out_adjacency).collect();
+    let mut result = RunResult {
+        label: format!(
+            "{} × {} × {} [simnet {}]",
+            provider.name(),
+            seq.name,
+            cfg.optimizer.label(),
+            sim.mode.label()
+        ),
+        records: Vec::new(),
+    };
+
+    match sim.mode {
+        ExecMode::BulkSynchronous => {
+            let mut scratch: Vec<Vec<f32>> =
+                (0..n).map(|_| vec![0.0f32; d]).collect();
+            let mut clock = 0.0f64;
+            for r in 0..cfg.rounds {
+                let lr = cfg.lr_at(r) as f32;
+                let pidx = r % seq.len();
+                let plan = &seq.phases[pidx];
+                let mut q = EventQueue::new();
+                for i in 0..n {
+                    q.push(
+                        clock + net.compute_seconds(i),
+                        EventKind::ComputeDone { node: i, round: r },
+                    );
+                }
+                let mut arrived: Vec<Vec<bool>> =
+                    (0..n).map(|i| vec![false; plan.degree(i)]).collect();
+                let mut barrier_t = clock;
+                let mut failure: Option<String> = None;
+                while let Some(ev) = q.pop() {
+                    barrier_t = ev.t;
+                    trace.record(ev.t, ev.kind);
+                    match ev.kind {
+                        EventKind::ComputeDone { node, .. } => {
+                            let nd = &mut nodes[node];
+                            let batch = nd.data.next_train_batch();
+                            match provider.train_step(&nd.params, &batch) {
+                                Ok((loss, grads)) => {
+                                    nd.last_loss = loss as f64;
+                                    nd.pending =
+                                        nd.opt.pre_mix(&nd.params, &grads, lr);
+                                }
+                                Err(e) => {
+                                    failure = Some(format!("round {r}: {e}"));
+                                    break;
+                                }
+                            }
+                            let mut t_free = ev.t;
+                            for &dst in &out_adj[pidx][node] {
+                                t_free += net
+                                    .links
+                                    .send_seconds(node, dst, bundle_bytes);
+                                ledger.record_sends(n_msgs, d);
+                                if net.dropped() {
+                                    // One lost bundle loses all n_msgs
+                                    // logical messages — keep drops in the
+                                    // same unit as ledger.messages.
+                                    drops += n_msgs as u64;
+                                } else {
+                                    q.push(
+                                        t_free,
+                                        EventKind::MessageArrive {
+                                            src: node,
+                                            dst,
+                                            msg: 0,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                        EventKind::MessageArrive { src, dst, .. } => {
+                            let row = plan.neighbors(dst);
+                            if let Ok(k) = row
+                                .binary_search_by_key(&src, |&(p, _)| p)
+                            {
+                                arrived[dst][k] = true;
+                            }
+                        }
+                        EventKind::PhaseBarrier { .. } => {}
+                    }
+                }
+                if let Some(e) = failure {
+                    return Err(e);
+                }
+                clock = barrier_t;
+                trace.record(clock, EventKind::PhaseBarrier { round: r });
+                ledger.advance_clock_to(clock);
+                // Match the analytic trainer's convention: `rounds` counts
+                // message passes (record_round is called once per message
+                // slot there), so per-round averages stay comparable.
+                for _ in 0..n_msgs {
+                    ledger.bump_round();
+                }
+
+                // Barrier: mix each message over the surviving payloads —
+                // the exact trainer arithmetic (gossip_combine).
+                let mut used0 = vec![0usize; n];
+                for m in 0..n_msgs {
+                    let msgs: Vec<&[f32]> = nodes
+                        .iter()
+                        .map(|s| s.pending[m].as_slice())
+                        .collect();
+                    for (i, out) in scratch.iter_mut().enumerate() {
+                        let row = plan.neighbors(i);
+                        let flags = &arrived[i];
+                        let used = gossip_combine(
+                            plan,
+                            i,
+                            damping,
+                            msgs[i],
+                            |j| {
+                                row.binary_search_by_key(&j, |&(p, _)| p)
+                                    .ok()
+                                    .filter(|&k| flags[k])
+                                    .map(|_| msgs[j])
+                            },
+                            out,
+                        );
+                        if m == 0 {
+                            used0[i] = used;
+                        }
+                    }
+                    for (nd, sc) in nodes.iter_mut().zip(scratch.iter_mut())
+                    {
+                        std::mem::swap(&mut nd.pending[m], sc);
+                    }
+                }
+                for (i, nd) in nodes.iter_mut().enumerate() {
+                    let active = used0[i] > 0;
+                    let pending = std::mem::take(&mut nd.pending);
+                    let new =
+                        nd.opt.post_mix(pending, &nd.params, lr, active);
+                    nd.params = new;
+                }
+
+                let is_eval = (cfg.eval_every > 0
+                    && (r + 1) % cfg.eval_every == 0)
+                    || r + 1 == cfg.rounds;
+                result.records.push(round_record(
+                    r + 1,
+                    &nodes,
+                    &ledger,
+                    is_eval,
+                    provider,
+                    eval_batches,
+                    d,
+                )?);
+            }
+        }
+        ExecMode::Async => {
+            let mut q = EventQueue::new();
+            // In-flight payload bundles, reclaimed on arrival.
+            let mut store: HashMap<usize, Rc<Vec<Vec<f32>>>> =
+                HashMap::new();
+            let mut next_msg = 0usize;
+            let mut mailbox: Vec<BTreeMap<usize, Rc<Vec<Vec<f32>>>>> =
+                vec![BTreeMap::new(); n];
+            let mut completed = vec![0usize; cfg.rounds];
+            // One NIC per node (see the consensus driver above).
+            let mut nic_free = vec![0.0f64; n];
+            if cfg.rounds > 0 {
+                for i in 0..n {
+                    q.push(
+                        net.compute_seconds(i),
+                        EventKind::ComputeDone { node: i, round: 0 },
+                    );
+                }
+            }
+            while let Some(ev) = q.pop() {
+                trace.record(ev.t, ev.kind);
+                match ev.kind {
+                    EventKind::ComputeDone { node, round } => {
+                        let lr = cfg.lr_at(round) as f32;
+                        let pidx = round % seq.len();
+                        let plan = &seq.phases[pidx];
+                        {
+                            let nd = &mut nodes[node];
+                            let batch = nd.data.next_train_batch();
+                            let (loss, grads) = provider
+                                .train_step(&nd.params, &batch)
+                                .map_err(|e| {
+                                    format!("node {node} round {round}: {e}")
+                                })?;
+                            nd.last_loss = loss as f64;
+                            nd.pending =
+                                nd.opt.pre_mix(&nd.params, &grads, lr);
+                        }
+                        let payload = Rc::new(nodes[node].pending.clone());
+                        let mut t_free = ev.t.max(nic_free[node]);
+                        for &dst in &out_adj[pidx][node] {
+                            t_free += net
+                                .links
+                                .send_seconds(node, dst, bundle_bytes);
+                            ledger.record_sends(n_msgs, d);
+                            if net.dropped() {
+                                // Bundle loss = n_msgs logical messages.
+                                drops += n_msgs as u64;
+                            } else {
+                                let msg = next_msg;
+                                next_msg += 1;
+                                store.insert(msg, payload.clone());
+                                q.push(
+                                    t_free,
+                                    EventKind::MessageArrive {
+                                        src: node,
+                                        dst,
+                                        msg,
+                                    },
+                                );
+                            }
+                        }
+                        nic_free[node] = t_free;
+                        // Local-steps gossip: mix the fresh payload with
+                        // whatever neighbor payloads have arrived
+                        // (consume-once), renormalizing for the rest.
+                        let row = plan.neighbors(node);
+                        let avail: Vec<Option<Rc<Vec<Vec<f32>>>>> = row
+                            .iter()
+                            .map(|&(j, _)| mailbox[node].remove(&j))
+                            .collect();
+                        let mut mixed: Vec<Vec<f32>> =
+                            Vec::with_capacity(n_msgs);
+                        let mut used_any = 0usize;
+                        for m in 0..n_msgs {
+                            let mut out = vec![0.0f32; d];
+                            let used = gossip_combine(
+                                plan,
+                                node,
+                                damping,
+                                &nodes[node].pending[m],
+                                |j| {
+                                    row.binary_search_by_key(&j, |&(p, _)| p)
+                                        .ok()
+                                        .and_then(|k| avail[k].as_ref())
+                                        .and_then(|rc| rc.get(m))
+                                        .map(|v| v.as_slice())
+                                },
+                                &mut out,
+                            );
+                            used_any = used_any.max(used);
+                            mixed.push(out);
+                        }
+                        let nd = &mut nodes[node];
+                        nd.pending = Vec::new();
+                        let new = nd.opt.post_mix(
+                            mixed,
+                            &nd.params,
+                            lr,
+                            used_any > 0,
+                        );
+                        nd.params = new;
+                        completed[round] += 1;
+                        if completed[round] == n {
+                            ledger.advance_clock_to(ev.t);
+                            for _ in 0..n_msgs {
+                                ledger.bump_round();
+                            }
+                            let is_eval = (cfg.eval_every > 0
+                                && (round + 1) % cfg.eval_every == 0)
+                                || round + 1 == cfg.rounds;
+                            result.records.push(round_record(
+                                round + 1,
+                                &nodes,
+                                &ledger,
+                                is_eval,
+                                provider,
+                                eval_batches,
+                                d,
+                            )?);
+                        }
+                        if round + 1 < cfg.rounds {
+                            q.push(
+                                ev.t + net.compute_seconds(node),
+                                EventKind::ComputeDone {
+                                    node,
+                                    round: round + 1,
+                                },
+                            );
+                        }
+                    }
+                    EventKind::MessageArrive { src, dst, msg } => {
+                        if let Some(p) = store.remove(&msg) {
+                            mailbox[dst].insert(src, p);
+                        }
+                    }
+                    EventKind::PhaseBarrier { .. } => {}
+                }
+            }
+        }
+    }
+
+    let final_params: Vec<Vec<f32>> =
+        nodes.iter().map(|s| s.params.clone()).collect();
+    Ok(SimRunResult { run: result, ledger, drops, trace, final_params })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::{gaussian_init, simulate};
+    use crate::optim::OptimizerKind;
+    use crate::runtime::provider::QuadraticModel;
+    use crate::simnet::Scenario;
+    use crate::topology::{base, baselines, TopologyKind};
+    use crate::train::node_data::FixedBatch;
+    use crate::train::train;
+    use crate::util::rng::Rng;
+
+    fn quadratic_setup(
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (QuadraticModel, Vec<Box<dyn NodeData>>) {
+        let mut rng = Rng::new(seed);
+        let model = QuadraticModel::new(d);
+        let data: Vec<Box<dyn NodeData>> = (0..n)
+            .map(|_| {
+                let c: Vec<f32> =
+                    (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+                Box::new(FixedBatch::new(QuadraticModel::target_batch(c)))
+                    as Box<dyn NodeData>
+            })
+            .collect();
+        (model, data)
+    }
+
+    #[test]
+    fn ideal_bsp_consensus_matches_simulate_exactly() {
+        let seq = base::base(12, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let init = gaussian_init(12, 3, &mut rng);
+        let iters = 2 * seq.len();
+        let analytic = simulate(&seq, &init, iters);
+        let sim = sim_consensus(&seq, &init, iters, &SimConfig::ideal());
+        // Bit-exact: the event engine is a strict generalization.
+        assert_eq!(analytic.errors, sim.errors);
+        assert!(sim.times.iter().all(|&t| t == 0.0));
+        assert_eq!(sim.drops, 0);
+        // Every directed edge of every phase was sent once per iteration.
+        let per_sweep: u64 =
+            seq.phases.iter().map(|p| p.messages() as u64).sum();
+        assert_eq!(sim.messages, 2 * per_sweep);
+    }
+
+    #[test]
+    fn async_ideal_consensus_converges() {
+        let seq = base::base(10, 1).unwrap();
+        let mut rng = Rng::new(5);
+        let init = gaussian_init(10, 2, &mut rng);
+        let mut cfg = SimConfig::ideal();
+        cfg.mode = ExecMode::Async;
+        let iters = 6 * seq.len();
+        let tr = sim_consensus(&seq, &init, iters, &cfg);
+        assert_eq!(tr.errors.len(), iters + 1);
+        assert!(tr.errors.iter().all(|e| e.is_finite()));
+        // Async staleness costs exactness (and speed), not convergence:
+        // stale pairwise averages still contract across sweeps.
+        assert!(
+            tr.final_error() < tr.errors[0] * 0.5,
+            "async error {:.3e} vs initial {:.3e}",
+            tr.final_error(),
+            tr.errors[0]
+        );
+    }
+
+    #[test]
+    fn ideal_bsp_training_reproduces_trainer_exactly() {
+        // Acceptance: zero latency + zero drops + homogeneous compute
+        // ⇒ the event-driven BSP driver and the analytic trainer walk the
+        // same trajectory bit-for-bit (same seed, same rounds), including
+        // the D² damping path and gradient tracking's 2-message rounds.
+        for optimizer in [
+            OptimizerKind::Dsgdm { momentum: 0.9 },
+            OptimizerKind::D2,
+            OptimizerKind::GradientTracking,
+        ] {
+            let n = 8;
+            let seq = base::base(n, 1).unwrap();
+            let cfg = TrainConfig {
+                rounds: 30,
+                lr: 0.2,
+                warmup: 5,
+                cosine: true,
+                optimizer,
+                eval_every: 10,
+                threads: 1,
+                ..Default::default()
+            };
+            let (model, data) = quadratic_setup(n, 4, 11);
+            let analytic = train(&model, &seq, data, &[], &cfg).unwrap();
+            let (model, data) = quadratic_setup(n, 4, 11);
+            let sim = sim_train(
+                &model,
+                &seq,
+                data,
+                &[],
+                &cfg,
+                &SimConfig::ideal(),
+            )
+            .unwrap();
+            assert_eq!(analytic.records.len(), sim.run.records.len());
+            for (a, s) in analytic.records.iter().zip(&sim.run.records) {
+                assert_eq!(a.round, s.round);
+                assert_eq!(
+                    a.train_loss, s.train_loss,
+                    "{}: loss diverged at round {}",
+                    cfg.optimizer.label(),
+                    a.round
+                );
+                assert_eq!(
+                    a.consensus_error.is_nan(),
+                    s.consensus_error.is_nan()
+                );
+                if !a.consensus_error.is_nan() {
+                    assert_eq!(a.consensus_error, s.consensus_error);
+                }
+                // Same physical sends counted, event-by-event.
+                assert_eq!(a.cum_messages, s.cum_messages);
+                assert_eq!(a.cum_bytes, s.cum_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_seed_identical_trace_and_params() {
+        let run = |seed: u64| {
+            let n = 10;
+            let seq = base::base(n, 1).unwrap();
+            let (model, data) = quadratic_setup(n, 3, 2);
+            let mut sim = Scenario::Hostile.config(seed);
+            sim.mode = ExecMode::Async;
+            sim.record_trace = true;
+            let cfg = TrainConfig {
+                rounds: 12,
+                lr: 0.2,
+                warmup: 0,
+                cosine: false,
+                optimizer: OptimizerKind::Dsgd,
+                eval_every: 0,
+                threads: 1,
+                ..Default::default()
+            };
+            sim_train(&model, &seq, data, &[], &cfg, &sim).unwrap()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a.trace, b.trace, "same seed must replay identically");
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.drops, b.drops);
+        assert!(!a.trace.is_empty());
+        let c = run(8);
+        assert!(
+            a.trace != c.trace || a.final_params != c.final_params,
+            "different seeds should perturb the run"
+        );
+    }
+
+    #[test]
+    fn finite_time_topology_keeps_edge_under_stragglers_and_drops() {
+        // The measured version of the paper's claim: under stragglers +
+        // drops + rack-heterogeneous links, the Base-(k+1) Graph still
+        // reaches consensus in a fraction of the ring's simulated time.
+        let n = 24;
+        let iters = 60;
+        let run = |kind: TopologyKind, sc: Scenario, seed: u64| {
+            let seq = kind.build(n, 0).unwrap();
+            let cfg = sc.config(seed);
+            let mut rng = Rng::new(1);
+            let init = gaussian_init(n, 1, &mut rng);
+            sim_consensus(&seq, &init, iters, &cfg)
+        };
+
+        // Stragglers only (no loss): finite-time consensus survives — the
+        // Base-2 Graph is exact after one sweep even on the slow network.
+        let base_s = run(TopologyKind::Base { m: 2 }, Scenario::Straggler, 42);
+        let bt = base_s
+            .time_to_reach(1e-15)
+            .expect("base-2 stays finite-time under stragglers");
+        assert!(bt > 0.0, "straggler network must cost real time");
+        let ring_s = run(TopologyKind::Ring, Scenario::Straggler, 42);
+        assert!(ring_s.time_to_reach(1e-15).is_none());
+
+        // Stragglers + 10% drops + racks: exactness is gone, but the
+        // time-to-accuracy edge survives.
+        let base_h = run(TopologyKind::Base { m: 2 }, Scenario::Hostile, 42);
+        let ring_h = run(TopologyKind::Ring, Scenario::Hostile, 42);
+        assert!(base_h.drops > 0, "hostile scenario must drop messages");
+        let bh = base_h
+            .time_to_reach(1e-3)
+            .expect("base-2 reaches 1e-3 despite drops");
+        let rh = ring_h.time_to_reach(1e-3).unwrap_or(f64::INFINITY);
+        assert!(
+            bh < rh,
+            "base-2 time {bh:.3}s must beat ring ({rh:.3}s)"
+        );
+        assert!(base_h.final_error() < ring_h.final_error());
+
+        // Reproducible from the seed alone.
+        let again = run(TopologyKind::Base { m: 2 }, Scenario::Hostile, 42);
+        assert_eq!(base_h.errors, again.errors);
+        assert_eq!(base_h.times, again.times);
+        assert_eq!(base_h.drops, again.drops);
+    }
+
+    #[test]
+    fn straggler_scenario_gates_the_clock_on_the_slow_nodes() {
+        // With a 10× straggler subset, every completed global round costs
+        // at least one straggler compute time (both modes wait for the
+        // slowest node to have finished its rounds); without stragglers
+        // the same iteration count is an order of magnitude cheaper.
+        let n = 16;
+        let seq = baselines::ring(n);
+        let mut rng = Rng::new(2);
+        let init = gaussian_init(n, 1, &mut rng);
+        let iters = 10;
+        let strag = Scenario::Straggler.config(9);
+        // ceil(16 · 0.125) = 2 straggler nodes at 10 × 5 ms minimum each.
+        let floor = iters as f64
+            * strag.compute.mean_seconds
+            * strag.compute.straggler_factor;
+        for mode in [ExecMode::BulkSynchronous, ExecMode::Async] {
+            let mut cfg = strag.clone();
+            cfg.mode = mode;
+            let t = sim_consensus(&seq, &init, iters, &cfg).sim_seconds();
+            assert!(
+                t >= floor,
+                "{}: {t:.4}s below straggler floor {floor:.4}s",
+                mode.label()
+            );
+        }
+        let lan = Scenario::Lan.config(9);
+        let t_lan = sim_consensus(&seq, &init, iters, &lan).sim_seconds();
+        assert!(
+            t_lan < floor / 3.0,
+            "lan time {t_lan:.4}s should be far below {floor:.4}s"
+        );
+    }
+}

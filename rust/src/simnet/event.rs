@@ -1,0 +1,188 @@
+//! The discrete-event core: a virtual clock and a deterministic
+//! binary-heap event queue.
+//!
+//! Events are ordered by `(time, insertion sequence)`: two events scheduled
+//! for the same instant pop in the order they were pushed. Because every
+//! driver schedules events in a fixed order (node 0..n, neighbor lists
+//! sorted by peer id) and every stochastic draw comes from one seeded
+//! [`Rng`](crate::util::rng::Rng), a run is a pure function of its seed —
+//! the property the determinism tests pin down.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens at a simulated instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A node finished its local gradient/value computation for `round`.
+    ComputeDone { node: usize, round: usize },
+    /// A message sent by `src` reached `dst`. `msg` indexes the driver's
+    /// in-flight payload store (0 when the driver keeps payloads
+    /// elsewhere, as the bulk-synchronous drivers do).
+    MessageArrive { src: usize, dst: usize, msg: usize },
+    /// A bulk-synchronous phase completed: all compute finished and every
+    /// surviving message was delivered.
+    PhaseBarrier { round: usize },
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Absolute virtual time (seconds).
+    pub t: f64,
+    /// Insertion counter — the deterministic tie-break.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed on purpose: `BinaryHeap` is a max-heap and we want the
+        // earliest (time, seq) to pop first.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .expect("event times are never NaN")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap of events plus the virtual clock.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    /// Time of the most recently popped event.
+    pub now: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at absolute virtual time `t`.
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        assert!(t.is_finite(), "event time must be finite, got {t}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { t, seq, kind });
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<Event> {
+        let e = self.heap.pop()?;
+        self.now = e.t;
+        Some(e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// A log of processed events: `(time, kind)` pairs. Two runs with the same
+/// seed must produce identical traces — the determinism contract.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub events: Vec<(f64, EventKind)>,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Trace { events: Vec::new(), enabled }
+    }
+
+    #[inline]
+    pub fn record(&mut self, t: f64, kind: EventKind) {
+        if self.enabled {
+            self.events.push((t, kind));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::PhaseBarrier { round: 2 });
+        q.push(0.5, EventKind::PhaseBarrier { round: 0 });
+        q.push(1.0, EventKind::PhaseBarrier { round: 1 });
+        let rounds: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::PhaseBarrier { round } => round,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(rounds, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ties_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for node in 0..5 {
+            q.push(1.0, EventKind::ComputeDone { node, round: 0 });
+        }
+        let nodes: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::ComputeDone { node, .. } => node,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(nodes, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn clock_advances_with_pops() {
+        let mut q = EventQueue::new();
+        q.push(0.25, EventKind::PhaseBarrier { round: 0 });
+        q.push(0.75, EventKind::PhaseBarrier { round: 1 });
+        assert_eq!(q.now, 0.0);
+        q.pop();
+        assert_eq!(q.now, 0.25);
+        q.pop();
+        assert_eq!(q.now, 0.75);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn trace_records_only_when_enabled() {
+        let mut on = Trace::new(true);
+        let mut off = Trace::new(false);
+        on.record(1.0, EventKind::PhaseBarrier { round: 0 });
+        off.record(1.0, EventKind::PhaseBarrier { round: 0 });
+        assert_eq!(on.len(), 1);
+        assert!(off.is_empty());
+    }
+}

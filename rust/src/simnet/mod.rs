@@ -1,0 +1,178 @@
+//! `simnet` — a deterministic discrete-event network simulator for
+//! decentralized gossip: stragglers, heterogeneous/lossy links and
+//! asynchronous execution, with a virtual clock.
+//!
+//! The paper's headline claim is about *communication efficiency* —
+//! accuracy per unit of communication — but an analytic α–β max (the
+//! [`comm::CostModel`](crate::comm::CostModel) bulk-synchronous bound)
+//! cannot express the scenarios where topology choice matters most:
+//! heterogeneous links, stragglers and dropped messages. This subsystem
+//! makes time-to-accuracy a *measured* quantity: gossip unfolds as events
+//! on a simulated network and the clock reads whatever the event sequence
+//! says.
+//!
+//! # Architecture
+//!
+//! ```text
+//!            SimConfig (scenario preset + CLI knobs + seed)
+//!                │
+//!                ▼
+//!   ┌──────────────────────────────┐     sparse GossipPlan schedules
+//!   │ NetworkModel (net.rs)        │     (topology::GraphSequence)
+//!   │  LinkModel    α–β per link   │                │
+//!   │  ComputeModel stragglers     │                ▼
+//!   │  drop_rate    message loss   │──────► drivers (driver.rs)
+//!   │  Rng          seeded draws   │        sim_consensus / sim_train
+//!   └──────────────────────────────┘                │ schedules
+//!                                                   ▼
+//!   ┌────────────────────────────────────────────────────────────┐
+//!   │ EventQueue (event.rs): binary heap ordered by (time, seq)  │
+//!   │   ComputeDone ──► serialize sends over out-neighbors,      │
+//!   │                   sample drops, schedule MessageArrive     │
+//!   │   MessageArrive ► fill mailbox / arrival flags             │
+//!   │   PhaseBarrier ─► trace marker: in BSP mode the queue      │
+//!   │                   drains, the barrier is stamped at the    │
+//!   │                   max event time, then mix + post-mix run  │
+//!   └────────────────────────────────────────────────────────────┘
+//!                │
+//!                ▼
+//!   CommLedger (event-clock seconds) + RoundRecord / SimTrace
+//!   (time-to-target-accuracy, per-iteration consensus error)
+//! ```
+//!
+//! # Execution modes
+//!
+//! * **Bulk-synchronous** ([`ExecMode::BulkSynchronous`]) — a barrier per
+//!   gossip phase: every node computes, every surviving message is
+//!   delivered, then all nodes mix. Under the ideal network (zero latency,
+//!   zero loss, instant compute) this reproduces the analytic trainer's
+//!   trajectory *bit-exactly* — the event engine is a strict
+//!   generalization, which the equivalence tests in `driver.rs` pin down.
+//! * **Asynchronous / local-steps** ([`ExecMode::Async`]) — no barriers:
+//!   when a node finishes local compute it gossips with whatever neighbor
+//!   payloads have arrived, renormalizing weights for the missing peers,
+//!   commits, and immediately starts its next round. Fast nodes run ahead;
+//!   stragglers stop being a global bottleneck.
+//!
+//! Messages a node sends within one phase are serialized (the α–β
+//! assumption: one NIC per node), so a degree-k exchange costs k
+//! back-to-back sends on the busiest node — matching the analytic
+//! [`CommLedger::record_round`](crate::comm::CommLedger::record_round)
+//! bound in the homogeneous zero-compute case.
+//!
+//! # Determinism
+//!
+//! Everything — straggler subset, compute jitter, drop coin-flips, event
+//! order — derives from `SimConfig::seed`. Identical seed ⇒ identical
+//! event trace and identical final parameters; see
+//! `identical_seed_identical_trace_and_params` in `driver.rs`.
+
+pub mod driver;
+pub mod event;
+pub mod net;
+pub mod scenario;
+
+pub use driver::{sim_consensus, sim_train, SimRunResult, SimTrace};
+pub use event::{Event, EventKind, EventQueue, Trace};
+pub use net::{ComputeModel, LinkModel, NetworkModel};
+pub use scenario::Scenario;
+
+/// Execution discipline of the event-driven drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Barrier per gossip phase: compute, deliver, then mix in lockstep.
+    BulkSynchronous,
+    /// No barriers: each node mixes with whatever has arrived and moves
+    /// on (local steps), renormalizing weights for missing peers.
+    Async,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<ExecMode, String> {
+        match s.trim().to_lowercase().as_str() {
+            "bsp" | "sync" | "bulk-synchronous" => Ok(ExecMode::BulkSynchronous),
+            "async" | "local" | "asynchronous" => Ok(ExecMode::Async),
+            other => {
+                Err(format!("unknown execution mode {other:?} (bsp|async)"))
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::BulkSynchronous => "bsp",
+            ExecMode::Async => "async",
+        }
+    }
+}
+
+/// Everything that parameterizes one simulated run. Build from a
+/// [`Scenario`] preset and layer CLI knob overrides on top.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub links: LinkModel,
+    pub compute: ComputeModel,
+    /// Probability that any single directed message is lost in flight.
+    pub drop_rate: f64,
+    pub mode: ExecMode,
+    /// Seeds the straggler subset, jitter and loss draws.
+    pub seed: u64,
+    /// Record the full event trace (determinism tests, debugging).
+    pub record_trace: bool,
+}
+
+impl SimConfig {
+    /// The ideal network: zero latency, zero loss, instant homogeneous
+    /// compute, bulk-synchronous. Must reproduce the analytic
+    /// trainer/consensus loops exactly.
+    pub fn ideal() -> Self {
+        SimConfig {
+            links: LinkModel::zero(),
+            compute: ComputeModel::instant(),
+            drop_rate: 0.0,
+            mode: ExecMode::BulkSynchronous,
+            seed: 0,
+            record_trace: false,
+        }
+    }
+
+    /// Instantiate the physical network for `n` nodes.
+    pub fn network(&self, n: usize) -> NetworkModel {
+        NetworkModel::new(
+            n,
+            self.links.clone(),
+            self.compute.clone(),
+            self.drop_rate,
+            self.seed,
+        )
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self::ideal()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ExecMode::parse("bsp").unwrap(), ExecMode::BulkSynchronous);
+        assert_eq!(ExecMode::parse("ASYNC").unwrap(), ExecMode::Async);
+        assert_eq!(ExecMode::parse("local").unwrap(), ExecMode::Async);
+        assert!(ExecMode::parse("warp").is_err());
+        assert_eq!(ExecMode::BulkSynchronous.label(), "bsp");
+    }
+
+    #[test]
+    fn ideal_config_is_free() {
+        let cfg = SimConfig::ideal();
+        let mut net = cfg.network(4);
+        assert_eq!(net.compute_seconds(0), 0.0);
+        assert_eq!(net.links.send_seconds(0, 1, 4096), 0.0);
+        assert!(!net.dropped());
+    }
+}

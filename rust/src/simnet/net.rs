@@ -1,0 +1,245 @@
+//! Physical models plugged into the event engine: per-link α–β costs
+//! (heterogeneous, e.g. rack-local vs cross-rack), per-node compute time
+//! (stragglers with jitter) and message loss.
+//!
+//! All stochastic draws come from a single [`Rng`] seeded from the run's
+//! `--seed`, consumed in event-processing order, so the whole physical
+//! layer is reproducible.
+
+use crate::comm::CostModel;
+use crate::util::rng::Rng;
+
+/// Per-link latency/bandwidth model.
+#[derive(Debug, Clone)]
+pub enum LinkModel {
+    /// Every link shares the same α–β cost.
+    Uniform(CostModel),
+    /// Rack-structured heterogeneity: nodes `i` and `j` share a rack iff
+    /// `i / rack_size == j / rack_size`; intra-rack links use `local`,
+    /// cross-rack links `remote`.
+    Racks { rack_size: usize, local: CostModel, remote: CostModel },
+}
+
+impl LinkModel {
+    /// Zero-cost links (the ideal network).
+    pub fn zero() -> Self {
+        LinkModel::Uniform(CostModel { alpha: 0.0, beta: 0.0 })
+    }
+
+    /// Seconds the link `src → dst` needs to move `bytes` payload bytes.
+    pub fn send_seconds(&self, src: usize, dst: usize, bytes: u64) -> f64 {
+        let c = match self {
+            LinkModel::Uniform(c) => c,
+            LinkModel::Racks { rack_size, local, remote } => {
+                let rs = (*rack_size).max(1);
+                if src / rs == dst / rs {
+                    local
+                } else {
+                    remote
+                }
+            }
+        };
+        c.alpha + c.beta * bytes as f64
+    }
+
+    /// Override α and/or β on every link class (CLI `--alpha`/`--beta`
+    /// flags layered over a scenario preset).
+    pub fn override_cost(&mut self, alpha: Option<f64>, beta: Option<f64>) {
+        let apply = |c: &mut CostModel| {
+            if let Some(a) = alpha {
+                c.alpha = a;
+            }
+            if let Some(b) = beta {
+                c.beta = b;
+            }
+        };
+        match self {
+            LinkModel::Uniform(c) => apply(c),
+            LinkModel::Racks { local, remote, .. } => {
+                apply(local);
+                apply(remote);
+            }
+        }
+    }
+}
+
+/// Per-node compute-time model: a base mean, a deterministic straggler
+/// subset running `straggler_factor`× slower, and uniform jitter.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Mean seconds of local compute per round (0 = instantaneous).
+    pub mean_seconds: f64,
+    /// Relative jitter: each draw is `base * (1 + jitter * u)`, u ~ U[0,1).
+    pub jitter: f64,
+    /// Slow-down multiplier applied to straggler nodes (1.0 disables).
+    pub straggler_factor: f64,
+    /// Fraction of nodes designated stragglers (rounded up when > 0).
+    pub straggler_frac: f64,
+}
+
+impl ComputeModel {
+    /// Zero compute time — gossip dominates entirely.
+    pub fn instant() -> Self {
+        ComputeModel {
+            mean_seconds: 0.0,
+            jitter: 0.0,
+            straggler_factor: 1.0,
+            straggler_frac: 0.0,
+        }
+    }
+}
+
+/// A fully instantiated network for one run: link + compute models, the
+/// chosen straggler subset, the loss process and the RNG driving them.
+#[derive(Debug)]
+pub struct NetworkModel {
+    pub links: LinkModel,
+    pub compute: ComputeModel,
+    pub drop_rate: f64,
+    slow: Vec<bool>,
+    rng: Rng,
+}
+
+impl NetworkModel {
+    /// Instantiate for `n` nodes. The straggler subset and every later
+    /// stochastic draw derive from `seed` alone.
+    pub fn new(
+        n: usize,
+        links: LinkModel,
+        compute: ComputeModel,
+        drop_rate: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x51D0_EE17_C0FF_EE00);
+        let mut slow = vec![false; n];
+        if n > 0 && compute.straggler_factor != 1.0 && compute.straggler_frac > 0.0
+        {
+            let k = ((n as f64 * compute.straggler_frac).ceil() as usize)
+                .clamp(1, n);
+            for i in rng.choose_k(n, k) {
+                slow[i] = true;
+            }
+        }
+        NetworkModel { links, compute, drop_rate, slow, rng }
+    }
+
+    pub fn is_straggler(&self, node: usize) -> bool {
+        self.slow[node]
+    }
+
+    pub fn straggler_count(&self) -> usize {
+        self.slow.iter().filter(|&&s| s).count()
+    }
+
+    /// Draw node `node`'s local compute time for one round.
+    pub fn compute_seconds(&mut self, node: usize) -> f64 {
+        let c = &self.compute;
+        if c.mean_seconds <= 0.0 {
+            return 0.0;
+        }
+        let mut t = c.mean_seconds;
+        if self.slow[node] {
+            t *= c.straggler_factor;
+        }
+        if c.jitter > 0.0 {
+            t *= 1.0 + c.jitter * self.rng.next_f64();
+        }
+        t
+    }
+
+    /// Sample whether one message is lost in flight.
+    pub fn dropped(&mut self) -> bool {
+        self.drop_rate > 0.0 && self.rng.chance(self.drop_rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_network_is_free_and_lossless() {
+        let mut net = NetworkModel::new(
+            8,
+            LinkModel::zero(),
+            ComputeModel::instant(),
+            0.0,
+            0,
+        );
+        assert_eq!(net.links.send_seconds(0, 5, 1 << 20), 0.0);
+        assert_eq!(net.compute_seconds(3), 0.0);
+        assert!(!net.dropped());
+        assert_eq!(net.straggler_count(), 0);
+    }
+
+    #[test]
+    fn rack_links_distinguish_local_and_remote() {
+        let links = LinkModel::Racks {
+            rack_size: 4,
+            local: CostModel { alpha: 1e-5, beta: 0.0 },
+            remote: CostModel { alpha: 1e-2, beta: 0.0 },
+        };
+        assert_eq!(links.send_seconds(0, 3, 100), 1e-5); // same rack
+        assert_eq!(links.send_seconds(0, 4, 100), 1e-2); // cross rack
+        assert_eq!(links.send_seconds(5, 7, 100), 1e-5);
+    }
+
+    #[test]
+    fn override_cost_applies_to_all_classes() {
+        let mut links = LinkModel::Racks {
+            rack_size: 4,
+            local: CostModel { alpha: 1.0, beta: 1.0 },
+            remote: CostModel { alpha: 2.0, beta: 2.0 },
+        };
+        links.override_cost(Some(5.0), None);
+        assert_eq!(links.send_seconds(0, 1, 0), 5.0);
+        assert_eq!(links.send_seconds(0, 4, 0), 5.0);
+        let mut uni = LinkModel::Uniform(CostModel { alpha: 0.0, beta: 1.0 });
+        uni.override_cost(None, Some(2.0));
+        assert_eq!(uni.send_seconds(1, 2, 10), 20.0);
+    }
+
+    #[test]
+    fn straggler_subset_is_seeded_and_slow() {
+        let compute = ComputeModel {
+            mean_seconds: 1.0,
+            jitter: 0.0,
+            straggler_factor: 10.0,
+            straggler_frac: 0.25,
+        };
+        let mut a = NetworkModel::new(16, LinkModel::zero(), compute.clone(), 0.0, 7);
+        let b = NetworkModel::new(16, LinkModel::zero(), compute.clone(), 0.0, 7);
+        assert_eq!(a.straggler_count(), 4);
+        for i in 0..16 {
+            assert_eq!(a.is_straggler(i), b.is_straggler(i), "node {i}");
+            let t = a.compute_seconds(i);
+            if a.is_straggler(i) {
+                assert_eq!(t, 10.0);
+            } else {
+                assert_eq!(t, 1.0);
+            }
+        }
+        // A different seed picks a (very likely) different subset; at the
+        // very least it is still exactly 4 nodes.
+        let c = NetworkModel::new(16, LinkModel::zero(), compute, 0.0, 8);
+        assert_eq!(c.straggler_count(), 4);
+    }
+
+    #[test]
+    fn drop_sampling_is_deterministic_per_seed() {
+        let mk = |seed| {
+            let mut net = NetworkModel::new(
+                4,
+                LinkModel::zero(),
+                ComputeModel::instant(),
+                0.5,
+                seed,
+            );
+            (0..64).map(|_| net.dropped()).collect::<Vec<bool>>()
+        };
+        assert_eq!(mk(3), mk(3));
+        assert_ne!(mk(3), mk(4));
+        let drops = mk(3).iter().filter(|&&d| d).count();
+        assert!(drops > 10 && drops < 54, "drops={drops}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Named scenario presets for the simulator — the `--scenario` vocabulary
+//! of the `basegraph simnet` CLI and the repro sweep. Each preset is a
+//! starting [`SimConfig`]; individual knobs (`--drop-rate`,
+//! `--straggler-factor`, `--alpha`, `--beta`) layer on top.
+
+use super::{ComputeModel, ExecMode, LinkModel, SimConfig};
+use crate::comm::CostModel;
+
+/// A named network scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Zero latency, zero loss, instant compute — the analytic limit.
+    Ideal,
+    /// Homogeneous 10 Gbit/s LAN with mild compute jitter.
+    Lan,
+    /// Wide-area links: 20 ms latency, ~1.6 Gbit/s.
+    Wan,
+    /// LAN plus a 12.5% straggler subset running 10× slower.
+    Straggler,
+    /// LAN plus 5% message loss.
+    Lossy,
+    /// Rack-structured: racks of 8 with 20× slower cross-rack latency.
+    Racks,
+    /// Everything at once: racks, stragglers and 10% loss.
+    Hostile,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 7] = [
+        Scenario::Ideal,
+        Scenario::Lan,
+        Scenario::Wan,
+        Scenario::Straggler,
+        Scenario::Lossy,
+        Scenario::Racks,
+        Scenario::Hostile,
+    ];
+
+    pub fn parse(s: &str) -> Result<Scenario, String> {
+        Ok(match s.trim().to_lowercase().as_str() {
+            "ideal" => Scenario::Ideal,
+            "lan" => Scenario::Lan,
+            "wan" => Scenario::Wan,
+            "straggler" | "stragglers" => Scenario::Straggler,
+            "lossy" | "drops" => Scenario::Lossy,
+            "racks" | "rack" => Scenario::Racks,
+            "hostile" => Scenario::Hostile,
+            other => {
+                return Err(format!(
+                    "unknown scenario {other:?} \
+                     (ideal|lan|wan|straggler|lossy|racks|hostile)"
+                ))
+            }
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Ideal => "ideal",
+            Scenario::Lan => "lan",
+            Scenario::Wan => "wan",
+            Scenario::Straggler => "straggler",
+            Scenario::Lossy => "lossy",
+            Scenario::Racks => "racks",
+            Scenario::Hostile => "hostile",
+        }
+    }
+
+    /// Build the preset's [`SimConfig`] (bulk-synchronous by default; set
+    /// `mode` afterwards for async runs).
+    pub fn config(&self, seed: u64) -> SimConfig {
+        let lan = CostModel { alpha: 1e-4, beta: 8e-10 };
+        let cross = CostModel { alpha: 2e-3, beta: 8e-9 };
+        let compute = ComputeModel {
+            mean_seconds: 5e-3,
+            jitter: 0.2,
+            straggler_factor: 1.0,
+            straggler_frac: 0.0,
+        };
+        let straggling = ComputeModel {
+            straggler_factor: 10.0,
+            straggler_frac: 0.125,
+            ..compute.clone()
+        };
+        let mut cfg = SimConfig {
+            links: LinkModel::Uniform(lan),
+            compute,
+            drop_rate: 0.0,
+            mode: ExecMode::BulkSynchronous,
+            seed,
+            record_trace: false,
+        };
+        match self {
+            Scenario::Ideal => {
+                cfg.links = LinkModel::zero();
+                cfg.compute = ComputeModel::instant();
+            }
+            Scenario::Lan => {}
+            Scenario::Wan => {
+                cfg.links = LinkModel::Uniform(CostModel {
+                    alpha: 2e-2,
+                    beta: 5e-9,
+                });
+            }
+            Scenario::Straggler => cfg.compute = straggling,
+            Scenario::Lossy => cfg.drop_rate = 0.05,
+            Scenario::Racks => {
+                cfg.links = LinkModel::Racks {
+                    rack_size: 8,
+                    local: lan,
+                    remote: cross,
+                };
+            }
+            Scenario::Hostile => {
+                cfg.links = LinkModel::Racks {
+                    rack_size: 8,
+                    local: lan,
+                    remote: cross,
+                };
+                cfg.compute = straggling;
+                cfg.drop_rate = 0.1;
+            }
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_all_labels() {
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.label()).unwrap(), sc);
+        }
+        assert!(Scenario::parse("chaos-monkey").is_err());
+    }
+
+    #[test]
+    fn presets_have_expected_shape() {
+        let ideal = Scenario::Ideal.config(0);
+        assert_eq!(ideal.drop_rate, 0.0);
+        assert_eq!(ideal.links.send_seconds(0, 9, 1 << 20), 0.0);
+
+        let strag = Scenario::Straggler.config(0);
+        assert_eq!(strag.compute.straggler_factor, 10.0);
+        assert!(strag.compute.straggler_frac > 0.0);
+        assert_eq!(strag.drop_rate, 0.0);
+
+        let lossy = Scenario::Lossy.config(0);
+        assert_eq!(lossy.drop_rate, 0.05);
+
+        let hostile = Scenario::Hostile.config(0);
+        assert_eq!(hostile.drop_rate, 0.1);
+        assert!(matches!(hostile.links, LinkModel::Racks { .. }));
+        // Cross-rack costs more than rack-local.
+        assert!(
+            hostile.links.send_seconds(0, 8, 4096)
+                > hostile.links.send_seconds(0, 7, 4096)
+        );
+    }
+}

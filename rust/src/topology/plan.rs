@@ -223,6 +223,57 @@ impl GossipPlan {
         }
     }
 
+    /// Like [`GossipPlan::gossip_row`], but tolerant of missing neighbor
+    /// payloads: `get(j)` returns `None` when peer `j`'s message was
+    /// dropped or has not arrived yet (the simnet drivers), in which case
+    /// the surviving weights are renormalized to sum to 1 so the row stays
+    /// stochastic. With every payload present the arithmetic is
+    /// bit-identical to [`GossipPlan::gossip_row`]. Returns how many
+    /// neighbor payloads were mixed.
+    pub fn gossip_row_partial<'a>(
+        &self,
+        i: usize,
+        own: &[f64],
+        get: impl Fn(usize) -> Option<&'a [f64]>,
+        out: &mut [f64],
+    ) -> usize {
+        let row = self.neighbors(i);
+        let mut missing = 0.0f64;
+        let mut any_missing = false;
+        for &(j, w) in row {
+            if get(j).is_none() {
+                missing += w;
+                any_missing = true;
+            }
+        }
+        let (sw, scale) = if !any_missing {
+            (self.self_w[i], 1.0)
+        } else {
+            let total = 1.0 - missing;
+            if total <= f64::EPSILON {
+                // Everything (including self weight) was on lost peers:
+                // keep the old value.
+                (1.0, 0.0)
+            } else {
+                (self.self_w[i] / total, 1.0 / total)
+            }
+        };
+        for (o, &x) in out.iter_mut().zip(own) {
+            *o = sw * x;
+        }
+        let mut used = 0;
+        for &(j, w) in row {
+            if let Some(xj) = get(j) {
+                let wj = w * scale;
+                for (o, &x) in out.iter_mut().zip(xj) {
+                    *o += wj * x;
+                }
+                used += 1;
+            }
+        }
+        used
+    }
+
     /// Sparse symmetry check: every `(i → j, w)` entry has a matching
     /// `(j → i, w)` within `tol`. Rows are peer-sorted, so each lookup is
     /// a binary search.
@@ -387,6 +438,68 @@ mod tests {
         let xs = vec![vec![1.0], vec![2.0], vec![3.0]];
         assert_eq!(p.gossip(&xs), xs);
         assert!(!p.is_active(0));
+    }
+
+    #[test]
+    fn partial_gossip_with_all_payloads_matches_gossip_row() {
+        let p = GossipPlan::from_undirected(
+            4,
+            &[(0, 1, 0.25), (1, 2, 0.25), (2, 3, 0.25), (0, 3, 0.25)],
+        );
+        let xs: Vec<Vec<f64>> =
+            (0..4).map(|i| vec![i as f64 * 1.7 - 2.0, 0.3]).collect();
+        for i in 0..4 {
+            let mut full = vec![0.0; 2];
+            let mut partial = vec![0.0; 2];
+            p.gossip_row(i, &xs, &mut full);
+            let used = p.gossip_row_partial(
+                i,
+                &xs[i],
+                |j| Some(xs[j].as_slice()),
+                &mut partial,
+            );
+            assert_eq!(used, p.degree(i));
+            // Bit-identical, not just close: the simnet BSP driver relies
+            // on this to reproduce the analytic trainer exactly.
+            assert_eq!(full, partial, "row {i}");
+        }
+    }
+
+    #[test]
+    fn partial_gossip_renormalizes_missing_peers() {
+        // Node 0 mixes peers 1 and 2 with weight 1/4 each (self 1/2).
+        let p = GossipPlan::from_undirected(
+            3,
+            &[(0, 1, 0.25), (0, 2, 0.25)],
+        );
+        let xs = [vec![1.0], vec![5.0], vec![9.0]];
+        // Peer 2's payload is missing: weights renormalize to
+        // self 2/3, peer1 1/3 -> 1*2/3 + 5*1/3 = 7/3.
+        let mut out = vec![0.0];
+        let used = p.gossip_row_partial(
+            0,
+            &xs[0],
+            |j| if j == 1 { Some(xs[1].as_slice()) } else { None },
+            &mut out,
+        );
+        assert_eq!(used, 1);
+        assert!((out[0] - 7.0 / 3.0).abs() < 1e-12, "got {}", out[0]);
+        // Everything missing: node keeps its own value.
+        let mut out = vec![0.0];
+        let used = p.gossip_row_partial(0, &xs[0], |_| None, &mut out);
+        assert_eq!(used, 0);
+        assert!((out[0] - 1.0).abs() < 1e-12);
+        // Row stays stochastic under renormalization: constant input is a
+        // fixed point whatever subset of payloads survives.
+        let ones = [vec![2.0], vec![2.0], vec![2.0]];
+        let mut out = vec![0.0];
+        p.gossip_row_partial(
+            0,
+            &ones[0],
+            |j| if j == 2 { Some(ones[2].as_slice()) } else { None },
+            &mut out,
+        );
+        assert!((out[0] - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -15,9 +15,70 @@ use crate::metrics::{RoundRecord, RunResult};
 use crate::optim::OptimizerKind;
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::GradProvider;
-use crate::topology::GraphSequence;
+use crate::topology::{GossipPlan, GraphSequence};
 use crate::util::threadpool::ThreadPool;
 use node_data::NodeData;
+
+/// One node's f32 gossip combine over `plan`'s neighbor list, with
+/// optimizer damping λ (the engine mixes with W̃ = (1−λ)W + λI) and
+/// tolerance for missing neighbor payloads: `get(j)` returns `None` when
+/// peer `j`'s message was dropped or has not arrived (the simnet drivers),
+/// in which case the surviving weights are renormalized to sum to 1.
+///
+/// With every payload present the arithmetic is bit-identical to the
+/// bulk-synchronous trainer's hot combine — this is the single function
+/// both the analytic trainer and the event-driven simnet trainer run, so
+/// "simnet under an ideal network reproduces the trainer exactly" holds by
+/// construction. Returns how many neighbor payloads were mixed.
+pub fn gossip_combine<'a>(
+    plan: &GossipPlan,
+    i: usize,
+    damping: f32,
+    own: &[f32],
+    get: impl Fn(usize) -> Option<&'a [f32]>,
+    out: &mut [f32],
+) -> usize {
+    let sw0 = plan.self_weight(i) as f32 * (1.0 - damping) + damping;
+    let row = plan.neighbors(i);
+    let mut missing = 0.0f32;
+    let mut any_missing = false;
+    for &(j, wij) in row {
+        let wf = wij as f32 * (1.0 - damping);
+        if wf != 0.0 && get(j).is_none() {
+            missing += wf;
+            any_missing = true;
+        }
+    }
+    let (sw, scale) = if !any_missing {
+        (sw0, 1.0f32)
+    } else {
+        let total = 1.0 - missing;
+        if total <= f32::EPSILON {
+            // Every surviving weight vanished: keep the old value.
+            (1.0, 0.0)
+        } else {
+            (sw0 / total, 1.0 / total)
+        }
+    };
+    for (o, &s) in out.iter_mut().zip(own) {
+        *o = sw * s;
+    }
+    let mut used = 0;
+    for &(j, wij) in row {
+        let wf = wij as f32 * (1.0 - damping);
+        if wf == 0.0 {
+            continue;
+        }
+        if let Some(src) = get(j) {
+            let w = wf * scale;
+            for (o, &s) in out.iter_mut().zip(src) {
+                *o += w * s;
+            }
+            used += 1;
+        }
+    }
+    used
+}
 
 /// Training hyperparameters (paper Sec. H analogue).
 #[derive(Debug, Clone)]
@@ -162,22 +223,7 @@ pub fn train(
             let msgs: Vec<&[f32]> =
                 nodes.iter().map(|s| s.pending[m].as_slice()).collect();
             let combine = |i: usize, out: &mut Vec<f32>| {
-                let self_w = plan.self_weight(i) as f32 * (1.0 - damping)
-                    + damping;
-                let own = msgs[i];
-                for (o, &s) in out.iter_mut().zip(own) {
-                    *o = self_w * s;
-                }
-                for &(j, wij) in plan.neighbors(i) {
-                    let wf = wij as f32 * (1.0 - damping);
-                    if wf == 0.0 {
-                        continue;
-                    }
-                    let src = msgs[j];
-                    for (o, &s) in out.iter_mut().zip(src) {
-                        *o += wf * s;
-                    }
-                }
+                gossip_combine(plan, i, damping, msgs[i], |j| Some(msgs[j]), out);
             };
             if parallel_gossip {
                 pool.for_each_mut(&mut scratch, combine);
@@ -222,7 +268,10 @@ pub fn train(
                 .collect();
             rec.consensus_error = consensus::consensus_error(&params_f64);
             if !eval_batches.is_empty() {
-                let avg = average_params(&nodes, d);
+                let avg = average_params(
+                    nodes.iter().map(|s| s.params.as_slice()),
+                    d,
+                );
                 let (loss, acc) =
                     evaluate(provider, &avg, eval_batches)?;
                 rec.test_loss = loss;
@@ -236,15 +285,23 @@ pub fn train(
     Ok(result)
 }
 
-fn average_params(nodes: &[NodeState], d: usize) -> Vec<f32> {
-    let n = nodes.len();
+/// Node-averaged parameter vector (f64 accumulation in node order) — the
+/// model that gets evaluated at eval points, shared with the simnet
+/// drivers so both paths average identically.
+pub fn average_params<'a>(
+    params: impl IntoIterator<Item = &'a [f32]>,
+    d: usize,
+) -> Vec<f32> {
     let mut avg = vec![0.0f64; d];
-    for s in nodes {
-        for (a, &p) in avg.iter_mut().zip(&s.params) {
-            *a += p as f64;
+    let mut n = 0usize;
+    for p in params {
+        n += 1;
+        for (a, &x) in avg.iter_mut().zip(p) {
+            *a += x as f64;
         }
     }
-    avg.into_iter().map(|x| (x / n as f64) as f32).collect()
+    let n = n.max(1) as f64;
+    avg.into_iter().map(|x| (x / n) as f32).collect()
 }
 
 /// Evaluate params over a batch list; returns (mean loss, accuracy).
@@ -483,6 +540,57 @@ mod tests {
         };
         assert_eq!(flat.lr_at(0), 0.5);
         assert_eq!(flat.lr_at(99), 0.5);
+    }
+
+    #[test]
+    fn gossip_combine_renormalizes_missing_payloads() {
+        use crate::topology::GossipPlan;
+        // Node 0 mixes peers 1 and 2 with weight 1/4 each (self 1/2).
+        let plan = GossipPlan::from_undirected(
+            3,
+            &[(0, 1, 0.25), (0, 2, 0.25)],
+        );
+        let msgs: Vec<Vec<f32>> = vec![vec![1.0], vec![5.0], vec![9.0]];
+        let refs: Vec<&[f32]> = msgs.iter().map(|m| m.as_slice()).collect();
+        // All present: plain weighted combine.
+        let mut out = vec![0.0f32];
+        let used =
+            gossip_combine(&plan, 0, 0.0, refs[0], |j| Some(refs[j]), &mut out);
+        assert_eq!(used, 2);
+        assert!((out[0] - (0.5 + 1.25 + 2.25)).abs() < 1e-6);
+        // Peer 2 missing: self 2/3, peer1 1/3.
+        let mut out = vec![0.0f32];
+        let used = gossip_combine(
+            &plan,
+            0,
+            0.0,
+            refs[0],
+            |j| if j == 1 { Some(refs[1]) } else { None },
+            &mut out,
+        );
+        assert_eq!(used, 1);
+        assert!((out[0] - 7.0 / 3.0).abs() < 1e-6, "got {}", out[0]);
+        // All missing: node keeps its own value.
+        let mut out = vec![0.0f32];
+        assert_eq!(
+            gossip_combine(&plan, 0, 0.0, refs[0], |_| None, &mut out),
+            0
+        );
+        assert!((out[0] - 1.0).abs() < 1e-7);
+        // Damping λ=1/2 with a missing peer still yields a stochastic row:
+        // constant input stays fixed.
+        let ones: Vec<Vec<f32>> = vec![vec![3.0]; 3];
+        let orefs: Vec<&[f32]> = ones.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0.0f32];
+        gossip_combine(
+            &plan,
+            0,
+            0.5,
+            orefs[0],
+            |j| if j == 1 { Some(orefs[1]) } else { None },
+            &mut out,
+        );
+        assert!((out[0] - 3.0).abs() < 1e-6, "got {}", out[0]);
     }
 
     #[test]
