@@ -7,6 +7,7 @@
 //! Run: `cargo run --release --offline --example decentralized_cifar_like`
 //!      (add `-- pjrt` to force the CNN artifact path)
 
+use basegraph::exec::ExecutorKind;
 use basegraph::optim::OptimizerKind;
 use basegraph::repro::common::{
     classification_workload, print_table, run_training, Engine,
@@ -52,6 +53,7 @@ fn main() -> Result<(), String> {
             rounds,
             0.3,
             1,
+            &ExecutorKind::analytic(),
         )?;
         let last = res.records.last().unwrap();
         rows.push(vec![

@@ -18,11 +18,12 @@
 use std::sync::Arc;
 
 use basegraph::data::corpus;
+use basegraph::exec::{AnalyticExecutor, Executor, TrainingWorkload};
 use basegraph::optim::OptimizerKind;
 use basegraph::runtime::{GradProvider, PjrtModel};
 use basegraph::topology::TopologyKind;
 use basegraph::train::node_data::{CorpusShard, NodeData};
-use basegraph::train::{train, TrainConfig};
+use basegraph::train::TrainConfig;
 use basegraph::util::rng::Rng;
 
 fn main() -> Result<(), String> {
@@ -136,9 +137,15 @@ fn main() -> Result<(), String> {
         "training {rounds} rounds of DSGDm (lr {}, cosine, warmup {}) ...\n",
         cfg.lr, cfg.warmup
     );
-    let t0 = std::time::Instant::now();
-    let res = train(&model, &seq, node_data, &eval_batches, &cfg)?;
-    let wall = t0.elapsed().as_secs_f64();
+    // Executor API: the training round protocol is a Workload; the
+    // analytic backend is the ideal lock-step loop (and measures wall
+    // time itself).
+    let mut workload =
+        TrainingWorkload::new(&model, &cfg, node_data, &eval_batches);
+    let exec = AnalyticExecutor::new(cfg.cost, cfg.threads);
+    let trace = exec.run(&mut workload, &seq, cfg.rounds)?;
+    let wall = trace.wall_seconds;
+    let res = trace.run;
 
     println!("round  train-loss  eval-loss  token-acc  consensus    comm");
     let uniform = (corpus::VOCAB as f64).ln();

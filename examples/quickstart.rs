@@ -5,6 +5,7 @@
 //! Run: `cargo run --release --offline --example quickstart`
 
 use basegraph::consensus::paper_consensus_experiment;
+use basegraph::exec::ExecutorKind;
 use basegraph::optim::OptimizerKind;
 use basegraph::repro::common::{classification_workload, run_training, Engine};
 use basegraph::topology::TopologyKind;
@@ -43,6 +44,9 @@ fn main() -> Result<(), String> {
         120,
         0.5,
         7,
+        // Swap for ExecutorKind::threaded(0) or ::Simnet(..) to run the
+        // same job on another backend — results are bit-identical.
+        &ExecutorKind::analytic(),
     )?;
     println!("\nround  train-loss  test-acc  consensus-err");
     for r in res.records.iter().filter(|r| !r.test_acc.is_nan()) {

@@ -6,10 +6,11 @@
 //!
 //! Run: `cargo run --release --offline --example simnet_scenarios`
 
-use basegraph::consensus::simnet_consensus_experiment;
+use basegraph::consensus::consensus_experiment;
+use basegraph::exec::{Executor, ExecutorKind, SimnetExecutor, TrainingWorkload};
 use basegraph::optim::OptimizerKind;
 use basegraph::runtime::provider::QuadraticModel;
-use basegraph::simnet::{sim_train, ExecMode, Scenario};
+use basegraph::simnet::{ExecMode, Scenario};
 use basegraph::topology::TopologyKind;
 use basegraph::train::node_data::{FixedBatch, NodeData};
 use basegraph::train::TrainConfig;
@@ -36,7 +37,8 @@ fn main() -> Result<(), String> {
             for mode in [ExecMode::BulkSynchronous, ExecMode::Async] {
                 let mut sim = sc.config(7);
                 sim.mode = mode;
-                let tr = simnet_consensus_experiment(&seq, iters, 7, &sim);
+                let exec = ExecutorKind::Simnet(sim);
+                let tr = consensus_experiment(&seq, iters, 7, &exec)?;
                 let reach = tr
                     .time_to_reach(tol)
                     .map(|t| format!("{t:.4}s"))
@@ -47,7 +49,7 @@ fn main() -> Result<(), String> {
                     kind.label(),
                     mode.label(),
                     tr.final_error(),
-                    tr.messages,
+                    tr.messages(),
                     tr.drops,
                     tr.sim_seconds(),
                 );
@@ -83,7 +85,9 @@ fn main() -> Result<(), String> {
                     as Box<dyn NodeData>
             })
             .collect();
-        let res = sim_train(&model, &seq, data, &[], &cfg, &sc.config(5))?;
+        let mut workload = TrainingWorkload::new(&model, &cfg, data, &[]);
+        let res = SimnetExecutor::new(sc.config(5))
+            .run(&mut workload, &seq, cfg.rounds)?;
         let last = res.run.records.last().unwrap();
         println!(
             "{:>10}: final loss {:.5}, consensus err {:.2e}, \

@@ -2,7 +2,8 @@
 //! topology (the inner loop of Figs. 1/6/21/23) and the spectral
 //! consensus-rate estimator.
 
-use basegraph::consensus::{gaussian_init, simulate};
+use basegraph::consensus::gaussian_init;
+use basegraph::exec::{AnalyticExecutor, ConsensusWorkload, Executor};
 use basegraph::topology::TopologyKind;
 use basegraph::util::bench::{black_box, Bencher};
 use basegraph::util::rng::Rng;
@@ -27,7 +28,12 @@ fn main() {
             b.bench(
                 &format!("sweep {} n={n} ({iters} it)", kind.label()),
                 || {
-                    black_box(simulate(&seq, &init, iters));
+                    let mut w = ConsensusWorkload::new(init.clone());
+                    black_box(
+                        AnalyticExecutor::serial()
+                            .run(&mut w, &seq, iters)
+                            .unwrap(),
+                    );
                 },
             );
         }
@@ -38,7 +44,12 @@ fn main() {
         let mut rng = Rng::new(1);
         let init = gaussian_init(n, 26122, &mut rng);
         b.bench(&format!("sweep base-2 n={n} d=26122"), || {
-            black_box(simulate(&seq, &init, seq.len()));
+            let mut w = ConsensusWorkload::new(init.clone());
+            black_box(
+                AnalyticExecutor::serial()
+                    .run(&mut w, &seq, seq.len())
+                    .unwrap(),
+            );
         });
     }
     println!("\n# spectral consensus-rate estimation (Table 1)");

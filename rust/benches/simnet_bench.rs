@@ -5,7 +5,8 @@
 //! multi-process runs plug into the same drivers).
 
 use basegraph::consensus::gaussian_init;
-use basegraph::simnet::{sim_consensus, ExecMode, Scenario};
+use basegraph::exec::{ConsensusWorkload, Executor, SimnetExecutor};
+use basegraph::simnet::{ExecMode, Scenario};
 use basegraph::topology::TopologyKind;
 use basegraph::util::bench::{black_box, Bencher};
 use basegraph::util::rng::Rng;
@@ -29,7 +30,12 @@ fn main() {
                         mode.label()
                     ),
                     || {
-                        black_box(sim_consensus(&seq, &init, iters, &cfg));
+                        let mut w = ConsensusWorkload::new(init.clone());
+                        black_box(
+                            SimnetExecutor::new(cfg.clone())
+                                .run(&mut w, &seq, iters)
+                                .unwrap(),
+                        );
                     },
                 );
             }
@@ -42,7 +48,12 @@ fn main() {
     let init = gaussian_init(n, 4096, &mut rng);
     let cfg = Scenario::Lan.config(0);
     b.bench(&format!("sim_consensus base-4 n={n} d=4096 lan"), || {
-        black_box(sim_consensus(&seq, &init, seq.len(), &cfg));
+        let mut w = ConsensusWorkload::new(init.clone());
+        black_box(
+            SimnetExecutor::new(cfg.clone())
+                .run(&mut w, &seq, seq.len())
+                .unwrap(),
+        );
     });
     b.dump_jsonl("results/bench_simnet.jsonl");
 }

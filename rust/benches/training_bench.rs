@@ -7,12 +7,15 @@ use std::sync::Arc;
 
 use basegraph::data::partition::iid_partition;
 use basegraph::data::synth::gaussian_mixture;
+use basegraph::exec::{
+    AnalyticExecutor, Executor, ThreadedExecutor, TrainingWorkload,
+};
 use basegraph::optim::OptimizerKind;
 use basegraph::runtime::provider::{GradProvider, RustMlp};
 use basegraph::runtime::{Batch, Features, PjrtModel};
 use basegraph::topology::TopologyKind;
 use basegraph::train::node_data::{ClassificationShard, NodeData};
-use basegraph::train::{train, TrainConfig};
+use basegraph::train::TrainConfig;
 use basegraph::util::bench::{black_box, Bencher};
 use basegraph::util::rng::Rng;
 
@@ -47,7 +50,55 @@ fn native_round_bench(b: &mut Bencher, n: usize, threads: usize) {
                 threads,
                 ..Default::default()
             };
-            black_box(train(&model, &seq, node_data, &[], &cfg).unwrap());
+            let mut w = TrainingWorkload::new(&model, &cfg, node_data, &[]);
+            black_box(
+                AnalyticExecutor::new(cfg.cost, cfg.threads)
+                    .run(&mut w, &seq, cfg.rounds)
+                    .unwrap(),
+            );
+        },
+    );
+}
+
+/// The thread-parallel backend on the same round: measured wall-clock is
+/// the benchmark output itself here.
+fn threaded_round_bench(b: &mut Bencher, n: usize, threads: usize) {
+    let mut rng = Rng::new(0);
+    let ds = Arc::new(gaussian_mixture(2000, 24, 10, 1.0, 0.9, &mut rng));
+    let part = iid_partition(2000, n, &mut rng);
+    let model = RustMlp::new(24, 32, 10, 0);
+    b.bench(
+        &format!("train 10 rounds threaded n={n} threads={threads}"),
+        || {
+            let node_data: Vec<Box<dyn NodeData>> = part
+                .node_indices
+                .iter()
+                .map(|idx| {
+                    Box::new(ClassificationShard::new(
+                        ds.clone(),
+                        idx.clone(),
+                        32,
+                        1,
+                    )) as Box<dyn NodeData>
+                })
+                .collect();
+            let seq = TopologyKind::Base { m: 3 }.build(n, 0).unwrap();
+            let cfg = TrainConfig {
+                rounds: 10,
+                lr: 0.1,
+                warmup: 0,
+                cosine: false,
+                optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+                eval_every: 0,
+                threads,
+                ..Default::default()
+            };
+            let mut w = TrainingWorkload::new(&model, &cfg, node_data, &[]);
+            black_box(
+                ThreadedExecutor::new(cfg.cost, threads)
+                    .run(&mut w, &seq, cfg.rounds)
+                    .unwrap(),
+            );
         },
     );
 }
@@ -91,6 +142,10 @@ fn main() {
         for threads in [1usize, 4] {
             native_round_bench(&mut b, n, threads);
         }
+    }
+    println!("\n# threaded executor (one node per worker, real barrier)");
+    for threads in [2usize, 4] {
+        threaded_round_bench(&mut b, 25, threads);
     }
     if std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\n# PJRT per-step dispatch (AOT artifacts)");

@@ -66,14 +66,25 @@ impl CommLedger {
         d: usize,
         cost: &CostModel,
     ) {
+        self.record_round_bytes(plan, (d * 4) as u64, cost);
+    }
+
+    /// Like [`CommLedger::record_round`], but with an explicit per-message
+    /// payload size — the executor layer serves payloads that are not
+    /// always f32 vectors (f64 consensus values, message bundles).
+    pub fn record_round_bytes(
+        &mut self,
+        plan: &GossipPlan,
+        payload_bytes: u64,
+        cost: &CostModel,
+    ) {
         let pc = phase_comm(plan);
-        let payload = (d * 4) as u64;
         self.messages += pc.messages as u64;
-        self.bytes += pc.messages as u64 * payload;
+        self.bytes += pc.messages as u64 * payload_bytes;
         // Bulk-synchronous round time: the busiest node serializes its
         // sends.
         self.sim_seconds += pc.max_degree as f64
-            * (cost.alpha + cost.beta * payload as f64);
+            * (cost.alpha + cost.beta * payload_bytes as f64);
         self.rounds += 1;
     }
 
@@ -82,9 +93,15 @@ impl CommLedger {
     /// simnet drivers count real sends one by one and own the clock
     /// themselves (see [`CommLedger::advance_clock_to`]).
     pub fn record_sends(&mut self, count: usize, d: usize) {
-        let payload = (d * 4) as u64;
+        self.record_payload_sends(count, (d * 4) as u64);
+    }
+
+    /// Record `count` directed sends of `payload_bytes`-sized messages
+    /// without touching the clock (byte-explicit twin of
+    /// [`CommLedger::record_sends`]).
+    pub fn record_payload_sends(&mut self, count: usize, payload_bytes: u64) {
         self.messages += count as u64;
-        self.bytes += count as u64 * payload;
+        self.bytes += count as u64 * payload_bytes;
     }
 
     /// Advance the simulated clock to an event-driven timestamp. Monotone:

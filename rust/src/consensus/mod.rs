@@ -1,11 +1,22 @@
-//! Consensus simulation (Sec. 6.1): iterate `x ← plan.gossip(x)` over a
+//! Consensus simulation (Sec. 6.1): iterate gossip averaging over a
 //! topology's sparse phase sequence and track the consensus error
 //! `(1/n) Σ_i ||x_i − x̄||²` — the quantity plotted in Figs. 1, 6, 21, 23.
 //!
 //! The round loop is O(edges · d) per iteration and never materializes a
 //! dense mixing matrix, so simulations at n in the thousands (e.g. Base-4
 //! at n = 4096) run in milliseconds instead of allocating n² weights.
+//!
+//! **Migration note.** The loop itself now lives in
+//! [`exec::ConsensusWorkload`](crate::exec::ConsensusWorkload) and runs
+//! on any [`exec::Executor`](crate::exec::Executor) backend;
+//! [`consensus_experiment`] is the backend-generic entry point. The old
+//! free functions survive one release as thin deprecated wrappers:
+//! [`simulate`] (analytic backend) and [`simnet_consensus_experiment`]
+//! (event-driven backend).
 
+use crate::exec::{
+    AnalyticExecutor, ConsensusWorkload, ExecTrace, Executor, ExecutorKind,
+};
 use crate::topology::GraphSequence;
 use crate::util::rng::Rng;
 
@@ -28,6 +39,17 @@ impl ConsensusTrace {
     /// Did the run hit (numerically) exact consensus?
     pub fn reached_exact(&self, tol: f64) -> bool {
         self.iters_to_reach(tol).is_some()
+    }
+
+    /// Project the error curve out of an executor trace (consensus
+    /// workloads record one entry per round, index 0 = initial).
+    pub fn from_exec(tr: &ExecTrace) -> ConsensusTrace {
+        ConsensusTrace {
+            topology: tr.topology.clone(),
+            n: tr.n,
+            max_degree: tr.max_degree,
+            errors: tr.errors(),
+        }
     }
 }
 
@@ -67,31 +89,35 @@ pub fn gaussian_init(n: usize, d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
 
 /// Run `iters` gossip iterations of the sequence (cycling through phases)
 /// and record the consensus error after each one.
+#[deprecated(
+    note = "use exec::ConsensusWorkload with an exec::Executor backend \
+            (or consensus_experiment / paper_consensus_experiment)"
+)]
 pub fn simulate(
     seq: &GraphSequence,
     init: &[Vec<f64>],
     iters: usize,
 ) -> ConsensusTrace {
     assert_eq!(init.len(), seq.n, "init size != topology n");
-    let mut xs = init.to_vec();
-    let mut errors = Vec::with_capacity(iters + 1);
-    errors.push(consensus_error(&xs));
-    for r in 0..iters {
-        if !seq.is_empty() {
-            xs = seq.phase(r).gossip(&xs);
-        }
-        errors.push(consensus_error(&xs));
+    if seq.is_empty() {
+        // Historical behavior: no phases means the values never move.
+        let e = consensus_error(init);
+        return ConsensusTrace {
+            topology: seq.name.clone(),
+            n: seq.n,
+            max_degree: 0,
+            errors: vec![e; iters + 1],
+        };
     }
-    ConsensusTrace {
-        topology: seq.name.clone(),
-        n: seq.n,
-        max_degree: seq.max_degree(),
-        errors,
-    }
+    let mut w = ConsensusWorkload::new(init.to_vec());
+    let tr = AnalyticExecutor::serial()
+        .run(&mut w, seq, iters)
+        .expect("consensus workload is infallible");
+    ConsensusTrace::from_exec(&tr)
 }
 
 /// Convenience: the paper's Sec. 6.1 experiment — scalar Gaussian values,
-/// fixed seed, `iters` iterations.
+/// fixed seed, `iters` iterations on the analytic backend.
 pub fn paper_consensus_experiment(
     seq: &GraphSequence,
     iters: usize,
@@ -99,14 +125,35 @@ pub fn paper_consensus_experiment(
 ) -> ConsensusTrace {
     let mut rng = Rng::new(seed);
     let init = gaussian_init(seq.n, 1, &mut rng);
-    simulate(seq, &init, iters)
+    let mut w = ConsensusWorkload::new(init);
+    let tr = AnalyticExecutor::serial()
+        .run(&mut w, seq, iters)
+        .expect("consensus workload is infallible");
+    ConsensusTrace::from_exec(&tr)
 }
 
-/// Event-driven counterpart of [`paper_consensus_experiment`]: same
-/// Gaussian scalar init, but gossip unfolds on the simulated network in
-/// `sim` (stragglers, heterogeneous/lossy links, async execution) and the
-/// returned trace carries event-clock timestamps next to the
-/// per-iteration errors — measured, not derived, time-to-consensus.
+/// Backend-generic Sec. 6.1 experiment: Gaussian scalar init, `iters`
+/// iterations on whatever executor `exec` selects — the analytic loop,
+/// the event-driven network simulator, or real threads with measured
+/// wall-clock. The unified [`ExecTrace`] carries per-iteration errors,
+/// simulated seconds and wall seconds side by side.
+pub fn consensus_experiment(
+    seq: &GraphSequence,
+    iters: usize,
+    seed: u64,
+    exec: &ExecutorKind,
+) -> Result<ExecTrace, String> {
+    let mut rng = Rng::new(seed);
+    let init = gaussian_init(seq.n, 1, &mut rng);
+    exec.run(&mut ConsensusWorkload::new(init), seq, iters)
+}
+
+/// Event-driven counterpart of [`paper_consensus_experiment`].
+#[deprecated(
+    note = "use consensus_experiment with ExecutorKind::Simnet \
+            (returns the unified ExecTrace)"
+)]
+#[allow(deprecated)]
 pub fn simnet_consensus_experiment(
     seq: &GraphSequence,
     iters: usize,
@@ -206,6 +253,20 @@ mod tests {
             "err={:e}",
             trace.errors.last().unwrap()
         );
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn simulate_wrapper_matches_executor_path() {
+        let seq = base::base(13, 1).unwrap();
+        let mut rng = Rng::new(2);
+        let init = gaussian_init(13, 2, &mut rng);
+        let a = simulate(&seq, &init, 10);
+        let b = AnalyticExecutor::serial()
+            .run(&mut ConsensusWorkload::new(init), &seq, 10)
+            .unwrap();
+        assert_eq!(a.errors, b.errors());
+        assert_eq!(a.max_degree, b.max_degree);
     }
 
     #[test]

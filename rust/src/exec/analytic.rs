@@ -1,0 +1,259 @@
+//! The analytic backend: the ideal lock-step loop (every payload
+//! delivered, every node in step), with α–β model seconds on the
+//! simulated clock — the executor form of what `consensus::simulate` and
+//! `train::train` used to hard-code.
+//!
+//! The lock-step engine here is shared with
+//! [`ThreadedExecutor`](super::ThreadedExecutor): both run the same
+//! publish-into-back-buffer / swap / combine-from-front-buffer round
+//! (the "double-buffered mailbox"), they differ only in how much of each
+//! phase runs on the thread pool. Results are bit-identical either way —
+//! per-node work is independent and combines read only payload
+//! snapshots.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{ExecTrace, Executor, Workload};
+use crate::comm::{CommLedger, CostModel};
+use crate::metrics::RunResult;
+use crate::simnet::event::Trace;
+use crate::topology::GraphSequence;
+use crate::util::threadpool::ThreadPool;
+
+/// Ideal lock-step execution; `threads == 0` sizes the pool to the
+/// machine (capped at 16, as the old trainer did). Workloads whose
+/// [`parallel_hint`](Workload::parallel_hint) is false run fully serial.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticExecutor {
+    pub cost: CostModel,
+    pub threads: usize,
+}
+
+impl AnalyticExecutor {
+    pub fn new(cost: CostModel, threads: usize) -> Self {
+        AnalyticExecutor { cost, threads }
+    }
+
+    /// Fully serial executor — the cheapest dispatch for tiny per-node
+    /// work (results are identical at any thread count regardless).
+    pub fn serial() -> Self {
+        AnalyticExecutor { cost: CostModel::default(), threads: 1 }
+    }
+}
+
+impl Executor for AnalyticExecutor {
+    fn backend(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn run<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+    ) -> Result<ExecTrace, String> {
+        let (_, slot_bytes) = w.comm_shape();
+        let pool = if w.parallel_hint() && self.threads != 1 {
+            Some(if self.threads == 0 {
+                ThreadPool::with_default_size(16)
+            } else {
+                ThreadPool::new(self.threads)
+            })
+        } else {
+            None
+        };
+        // Parallel combine only pays off for large rows — the old
+        // trainer's d·4 ≥ 16 KiB heuristic, kept verbatim.
+        let parallel_combine = slot_bytes >= (1 << 14);
+        run_lockstep(
+            w,
+            seq,
+            rounds,
+            &self.cost,
+            pool.as_ref(),
+            parallel_combine,
+            "analytic",
+        )
+    }
+}
+
+/// The shared lock-step round engine (analytic + threaded backends).
+///
+/// Per round: local step on every node, publish payload snapshots into
+/// the back mailbox buffer, swap buffers at the barrier, combine each
+/// node from the front buffer (every payload present — the ideal
+/// network), account one α–β round per message slot, observe.
+pub(super) fn run_lockstep<W: Workload>(
+    w: &mut W,
+    seq: &GraphSequence,
+    rounds: usize,
+    cost: &CostModel,
+    pool: Option<&ThreadPool>,
+    parallel_combine: bool,
+    backend: &'static str,
+) -> Result<ExecTrace, String> {
+    let n = seq.n;
+    if n == 0 {
+        return Err(format!("{backend} executor needs n >= 1"));
+    }
+    if rounds > 0 && seq.is_empty() {
+        return Err(format!(
+            "{backend} executor needs a non-empty phase sequence"
+        ));
+    }
+    let t0 = Instant::now();
+    let mut nodes = w.init_nodes(n)?;
+    let w: &W = w;
+    let (n_slots, slot_bytes) = w.comm_shape();
+    let mut ledger = CommLedger::default();
+    let mut records = Vec::new();
+    if let Some(mut rec) = w.initial_record(&nodes) {
+        rec.wall_seconds = t0.elapsed().as_secs_f64();
+        records.push(rec);
+    }
+    // Double-buffered mailboxes: `front` is what every node reads this
+    // round, `back` is where fresh payloads are published; they swap at
+    // the barrier between the publish and combine phases, so a combine
+    // can never observe a half-written mailbox.
+    let mut front: Vec<Option<W::Payload>> = (0..n).map(|_| None).collect();
+    let mut back: Vec<Option<W::Payload>> = (0..n).map(|_| None).collect();
+    let failure: Mutex<Option<(usize, String)>> = Mutex::new(None);
+
+    for r in 0..rounds {
+        let plan = seq.phase(r);
+
+        // 1. Local step on every node.
+        match pool {
+            Some(pool) => {
+                pool.for_each_mut(&mut nodes, |i, node| {
+                    if let Err(e) = w.local_step(node, i, r) {
+                        let mut f = failure.lock().unwrap();
+                        let replace = match f.as_ref() {
+                            None => true,
+                            Some((fi, _)) => i < *fi,
+                        };
+                        if replace {
+                            *f = Some((i, e));
+                        }
+                    }
+                });
+                if let Some((_, e)) = failure.lock().unwrap().take() {
+                    return Err(format!("round {r}: {e}"));
+                }
+            }
+            None => {
+                for (i, node) in nodes.iter_mut().enumerate() {
+                    if let Err(e) = w.local_step(node, i, r) {
+                        return Err(format!("round {r}: {e}"));
+                    }
+                }
+            }
+        }
+
+        // 2. Publish payload snapshots, then swap mailboxes (barrier).
+        //    Publishing runs on the coordinator thread: node state is
+        //    `Send` but deliberately not required to be `Sync` (training
+        //    nodes own non-Sync data streams), so workers never hold a
+        //    shared view of the node array.
+        for (slot, node) in back.iter_mut().zip(&nodes) {
+            *slot = Some(w.make_payload(node));
+        }
+        std::mem::swap(&mut front, &mut back);
+
+        // 3. Combine: each node mixes its neighbors' published payloads.
+        //    Ideal network — every payload is present.
+        let combine = |i: usize, node: &mut W::Node| {
+            let row = plan.neighbors(i);
+            let avail: Vec<Option<&W::Payload>> =
+                row.iter().map(|&(j, _)| front[j].as_ref()).collect();
+            w.combine(node, i, r, plan, &avail);
+        };
+        match pool {
+            Some(pool) if parallel_combine => {
+                pool.for_each_mut(&mut nodes, combine);
+            }
+            _ => {
+                for (i, node) in nodes.iter_mut().enumerate() {
+                    combine(i, node);
+                }
+            }
+        }
+
+        // 4. Comm accounting: one α–β bulk-synchronous round per slot
+        //    (the busiest node serializes its sends).
+        for _ in 0..n_slots {
+            ledger.record_round_bytes(plan, slot_bytes, cost);
+        }
+
+        // 5. Metrics.
+        let eval = w.is_eval(r, rounds);
+        let mut rec = w.observe(&nodes, r, eval)?;
+        rec.cum_messages = ledger.messages;
+        rec.cum_bytes = ledger.bytes;
+        rec.sim_seconds = ledger.sim_seconds;
+        rec.wall_seconds = t0.elapsed().as_secs_f64();
+        records.push(rec);
+    }
+
+    let finals = w.finals(&nodes);
+    Ok(ExecTrace {
+        backend,
+        topology: seq.name.clone(),
+        n,
+        max_degree: seq.max_degree(),
+        run: RunResult {
+            label: format!("{} × {} [{}]", w.label(), seq.name, backend),
+            records,
+        },
+        ledger,
+        drops: 0,
+        trace: Trace::new(false),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        finals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::gaussian_init;
+    use crate::exec::ConsensusWorkload;
+    use crate::topology::base;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn analytic_consensus_reaches_exact_in_one_sweep() {
+        let seq = base::base(22, 3).unwrap();
+        let mut rng = Rng::new(4);
+        let init = gaussian_init(22, 2, &mut rng);
+        let tr = AnalyticExecutor::serial()
+            .run(&mut ConsensusWorkload::new(init), &seq, seq.len())
+            .unwrap();
+        assert_eq!(tr.backend, "analytic");
+        assert_eq!(tr.run.records.len(), seq.len() + 1);
+        assert!(tr.final_error() < 1e-20, "err={:e}", tr.final_error());
+        let hit = tr.iters_to_reach(1e-18).expect("finite-time topology");
+        assert!(hit <= seq.len(), "hit={hit} len={}", seq.len());
+        // α–β clock moved, wall clock measured, no drops by definition.
+        assert!(tr.sim_seconds() > 0.0);
+        assert!(tr.wall_seconds > 0.0);
+        assert_eq!(tr.drops, 0);
+        let per_sweep: u64 =
+            seq.phases.iter().map(|p| p.messages() as u64).sum();
+        assert_eq!(tr.messages(), per_sweep);
+    }
+
+    #[test]
+    fn empty_rounds_yield_initial_record_only() {
+        let seq = base::base(8, 1).unwrap();
+        let mut rng = Rng::new(0);
+        let init = gaussian_init(8, 1, &mut rng);
+        let tr = AnalyticExecutor::serial()
+            .run(&mut ConsensusWorkload::new(init), &seq, 0)
+            .unwrap();
+        assert_eq!(tr.run.records.len(), 1);
+        assert_eq!(tr.run.records[0].round, 0);
+        assert_eq!(tr.messages(), 0);
+    }
+}

@@ -1,0 +1,412 @@
+//! The event-driven backend: one generic discrete-event engine over any
+//! [`Workload`], replacing the two near-duplicate drivers
+//! (`sim_consensus` / `sim_train`) that previously lived in
+//! `simnet::driver`.
+//!
+//! Sends are seeded from the sparse [`GossipPlan`] schedules: node `j`
+//! sends its payload to every node whose neighbor list contains `j` in
+//! the current phase (the reverse adjacency), sends serialized per sender
+//! (one NIC per node), each one drop-sampled, each arrival an event. The
+//! mixing arithmetic is whatever the workload's `combine` does — the same
+//! code every other backend runs — so bulk-synchronous execution under an
+//! ideal network reproduces [`AnalyticExecutor`](super::AnalyticExecutor)
+//! bit-exactly.
+//!
+//! Two disciplines, selected by [`SimConfig::mode`]:
+//! * **Bulk-synchronous** — a barrier per phase: all compute finishes,
+//!   every surviving message is delivered, then every node mixes.
+//! * **Asynchronous / local-steps** — no barriers: a node that finishes
+//!   compute mixes whatever neighbor payloads have arrived (consume-once
+//!   mailboxes, missing peers renormalized) and immediately moves on.
+
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::{ExecTrace, Executor, Workload};
+use crate::comm::CommLedger;
+use crate::metrics::RunResult;
+use crate::simnet::event::{EventKind, EventQueue, Trace};
+use crate::simnet::{ExecMode, SimConfig};
+use crate::topology::{GossipPlan, GraphSequence};
+
+/// Per-phase reverse adjacency: `out[src]` lists every `dst` whose
+/// neighbor list contains `src` — i.e. where a directed message
+/// `src → dst` flows. Lists are dst-ascending, so send order (and with it
+/// the whole event schedule) is deterministic.
+pub(crate) fn out_adjacency(plan: &GossipPlan) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); plan.n()];
+    for (dst, src, _w) in plan.directed_edges() {
+        out[src].push(dst);
+    }
+    out
+}
+
+/// Discrete-event execution on a simulated network (stragglers,
+/// heterogeneous/lossy links, BSP or async gossip). Single-threaded by
+/// design: the event queue is the scheduler.
+#[derive(Debug, Clone)]
+pub struct SimnetExecutor {
+    pub sim: SimConfig,
+}
+
+impl SimnetExecutor {
+    pub fn new(sim: SimConfig) -> Self {
+        SimnetExecutor { sim }
+    }
+}
+
+impl Executor for SimnetExecutor {
+    fn backend(&self) -> &'static str {
+        "simnet"
+    }
+
+    fn run<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+    ) -> Result<ExecTrace, String> {
+        let n = seq.n;
+        if n == 0 {
+            return Err("simnet executor needs n >= 1".into());
+        }
+        if rounds > 0 && seq.is_empty() {
+            return Err(
+                "simnet executor needs a non-empty phase sequence".into()
+            );
+        }
+        let t0 = Instant::now();
+        let mut nodes = w.init_nodes(n)?;
+        let w: &W = w;
+        let (n_slots, slot_bytes) = w.comm_shape();
+        let bundle_bytes = n_slots as u64 * slot_bytes;
+        let mut net = self.sim.network(n);
+        let mut trace = Trace::new(self.sim.record_trace);
+        let mut ledger = CommLedger::default();
+        let mut drops = 0u64;
+        let mut records = Vec::new();
+        if let Some(mut rec) = w.initial_record(&nodes) {
+            rec.wall_seconds = t0.elapsed().as_secs_f64();
+            records.push(rec);
+        }
+
+        if rounds > 0 {
+            let out_adj: Vec<Vec<Vec<usize>>> =
+                seq.phases.iter().map(out_adjacency).collect();
+            match self.sim.mode {
+                ExecMode::BulkSynchronous => {
+                    let mut clock = 0.0f64;
+                    for r in 0..rounds {
+                        let pidx = r % seq.len();
+                        let plan = &seq.phases[pidx];
+                        let mut q = EventQueue::new();
+                        for i in 0..n {
+                            q.push(
+                                clock + net.compute_seconds(i),
+                                EventKind::ComputeDone { node: i, round: r },
+                            );
+                        }
+                        // arrived[i][k] <=> the payload of
+                        // plan.neighbors(i)[k] made it through this phase.
+                        let mut arrived: Vec<Vec<bool>> = (0..n)
+                            .map(|i| vec![false; plan.degree(i)])
+                            .collect();
+                        let mut barrier_t = clock;
+                        let mut failure: Option<String> = None;
+                        while let Some(ev) = q.pop() {
+                            barrier_t = ev.t;
+                            trace.record(ev.t, ev.kind);
+                            match ev.kind {
+                                EventKind::ComputeDone { node, .. } => {
+                                    if let Err(e) = w.local_step(
+                                        &mut nodes[node],
+                                        node,
+                                        r,
+                                    ) {
+                                        failure =
+                                            Some(format!("round {r}: {e}"));
+                                        break;
+                                    }
+                                    let mut t_free = ev.t;
+                                    for &dst in &out_adj[pidx][node] {
+                                        t_free += net.links.send_seconds(
+                                            node,
+                                            dst,
+                                            bundle_bytes,
+                                        );
+                                        ledger.record_payload_sends(
+                                            n_slots, slot_bytes,
+                                        );
+                                        if net.dropped() {
+                                            // One lost bundle loses all
+                                            // n_slots logical messages.
+                                            drops += n_slots as u64;
+                                        } else {
+                                            q.push(
+                                                t_free,
+                                                EventKind::MessageArrive {
+                                                    src: node,
+                                                    dst,
+                                                    msg: 0,
+                                                },
+                                            );
+                                        }
+                                    }
+                                }
+                                EventKind::MessageArrive {
+                                    src, dst, ..
+                                } => {
+                                    let row = plan.neighbors(dst);
+                                    if let Ok(k) = row
+                                        .binary_search_by_key(&src, |&(p, _)| {
+                                            p
+                                        })
+                                    {
+                                        arrived[dst][k] = true;
+                                    }
+                                }
+                                EventKind::PhaseBarrier { .. } => {}
+                            }
+                        }
+                        if let Some(e) = failure {
+                            return Err(e);
+                        }
+                        clock = barrier_t;
+                        trace.record(
+                            clock,
+                            EventKind::PhaseBarrier { round: r },
+                        );
+                        ledger.advance_clock_to(clock);
+                        for _ in 0..n_slots {
+                            ledger.bump_round();
+                        }
+                        // Barrier mix: snapshot every node's payload,
+                        // combine the survivors.
+                        let payloads: Vec<W::Payload> =
+                            nodes.iter().map(|nd| w.make_payload(nd)).collect();
+                        for (i, node) in nodes.iter_mut().enumerate() {
+                            let row = plan.neighbors(i);
+                            let flags = &arrived[i];
+                            let avail: Vec<Option<&W::Payload>> = row
+                                .iter()
+                                .enumerate()
+                                .map(|(k, &(j, _))| {
+                                    if flags[k] {
+                                        Some(&payloads[j])
+                                    } else {
+                                        None
+                                    }
+                                })
+                                .collect();
+                            w.combine(node, i, r, plan, &avail);
+                        }
+                        let eval = w.is_eval(r, rounds);
+                        let mut rec = w.observe(&nodes, r, eval)?;
+                        rec.cum_messages = ledger.messages;
+                        rec.cum_bytes = ledger.bytes;
+                        rec.sim_seconds = ledger.sim_seconds;
+                        rec.wall_seconds = t0.elapsed().as_secs_f64();
+                        records.push(rec);
+                    }
+                }
+                ExecMode::Async => {
+                    let mut q = EventQueue::new();
+                    // In-flight payloads, keyed by message id and
+                    // reclaimed on arrival — memory stays O(messages
+                    // currently in the air).
+                    let mut store: HashMap<usize, Rc<W::Payload>> =
+                        HashMap::new();
+                    let mut next_msg = 0usize;
+                    let mut mailbox: Vec<BTreeMap<usize, Rc<W::Payload>>> =
+                        vec![BTreeMap::new(); n];
+                    let mut completed = vec![0usize; rounds];
+                    // One NIC per node: sends from consecutive rounds
+                    // queue behind each other.
+                    let mut nic_free = vec![0.0f64; n];
+                    for i in 0..n {
+                        q.push(
+                            net.compute_seconds(i),
+                            EventKind::ComputeDone { node: i, round: 0 },
+                        );
+                    }
+                    while let Some(ev) = q.pop() {
+                        trace.record(ev.t, ev.kind);
+                        match ev.kind {
+                            EventKind::ComputeDone { node, round } => {
+                                let pidx = round % seq.len();
+                                let plan = &seq.phases[pidx];
+                                w.local_step(&mut nodes[node], node, round)
+                                    .map_err(|e| {
+                                        format!(
+                                            "node {node} round {round}: {e}"
+                                        )
+                                    })?;
+                                // Snapshot and send the pre-mix payload.
+                                let payload =
+                                    Rc::new(w.make_payload(&nodes[node]));
+                                let mut t_free = ev.t.max(nic_free[node]);
+                                for &dst in &out_adj[pidx][node] {
+                                    t_free += net.links.send_seconds(
+                                        node,
+                                        dst,
+                                        bundle_bytes,
+                                    );
+                                    ledger.record_payload_sends(
+                                        n_slots, slot_bytes,
+                                    );
+                                    if net.dropped() {
+                                        drops += n_slots as u64;
+                                    } else {
+                                        let msg = next_msg;
+                                        next_msg += 1;
+                                        store.insert(msg, payload.clone());
+                                        q.push(
+                                            t_free,
+                                            EventKind::MessageArrive {
+                                                src: node,
+                                                dst,
+                                                msg,
+                                            },
+                                        );
+                                    }
+                                }
+                                nic_free[node] = t_free;
+                                // Local-steps gossip: mix with whatever
+                                // has arrived (consume-once).
+                                let row = plan.neighbors(node);
+                                let avail_rc: Vec<Option<Rc<W::Payload>>> =
+                                    row.iter()
+                                        .map(|&(j, _)| {
+                                            mailbox[node].remove(&j)
+                                        })
+                                        .collect();
+                                let avail: Vec<Option<&W::Payload>> =
+                                    avail_rc
+                                        .iter()
+                                        .map(|o| o.as_deref())
+                                        .collect();
+                                w.combine(
+                                    &mut nodes[node],
+                                    node,
+                                    round,
+                                    plan,
+                                    &avail,
+                                );
+                                completed[round] += 1;
+                                if completed[round] == n {
+                                    ledger.advance_clock_to(ev.t);
+                                    for _ in 0..n_slots {
+                                        ledger.bump_round();
+                                    }
+                                    let eval = w.is_eval(round, rounds);
+                                    let mut rec =
+                                        w.observe(&nodes, round, eval)?;
+                                    rec.cum_messages = ledger.messages;
+                                    rec.cum_bytes = ledger.bytes;
+                                    rec.sim_seconds = ledger.sim_seconds;
+                                    rec.wall_seconds =
+                                        t0.elapsed().as_secs_f64();
+                                    records.push(rec);
+                                }
+                                if round + 1 < rounds {
+                                    q.push(
+                                        ev.t + net.compute_seconds(node),
+                                        EventKind::ComputeDone {
+                                            node,
+                                            round: round + 1,
+                                        },
+                                    );
+                                }
+                            }
+                            EventKind::MessageArrive { src, dst, msg } => {
+                                if let Some(p) = store.remove(&msg) {
+                                    mailbox[dst].insert(src, p);
+                                }
+                            }
+                            EventKind::PhaseBarrier { .. } => {}
+                        }
+                    }
+                }
+            }
+        }
+
+        let finals = w.finals(&nodes);
+        Ok(ExecTrace {
+            backend: "simnet",
+            topology: seq.name.clone(),
+            n,
+            max_degree: seq.max_degree(),
+            run: RunResult {
+                label: format!(
+                    "{} × {} [simnet {}]",
+                    w.label(),
+                    seq.name,
+                    self.sim.mode.label()
+                ),
+                records,
+            },
+            ledger,
+            drops,
+            trace,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            finals,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::gaussian_init;
+    use crate::exec::{AnalyticExecutor, ConsensusWorkload};
+    use crate::simnet::Scenario;
+    use crate::topology::base;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ideal_bsp_is_bit_identical_to_analytic() {
+        let seq = base::base(12, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let init = gaussian_init(12, 3, &mut rng);
+        let iters = 2 * seq.len();
+        let a = AnalyticExecutor::serial()
+            .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+            .unwrap();
+        let s = SimnetExecutor::new(SimConfig::ideal())
+            .run(&mut ConsensusWorkload::new(init), &seq, iters)
+            .unwrap();
+        assert_eq!(a.errors(), s.errors());
+        assert_eq!(a.finals, s.finals);
+        assert!(s.times().iter().all(|&t| t == 0.0));
+        assert_eq!(s.drops, 0);
+        let per_sweep: u64 =
+            seq.phases.iter().map(|p| p.messages() as u64).sum();
+        assert_eq!(s.messages(), 2 * per_sweep);
+    }
+
+    #[test]
+    fn hostile_async_still_contracts_and_is_seed_deterministic() {
+        let seq = base::base(10, 1).unwrap();
+        let run = |seed: u64| {
+            let mut sim = Scenario::Hostile.config(seed);
+            sim.mode = ExecMode::Async;
+            sim.record_trace = true;
+            let mut rng = Rng::new(5);
+            let init = gaussian_init(10, 2, &mut rng);
+            SimnetExecutor::new(sim)
+                .run(&mut ConsensusWorkload::new(init), &seq, 4 * seq.len())
+                .unwrap()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a.trace, b.trace, "same seed must replay identically");
+        assert_eq!(a.finals, b.finals);
+        assert_eq!(a.drops, b.drops);
+        assert!(!a.trace.is_empty());
+        assert!(a.drops > 0, "hostile scenario must drop messages");
+        assert!(a.final_error() < a.errors()[0]);
+        let c = run(8);
+        assert!(a.trace != c.trace || a.finals != c.finals);
+    }
+}

@@ -1,0 +1,108 @@
+//! The thread-parallel backend: nodes execute on real OS threads, so a
+//! topology's communication structure shows up as **measured** wall-clock
+//! seconds, not just as α–β model output or a virtual event clock.
+//!
+//! Each round, every node is claimed by a [`ThreadPool`] worker (one node
+//! per worker when `threads >= n`; work-stealing over an atomic counter
+//! otherwise). Payloads move through a double-buffered mailbox array —
+//! the coordinator publishes snapshots into the back buffer, the buffers
+//! swap at the barrier, worker combines read the front buffer — and the
+//! pool's latch is a real barrier: no node starts round r+1 until every
+//! node committed round r. This is the BSP discipline of the simnet
+//! driver executed on hardware, and the stepping stone to the ROADMAP's
+//! process-parallel backend (sockets / shared-memory queues behind the
+//! same trait).
+//!
+//! Determinism: identical to every other backend bit-for-bit (the
+//! equivalence suite pins it) — combines read only snapshots, so thread
+//! scheduling cannot reorder any floating-point operation.
+
+use super::analytic::run_lockstep;
+use super::{ExecTrace, Executor, Workload};
+use crate::comm::CostModel;
+use crate::topology::GraphSequence;
+use crate::util::threadpool::ThreadPool;
+
+/// One node per [`ThreadPool`] worker, double-buffered mailboxes, a real
+/// barrier per phase. `threads == 0` = available cores.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThreadedExecutor {
+    /// α–β model for the simulated-seconds column (the measured number is
+    /// `ExecTrace::wall_seconds`).
+    pub cost: CostModel,
+    pub threads: usize,
+}
+
+impl ThreadedExecutor {
+    pub fn new(cost: CostModel, threads: usize) -> Self {
+        ThreadedExecutor { cost, threads }
+    }
+
+    fn pool_size(&self, n: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|x| x.get())
+                .unwrap_or(4)
+        } else {
+            self.threads
+        };
+        t.min(n.max(1)).max(1)
+    }
+}
+
+impl Executor for ThreadedExecutor {
+    fn backend(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn run<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+    ) -> Result<ExecTrace, String> {
+        let pool = ThreadPool::new(self.pool_size(seq.n));
+        // Always parallel — physically running the nodes is the point.
+        run_lockstep(w, seq, rounds, &self.cost, Some(&pool), true, "threaded")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::gaussian_init;
+    use crate::exec::{AnalyticExecutor, ConsensusWorkload};
+    use crate::topology::base;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn threaded_matches_analytic_and_measures_wall_clock() {
+        let seq = base::base(16, 1).unwrap();
+        let mut rng = Rng::new(9);
+        let init = gaussian_init(16, 4, &mut rng);
+        let a = AnalyticExecutor::serial()
+            .run(&mut ConsensusWorkload::new(init.clone()), &seq, seq.len())
+            .unwrap();
+        let t = ThreadedExecutor::new(Default::default(), 3)
+            .run(&mut ConsensusWorkload::new(init), &seq, seq.len())
+            .unwrap();
+        assert_eq!(t.backend, "threaded");
+        assert_eq!(a.finals, t.finals, "threaded must be bit-identical");
+        assert_eq!(a.errors(), t.errors());
+        assert!(t.wall_seconds > 0.0);
+        // Per-record wall clock is monotone non-decreasing.
+        for w in t.run.records.windows(2) {
+            assert!(w[1].wall_seconds >= w[0].wall_seconds);
+        }
+    }
+
+    #[test]
+    fn pool_sizing_respects_n_and_request() {
+        let ex = ThreadedExecutor::new(Default::default(), 8);
+        assert_eq!(ex.pool_size(4), 4);
+        assert_eq!(ex.pool_size(100), 8);
+        let auto = ThreadedExecutor::default();
+        assert!(auto.pool_size(1000) >= 1);
+        assert_eq!(auto.pool_size(1), 1);
+    }
+}

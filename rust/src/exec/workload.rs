@@ -1,0 +1,496 @@
+//! The [`Workload`] contract — per-node state, a local step, payload
+//! snapshots and a combine rule — implemented once per problem and run
+//! unchanged by every [`Executor`](super::Executor) backend.
+//!
+//! Two workloads ship with the crate:
+//!
+//! * [`ConsensusWorkload`] — the paper's Sec. 6.1 gossip-averaging
+//!   experiment: each node holds an f64 vector, the local step is a no-op
+//!   and combine is one [`GossipPlan::gossip_row_partial`] application.
+//! * [`TrainingWorkload`] — the DSGD-family training round (Eq. 1): local
+//!   gradient + [`DecentralizedOptimizer::pre_mix`], one
+//!   [`gossip_combine`](crate::train::gossip_combine) per message slot,
+//!   then [`DecentralizedOptimizer::post_mix`]. This absorbs the round
+//!   logic that used to be duplicated between `train::train` and the
+//!   simnet drivers.
+//!
+//! # Determinism rules
+//!
+//! The cross-executor equivalence guarantee (same seed ⇒ bit-identical
+//! final state on every backend under an ideal network) holds because
+//! implementations must keep to three rules:
+//!
+//! 1. `local_step` and `combine` may touch **only** the node handed to
+//!    them — no shared mutable state, no interior mutability, no RNG that
+//!    is not owned by the node itself.
+//! 2. `combine` must consume neighbor payloads in the plan's neighbor-list
+//!    order (ascending peer id), so floating-point accumulation order is
+//!    identical regardless of which thread or event executes the node.
+//! 3. `make_payload` must be a pure snapshot of the node — executors are
+//!    free to take it at any point between the local step and the first
+//!    delivery of that round.
+
+use std::sync::Mutex;
+
+use crate::consensus::consensus_error;
+use crate::metrics::RoundRecord;
+use crate::optim::DecentralizedOptimizer;
+use crate::runtime::batch::Batch;
+use crate::runtime::provider::GradProvider;
+use crate::topology::GossipPlan;
+use crate::train::node_data::NodeData;
+use crate::train::{average_params, evaluate, gossip_combine, TrainConfig};
+
+/// One decentralized problem, expressed in executor-agnostic pieces.
+///
+/// An executor drives the round protocol; the workload owns the per-node
+/// arithmetic. `avail` in [`Workload::combine`] is aligned with
+/// `plan.neighbors(i)`: `avail[k]` is the payload of neighbor `k` if it
+/// arrived this round, `None` if it was dropped or is still in flight
+/// (combines must renormalize for missing peers to stay stochastic).
+pub trait Workload: Sync {
+    /// Per-node state. One value per node, owned by exactly one executor
+    /// lane at a time (`Send`, not shared).
+    type Node: Send;
+    /// What a node puts on the wire each round. Cloned into in-flight
+    /// buffers by the event-driven backend; shared read-only across
+    /// threads by the lock-step backends.
+    type Payload: Clone + Send + Sync;
+
+    /// Display name, e.g. `"consensus"` or `"mlp × DSGDm"`.
+    fn label(&self) -> String;
+
+    /// Build the initial per-node states. Called exactly once per run;
+    /// workloads holding one-shot resources (training data streams) are
+    /// consumed here — build a fresh workload per run.
+    fn init_nodes(&mut self, n: usize) -> Result<Vec<Self::Node>, String>;
+
+    /// `(message slots per round, bytes per slot payload)` — the comm
+    /// accounting shape. Most workloads send one message per round;
+    /// gradient tracking sends two.
+    fn comm_shape(&self) -> (usize, u64);
+
+    /// Whether per-node work is heavy enough for the analytic backend to
+    /// bother with its thread pool (the threaded backend always
+    /// parallelizes — that is its point).
+    fn parallel_hint(&self) -> bool {
+        true
+    }
+
+    /// Node `i`'s local computation for round `r`, before any exchange
+    /// (gradient step; no-op for pure gossip).
+    fn local_step(
+        &self,
+        node: &mut Self::Node,
+        i: usize,
+        r: usize,
+    ) -> Result<(), String>;
+
+    /// Snapshot the message node `i` sends this round.
+    fn make_payload(&self, node: &Self::Node) -> Self::Payload;
+
+    /// Mix the node's own value with the available neighbor payloads over
+    /// `plan`'s row `i` and commit the result into `node`.
+    fn combine(
+        &self,
+        node: &mut Self::Node,
+        i: usize,
+        r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Self::Payload>],
+    );
+
+    /// A round-0 record describing the initial state, if the workload
+    /// tracks one (consensus does; training starts at round 1).
+    fn initial_record(&self, nodes: &[Self::Node]) -> Option<RoundRecord> {
+        let _ = nodes;
+        None
+    }
+
+    /// Should round `r` (0-based) of a `rounds`-round run evaluate the
+    /// expensive metrics?
+    fn is_eval(&self, r: usize, rounds: usize) -> bool;
+
+    /// Metrics after round `r` committed on every node. The executor fills
+    /// the communication and clock fields afterwards.
+    fn observe(
+        &self,
+        nodes: &[Self::Node],
+        r: usize,
+        eval: bool,
+    ) -> Result<RoundRecord, String>;
+
+    /// Final per-node states, widened losslessly to f64 for cross-backend
+    /// bit-identity checks.
+    fn finals(&self, nodes: &[Self::Node]) -> Vec<Vec<f64>>;
+}
+
+// ---------------------------------------------------------------------------
+// Consensus
+// ---------------------------------------------------------------------------
+
+/// The Sec. 6.1 consensus experiment as a [`Workload`]: f64 node vectors,
+/// no local step, plain gossip averaging. Reusable across runs (the
+/// initial values are cloned by `init_nodes`).
+pub struct ConsensusWorkload {
+    init: Vec<Vec<f64>>,
+}
+
+impl ConsensusWorkload {
+    pub fn new(init: Vec<Vec<f64>>) -> Self {
+        ConsensusWorkload { init }
+    }
+
+    fn d(&self) -> usize {
+        self.init.first().map(|x| x.len()).unwrap_or(0)
+    }
+}
+
+impl Workload for ConsensusWorkload {
+    type Node = Vec<f64>;
+    type Payload = Vec<f64>;
+
+    fn label(&self) -> String {
+        "consensus".into()
+    }
+
+    fn init_nodes(&mut self, n: usize) -> Result<Vec<Vec<f64>>, String> {
+        if self.init.len() != n {
+            return Err(format!(
+                "init size {} != topology n {}",
+                self.init.len(),
+                n
+            ));
+        }
+        Ok(self.init.clone())
+    }
+
+    fn comm_shape(&self) -> (usize, u64) {
+        (1, (self.d() * 8) as u64)
+    }
+
+    fn parallel_hint(&self) -> bool {
+        // One gossip row is O(degree · d) flops — thread dispatch loses.
+        false
+    }
+
+    fn local_step(
+        &self,
+        _node: &mut Vec<f64>,
+        _i: usize,
+        _r: usize,
+    ) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn make_payload(&self, node: &Vec<f64>) -> Vec<f64> {
+        node.clone()
+    }
+
+    fn combine(
+        &self,
+        node: &mut Vec<f64>,
+        i: usize,
+        _r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Vec<f64>>],
+    ) {
+        let row = plan.neighbors(i);
+        let mut out = vec![0.0f64; node.len()];
+        plan.gossip_row_partial(
+            i,
+            node,
+            |j| {
+                row.binary_search_by_key(&j, |&(p, _)| p)
+                    .ok()
+                    .and_then(|k| avail[k])
+                    .map(|v| v.as_slice())
+            },
+            &mut out,
+        );
+        *node = out;
+    }
+
+    fn initial_record(&self, nodes: &[Vec<f64>]) -> Option<RoundRecord> {
+        Some(RoundRecord {
+            round: 0,
+            train_loss: f64::NAN,
+            consensus_error: consensus_error(nodes),
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            ..Default::default()
+        })
+    }
+
+    fn is_eval(&self, _r: usize, _rounds: usize) -> bool {
+        true
+    }
+
+    fn observe(
+        &self,
+        nodes: &[Vec<f64>],
+        r: usize,
+        _eval: bool,
+    ) -> Result<RoundRecord, String> {
+        Ok(RoundRecord {
+            round: r + 1,
+            train_loss: f64::NAN,
+            consensus_error: consensus_error(nodes),
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            ..Default::default()
+        })
+    }
+
+    fn finals(&self, nodes: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        nodes.to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Training
+// ---------------------------------------------------------------------------
+
+/// Per-node training state: parameters, optimizer, data stream.
+pub struct TrainNode {
+    params: Vec<f32>,
+    opt: Box<dyn DecentralizedOptimizer>,
+    data: Box<dyn NodeData>,
+    last_loss: f64,
+    pending: Vec<Vec<f32>>,
+}
+
+/// Decentralized DSGD-family training as a [`Workload`] — the single
+/// implementation of the round protocol that `train::train`, the simnet
+/// drivers and the threaded backend all execute.
+///
+/// Consumed by its first run (`init_nodes` takes the node data streams);
+/// build a fresh workload per run.
+pub struct TrainingWorkload<'a> {
+    provider: &'a dyn GradProvider,
+    cfg: &'a TrainConfig,
+    eval_batches: &'a [Batch],
+    // Behind a mutex only so the workload stays `Sync` (`NodeData` is
+    // `Send` but not `Sync`); locked exactly once, in `init_nodes`.
+    data: Mutex<Vec<Box<dyn NodeData>>>,
+    d: usize,
+    n_msgs: usize,
+    damping: f32,
+}
+
+impl<'a> TrainingWorkload<'a> {
+    pub fn new(
+        provider: &'a dyn GradProvider,
+        cfg: &'a TrainConfig,
+        node_data: Vec<Box<dyn NodeData>>,
+        eval_batches: &'a [Batch],
+    ) -> Self {
+        let d = provider.d_params();
+        // One probe optimizer pins the message multiplicity and mixing
+        // damping before any node state exists.
+        let probe = cfg.optimizer.build(d);
+        let n_msgs = probe.n_messages();
+        let damping = probe.w_damping() as f32;
+        TrainingWorkload {
+            provider,
+            cfg,
+            eval_batches,
+            data: Mutex::new(node_data),
+            d,
+            n_msgs,
+            damping,
+        }
+    }
+}
+
+impl Workload for TrainingWorkload<'_> {
+    type Node = TrainNode;
+    type Payload = Vec<Vec<f32>>;
+
+    fn label(&self) -> String {
+        format!("{} × {}", self.provider.name(), self.cfg.optimizer.label())
+    }
+
+    fn init_nodes(&mut self, n: usize) -> Result<Vec<TrainNode>, String> {
+        let data = std::mem::take(&mut *self.data.lock().unwrap());
+        if data.len() != n {
+            return Err(format!(
+                "{} node data sources for {} nodes",
+                data.len(),
+                n
+            ));
+        }
+        let init = self.provider.init_params();
+        Ok(data
+            .into_iter()
+            .map(|data| TrainNode {
+                params: init.clone(),
+                opt: self.cfg.optimizer.build(self.d),
+                data,
+                last_loss: f64::NAN,
+                pending: Vec::new(),
+            })
+            .collect())
+    }
+
+    fn comm_shape(&self) -> (usize, u64) {
+        (self.n_msgs, (self.d * 4) as u64)
+    }
+
+    fn local_step(
+        &self,
+        node: &mut TrainNode,
+        _i: usize,
+        r: usize,
+    ) -> Result<(), String> {
+        let lr = self.cfg.lr_at(r) as f32;
+        let batch = node.data.next_train_batch();
+        let (loss, grads) = self.provider.train_step(&node.params, &batch)?;
+        node.last_loss = loss as f64;
+        node.pending = node.opt.pre_mix(&node.params, &grads, lr);
+        Ok(())
+    }
+
+    fn make_payload(&self, node: &TrainNode) -> Vec<Vec<f32>> {
+        node.pending.clone()
+    }
+
+    fn combine(
+        &self,
+        node: &mut TrainNode,
+        i: usize,
+        r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Vec<Vec<f32>>>],
+    ) {
+        let lr = self.cfg.lr_at(r) as f32;
+        let row = plan.neighbors(i);
+        let mut mixed = Vec::with_capacity(self.n_msgs);
+        let mut used_any = 0usize;
+        for m in 0..self.n_msgs {
+            let mut out = vec![0.0f32; self.d];
+            let used = gossip_combine(
+                plan,
+                i,
+                self.damping,
+                &node.pending[m],
+                |j| {
+                    row.binary_search_by_key(&j, |&(p, _)| p)
+                        .ok()
+                        .and_then(|k| avail[k])
+                        .and_then(|b| b.get(m))
+                        .map(|v| v.as_slice())
+                },
+                &mut out,
+            );
+            used_any = used_any.max(used);
+            mixed.push(out);
+        }
+        node.pending = Vec::new();
+        // A node is "active" when at least one neighbor payload mixed in
+        // (identical to `plan.is_active` under full delivery).
+        let new = node.opt.post_mix(mixed, &node.params, lr, used_any > 0);
+        node.params = new;
+    }
+
+    fn is_eval(&self, r: usize, rounds: usize) -> bool {
+        (self.cfg.eval_every > 0 && (r + 1) % self.cfg.eval_every == 0)
+            || r + 1 == rounds
+    }
+
+    fn observe(
+        &self,
+        nodes: &[TrainNode],
+        r: usize,
+        eval: bool,
+    ) -> Result<RoundRecord, String> {
+        let n = nodes.len();
+        let mut rec = RoundRecord {
+            round: r + 1,
+            train_loss: nodes.iter().map(|s| s.last_loss).sum::<f64>()
+                / n as f64,
+            consensus_error: f64::NAN,
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            ..Default::default()
+        };
+        if eval {
+            let params_f64: Vec<Vec<f64>> = nodes
+                .iter()
+                .map(|s| s.params.iter().map(|&x| x as f64).collect())
+                .collect();
+            rec.consensus_error = consensus_error(&params_f64);
+            if !self.eval_batches.is_empty() {
+                let avg = average_params(
+                    nodes.iter().map(|s| s.params.as_slice()),
+                    self.d,
+                );
+                let (loss, acc) =
+                    evaluate(self.provider, &avg, self.eval_batches)?;
+                rec.test_loss = loss;
+                rec.test_acc = acc;
+            }
+        }
+        Ok(rec)
+    }
+
+    fn finals(&self, nodes: &[TrainNode]) -> Vec<Vec<f64>> {
+        nodes
+            .iter()
+            .map(|s| s.params.iter().map(|&x| x as f64).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::GossipPlan;
+
+    #[test]
+    fn consensus_combine_matches_gossip_row() {
+        let plan = GossipPlan::from_undirected(
+            3,
+            &[(0, 1, 0.25), (0, 2, 0.25)],
+        );
+        let xs: Vec<Vec<f64>> = vec![vec![1.0], vec![5.0], vec![9.0]];
+        let w = ConsensusWorkload::new(xs.clone());
+        // All payloads present: bit-identical to the dense row apply.
+        let mut node = xs[0].clone();
+        let avail: Vec<Option<&Vec<f64>>> =
+            vec![Some(&xs[1]), Some(&xs[2])];
+        w.combine(&mut node, 0, 0, &plan, &avail);
+        let mut want = vec![0.0];
+        plan.gossip_row(0, &xs, &mut want);
+        assert_eq!(node, want);
+        // One payload missing: renormalized (self 2/3, peer1 1/3).
+        let mut node = xs[0].clone();
+        let avail: Vec<Option<&Vec<f64>>> = vec![Some(&xs[1]), None];
+        w.combine(&mut node, 0, 0, &plan, &avail);
+        assert!((node[0] - 7.0 / 3.0).abs() < 1e-12, "got {}", node[0]);
+    }
+
+    #[test]
+    fn consensus_workload_is_reusable() {
+        let xs = vec![vec![0.0], vec![2.0]];
+        let mut w = ConsensusWorkload::new(xs);
+        let a = w.init_nodes(2).unwrap();
+        let b = w.init_nodes(2).unwrap();
+        assert_eq!(a, b);
+        assert!(w.init_nodes(3).is_err());
+        let (slots, bytes) = w.comm_shape();
+        assert_eq!((slots, bytes), (1, 8));
+    }
+
+    #[test]
+    fn consensus_records_shape() {
+        let w = ConsensusWorkload::new(vec![vec![-1.0], vec![1.0]]);
+        let nodes = vec![vec![-1.0], vec![1.0]];
+        let r0 = w.initial_record(&nodes).unwrap();
+        assert_eq!(r0.round, 0);
+        assert!((r0.consensus_error - 1.0).abs() < 1e-12);
+        let r1 = w.observe(&nodes, 0, true).unwrap();
+        assert_eq!(r1.round, 1);
+        assert!(r1.train_loss.is_nan());
+    }
+}

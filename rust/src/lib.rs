@@ -9,8 +9,10 @@
 //! * **Layer 3 (this crate)** — the decentralized-training coordinator:
 //!   time-varying topology construction (the paper's contribution) as
 //!   sparse per-node [`GossipPlan`]s, the O(edges·d) gossip engine, the
-//!   [`simnet`] discrete-event network simulator (stragglers, lossy and
-//!   heterogeneous links, asynchronous gossip — measured time-to-accuracy),
+//!   [`exec`] execution layer (one [`Workload`] contract over the
+//!   analytic loop, the [`simnet`] discrete-event network simulator —
+//!   stragglers, lossy and heterogeneous links, asynchronous gossip — and
+//!   a thread-parallel backend with measured wall-clock),
 //!   decentralized optimizers (DSGD, DSGDm, QG-DSGDm, D²), data
 //!   partitioning (Dirichlet heterogeneity), metrics and the CLI. Dense
 //!   [`MixingMatrix`] views are derived on demand (`plan.to_dense()`) for
@@ -28,6 +30,7 @@
 pub mod comm;
 pub mod consensus;
 pub mod data;
+pub mod exec;
 pub mod metrics;
 pub mod optim;
 pub mod repro;
@@ -37,6 +40,7 @@ pub mod train;
 pub mod topology;
 pub mod util;
 
+pub use exec::{ExecTrace, Executor, ExecutorKind, Workload};
 pub use simnet::SimConfig;
 pub use topology::{GossipPlan, GraphSequence, MixingMatrix, TopologyKind};
 pub use util::rng::Rng;

@@ -13,13 +13,13 @@
 
 use basegraph::comm::CostModel;
 use basegraph::consensus;
+use basegraph::exec::ExecutorKind;
 use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
-    classification_workload, print_table, run_sim_training,
-    run_training_with_cost, Engine,
+    classification_workload, print_table, run_training_exec, Engine,
 };
-use basegraph::simnet::{ExecMode, Scenario};
+use basegraph::simnet::{ExecMode, LinkModel, Scenario};
 use basegraph::topology::{self, TopologyKind};
 use basegraph::util::cli::Args;
 use basegraph::util::rng::Rng;
@@ -34,10 +34,12 @@ USAGE:
   basegraph train     --topo <name> --n <n> [--alpha A] [--rounds R]
                       [--lr LR] [--optimizer dsgd|dsgdm|qg-dsgdm|d2|gt]
                       [--engine native-mlp|native-linear|pjrt:mlp:ref]
+                      [--executor analytic|simnet|threaded] [--threads N]
                       [--net-alpha SEC] [--net-beta SEC_PER_BYTE]
                       [--out results]
   basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
                       [--mode bsp|async] [--workload consensus|train]
+                      [--executor analytic|simnet|threaded] [--threads N]
                       [--topos a,b,c] [--n N] [--seed S] [--out results]
                       [--alpha SEC] [--beta SEC_PER_BYTE] [--drop-rate P]
                       [--straggler-factor F]
@@ -46,13 +48,17 @@ USAGE:
                                  [--engine E] [--dirichlet A] [--target-acc T]
   basegraph repro     --exp <id> [--fast] [--engine E] [--n N] [--ns a,b]
                       [--rounds R] [--seed S] [--out results]
+                      [--executor analytic|simnet|threaded] [--threads N]
   basegraph info      [--artifacts DIR]
 
 Topology names: ring, torus, exp, onepeer-exp, onepeer-hypercube, complete,
   base-<m>, simple-base-<m>, hh-<k>, u-equidyn, d-equidyn,
   u-equistatic-<deg>, d-equistatic-<deg>  (`basegraph list` enumerates them).
-Experiments: table1 table2 fig5 fig6 fig7 fig8 fig9 fig21 fig22 fig23
-  fig25 fig26 frontier simnet all
+Experiments: table1 table2 equistatic fig5 fig6 fig7 fig8 fig9 fig21 fig22
+  fig23 fig25 fig26 frontier simnet all
+Executors: analytic (ideal lock-step loop, α–β model clock), simnet
+  (event-driven network simulator), threaded (one node per worker thread —
+  measured wall-clock); --threads 0 = all cores.
 Notes: in `simnet`, --alpha/--beta are the per-link α–β cost overrides and
   --dirichlet is the data-heterogeneity knob; in `train`, --alpha keeps its
   historical Dirichlet meaning and --net-alpha/--net-beta set the α–β cost.";
@@ -140,11 +146,12 @@ fn cmd_topology(args: &Args) -> Result<(), String> {
 }
 
 /// `basegraph list`: every buildable topology at `--n`, with its CLI name,
-/// phase count, max degree, per-sweep message count and finite-time
+/// phase count, max degree, per-sweep message count, finite-time
 /// consensus horizon (iterations of gossip to numerically exact consensus,
-/// measured — `>cap` when the topology only converges geometrically) — or
-/// the reason it cannot be built at that n. Enough to pick simnet scenario
-/// rosters without reading source.
+/// measured — `>cap` when the topology only converges geometrically) and
+/// measured spectral consensus rate β of the full sweep (dense-view
+/// analysis, skipped at large n) — or the reason it cannot be built at
+/// that n. Enough to pick simnet scenario rosters without reading source.
 fn cmd_list(args: &Args) -> Result<(), String> {
     let n = args.usize_or("n", 25)?;
     let seed = args.u64_or("seed", 0)?;
@@ -163,18 +170,32 @@ fn cmd_list(args: &Args) -> Result<(), String> {
                 } else {
                     "skipped (n>2048)".into()
                 };
+                // Measured consensus rate β of the sweep operator: the
+                // EquiStatic-comparison column (dense view — O(n²)
+                // memory — so capped).
+                let beta = if n <= 512 {
+                    let mut rng = Rng::new(seed);
+                    format!(
+                        "{:.4}",
+                        seq.product().consensus_rate(300, &mut rng)
+                    )
+                } else {
+                    "skipped (n>512)".into()
+                };
                 vec![
                     kind.to_cli_name(),
                     kind.label(),
                     seq.len().to_string(),
                     seq.max_degree().to_string(),
                     horizon,
+                    beta,
                     msgs.to_string(),
                 ]
             }
             Err(e) => vec![
                 kind.to_cli_name(),
                 kind.label(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -191,6 +212,7 @@ fn cmd_list(args: &Args) -> Result<(), String> {
             "phases",
             "max deg",
             "consensus horizon",
+            "sweep β",
             "msgs/sweep",
         ],
         &rows,
@@ -266,25 +288,33 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         alpha: args.f64_or("net-alpha", default_cost.alpha)?,
         beta: args.f64_or("net-beta", default_cost.beta)?,
     };
+    // Execution backend: ideal analytic loop (default), event-driven
+    // simnet, or real threads with measured wall-clock.
+    let exec = ExecutorKind::parse(&args.str_or("executor", "analytic"))?
+        .with_threads(args.usize_or("threads", 0)?)
+        .with_cost(cost);
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let workload = classification_workload(&engine, seed)?;
     println!(
-        "training {} on {} (n={n}, α={alpha}, {} rounds, lr={lr}, {})",
+        "training {} on {} (n={n}, α={alpha}, {} rounds, lr={lr}, {}, \
+         executor {})",
         workload.provider.name(),
         kind.label(),
         rounds,
-        optimizer.label()
+        optimizer.label(),
+        exec.label()
     );
-    let res = run_training_with_cost(
-        &workload, kind, n, alpha, optimizer, rounds, lr, seed, &cost,
+    let res = run_training_exec(
+        &workload, kind, n, alpha, optimizer, rounds, lr, seed, &exec,
     )?;
     let path = format!(
         "{out_dir}/train_{}_n{n}.csv",
         args.str_or("topo", "base-2")
     );
-    res.write_csv(&path).map_err(|e| e.to_string())?;
+    res.run.write_csv(&path).map_err(|e| e.to_string())?;
     let evals: Vec<Vec<String>> = res
+        .run
         .records
         .iter()
         .filter(|r| !r.test_acc.is_nan())
@@ -295,13 +325,28 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 format!("{:.2}", 100.0 * r.test_acc),
                 format!("{:.2e}", r.consensus_error),
                 format!("{:.1}", r.cum_bytes as f64 / 1e6),
+                format!("{:.3}", r.wall_seconds),
             ]
         })
         .collect();
     print_table(
         &format!("training curve (CSV: {path})"),
-        &["round", "train loss", "test acc %", "consensus", "comm MB"],
+        &[
+            "round",
+            "train loss",
+            "test acc %",
+            "consensus",
+            "comm MB",
+            "wall s",
+        ],
         &evals,
+    );
+    println!(
+        "executor {}: {:.3}s wall, {:.4}s simulated, {} messages",
+        res.backend,
+        res.wall_seconds,
+        res.ledger.sim_seconds,
+        res.ledger.messages
     );
     Ok(())
 }
@@ -363,6 +408,45 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
         "topos",
         &["ring", "exp", "onepeer-exp", "base-2", "base-4"],
     );
+    // Backend selection: the event-driven simulator is the default here;
+    // `--executor analytic|threaded` races the same workload on the ideal
+    // lock-step loop or on real threads. The lock-step backends inherit
+    // the scenario's α–β link cost (worst link class, with any
+    // --alpha/--beta overrides already applied) so the sim-seconds column
+    // stays comparable to an event-driven run of the same scenario; they
+    // are inherently bulk-synchronous, so async mode is rejected.
+    let exec = ExecutorKind::parse(&args.str_or("executor", "simnet"))?
+        .with_threads(args.usize_or("threads", 0)?);
+    let lockstep_cost = match &sim.links {
+        LinkModel::Uniform(c) => *c,
+        LinkModel::Racks { remote, .. } => *remote,
+    };
+    if !matches!(exec, ExecutorKind::Simnet(_)) {
+        if mode == ExecMode::Async {
+            return Err(format!(
+                "--mode async requires --executor simnet (the {} backend \
+                 is bulk-synchronous)",
+                exec.label()
+            ));
+        }
+        // Drops and stragglers only exist in the event-driven simulator;
+        // running a scenario that implies them on a lock-step backend
+        // would silently produce ideal-network numbers under a lossy
+        // label.
+        if sim.drop_rate > 0.0
+            || (sim.compute.straggler_factor != 1.0
+                && sim.compute.straggler_frac > 0.0)
+        {
+            return Err(format!(
+                "scenario {} implies drops/stragglers, which the {} \
+                 backend cannot simulate; use --executor simnet (or an \
+                 ideal/lan/wan/racks scenario)",
+                scenario.label(),
+                exec.label()
+            ));
+        }
+    }
+    let exec = exec.with_cost(lockstep_cost).with_sim(sim.clone());
 
     match args.str_or("workload", "consensus").as_str() {
         "consensus" => {
@@ -373,9 +457,8 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
                 let seq = kind.build(n, seed)?;
-                let tr = consensus::simnet_consensus_experiment(
-                    &seq, iters, seed, &sim,
-                );
+                let tr =
+                    consensus::consensus_experiment(&seq, iters, seed, &exec)?;
                 rows.push(vec![
                     kind.label(),
                     seq.max_degree().to_string(),
@@ -387,11 +470,12 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
                         .unwrap_or_else(|| "never".into()),
                     format!("{:.2e}", tr.final_error()),
                     format!("{:.4}", tr.sim_seconds()),
-                    tr.messages.to_string(),
+                    format!("{:.3}", tr.wall_seconds),
+                    tr.messages().to_string(),
                     tr.drops.to_string(),
                 ]);
                 for (k, (&e, &s)) in
-                    tr.errors.iter().zip(&tr.times).enumerate()
+                    tr.errors().iter().zip(&tr.times()).enumerate()
                 {
                     csv.push(vec![
                         kind.to_cli_name(),
@@ -402,9 +486,10 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
                 }
             }
             let path = format!(
-                "{out_dir}/simnet_{}_{}_n{n}.csv",
+                "{out_dir}/simnet_{}_{}_{}_n{n}.csv",
                 scenario.label(),
-                mode.label()
+                mode.label(),
+                exec.label()
             );
             basegraph::util::write_csv(
                 &path,
@@ -415,10 +500,11 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             let t_head = format!("t→{tol:.0e} (s)");
             print_table(
                 &format!(
-                    "simnet consensus — scenario {}, mode {}, n={n} \
-                     (CSV: {path})",
+                    "simnet consensus — scenario {}, mode {}, executor {}, \
+                     n={n} (CSV: {path})",
                     scenario.label(),
-                    mode.label()
+                    mode.label(),
+                    exec.label()
                 ),
                 &[
                     "topology",
@@ -427,6 +513,7 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
                     "iters",
                     "err@end",
                     "sim s",
+                    "wall s",
                     "msgs",
                     "drops",
                 ],
@@ -451,9 +538,9 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             let mut csv = Vec::new();
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
-                let res = run_sim_training(
+                let res = run_training_exec(
                     &workload, kind, n, dirichlet, optimizer, rounds, lr,
-                    seed, &sim,
+                    seed, &exec,
                 )?;
                 let tta = res.run.time_to_accuracy(target);
                 rows.push(vec![
@@ -480,9 +567,10 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
                 ]);
             }
             let path = format!(
-                "{out_dir}/simnet_train_{}_{}_n{n}.csv",
+                "{out_dir}/simnet_train_{}_{}_{}_n{n}.csv",
                 scenario.label(),
-                mode.label()
+                mode.label(),
+                exec.label()
             );
             basegraph::util::write_csv(
                 &path,
@@ -501,10 +589,11 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             println!("CSV: {path}");
             print_table(
                 &format!(
-                    "simnet training — scenario {}, mode {}, n={n}, \
-                     {} rounds, target acc {:.0}%",
+                    "simnet training — scenario {}, mode {}, executor {}, \
+                     n={n}, {} rounds, target acc {:.0}%",
                     scenario.label(),
                     mode.label(),
+                    exec.label(),
                     rounds,
                     100.0 * target
                 ),

@@ -18,6 +18,9 @@ pub struct RoundRecord {
     pub cum_messages: u64,
     pub cum_bytes: u64,
     pub sim_seconds: f64,
+    /// Measured wall-clock seconds since the run started (0 for paths
+    /// that predate the executor layer).
+    pub wall_seconds: f64,
 }
 
 impl RoundRecord {
@@ -31,6 +34,7 @@ impl RoundRecord {
             "cum_messages",
             "cum_bytes",
             "sim_seconds",
+            "wall_seconds",
         ]
     }
 
@@ -44,6 +48,7 @@ impl RoundRecord {
             self.cum_messages.to_string(),
             self.cum_bytes.to_string(),
             format!("{:.6}", self.sim_seconds),
+            format!("{:.6}", self.wall_seconds),
         ]
     }
 
@@ -57,6 +62,7 @@ impl RoundRecord {
             ("cum_messages", Json::num(self.cum_messages as f64)),
             ("cum_bytes", Json::num(self.cum_bytes as f64)),
             ("sim_seconds", Json::num(self.sim_seconds)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
         ])
     }
 }
@@ -73,6 +79,9 @@ pub struct TimeToTarget {
     pub round: usize,
     /// Simulated event-clock seconds at that round.
     pub sim_seconds: f64,
+    /// Measured wall-clock seconds at that round (0 on pre-executor
+    /// paths).
+    pub wall_seconds: f64,
     /// Cumulative payload bytes moved by then.
     pub cum_bytes: u64,
     /// Cumulative directed messages by then.
@@ -97,6 +106,7 @@ impl RunResult {
                 target,
                 round: r.round,
                 sim_seconds: r.sim_seconds,
+                wall_seconds: r.wall_seconds,
                 cum_bytes: r.cum_bytes,
                 cum_messages: r.cum_messages,
             })
@@ -112,6 +122,7 @@ impl RunResult {
                 target,
                 round: r.round,
                 sim_seconds: r.sim_seconds,
+                wall_seconds: r.wall_seconds,
                 cum_bytes: r.cum_bytes,
                 cum_messages: r.cum_messages,
             })

@@ -5,15 +5,15 @@ use std::sync::Arc;
 use crate::comm::CostModel;
 use crate::data::partition::dirichlet_partition;
 use crate::data::synth::{gaussian_mixture, ClassificationDataset};
+use crate::exec::{ExecTrace, ExecutorKind, TrainingWorkload};
 use crate::metrics::RunResult;
 use crate::optim::OptimizerKind;
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::{GradProvider, RustMlp, SoftmaxRegression};
 use crate::runtime::PjrtModel;
-use crate::simnet::{sim_train, SimConfig, SimRunResult};
 use crate::topology::TopologyKind;
 use crate::train::node_data::{ClassificationShard, NodeData};
-use crate::train::{train, TrainConfig};
+use crate::train::TrainConfig;
 use crate::util::rng::Rng;
 
 /// Where repro CSVs land.
@@ -236,8 +236,37 @@ fn repro_train_config(
     }
 }
 
-/// One decentralized training run for a repro figure (default α–β cost
-/// model).
+/// One decentralized training run on the selected executor backend —
+/// same partition/schedule whatever the backend, so analytic, simnet and
+/// threaded results are directly comparable (and bit-identical under the
+/// ideal network). The α–β cost model rides inside `exec`
+/// ([`ExecutorKind::with_cost`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_exec(
+    workload: &TrainWorkload,
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    seed: u64,
+    exec: &ExecutorKind,
+) -> Result<ExecTrace, String> {
+    let node_data = partitioned_node_data(workload, n, alpha, seed);
+    let seq = kind.build(n, seed)?;
+    let cfg = repro_train_config(optimizer, rounds, lr, &CostModel::default());
+    let mut w = TrainingWorkload::new(
+        workload.provider.as_ref(),
+        &cfg,
+        node_data,
+        &workload.eval_batches,
+    );
+    exec.run(&mut w, &seq, cfg.rounds)
+}
+
+/// [`run_training_exec`] keeping only the per-round records — what the
+/// figure sweeps consume.
 #[allow(clippy::too_many_arguments)]
 pub fn run_training(
     workload: &TrainWorkload,
@@ -248,72 +277,12 @@ pub fn run_training(
     rounds: usize,
     lr: f64,
     seed: u64,
+    exec: &ExecutorKind,
 ) -> Result<RunResult, String> {
-    run_training_with_cost(
-        workload,
-        kind,
-        n,
-        alpha,
-        optimizer,
-        rounds,
-        lr,
-        seed,
-        &CostModel::default(),
+    run_training_exec(
+        workload, kind, n, alpha, optimizer, rounds, lr, seed, exec,
     )
-}
-
-/// [`run_training`] with an explicit α–β cost model (the CLI's
-/// `--net-alpha`/`--net-beta` flags land here).
-#[allow(clippy::too_many_arguments)]
-pub fn run_training_with_cost(
-    workload: &TrainWorkload,
-    kind: TopologyKind,
-    n: usize,
-    alpha: f64,
-    optimizer: OptimizerKind,
-    rounds: usize,
-    lr: f64,
-    seed: u64,
-    cost: &CostModel,
-) -> Result<RunResult, String> {
-    let node_data = partitioned_node_data(workload, n, alpha, seed);
-    let seq = kind.build(n, seed)?;
-    let cfg = repro_train_config(optimizer, rounds, lr, cost);
-    train(
-        workload.provider.as_ref(),
-        &seq,
-        node_data,
-        &workload.eval_batches,
-        &cfg,
-    )
-}
-
-/// One decentralized training run on the simulated network — the same
-/// partition/schedule as [`run_training`], but executed event-driven so
-/// the records carry measured event-clock seconds.
-#[allow(clippy::too_many_arguments)]
-pub fn run_sim_training(
-    workload: &TrainWorkload,
-    kind: TopologyKind,
-    n: usize,
-    alpha: f64,
-    optimizer: OptimizerKind,
-    rounds: usize,
-    lr: f64,
-    seed: u64,
-    sim: &SimConfig,
-) -> Result<SimRunResult, String> {
-    let node_data = partitioned_node_data(workload, n, alpha, seed);
-    let seq = kind.build(n, seed)?;
-    let cfg = repro_train_config(optimizer, rounds, lr, &CostModel::default());
-    sim_train(
-        workload.provider.as_ref(),
-        &seq,
-        node_data,
-        &workload.eval_batches,
-        &cfg,
-        sim,
-    )
+    .map(|t| t.run)
 }
 
 /// The paper's standard topology roster at a given n (Fig. 6/7 lineup).
@@ -374,9 +343,38 @@ mod tests {
             40,
             0.5,
             2,
+            &ExecutorKind::analytic(),
         )
         .unwrap();
         assert!(res.final_acc() > 0.4, "acc={}", res.final_acc());
+    }
+
+    #[test]
+    fn training_exec_backends_agree_on_records() {
+        // The repro plumbing itself is backend-agnostic: same partition,
+        // same schedule, bit-identical losses on the threaded backend.
+        let w = classification_workload(&Engine::NativeLinear, 1).unwrap();
+        let run = |exec: &ExecutorKind| {
+            run_training_exec(
+                &w,
+                TopologyKind::Base { m: 2 },
+                6,
+                10.0,
+                OptimizerKind::Dsgd,
+                10,
+                0.5,
+                3,
+                exec,
+            )
+            .unwrap()
+        };
+        let a = run(&ExecutorKind::analytic());
+        let t = run(&ExecutorKind::threaded(2));
+        assert_eq!(a.finals, t.finals);
+        for (x, y) in a.run.records.iter().zip(&t.run.records) {
+            assert_eq!(x.train_loss, y.train_loss);
+        }
+        assert!(t.wall_seconds > 0.0);
     }
 
     #[test]

@@ -9,13 +9,15 @@ pub mod simnet_exps;
 pub mod tables;
 pub mod training_exps;
 
+use crate::exec::ExecutorKind;
 use crate::util::cli::Args;
 use common::Engine;
 
 /// All experiment ids.
 pub const EXPERIMENTS: &[&str] = &[
-    "table1", "table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig21",
-    "fig22", "fig23", "fig25", "fig26", "frontier", "simnet", "all",
+    "table1", "table2", "equistatic", "fig5", "fig6", "fig7", "fig8",
+    "fig9", "fig21", "fig22", "fig23", "fig25", "fig26", "frontier",
+    "simnet", "all",
 ];
 
 /// Entry point for `basegraph repro`.
@@ -27,6 +29,10 @@ pub fn run(args: &Args) -> Result<(), String> {
     let engine = Engine::parse(&args.str_or("engine", "native-mlp"))?;
     let engine_deep =
         Engine::parse(&args.str_or("engine-deep", "native-mlp-deep"))?;
+    // Which execution backend the training sweeps run on
+    // (`--executor analytic|simnet|threaded`, `--threads N`).
+    let exec = ExecutorKind::parse(&args.str_or("executor", "analytic"))?
+        .with_threads(args.usize_or("threads", 0)?);
     // The paper repeats each training run over 3 seeds.
     let seeds: Vec<u64> = if fast {
         vec![seed]
@@ -43,6 +49,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         match id {
             "table1" => tables::table1(n, seed, &out_dir),
             "table2" => tables::table2(n, 0.01, seed, &out_dir),
+            "equistatic" => tables::equistatic_table(n, seed, &out_dir),
             "frontier" => tables::base_family_frontier(n, seed, &out_dir),
             // The simnet straggler/drop sweep over the standard roster.
             "simnet" => simnet_exps::simnet_sweep(
@@ -75,27 +82,28 @@ pub fn run(args: &Args) -> Result<(), String> {
                 seed,
                 &out_dir,
             ),
-            "fig7" => {
-                training_exps::fig7(&engine, n, rounds, &seeds, &out_dir)
-            }
-            "fig8" => {
-                training_exps::fig8(&engine, &ns, rounds, &seeds, &out_dir)
-            }
-            "fig9" => {
-                training_exps::fig9(&engine, n, rounds, &seeds, &out_dir)
-            }
-            "fig22" => {
-                training_exps::fig22(&engine, n, rounds, &seeds, &out_dir)
-            }
-            "fig25" => {
-                training_exps::fig25(&engine, rounds, &seeds, &out_dir)
-            }
+            "fig7" => training_exps::fig7(
+                &engine, n, rounds, &seeds, &out_dir, &exec,
+            ),
+            "fig8" => training_exps::fig8(
+                &engine, &ns, rounds, &seeds, &out_dir, &exec,
+            ),
+            "fig9" => training_exps::fig9(
+                &engine, n, rounds, &seeds, &out_dir, &exec,
+            ),
+            "fig22" => training_exps::fig22(
+                &engine, n, rounds, &seeds, &out_dir, &exec,
+            ),
+            "fig25" => training_exps::fig25(
+                &engine, rounds, &seeds, &out_dir, &exec,
+            ),
             "fig26" => training_exps::fig26(
                 &engine_deep,
                 n,
                 rounds,
                 &seeds,
                 &out_dir,
+                &exec,
             ),
             other => return Err(format!("unknown experiment {other:?}")),
         }

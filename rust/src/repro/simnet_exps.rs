@@ -8,7 +8,8 @@
 //! — the quantity the analytic α–β model can only approximate and a lossy
 //! or straggling network actively distorts.
 
-use crate::consensus::simnet_consensus_experiment;
+use crate::consensus::consensus_experiment;
+use crate::exec::ExecutorKind;
 use crate::repro::common::{out_path, print_table, standard_roster};
 use crate::simnet::{ExecMode, Scenario};
 
@@ -39,7 +40,8 @@ pub fn simnet_sweep(
             for mode in [ExecMode::BulkSynchronous, ExecMode::Async] {
                 let mut sim = sc.config(seed);
                 sim.mode = mode;
-                let tr = simnet_consensus_experiment(&seq, iters, seed, &sim);
+                let exec = ExecutorKind::Simnet(sim);
+                let tr = consensus_experiment(&seq, iters, seed, &exec)?;
                 let t_tol = tr.time_to_reach(SWEEP_TOL);
                 rows.push(vec![
                     kind.label(),
@@ -50,7 +52,7 @@ pub fn simnet_sweep(
                         .unwrap_or_else(|| "never".into()),
                     format!("{:.2e}", tr.final_error()),
                     format!("{:.4}", tr.sim_seconds()),
-                    tr.messages.to_string(),
+                    tr.messages().to_string(),
                     tr.drops.to_string(),
                 ]);
                 csv.push(vec![
@@ -63,7 +65,7 @@ pub fn simnet_sweep(
                         .unwrap_or_else(|| "inf".into()),
                     format!("{:.6e}", tr.final_error()),
                     format!("{:.6e}", tr.sim_seconds()),
-                    tr.messages.to_string(),
+                    tr.messages().to_string(),
                     tr.drops.to_string(),
                 ]);
             }

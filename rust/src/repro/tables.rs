@@ -1,9 +1,12 @@
-//! Table 1 (topology properties) and Table 2 (DSGD convergence ordering on
-//! a controlled workload).
+//! Table 1 (topology properties), Table 2 (DSGD convergence ordering on
+//! a controlled workload) and the EquiStatic spectral table (measured
+//! consensus rate β at matched degree).
 
 use crate::comm::{profile, CostModel};
 use crate::consensus::paper_consensus_experiment;
-use crate::topology::TopologyKind;
+use crate::exec::{AnalyticExecutor, Executor, Workload};
+use crate::metrics::RoundRecord;
+use crate::topology::{GossipPlan, TopologyKind};
 use crate::util::rng::Rng;
 use crate::util::write_csv;
 
@@ -71,6 +74,150 @@ pub fn table1(n: usize, seed: u64, out_dir: &str) {
     );
 }
 
+/// The Table-2 problem as an [`exec::Workload`](crate::exec::Workload):
+/// exact-gradient DSGD on a heterogeneous quadratic in f64 — node i's
+/// local step is `x ← x − η (x − c_i)` and combine is plain gossip. A
+/// deliberately external `Workload` implementation: it exercises the
+/// executor contract from outside the `exec` module, the way a new
+/// workload would.
+struct Table2Workload<'a> {
+    targets: &'a [Vec<f64>],
+    f_star: f64,
+    lr0: f64,
+    rounds: usize,
+}
+
+impl Table2Workload<'_> {
+    fn lr_at(&self, r: usize) -> f64 {
+        // Cosine-decayed step (the paper's scheduler): every topology
+        // then converges exactly, and rounds-to-ε isolates how fast the
+        // topology's mixing lets local iterates track the optimum.
+        self.lr0
+            * 0.5
+            * (1.0
+                + (std::f64::consts::PI * r as f64 / self.rounds as f64)
+                    .cos())
+    }
+
+    fn f_of(&self, x: &[f64]) -> f64 {
+        self.targets
+            .iter()
+            .map(|c| {
+                c.iter()
+                    .zip(x)
+                    .map(|(&ci, &xi)| 0.5 * (xi - ci).powi(2))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / self.targets.len() as f64
+    }
+}
+
+impl Workload for Table2Workload<'_> {
+    type Node = Vec<f64>;
+    type Payload = Vec<f64>;
+
+    fn label(&self) -> String {
+        "table2 quadratic DSGD".into()
+    }
+
+    fn init_nodes(&mut self, n: usize) -> Result<Vec<Vec<f64>>, String> {
+        if self.targets.len() != n {
+            return Err(format!(
+                "{} targets for {} nodes",
+                self.targets.len(),
+                n
+            ));
+        }
+        let d = self.targets[0].len();
+        Ok(vec![vec![0.0f64; d]; n])
+    }
+
+    fn comm_shape(&self) -> (usize, u64) {
+        (1, (self.targets[0].len() * 8) as u64)
+    }
+
+    fn parallel_hint(&self) -> bool {
+        false
+    }
+
+    fn local_step(
+        &self,
+        node: &mut Vec<f64>,
+        i: usize,
+        r: usize,
+    ) -> Result<(), String> {
+        let lr = self.lr_at(r);
+        for (xi, &ci) in node.iter_mut().zip(&self.targets[i]) {
+            *xi -= lr * (*xi - ci);
+        }
+        Ok(())
+    }
+
+    fn make_payload(&self, node: &Vec<f64>) -> Vec<f64> {
+        node.clone()
+    }
+
+    fn combine(
+        &self,
+        node: &mut Vec<f64>,
+        i: usize,
+        _r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Vec<f64>>],
+    ) {
+        let row = plan.neighbors(i);
+        let mut out = vec![0.0f64; node.len()];
+        plan.gossip_row_partial(
+            i,
+            node,
+            |j| {
+                row.binary_search_by_key(&j, |&(p, _)| p)
+                    .ok()
+                    .and_then(|k| avail[k])
+                    .map(|v| v.as_slice())
+            },
+            &mut out,
+        );
+        *node = out;
+    }
+
+    fn is_eval(&self, r: usize, rounds: usize) -> bool {
+        r + 1 == rounds
+    }
+
+    fn observe(
+        &self,
+        nodes: &[Vec<f64>],
+        r: usize,
+        eval: bool,
+    ) -> Result<RoundRecord, String> {
+        // Mean *local* suboptimality (1/n)Σ_i f(x_i) − f*. For the
+        // identical-Hessian quadratic this equals the averaged iterate's
+        // gap PLUS half the consensus error — the consensus penalty is
+        // exactly what separates topologies.
+        let gap = nodes.iter().map(|x| self.f_of(x)).sum::<f64>()
+            / nodes.len() as f64
+            - self.f_star;
+        Ok(RoundRecord {
+            round: r + 1,
+            train_loss: gap,
+            consensus_error: if eval {
+                crate::consensus::consensus_error(nodes)
+            } else {
+                f64::NAN
+            },
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            ..Default::default()
+        })
+    }
+
+    fn finals(&self, nodes: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        nodes.to_vec()
+    }
+}
+
 /// Table 2: DSGD convergence ordering on a controlled heterogeneous
 /// quadratic (ζ > 0, σ = 0, known optimum). Measures rounds until the
 /// *suboptimality of the averaged iterate* drops by 1/eps relative to the
@@ -91,83 +238,46 @@ pub fn table2(n: usize, eps: f64, seed: u64, out_dir: &str) {
             *o += ti / n as f64;
         }
     }
-    let f_of = |x: &[f64]| -> f64 {
-        targets
-            .iter()
-            .map(|c| {
-                c.iter()
-                    .zip(x)
-                    .map(|(&ci, &xi)| 0.5 * (xi - ci).powi(2))
-                    .sum::<f64>()
-            })
-            .sum::<f64>()
-            / n as f64
-    };
-    let f_star = f_of(&opt);
-    let gap0 = f_of(&vec![0.0; d]) - f_star;
-
     let rounds = 600;
-    let lr0 = 0.1;
-    // Cosine-decayed step (the paper's scheduler): every topology then
-    // converges exactly, and rounds-to-ε isolates how fast the topology's
-    // mixing lets the local iterates track the shrinking optimum.
-    let lr_at = |r: usize| {
-        lr0 * 0.5 * (1.0 + (std::f64::consts::PI * r as f64 / rounds as f64).cos())
+    let probe = Table2Workload {
+        targets: &targets,
+        f_star: 0.0,
+        lr0: 0.1,
+        rounds,
     };
+    let f_star = probe.f_of(&opt);
+    let gap0 = probe.f_of(&vec![0.0; d]) - f_star;
+
     let mut rows = Vec::new();
     for kind in standard_roster(n) {
         let seq = match kind.build(n, seed) {
             Ok(s) => s,
             Err(_) => continue,
         };
-        // Direct DSGD simulation: x_i ← Σ_j W_ij (x_j − η ∇f_j(x_j)).
-        let mut xs = vec![vec![0.0f64; d]; n];
-        let mut hit: Option<usize> = None;
-        let mut msgs_to_hit: Option<u64> = None;
-        let mut msgs: u64 = 0;
-        let mut final_consensus = 0.0;
-        for r in 0..rounds {
-            let w = seq.phase(r);
-            let lr = lr_at(r);
-            let half: Vec<Vec<f64>> = xs
-                .iter()
-                .zip(&targets)
-                .map(|(x, c)| {
-                    x.iter()
-                        .zip(c)
-                        .map(|(&xi, &ci)| xi - lr * (xi - ci))
-                        .collect()
-                })
-                .collect();
-            xs = w.gossip(&half);
-            msgs += w.messages() as u64;
-            // Mean *local* suboptimality (1/n)Σ_i f(x_i) − f*. For the
-            // identical-Hessian quadratic this equals the averaged
-            // iterate's gap PLUS half the consensus error — the consensus
-            // penalty is exactly what separates topologies (the averaged
-            // iterate alone evolves independently of mixing here).
-            let gap = xs.iter().map(|x| f_of(x)).sum::<f64>() / n as f64
-                - f_star;
-            if hit.is_none() && gap <= eps * gap0 {
-                hit = Some(r + 1);
-                msgs_to_hit = Some(msgs);
-            }
-            if r + 1 == rounds {
-                final_consensus = crate::consensus::consensus_error(&xs);
-            }
-        }
+        let mut w = Table2Workload {
+            targets: &targets,
+            f_star,
+            lr0: 0.1,
+            rounds,
+        };
+        let tr = AnalyticExecutor::serial()
+            .run(&mut w, &seq, rounds)
+            .expect("table2 workload is infallible");
+        // `train_loss` carries the gap, so the unified time-to-target
+        // accessor answers "rounds (and messages) to ε" directly.
+        let hit = tr.run.time_to_train_loss(eps * gap0);
         rows.push(vec![
             kind.label(),
             seq.max_degree().to_string(),
-            match hit {
-                Some(h) => h.to_string(),
+            match &hit {
+                Some(h) => h.round.to_string(),
                 None => format!(">{rounds}"),
             },
-            match msgs_to_hit {
-                Some(m) => m.to_string(),
+            match &hit {
+                Some(h) => h.cum_messages.to_string(),
                 None => "-".into(),
             },
-            format!("{:.3e}", final_consensus),
+            format!("{:.3e}", tr.final_error()),
         ]);
     }
     let path = out_path(out_dir, &format!("table2_n{n}.csv"));
@@ -232,6 +342,88 @@ pub fn base_family_frontier(n: usize, seed: u64, out_dir: &str) {
     );
 }
 
+/// EquiStatic spectral table (ROADMAP item): measured consensus rate β
+/// per topology at matched maximum degree, next to the measured
+/// finite-time consensus horizon. The EquiTopo paper (Song et al. 2022)
+/// claims an n-independent consensus rate at constant degree; this table
+/// puts the measured β of U/D-EquiStatic beside the Base-(k+1) Graph at
+/// the same degree, where Base reaches *exact* consensus in a finite
+/// horizon instead of decaying geometrically.
+///
+/// β is the spectral consensus rate of the full-sweep operator
+/// (dense-view analysis); `per-iter β` normalizes sweeps of different
+/// lengths (β^(1/len)) so static and time-varying topologies compare
+/// per gossip iteration.
+pub fn equistatic_table(n: usize, seed: u64, out_dir: &str) {
+    let mut kinds: Vec<(usize, TopologyKind)> = vec![
+        (1, TopologyKind::OnePeerExp),
+        (1, TopologyKind::UEquiDyn),
+        (1, TopologyKind::DEquiDyn),
+        (1, TopologyKind::Base { m: 2 }),
+    ];
+    for deg in [2usize, 3, 4, 5] {
+        kinds.push((deg, TopologyKind::UEquiStatic { degree: deg }));
+        kinds.push((deg, TopologyKind::DEquiStatic { degree: deg }));
+        kinds.push((deg, TopologyKind::Base { m: deg + 1 }));
+    }
+    let mut rows = Vec::new();
+    for (deg, kind) in kinds {
+        let seq = match kind.build(n, seed) {
+            Ok(s) => s,
+            Err(_) => continue, // unbuildable at this n
+        };
+        // Fresh rng per row (as in `basegraph list`): each measured β is
+        // reproducible from the seed alone, independent of roster order.
+        let mut rng = Rng::new(seed);
+        let beta = seq.product().consensus_rate(300, &mut rng);
+        let per_iter = beta.powf(1.0 / seq.len().max(1) as f64);
+        let cap = (4 * seq.len()).clamp(16, 200);
+        let horizon = paper_consensus_experiment(&seq, cap, seed)
+            .iters_to_reach(1e-18)
+            .map(|i| i.to_string())
+            .unwrap_or_else(|| format!(">{cap}"));
+        rows.push(vec![
+            kind.label(),
+            deg.to_string(),
+            seq.max_degree().to_string(),
+            seq.len().to_string(),
+            format!("{beta:.4}"),
+            format!("{per_iter:.4}"),
+            horizon,
+        ]);
+    }
+    let path = out_path(out_dir, &format!("equistatic_n{n}.csv"));
+    write_csv(
+        &path,
+        &[
+            "topology",
+            "matched_degree",
+            "max_degree",
+            "phases",
+            "sweep_beta",
+            "per_iter_beta",
+            "consensus_horizon",
+        ],
+        &rows,
+    )
+    .expect("write csv");
+    print_table(
+        &format!(
+            "EquiStatic vs Base at matched degree, n={n} (CSV: {path})"
+        ),
+        &[
+            "topology",
+            "deg",
+            "max deg",
+            "phases",
+            "sweep β",
+            "per-iter β",
+            "horizon",
+        ],
+        &rows,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +473,37 @@ mod tests {
     fn frontier_small() {
         let dir = tmp_dir("fr");
         base_family_frontier(10, 0, &dir);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn equistatic_table_measures_beta_at_matched_degree() {
+        let dir = tmp_dir("eq");
+        equistatic_table(16, 0, &dir);
+        let text =
+            std::fs::read_to_string(format!("{dir}/equistatic_n16.csv"))
+                .unwrap();
+        assert!(text.starts_with("topology,matched_degree"));
+        // Base rows carry a finite measured horizon; EquiStatic rows are
+        // present at the same matched degrees with a measured β.
+        let mut base3_horizon = None;
+        let mut ueq2_beta = None;
+        for line in text.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            if cells[0] == "Base-3" {
+                base3_horizon = cells[6].parse::<usize>().ok();
+            }
+            if cells[0] == "U-EquiStatic(2)" {
+                ueq2_beta = cells[4].parse::<f64>().ok();
+            }
+        }
+        let h = base3_horizon.expect("Base-3 reaches exact consensus");
+        assert!(h <= 16, "finite-time horizon {h} too long");
+        let b = ueq2_beta.expect("U-EquiStatic(2) row with measured beta");
+        assert!(
+            b.is_finite() && (0.0..=1.0 + 1e-6).contains(&b),
+            "beta {b} out of range"
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 }

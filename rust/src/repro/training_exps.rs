@@ -4,6 +4,7 @@
 //! classification with Dirichlet(α) label skew. The comparisons are the
 //! paper's: topology roster × heterogeneity level × optimizer.
 
+use crate::exec::ExecutorKind;
 use crate::optim::OptimizerKind;
 use crate::topology::TopologyKind;
 use crate::util::write_csv;
@@ -33,6 +34,7 @@ fn roster_run(
     lr: f64,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     let mut rows = Vec::new();
     for &kind in kinds {
@@ -55,7 +57,7 @@ fn roster_run(
                 };
                 match run_training(
                     &workload, kind, n, alpha, optimizer, rounds, lr_eff,
-                    seed,
+                    seed, exec,
                 ) {
                     Ok(res) => {
                         finals.push(res.final_acc());
@@ -148,6 +150,7 @@ pub fn fig7(
     rounds: usize,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     for &alpha in &[10.0, 0.1] {
         roster_run(
@@ -162,6 +165,7 @@ pub fn fig7(
             0.5,
             seeds,
             out_dir,
+            exec,
         );
     }
 }
@@ -174,6 +178,7 @@ pub fn fig8(
     rounds: usize,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     for &n in ns {
         let mut kinds = vec![TopologyKind::Exp, TopologyKind::OnePeerExp];
@@ -192,6 +197,7 @@ pub fn fig8(
             0.5,
             seeds,
             out_dir,
+            exec,
         );
     }
 }
@@ -203,6 +209,7 @@ pub fn fig9(
     rounds: usize,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -227,6 +234,7 @@ pub fn fig9(
             0.3,
             seeds,
             out_dir,
+            exec,
         );
     }
 }
@@ -238,6 +246,7 @@ pub fn fig22(
     rounds: usize,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     let mut kinds = vec![
         TopologyKind::Base { m: 2 },
@@ -262,6 +271,7 @@ pub fn fig22(
             0.5,
             seeds,
             out_dir,
+            exec,
         );
     }
 }
@@ -272,6 +282,7 @@ pub fn fig25(
     rounds: usize,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -293,6 +304,7 @@ pub fn fig25(
         0.5,
         seeds,
         out_dir,
+        exec,
     );
 }
 
@@ -304,6 +316,7 @@ pub fn fig26(
     rounds: usize,
     seeds: &[u64],
     out_dir: &str,
+    exec: &ExecutorKind,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -324,6 +337,7 @@ pub fn fig26(
         0.3,
         seeds,
         out_dir,
+        exec,
     );
 }
 
@@ -349,6 +363,7 @@ mod tests {
             0.5,
             &[1],
             d,
+            &ExecutorKind::analytic(),
         );
         assert!(std::path::Path::new(&format!("{d}/fig7_smoke.csv"))
             .exists());

@@ -1,45 +1,43 @@
-//! Event-driven consensus and training drivers.
+//! Legacy entry points for event-driven consensus and training.
 //!
-//! Both drivers seed their sends from the sparse
-//! [`GossipPlan`](crate::topology::GossipPlan) schedules: node `j` sends
-//! its payload to every node whose neighbor list contains `j` in the
-//! current phase (the reverse adjacency), sends serialized per sender, each
-//! one drop-sampled, each arrival an event. The mixing arithmetic is the
-//! *same code* the analytic paths run ([`GossipPlan::gossip_row_partial`]
-//! for f64 consensus, [`train::gossip_combine`](crate::train::gossip_combine)
-//! for f32 training), so the bulk-synchronous drivers under an ideal
-//! network reproduce `consensus::simulate` and `train::train` bit-exactly
-//! — pinned by the `*_matches_*_exactly` tests below.
+//! **Migration note.** The event engine itself moved to
+//! [`exec::SimnetExecutor`](crate::exec::SimnetExecutor), which runs any
+//! [`exec::Workload`](crate::exec::Workload) — the consensus/training
+//! duplication that used to live here is gone. [`sim_consensus`] and
+//! [`sim_train`] survive one release as thin deprecated wrappers that
+//! build the matching workload, run the executor, and project the unified
+//! [`ExecTrace`](crate::exec::ExecTrace) back onto the historical
+//! [`SimTrace`] / [`SimRunResult`] shapes. New code should use the
+//! executor directly (or the `--executor simnet` CLI path) and read
+//! `ExecTrace` — its accessors are total and consistent, which these
+//! legacy types were not.
+//!
+//! The equivalence tests below are unchanged from the pre-executor
+//! drivers: they now pin that the generic engine still reproduces the
+//! analytic trainer bit-exactly under an ideal network, replays
+//! identically from a seed, and preserves the finite-time story under
+//! stragglers and drops.
 
-use std::collections::{BTreeMap, HashMap};
-use std::rc::Rc;
-
-use super::event::{EventKind, EventQueue, Trace};
-use super::{ExecMode, SimConfig};
+use super::SimConfig;
 use crate::comm::CommLedger;
 use crate::consensus::consensus_error;
-use crate::metrics::{RoundRecord, RunResult};
+use crate::exec::{
+    ConsensusWorkload, ExecTrace, Executor, SimnetExecutor, TrainingWorkload,
+};
+use crate::metrics::RunResult;
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::GradProvider;
-use crate::topology::{GossipPlan, GraphSequence};
+use crate::topology::GraphSequence;
 use crate::train::node_data::NodeData;
-use crate::train::{average_params, evaluate, gossip_combine, TrainConfig};
+use crate::train::TrainConfig;
 
-/// Per-phase reverse adjacency: `out[src]` lists every `dst` whose
-/// neighbor list contains `src` — i.e. where a directed message
-/// `src → dst` flows. Lists are dst-ascending, so send order (and with it
-/// the whole event schedule) is deterministic.
-fn out_adjacency(plan: &GossipPlan) -> Vec<Vec<usize>> {
-    let mut out = vec![Vec::new(); plan.n()];
-    for (dst, src, _w) in plan.directed_edges() {
-        out[src].push(dst);
-    }
-    out
-}
+use super::event::Trace;
 
 /// Result of an event-driven consensus run: the per-iteration error curve
-/// of [`ConsensusTrace`](crate::consensus::ConsensusTrace), plus the
-/// event-clock timestamp of every entry and the physical totals.
+/// plus the event-clock timestamp of every entry and the physical totals.
+///
+/// Superseded by [`ExecTrace`], which unifies these accessors with the
+/// training result shape; kept for the deprecated [`sim_consensus`].
 #[derive(Debug, Clone)]
 pub struct SimTrace {
     pub topology: String,
@@ -79,12 +77,30 @@ impl SimTrace {
     pub fn sim_seconds(&self) -> f64 {
         *self.times.last().expect("trace has an initial entry")
     }
+
+    /// Project the historical shape out of a unified executor trace.
+    pub fn from_exec(tr: &ExecTrace) -> SimTrace {
+        SimTrace {
+            topology: tr.topology.clone(),
+            n: tr.n,
+            errors: tr.errors(),
+            times: tr.times(),
+            messages: tr.ledger.messages,
+            bytes: tr.ledger.bytes,
+            drops: tr.drops,
+            trace: tr.trace.clone(),
+            finals: tr.finals.clone(),
+        }
+    }
 }
 
 /// Run `iters` gossip iterations of `seq` from `init` on the simulated
-/// network. Bulk-synchronous mode reproduces
-/// [`consensus::simulate`](crate::consensus::simulate) exactly under
-/// [`SimConfig::ideal`].
+/// network. Bulk-synchronous mode reproduces the analytic loop exactly
+/// under [`SimConfig::ideal`].
+#[deprecated(
+    note = "use exec::SimnetExecutor with an exec::ConsensusWorkload \
+            (returns the unified ExecTrace)"
+)]
 pub fn sim_consensus(
     seq: &GraphSequence,
     init: &[Vec<f64>],
@@ -92,232 +108,29 @@ pub fn sim_consensus(
     cfg: &SimConfig,
 ) -> SimTrace {
     assert_eq!(init.len(), seq.n, "init size != topology n");
-    let n = seq.n;
-    let d = init.first().map(|x| x.len()).unwrap_or(0);
-    let bytes_per_msg = (d * 8) as u64;
-    let mut net = cfg.network(n);
-    let mut trace = Trace::new(cfg.record_trace);
-    let mut xs: Vec<Vec<f64>> = init.to_vec();
-    let mut errors = vec![consensus_error(&xs)];
-    let mut times = vec![0.0];
-    let mut messages = 0u64;
-    let mut bytes = 0u64;
-    let mut drops = 0u64;
-    if seq.is_empty() || iters == 0 || n == 0 {
+    if seq.is_empty() || iters == 0 || seq.n == 0 {
+        // Historical behavior: an initial-entry-only trace.
         return SimTrace {
             topology: seq.name.clone(),
-            n,
-            errors,
-            times,
-            messages,
-            bytes,
-            drops,
-            trace,
-            finals: xs,
+            n: seq.n,
+            errors: vec![consensus_error(init)],
+            times: vec![0.0],
+            messages: 0,
+            bytes: 0,
+            drops: 0,
+            trace: Trace::new(cfg.record_trace),
+            finals: init.to_vec(),
         };
     }
-    let out_adj: Vec<Vec<Vec<usize>>> =
-        seq.phases.iter().map(out_adjacency).collect();
-
-    match cfg.mode {
-        ExecMode::BulkSynchronous => {
-            let mut clock = 0.0f64;
-            // Persistent mix scratch, swapped with `xs` each barrier — no
-            // allocation on the per-iteration path.
-            let mut next = vec![vec![0.0f64; d]; n];
-            for r in 0..iters {
-                let pidx = r % seq.len();
-                let plan = &seq.phases[pidx];
-                let mut q = EventQueue::new();
-                for i in 0..n {
-                    q.push(
-                        clock + net.compute_seconds(i),
-                        EventKind::ComputeDone { node: i, round: r },
-                    );
-                }
-                // arrived[i][k] <=> the payload of plan.neighbors(i)[k]
-                // made it through this phase.
-                let mut arrived: Vec<Vec<bool>> =
-                    (0..n).map(|i| vec![false; plan.degree(i)]).collect();
-                let mut barrier_t = clock;
-                while let Some(ev) = q.pop() {
-                    barrier_t = ev.t;
-                    trace.record(ev.t, ev.kind);
-                    match ev.kind {
-                        EventKind::ComputeDone { node, .. } => {
-                            let mut t_free = ev.t;
-                            for &dst in &out_adj[pidx][node] {
-                                t_free += net
-                                    .links
-                                    .send_seconds(node, dst, bytes_per_msg);
-                                messages += 1;
-                                bytes += bytes_per_msg;
-                                if net.dropped() {
-                                    drops += 1;
-                                } else {
-                                    q.push(
-                                        t_free,
-                                        EventKind::MessageArrive {
-                                            src: node,
-                                            dst,
-                                            msg: 0,
-                                        },
-                                    );
-                                }
-                            }
-                        }
-                        EventKind::MessageArrive { src, dst, .. } => {
-                            let row = plan.neighbors(dst);
-                            if let Ok(k) = row
-                                .binary_search_by_key(&src, |&(p, _)| p)
-                            {
-                                arrived[dst][k] = true;
-                            }
-                        }
-                        EventKind::PhaseBarrier { .. } => {}
-                    }
-                }
-                clock = barrier_t;
-                trace.record(clock, EventKind::PhaseBarrier { round: r });
-                // Barrier: mix with whatever survived the phase.
-                for (i, out) in next.iter_mut().enumerate() {
-                    let row = plan.neighbors(i);
-                    let flags = &arrived[i];
-                    plan.gossip_row_partial(
-                        i,
-                        &xs[i],
-                        |j| {
-                            row.binary_search_by_key(&j, |&(p, _)| p)
-                                .ok()
-                                .filter(|&k| flags[k])
-                                .map(|_| xs[j].as_slice())
-                        },
-                        out,
-                    );
-                }
-                std::mem::swap(&mut xs, &mut next);
-                errors.push(consensus_error(&xs));
-                times.push(clock);
-            }
-        }
-        ExecMode::Async => {
-            let mut q = EventQueue::new();
-            // In-flight payloads, keyed by message id and reclaimed on
-            // arrival — memory stays O(messages currently in the air).
-            let mut store: HashMap<usize, Rc<Vec<f64>>> = HashMap::new();
-            let mut next_msg = 0usize;
-            let mut mailbox: Vec<BTreeMap<usize, Rc<Vec<f64>>>> =
-                vec![BTreeMap::new(); n];
-            let mut completed = vec![0usize; iters];
-            // One NIC per node: sends from consecutive rounds queue behind
-            // each other (compute may overlap transmission, sends may not).
-            let mut nic_free = vec![0.0f64; n];
-            for i in 0..n {
-                q.push(
-                    net.compute_seconds(i),
-                    EventKind::ComputeDone { node: i, round: 0 },
-                );
-            }
-            while let Some(ev) = q.pop() {
-                trace.record(ev.t, ev.kind);
-                match ev.kind {
-                    EventKind::ComputeDone { node, round } => {
-                        let pidx = round % seq.len();
-                        let plan = &seq.phases[pidx];
-                        // Snapshot and send the pre-mix value.
-                        let payload = Rc::new(xs[node].clone());
-                        let mut t_free = ev.t.max(nic_free[node]);
-                        for &dst in &out_adj[pidx][node] {
-                            t_free += net
-                                .links
-                                .send_seconds(node, dst, bytes_per_msg);
-                            messages += 1;
-                            bytes += bytes_per_msg;
-                            if net.dropped() {
-                                drops += 1;
-                            } else {
-                                let msg = next_msg;
-                                next_msg += 1;
-                                store.insert(msg, payload.clone());
-                                q.push(
-                                    t_free,
-                                    EventKind::MessageArrive {
-                                        src: node,
-                                        dst,
-                                        msg,
-                                    },
-                                );
-                            }
-                        }
-                        nic_free[node] = t_free;
-                        // Mix with whatever has arrived (consume-once),
-                        // renormalizing for the missing peers.
-                        let row = plan.neighbors(node);
-                        let avail: Vec<Option<Rc<Vec<f64>>>> = row
-                            .iter()
-                            .map(|&(j, _)| mailbox[node].remove(&j))
-                            .collect();
-                        let mut out = vec![0.0f64; d];
-                        plan.gossip_row_partial(
-                            node,
-                            &xs[node],
-                            |j| {
-                                row.binary_search_by_key(&j, |&(p, _)| p)
-                                    .ok()
-                                    .and_then(|k| avail[k].as_ref())
-                                    .map(|rc| rc.as_slice())
-                            },
-                            &mut out,
-                        );
-                        xs[node] = out;
-                        completed[round] += 1;
-                        if completed[round] == n {
-                            errors.push(consensus_error(&xs));
-                            times.push(ev.t);
-                        }
-                        if round + 1 < iters {
-                            q.push(
-                                ev.t + net.compute_seconds(node),
-                                EventKind::ComputeDone {
-                                    node,
-                                    round: round + 1,
-                                },
-                            );
-                        }
-                    }
-                    EventKind::MessageArrive { src, dst, msg } => {
-                        if let Some(p) = store.remove(&msg) {
-                            mailbox[dst].insert(src, p);
-                        }
-                    }
-                    EventKind::PhaseBarrier { .. } => {}
-                }
-            }
-        }
-    }
-
-    SimTrace {
-        topology: seq.name.clone(),
-        n,
-        errors,
-        times,
-        messages,
-        bytes,
-        drops,
-        trace,
-        finals: xs,
-    }
+    let mut w = ConsensusWorkload::new(init.to_vec());
+    let tr = SimnetExecutor::new(cfg.clone())
+        .run(&mut w, seq, iters)
+        .expect("consensus workload is infallible");
+    SimTrace::from_exec(&tr)
 }
 
-struct SimNodeState {
-    params: Vec<f32>,
-    opt: Box<dyn crate::optim::DecentralizedOptimizer>,
-    data: Box<dyn NodeData>,
-    last_loss: f64,
-    pending: Vec<Vec<f32>>,
-}
-
-/// Result of an event-driven training run.
+/// Result of an event-driven training run. Superseded by [`ExecTrace`];
+/// kept for the deprecated [`sim_train`].
 #[derive(Debug)]
 pub struct SimRunResult {
     /// The usual per-round records; `sim_seconds` carries the event clock
@@ -333,50 +146,34 @@ pub struct SimRunResult {
     pub final_params: Vec<Vec<f32>>,
 }
 
-#[allow(clippy::too_many_arguments)]
-fn round_record(
-    round: usize,
-    nodes: &[SimNodeState],
-    ledger: &CommLedger,
-    is_eval: bool,
-    provider: &dyn GradProvider,
-    eval_batches: &[Batch],
-    d: usize,
-) -> Result<RoundRecord, String> {
-    let n = nodes.len();
-    let mut rec = RoundRecord {
-        round,
-        train_loss: nodes.iter().map(|s| s.last_loss).sum::<f64>()
-            / n as f64,
-        consensus_error: f64::NAN,
-        test_loss: f64::NAN,
-        test_acc: f64::NAN,
-        cum_messages: ledger.messages,
-        cum_bytes: ledger.bytes,
-        sim_seconds: ledger.sim_seconds,
-    };
-    if is_eval {
-        let params_f64: Vec<Vec<f64>> = nodes
+impl SimRunResult {
+    /// Project the historical shape out of a unified executor trace.
+    pub fn from_exec(tr: ExecTrace) -> SimRunResult {
+        // `finals` are f32 params widened losslessly to f64, so the cast
+        // back is exact.
+        let final_params: Vec<Vec<f32>> = tr
+            .finals
             .iter()
-            .map(|s| s.params.iter().map(|&x| x as f64).collect())
+            .map(|p| p.iter().map(|&x| x as f32).collect())
             .collect();
-        rec.consensus_error = consensus_error(&params_f64);
-        if !eval_batches.is_empty() {
-            let avg =
-                average_params(nodes.iter().map(|s| s.params.as_slice()), d);
-            let (loss, acc) = evaluate(provider, &avg, eval_batches)?;
-            rec.test_loss = loss;
-            rec.test_acc = acc;
+        SimRunResult {
+            run: tr.run,
+            ledger: tr.ledger,
+            drops: tr.drops,
+            trace: tr.trace,
+            final_params,
         }
     }
-    Ok(rec)
 }
 
 /// Run decentralized training of `provider` over `seq` on the simulated
-/// network. Bulk-synchronous mode reproduces
-/// [`train::train`](crate::train::train) exactly under
-/// [`SimConfig::ideal`] (same seed, same rounds); asynchronous mode lets
-/// every node proceed with whatever neighbor payloads have arrived.
+/// network. Bulk-synchronous mode reproduces the analytic trainer exactly
+/// under [`SimConfig::ideal`] (same seed, same rounds); asynchronous mode
+/// lets every node proceed with whatever neighbor payloads have arrived.
+#[deprecated(
+    note = "use exec::SimnetExecutor with an exec::TrainingWorkload \
+            (returns the unified ExecTrace)"
+)]
 pub fn sim_train(
     provider: &dyn GradProvider,
     seq: &GraphSequence,
@@ -396,332 +193,21 @@ pub fn sim_train(
     if n == 0 || seq.is_empty() {
         return Err("simnet needs n >= 1 and a non-empty sequence".into());
     }
-    let d = provider.d_params();
-    let init = provider.init_params();
-    let mut nodes: Vec<SimNodeState> = node_data
-        .into_iter()
-        .map(|data| SimNodeState {
-            params: init.clone(),
-            opt: cfg.optimizer.build(d),
-            data,
-            last_loss: f64::NAN,
-            pending: Vec::new(),
-        })
-        .collect();
-    let n_msgs = nodes[0].opt.n_messages();
-    let damping = nodes[0].opt.w_damping() as f32;
-    let bundle_bytes = (n_msgs * d * 4) as u64;
-    let mut net = sim.network(n);
-    let mut trace = Trace::new(sim.record_trace);
-    let mut ledger = CommLedger::default();
-    let mut drops = 0u64;
-    let out_adj: Vec<Vec<Vec<usize>>> =
-        seq.phases.iter().map(out_adjacency).collect();
-    let mut result = RunResult {
-        label: format!(
-            "{} × {} × {} [simnet {}]",
-            provider.name(),
-            seq.name,
-            cfg.optimizer.label(),
-            sim.mode.label()
-        ),
-        records: Vec::new(),
-    };
-
-    match sim.mode {
-        ExecMode::BulkSynchronous => {
-            let mut scratch: Vec<Vec<f32>> =
-                (0..n).map(|_| vec![0.0f32; d]).collect();
-            let mut clock = 0.0f64;
-            for r in 0..cfg.rounds {
-                let lr = cfg.lr_at(r) as f32;
-                let pidx = r % seq.len();
-                let plan = &seq.phases[pidx];
-                let mut q = EventQueue::new();
-                for i in 0..n {
-                    q.push(
-                        clock + net.compute_seconds(i),
-                        EventKind::ComputeDone { node: i, round: r },
-                    );
-                }
-                let mut arrived: Vec<Vec<bool>> =
-                    (0..n).map(|i| vec![false; plan.degree(i)]).collect();
-                let mut barrier_t = clock;
-                let mut failure: Option<String> = None;
-                while let Some(ev) = q.pop() {
-                    barrier_t = ev.t;
-                    trace.record(ev.t, ev.kind);
-                    match ev.kind {
-                        EventKind::ComputeDone { node, .. } => {
-                            let nd = &mut nodes[node];
-                            let batch = nd.data.next_train_batch();
-                            match provider.train_step(&nd.params, &batch) {
-                                Ok((loss, grads)) => {
-                                    nd.last_loss = loss as f64;
-                                    nd.pending =
-                                        nd.opt.pre_mix(&nd.params, &grads, lr);
-                                }
-                                Err(e) => {
-                                    failure = Some(format!("round {r}: {e}"));
-                                    break;
-                                }
-                            }
-                            let mut t_free = ev.t;
-                            for &dst in &out_adj[pidx][node] {
-                                t_free += net
-                                    .links
-                                    .send_seconds(node, dst, bundle_bytes);
-                                ledger.record_sends(n_msgs, d);
-                                if net.dropped() {
-                                    // One lost bundle loses all n_msgs
-                                    // logical messages — keep drops in the
-                                    // same unit as ledger.messages.
-                                    drops += n_msgs as u64;
-                                } else {
-                                    q.push(
-                                        t_free,
-                                        EventKind::MessageArrive {
-                                            src: node,
-                                            dst,
-                                            msg: 0,
-                                        },
-                                    );
-                                }
-                            }
-                        }
-                        EventKind::MessageArrive { src, dst, .. } => {
-                            let row = plan.neighbors(dst);
-                            if let Ok(k) = row
-                                .binary_search_by_key(&src, |&(p, _)| p)
-                            {
-                                arrived[dst][k] = true;
-                            }
-                        }
-                        EventKind::PhaseBarrier { .. } => {}
-                    }
-                }
-                if let Some(e) = failure {
-                    return Err(e);
-                }
-                clock = barrier_t;
-                trace.record(clock, EventKind::PhaseBarrier { round: r });
-                ledger.advance_clock_to(clock);
-                // Match the analytic trainer's convention: `rounds` counts
-                // message passes (record_round is called once per message
-                // slot there), so per-round averages stay comparable.
-                for _ in 0..n_msgs {
-                    ledger.bump_round();
-                }
-
-                // Barrier: mix each message over the surviving payloads —
-                // the exact trainer arithmetic (gossip_combine).
-                let mut used0 = vec![0usize; n];
-                for m in 0..n_msgs {
-                    let msgs: Vec<&[f32]> = nodes
-                        .iter()
-                        .map(|s| s.pending[m].as_slice())
-                        .collect();
-                    for (i, out) in scratch.iter_mut().enumerate() {
-                        let row = plan.neighbors(i);
-                        let flags = &arrived[i];
-                        let used = gossip_combine(
-                            plan,
-                            i,
-                            damping,
-                            msgs[i],
-                            |j| {
-                                row.binary_search_by_key(&j, |&(p, _)| p)
-                                    .ok()
-                                    .filter(|&k| flags[k])
-                                    .map(|_| msgs[j])
-                            },
-                            out,
-                        );
-                        if m == 0 {
-                            used0[i] = used;
-                        }
-                    }
-                    for (nd, sc) in nodes.iter_mut().zip(scratch.iter_mut())
-                    {
-                        std::mem::swap(&mut nd.pending[m], sc);
-                    }
-                }
-                for (i, nd) in nodes.iter_mut().enumerate() {
-                    let active = used0[i] > 0;
-                    let pending = std::mem::take(&mut nd.pending);
-                    let new =
-                        nd.opt.post_mix(pending, &nd.params, lr, active);
-                    nd.params = new;
-                }
-
-                let is_eval = (cfg.eval_every > 0
-                    && (r + 1) % cfg.eval_every == 0)
-                    || r + 1 == cfg.rounds;
-                result.records.push(round_record(
-                    r + 1,
-                    &nodes,
-                    &ledger,
-                    is_eval,
-                    provider,
-                    eval_batches,
-                    d,
-                )?);
-            }
-        }
-        ExecMode::Async => {
-            let mut q = EventQueue::new();
-            // In-flight payload bundles, reclaimed on arrival.
-            let mut store: HashMap<usize, Rc<Vec<Vec<f32>>>> =
-                HashMap::new();
-            let mut next_msg = 0usize;
-            let mut mailbox: Vec<BTreeMap<usize, Rc<Vec<Vec<f32>>>>> =
-                vec![BTreeMap::new(); n];
-            let mut completed = vec![0usize; cfg.rounds];
-            // One NIC per node (see the consensus driver above).
-            let mut nic_free = vec![0.0f64; n];
-            if cfg.rounds > 0 {
-                for i in 0..n {
-                    q.push(
-                        net.compute_seconds(i),
-                        EventKind::ComputeDone { node: i, round: 0 },
-                    );
-                }
-            }
-            while let Some(ev) = q.pop() {
-                trace.record(ev.t, ev.kind);
-                match ev.kind {
-                    EventKind::ComputeDone { node, round } => {
-                        let lr = cfg.lr_at(round) as f32;
-                        let pidx = round % seq.len();
-                        let plan = &seq.phases[pidx];
-                        {
-                            let nd = &mut nodes[node];
-                            let batch = nd.data.next_train_batch();
-                            let (loss, grads) = provider
-                                .train_step(&nd.params, &batch)
-                                .map_err(|e| {
-                                    format!("node {node} round {round}: {e}")
-                                })?;
-                            nd.last_loss = loss as f64;
-                            nd.pending =
-                                nd.opt.pre_mix(&nd.params, &grads, lr);
-                        }
-                        let payload = Rc::new(nodes[node].pending.clone());
-                        let mut t_free = ev.t.max(nic_free[node]);
-                        for &dst in &out_adj[pidx][node] {
-                            t_free += net
-                                .links
-                                .send_seconds(node, dst, bundle_bytes);
-                            ledger.record_sends(n_msgs, d);
-                            if net.dropped() {
-                                // Bundle loss = n_msgs logical messages.
-                                drops += n_msgs as u64;
-                            } else {
-                                let msg = next_msg;
-                                next_msg += 1;
-                                store.insert(msg, payload.clone());
-                                q.push(
-                                    t_free,
-                                    EventKind::MessageArrive {
-                                        src: node,
-                                        dst,
-                                        msg,
-                                    },
-                                );
-                            }
-                        }
-                        nic_free[node] = t_free;
-                        // Local-steps gossip: mix the fresh payload with
-                        // whatever neighbor payloads have arrived
-                        // (consume-once), renormalizing for the rest.
-                        let row = plan.neighbors(node);
-                        let avail: Vec<Option<Rc<Vec<Vec<f32>>>>> = row
-                            .iter()
-                            .map(|&(j, _)| mailbox[node].remove(&j))
-                            .collect();
-                        let mut mixed: Vec<Vec<f32>> =
-                            Vec::with_capacity(n_msgs);
-                        let mut used_any = 0usize;
-                        for m in 0..n_msgs {
-                            let mut out = vec![0.0f32; d];
-                            let used = gossip_combine(
-                                plan,
-                                node,
-                                damping,
-                                &nodes[node].pending[m],
-                                |j| {
-                                    row.binary_search_by_key(&j, |&(p, _)| p)
-                                        .ok()
-                                        .and_then(|k| avail[k].as_ref())
-                                        .and_then(|rc| rc.get(m))
-                                        .map(|v| v.as_slice())
-                                },
-                                &mut out,
-                            );
-                            used_any = used_any.max(used);
-                            mixed.push(out);
-                        }
-                        let nd = &mut nodes[node];
-                        nd.pending = Vec::new();
-                        let new = nd.opt.post_mix(
-                            mixed,
-                            &nd.params,
-                            lr,
-                            used_any > 0,
-                        );
-                        nd.params = new;
-                        completed[round] += 1;
-                        if completed[round] == n {
-                            ledger.advance_clock_to(ev.t);
-                            for _ in 0..n_msgs {
-                                ledger.bump_round();
-                            }
-                            let is_eval = (cfg.eval_every > 0
-                                && (round + 1) % cfg.eval_every == 0)
-                                || round + 1 == cfg.rounds;
-                            result.records.push(round_record(
-                                round + 1,
-                                &nodes,
-                                &ledger,
-                                is_eval,
-                                provider,
-                                eval_batches,
-                                d,
-                            )?);
-                        }
-                        if round + 1 < cfg.rounds {
-                            q.push(
-                                ev.t + net.compute_seconds(node),
-                                EventKind::ComputeDone {
-                                    node,
-                                    round: round + 1,
-                                },
-                            );
-                        }
-                    }
-                    EventKind::MessageArrive { src, dst, msg } => {
-                        if let Some(p) = store.remove(&msg) {
-                            mailbox[dst].insert(src, p);
-                        }
-                    }
-                    EventKind::PhaseBarrier { .. } => {}
-                }
-            }
-        }
-    }
-
-    let final_params: Vec<Vec<f32>> =
-        nodes.iter().map(|s| s.params.clone()).collect();
-    Ok(SimRunResult { run: result, ledger, drops, trace, final_params })
+    let mut w = TrainingWorkload::new(provider, cfg, node_data, eval_batches);
+    let tr = SimnetExecutor::new(sim.clone()).run(&mut w, seq, cfg.rounds)?;
+    Ok(SimRunResult::from_exec(tr))
 }
 
 #[cfg(test)]
+// These tests deliberately exercise the deprecated wrappers: they pin
+// that the executor-backed engine reproduces the historical behavior.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::consensus::{gaussian_init, simulate};
     use crate::optim::OptimizerKind;
     use crate::runtime::provider::QuadraticModel;
-    use crate::simnet::Scenario;
+    use crate::simnet::{ExecMode, Scenario};
     use crate::topology::{base, baselines, TopologyKind};
     use crate::train::node_data::FixedBatch;
     use crate::train::train;

@@ -21,8 +21,8 @@
 //!   │ NetworkModel (net.rs)        │     (topology::GraphSequence)
 //!   │  LinkModel    α–β per link   │                │
 //!   │  ComputeModel stragglers     │                ▼
-//!   │  drop_rate    message loss   │──────► drivers (driver.rs)
-//!   │  Rng          seeded draws   │        sim_consensus / sim_train
+//!   │  drop_rate    message loss   │──────► exec::SimnetExecutor
+//!   │  Rng          seeded draws   │        (any exec::Workload)
 //!   └──────────────────────────────┘                │ schedules
 //!                                                   ▼
 //!   ┌────────────────────────────────────────────────────────────┐
@@ -45,9 +45,10 @@
 //! * **Bulk-synchronous** ([`ExecMode::BulkSynchronous`]) — a barrier per
 //!   gossip phase: every node computes, every surviving message is
 //!   delivered, then all nodes mix. Under the ideal network (zero latency,
-//!   zero loss, instant compute) this reproduces the analytic trainer's
+//!   zero loss, instant compute) this reproduces the analytic backend's
 //!   trajectory *bit-exactly* — the event engine is a strict
-//!   generalization, which the equivalence tests in `driver.rs` pin down.
+//!   generalization, which the equivalence tests in `driver.rs` and
+//!   `tests/exec_equivalence.rs` pin down.
 //! * **Asynchronous / local-steps** ([`ExecMode::Async`]) — no barriers:
 //!   when a node finishes local compute it gossips with whatever neighbor
 //!   payloads have arrived, renormalizing weights for the missing peers,
@@ -72,7 +73,11 @@ pub mod event;
 pub mod net;
 pub mod scenario;
 
-pub use driver::{sim_consensus, sim_train, SimRunResult, SimTrace};
+// The event loop itself lives in `exec::SimnetExecutor`; these re-exports
+// keep the one-release deprecated wrappers reachable at their old paths.
+#[allow(deprecated)]
+pub use driver::{sim_consensus, sim_train};
+pub use driver::{SimRunResult, SimTrace};
 pub use event::{Event, EventKind, EventQueue, Trace};
 pub use net::{ComputeModel, LinkModel, NetworkModel};
 pub use scenario::Scenario;

@@ -1,7 +1,16 @@
-//! The decentralized training engine: DSGD-family training over a
-//! time-varying topology (Eq. 1 of the paper), with parallel local
-//! gradients, sparse neighbor-list gossip, communication accounting and
-//! periodic evaluation of the node-averaged model.
+//! The decentralized training layer: hyperparameters ([`TrainConfig`]),
+//! the f32 gossip-combine kernel shared by every execution backend, and
+//! evaluation helpers.
+//!
+//! **Migration note.** The round protocol itself now lives in
+//! [`exec::TrainingWorkload`](crate::exec::TrainingWorkload) and runs on
+//! any [`exec::Executor`](crate::exec::Executor) backend — analytic,
+//! event-driven simnet, or thread-parallel. [`train()`] survives one
+//! release as a thin deprecated wrapper equivalent to running a
+//! `TrainingWorkload` on an
+//! [`AnalyticExecutor`](crate::exec::AnalyticExecutor); port callers to
+//! the executor API to pick backends (and to read measured wall-clock
+//! from the returned [`ExecTrace`](crate::exec::ExecTrace)).
 //!
 //! Gossip walks each node's [`GossipPlan`](crate::topology::GossipPlan)
 //! neighbor list — O(degree · d) per node per round — so per-round cost
@@ -9,14 +18,13 @@
 
 pub mod node_data;
 
-use crate::comm::{CommLedger, CostModel};
-use crate::consensus;
-use crate::metrics::{RoundRecord, RunResult};
+use crate::comm::CostModel;
+use crate::exec::{AnalyticExecutor, Executor, TrainingWorkload};
+use crate::metrics::RunResult;
 use crate::optim::OptimizerKind;
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::GradProvider;
 use crate::topology::{GossipPlan, GraphSequence};
-use crate::util::threadpool::ThreadPool;
 use node_data::NodeData;
 
 /// One node's f32 gossip combine over `plan`'s neighbor list, with
@@ -127,19 +135,15 @@ impl TrainConfig {
     }
 }
 
-struct NodeState {
-    params: Vec<f32>,
-    opt: Box<dyn crate::optim::DecentralizedOptimizer>,
-    data: Box<dyn NodeData>,
-    last_loss: f64,
-    pending: Vec<Vec<f32>>,
-    error: Option<String>,
-}
-
-/// Run decentralized training of `provider` over `seq`.
+/// Run decentralized training of `provider` over `seq` on the ideal
+/// analytic backend.
 ///
 /// `node_data[i]` supplies node i's batches; `eval_batches` are evaluated
 /// on the node-averaged model at eval points.
+#[deprecated(
+    note = "use exec::TrainingWorkload with an exec::Executor backend \
+            (this wrapper runs AnalyticExecutor and drops the ExecTrace)"
+)]
 pub fn train(
     provider: &dyn GradProvider,
     seq: &GraphSequence,
@@ -147,142 +151,9 @@ pub fn train(
     eval_batches: &[Batch],
     cfg: &TrainConfig,
 ) -> Result<RunResult, String> {
-    let n = seq.n;
-    if node_data.len() != n {
-        return Err(format!(
-            "{} node data sources for {} nodes",
-            node_data.len(),
-            n
-        ));
-    }
-    let d = provider.d_params();
-    let init = provider.init_params();
-    let mut nodes: Vec<NodeState> = node_data
-        .into_iter()
-        .map(|data| NodeState {
-            params: init.clone(),
-            opt: cfg.optimizer.build(d),
-            data,
-            last_loss: f64::NAN,
-            pending: Vec::new(),
-            error: None,
-        })
-        .collect();
-    let pool = if cfg.threads == 0 {
-        ThreadPool::with_default_size(16)
-    } else {
-        ThreadPool::new(cfg.threads)
-    };
-    let mut ledger = CommLedger::default();
-    let n_msgs = nodes[0].opt.n_messages();
-    // Persistent gossip scratch: one d-vector per node, reused every round
-    // (no allocation on the hot path — see EXPERIMENTS.md §Perf).
-    let mut scratch: Vec<Vec<f32>> =
-        (0..n).map(|_| vec![0.0f32; d]).collect();
-    // Parallel gossip only pays off when the row-combine work is large;
-    // below this many f32 ops per node the scoped-thread overhead loses.
-    let parallel_gossip = d.saturating_mul(4) >= 1 << 14;
-    let mut result = RunResult {
-        label: format!(
-            "{} × {} × {}",
-            provider.name(),
-            seq.name,
-            cfg.optimizer.label()
-        ),
-        records: Vec::new(),
-    };
-
-    for r in 0..cfg.rounds {
-        let lr = cfg.lr_at(r) as f32;
-        // 1+2. Local gradient + optimizer pre-mix (parallel over nodes).
-        pool.for_each_mut(&mut nodes, |_, node| {
-            let batch = node.data.next_train_batch();
-            match provider.train_step(&node.params, &batch) {
-                Ok((loss, grads)) => {
-                    node.last_loss = loss as f64;
-                    node.pending = node.opt.pre_mix(&node.params, &grads, lr);
-                }
-                Err(e) => node.error = Some(e),
-            }
-        });
-        if let Some(e) = nodes.iter().find_map(|s| s.error.clone()) {
-            return Err(format!("round {r}: {e}"));
-        }
-
-        // 3. Gossip each message over the current phase's sparse plan:
-        // each node touches only its neighbor payloads (O(degree · d)).
-        // The combine accumulates in f32: a gossip row has at most k+2
-        // nonzeros with weights in [0,1], so the error is bounded by a few
-        // ulps — and it is ~2.4x faster than f64 accumulation
-        // (EXPERIMENTS.md §Perf).
-        let plan = seq.phase(r);
-        // Optimizer-requested damping: W̃ = (1−λ)W + λI (see
-        // DecentralizedOptimizer::w_damping; λ = 1/2 for D²).
-        let damping = nodes[0].opt.w_damping() as f32;
-        for m in 0..n_msgs {
-            let msgs: Vec<&[f32]> =
-                nodes.iter().map(|s| s.pending[m].as_slice()).collect();
-            let combine = |i: usize, out: &mut Vec<f32>| {
-                gossip_combine(plan, i, damping, msgs[i], |j| Some(msgs[j]), out);
-            };
-            if parallel_gossip {
-                pool.for_each_mut(&mut scratch, combine);
-            } else {
-                for (i, out) in scratch.iter_mut().enumerate() {
-                    combine(i, out);
-                }
-            }
-            for (node, sc) in nodes.iter_mut().zip(scratch.iter_mut()) {
-                std::mem::swap(&mut node.pending[m], sc);
-            }
-            ledger.record_round(plan, d, &cfg.cost);
-        }
-
-        // 4. Post-mix: commit new parameters. A node is "active" when it
-        // had at least one gossip partner this phase.
-        pool.for_each_mut(&mut nodes, |i, node| {
-            let active = plan.is_active(i);
-            let pending = std::mem::take(&mut node.pending);
-            let new = node.opt.post_mix(pending, &node.params, lr, active);
-            node.params = new;
-        });
-
-        // 5. Metrics.
-        let is_eval = (cfg.eval_every > 0 && (r + 1) % cfg.eval_every == 0)
-            || r + 1 == cfg.rounds;
-        let mut rec = RoundRecord {
-            round: r + 1,
-            train_loss: nodes.iter().map(|s| s.last_loss).sum::<f64>()
-                / n as f64,
-            consensus_error: f64::NAN,
-            test_loss: f64::NAN,
-            test_acc: f64::NAN,
-            cum_messages: ledger.messages,
-            cum_bytes: ledger.bytes,
-            sim_seconds: ledger.sim_seconds,
-        };
-        if is_eval {
-            let params_f64: Vec<Vec<f64>> = nodes
-                .iter()
-                .map(|s| s.params.iter().map(|&x| x as f64).collect())
-                .collect();
-            rec.consensus_error = consensus::consensus_error(&params_f64);
-            if !eval_batches.is_empty() {
-                let avg = average_params(
-                    nodes.iter().map(|s| s.params.as_slice()),
-                    d,
-                );
-                let (loss, acc) =
-                    evaluate(provider, &avg, eval_batches)?;
-                rec.test_loss = loss;
-                rec.test_acc = acc;
-            }
-            result.records.push(rec);
-        } else {
-            result.records.push(rec);
-        }
-    }
-    Ok(result)
+    let mut w = TrainingWorkload::new(provider, cfg, node_data, eval_batches);
+    let exec = AnalyticExecutor::new(cfg.cost, cfg.threads);
+    Ok(exec.run(&mut w, seq, cfg.rounds)?.run)
 }
 
 /// Node-averaged parameter vector (f64 accumulation in node order) — the
@@ -326,6 +197,9 @@ pub fn evaluate(
 }
 
 #[cfg(test)]
+// The wrapper IS what these tests pin — they exercise the deprecated
+// entry point against the executor-backed implementation.
+#[allow(deprecated)]
 mod tests {
     use super::node_data::FixedBatch;
     use super::*;

@@ -1,0 +1,178 @@
+//! Cross-executor equivalence: the executor-layer guarantee, pinned.
+//!
+//! Same seed ⇒ `AnalyticExecutor`, `SimnetExecutor` (ideal BSP network)
+//! and `ThreadedExecutor` produce **bit-identical** final per-node state,
+//! for both shipped workloads (consensus vectors and DSGD training), at
+//! n ∈ {8, 64}. This is what makes measurements comparable across
+//! backends: any wall-clock or event-clock difference is attributable to
+//! the backend, never to the arithmetic.
+
+use basegraph::consensus::gaussian_init;
+use basegraph::exec::{ConsensusWorkload, ExecTrace, ExecutorKind, TrainingWorkload};
+use basegraph::optim::OptimizerKind;
+use basegraph::runtime::provider::QuadraticModel;
+use basegraph::simnet::SimConfig;
+use basegraph::topology::TopologyKind;
+use basegraph::train::node_data::{FixedBatch, NodeData};
+use basegraph::train::TrainConfig;
+use basegraph::util::rng::Rng;
+
+fn backends() -> Vec<ExecutorKind> {
+    vec![
+        ExecutorKind::analytic(),
+        ExecutorKind::Simnet(SimConfig::ideal()),
+        ExecutorKind::threaded(4),
+    ]
+}
+
+#[test]
+fn consensus_final_state_is_bit_identical_across_backends() {
+    for n in [8usize, 64] {
+        for kind in [TopologyKind::Base { m: 4 }, TopologyKind::Exp] {
+            let seq = kind.build(n, 0).unwrap();
+            let mut rng = Rng::new(7);
+            let init = gaussian_init(n, 3, &mut rng);
+            let iters = 2 * seq.len();
+            let runs: Vec<ExecTrace> = backends()
+                .iter()
+                .map(|e| {
+                    e.run(
+                        &mut ConsensusWorkload::new(init.clone()),
+                        &seq,
+                        iters,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let a = &runs[0];
+            assert_eq!(a.n, n);
+            for b in &runs[1..] {
+                assert_eq!(
+                    a.finals, b.finals,
+                    "{} vs {} diverged on {} n={n}",
+                    a.backend, b.backend, seq.name
+                );
+                assert_eq!(
+                    a.errors(),
+                    b.errors(),
+                    "{} vs {} error curves differ on {} n={n}",
+                    a.backend,
+                    b.backend,
+                    seq.name
+                );
+            }
+        }
+    }
+}
+
+fn quadratic_data(
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> (QuadraticModel, Vec<Box<dyn NodeData>>) {
+    let mut rng = Rng::new(seed);
+    let model = QuadraticModel::new(d);
+    let data: Vec<Box<dyn NodeData>> = (0..n)
+        .map(|_| {
+            let c: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+            Box::new(FixedBatch::new(QuadraticModel::target_batch(c)))
+                as Box<dyn NodeData>
+        })
+        .collect();
+    (model, data)
+}
+
+#[test]
+fn training_final_params_are_bit_identical_across_backends() {
+    for n in [8usize, 64] {
+        let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+        let cfg = TrainConfig {
+            rounds: 12,
+            lr: 0.2,
+            warmup: 2,
+            cosine: true,
+            optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+            eval_every: 4,
+            threads: 2,
+            ..Default::default()
+        };
+        let run = |exec: &ExecutorKind| -> ExecTrace {
+            // A TrainingWorkload is consumed by its run: fresh data (same
+            // seed) per backend.
+            let (model, data) = quadratic_data(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+            exec.run(&mut w, &seq, cfg.rounds).unwrap()
+        };
+        let runs: Vec<ExecTrace> = backends().iter().map(run).collect();
+        let a = &runs[0];
+        for b in &runs[1..] {
+            assert_eq!(
+                a.finals, b.finals,
+                "{} vs {} final params diverged at n={n}",
+                a.backend, b.backend
+            );
+            assert_eq!(a.run.records.len(), b.run.records.len());
+            for (x, y) in a.run.records.iter().zip(&b.run.records) {
+                assert_eq!(x.round, y.round);
+                assert_eq!(
+                    x.train_loss, y.train_loss,
+                    "{} vs {}: loss diverged at round {}",
+                    a.backend, b.backend, x.round
+                );
+                assert_eq!(
+                    x.consensus_error.is_nan(),
+                    y.consensus_error.is_nan()
+                );
+                if !x.consensus_error.is_nan() {
+                    assert_eq!(x.consensus_error, y.consensus_error);
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance scenario: the threaded backend on a consensus workload
+/// at n = 64, Base-4 vs the exponential graph, reports measured
+/// wall-clock in `ExecTrace` — per record and for the whole run.
+#[test]
+fn threaded_reports_measured_wall_clock_at_n64() {
+    let n = 64;
+    for kind in [TopologyKind::Base { m: 4 }, TopologyKind::Exp] {
+        let seq = kind.build(n, 0).unwrap();
+        let mut rng = Rng::new(1);
+        let init = gaussian_init(n, 64, &mut rng);
+        let tr = ExecutorKind::threaded(0)
+            .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
+            .unwrap();
+        assert_eq!(tr.backend, "threaded");
+        assert!(
+            tr.wall_seconds > 0.0,
+            "{}: no measured wall clock",
+            seq.name
+        );
+        let last = tr.run.records.last().unwrap();
+        assert!(last.wall_seconds > 0.0);
+        for w in tr.run.records.windows(2) {
+            assert!(
+                w[1].wall_seconds >= w[0].wall_seconds,
+                "wall clock must be monotone"
+            );
+        }
+        // time_to_reach and wall_to_reach answer for the same record.
+        if let Some(k) = tr.iters_to_reach(1e-12) {
+            assert!(tr.time_to_reach(1e-12).is_some());
+            let wall = tr.wall_to_reach(1e-12).unwrap();
+            assert!(wall > 0.0 && wall <= tr.wall_seconds);
+            assert!(k <= 2 * seq.len());
+        }
+    }
+    // Base-4 is finite-time at n=64; it must actually reach tolerance.
+    let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(1);
+    let init = gaussian_init(n, 64, &mut rng);
+    let tr = ExecutorKind::threaded(0)
+        .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
+        .unwrap();
+    assert!(tr.reached(1e-12), "Base-4 must reach exact consensus");
+}

@@ -1,5 +1,9 @@
 //! Integration: full decentralized training runs across modules —
 //! topology × data partition × optimizer × (native | PJRT) provider.
+//!
+//! Deliberately drives the deprecated `train::train` wrapper during the
+//! migration window — it must keep producing executor-backed results.
+#![allow(deprecated)]
 
 use std::sync::Arc;
 
