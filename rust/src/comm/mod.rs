@@ -55,6 +55,13 @@ pub struct CommLedger {
     pub sim_seconds: f64,
     /// Rounds recorded.
     pub rounds: u64,
+    /// **Measured** serialized bytes that crossed a real socket, exact —
+    /// every frame byte (headers, payloads, checksums, both directions at
+    /// the coordinator). Only the process backend moves real frames, so
+    /// this stays 0 everywhere else; `bytes` above is the *model* count
+    /// (payload floats × directed sends) and keeps its meaning on every
+    /// backend.
+    pub bytes_on_wire: u64,
 }
 
 impl CommLedger {
@@ -254,6 +261,19 @@ mod tests {
         assert_eq!(ledger.sim_seconds, 1.5);
         ledger.bump_round();
         assert_eq!(ledger.rounds, 1);
+    }
+
+    #[test]
+    fn wire_bytes_are_separate_from_model_bytes() {
+        // bytes = α–β model payload accounting; bytes_on_wire = measured
+        // serialized frames, assigned by the process coordinator from
+        // its single running frame counter. They never mix.
+        let mut ledger = CommLedger::default();
+        ledger.record_sends(2, 100);
+        assert_eq!(ledger.bytes_on_wire, 0, "model accounting stays off it");
+        ledger.bytes_on_wire = 1000;
+        assert_eq!(ledger.bytes, 800);
+        assert_eq!(ledger.sim_seconds, 0.0);
     }
 
     #[test]

@@ -6,13 +6,15 @@
 //! dense mixing matrix, so simulations at n in the thousands (e.g. Base-4
 //! at n = 4096) run in milliseconds instead of allocating n² weights.
 //!
-//! **Migration note.** The loop itself now lives in
+//! **Migration note.** The loop itself lives in
 //! [`exec::ConsensusWorkload`](crate::exec::ConsensusWorkload) and runs
 //! on any [`exec::Executor`](crate::exec::Executor) backend;
-//! [`consensus_experiment`] is the backend-generic entry point. The old
-//! free functions survive one release as thin deprecated wrappers:
-//! [`simulate`] (analytic backend) and [`simnet_consensus_experiment`]
-//! (event-driven backend).
+//! [`consensus_experiment`] is the backend-generic entry point and
+//! [`paper_consensus_experiment`] the fixed-protocol convenience. The
+//! pre-executor wrappers (`simulate`, `simnet_consensus_experiment`)
+//! served their one-release deprecation window and are gone — build a
+//! `ConsensusWorkload` and pick an
+//! [`ExecutorKind`](crate::exec::ExecutorKind) instead.
 
 use crate::exec::{
     AnalyticExecutor, ConsensusWorkload, ExecTrace, Executor, ExecutorKind,
@@ -87,35 +89,6 @@ pub fn gaussian_init(n: usize, d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
         .collect()
 }
 
-/// Run `iters` gossip iterations of the sequence (cycling through phases)
-/// and record the consensus error after each one.
-#[deprecated(
-    note = "use exec::ConsensusWorkload with an exec::Executor backend \
-            (or consensus_experiment / paper_consensus_experiment)"
-)]
-pub fn simulate(
-    seq: &GraphSequence,
-    init: &[Vec<f64>],
-    iters: usize,
-) -> ConsensusTrace {
-    assert_eq!(init.len(), seq.n, "init size != topology n");
-    if seq.is_empty() {
-        // Historical behavior: no phases means the values never move.
-        let e = consensus_error(init);
-        return ConsensusTrace {
-            topology: seq.name.clone(),
-            n: seq.n,
-            max_degree: 0,
-            errors: vec![e; iters + 1],
-        };
-    }
-    let mut w = ConsensusWorkload::new(init.to_vec());
-    let tr = AnalyticExecutor::serial()
-        .run(&mut w, seq, iters)
-        .expect("consensus workload is infallible");
-    ConsensusTrace::from_exec(&tr)
-}
-
 /// Convenience: the paper's Sec. 6.1 experiment — scalar Gaussian values,
 /// fixed seed, `iters` iterations on the analytic backend.
 pub fn paper_consensus_experiment(
@@ -146,23 +119,6 @@ pub fn consensus_experiment(
     let mut rng = Rng::new(seed);
     let init = gaussian_init(seq.n, 1, &mut rng);
     exec.run(&mut ConsensusWorkload::new(init), seq, iters)
-}
-
-/// Event-driven counterpart of [`paper_consensus_experiment`].
-#[deprecated(
-    note = "use consensus_experiment with ExecutorKind::Simnet \
-            (returns the unified ExecTrace)"
-)]
-#[allow(deprecated)]
-pub fn simnet_consensus_experiment(
-    seq: &GraphSequence,
-    iters: usize,
-    seed: u64,
-    sim: &crate::simnet::SimConfig,
-) -> crate::simnet::SimTrace {
-    let mut rng = Rng::new(seed);
-    let init = gaussian_init(seq.n, 1, &mut rng);
-    crate::simnet::sim_consensus(seq, &init, iters, sim)
 }
 
 #[cfg(test)]
@@ -256,17 +212,21 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn simulate_wrapper_matches_executor_path() {
+    fn trace_projection_matches_serial_executor() {
+        // `paper_consensus_experiment` is the fixed-protocol projection
+        // of a serial analytic run — the curve and metadata must agree
+        // with driving the executor directly (the assertion that used to
+        // pin the deleted `simulate` wrapper, folded onto the executor).
         let seq = base::base(13, 1).unwrap();
+        let a = paper_consensus_experiment(&seq, 10, 2);
         let mut rng = Rng::new(2);
-        let init = gaussian_init(13, 2, &mut rng);
-        let a = simulate(&seq, &init, 10);
+        let init = gaussian_init(13, 1, &mut rng);
         let b = AnalyticExecutor::serial()
             .run(&mut ConsensusWorkload::new(init), &seq, 10)
             .unwrap();
         assert_eq!(a.errors, b.errors());
         assert_eq!(a.max_degree, b.max_degree);
+        assert_eq!(a.n, b.n);
     }
 
     #[test]

@@ -1,45 +1,55 @@
-//! `exec` — one workload contract over analytic, event-driven and
-//! thread-parallel execution backends.
+//! `exec` — one workload contract over analytic, event-driven,
+//! thread-parallel and process-parallel execution backends.
 //!
 //! The paper's claim is about *time*: Base-(k+1) reaches exact consensus
 //! in finite time at small maximum degree, so decentralized SGD spends
 //! less wall-clock per unit of progress. This module makes that claim
-//! measurable on three clocks through a single contract:
+//! measurable on every clock through a single contract:
 //!
 //! ```text
 //!            Workload (workload.rs)                Executor
 //!   per-node state · local_step · make_payload      backend
 //!   combine (missing-peer renormalization) ──┬──► AnalyticExecutor
 //!       ConsensusWorkload (f64 gossip)       ├──► SimnetExecutor
-//!       TrainingWorkload (DSGD family)       └──► ThreadedExecutor
-//!                        │
+//!       TrainingWorkload (DSGD family)       ├──► ThreadedExecutor
+//!                        │                   └──► ProcessExecutor
 //!                        ▼
 //!        ExecTrace: per-round error/loss records +
 //!        α–β / event-clock seconds + measured wall-clock +
-//!        CommLedger totals + final node states
+//!        CommLedger totals (incl. measured bytes_on_wire) +
+//!        final node states
 //! ```
 //!
-//! * [`AnalyticExecutor`] — the ideal lock-step loop (what
-//!   `consensus::simulate` and `train::train` used to hard-code), with
-//!   α–β model seconds on the simulated clock.
+//! * [`AnalyticExecutor`] — the ideal lock-step loop, with α–β model
+//!   seconds on the simulated clock.
 //! * [`SimnetExecutor`] — the discrete-event network simulator
 //!   (stragglers, lossy/heterogeneous links, BSP or asynchronous gossip);
 //!   the simulated clock is the event clock.
 //! * [`ThreadedExecutor`] — real OS threads: one node per
 //!   [`ThreadPool`](crate::util::threadpool::ThreadPool) worker,
-//!   double-buffered payload mailboxes and a real barrier per phase. The
-//!   first backend where a topology's degree shows up as *measured*
-//!   seconds, and the stepping stone to a process-parallel backend.
+//!   double-buffered payload mailboxes and a real barrier per phase.
+//! * [`ProcessExecutor`] — one OS *process* per node shard
+//!   ([`shard::ShardPlan`]), gossip as length-prefixed checksummed frames
+//!   over Unix-domain sockets ([`wire`]). The backend where a topology's
+//!   degree is measured in real serialized bytes
+//!   ([`CommLedger::bytes_on_wire`](crate::comm::CommLedger)) and real
+//!   IPC wall-clock.
+//!
+//! The full architecture tour — including a "how to add a backend"
+//! walkthrough that builds `ProcessExecutor` step by step — lives in
+//! `docs/ARCHITECTURE.md` at the repository root.
 //!
 //! # Determinism
 //!
 //! Under the ideal network every backend walks the same trajectory
 //! bit-for-bit: combines read payload snapshots (never live neighbor
 //! state), accumulate in neighbor-list order, and per-node work is
-//! data-independent, so neither thread scheduling nor event interleaving
-//! can reorder any floating-point operation. The cross-executor
-//! equivalence suite (`tests/exec_equivalence.rs`) pins this at n ∈
-//! {8, 64} for both shipped workloads.
+//! data-independent, so neither thread scheduling, event interleaving nor
+//! process placement can reorder any floating-point operation. Payloads
+//! that cross a process boundary are serialized as exact bit patterns.
+//! The cross-executor equivalence suite (`tests/exec_equivalence.rs`)
+//! pins this at n ∈ {8, 64} for both shipped workloads, all four
+//! backends.
 //!
 //! # Adding a backend
 //!
@@ -54,22 +64,30 @@
 //!
 //! # Migration
 //!
-//! The pre-executor entry points survive one release as thin deprecated
-//! wrappers: `consensus::simulate`, `train::train`, `simnet::sim_consensus`
-//! and `simnet::sim_train` all build the matching workload and dispatch
-//! here. New code should construct a [`Workload`] and pick a backend (or
-//! let the CLI's `--executor analytic|simnet|threaded` flag decide via
+//! The pre-executor free functions (`consensus::simulate`, `train::train`,
+//! `simnet::sim_consensus/sim_train` and the `SimTrace`/`SimRunResult`
+//! shapes) were deprecated in the executor-API release and have now been
+//! **removed**. Construct a [`Workload`] and pick a backend (or let the
+//! CLI's `--executor analytic|simnet|threaded|process` flag decide via
 //! [`ExecutorKind`]).
 
 pub mod analytic;
+pub mod process;
+pub mod shard;
 pub mod simnet;
 pub mod threaded;
+pub mod wire;
 pub mod workload;
 
 pub use analytic::AnalyticExecutor;
+pub use process::ProcessExecutor;
+pub use shard::ShardPlan;
 pub use simnet::SimnetExecutor;
 pub use threaded::ThreadedExecutor;
-pub use workload::{ConsensusWorkload, TrainNode, TrainingWorkload, Workload};
+pub use workload::{
+    quadratic_fixed_targets, ConsensusWorkload, TrainNode, TrainSpec,
+    TrainingWorkload, Workload,
+};
 
 use crate::comm::{CommLedger, CostModel};
 use crate::metrics::{RoundRecord, RunResult, TimeToTarget};
@@ -182,7 +200,8 @@ impl ExecTrace {
 /// An execution backend: runs any [`Workload`] over a topology's phase
 /// sequence for a number of rounds.
 pub trait Executor {
-    /// Stable backend name (`"analytic"`, `"simnet"`, `"threaded"`).
+    /// Stable backend name (`"analytic"`, `"simnet"`, `"threaded"`,
+    /// `"process"`).
     fn backend(&self) -> &'static str;
 
     /// Execute `rounds` rounds of `w` over `seq` (phases cycle). The
@@ -196,12 +215,23 @@ pub trait Executor {
     ) -> Result<ExecTrace, String>;
 }
 
-/// CLI-facing backend selector: `--executor analytic|simnet|threaded`.
+/// CLI-facing backend selector:
+/// `--executor analytic|simnet|threaded|process`.
 #[derive(Debug, Clone)]
 pub enum ExecutorKind {
     Analytic { cost: CostModel, threads: usize },
     Simnet(SimConfig),
     Threaded { cost: CostModel, threads: usize },
+    Process {
+        cost: CostModel,
+        /// Worker-process count (`--shards`).
+        shards: usize,
+        /// Degree-balanced sharding (`--shard-balance degree`).
+        balanced: bool,
+        /// Worker binary override (tests/examples; the CLI re-execs
+        /// itself).
+        worker_bin: Option<std::path::PathBuf>,
+    },
 }
 
 impl ExecutorKind {
@@ -215,15 +245,55 @@ impl ExecutorKind {
         ExecutorKind::Threaded { cost: CostModel::default(), threads }
     }
 
+    /// The process-parallel backend with `shards` worker processes.
+    pub fn process(shards: usize) -> Self {
+        ExecutorKind::Process {
+            cost: CostModel::default(),
+            shards,
+            balanced: false,
+            worker_bin: None,
+        }
+    }
+
+    /// Parse the `--shard-balance contiguous|degree` CLI value.
+    pub fn parse_shard_balance(s: &str) -> Result<bool, String> {
+        match s.trim().to_lowercase().as_str() {
+            "contiguous" => Ok(false),
+            "degree" | "degree-balanced" => Ok(true),
+            other => Err(format!(
+                "unknown shard balance {other:?} (contiguous|degree)"
+            )),
+        }
+    }
+
     pub fn parse(s: &str) -> Result<ExecutorKind, String> {
         match s.trim().to_lowercase().as_str() {
             "analytic" => Ok(ExecutorKind::analytic()),
             "simnet" => Ok(ExecutorKind::Simnet(SimConfig::ideal())),
             "threaded" => Ok(ExecutorKind::threaded(0)),
+            "process" => Ok(ExecutorKind::process(2)),
             other => Err(format!(
-                "unknown executor {other:?} (analytic|simnet|threaded)"
+                "unknown executor {other:?} \
+                 (analytic|simnet|threaded|process)"
             )),
         }
+    }
+
+    /// The one CLI surface for backend selection: `--executor` (with
+    /// `default` when absent) plus every backend knob — `--threads`,
+    /// `--shards`, `--shard-balance`. `train`, `simnet` and `repro` all
+    /// parse through here, so a new knob lands in every subcommand at
+    /// once.
+    pub fn from_args(
+        args: &crate::util::cli::Args,
+        default: &str,
+    ) -> Result<ExecutorKind, String> {
+        Ok(ExecutorKind::parse(&args.str_or("executor", default))?
+            .with_threads(args.usize_or("threads", 0)?)
+            .with_shards(args.usize_or("shards", 2)?)
+            .with_shard_balance(ExecutorKind::parse_shard_balance(
+                &args.str_or("shard-balance", "contiguous"),
+            )?))
     }
 
     pub fn label(&self) -> &'static str {
@@ -231,10 +301,12 @@ impl ExecutorKind {
             ExecutorKind::Analytic { .. } => "analytic",
             ExecutorKind::Simnet(_) => "simnet",
             ExecutorKind::Threaded { .. } => "threaded",
+            ExecutorKind::Process { .. } => "process",
         }
     }
 
-    /// Set the worker-thread count (no-op for the event-driven backend).
+    /// Set the worker-thread count (no-op for the event-driven and
+    /// process backends).
     pub fn with_threads(self, threads: usize) -> Self {
         match self {
             ExecutorKind::Analytic { cost, .. } => {
@@ -243,7 +315,46 @@ impl ExecutorKind {
             ExecutorKind::Threaded { cost, .. } => {
                 ExecutorKind::Threaded { cost, threads }
             }
-            s @ ExecutorKind::Simnet(_) => s,
+            s @ (ExecutorKind::Simnet(_) | ExecutorKind::Process { .. }) => {
+                s
+            }
+        }
+    }
+
+    /// Set the worker-process count (no-op for the other backends).
+    pub fn with_shards(self, shards: usize) -> Self {
+        match self {
+            ExecutorKind::Process { cost, balanced, worker_bin, .. } => {
+                ExecutorKind::Process { cost, shards, balanced, worker_bin }
+            }
+            other => other,
+        }
+    }
+
+    /// Choose degree-balanced sharding (no-op for the other backends).
+    pub fn with_shard_balance(self, balanced: bool) -> Self {
+        match self {
+            ExecutorKind::Process { cost, shards, worker_bin, .. } => {
+                ExecutorKind::Process { cost, shards, balanced, worker_bin }
+            }
+            other => other,
+        }
+    }
+
+    /// Point the process backend at an explicit worker binary — needed
+    /// from test harnesses and examples, whose own executable is not the
+    /// `basegraph` CLI (no-op for the other backends).
+    pub fn with_worker_bin(self, bin: impl Into<std::path::PathBuf>) -> Self {
+        match self {
+            ExecutorKind::Process { cost, shards, balanced, .. } => {
+                ExecutorKind::Process {
+                    cost,
+                    shards,
+                    balanced,
+                    worker_bin: Some(bin.into()),
+                }
+            }
+            other => other,
         }
     }
 
@@ -256,6 +367,9 @@ impl ExecutorKind {
             }
             ExecutorKind::Threaded { threads, .. } => {
                 ExecutorKind::Threaded { cost, threads }
+            }
+            ExecutorKind::Process { shards, balanced, worker_bin, .. } => {
+                ExecutorKind::Process { cost, shards, balanced, worker_bin }
             }
             ExecutorKind::Simnet(mut sim) => {
                 sim.links.override_cost(Some(cost.alpha), Some(cost.beta));
@@ -289,6 +403,12 @@ impl ExecutorKind {
             }
             ExecutorKind::Threaded { cost, threads } => {
                 ThreadedExecutor::new(*cost, *threads).run(w, seq, rounds)
+            }
+            ExecutorKind::Process { cost, shards, balanced, worker_bin } => {
+                let mut ex = ProcessExecutor::new(*cost, *shards)
+                    .with_balanced(*balanced);
+                ex.worker_bin = worker_bin.clone();
+                ex.run(w, seq, rounds)
             }
         }
     }
@@ -366,6 +486,7 @@ mod tests {
         assert_eq!(ExecutorKind::parse("analytic").unwrap().label(), "analytic");
         assert_eq!(ExecutorKind::parse("SIMNET").unwrap().label(), "simnet");
         assert_eq!(ExecutorKind::parse("threaded").unwrap().label(), "threaded");
+        assert_eq!(ExecutorKind::parse("process").unwrap().label(), "process");
         assert!(ExecutorKind::parse("gpu").is_err());
         match ExecutorKind::parse("threaded").unwrap().with_threads(7) {
             ExecutorKind::Threaded { threads, .. } => assert_eq!(threads, 7),
@@ -376,5 +497,22 @@ mod tests {
             ExecutorKind::parse("simnet").unwrap().with_threads(3).label(),
             "simnet"
         );
+        // Shard knobs only touch the process backend.
+        match ExecutorKind::parse("process")
+            .unwrap()
+            .with_threads(5)
+            .with_shards(4)
+            .with_shard_balance(true)
+        {
+            ExecutorKind::Process { shards, balanced, .. } => {
+                assert_eq!(shards, 4);
+                assert!(balanced);
+            }
+            _ => panic!("wrong kind"),
+        }
+        assert!(matches!(
+            ExecutorKind::analytic().with_shards(9),
+            ExecutorKind::Analytic { .. }
+        ));
     }
 }

@@ -1,0 +1,1181 @@
+//! The process-parallel backend: one OS worker process per node shard,
+//! behind the same [`Executor`] trait as every in-process backend.
+//!
+//! This is the first backend where gossip crosses a *real* process
+//! boundary — serialized frames over Unix-domain sockets (TCP loopback as
+//! the fallback transport) — so Base-(k+1)'s small maximum degree shows
+//! up as measured bytes-on-the-wire and wall-clock, not just as an α–β
+//! model or intra-process memory traffic.
+//!
+//! # Architecture
+//!
+//! ```text
+//!  ProcessExecutor (coordinator, this process)
+//!    │  re-exec `basegraph --worker <addr> <shard>`  (hidden CLI mode)
+//!    ▼
+//!  worker 0 ◄──┐                     shard plan (exec/shard.rs):
+//!  worker 1 ◄──┼── framed messages   node → shard, contiguous or
+//!  …           │   (exec/wire.rs)    degree-balanced
+//!  worker k-1 ◄┘
+//! ```
+//!
+//! Workers rebuild the workload from its [`Workload::wire_spec`] (same
+//! binary, same deterministic constructors), init all `n` nodes and keep
+//! only their shard. Each lock-step round:
+//!
+//! 1. every worker runs `local_step` + `make_payload` for its nodes;
+//! 2. cross-shard payloads are batched into **one bundle frame per
+//!    (src shard, dst shard) pair** and routed through the coordinator
+//!    (collect-then-forward, which is deadlock-free by construction);
+//! 3. workers combine from payload snapshots — intra-shard from memory,
+//!    cross-shard from decoded frames — in neighbor-list order;
+//! 4. workers ship per-node observation snapshots; the coordinator runs
+//!    `observe_wire` centrally, in node order, so metrics accumulate in
+//!    exactly the arithmetic order of the in-process backends.
+//!
+//! The result is **bit-identical** to `AnalyticExecutor` (the equivalence
+//! suite pins it at n ∈ {8, 64} for both shipped workloads): everything
+//! on the wire is exact bit patterns, schedules are deterministic, and no
+//! floating-point reduction is resharded.
+//!
+//! A worker crash, a truncated frame, a checksum mismatch or a silent
+//! hang all surface as clean errors on the coordinator (per-frame read
+//! timeout, [`ProcessExecutor::io_timeout`]) — never a deadlock. The
+//! listener lives on a shared namespace (temp-dir UDS path / loopback
+//! port), so every worker must echo a per-run handshake token (passed
+//! through the environment, not argv) before it is seated.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use basegraph::comm::CostModel;
+//! use basegraph::consensus::gaussian_init;
+//! use basegraph::exec::{ConsensusWorkload, Executor, ProcessExecutor};
+//! use basegraph::topology::TopologyKind;
+//! use basegraph::util::rng::Rng;
+//!
+//! let seq = TopologyKind::Base { m: 4 }.build(64, 0).unwrap();
+//! let mut rng = Rng::new(7);
+//! let init = gaussian_init(64, 8, &mut rng);
+//! let exec = ProcessExecutor::new(CostModel::default(), 2);
+//! let tr = exec
+//!     .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
+//!     .unwrap();
+//! assert_eq!(tr.backend, "process");
+//! assert!(tr.ledger.bytes_on_wire > 0, "real frames crossed sockets");
+//! ```
+//! (`no_run` here only because doc-tests execute from a harness binary;
+//! spawning runs live in `tests/exec_equivalence.rs` and the CLI smoke.)
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::shard::{cross_shard_sources, ShardPlan};
+use super::wire::{self, read_frame, write_frame, ByteReader, ByteWriter};
+use super::workload::{
+    decode_wire_spec, quadratic_fixed_targets, DecodedSpec, TrainSpec,
+};
+use super::{
+    ConsensusWorkload, ExecTrace, Executor, TrainingWorkload, Workload,
+};
+use crate::comm::{CommLedger, CostModel};
+use crate::metrics::RunResult;
+use crate::repro::common::{
+    classification_workload, partitioned_node_data, Engine,
+};
+use crate::simnet::event::Trace;
+use crate::topology::GraphSequence;
+
+// Frame kinds of the coordinator ↔ worker protocol.
+const FRAME_HELLO: u8 = 1;
+const FRAME_CONFIG: u8 = 2;
+const FRAME_BUNDLE: u8 = 3;
+const FRAME_OBS: u8 = 4;
+const FRAME_FINALS: u8 = 5;
+const FRAME_ERROR: u8 = 6;
+const FRAME_SHUTDOWN: u8 = 7;
+
+/// Observation-frame round marker for the pre-round-0 snapshot.
+const INIT_ROUND: u32 = u32::MAX;
+
+/// Env var carrying the per-run handshake token to workers (environment
+/// blocks are owner-readable only, unlike argv).
+const TOKEN_ENV: &str = "BASEGRAPH_WORKER_TOKEN";
+
+static SOCKET_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A per-run handshake token: the listener lives on a shared namespace
+/// (a temp-dir UDS path or a loopback port), so an unrelated local
+/// process could dial it. Workers must echo this token in their HELLO
+/// or the coordinator drops them — closing both the shard-squatting and
+/// the spec-disclosure hole. splitmix64 over wall clock, pid and a
+/// process-local counter; unpredictability against a *determined* local
+/// attacker is explicitly not the bar (same-UID processes can do worse).
+fn handshake_token() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seed = nanos
+        ^ ((std::process::id() as u64) << 32)
+        ^ SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Transport: UDS with TCP-loopback fallback
+// ---------------------------------------------------------------------------
+
+/// One coordinator↔worker connection, transport-erased.
+enum Conn {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+            Conn::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(nb),
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// The coordinator's listening socket; `Drop` removes a UDS path.
+enum Listener {
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind a fresh listener and return it with the address string
+    /// workers dial (`uds:<path>` or `tcp:<ip>:<port>`).
+    fn bind(force_tcp: bool) -> Result<(Listener, String), String> {
+        #[cfg(unix)]
+        if !force_tcp {
+            let path = std::env::temp_dir().join(format!(
+                "basegraph-{}-{}.sock",
+                std::process::id(),
+                SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_file(&path);
+            if let Ok(l) = UnixListener::bind(&path) {
+                l.set_nonblocking(true)
+                    .map_err(|e| format!("uds nonblocking: {e}"))?;
+                let addr = format!("uds:{}", path.display());
+                return Ok((Listener::Unix(l, path), addr));
+            }
+            // Fall through to TCP loopback.
+        }
+        let l = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| format!("bind tcp loopback: {e}"))?;
+        l.set_nonblocking(true)
+            .map_err(|e| format!("tcp nonblocking: {e}"))?;
+        let addr = l
+            .local_addr()
+            .map_err(|e| format!("tcp local_addr: {e}"))?;
+        Ok((Listener::Tcp(l), format!("tcp:{addr}")))
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Worker side: dial the coordinator's address string.
+fn connect(addr: &str) -> Result<Conn, String> {
+    if let Some(path) = addr.strip_prefix("uds:") {
+        #[cfg(unix)]
+        {
+            return UnixStream::connect(path)
+                .map(Conn::Unix)
+                .map_err(|e| format!("connect {addr}: {e}"));
+        }
+        #[cfg(not(unix))]
+        return Err(format!("uds transport unavailable: {path}"));
+    }
+    if let Some(sock) = addr.strip_prefix("tcp:") {
+        return TcpStream::connect(sock)
+            .map(Conn::Tcp)
+            .map_err(|e| format!("connect {addr}: {e}"));
+    }
+    Err(format!("bad coordinator address {addr:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Framing helpers with byte accounting
+// ---------------------------------------------------------------------------
+
+fn send(
+    conn: &mut Conn,
+    kind: u8,
+    payload: &[u8],
+    wire_bytes: &mut u64,
+) -> Result<(), String> {
+    *wire_bytes += write_frame(conn, kind, payload)?;
+    Ok(())
+}
+
+/// Read one frame; a worker-reported `ERROR` frame propagates as `Err`.
+fn recv(
+    conn: &mut Conn,
+    wire_bytes: &mut u64,
+) -> Result<(u8, Vec<u8>), String> {
+    let (kind, payload, bytes) = read_frame(conn)?;
+    *wire_bytes += bytes;
+    if kind == FRAME_ERROR {
+        return Err(format!(
+            "worker reported: {}",
+            String::from_utf8_lossy(&payload)
+        ));
+    }
+    Ok((kind, payload))
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// Kills any still-running worker on scope exit (error paths); the happy
+/// path waits for them after the shutdown frames.
+struct WorkerProcs {
+    children: Vec<Child>,
+}
+
+impl Drop for WorkerProcs {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// One OS process per node shard behind the [`Executor`] trait: re-execs
+/// this binary in a hidden `--worker` mode and runs lock-step rounds over
+/// length-prefixed, checksummed socket frames (see the module docs).
+///
+/// The α–β `cost` model feeds the same simulated-seconds column as the
+/// analytic backend; the *measured* columns are `ExecTrace::wall_seconds`
+/// and `CommLedger::bytes_on_wire`.
+#[derive(Debug, Clone)]
+pub struct ProcessExecutor {
+    pub cost: CostModel,
+    /// Worker-process count (clamped to `[1, n]` at run time).
+    pub shards: usize,
+    /// Degree-balanced sharding instead of index-contiguous.
+    pub balanced: bool,
+    /// Per-frame coordinator read timeout: a hung or dead worker becomes
+    /// a clean error, never a stuck run.
+    pub io_timeout: Duration,
+    /// Force the TCP-loopback transport (exercises the UDS fallback).
+    pub force_tcp: bool,
+    /// Explicit path to the `basegraph` binary for worker re-exec; when
+    /// unset, resolution tries `$BASEGRAPH_BIN`, then the current
+    /// executable, then its near ancestors (covers `target/*/deps` test
+    /// binaries and `target/*/examples`).
+    pub worker_bin: Option<PathBuf>,
+    /// Fault injection for the crash-path tests: `(shard, round)` at
+    /// which that worker aborts without a goodbye frame.
+    pub fault_crash: Option<(usize, usize)>,
+}
+
+impl ProcessExecutor {
+    pub fn new(cost: CostModel, shards: usize) -> Self {
+        ProcessExecutor {
+            cost,
+            shards,
+            balanced: false,
+            io_timeout: Duration::from_secs(120),
+            force_tcp: false,
+            worker_bin: None,
+            fault_crash: None,
+        }
+    }
+
+    pub fn with_worker_bin(mut self, bin: impl Into<PathBuf>) -> Self {
+        self.worker_bin = Some(bin.into());
+        self
+    }
+
+    pub fn with_balanced(mut self, balanced: bool) -> Self {
+        self.balanced = balanced;
+        self
+    }
+
+    fn resolve_worker_bin(&self) -> Result<PathBuf, String> {
+        if let Some(p) = &self.worker_bin {
+            return Ok(p.clone());
+        }
+        if let Ok(p) = std::env::var("BASEGRAPH_BIN") {
+            if !p.is_empty() {
+                return Ok(PathBuf::from(p));
+            }
+        }
+        let exe = std::env::current_exe()
+            .map_err(|e| format!("current_exe: {e}"))?;
+        if exe.file_stem().map(|s| s == "basegraph").unwrap_or(false) {
+            return Ok(exe);
+        }
+        for dir in exe.ancestors().skip(1).take(3) {
+            let cand = dir.join("basegraph");
+            if cand.is_file() {
+                return Ok(cand);
+            }
+        }
+        Err("cannot locate the basegraph binary for --worker re-exec; \
+             set ProcessExecutor::worker_bin (in tests: \
+             env!(\"CARGO_BIN_EXE_basegraph\")) or $BASEGRAPH_BIN"
+            .into())
+    }
+
+    /// Spawn workers and accept their handshakes. Early worker death is
+    /// detected while polling, so a bad binary fails fast instead of
+    /// eating the whole timeout.
+    fn accept_workers(
+        &self,
+        listener: &Listener,
+        procs: &mut WorkerProcs,
+        k: usize,
+        token: u64,
+        wire_bytes: &mut u64,
+    ) -> Result<Vec<Conn>, String> {
+        let mut slots: Vec<Option<Conn>> = (0..k).map(|_| None).collect();
+        let deadline = Instant::now() + self.io_timeout;
+        let mut accepted = 0usize;
+        while accepted < k {
+            match listener.accept() {
+                Ok(conn) => {
+                    conn.set_nonblocking(false)
+                        .map_err(|e| format!("worker socket: {e}"))?;
+                    conn.set_read_timeout(Some(self.io_timeout))
+                        .map_err(|e| format!("worker socket: {e}"))?;
+                    let mut conn = conn;
+                    let (kind, payload) = recv(&mut conn, wire_bytes)
+                        .map_err(|e| format!("worker handshake: {e}"))?;
+                    if kind != FRAME_HELLO {
+                        return Err(format!(
+                            "worker handshake: expected hello, got frame \
+                             kind {kind}"
+                        ));
+                    }
+                    let mut r = ByteReader::new(&payload);
+                    let s = r.get_u32()? as usize;
+                    let got_token = r.get_u64()?;
+                    r.expect_end()?;
+                    if got_token != token {
+                        return Err(
+                            "worker handshake: wrong run token — a \
+                             foreign process dialed the worker socket"
+                                .into(),
+                        );
+                    }
+                    if s >= k || slots[s].is_some() {
+                        return Err(format!(
+                            "worker handshake: bad or duplicate shard {s}"
+                        ));
+                    }
+                    slots[s] = Some(conn);
+                    accepted += 1;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    for (s, c) in procs.children.iter_mut().enumerate() {
+                        if let Ok(Some(status)) = c.try_wait() {
+                            return Err(format!(
+                                "worker {s} exited during handshake \
+                                 ({status})"
+                            ));
+                        }
+                    }
+                    if Instant::now() > deadline {
+                        return Err(format!(
+                            "timed out after {:?} waiting for {} worker \
+                             handshake(s)",
+                            self.io_timeout,
+                            k - accepted
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(format!("accept worker: {e}")),
+            }
+        }
+        Ok(slots.into_iter().map(|c| c.expect("accepted")).collect())
+    }
+}
+
+/// Read one OBS frame from every shard and assemble per-node snapshot
+/// blobs in node order.
+fn collect_obs(
+    conns: &mut [Conn],
+    marker: u32,
+    n: usize,
+    owner: &[usize],
+    wire_bytes: &mut u64,
+) -> Result<Vec<Vec<u8>>, String> {
+    let mut slots: Vec<Option<Vec<u8>>> = vec![None; n];
+    for (s, conn) in conns.iter_mut().enumerate() {
+        let (kind, payload) =
+            recv(conn, wire_bytes).map_err(|e| format!("shard {s}: {e}"))?;
+        if kind != FRAME_OBS {
+            return Err(format!(
+                "shard {s}: expected observation frame, got kind {kind}"
+            ));
+        }
+        let mut r = ByteReader::new(&payload);
+        let got = r.get_u32()?;
+        if got != marker {
+            return Err(format!(
+                "shard {s}: observation out of sync (marker {got} vs \
+                 {marker})"
+            ));
+        }
+        let count = r.get_usize()?;
+        for _ in 0..count {
+            let node = r.get_u32()? as usize;
+            if node >= n || owner[node] != s {
+                return Err(format!(
+                    "shard {s}: observation for foreign node {node}"
+                ));
+            }
+            slots[node] = Some(r.get_bytes()?.to_vec());
+        }
+        r.expect_end()?;
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| {
+            o.ok_or_else(|| format!("no observation arrived for node {i}"))
+        })
+        .collect()
+}
+
+impl Executor for ProcessExecutor {
+    fn backend(&self) -> &'static str {
+        "process"
+    }
+
+    fn run<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+    ) -> Result<ExecTrace, String> {
+        let n = seq.n;
+        if n == 0 {
+            return Err("process executor needs n >= 1".into());
+        }
+        if rounds > 0 && seq.is_empty() {
+            return Err(
+                "process executor needs a non-empty phase sequence".into()
+            );
+        }
+        let spec = w.wire_spec().ok_or_else(|| {
+            format!(
+                "workload {:?} has no wire form — the process backend can \
+                 only run workloads whose spec a worker can rebuild \
+                 (ConsensusWorkload, or TrainingWorkload::with_wire)",
+                w.label()
+            )
+        })?;
+        let k = self.shards.clamp(1, n);
+        let splan = if self.balanced {
+            ShardPlan::degree_balanced(seq, k)
+        } else {
+            ShardPlan::contiguous(n, k)
+        };
+        let t0 = Instant::now();
+        let mut wire_bytes = 0u64;
+
+        // 1. Listen, spawn, handshake.
+        let (listener, addr) = Listener::bind(self.force_tcp)?;
+        let bin = self.resolve_worker_bin()?;
+        let token = handshake_token();
+        let mut procs = WorkerProcs { children: Vec::with_capacity(k) };
+        for s in 0..k {
+            let child = Command::new(&bin)
+                .arg("--worker")
+                .arg(&addr)
+                .arg(s.to_string())
+                .env(TOKEN_ENV, format!("{token:016x}"))
+                .stdin(Stdio::null())
+                .spawn()
+                .map_err(|e| {
+                    format!("spawn worker {s} ({}): {e}", bin.display())
+                })?;
+            procs.children.push(child);
+        }
+        let mut conns = self.accept_workers(
+            &listener,
+            &mut procs,
+            k,
+            token,
+            &mut wire_bytes,
+        )?;
+
+        // 2. Configuration: topology, shard map, workload spec, fault.
+        let mut sw = ByteWriter::new();
+        wire::encode_seq(seq, &mut sw);
+        let seq_bytes = sw.finish();
+        for (s, conn) in conns.iter_mut().enumerate() {
+            let mut cw = ByteWriter::new();
+            cw.put_usize(n);
+            cw.put_usize(rounds);
+            cw.put_usize(k);
+            cw.put_usize(s);
+            for &o in &splan.owner {
+                cw.put_u32(o as u32);
+            }
+            cw.put_bytes(&seq_bytes);
+            cw.put_bytes(&spec);
+            let crash = match self.fault_crash {
+                Some((fs, r)) if fs == s => r as u64,
+                _ => u64::MAX,
+            };
+            cw.put_u64(crash);
+            send(conn, FRAME_CONFIG, &cw.finish(), &mut wire_bytes)
+                .map_err(|e| format!("configure shard {s}: {e}"))?;
+        }
+
+        // 3. Per-phase cross-shard batches (what crosses which boundary).
+        let cross: Vec<Vec<Vec<Vec<usize>>>> = seq
+            .phases
+            .iter()
+            .map(|p| cross_shard_sources(p, &splan.owner, k))
+            .collect();
+
+        let (n_slots, slot_bytes) = w.comm_shape();
+        let mut ledger = CommLedger::default();
+        let mut records = Vec::new();
+
+        // 4. Pre-round-0 snapshot (consensus records its initial error).
+        let obs0 =
+            collect_obs(&mut conns, INIT_ROUND, n, &splan.owner, &mut wire_bytes)?;
+        if let Some(mut rec) = w.initial_record_wire(&obs0)? {
+            rec.wall_seconds = t0.elapsed().as_secs_f64();
+            records.push(rec);
+        }
+
+        // 5. Lock-step rounds: collect bundles → forward → observe.
+        for r in 0..rounds {
+            let pidx = r % seq.len();
+            let plan = seq.phase(r);
+            let xs = &cross[pidx];
+
+            let mut forwards: Vec<(usize, Vec<u8>)> = Vec::new();
+            for s in 0..k {
+                let expected = (0..k)
+                    .filter(|&t| t != s && !xs[s][t].is_empty())
+                    .count();
+                for _ in 0..expected {
+                    let (kind, payload) = recv(&mut conns[s], &mut wire_bytes)
+                        .map_err(|e| format!("round {r}: shard {s}: {e}"))?;
+                    if kind != FRAME_BUNDLE {
+                        return Err(format!(
+                            "round {r}: shard {s}: expected a payload \
+                             bundle, got frame kind {kind}"
+                        ));
+                    }
+                    let mut br = ByteReader::new(&payload);
+                    let fr = br.get_u32()? as usize;
+                    let fsrc = br.get_u32()? as usize;
+                    let fdst = br.get_u32()? as usize;
+                    if fr != r || fsrc != s || fdst >= k || fdst == s {
+                        return Err(format!(
+                            "round {r}: shard {s}: bundle header out of \
+                             sync (round {fr}, {fsrc} → {fdst})"
+                        ));
+                    }
+                    forwards.push((fdst, payload));
+                }
+            }
+            for (dst, payload) in &forwards {
+                send(&mut conns[*dst], FRAME_BUNDLE, payload, &mut wire_bytes)
+                    .map_err(|e| {
+                        format!("round {r}: forward to shard {dst}: {e}")
+                    })?;
+            }
+
+            let eval = w.is_eval(r, rounds);
+            let obs = collect_obs(
+                &mut conns,
+                r as u32,
+                n,
+                &splan.owner,
+                &mut wire_bytes,
+            )
+            .map_err(|e| format!("round {r}: {e}"))?;
+
+            // α–β accounting — identical to the analytic backend, so the
+            // simulated-seconds column stays comparable across backends;
+            // the measured counterpart is bytes_on_wire below.
+            for _ in 0..n_slots {
+                ledger.record_round_bytes(plan, slot_bytes, &self.cost);
+            }
+            ledger.bytes_on_wire = wire_bytes;
+            let mut rec = w
+                .observe_wire(&obs, r, eval)
+                .map_err(|e| format!("round {r}: {e}"))?;
+            rec.cum_messages = ledger.messages;
+            rec.cum_bytes = ledger.bytes;
+            rec.cum_wire_bytes = ledger.bytes_on_wire;
+            rec.sim_seconds = ledger.sim_seconds;
+            rec.wall_seconds = t0.elapsed().as_secs_f64();
+            records.push(rec);
+        }
+
+        // 6. Finals, shutdown, reap.
+        let mut fin: Vec<Option<Vec<u8>>> = vec![None; n];
+        for (s, conn) in conns.iter_mut().enumerate() {
+            let (kind, payload) = recv(conn, &mut wire_bytes)
+                .map_err(|e| format!("finals: shard {s}: {e}"))?;
+            if kind != FRAME_FINALS {
+                return Err(format!(
+                    "finals: shard {s}: got frame kind {kind}"
+                ));
+            }
+            let mut fr = ByteReader::new(&payload);
+            let count = fr.get_usize()?;
+            for _ in 0..count {
+                let node = fr.get_u32()? as usize;
+                if node >= n || splan.owner[node] != s {
+                    return Err(format!(
+                        "finals: shard {s}: foreign node {node}"
+                    ));
+                }
+                fin[node] = Some(fr.get_bytes()?.to_vec());
+            }
+            fr.expect_end()?;
+        }
+        let fin: Vec<Vec<u8>> = fin
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| {
+                o.ok_or_else(|| format!("no final state for node {i}"))
+            })
+            .collect::<Result<_, String>>()?;
+        let finals = w.finals_wire(&fin)?;
+        for (s, conn) in conns.iter_mut().enumerate() {
+            send(conn, FRAME_SHUTDOWN, &[], &mut wire_bytes)
+                .map_err(|e| format!("shutdown shard {s}: {e}"))?;
+        }
+        drop(conns);
+        for c in &mut procs.children {
+            let _ = c.wait();
+        }
+        procs.children.clear();
+
+        ledger.bytes_on_wire = wire_bytes;
+        Ok(ExecTrace {
+            backend: "process",
+            topology: seq.name.clone(),
+            n,
+            max_degree: seq.max_degree(),
+            run: RunResult {
+                label: format!(
+                    "{} × {} [process ×{k}]",
+                    w.label(),
+                    seq.name
+                ),
+                records,
+            },
+            ledger,
+            drops: 0,
+            trace: Trace::new(false),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            finals,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+struct WorkerCtx {
+    n: usize,
+    rounds: usize,
+    k: usize,
+    shard: usize,
+    owner: Vec<usize>,
+    seq: GraphSequence,
+    crash_round: Option<usize>,
+}
+
+/// Entry point of the hidden `basegraph --worker <addr> <shard>` mode —
+/// dispatched from `main` before normal CLI parsing.
+pub fn worker_main(args: &[String]) -> Result<(), String> {
+    if args.len() != 2 {
+        return Err("usage: basegraph --worker <addr> <shard>".into());
+    }
+    let shard: usize = args[1]
+        .parse()
+        .map_err(|_| format!("bad shard id {:?}", args[1]))?;
+    let token = std::env::var(TOKEN_ENV)
+        .ok()
+        .and_then(|t| u64::from_str_radix(&t, 16).ok())
+        .ok_or_else(|| format!("missing or malformed ${TOKEN_ENV}"))?;
+    let mut conn = connect(&args[0])?;
+    conn.set_read_timeout(Some(Duration::from_secs(300)))
+        .map_err(|e| format!("socket timeout: {e}"))?;
+    let mut sink = 0u64;
+    let mut hw = ByteWriter::new();
+    hw.put_u32(shard as u32);
+    hw.put_u64(token);
+    send(&mut conn, FRAME_HELLO, &hw.finish(), &mut sink)?;
+    match run_worker(&mut conn, shard) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // Best effort: hand the coordinator a real error message
+            // before dying, so the failure is attributed, not inferred.
+            let _ = write_frame(&mut conn, FRAME_ERROR, e.as_bytes());
+            Err(format!("shard {shard}: {e}"))
+        }
+    }
+}
+
+fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
+    let mut sink = 0u64;
+    let (kind, payload) = recv(conn, &mut sink)?;
+    if kind != FRAME_CONFIG {
+        return Err(format!("expected config frame, got kind {kind}"));
+    }
+    let mut r = ByteReader::new(&payload);
+    let n = r.get_usize()?;
+    let rounds = r.get_usize()?;
+    let k = r.get_usize()?;
+    let echo = r.get_usize()?;
+    if echo != shard {
+        return Err(format!("config addressed to shard {echo}, I am {shard}"));
+    }
+    let mut owner = Vec::with_capacity(n);
+    for _ in 0..n {
+        owner.push(r.get_u32()? as usize);
+    }
+    let seq_bytes = r.get_bytes()?;
+    let spec_bytes = r.get_bytes()?;
+    let crash = r.get_u64()?;
+    r.expect_end()?;
+    let mut sr = ByteReader::new(seq_bytes);
+    let seq = wire::decode_seq(&mut sr)?;
+    sr.expect_end()?;
+    if seq.n != n {
+        return Err(format!("config n {n} != topology n {}", seq.n));
+    }
+    let ctx = WorkerCtx {
+        n,
+        rounds,
+        k,
+        shard,
+        owner,
+        seq,
+        crash_round: (crash != u64::MAX).then_some(crash as usize),
+    };
+    match decode_wire_spec(spec_bytes)? {
+        DecodedSpec::Consensus { init } => {
+            let mut w = ConsensusWorkload::new(init);
+            worker_loop(&mut w, conn, &ctx)
+        }
+        DecodedSpec::Training { spec, cfg } => match spec {
+            TrainSpec::Quadratic { d, seed } => {
+                let (model, data) = quadratic_fixed_targets(ctx.n, d, seed);
+                let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+                worker_loop(&mut w, conn, &ctx)
+            }
+            TrainSpec::Classification { engine, alpha, seed } => {
+                let engine = Engine::parse(&engine)?;
+                let tw = classification_workload(&engine, seed)?;
+                let data = partitioned_node_data(&tw, ctx.n, alpha, seed);
+                let mut w = TrainingWorkload::new(
+                    tw.provider.as_ref(),
+                    &cfg,
+                    data,
+                    &[],
+                );
+                worker_loop(&mut w, conn, &ctx)
+            }
+        },
+    }
+}
+
+fn send_obs<W: Workload>(
+    w: &W,
+    conn: &mut Conn,
+    members: &[usize],
+    nodes: &[Option<W::Node>],
+    marker: u32,
+    full: bool,
+    sink: &mut u64,
+) -> Result<(), String> {
+    let mut ow = ByteWriter::new();
+    ow.put_u32(marker);
+    ow.put_usize(members.len());
+    for &i in members {
+        ow.put_u32(i as u32);
+        let node = nodes[i].as_ref().expect("member node");
+        ow.put_bytes(&w.node_to_wire(node, full)?);
+    }
+    send(conn, FRAME_OBS, &ow.finish(), sink)
+}
+
+/// The worker's round loop: local steps and combines for this shard's
+/// nodes, payload bundles across the process boundary, observation
+/// snapshots back to the coordinator. Same phases, same snapshot
+/// discipline, same neighbor-list order as the in-process lock-step
+/// engine — which is exactly why the results are bit-identical.
+fn worker_loop<W: Workload>(
+    w: &mut W,
+    conn: &mut Conn,
+    ctx: &WorkerCtx,
+) -> Result<(), String> {
+    let n = ctx.n;
+    let me = ctx.shard;
+    let all = w.init_nodes(n)?;
+    let mut nodes: Vec<Option<W::Node>> = all
+        .into_iter()
+        .enumerate()
+        .map(|(i, nd)| (ctx.owner[i] == me).then_some(nd))
+        .collect();
+    let members: Vec<usize> =
+        (0..n).filter(|&i| ctx.owner[i] == me).collect();
+    let cross: Vec<Vec<Vec<Vec<usize>>>> = ctx
+        .seq
+        .phases
+        .iter()
+        .map(|p| cross_shard_sources(p, &ctx.owner, ctx.k))
+        .collect();
+    // Which of our nodes' payloads some *other* shard consumes, per
+    // phase — only these get serialized. Intra-shard gossip reads the
+    // in-memory snapshot, so on block-local topologies (contiguous
+    // shards on Base-(k+1)) most rounds encode almost nothing.
+    let wire_needed: Vec<Vec<bool>> = cross
+        .iter()
+        .map(|xs| {
+            let mut need = vec![false; n];
+            for (t, bucket) in xs[me].iter().enumerate() {
+                if t != me {
+                    for &i in bucket {
+                        need[i] = true;
+                    }
+                }
+            }
+            need
+        })
+        .collect();
+    let mut sink = 0u64;
+
+    send_obs(w, conn, &members, &nodes, INIT_ROUND, false, &mut sink)?;
+
+    for r in 0..ctx.rounds {
+        if ctx.crash_round == Some(r) {
+            // Fault injection: abort with no goodbye — the coordinator
+            // must turn the dead socket into a clean error.
+            std::process::exit(86);
+        }
+        let pidx = r % ctx.seq.len();
+        let plan = ctx.seq.phase(r);
+        let xs = &cross[pidx];
+
+        for &i in &members {
+            let node = nodes[i].as_mut().expect("member node");
+            w.local_step(node, i, r)
+                .map_err(|e| format!("node {i} round {r}: {e}"))?;
+        }
+
+        // Snapshot payloads once; encode only what crosses a process
+        // boundary this phase (once per source, however many shards
+        // consume it).
+        let mut payloads: Vec<Option<W::Payload>> =
+            (0..n).map(|_| None).collect();
+        let mut encoded: Vec<Option<Vec<u8>>> =
+            (0..n).map(|_| None).collect();
+        for &i in &members {
+            let p = w.make_payload(nodes[i].as_ref().expect("member"));
+            if wire_needed[pidx][i] {
+                encoded[i] = Some(w.payload_to_wire(&p)?);
+            }
+            payloads[i] = Some(p);
+        }
+
+        // One bundle per destination shard that needs anything of ours.
+        for t in 0..ctx.k {
+            if t == me || xs[me][t].is_empty() {
+                continue;
+            }
+            let srcs = &xs[me][t];
+            let mut bw = ByteWriter::new();
+            bw.put_u32(r as u32);
+            bw.put_u32(me as u32);
+            bw.put_u32(t as u32);
+            bw.put_usize(srcs.len());
+            for &i in srcs {
+                bw.put_u32(i as u32);
+                bw.put_bytes(encoded[i].as_ref().expect("member payload"));
+            }
+            send(conn, FRAME_BUNDLE, &bw.finish(), &mut sink)
+                .map_err(|e| format!("round {r}: send bundle → {t}: {e}"))?;
+        }
+
+        // Receive the bundles other shards addressed to us.
+        let expected = (0..ctx.k)
+            .filter(|&s| s != me && !xs[s][me].is_empty())
+            .count();
+        let mut remote: HashMap<usize, W::Payload> = HashMap::new();
+        for _ in 0..expected {
+            let (kind, payload) =
+                recv(conn, &mut sink).map_err(|e| format!("round {r}: {e}"))?;
+            if kind != FRAME_BUNDLE {
+                return Err(format!(
+                    "round {r}: expected a payload bundle, got frame kind \
+                     {kind}"
+                ));
+            }
+            let mut br = ByteReader::new(&payload);
+            let fr = br.get_u32()? as usize;
+            let fsrc = br.get_u32()? as usize;
+            let fdst = br.get_u32()? as usize;
+            if fr != r || fdst != me {
+                return Err(format!(
+                    "round {r}: bundle out of sync (round {fr}, \
+                     {fsrc} → {fdst})"
+                ));
+            }
+            let count = br.get_usize()?;
+            for _ in 0..count {
+                let node = br.get_u32()? as usize;
+                let bytes = br.get_bytes()?;
+                if node >= n || ctx.owner[node] != fsrc {
+                    return Err(format!(
+                        "round {r}: bundle entry for foreign node {node}"
+                    ));
+                }
+                remote.insert(node, w.payload_from_wire(bytes)?);
+            }
+            br.expect_end()?;
+        }
+
+        // Combine from snapshots: intra-shard from memory, cross-shard
+        // from the decoded bundles. Lock-step ideal network — every
+        // neighbor payload must be present.
+        for &i in &members {
+            let row = plan.neighbors(i);
+            let avail: Vec<Option<&W::Payload>> = row
+                .iter()
+                .map(|&(j, _)| {
+                    if ctx.owner[j] == me {
+                        payloads[j].as_ref()
+                    } else {
+                        remote.get(&j)
+                    }
+                })
+                .collect();
+            if let Some(pos) = avail.iter().position(|a| a.is_none()) {
+                return Err(format!(
+                    "round {r}: node {i} never received neighbor {}'s \
+                     payload — protocol desync",
+                    row[pos].0
+                ));
+            }
+            let node = nodes[i].as_mut().expect("member node");
+            w.combine(node, i, r, plan, &avail);
+        }
+
+        let eval = w.is_eval(r, ctx.rounds);
+        send_obs(w, conn, &members, &nodes, r as u32, eval, &mut sink)?;
+    }
+
+    let mut fw = ByteWriter::new();
+    fw.put_usize(members.len());
+    for &i in &members {
+        fw.put_u32(i as u32);
+        let node = nodes[i].as_ref().expect("member node");
+        fw.put_bytes(&w.node_to_wire(node, true)?);
+    }
+    send(conn, FRAME_FINALS, &fw.finish(), &mut sink)?;
+
+    // Hold the connection until the coordinator dismisses us (EOF from a
+    // dead coordinator is also a dismissal).
+    match read_frame(conn) {
+        Ok((FRAME_SHUTDOWN, _, _)) | Err(_) => Ok(()),
+        Ok((kind, _, _)) => {
+            Err(format!("unexpected frame kind {kind} at shutdown"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_binds_uds_and_tcp() {
+        let (l, addr) = Listener::bind(false).unwrap();
+        #[cfg(unix)]
+        assert!(addr.starts_with("uds:"), "{addr}");
+        drop(l);
+        let (_t, taddr) = Listener::bind(true).unwrap();
+        assert!(taddr.starts_with("tcp:127.0.0.1:"), "{taddr}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_socket_file_is_removed_on_drop() {
+        let (l, addr) = Listener::bind(false).unwrap();
+        let path = addr.strip_prefix("uds:").unwrap().to_string();
+        assert!(std::path::Path::new(&path).exists());
+        drop(l);
+        assert!(!std::path::Path::new(&path).exists());
+    }
+
+    /// The read-timeout half of the crash satellite: a peer that never
+    /// sends anything becomes a clean "timed out" error, not a hang.
+    #[test]
+    fn silent_peer_times_out_cleanly() {
+        let (listener, addr) = Listener::bind(true).unwrap();
+        let silent = connect(&addr).unwrap(); // never writes
+        let conn = loop {
+            match listener.accept() {
+                Ok(c) => break c,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("accept: {e}"),
+            }
+        };
+        conn.set_nonblocking(false).unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut conn = conn;
+        let t0 = Instant::now();
+        let err = read_frame(&mut conn).unwrap_err();
+        assert!(
+            err.contains("timed out"),
+            "expected a timeout error, got {err:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        drop(silent);
+    }
+
+    /// A peer that dies mid-frame is a truncation error, not a hang.
+    #[test]
+    fn dead_peer_mid_frame_is_truncation() {
+        let (listener, addr) = Listener::bind(true).unwrap();
+        let mut half = connect(&addr).unwrap();
+        let conn = loop {
+            match listener.accept() {
+                Ok(c) => break c,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("accept: {e}"),
+            }
+        };
+        conn.set_nonblocking(false).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // Send a frame claiming 100 payload bytes, deliver 3, hang up.
+        let mut partial = Vec::new();
+        partial.push(wire::MAGIC);
+        partial.push(wire::VERSION);
+        partial.push(FRAME_OBS);
+        partial.extend_from_slice(&100u32.to_le_bytes());
+        partial.extend_from_slice(b"abc");
+        half.write_all(&partial).unwrap();
+        half.flush().unwrap();
+        drop(half);
+        let mut conn = conn;
+        let err = read_frame(&mut conn).unwrap_err();
+        assert!(
+            err.contains("truncated") || err.contains("closed"),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn worker_bin_resolution_reports_cleanly() {
+        // In the unit-test binary (target/*/deps/basegraph-<hash>) the
+        // ancestor search may or may not find a built CLI binary; either
+        // way the call must not panic and an explicit override wins.
+        let ex = ProcessExecutor::new(CostModel::default(), 2);
+        let _ = ex.resolve_worker_bin();
+        let ex = ex.with_worker_bin("/tmp/definitely-basegraph");
+        assert_eq!(
+            ex.resolve_worker_bin().unwrap(),
+            PathBuf::from("/tmp/definitely-basegraph")
+        );
+    }
+
+    #[test]
+    fn bad_address_strings_error() {
+        assert!(connect("carrier-pigeon:coop7").is_err());
+        assert!(connect("tcp:127.0.0.1:1").is_err()); // nothing listens
+    }
+}

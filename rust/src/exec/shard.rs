@@ -1,0 +1,312 @@
+//! The shard planner of the process-parallel backend: a partition of the
+//! roster into worker-process shards, derived from the topology itself.
+//!
+//! A [`ShardPlan`] assigns every node to exactly one shard. Shard
+//! membership never touches the arithmetic — combines run the same code
+//! with the same inputs wherever a node lives — so partitioning is purely
+//! a *placement* decision: it determines which payloads cross a process
+//! boundary and therefore how many real bytes each round puts on the
+//! wire.
+//!
+//! Two strategies ship:
+//!
+//! * [`ShardPlan::contiguous`] — nodes `[0, n/k)`, `[n/k, 2n/k)`, … in
+//!   id order. The Base-(k+1) construction works on index blocks, so
+//!   contiguous shards keep most gossip intra-shard.
+//! * [`ShardPlan::degree_balanced`] — greedy heaviest-first bin packing
+//!   on total per-node degree across all phases, so no worker serializes
+//!   disproportionately many payload bundles per round. Deterministic:
+//!   ties break on node id, then shard id.
+//!
+//! Both preserve every directed edge of every [`GossipPlan`] by
+//! construction (a partition cannot lose edges — each edge is either
+//! intra-shard or appears in exactly one `(src shard, dst shard)`
+//! crossing bucket), which `cross_shard_sources` makes explicit and the
+//! test suite pins.
+//!
+//! # Example
+//!
+//! ```
+//! use basegraph::exec::shard::{cross_shard_sources, ShardPlan};
+//! use basegraph::topology::TopologyKind;
+//!
+//! let seq = TopologyKind::Base { m: 3 }.build(10, 0).unwrap();
+//! let plan = ShardPlan::contiguous(10, 3);
+//! assert_eq!(plan.n_shards, 3);
+//! assert_eq!(plan.members.iter().map(|m| m.len()).sum::<usize>(), 10);
+//!
+//! // Every directed edge of a phase is either intra-shard or sits in
+//! // exactly one crossing bucket.
+//! let phase = &seq.phases[0];
+//! let xs = cross_shard_sources(phase, &plan.owner, plan.n_shards);
+//! let crossing: usize = phase
+//!     .directed_edges()
+//!     .filter(|&(dst, src, _)| plan.owner[dst] != plan.owner[src])
+//!     .count();
+//! let bucketed: usize = (0..3)
+//!     .flat_map(|s| (0..3).map(move |t| (s, t)))
+//!     .map(|(s, t)| {
+//!         // A bucket lists unique sources; count the edges they serve.
+//!         xs[s][t]
+//!             .iter()
+//!             .map(|&src| {
+//!                 phase
+//!                     .directed_edges()
+//!                     .filter(|&(dst, s2, _)| {
+//!                         s2 == src && plan.owner[dst] == t
+//!                     })
+//!                     .count()
+//!             })
+//!             .sum::<usize>()
+//!     })
+//!     .sum();
+//! assert_eq!(crossing, bucketed);
+//! ```
+
+use crate::topology::{GossipPlan, GraphSequence};
+
+/// A partition of `n` nodes into worker-process shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub n_shards: usize,
+    /// `owner[node]` = the shard that executes this node.
+    pub owner: Vec<usize>,
+    /// `members[shard]` = that shard's nodes, ascending. Every shard is
+    /// non-empty (constructors clamp the shard count to `n`).
+    pub members: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    fn from_owner(n_shards: usize, owner: Vec<usize>) -> ShardPlan {
+        let mut members = vec![Vec::new(); n_shards];
+        for (node, &s) in owner.iter().enumerate() {
+            members[s].push(node);
+        }
+        ShardPlan { n_shards, owner, members }
+    }
+
+    /// Index-contiguous partition: the first `n mod k` shards get
+    /// `⌈n/k⌉` nodes, the rest `⌊n/k⌋`. `k` is clamped to `[1, n]`.
+    pub fn contiguous(n: usize, k: usize) -> ShardPlan {
+        let k = k.clamp(1, n.max(1));
+        let base = n / k;
+        let extra = n % k;
+        let mut owner = Vec::with_capacity(n);
+        for s in 0..k {
+            let size = base + usize::from(s < extra);
+            owner.extend(std::iter::repeat(s).take(size));
+        }
+        ShardPlan::from_owner(k, owner)
+    }
+
+    /// Degree-balanced partition: nodes sorted by total degree over all
+    /// phases (descending, node id ascending on ties), each assigned to
+    /// the currently lightest shard (lowest id on ties). Deterministic,
+    /// so a coordinator and its workers always agree on placement.
+    pub fn degree_balanced(seq: &GraphSequence, k: usize) -> ShardPlan {
+        let n = seq.n;
+        let k = k.clamp(1, n.max(1));
+        let mut weight = vec![0usize; n];
+        for plan in &seq.phases {
+            for (w, i) in weight.iter_mut().zip(0..n) {
+                *w += plan.degree(i);
+            }
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(weight[i]), i));
+        let mut owner = vec![0usize; n];
+        let mut load = vec![0usize; k];
+        let mut count = vec![0usize; k];
+        for &i in &order {
+            // Lightest shard by degree load; break ties toward the shard
+            // with fewer nodes, then the lowest id — keeps every shard
+            // non-empty even when all degrees are equal.
+            let s = (0..k)
+                .min_by_key(|&s| (load[s], count[s], s))
+                .expect("k >= 1");
+            owner[i] = s;
+            load[s] += weight[i];
+            count[s] += 1;
+        }
+        ShardPlan::from_owner(k, owner)
+    }
+
+    /// The shard that runs `node`.
+    #[inline]
+    pub fn shard_of(&self, node: usize) -> usize {
+        self.owner[node]
+    }
+
+    /// Size of the largest shard.
+    pub fn max_shard_size(&self) -> usize {
+        self.members.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+}
+
+/// For one gossip phase: `out[s][t]` is the ascending list of *unique*
+/// source nodes owned by shard `s` whose payload at least one node owned
+/// by shard `t ≠ s` mixes this phase — i.e. exactly the payloads that
+/// must cross the `s → t` process boundary, batched into one bundle.
+/// `out[s][s]` is always empty (intra-shard payloads never hit the wire).
+pub fn cross_shard_sources(
+    plan: &GossipPlan,
+    owner: &[usize],
+    n_shards: usize,
+) -> Vec<Vec<Vec<usize>>> {
+    let mut out = vec![vec![Vec::new(); n_shards]; n_shards];
+    for (dst, src, _w) in plan.directed_edges() {
+        let (s, t) = (owner[src], owner[dst]);
+        if s != t {
+            out[s][t].push(src);
+        }
+    }
+    for row in &mut out {
+        for bucket in row {
+            bucket.sort_unstable();
+            bucket.dedup();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn contiguous_covers_every_node_exactly_once() {
+        for (n, k) in [(10, 3), (8, 2), (5, 5), (7, 1), (64, 7), (3, 9)] {
+            let p = ShardPlan::contiguous(n, k);
+            assert!(p.n_shards <= n && p.n_shards >= 1);
+            assert_eq!(p.owner.len(), n);
+            let total: usize = p.members.iter().map(|m| m.len()).sum();
+            assert_eq!(total, n, "n={n} k={k}");
+            assert!(p.members.iter().all(|m| !m.is_empty()));
+            // Contiguity: each shard is an id interval.
+            for m in &p.members {
+                for w in m.windows(2) {
+                    assert_eq!(w[1], w[0] + 1);
+                }
+            }
+            // Balance: sizes differ by at most one.
+            let sizes: Vec<usize> =
+                p.members.iter().map(|m| m.len()).collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1);
+            for (node, &s) in p.owner.iter().enumerate() {
+                assert!(p.members[s].contains(&node));
+            }
+        }
+    }
+
+    #[test]
+    fn degree_balanced_is_deterministic_and_balanced() {
+        let seq = TopologyKind::Exp.build(33, 0).unwrap();
+        let a = ShardPlan::degree_balanced(&seq, 4);
+        let b = ShardPlan::degree_balanced(&seq, 4);
+        assert_eq!(a, b, "same input must give the same partition");
+        let total: usize = a.members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 33);
+        assert!(a.members.iter().all(|m| !m.is_empty()));
+        // Load balance: per-shard degree totals within one max node
+        // weight of each other (greedy heaviest-first guarantee).
+        let mut weight = vec![0usize; 33];
+        for plan in &seq.phases {
+            for (w, i) in weight.iter_mut().zip(0..33) {
+                *w += plan.degree(i);
+            }
+        }
+        let loads: Vec<usize> = a
+            .members
+            .iter()
+            .map(|m| m.iter().map(|&i| weight[i]).sum())
+            .collect();
+        let wmax = *weight.iter().max().unwrap();
+        let (mn, mx) =
+            (*loads.iter().min().unwrap(), *loads.iter().max().unwrap());
+        assert!(
+            mx - mn <= wmax,
+            "loads {loads:?} spread more than one node weight {wmax}"
+        );
+    }
+
+    /// The satellite guarantee: both partition strategies preserve every
+    /// directed edge of every phase — each edge is intra-shard or in
+    /// exactly one crossing bucket, and nothing else is in any bucket.
+    #[test]
+    fn partitions_preserve_every_directed_edge() {
+        for kind in [
+            TopologyKind::Base { m: 4 },
+            TopologyKind::Exp,
+            TopologyKind::OnePeerExp,
+        ] {
+            let seq = kind.build(22, 0).unwrap();
+            for shards in [1usize, 2, 3, 5] {
+                for plan in [
+                    ShardPlan::contiguous(seq.n, shards),
+                    ShardPlan::degree_balanced(&seq, shards),
+                ] {
+                    for phase in &seq.phases {
+                        let xs = cross_shard_sources(
+                            phase,
+                            &plan.owner,
+                            plan.n_shards,
+                        );
+                        // Diagonal buckets are empty.
+                        for (s, row) in xs.iter().enumerate() {
+                            assert!(row[s].is_empty());
+                        }
+                        // Every directed edge is reachable: intra-shard,
+                        // or its source is listed in the right bucket.
+                        for (dst, src, _w) in phase.directed_edges() {
+                            let (s, t) =
+                                (plan.owner[src], plan.owner[dst]);
+                            if s != t {
+                                assert!(
+                                    xs[s][t].binary_search(&src).is_ok(),
+                                    "{}: edge {src}->{dst} lost by \
+                                     {shards}-shard partition",
+                                    seq.name
+                                );
+                            }
+                        }
+                        // No phantom sources: every bucketed node feeds
+                        // at least one real cross-shard edge.
+                        let needed: BTreeSet<(usize, usize)> = phase
+                            .directed_edges()
+                            .filter(|&(dst, src, _)| {
+                                plan.owner[src] != plan.owner[dst]
+                            })
+                            .map(|(dst, src, _)| {
+                                (plan.owner[dst], src)
+                            })
+                            .collect();
+                        for (s, row) in xs.iter().enumerate() {
+                            for (t, bucket) in row.iter().enumerate() {
+                                for &src in bucket {
+                                    assert_eq!(plan.owner[src], s);
+                                    assert!(needed.contains(&(t, src)));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps() {
+        let p = ShardPlan::contiguous(4, 100);
+        assert_eq!(p.n_shards, 4);
+        let seq = TopologyKind::Ring.build(4, 0).unwrap();
+        let q = ShardPlan::degree_balanced(&seq, 100);
+        assert_eq!(q.n_shards, 4);
+        assert_eq!(ShardPlan::contiguous(5, 0).n_shards, 1);
+    }
+}

@@ -359,9 +359,14 @@ impl Executor for SimnetExecutor {
 mod tests {
     use super::*;
     use crate::consensus::gaussian_init;
-    use crate::exec::{AnalyticExecutor, ConsensusWorkload};
+    use crate::exec::{
+        quadratic_fixed_targets, AnalyticExecutor, ConsensusWorkload,
+        TrainingWorkload,
+    };
+    use crate::optim::OptimizerKind;
     use crate::simnet::Scenario;
-    use crate::topology::base;
+    use crate::topology::{base, baselines, TopologyKind};
+    use crate::train::TrainConfig;
     use crate::util::rng::Rng;
 
     #[test]
@@ -408,5 +413,221 @@ mod tests {
         assert!(a.final_error() < a.errors()[0]);
         let c = run(8);
         assert!(a.trace != c.trace || a.finals != c.finals);
+    }
+
+    // ------------------------------------------------------------------
+    // Behavior pinned by the removed `simnet::driver` wrappers, folded
+    // onto the executor API (the wrappers' one-release window is over).
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn async_ideal_consensus_converges() {
+        let seq = base::base(10, 1).unwrap();
+        let mut rng = Rng::new(5);
+        let init = gaussian_init(10, 2, &mut rng);
+        let mut cfg = SimConfig::ideal();
+        cfg.mode = ExecMode::Async;
+        let iters = 6 * seq.len();
+        let tr = SimnetExecutor::new(cfg)
+            .run(&mut ConsensusWorkload::new(init), &seq, iters)
+            .unwrap();
+        let errors = tr.errors();
+        assert_eq!(errors.len(), iters + 1);
+        assert!(errors.iter().all(|e| e.is_finite()));
+        // Async staleness costs exactness (and speed), not convergence:
+        // stale pairwise averages still contract across sweeps.
+        assert!(
+            tr.final_error() < errors[0] * 0.5,
+            "async error {:.3e} vs initial {:.3e}",
+            tr.final_error(),
+            errors[0]
+        );
+    }
+
+    #[test]
+    fn ideal_bsp_training_reproduces_analytic_exactly() {
+        // Zero latency + zero drops + homogeneous compute ⇒ the
+        // event-driven BSP engine and the analytic backend walk the same
+        // trajectory bit-for-bit (same seed, same rounds), including the
+        // D² damping path and gradient tracking's 2-message rounds.
+        for optimizer in [
+            OptimizerKind::Dsgdm { momentum: 0.9 },
+            OptimizerKind::D2,
+            OptimizerKind::GradientTracking,
+        ] {
+            let n = 8;
+            let seq = base::base(n, 1).unwrap();
+            let cfg = TrainConfig {
+                rounds: 30,
+                lr: 0.2,
+                warmup: 5,
+                cosine: true,
+                optimizer,
+                eval_every: 10,
+                threads: 1,
+                ..Default::default()
+            };
+            let (model, data) = quadratic_fixed_targets(n, 4, 11);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+            let analytic = AnalyticExecutor::new(cfg.cost, cfg.threads)
+                .run(&mut w, &seq, cfg.rounds)
+                .unwrap();
+            let (model, data) = quadratic_fixed_targets(n, 4, 11);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+            let sim = SimnetExecutor::new(SimConfig::ideal())
+                .run(&mut w, &seq, cfg.rounds)
+                .unwrap();
+            assert_eq!(
+                analytic.run.records.len(),
+                sim.run.records.len()
+            );
+            for (a, s) in
+                analytic.run.records.iter().zip(&sim.run.records)
+            {
+                assert_eq!(a.round, s.round);
+                assert_eq!(
+                    a.train_loss, s.train_loss,
+                    "{}: loss diverged at round {}",
+                    cfg.optimizer.label(),
+                    a.round
+                );
+                assert_eq!(
+                    a.consensus_error.is_nan(),
+                    s.consensus_error.is_nan()
+                );
+                if !a.consensus_error.is_nan() {
+                    assert_eq!(a.consensus_error, s.consensus_error);
+                }
+                // Same physical sends counted, event-by-event.
+                assert_eq!(a.cum_messages, s.cum_messages);
+                assert_eq!(a.cum_bytes, s.cum_bytes);
+            }
+            assert_eq!(analytic.finals, sim.finals);
+        }
+    }
+
+    #[test]
+    fn identical_seed_identical_trace_and_params() {
+        let run = |seed: u64| {
+            let n = 10;
+            let seq = base::base(n, 1).unwrap();
+            let (model, data) = quadratic_fixed_targets(n, 3, 2);
+            let mut sim = Scenario::Hostile.config(seed);
+            sim.mode = ExecMode::Async;
+            sim.record_trace = true;
+            let cfg = TrainConfig {
+                rounds: 12,
+                lr: 0.2,
+                warmup: 0,
+                cosine: false,
+                optimizer: OptimizerKind::Dsgd,
+                eval_every: 0,
+                threads: 1,
+                ..Default::default()
+            };
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+            SimnetExecutor::new(sim)
+                .run(&mut w, &seq, cfg.rounds)
+                .unwrap()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a.trace, b.trace, "same seed must replay identically");
+        assert_eq!(a.finals, b.finals);
+        assert_eq!(a.drops, b.drops);
+        assert!(!a.trace.is_empty());
+        let c = run(8);
+        assert!(
+            a.trace != c.trace || a.finals != c.finals,
+            "different seeds should perturb the run"
+        );
+    }
+
+    #[test]
+    fn finite_time_topology_keeps_edge_under_stragglers_and_drops() {
+        // The measured version of the paper's claim: under stragglers +
+        // drops + rack-heterogeneous links, the Base-(k+1) Graph still
+        // reaches consensus in a fraction of the ring's simulated time.
+        let n = 24;
+        let iters = 60;
+        let run = |kind: TopologyKind, sc: Scenario, seed: u64| {
+            let seq = kind.build(n, 0).unwrap();
+            let cfg = sc.config(seed);
+            let mut rng = Rng::new(1);
+            let init = gaussian_init(n, 1, &mut rng);
+            SimnetExecutor::new(cfg)
+                .run(&mut ConsensusWorkload::new(init), &seq, iters)
+                .unwrap()
+        };
+
+        // Stragglers only (no loss): finite-time consensus survives — the
+        // Base-2 Graph is exact after one sweep even on the slow network.
+        let base_s =
+            run(TopologyKind::Base { m: 2 }, Scenario::Straggler, 42);
+        let bt = base_s
+            .time_to_reach(1e-15)
+            .expect("base-2 stays finite-time under stragglers");
+        assert!(bt > 0.0, "straggler network must cost real time");
+        let ring_s = run(TopologyKind::Ring, Scenario::Straggler, 42);
+        assert!(ring_s.time_to_reach(1e-15).is_none());
+
+        // Stragglers + 10% drops + racks: exactness is gone, but the
+        // time-to-accuracy edge survives.
+        let base_h =
+            run(TopologyKind::Base { m: 2 }, Scenario::Hostile, 42);
+        let ring_h = run(TopologyKind::Ring, Scenario::Hostile, 42);
+        assert!(base_h.drops > 0, "hostile scenario must drop messages");
+        let bh = base_h
+            .time_to_reach(1e-3)
+            .expect("base-2 reaches 1e-3 despite drops");
+        let rh = ring_h.time_to_reach(1e-3).unwrap_or(f64::INFINITY);
+        assert!(bh < rh, "base-2 time {bh:.3}s must beat ring ({rh:.3}s)");
+        assert!(base_h.final_error() < ring_h.final_error());
+
+        // Reproducible from the seed alone.
+        let again =
+            run(TopologyKind::Base { m: 2 }, Scenario::Hostile, 42);
+        assert_eq!(base_h.errors(), again.errors());
+        assert_eq!(base_h.times(), again.times());
+        assert_eq!(base_h.drops, again.drops);
+    }
+
+    #[test]
+    fn straggler_scenario_gates_the_clock_on_the_slow_nodes() {
+        // With a 10× straggler subset, every completed global round costs
+        // at least one straggler compute time (both modes wait for the
+        // slowest node to have finished its rounds); without stragglers
+        // the same iteration count is an order of magnitude cheaper.
+        let n = 16;
+        let seq = baselines::ring(n);
+        let iters = 10;
+        let strag = Scenario::Straggler.config(9);
+        // ceil(16 · 0.125) = 2 straggler nodes at 10 × 5 ms minimum each.
+        let floor = iters as f64
+            * strag.compute.mean_seconds
+            * strag.compute.straggler_factor;
+        let run = |cfg: SimConfig| {
+            let mut rng = Rng::new(2);
+            let init = gaussian_init(n, 1, &mut rng);
+            SimnetExecutor::new(cfg)
+                .run(&mut ConsensusWorkload::new(init), &seq, iters)
+                .unwrap()
+                .sim_seconds()
+        };
+        for mode in [ExecMode::BulkSynchronous, ExecMode::Async] {
+            let mut cfg = strag.clone();
+            cfg.mode = mode;
+            let t = run(cfg);
+            assert!(
+                t >= floor,
+                "{}: {t:.4}s below straggler floor {floor:.4}s",
+                mode.label()
+            );
+        }
+        let t_lan = run(Scenario::Lan.config(9));
+        assert!(
+            t_lan < floor / 3.0,
+            "lan time {t_lan:.4}s should be far below {floor:.4}s"
+        );
     }
 }

@@ -9,9 +9,9 @@
 //! swap at the barrier, worker combines read the front buffer — and the
 //! pool's latch is a real barrier: no node starts round r+1 until every
 //! node committed round r. This is the BSP discipline of the simnet
-//! driver executed on hardware, and the stepping stone to the ROADMAP's
-//! process-parallel backend (sockets / shared-memory queues behind the
-//! same trait).
+//! engine executed on hardware; its process-boundary sibling is
+//! [`ProcessExecutor`](super::ProcessExecutor), which runs the same
+//! lock-step protocol across OS processes and real sockets.
 //!
 //! Determinism: identical to every other backend bit-for-bit (the
 //! equivalence suite pins it) — combines read only snapshots, so thread

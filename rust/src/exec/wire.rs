@@ -1,0 +1,558 @@
+//! The wire protocol of the process-parallel backend: length-prefixed,
+//! checksummed frames plus an exact little-endian byte codec.
+//!
+//! Every message between the [`ProcessExecutor`](super::ProcessExecutor)
+//! coordinator and its worker processes is one *frame*:
+//!
+//! ```text
+//! ┌──────┬─────────┬──────┬──────────┬──────────────┬───────────┐
+//! │magic │ version │ kind │ len: u32 │ payload …    │ crc32: u32│
+//! │ 0xB6 │  0x01   │  u8  │   LE     │ (len bytes)  │    LE     │
+//! └──────┴─────────┴──────┴──────────┴──────────────┴───────────┘
+//! ```
+//!
+//! The magic byte rejects foreign processes at the handshake, the version
+//! byte rejects mixed-build coordinator/worker pairs, and the CRC-32 of
+//! the payload turns a torn or corrupted frame into a clean error instead
+//! of silently wrong arithmetic. Truncation at any point (header, payload
+//! or checksum) surfaces as a `"truncated frame"` error.
+//!
+//! Scalars cross the wire as exact bit patterns ([`f64::to_bits`] /
+//! [`f32::to_bits`], little-endian), which is what lets the process
+//! backend reproduce the in-process backends *bit-identically*: no
+//! decimal formatting, no rounding, no locale.
+//!
+//! # Example
+//!
+//! ```
+//! use basegraph::exec::wire::{read_frame, write_frame};
+//!
+//! // Frames round-trip through any Read/Write pair (here: a Vec).
+//! let mut buf: Vec<u8> = Vec::new();
+//! let sent = write_frame(&mut buf, 7, b"hello shard").unwrap();
+//! assert_eq!(sent as usize, buf.len());
+//! let mut rd: &[u8] = &buf;
+//! let (kind, payload, got) = read_frame(&mut rd).unwrap();
+//! assert_eq!((kind, payload.as_slice()), (7, b"hello shard".as_slice()));
+//! assert_eq!(got, sent);
+//!
+//! // A flipped payload bit is caught by the checksum.
+//! let mut bad = buf.clone();
+//! bad[8] ^= 1;
+//! let mut rd: &[u8] = &bad;
+//! assert!(read_frame(&mut rd).unwrap_err().contains("checksum"));
+//! ```
+
+use std::io::{Read, Write};
+
+use crate::topology::{GossipPlan, GraphSequence};
+
+/// First byte of every frame; rejects non-basegraph peers at handshake.
+pub const MAGIC: u8 = 0xB6;
+/// Protocol version; bumped on any frame-layout change.
+pub const VERSION: u8 = 1;
+/// Refuse frames claiming more than this many payload bytes (corruption
+/// guard — a garbage length would otherwise trigger a giant allocation).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// The standard 256-entry CRC-32 lookup table (IEEE 802.3, reflected),
+/// built at compile time. A checksum runs over every frame byte — and a
+/// cross-shard payload byte is checksummed on each hop — so the byte-wise
+/// table form matters: the backend's product is *measured* wall-clock,
+/// and a bitwise CRC would quietly tax the very number being reported.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut b = 0;
+        while b < 8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+            b += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+fn io_err(what: &str, e: &std::io::Error) -> String {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        WouldBlock | TimedOut => format!("{what}: read timed out ({e})"),
+        UnexpectedEof => format!("{what}: peer closed the connection ({e})"),
+        _ => format!("{what}: {e}"),
+    }
+}
+
+/// Write one frame; returns the exact number of bytes put on the wire
+/// (header + payload + checksum) for `bytes_on_wire` accounting.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    payload: &[u8],
+) -> Result<u64, String> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(format!("frame payload too large: {}", payload.len()));
+    }
+    let mut header = [0u8; 7];
+    header[0] = MAGIC;
+    header[1] = VERSION;
+    header[2] = kind;
+    header[3..7].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).map_err(|e| io_err("write frame header", &e))?;
+    w.write_all(payload).map_err(|e| io_err("write frame payload", &e))?;
+    w.write_all(&crc32(payload).to_le_bytes())
+        .map_err(|e| io_err("write frame checksum", &e))?;
+    w.flush().map_err(|e| io_err("flush frame", &e))?;
+    Ok(7 + payload.len() as u64 + 4)
+}
+
+fn read_exact_or(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    what: &str,
+) -> Result<(), String> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            format!("truncated frame ({what}): peer sent too few bytes")
+        } else {
+            io_err(what, &e)
+        }
+    })
+}
+
+/// Read one frame; returns `(kind, payload, wire_bytes)`. Bad magic,
+/// version skew, oversized length, a short read anywhere, or a checksum
+/// mismatch each produce a distinct, clean error — never a hang on
+/// garbage, never a silent partial payload.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>, u64), String> {
+    let mut header = [0u8; 7];
+    read_exact_or(r, &mut header, "frame header")?;
+    if header[0] != MAGIC {
+        return Err(format!(
+            "bad frame magic 0x{:02X} (expected 0x{MAGIC:02X}) — peer is \
+             not a basegraph worker/coordinator",
+            header[0]
+        ));
+    }
+    if header[1] != VERSION {
+        return Err(format!(
+            "wire protocol version mismatch: peer speaks v{}, this binary \
+             speaks v{VERSION}",
+            header[1]
+        ));
+    }
+    let kind = header[2];
+    let len = u32::from_le_bytes([header[3], header[4], header[5], header[6]]);
+    if len > MAX_FRAME {
+        return Err(format!("frame length {len} exceeds limit {MAX_FRAME}"));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload, "frame payload")?;
+    let mut crc_buf = [0u8; 4];
+    read_exact_or(r, &mut crc_buf, "frame checksum")?;
+    let want = u32::from_le_bytes(crc_buf);
+    let got = crc32(&payload);
+    if want != got {
+        return Err(format!(
+            "frame checksum mismatch (kind {kind}): got 0x{got:08X}, \
+             frame says 0x{want:08X}"
+        ));
+    }
+    Ok((kind, payload, 7 + len as u64 + 4))
+}
+
+// ---------------------------------------------------------------------------
+// Byte codec
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian encoder for frame payloads.
+///
+/// ```
+/// use basegraph::exec::wire::{ByteReader, ByteWriter};
+///
+/// let mut w = ByteWriter::new();
+/// w.put_u64(42);
+/// w.put_f64(-0.1);
+/// w.put_str("base-4");
+/// w.put_vec_f32(&[1.5, -2.5]);
+/// let bytes = w.finish();
+///
+/// let mut r = ByteReader::new(&bytes);
+/// assert_eq!(r.get_u64().unwrap(), 42);
+/// assert_eq!(r.get_f64().unwrap(), -0.1);
+/// assert_eq!(r.get_str().unwrap(), "base-4");
+/// assert_eq!(r.get_vec_f32().unwrap(), vec![1.5, -2.5]);
+/// r.expect_end().unwrap();
+/// ```
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// usize as u64 — shard/node counts are machine-independent this way.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Exact bit pattern — the backbone of cross-process bit-identity.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    pub fn put_vec_f64(&mut self, v: &[f64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    pub fn put_vec_f32(&mut self, v: &[f32]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+}
+
+/// Cursor-style decoder over a payload; every getter is bounds-checked
+/// and reports *what* was being decoded when the bytes ran out.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        // Overflow-proof form: `pos + n` could wrap for a hostile length
+        // (a corrupt frame can claim any u64 and still carry a valid
+        // CRC), and a wrapped sum would slip past a `pos + n > len`
+        // check straight into a slice panic.
+        if n > self.buf.len() - self.pos {
+            return Err(format!(
+                "truncated payload: wanted {n} bytes for {what} at offset \
+                 {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize, String> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| format!("usize overflow: {v}"))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], String> {
+        let n = self.get_usize()?;
+        self.take(n, "byte string")
+    }
+
+    pub fn get_str(&mut self) -> Result<String, String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|e| format!("bad utf8: {e}"))
+    }
+
+    pub fn get_vec_f64(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.get_usize()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.get_f64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_vec_f32(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.get_usize()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.get_f32()?);
+        }
+        Ok(v)
+    }
+
+    /// Assert the payload is fully consumed (layout drift detector).
+    pub fn expect_end(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{} trailing bytes after decode — frame layout drift?",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Topology serialization
+// ---------------------------------------------------------------------------
+
+/// Serialize a full [`GraphSequence`] — name, n, and every phase's CSR
+/// rows *plus explicit self-weights* — so a worker rebuilds the exact
+/// plan the coordinator runs, down to the last mantissa bit. (Re-deriving
+/// self-weights as `1 − Σw` on the worker would re-do a float reduction;
+/// shipping the stored bits sidesteps the question entirely.)
+pub fn encode_seq(seq: &GraphSequence, w: &mut ByteWriter) {
+    w.put_str(&seq.name);
+    w.put_usize(seq.n);
+    w.put_usize(seq.phases.len());
+    for plan in &seq.phases {
+        for i in 0..seq.n {
+            w.put_f64(plan.self_weight(i));
+            let row = plan.neighbors(i);
+            w.put_usize(row.len());
+            for &(j, wt) in row {
+                w.put_usize(j);
+                w.put_f64(wt);
+            }
+        }
+    }
+}
+
+/// Inverse of [`encode_seq`].
+pub fn decode_seq(r: &mut ByteReader) -> Result<GraphSequence, String> {
+    let name = r.get_str()?;
+    let n = r.get_usize()?;
+    let n_phases = r.get_usize()?;
+    if n > (MAX_FRAME as usize) || n_phases > (MAX_FRAME as usize) {
+        return Err("implausible topology size on the wire".into());
+    }
+    let mut phases = Vec::with_capacity(n_phases);
+    for _ in 0..n_phases {
+        let mut rows = Vec::with_capacity(n);
+        let mut self_w = Vec::with_capacity(n);
+        for _ in 0..n {
+            self_w.push(r.get_f64()?);
+            let deg = r.get_usize()?;
+            let mut row = Vec::with_capacity(deg.min(1 << 20));
+            for _ in 0..deg {
+                let j = r.get_usize()?;
+                let wt = r.get_f64()?;
+                if j >= n {
+                    return Err(format!("wire plan: peer {j} >= n {n}"));
+                }
+                row.push((j, wt));
+            }
+            rows.push(row);
+        }
+        phases.push(GossipPlan::from_parts(n, rows, self_w)?);
+    }
+    Ok(GraphSequence::new(n, name, phases))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_round_trip_and_byte_count() {
+        let mut buf = Vec::new();
+        let n1 = write_frame(&mut buf, 3, b"abc").unwrap();
+        let n2 = write_frame(&mut buf, 9, &[]).unwrap();
+        assert_eq!(n1, 7 + 3 + 4);
+        assert_eq!(n2, 7 + 4);
+        assert_eq!(buf.len() as u64, n1 + n2);
+        let mut rd: &[u8] = &buf;
+        let (k1, p1, g1) = read_frame(&mut rd).unwrap();
+        let (k2, p2, g2) = read_frame(&mut rd).unwrap();
+        assert_eq!((k1, p1.as_slice(), g1), (3, b"abc".as_slice(), n1));
+        assert_eq!((k2, p2.len(), g2), (9, 0, n2));
+        assert!(rd.is_empty());
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"payload-bytes").unwrap();
+        // Cut the stream at every prefix length: header, payload and
+        // checksum truncations must all say "truncated", never panic,
+        // never return Ok.
+        for cut in 0..buf.len() {
+            let mut rd: &[u8] = &buf[..cut];
+            let err = read_frame(&mut rd).unwrap_err();
+            assert!(
+                err.contains("truncated"),
+                "cut at {cut}: unexpected error {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_checksum_are_distinct_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"xyz").unwrap();
+        let mut m = buf.clone();
+        m[0] = 0x00;
+        assert!(read_frame(&mut &m[..]).unwrap_err().contains("magic"));
+        let mut v = buf.clone();
+        v[1] = VERSION + 1;
+        assert!(read_frame(&mut &v[..]).unwrap_err().contains("version"));
+        let mut c = buf.clone();
+        let last = c.len() - 1;
+        c[last] ^= 0xFF;
+        assert!(read_frame(&mut &c[..]).unwrap_err().contains("checksum"));
+    }
+
+    #[test]
+    fn codec_round_trips_exact_bits() {
+        let mut w = ByteWriter::new();
+        w.put_u8(200);
+        w.put_u32(u32::MAX);
+        w.put_u64(u64::MAX - 1);
+        w.put_usize(12345);
+        w.put_f64(f64::from_bits(0x1234_5678_9ABC_DEF0));
+        w.put_f32(f32::from_bits(0xDEAD_BEEF));
+        w.put_str("τοπολογία");
+        w.put_vec_f64(&[0.1, -0.0, f64::INFINITY]);
+        w.put_vec_f32(&[]);
+        let b = w.finish();
+        let mut r = ByteReader::new(&b);
+        assert_eq!(r.get_u8().unwrap(), 200);
+        assert_eq!(r.get_u32().unwrap(), u32::MAX);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_usize().unwrap(), 12345);
+        assert_eq!(
+            r.get_f64().unwrap().to_bits(),
+            0x1234_5678_9ABC_DEF0
+        );
+        assert_eq!(r.get_f32().unwrap().to_bits(), 0xDEAD_BEEF);
+        assert_eq!(r.get_str().unwrap(), "τοπολογία");
+        let v = r.get_vec_f64().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0], 0.1);
+        assert_eq!(v[1].to_bits(), (-0.0f64).to_bits());
+        assert!(v[2].is_infinite());
+        assert!(r.get_vec_f32().unwrap().is_empty());
+        r.expect_end().unwrap();
+        // Over-read past the end is a clean error, and expect_end flags
+        // unconsumed bytes.
+        assert!(r.get_u8().is_err());
+        let mut short = ByteReader::new(&b);
+        short.get_u8().unwrap();
+        assert!(short.expect_end().unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn hostile_length_is_a_clean_error_not_a_panic() {
+        // A corrupt (or hostile) peer can put any u64 length in a
+        // payload and still wrap it in a valid CRC; the reader must turn
+        // it into a truncation error, never an overflowed slice index.
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX - 2); // byte-string "length" near usize::MAX
+        let b = w.finish();
+        let mut r = ByteReader::new(&b);
+        assert!(r.get_bytes().unwrap_err().contains("truncated"));
+        let mut r = ByteReader::new(&b);
+        assert!(r.get_vec_f64().unwrap_err().contains("truncated"));
+    }
+
+    #[test]
+    fn seq_round_trips_bit_identically() {
+        for kind in [
+            TopologyKind::Base { m: 3 },
+            TopologyKind::Exp,
+            TopologyKind::Ring,
+        ] {
+            let seq = kind.build(13, 0).unwrap();
+            let mut w = ByteWriter::new();
+            encode_seq(&seq, &mut w);
+            let bytes = w.finish();
+            let mut r = ByteReader::new(&bytes);
+            let back = decode_seq(&mut r).unwrap();
+            r.expect_end().unwrap();
+            assert_eq!(back.name, seq.name);
+            assert_eq!(back.n, seq.n);
+            assert_eq!(back.phases.len(), seq.phases.len());
+            for (a, b) in seq.phases.iter().zip(&back.phases) {
+                // PartialEq on GossipPlan is field-exact — this pins the
+                // whole CSR structure and every weight bit.
+                assert_eq!(a, b, "{}", seq.name);
+            }
+        }
+    }
+}

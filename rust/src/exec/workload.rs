@@ -32,13 +32,15 @@
 
 use std::sync::Mutex;
 
+use super::wire::{ByteReader, ByteWriter};
+use crate::comm::CostModel;
 use crate::consensus::consensus_error;
 use crate::metrics::RoundRecord;
-use crate::optim::DecentralizedOptimizer;
+use crate::optim::{DecentralizedOptimizer, OptimizerKind};
 use crate::runtime::batch::Batch;
-use crate::runtime::provider::GradProvider;
+use crate::runtime::provider::{GradProvider, QuadraticModel};
 use crate::topology::GossipPlan;
-use crate::train::node_data::NodeData;
+use crate::train::node_data::{FixedBatch, NodeData};
 use crate::train::{average_params, evaluate, gossip_combine, TrainConfig};
 
 /// One decentralized problem, expressed in executor-agnostic pieces.
@@ -123,6 +125,78 @@ pub trait Workload: Sync {
     /// Final per-node states, widened losslessly to f64 for cross-backend
     /// bit-identity checks.
     fn finals(&self, nodes: &[Self::Node]) -> Vec<Vec<f64>>;
+
+    // -----------------------------------------------------------------
+    // Wire support — the process-parallel backend's extra contract.
+    //
+    // A workload that can cross a process boundary overrides all of
+    // these; the defaults make every other workload politely refuse the
+    // process backend instead of failing mid-run. Encodings must be
+    // exact (bit patterns, not decimal text): the cross-backend
+    // equivalence guarantee extends to the process backend only because
+    // nothing on the wire is ever rounded.
+    // -----------------------------------------------------------------
+
+    /// Self-describing spec bytes a re-exec'd `--worker` process uses to
+    /// rebuild this workload (see `exec::process`); `None` = the
+    /// workload cannot cross a process boundary.
+    fn wire_spec(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Encode one payload for the wire.
+    fn payload_to_wire(&self, _p: &Self::Payload) -> Result<Vec<u8>, String> {
+        Err(not_wire(self.label()))
+    }
+
+    /// Decode one payload off the wire.
+    fn payload_from_wire(&self, _b: &[u8]) -> Result<Self::Payload, String> {
+        Err(not_wire(self.label()))
+    }
+
+    /// Encode the observation snapshot of one node: everything
+    /// [`Workload::observe_wire`] / [`Workload::finals_wire`] need.
+    /// `full` asks for the complete state (eval rounds and finals);
+    /// otherwise a cheap per-round summary is enough.
+    fn node_to_wire(
+        &self,
+        _node: &Self::Node,
+        _full: bool,
+    ) -> Result<Vec<u8>, String> {
+        Err(not_wire(self.label()))
+    }
+
+    /// Coordinator-side [`Workload::initial_record`] over the workers'
+    /// pre-round-0 snapshots (`obs[i]` = node i, node order).
+    fn initial_record_wire(
+        &self,
+        _obs: &[Vec<u8>],
+    ) -> Result<Option<RoundRecord>, String> {
+        Ok(None)
+    }
+
+    /// Coordinator-side [`Workload::observe`] over per-node snapshots —
+    /// must be arithmetically identical (same accumulation order).
+    fn observe_wire(
+        &self,
+        _obs: &[Vec<u8>],
+        _r: usize,
+        _eval: bool,
+    ) -> Result<RoundRecord, String> {
+        Err(not_wire(self.label()))
+    }
+
+    /// Coordinator-side [`Workload::finals`] over *full* snapshots.
+    fn finals_wire(&self, _obs: &[Vec<u8>]) -> Result<Vec<Vec<f64>>, String> {
+        Err(not_wire(self.label()))
+    }
+}
+
+fn not_wire(label: String) -> String {
+    format!(
+        "workload {label:?} has no wire form — the process backend needs \
+         wire_spec and the payload/observation codecs (see exec::process)"
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -245,6 +319,68 @@ impl Workload for ConsensusWorkload {
     fn finals(&self, nodes: &[Vec<f64>]) -> Vec<Vec<f64>> {
         nodes.to_vec()
     }
+
+    // --- wire support: a consensus node IS an f64 vector ---
+
+    fn wire_spec(&self) -> Option<Vec<u8>> {
+        let mut w = ByteWriter::new();
+        w.put_u8(SPEC_CONSENSUS);
+        w.put_usize(self.init.len());
+        for x in &self.init {
+            w.put_vec_f64(x);
+        }
+        Some(w.finish())
+    }
+
+    fn payload_to_wire(&self, p: &Vec<f64>) -> Result<Vec<u8>, String> {
+        let mut w = ByteWriter::new();
+        w.put_vec_f64(p);
+        Ok(w.finish())
+    }
+
+    fn payload_from_wire(&self, b: &[u8]) -> Result<Vec<f64>, String> {
+        let mut r = ByteReader::new(b);
+        let v = r.get_vec_f64()?;
+        r.expect_end()?;
+        Ok(v)
+    }
+
+    fn node_to_wire(
+        &self,
+        node: &Vec<f64>,
+        _full: bool,
+    ) -> Result<Vec<u8>, String> {
+        self.payload_to_wire(node)
+    }
+
+    fn initial_record_wire(
+        &self,
+        obs: &[Vec<u8>],
+    ) -> Result<Option<RoundRecord>, String> {
+        let states = decode_f64_states(self, obs)?;
+        Ok(self.initial_record(&states))
+    }
+
+    fn observe_wire(
+        &self,
+        obs: &[Vec<u8>],
+        r: usize,
+        eval: bool,
+    ) -> Result<RoundRecord, String> {
+        let states = decode_f64_states(self, obs)?;
+        self.observe(&states, r, eval)
+    }
+
+    fn finals_wire(&self, obs: &[Vec<u8>]) -> Result<Vec<Vec<f64>>, String> {
+        decode_f64_states(self, obs)
+    }
+}
+
+fn decode_f64_states(
+    w: &ConsensusWorkload,
+    obs: &[Vec<u8>],
+) -> Result<Vec<Vec<f64>>, String> {
+    obs.iter().map(|b| w.payload_from_wire(b)).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -276,6 +412,11 @@ pub struct TrainingWorkload<'a> {
     d: usize,
     n_msgs: usize,
     damping: f32,
+    /// How a `--worker` process rebuilds this workload, when known — set
+    /// by [`TrainingWorkload::with_wire`]; without it the process
+    /// backend refuses the run (a `Box<dyn NodeData>` cannot be
+    /// serialized after the fact, only re-derived from its recipe).
+    wire: Option<TrainSpec>,
 }
 
 impl<'a> TrainingWorkload<'a> {
@@ -299,7 +440,17 @@ impl<'a> TrainingWorkload<'a> {
             d,
             n_msgs,
             damping,
+            wire: None,
         }
+    }
+
+    /// Attach the recipe a worker process uses to rebuild this workload
+    /// (provider + node data streams), enabling the process backend. The
+    /// spec must describe *exactly* how `node_data` was built — the
+    /// equivalence suite is the proof that it does.
+    pub fn with_wire(mut self, spec: TrainSpec) -> Self {
+        self.wire = Some(spec);
+        self
     }
 }
 
@@ -440,6 +591,283 @@ impl Workload for TrainingWorkload<'_> {
             .map(|s| s.params.iter().map(|&x| x as f64).collect())
             .collect()
     }
+
+    // --- wire support ---
+
+    fn wire_spec(&self) -> Option<Vec<u8>> {
+        let spec = self.wire.as_ref()?;
+        let mut w = ByteWriter::new();
+        w.put_u8(SPEC_TRAINING);
+        spec.encode(&mut w);
+        encode_train_config(self.cfg, &mut w);
+        Some(w.finish())
+    }
+
+    fn payload_to_wire(&self, p: &Vec<Vec<f32>>) -> Result<Vec<u8>, String> {
+        let mut w = ByteWriter::new();
+        w.put_usize(p.len());
+        for slot in p {
+            w.put_vec_f32(slot);
+        }
+        Ok(w.finish())
+    }
+
+    fn payload_from_wire(&self, b: &[u8]) -> Result<Vec<Vec<f32>>, String> {
+        let mut r = ByteReader::new(b);
+        let slots = r.get_usize()?;
+        let mut p = Vec::with_capacity(slots.min(1 << 10));
+        for _ in 0..slots {
+            p.push(r.get_vec_f32()?);
+        }
+        r.expect_end()?;
+        Ok(p)
+    }
+
+    fn node_to_wire(
+        &self,
+        node: &TrainNode,
+        full: bool,
+    ) -> Result<Vec<u8>, String> {
+        let mut w = ByteWriter::new();
+        w.put_f64(node.last_loss);
+        w.put_u8(u8::from(full));
+        if full {
+            w.put_vec_f32(&node.params);
+        }
+        Ok(w.finish())
+    }
+
+    fn observe_wire(
+        &self,
+        obs: &[Vec<u8>],
+        r: usize,
+        eval: bool,
+    ) -> Result<RoundRecord, String> {
+        let snaps = decode_train_obs(obs)?;
+        let n = snaps.len();
+        let mut rec = RoundRecord {
+            round: r + 1,
+            train_loss: snaps.iter().map(|(l, _)| *l).sum::<f64>()
+                / n as f64,
+            consensus_error: f64::NAN,
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            ..Default::default()
+        };
+        if eval {
+            let params: Vec<&Vec<f32>> = snaps
+                .iter()
+                .map(|(_, p)| {
+                    p.as_ref().ok_or_else(|| {
+                        "eval round observation is missing node params"
+                            .to_string()
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+            let params_f64: Vec<Vec<f64>> = params
+                .iter()
+                .map(|p| p.iter().map(|&x| x as f64).collect())
+                .collect();
+            rec.consensus_error = consensus_error(&params_f64);
+            if !self.eval_batches.is_empty() {
+                let avg = average_params(
+                    params.iter().map(|p| p.as_slice()),
+                    self.d,
+                );
+                let (loss, acc) =
+                    evaluate(self.provider, &avg, self.eval_batches)?;
+                rec.test_loss = loss;
+                rec.test_acc = acc;
+            }
+        }
+        Ok(rec)
+    }
+
+    fn finals_wire(&self, obs: &[Vec<u8>]) -> Result<Vec<Vec<f64>>, String> {
+        decode_train_obs(obs)?
+            .into_iter()
+            .map(|(_, p)| {
+                p.map(|p| p.iter().map(|&x| x as f64).collect())
+                    .ok_or_else(|| {
+                        "final observation is missing node params".to_string()
+                    })
+            })
+            .collect()
+    }
+}
+
+/// Decode per-node training observations: `(last_loss, Some(params))`
+/// for full snapshots, `(last_loss, None)` for cheap per-round ones.
+fn decode_train_obs(
+    obs: &[Vec<u8>],
+) -> Result<Vec<(f64, Option<Vec<f32>>)>, String> {
+    obs.iter()
+        .map(|b| {
+            let mut r = ByteReader::new(b);
+            let loss = r.get_f64()?;
+            let full = r.get_u8()? != 0;
+            let params = if full { Some(r.get_vec_f32()?) } else { None };
+            r.expect_end()?;
+            Ok((loss, params))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Wire specs: how a worker process rebuilds a workload
+// ---------------------------------------------------------------------------
+
+pub(crate) const SPEC_CONSENSUS: u8 = 1;
+pub(crate) const SPEC_TRAINING: u8 = 2;
+
+/// The recipe a `--worker` process follows to rebuild a
+/// [`TrainingWorkload`]'s provider and per-node data streams. Both
+/// variants name deterministic constructions that live in this crate, so
+/// coordinator and worker derive bit-identical state from the same spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrainSpec {
+    /// [`quadratic_fixed_targets`]`(n, d, seed)` — `n` comes from the
+    /// run's topology.
+    Quadratic { d: usize, seed: u64 },
+    /// `repro::common::classification_workload(engine, seed)` +
+    /// `partitioned_node_data(_, n, alpha, seed)` — the CLI training
+    /// path.
+    Classification { engine: String, alpha: f64, seed: u64 },
+}
+
+impl TrainSpec {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            TrainSpec::Quadratic { d, seed } => {
+                w.put_u8(1);
+                w.put_usize(*d);
+                w.put_u64(*seed);
+            }
+            TrainSpec::Classification { engine, alpha, seed } => {
+                w.put_u8(2);
+                w.put_str(engine);
+                w.put_f64(*alpha);
+                w.put_u64(*seed);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader) -> Result<TrainSpec, String> {
+        match r.get_u8()? {
+            1 => Ok(TrainSpec::Quadratic {
+                d: r.get_usize()?,
+                seed: r.get_u64()?,
+            }),
+            2 => Ok(TrainSpec::Classification {
+                engine: r.get_str()?,
+                alpha: r.get_f64()?,
+                seed: r.get_u64()?,
+            }),
+            t => Err(format!("unknown TrainSpec tag {t}")),
+        }
+    }
+}
+
+fn encode_train_config(cfg: &TrainConfig, w: &mut ByteWriter) {
+    w.put_usize(cfg.rounds);
+    w.put_f64(cfg.lr);
+    w.put_usize(cfg.warmup);
+    w.put_u8(u8::from(cfg.cosine));
+    let (tag, momentum) = match cfg.optimizer {
+        OptimizerKind::Dsgd => (0u8, 0.0f32),
+        OptimizerKind::Dsgdm { momentum } => (1, momentum),
+        OptimizerKind::QgDsgdm { momentum } => (2, momentum),
+        OptimizerKind::D2 => (3, 0.0),
+        OptimizerKind::GradientTracking => (4, 0.0),
+    };
+    w.put_u8(tag);
+    w.put_f32(momentum);
+    w.put_usize(cfg.eval_every);
+    w.put_usize(cfg.threads);
+    w.put_f64(cfg.cost.alpha);
+    w.put_f64(cfg.cost.beta);
+}
+
+fn decode_train_config(r: &mut ByteReader) -> Result<TrainConfig, String> {
+    let rounds = r.get_usize()?;
+    let lr = r.get_f64()?;
+    let warmup = r.get_usize()?;
+    let cosine = r.get_u8()? != 0;
+    let tag = r.get_u8()?;
+    let momentum = r.get_f32()?;
+    let optimizer = match tag {
+        0 => OptimizerKind::Dsgd,
+        1 => OptimizerKind::Dsgdm { momentum },
+        2 => OptimizerKind::QgDsgdm { momentum },
+        3 => OptimizerKind::D2,
+        4 => OptimizerKind::GradientTracking,
+        t => return Err(format!("unknown optimizer tag {t}")),
+    };
+    let eval_every = r.get_usize()?;
+    let threads = r.get_usize()?;
+    let cost = CostModel { alpha: r.get_f64()?, beta: r.get_f64()? };
+    Ok(TrainConfig {
+        rounds,
+        lr,
+        warmup,
+        cosine,
+        optimizer,
+        eval_every,
+        threads,
+        cost,
+    })
+}
+
+/// A decoded [`Workload::wire_spec`], ready for the worker-side registry
+/// in `exec::process` to instantiate.
+pub(crate) enum DecodedSpec {
+    Consensus { init: Vec<Vec<f64>> },
+    Training { spec: TrainSpec, cfg: TrainConfig },
+}
+
+pub(crate) fn decode_wire_spec(bytes: &[u8]) -> Result<DecodedSpec, String> {
+    let mut r = ByteReader::new(bytes);
+    match r.get_u8()? {
+        SPEC_CONSENSUS => {
+            let n = r.get_usize()?;
+            let mut init = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                init.push(r.get_vec_f64()?);
+            }
+            r.expect_end()?;
+            Ok(DecodedSpec::Consensus { init })
+        }
+        SPEC_TRAINING => {
+            let spec = TrainSpec::decode(&mut r)?;
+            let cfg = decode_train_config(&mut r)?;
+            r.expect_end()?;
+            Ok(DecodedSpec::Training { spec, cfg })
+        }
+        t => Err(format!("unknown workload spec tag {t}")),
+    }
+}
+
+/// The deterministic quadratic benchmark the cross-backend tests and the
+/// process-backend worker registry share: node `i` minimizes
+/// `0.5‖x − c_i‖²` with all targets `c_i ~ N(0, 3²)` drawn from one
+/// seeded stream in node order — so a `(n, d, seed)` triple pins the
+/// whole problem, on either side of a process boundary.
+pub fn quadratic_fixed_targets(
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> (QuadraticModel, Vec<Box<dyn NodeData>>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let model = QuadraticModel::new(d);
+    let data: Vec<Box<dyn NodeData>> = (0..n)
+        .map(|_| {
+            let c: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+            Box::new(FixedBatch::new(QuadraticModel::target_batch(c)))
+                as Box<dyn NodeData>
+        })
+        .collect();
+    (model, data)
 }
 
 #[cfg(test)]
@@ -492,5 +920,111 @@ mod tests {
         let r1 = w.observe(&nodes, 0, true).unwrap();
         assert_eq!(r1.round, 1);
         assert!(r1.train_loss.is_nan());
+    }
+
+    #[test]
+    fn consensus_wire_round_trips_and_observes_identically() {
+        let init = vec![vec![1.0, -2.5], vec![0.25, 9.0], vec![3.0, 0.0]];
+        let w = ConsensusWorkload::new(init.clone());
+        // Spec round trip.
+        let spec = w.wire_spec().expect("consensus is always wire-capable");
+        match decode_wire_spec(&spec).unwrap() {
+            DecodedSpec::Consensus { init: back } => assert_eq!(back, init),
+            _ => panic!("wrong spec kind"),
+        }
+        // Payload codec is exact.
+        let p = w.payload_to_wire(&init[1]).unwrap();
+        assert_eq!(w.payload_from_wire(&p).unwrap(), init[1]);
+        assert!(w.payload_from_wire(&p[..p.len() - 1]).is_err());
+        // observe_wire over encoded snapshots == observe over the values.
+        let obs: Vec<Vec<u8>> = init
+            .iter()
+            .map(|x| w.node_to_wire(x, true).unwrap())
+            .collect();
+        let a = w.observe(&init, 4, true).unwrap();
+        let b = w.observe_wire(&obs, 4, true).unwrap();
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.consensus_error, b.consensus_error);
+        let r0 = w.initial_record_wire(&obs).unwrap().unwrap();
+        assert_eq!(r0.round, 0);
+        assert_eq!(w.finals_wire(&obs).unwrap(), init);
+    }
+
+    #[test]
+    fn training_spec_round_trips_config_and_recipe() {
+        let cfg = TrainConfig {
+            rounds: 17,
+            lr: 0.325,
+            warmup: 3,
+            cosine: false,
+            optimizer: OptimizerKind::QgDsgdm { momentum: 0.85 },
+            eval_every: 4,
+            threads: 2,
+            cost: CostModel { alpha: 3.5e-4, beta: 1.25e-9 },
+        };
+        let (model, data) = quadratic_fixed_targets(4, 3, 12);
+        let w = TrainingWorkload::new(&model, &cfg, data, &[]);
+        assert!(w.wire_spec().is_none(), "no spec until with_wire");
+        let w = w.with_wire(TrainSpec::Quadratic { d: 3, seed: 12 });
+        let bytes = w.wire_spec().unwrap();
+        match decode_wire_spec(&bytes).unwrap() {
+            DecodedSpec::Training { spec, cfg: back } => {
+                assert_eq!(spec, TrainSpec::Quadratic { d: 3, seed: 12 });
+                assert_eq!(back.rounds, cfg.rounds);
+                assert_eq!(back.lr, cfg.lr);
+                assert_eq!(back.warmup, cfg.warmup);
+                assert_eq!(back.cosine, cfg.cosine);
+                assert_eq!(back.eval_every, cfg.eval_every);
+                assert_eq!(back.threads, cfg.threads);
+                assert_eq!(back.cost.alpha, cfg.cost.alpha);
+                assert_eq!(back.cost.beta, cfg.cost.beta);
+                match back.optimizer {
+                    OptimizerKind::QgDsgdm { momentum } => {
+                        assert_eq!(momentum, 0.85)
+                    }
+                    _ => panic!("optimizer did not round-trip"),
+                }
+            }
+            _ => panic!("wrong spec kind"),
+        }
+        // The classification recipe round-trips too.
+        let spec = TrainSpec::Classification {
+            engine: "native-linear".into(),
+            alpha: 0.1,
+            seed: 7,
+        };
+        let mut bw = ByteWriter::new();
+        spec.encode(&mut bw);
+        let bytes = bw.finish();
+        let mut br = ByteReader::new(&bytes);
+        assert_eq!(TrainSpec::decode(&mut br).unwrap(), spec);
+        br.expect_end().unwrap();
+    }
+
+    #[test]
+    fn training_payload_and_obs_codecs_are_exact() {
+        let cfg = TrainConfig { threads: 1, ..Default::default() };
+        let (model, data) = quadratic_fixed_targets(2, 3, 1);
+        let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+        let mut nodes = w.init_nodes(2).unwrap();
+        w.local_step(&mut nodes[0], 0, 0).unwrap();
+        w.local_step(&mut nodes[1], 1, 0).unwrap();
+        // Payload (possibly multi-slot) survives the wire bit-for-bit.
+        let p = w.make_payload(&nodes[0]);
+        let bytes = w.payload_to_wire(&p).unwrap();
+        assert_eq!(w.payload_from_wire(&bytes).unwrap(), p);
+        // Cheap snapshot carries the loss; full snapshot adds params.
+        let cheap = w.node_to_wire(&nodes[0], false).unwrap();
+        let full = w.node_to_wire(&nodes[0], true).unwrap();
+        assert!(full.len() > cheap.len());
+        let obs = vec![full.clone(), w.node_to_wire(&nodes[1], true).unwrap()];
+        let rec = w.observe_wire(&obs, 0, true).unwrap();
+        let direct = w.observe(&nodes, 0, true).unwrap();
+        assert_eq!(rec.train_loss, direct.train_loss);
+        assert_eq!(rec.consensus_error, direct.consensus_error);
+        assert_eq!(w.finals_wire(&obs).unwrap(), w.finals(&nodes));
+        // An eval observe over cheap snapshots is a clean error.
+        let err = w.observe_wire(&[cheap.clone(), cheap], 0, true);
+        assert!(err.unwrap_err().contains("missing node params"));
     }
 }

@@ -11,8 +11,10 @@
 //!   sparse per-node [`GossipPlan`]s, the O(edges·d) gossip engine, the
 //!   [`exec`] execution layer (one [`Workload`] contract over the
 //!   analytic loop, the [`simnet`] discrete-event network simulator —
-//!   stragglers, lossy and heterogeneous links, asynchronous gossip — and
-//!   a thread-parallel backend with measured wall-clock),
+//!   stragglers, lossy and heterogeneous links, asynchronous gossip — a
+//!   thread-parallel backend with measured wall-clock, and a
+//!   process-parallel backend: one OS worker process per node shard,
+//!   gossip over real sockets, with exact measured bytes-on-the-wire),
 //!   decentralized optimizers (DSGD, DSGDm, QG-DSGDm, D²), data
 //!   partitioning (Dirichlet heterogeneity), metrics and the CLI. Dense
 //!   [`MixingMatrix`] views are derived on demand (`plan.to_dense()`) for
@@ -26,6 +28,12 @@
 //!
 //! Python never runs on the training path: the Rust binary loads the
 //! artifacts with the PJRT C API (`xla` crate) and drives everything.
+//!
+//! The architecture book — layered tour, execution-backend walkthroughs
+//! (including "how to add a backend", worked on
+//! [`ProcessExecutor`](exec::ProcessExecutor)), determinism/equivalence
+//! rules and the full CLI reference — lives in `docs/ARCHITECTURE.md`
+//! at the repository root.
 
 pub mod comm;
 pub mod consensus;

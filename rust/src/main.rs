@@ -33,22 +33,31 @@ USAGE:
   basegraph consensus --n <n> [--iters I] [--topos a,b,c] [--out results]
   basegraph train     --topo <name> --n <n> [--alpha A] [--rounds R]
                       [--lr LR] [--optimizer dsgd|dsgdm|qg-dsgdm|d2|gt]
+                      [--momentum M] [--seed S]
                       [--engine native-mlp|native-linear|pjrt:mlp:ref]
-                      [--executor analytic|simnet|threaded] [--threads N]
+                      [--executor analytic|simnet|threaded|process]
+                      [--threads N] [--shards N]
+                      [--shard-balance contiguous|degree]
                       [--net-alpha SEC] [--net-beta SEC_PER_BYTE]
                       [--out results]
   basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
                       [--mode bsp|async] [--workload consensus|train]
-                      [--executor analytic|simnet|threaded] [--threads N]
+                      [--executor analytic|simnet|threaded|process]
+                      [--threads N] [--shards N]
+                      [--shard-balance contiguous|degree]
                       [--topos a,b,c] [--n N] [--seed S] [--out results]
                       [--alpha SEC] [--beta SEC_PER_BYTE] [--drop-rate P]
                       [--straggler-factor F]
                       consensus: [--iters I] [--tol T]
                       train:     [--rounds R] [--lr LR] [--optimizer O]
-                                 [--engine E] [--dirichlet A] [--target-acc T]
-  basegraph repro     --exp <id> [--fast] [--engine E] [--n N] [--ns a,b]
+                                 [--momentum M] [--engine E] [--dirichlet A]
+                                 [--target-acc T]
+  basegraph repro     --exp <id> [--fast] [--engine E] [--engine-deep E]
+                      [--n N] [--ns a,b]
                       [--rounds R] [--seed S] [--out results]
-                      [--executor analytic|simnet|threaded] [--threads N]
+                      [--executor analytic|simnet|threaded|process]
+                      [--threads N] [--shards N]
+                      [--shard-balance contiguous|degree]
   basegraph info      [--artifacts DIR]
 
 Topology names: ring, torus, exp, onepeer-exp, onepeer-hypercube, complete,
@@ -58,13 +67,29 @@ Experiments: table1 table2 equistatic fig5 fig6 fig7 fig8 fig9 fig21 fig22
   fig23 fig25 fig26 frontier simnet all
 Executors: analytic (ideal lock-step loop, α–β model clock), simnet
   (event-driven network simulator), threaded (one node per worker thread —
-  measured wall-clock); --threads 0 = all cores.
+  measured wall-clock), process (one worker OS process per node shard,
+  gossip over real sockets — measured wall-clock and bytes-on-wire);
+  --threads 0 = all cores; --shards N = worker processes (process backend).
 Notes: in `simnet`, --alpha/--beta are the per-link α–β cost overrides and
   --dirichlet is the data-heterogeneity knob; in `train`, --alpha keeps its
-  historical Dirichlet meaning and --net-alpha/--net-beta set the α–β cost.";
+  historical Dirichlet meaning and --net-alpha/--net-beta set the α–β cost.
+Docs: docs/ARCHITECTURE.md is the full tour (layers, backends, wire
+  protocol, determinism rules) with a complete CLI flag reference.
+Help: `basegraph --help` (or any subcommand with --help) prints this.";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
+    // Hidden re-exec mode of the process-parallel executor: the
+    // coordinator spawns `basegraph --worker <addr> <shard>` per node
+    // shard. Deliberately not in USAGE — it is an implementation detail
+    // of `--executor process`, not a user-facing command.
+    if raw.first().map(|s| s.as_str()) == Some("--worker") {
+        if let Err(e) = basegraph::exec::process::worker_main(&raw[1..]) {
+            eprintln!("worker error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
         println!("{USAGE}");
         return;
@@ -289,10 +314,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         beta: args.f64_or("net-beta", default_cost.beta)?,
     };
     // Execution backend: ideal analytic loop (default), event-driven
-    // simnet, or real threads with measured wall-clock.
-    let exec = ExecutorKind::parse(&args.str_or("executor", "analytic"))?
-        .with_threads(args.usize_or("threads", 0)?)
-        .with_cost(cost);
+    // simnet, real threads, or one worker process per node shard.
+    let exec = ExecutorKind::from_args(args, "analytic")?.with_cost(cost);
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let workload = classification_workload(&engine, seed)?;
@@ -409,14 +432,14 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
         &["ring", "exp", "onepeer-exp", "base-2", "base-4"],
     );
     // Backend selection: the event-driven simulator is the default here;
-    // `--executor analytic|threaded` races the same workload on the ideal
-    // lock-step loop or on real threads. The lock-step backends inherit
-    // the scenario's α–β link cost (worst link class, with any
-    // --alpha/--beta overrides already applied) so the sim-seconds column
-    // stays comparable to an event-driven run of the same scenario; they
-    // are inherently bulk-synchronous, so async mode is rejected.
-    let exec = ExecutorKind::parse(&args.str_or("executor", "simnet"))?
-        .with_threads(args.usize_or("threads", 0)?);
+    // `--executor analytic|threaded|process` races the same workload on
+    // the ideal lock-step loop, on real threads, or on real worker
+    // processes. The lock-step backends inherit the scenario's α–β link
+    // cost (worst link class, with any --alpha/--beta overrides already
+    // applied) so the sim-seconds column stays comparable to an
+    // event-driven run of the same scenario; they are inherently
+    // bulk-synchronous, so async mode is rejected.
+    let exec = ExecutorKind::from_args(args, "simnet")?;
     let lockstep_cost = match &sim.links {
         LinkModel::Uniform(c) => *c,
         LinkModel::Racks { remote, .. } => *remote,

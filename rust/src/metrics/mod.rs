@@ -17,6 +17,9 @@ pub struct RoundRecord {
     /// Cumulative communication.
     pub cum_messages: u64,
     pub cum_bytes: u64,
+    /// Cumulative *measured* serialized socket bytes (process backend;
+    /// 0 on in-process backends) — see `CommLedger::bytes_on_wire`.
+    pub cum_wire_bytes: u64,
     pub sim_seconds: f64,
     /// Measured wall-clock seconds since the run started (0 for paths
     /// that predate the executor layer).
@@ -33,6 +36,7 @@ impl RoundRecord {
             "test_acc",
             "cum_messages",
             "cum_bytes",
+            "cum_wire_bytes",
             "sim_seconds",
             "wall_seconds",
         ]
@@ -47,6 +51,7 @@ impl RoundRecord {
             format!("{:.4}", self.test_acc),
             self.cum_messages.to_string(),
             self.cum_bytes.to_string(),
+            self.cum_wire_bytes.to_string(),
             format!("{:.6}", self.sim_seconds),
             format!("{:.6}", self.wall_seconds),
         ]
@@ -61,6 +66,7 @@ impl RoundRecord {
             ("test_acc", Json::num(self.test_acc)),
             ("cum_messages", Json::num(self.cum_messages as f64)),
             ("cum_bytes", Json::num(self.cum_bytes as f64)),
+            ("cum_wire_bytes", Json::num(self.cum_wire_bytes as f64)),
             ("sim_seconds", Json::num(self.sim_seconds)),
             ("wall_seconds", Json::num(self.wall_seconds)),
         ])

@@ -65,6 +65,18 @@ pub enum Engine {
 }
 
 impl Engine {
+    /// The CLI spelling that [`Engine::parse`] round-trips — also the
+    /// engine's identity in a process-backend wire spec, which is how a
+    /// worker process rebuilds the exact same gradient provider.
+    pub fn cli_name(&self) -> String {
+        match self {
+            Engine::NativeLinear => "native-linear".into(),
+            Engine::NativeMlp => "native-mlp".into(),
+            Engine::NativeMlpDeep => "native-mlp-deep".into(),
+            Engine::Pjrt(model, variant) => format!("pjrt:{model}:{variant}"),
+        }
+    }
+
     pub fn parse(s: &str) -> Result<Engine, String> {
         match s {
             "native-linear" => Ok(Engine::NativeLinear),
@@ -92,6 +104,9 @@ pub struct TrainWorkload {
     pub train_count: usize,
     pub batch_size: usize,
     pub eval_batches: Vec<Batch>,
+    /// CLI name of the engine this workload was built from — the recipe
+    /// a process-backend worker replays ([`Engine::cli_name`]).
+    pub engine: String,
 }
 
 /// Build the synthetic Fig-7 workload for the given engine.
@@ -134,6 +149,7 @@ pub fn classification_workload(
                 train_count: n_train,
                 batch_size: 32,
                 eval_batches,
+                engine: engine.cli_name(),
             })
         }
         Engine::Pjrt(model, variant) => {
@@ -181,6 +197,7 @@ pub fn classification_workload(
                 train_count: n_train,
                 batch_size,
                 eval_batches,
+                engine: engine.cli_name(),
             })
         }
     }
@@ -261,7 +278,15 @@ pub fn run_training_exec(
         &cfg,
         node_data,
         &workload.eval_batches,
-    );
+    )
+    // The (engine, alpha, seed) triple is exactly how `node_data` above
+    // was derived, so a process-backend worker can replay it; the
+    // in-process backends ignore the spec.
+    .with_wire(crate::exec::TrainSpec::Classification {
+        engine: workload.engine.clone(),
+        alpha,
+        seed,
+    });
     exec.run(&mut w, &seq, cfg.rounds)
 }
 
@@ -321,6 +346,10 @@ mod tests {
             _ => panic!(),
         }
         assert!(Engine::parse("wat").is_err());
+        // cli_name is the parse-stable identity a worker process replays.
+        for name in ["native-linear", "native-mlp", "pjrt:cnn:pallas"] {
+            assert_eq!(Engine::parse(name).unwrap().cli_name(), name);
+        }
     }
 
     #[test]

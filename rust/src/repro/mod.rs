@@ -30,9 +30,9 @@ pub fn run(args: &Args) -> Result<(), String> {
     let engine_deep =
         Engine::parse(&args.str_or("engine-deep", "native-mlp-deep"))?;
     // Which execution backend the training sweeps run on
-    // (`--executor analytic|simnet|threaded`, `--threads N`).
-    let exec = ExecutorKind::parse(&args.str_or("executor", "analytic"))?
-        .with_threads(args.usize_or("threads", 0)?);
+    // (`--executor analytic|simnet|threaded|process`, `--threads N`,
+    // `--shards N`, `--shard-balance contiguous|degree`).
+    let exec = ExecutorKind::from_args(args, "analytic")?;
     // The paper repeats each training run over 3 seeds.
     let seeds: Vec<u64> = if fast {
         vec![seed]

@@ -66,6 +66,9 @@ pub fn simnet_sweep(
                     format!("{:.6e}", tr.final_error()),
                     format!("{:.6e}", tr.sim_seconds()),
                     tr.messages().to_string(),
+                    // Measured serialized bytes: 0 on the event-driven
+                    // backend, real frame bytes under --executor process.
+                    tr.ledger.bytes_on_wire.to_string(),
                     tr.drops.to_string(),
                 ]);
             }
@@ -101,6 +104,7 @@ pub fn simnet_sweep(
             "err_end",
             "sim_seconds",
             "messages",
+            "bytes_on_wire",
             "drops",
         ],
         &csv,

@@ -36,7 +36,7 @@
 //!   └────────────────────────────────────────────────────────────┘
 //!                │
 //!                ▼
-//!   CommLedger (event-clock seconds) + RoundRecord / SimTrace
+//!   CommLedger (event-clock seconds) + RoundRecord / ExecTrace
 //!   (time-to-target-accuracy, per-iteration consensus error)
 //! ```
 //!
@@ -47,7 +47,7 @@
 //!   delivered, then all nodes mix. Under the ideal network (zero latency,
 //!   zero loss, instant compute) this reproduces the analytic backend's
 //!   trajectory *bit-exactly* — the event engine is a strict
-//!   generalization, which the equivalence tests in `driver.rs` and
+//!   generalization, which the equivalence tests in `exec/simnet.rs` and
 //!   `tests/exec_equivalence.rs` pin down.
 //! * **Asynchronous / local-steps** ([`ExecMode::Async`]) — no barriers:
 //!   when a node finishes local compute it gossips with whatever neighbor
@@ -66,18 +66,20 @@
 //! Everything — straggler subset, compute jitter, drop coin-flips, event
 //! order — derives from `SimConfig::seed`. Identical seed ⇒ identical
 //! event trace and identical final parameters; see
-//! `identical_seed_identical_trace_and_params` in `driver.rs`.
+//! `identical_seed_identical_trace_and_params` in `exec/simnet.rs`.
+//!
+//! **Migration note.** The event loop itself lives in
+//! [`exec::SimnetExecutor`](crate::exec::SimnetExecutor), which runs any
+//! [`exec::Workload`](crate::exec::Workload). The pre-executor drivers
+//! (`sim_consensus`, `sim_train`) and their `SimTrace`/`SimRunResult`
+//! result shapes served their one-release deprecation window and are
+//! gone; the unified [`ExecTrace`](crate::exec::ExecTrace) carries the
+//! same information with total, consistent accessors.
 
-pub mod driver;
 pub mod event;
 pub mod net;
 pub mod scenario;
 
-// The event loop itself lives in `exec::SimnetExecutor`; these re-exports
-// keep the one-release deprecated wrappers reachable at their old paths.
-#[allow(deprecated)]
-pub use driver::{sim_consensus, sim_train};
-pub use driver::{SimRunResult, SimTrace};
 pub use event::{Event, EventKind, EventQueue, Trace};
 pub use net::{ComputeModel, LinkModel, NetworkModel};
 pub use scenario::Scenario;

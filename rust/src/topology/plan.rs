@@ -141,6 +141,45 @@ impl GossipPlan {
         GossipPlan { n, offsets, entries, self_w }
     }
 
+    /// Reassemble a plan from peer-sorted per-node rows and *explicit*
+    /// self-weights — the wire-deserialization path (`exec::wire`). Unlike
+    /// the public constructors this does not re-derive the diagonal as
+    /// `1 − Σw`: the stored bits are taken verbatim, so a plan that
+    /// crossed a process boundary is bit-identical to the original.
+    pub(crate) fn from_parts(
+        n: usize,
+        rows: Vec<Vec<(usize, f64)>>,
+        self_w: Vec<f64>,
+    ) -> Result<GossipPlan, String> {
+        if rows.len() != n || self_w.len() != n {
+            return Err(format!(
+                "from_parts: {} rows / {} self-weights for n = {n}",
+                rows.len(),
+                self_w.len()
+            ));
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut entries = Vec::new();
+        offsets.push(0);
+        for (i, row) in rows.into_iter().enumerate() {
+            let mut prev: Option<usize> = None;
+            for &(j, _) in &row {
+                if j >= n || j == i {
+                    return Err(format!("from_parts: bad peer {j} in row {i}"));
+                }
+                if prev.is_some_and(|p| p >= j) {
+                    return Err(format!(
+                        "from_parts: row {i} is not strictly peer-sorted"
+                    ));
+                }
+                prev = Some(j);
+            }
+            entries.extend(row);
+            offsets.push(entries.len());
+        }
+        Ok(GossipPlan { n, offsets, entries, self_w })
+    }
+
     /// Number of nodes.
     pub fn n(&self) -> usize {
         self.n

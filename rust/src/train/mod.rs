@@ -2,15 +2,14 @@
 //! the f32 gossip-combine kernel shared by every execution backend, and
 //! evaluation helpers.
 //!
-//! **Migration note.** The round protocol itself now lives in
+//! **Migration note.** The round protocol itself lives in
 //! [`exec::TrainingWorkload`](crate::exec::TrainingWorkload) and runs on
 //! any [`exec::Executor`](crate::exec::Executor) backend — analytic,
-//! event-driven simnet, or thread-parallel. [`train()`] survives one
-//! release as a thin deprecated wrapper equivalent to running a
-//! `TrainingWorkload` on an
-//! [`AnalyticExecutor`](crate::exec::AnalyticExecutor); port callers to
-//! the executor API to pick backends (and to read measured wall-clock
-//! from the returned [`ExecTrace`](crate::exec::ExecTrace)).
+//! event-driven simnet, thread-parallel, or process-parallel. The old
+//! `train()` wrapper served its one-release deprecation window and is
+//! gone: build a `TrainingWorkload` and pick a backend (the returned
+//! [`ExecTrace`](crate::exec::ExecTrace) carries the per-round records
+//! plus simulated and measured clocks).
 //!
 //! Gossip walks each node's [`GossipPlan`](crate::topology::GossipPlan)
 //! neighbor list — O(degree · d) per node per round — so per-round cost
@@ -19,13 +18,10 @@
 pub mod node_data;
 
 use crate::comm::CostModel;
-use crate::exec::{AnalyticExecutor, Executor, TrainingWorkload};
-use crate::metrics::RunResult;
 use crate::optim::OptimizerKind;
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::GradProvider;
-use crate::topology::{GossipPlan, GraphSequence};
-use node_data::NodeData;
+use crate::topology::GossipPlan;
 
 /// One node's f32 gossip combine over `plan`'s neighbor list, with
 /// optimizer damping λ (the engine mixes with W̃ = (1−λ)W + λI) and
@@ -135,27 +131,6 @@ impl TrainConfig {
     }
 }
 
-/// Run decentralized training of `provider` over `seq` on the ideal
-/// analytic backend.
-///
-/// `node_data[i]` supplies node i's batches; `eval_batches` are evaluated
-/// on the node-averaged model at eval points.
-#[deprecated(
-    note = "use exec::TrainingWorkload with an exec::Executor backend \
-            (this wrapper runs AnalyticExecutor and drops the ExecTrace)"
-)]
-pub fn train(
-    provider: &dyn GradProvider,
-    seq: &GraphSequence,
-    node_data: Vec<Box<dyn NodeData>>,
-    eval_batches: &[Batch],
-    cfg: &TrainConfig,
-) -> Result<RunResult, String> {
-    let mut w = TrainingWorkload::new(provider, cfg, node_data, eval_batches);
-    let exec = AnalyticExecutor::new(cfg.cost, cfg.threads);
-    Ok(exec.run(&mut w, seq, cfg.rounds)?.run)
-}
-
 /// Node-averaged parameter vector (f64 accumulation in node order) — the
 /// model that gets evaluated at eval points, shared with the simnet
 /// drivers so both paths average identically.
@@ -197,15 +172,31 @@ pub fn evaluate(
 }
 
 #[cfg(test)]
-// The wrapper IS what these tests pin — they exercise the deprecated
-// entry point against the executor-backed implementation.
-#[allow(deprecated)]
 mod tests {
-    use super::node_data::FixedBatch;
+    use super::node_data::{FixedBatch, NodeData};
     use super::*;
+    use crate::exec::{AnalyticExecutor, Executor, TrainingWorkload};
+    use crate::metrics::RunResult;
     use crate::runtime::provider::QuadraticModel;
-    use crate::topology::{base, baselines};
+    use crate::topology::{base, baselines, GraphSequence};
     use crate::util::rng::Rng;
+
+    /// The executor-backed equivalent of the removed `train()` wrapper:
+    /// run a [`TrainingWorkload`] on the analytic backend and keep the
+    /// per-round records. These tests pin the training-layer *behavior*
+    /// (convergence, optimizer coverage, determinism) on that path.
+    fn run_train(
+        provider: &dyn GradProvider,
+        seq: &GraphSequence,
+        node_data: Vec<Box<dyn NodeData>>,
+        eval_batches: &[Batch],
+        cfg: &TrainConfig,
+    ) -> Result<RunResult, String> {
+        let mut w =
+            TrainingWorkload::new(provider, cfg, node_data, eval_batches);
+        let exec = AnalyticExecutor::new(cfg.cost, cfg.threads);
+        Ok(exec.run(&mut w, seq, cfg.rounds)?.run)
+    }
 
     /// Quadratic decentralized problem: node i minimizes 0.5||x − c_i||²;
     /// the global optimum is mean(c_i). DSGD over a finite-time topology
@@ -264,7 +255,7 @@ mod tests {
             threads: 2,
             ..Default::default()
         };
-        let res = train(&model, &seq, data, &[], &cfg).unwrap();
+        let res = run_train(&model, &seq, data, &[], &cfg).unwrap();
         let last = res.records.last().unwrap();
         let opt = optimum(&targets);
         let opt_loss: f64 = targets
@@ -309,7 +300,7 @@ mod tests {
                 threads: 2,
                 ..Default::default()
             };
-            train(&model, seq, data, &[], &cfg)
+            run_train(&model, seq, data, &[], &cfg)
                 .unwrap()
                 .records
                 .last()
@@ -346,7 +337,7 @@ mod tests {
                 threads: 1,
                 ..Default::default()
             };
-            let res = train(&model, &seq, data, &[], &cfg).unwrap();
+            let res = run_train(&model, &seq, data, &[], &cfg).unwrap();
             let last = res.records.last().unwrap();
             assert!(
                 last.train_loss.is_finite(),
@@ -378,7 +369,7 @@ mod tests {
                 threads: 1,
                 ..Default::default()
             };
-            train(&model, &seq, data, &[], &cfg)
+            run_train(&model, &seq, data, &[], &cfg)
                 .unwrap()
                 .records
                 .last()
@@ -484,7 +475,7 @@ mod tests {
                 threads,
                 ..Default::default()
             };
-            train(&model, &seq, data, &[], &cfg)
+            run_train(&model, &seq, data, &[], &cfg)
                 .unwrap()
                 .records
                 .last()

@@ -1,27 +1,37 @@
 //! Cross-executor equivalence: the executor-layer guarantee, pinned.
 //!
-//! Same seed ⇒ `AnalyticExecutor`, `SimnetExecutor` (ideal BSP network)
-//! and `ThreadedExecutor` produce **bit-identical** final per-node state,
-//! for both shipped workloads (consensus vectors and DSGD training), at
-//! n ∈ {8, 64}. This is what makes measurements comparable across
-//! backends: any wall-clock or event-clock difference is attributable to
-//! the backend, never to the arithmetic.
+//! Same seed ⇒ `AnalyticExecutor`, `SimnetExecutor` (ideal BSP network),
+//! `ThreadedExecutor` and `ProcessExecutor` (real worker processes,
+//! gossip over real sockets) produce **bit-identical** final per-node
+//! state, for both shipped workloads (consensus vectors and DSGD
+//! training), at n ∈ {8, 64}. This is what makes measurements comparable
+//! across backends: any wall-clock, event-clock or bytes-on-wire
+//! difference is attributable to the backend, never to the arithmetic.
 
 use basegraph::consensus::gaussian_init;
-use basegraph::exec::{ConsensusWorkload, ExecTrace, ExecutorKind, TrainingWorkload};
+use basegraph::exec::{
+    quadratic_fixed_targets, ConsensusWorkload, ExecTrace, ExecutorKind,
+    TrainSpec, TrainingWorkload,
+};
 use basegraph::optim::OptimizerKind;
-use basegraph::runtime::provider::QuadraticModel;
 use basegraph::simnet::SimConfig;
 use basegraph::topology::TopologyKind;
-use basegraph::train::node_data::{FixedBatch, NodeData};
 use basegraph::train::TrainConfig;
 use basegraph::util::rng::Rng;
+
+/// The process backend re-execs the `basegraph` CLI binary for its
+/// workers; a test harness binary is not it, so point there explicitly.
+fn process_backend(shards: usize) -> ExecutorKind {
+    ExecutorKind::process(shards)
+        .with_worker_bin(env!("CARGO_BIN_EXE_basegraph"))
+}
 
 fn backends() -> Vec<ExecutorKind> {
     vec![
         ExecutorKind::analytic(),
         ExecutorKind::Simnet(SimConfig::ideal()),
         ExecutorKind::threaded(4),
+        process_backend(2),
     ]
 }
 
@@ -65,24 +75,6 @@ fn consensus_final_state_is_bit_identical_across_backends() {
     }
 }
 
-fn quadratic_data(
-    n: usize,
-    d: usize,
-    seed: u64,
-) -> (QuadraticModel, Vec<Box<dyn NodeData>>) {
-    let mut rng = Rng::new(seed);
-    let model = QuadraticModel::new(d);
-    let data: Vec<Box<dyn NodeData>> = (0..n)
-        .map(|_| {
-            let c: Vec<f32> =
-                (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
-            Box::new(FixedBatch::new(QuadraticModel::target_batch(c)))
-                as Box<dyn NodeData>
-        })
-        .collect();
-    (model, data)
-}
-
 #[test]
 fn training_final_params_are_bit_identical_across_backends() {
     for n in [8usize, 64] {
@@ -99,9 +91,11 @@ fn training_final_params_are_bit_identical_across_backends() {
         };
         let run = |exec: &ExecutorKind| -> ExecTrace {
             // A TrainingWorkload is consumed by its run: fresh data (same
-            // seed) per backend.
-            let (model, data) = quadratic_data(n, 5, 3);
-            let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+            // seed) per backend. The wire spec names the same recipe, so
+            // process-backend workers rebuild identical streams.
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                .with_wire(TrainSpec::Quadratic { d: 5, seed: 3 });
             exec.run(&mut w, &seq, cfg.rounds).unwrap()
         };
         let runs: Vec<ExecTrace> = backends().iter().map(run).collect();

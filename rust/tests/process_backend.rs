@@ -1,0 +1,173 @@
+//! Process-backend specifics beyond cross-backend equivalence: real
+//! sockets on both transports, shard strategies, the ledger's measured
+//! bytes-on-wire column, and the failure paths (worker crash, workloads
+//! with no wire form) surfacing as clean errors instead of hangs.
+
+use std::time::Duration;
+
+use basegraph::comm::CostModel;
+use basegraph::consensus::gaussian_init;
+use basegraph::exec::{
+    quadratic_fixed_targets, AnalyticExecutor, ConsensusWorkload, Executor,
+    ProcessExecutor, TrainSpec, TrainingWorkload,
+};
+use basegraph::optim::OptimizerKind;
+use basegraph::topology::TopologyKind;
+use basegraph::train::TrainConfig;
+use basegraph::util::rng::Rng;
+
+fn process(shards: usize) -> ProcessExecutor {
+    ProcessExecutor::new(CostModel::default(), shards)
+        .with_worker_bin(env!("CARGO_BIN_EXE_basegraph"))
+}
+
+/// The acceptance scenario: a 2-shard n = 64 *training* run completes
+/// over real sockets, bit-identical to the analytic backend, with the
+/// ledger's model columns equal and the measured wire column nonzero.
+#[test]
+fn two_shard_training_at_n64_over_real_sockets() {
+    let n = 64;
+    let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 10,
+        lr: 0.2,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 5,
+        threads: 1,
+        ..Default::default()
+    };
+    let fresh = || {
+        let (model, data) = quadratic_fixed_targets(n, 6, 5);
+        (model, data)
+    };
+    let (model, data) = fresh();
+    let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+        .with_wire(TrainSpec::Quadratic { d: 6, seed: 5 });
+    let p = process(2).run(&mut w, &seq, cfg.rounds).unwrap();
+    assert_eq!(p.backend, "process");
+    assert_eq!(p.n, n);
+    assert!(p.wall_seconds > 0.0);
+    // Real serialized frames crossed a socket — measured, not modeled.
+    assert!(p.ledger.bytes_on_wire > 0);
+    // Per-round cumulative wire bytes are monotone and bounded by the
+    // final total (which also counts the finals/shutdown frames sent
+    // after the last round).
+    let last = p.run.records.last().unwrap();
+    assert!(last.cum_wire_bytes > 0);
+    assert!(last.cum_wire_bytes <= p.ledger.bytes_on_wire);
+    for wpair in p.run.records.windows(2) {
+        assert!(wpair[1].cum_wire_bytes >= wpair[0].cum_wire_bytes);
+    }
+
+    let (model, data) = fresh();
+    let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+    let a = AnalyticExecutor::new(cfg.cost, 1)
+        .run(&mut w, &seq, cfg.rounds)
+        .unwrap();
+    assert_eq!(a.finals, p.finals, "process must be bit-identical");
+    // The α–β model columns agree exactly; only measured columns differ.
+    assert_eq!(a.ledger.messages, p.ledger.messages);
+    assert_eq!(a.ledger.bytes, p.ledger.bytes);
+    assert_eq!(a.ledger.sim_seconds, p.ledger.sim_seconds);
+    assert_eq!(a.ledger.bytes_on_wire, 0);
+    for (x, y) in a.run.records.iter().zip(&p.run.records) {
+        assert_eq!(x.train_loss, y.train_loss);
+    }
+}
+
+#[test]
+fn tcp_loopback_fallback_matches_uds() {
+    let n = 12;
+    let seq = TopologyKind::Base { m: 3 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(4);
+    let init = gaussian_init(n, 3, &mut rng);
+    let iters = 2 * seq.len();
+    let run = |force_tcp: bool| {
+        let mut ex = process(3);
+        ex.force_tcp = force_tcp;
+        ex.run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+            .unwrap()
+    };
+    let uds = run(false);
+    let tcp = run(true);
+    assert_eq!(uds.finals, tcp.finals);
+    assert_eq!(uds.errors(), tcp.errors());
+    // Same protocol, same frames — the transport does not change what
+    // crosses the wire.
+    assert_eq!(uds.ledger.bytes_on_wire, tcp.ledger.bytes_on_wire);
+}
+
+#[test]
+fn degree_balanced_sharding_is_bit_identical_to_contiguous() {
+    let n = 21;
+    let seq = TopologyKind::Exp.build(n, 0).unwrap();
+    let mut rng = Rng::new(9);
+    let init = gaussian_init(n, 2, &mut rng);
+    let run = |balanced: bool| {
+        process(4)
+            .with_balanced(balanced)
+            .run(&mut ConsensusWorkload::new(init.clone()), &seq, 12)
+            .unwrap()
+    };
+    let contiguous = run(false);
+    let balanced = run(true);
+    // Placement is invisible to the arithmetic.
+    assert_eq!(contiguous.finals, balanced.finals);
+    assert_eq!(contiguous.errors(), balanced.errors());
+}
+
+#[test]
+fn shard_count_clamps_to_n() {
+    let n = 5;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(3);
+    let init = gaussian_init(n, 1, &mut rng);
+    let tr = process(16)
+        .run(&mut ConsensusWorkload::new(init.clone()), &seq, seq.len())
+        .unwrap();
+    let a = AnalyticExecutor::serial()
+        .run(&mut ConsensusWorkload::new(init), &seq, seq.len())
+        .unwrap();
+    assert_eq!(tr.finals, a.finals);
+}
+
+/// The crash satellite: a worker that dies mid-run (fault injection, no
+/// goodbye frame) becomes a clean coordinator error naming the shard —
+/// within the io timeout, never a hang.
+#[test]
+fn worker_crash_surfaces_clean_error_not_hang() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(6);
+    let init = gaussian_init(n, 2, &mut rng);
+    let mut ex = process(2);
+    ex.io_timeout = Duration::from_secs(30);
+    ex.fault_crash = Some((1, 1)); // shard 1 aborts entering round 1
+    let t0 = std::time::Instant::now();
+    let err = ex
+        .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
+        .unwrap_err();
+    assert!(
+        err.contains("shard 1") || err.contains("worker"),
+        "error should name the failing worker: {err:?}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(25),
+        "crash detection must not eat the whole timeout"
+    );
+}
+
+#[test]
+fn workload_without_wire_form_is_refused_cleanly() {
+    // A TrainingWorkload with no wire spec cannot cross a process
+    // boundary; the backend must say so before spawning anything.
+    let n = 4;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig { rounds: 3, threads: 1, ..Default::default() };
+    let (model, data) = quadratic_fixed_targets(n, 2, 0);
+    let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+    let err = process(2).run(&mut w, &seq, cfg.rounds).unwrap_err();
+    assert!(err.contains("wire"), "got {err:?}");
+}

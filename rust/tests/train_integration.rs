@@ -1,21 +1,36 @@
 //! Integration: full decentralized training runs across modules —
-//! topology × data partition × optimizer × (native | PJRT) provider.
-//!
-//! Deliberately drives the deprecated `train::train` wrapper during the
-//! migration window — it must keep producing executor-backed results.
-#![allow(deprecated)]
+//! topology × data partition × optimizer × (native | PJRT) provider,
+//! driven through the executor API (`TrainingWorkload` on
+//! `AnalyticExecutor` — the path the removed `train::train` wrapper used
+//! to delegate to).
 
 use std::sync::Arc;
 
 use basegraph::data::partition::dirichlet_partition;
 use basegraph::data::synth::gaussian_mixture;
+use basegraph::exec::{AnalyticExecutor, Executor, TrainingWorkload};
+use basegraph::metrics::RunResult;
 use basegraph::optim::OptimizerKind;
 use basegraph::runtime::provider::{GradProvider, SoftmaxRegression};
 use basegraph::runtime::{Batch, Features, PjrtModel};
-use basegraph::topology::TopologyKind;
+use basegraph::topology::{GraphSequence, TopologyKind};
 use basegraph::train::node_data::{ClassificationShard, NodeData};
-use basegraph::train::{train, TrainConfig};
+use basegraph::train::TrainConfig;
 use basegraph::util::rng::Rng;
+
+/// Run one decentralized training job on the analytic backend and keep
+/// the per-round records (the executor form of the old wrapper).
+fn train_exec(
+    provider: &dyn GradProvider,
+    seq: &GraphSequence,
+    node_data: Vec<Box<dyn NodeData>>,
+    eval_batches: &[Batch],
+    cfg: &TrainConfig,
+) -> Result<RunResult, String> {
+    let mut w = TrainingWorkload::new(provider, cfg, node_data, eval_batches);
+    let exec = AnalyticExecutor::new(cfg.cost, cfg.threads);
+    Ok(exec.run(&mut w, seq, cfg.rounds)?.run)
+}
 
 /// A Fig-7-style mini run: n nodes, Dirichlet(α) label skew, small model.
 /// Returns final test accuracy of the node-averaged model.
@@ -76,7 +91,7 @@ fn run_topology(
         threads: 4,
         ..Default::default()
     };
-    let res = train(&model, &seq, node_data, &eval_batches, &cfg).unwrap();
+    let res = train_exec(&model, &seq, node_data, &eval_batches, &cfg).unwrap();
     res.final_acc()
 }
 
@@ -151,7 +166,7 @@ fn d2_and_qg_run_under_heterogeneity() {
             threads: 4,
             ..Default::default()
         };
-        let res = train(&model, &seq, node_data, &eval, &cfg).unwrap();
+        let res = train_exec(&model, &seq, node_data, &eval, &cfg).unwrap();
         assert!(
             res.final_acc() > 0.5,
             "{}: acc {:.3}",
@@ -205,7 +220,7 @@ fn pjrt_decentralized_training_smoke() {
         threads: 2,
         ..Default::default()
     };
-    let res = train(&model, &seq, node_data, &[eval_batch], &cfg).unwrap();
+    let res = train_exec(&model, &seq, node_data, &[eval_batch], &cfg).unwrap();
     let first_eval = res
         .records
         .iter()
