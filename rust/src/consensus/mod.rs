@@ -56,27 +56,51 @@ impl ConsensusTrace {
 }
 
 /// Consensus error (1/n) Σ_i ||x_i − x̄||².
+///
+/// Computed in fixed-width dimension chunks on the stack, so the
+/// per-round metrics path performs zero heap allocations (the executors'
+/// steady-state rounds are pinned allocation-free). Per-dimension means
+/// are identical to the old full-buffer version at any d; the error
+/// accumulation order is identical for d ≤ 128 (the paper's consensus
+/// experiments) and chunk-major above — a deliberate low-order-bit
+/// change for large-d *metrics* (training eval, the bench grid) relative
+/// to pre-chunking releases. Cross-backend and scratch-vs-legacy
+/// bit-identity are unaffected either way: every backend and both engine
+/// paths call this one function.
 pub fn consensus_error(xs: &[Vec<f64>]) -> f64 {
+    const CHUNK: usize = 128;
     let n = xs.len();
     if n == 0 {
         return 0.0;
     }
     let d = xs[0].len();
-    let mut mean = vec![0.0; d];
-    for x in xs {
-        for (m, v) in mean.iter_mut().zip(x) {
-            *m += v;
-        }
-    }
-    for m in &mut mean {
-        *m /= n as f64;
-    }
+    let mut chunk_mean = [0.0f64; CHUNK];
     let mut err = 0.0;
-    for x in xs {
-        for (m, v) in mean.iter().zip(x) {
-            let dvi = v - m;
-            err += dvi * dvi;
+    let mut start = 0;
+    while start < d {
+        let w = CHUNK.min(d - start);
+        let mean = &mut chunk_mean[..w];
+        mean.fill(0.0);
+        // `get(start..)` (not a hard slice) keeps the historical zip
+        // tolerance for ragged rows: short rows contribute only the
+        // dimensions they have.
+        for x in xs {
+            let xc = x.get(start..).unwrap_or(&[]);
+            for (m, v) in mean.iter_mut().zip(xc) {
+                *m += v;
+            }
         }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        for x in xs {
+            let xc = x.get(start..).unwrap_or(&[]);
+            for (m, v) in mean.iter().zip(xc) {
+                let dvi = v - m;
+                err += dvi * dvi;
+            }
+        }
+        start += w;
     }
     err / n as f64
 }

@@ -14,6 +14,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::scratch::AvailTable;
 use super::{ExecTrace, Executor, Workload};
 use crate::comm::{CommLedger, CostModel};
 use crate::metrics::RunResult;
@@ -84,6 +85,18 @@ impl Executor for AnalyticExecutor {
 /// the back mailbox buffer, swap buffers at the barrier, combine each
 /// node from the front buffer (every payload present — the ideal
 /// network), account one α–β round per message slot, observe.
+///
+/// Steady-state rounds are **allocation-free** in the engine (given a
+/// workload whose scratch methods are implemented — both shipped ones
+/// are; un-migrated workloads fall back to the allocating defaults):
+/// the mailbox payloads are
+/// allocated on the first two rounds and written in place thereafter
+/// ([`Workload::make_payload_into`]), each node's combine scratch is
+/// allocated at first use and recycled by [`Workload::combine_into`], and
+/// the per-round availability table reuses one flat slot-indexed buffer
+/// ([`AvailTable`]) instead of collecting a fresh `Vec<Option<&Payload>>`
+/// per node. The allocation-regression test (`tests/alloc_regression.rs`)
+/// pins this.
 pub(super) fn run_lockstep<W: Workload>(
     w: &mut W,
     seq: &GraphSequence,
@@ -107,7 +120,7 @@ pub(super) fn run_lockstep<W: Workload>(
     let w: &W = w;
     let (n_slots, slot_bytes) = w.comm_shape();
     let mut ledger = CommLedger::default();
-    let mut records = Vec::new();
+    let mut records = Vec::with_capacity(rounds + 1);
     if let Some(mut rec) = w.initial_record(&nodes) {
         rec.wall_seconds = t0.elapsed().as_secs_f64();
         records.push(rec);
@@ -118,6 +131,10 @@ pub(super) fn run_lockstep<W: Workload>(
     // can never observe a half-written mailbox.
     let mut front: Vec<Option<W::Payload>> = (0..n).map(|_| None).collect();
     let mut back: Vec<Option<W::Payload>> = (0..n).map(|_| None).collect();
+    // Per-node combine scratch (allocated at first combine, then
+    // recycled) and the slot-indexed availability table.
+    let mut scratch: Vec<Option<W::Payload>> = (0..n).map(|_| None).collect();
+    let mut avail: AvailTable<W::Payload> = AvailTable::new();
     let failure: Mutex<Option<(usize, String)>> = Mutex::new(None);
 
     for r in 0..rounds {
@@ -151,42 +168,54 @@ pub(super) fn run_lockstep<W: Workload>(
             }
         }
 
-        // 2. Publish payload snapshots, then swap mailboxes (barrier).
-        //    Publishing runs on the coordinator thread: node state is
-        //    `Send` but deliberately not required to be `Sync` (training
-        //    nodes own non-Sync data streams), so workers never hold a
-        //    shared view of the node array.
+        // 2. Publish payload snapshots — in place once the buffer exists
+        //    — then swap mailboxes (barrier). Publishing runs on the
+        //    coordinator thread: node state is `Send` but deliberately
+        //    not required to be `Sync` (training nodes own non-Sync data
+        //    streams), so workers never hold a shared view of the node
+        //    array.
         for (slot, node) in back.iter_mut().zip(&nodes) {
-            *slot = Some(w.make_payload(node));
+            match slot {
+                Some(buf) => w.make_payload_into(node, buf),
+                None => *slot = Some(w.make_payload(node)),
+            }
         }
         std::mem::swap(&mut front, &mut back);
 
-        // 3. Combine: each node mixes its neighbors' published payloads.
-        //    Ideal network — every payload is present.
-        let combine = |i: usize, node: &mut W::Node| {
-            let row = plan.neighbors(i);
-            let avail: Vec<Option<&W::Payload>> =
-                row.iter().map(|&(j, _)| front[j].as_ref()).collect();
-            w.combine(node, i, r, plan, &avail);
-        };
+        // 3. Rebuild the availability table: ideal network — every
+        //    payload is present.
+        avail.fill(plan, |_, _, j| front[j].as_ref());
+
+        // 4. Combine: each node mixes its neighbors' published payloads
+        //    from its slot-indexed table row, into its own scratch.
+        let combine =
+            |i: usize, node: &mut W::Node, slot: &mut Option<W::Payload>| {
+                let row = avail.row(plan, i);
+                if slot.is_none() {
+                    *slot = Some(w.alloc_payload(node));
+                }
+                let scr = slot.as_mut().expect("scratch allocated above");
+                w.combine_into(node, i, r, plan, row, scr);
+            };
         match pool {
             Some(pool) if parallel_combine => {
-                pool.for_each_mut(&mut nodes, combine);
+                pool.for_each_mut2(&mut nodes, &mut scratch, combine);
             }
             _ => {
-                for (i, node) in nodes.iter_mut().enumerate() {
-                    combine(i, node);
+                let pairs = nodes.iter_mut().zip(scratch.iter_mut());
+                for (i, (node, slot)) in pairs.enumerate() {
+                    combine(i, node, slot);
                 }
             }
         }
 
-        // 4. Comm accounting: one α–β bulk-synchronous round per slot
+        // 5. Comm accounting: one α–β bulk-synchronous round per slot
         //    (the busiest node serializes its sends).
         for _ in 0..n_slots {
             ledger.record_round_bytes(plan, slot_bytes, cost);
         }
 
-        // 5. Metrics.
+        // 6. Metrics.
         let eval = w.is_eval(r, rounds);
         let mut rec = w.observe(&nodes, r, eval)?;
         rec.cum_messages = ledger.messages;

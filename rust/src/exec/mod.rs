@@ -51,16 +51,35 @@
 //! pins this at n ∈ {8, 64} for both shipped workloads, all four
 //! backends.
 //!
+//! # Buffer ownership
+//!
+//! Steady-state rounds allocate nothing in the engines themselves —
+//! zero heap allocations end to end for consensus on the serial analytic
+//! backend (pinned by `tests/alloc_regression.rs`); training still pays
+//! the optimizer-contract allocations (`pre_mix` returns fresh message
+//! vectors — see ROADMAP) and the parallel paths pay per-dispatch job
+//! boxes. Executors own the payload mailboxes and per-node combine
+//! scratch, workloads write into them via
+//! the scratch-buffer methods ([`Workload::alloc_payload`],
+//! [`Workload::make_payload_into`], [`Workload::combine_into`] — whose
+//! defaults delegate to the allocating methods, so external workloads
+//! keep working unchanged), and the per-round neighbor-availability rows
+//! come slot-indexed from one flat reused table. The full ownership map
+//! lives in `docs/ARCHITECTURE.md`; `tests/alloc_regression.rs` pins the
+//! zero-allocation claim and `basegraph bench` measures the effect.
+//!
 //! # Adding a backend
 //!
 //! Implement [`Executor`]: obtain nodes with `Workload::init_nodes`, then
 //! per round run `local_step` on every node, snapshot `make_payload`,
 //! deliver payloads however the backend likes (drop/delay freely), call
-//! `combine` with the per-neighbor availability slice, and `observe` the
-//! round record. Fill the record's `cum_*`/`sim_seconds`/`wall_seconds`
-//! fields from your ledger and clocks and return an [`ExecTrace`]. The
-//! equivalence suite is the acceptance bar: ideal conditions must
-//! reproduce [`AnalyticExecutor`] exactly.
+//! `combine` with the per-neighbor availability slice (slot-indexed in
+//! neighbor-row order — or `combine_into` once you keep scratch buffers),
+//! and `observe` the round record. Fill the record's
+//! `cum_*`/`sim_seconds`/`wall_seconds` fields from your ledger and
+//! clocks and return an [`ExecTrace`]. The equivalence suite is the
+//! acceptance bar: ideal conditions must reproduce [`AnalyticExecutor`]
+//! exactly.
 //!
 //! # Migration
 //!
@@ -73,6 +92,7 @@
 
 pub mod analytic;
 pub mod process;
+mod scratch;
 pub mod shard;
 pub mod simnet;
 pub mod threaded;
@@ -85,8 +105,8 @@ pub use shard::ShardPlan;
 pub use simnet::SimnetExecutor;
 pub use threaded::ThreadedExecutor;
 pub use workload::{
-    quadratic_fixed_targets, ConsensusWorkload, TrainNode, TrainSpec,
-    TrainingWorkload, Workload,
+    quadratic_fixed_targets, AllocatingWorkload, ConsensusWorkload,
+    TrainNode, TrainSpec, TrainingWorkload, Workload,
 };
 
 use crate::comm::{CommLedger, CostModel};

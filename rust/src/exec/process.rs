@@ -67,7 +67,6 @@
 //! (`no_run` here only because doc-tests execute from a harness binary;
 //! spawning runs live in `tests/exec_equivalence.rs` and the CLI smoke.)
 
-use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
@@ -77,8 +76,11 @@ use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use super::scratch::AvailTable;
 use super::shard::{cross_shard_sources, ShardPlan};
-use super::wire::{self, read_frame, write_frame, ByteReader, ByteWriter};
+use super::wire::{
+    self, read_frame, read_frame_into, write_frame, ByteReader, ByteWriter,
+};
 use super::workload::{
     decode_wire_spec, quadratic_fixed_targets, DecodedSpec, TrainSpec,
 };
@@ -284,15 +286,27 @@ fn recv(
     conn: &mut Conn,
     wire_bytes: &mut u64,
 ) -> Result<(u8, Vec<u8>), String> {
-    let (kind, payload, bytes) = read_frame(conn)?;
+    let mut payload = Vec::new();
+    let kind = recv_into(conn, &mut payload, wire_bytes)?;
+    Ok((kind, payload))
+}
+
+/// [`recv`] into a caller-owned buffer, reusing its allocation — the
+/// per-round receive path on both sides of the protocol.
+fn recv_into(
+    conn: &mut Conn,
+    buf: &mut Vec<u8>,
+    wire_bytes: &mut u64,
+) -> Result<u8, String> {
+    let (kind, bytes) = read_frame_into(conn, buf)?;
     *wire_bytes += bytes;
     if kind == FRAME_ERROR {
         return Err(format!(
             "worker reported: {}",
-            String::from_utf8_lossy(&payload)
+            String::from_utf8_lossy(buf)
         ));
     }
-    Ok((kind, payload))
+    Ok(kind)
 }
 
 // ---------------------------------------------------------------------------
@@ -469,51 +483,73 @@ impl ProcessExecutor {
     }
 }
 
-/// Read one OBS frame from every shard and assemble per-node snapshot
-/// blobs in node order.
-fn collect_obs(
-    conns: &mut [Conn],
-    marker: u32,
-    n: usize,
-    owner: &[usize],
-    wire_bytes: &mut u64,
-) -> Result<Vec<Vec<u8>>, String> {
-    let mut slots: Vec<Option<Vec<u8>>> = vec![None; n];
-    for (s, conn) in conns.iter_mut().enumerate() {
-        let (kind, payload) =
-            recv(conn, wire_bytes).map_err(|e| format!("shard {s}: {e}"))?;
-        if kind != FRAME_OBS {
-            return Err(format!(
-                "shard {s}: expected observation frame, got kind {kind}"
-            ));
+/// Per-round observation assembly state, reused across rounds: one
+/// snapshot buffer per node (written in place), the per-round presence
+/// flags, and the frame receive buffer.
+struct ObsBufs {
+    /// Per-node snapshot blobs, in node order; valid after a successful
+    /// [`ObsBufs::collect`] until the next one overwrites them.
+    slots: Vec<Vec<u8>>,
+    seen: Vec<bool>,
+    frame: Vec<u8>,
+}
+
+impl ObsBufs {
+    fn new(n: usize) -> Self {
+        ObsBufs {
+            slots: vec![Vec::new(); n],
+            seen: vec![false; n],
+            frame: Vec::new(),
         }
-        let mut r = ByteReader::new(&payload);
-        let got = r.get_u32()?;
-        if got != marker {
-            return Err(format!(
-                "shard {s}: observation out of sync (marker {got} vs \
-                 {marker})"
-            ));
-        }
-        let count = r.get_usize()?;
-        for _ in 0..count {
-            let node = r.get_u32()? as usize;
-            if node >= n || owner[node] != s {
+    }
+
+    /// Read one OBS frame from every shard and assemble per-node snapshot
+    /// blobs in node order, reusing every buffer.
+    fn collect(
+        &mut self,
+        conns: &mut [Conn],
+        marker: u32,
+        owner: &[usize],
+        wire_bytes: &mut u64,
+    ) -> Result<(), String> {
+        let n = self.slots.len();
+        self.seen.fill(false);
+        for (s, conn) in conns.iter_mut().enumerate() {
+            let kind = recv_into(conn, &mut self.frame, wire_bytes)
+                .map_err(|e| format!("shard {s}: {e}"))?;
+            if kind != FRAME_OBS {
                 return Err(format!(
-                    "shard {s}: observation for foreign node {node}"
+                    "shard {s}: expected observation frame, got kind {kind}"
                 ));
             }
-            slots[node] = Some(r.get_bytes()?.to_vec());
+            let mut r = ByteReader::new(&self.frame);
+            let got = r.get_u32()?;
+            if got != marker {
+                return Err(format!(
+                    "shard {s}: observation out of sync (marker {got} vs \
+                     {marker})"
+                ));
+            }
+            let count = r.get_usize()?;
+            for _ in 0..count {
+                let node = r.get_u32()? as usize;
+                if node >= n || owner[node] != s {
+                    return Err(format!(
+                        "shard {s}: observation for foreign node {node}"
+                    ));
+                }
+                let bytes = r.get_bytes()?;
+                self.slots[node].clear();
+                self.slots[node].extend_from_slice(bytes);
+                self.seen[node] = true;
+            }
+            r.expect_end()?;
         }
-        r.expect_end()?;
+        if let Some(i) = self.seen.iter().position(|&x| !x) {
+            return Err(format!("no observation arrived for node {i}"));
+        }
+        Ok(())
     }
-    slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, o)| {
-            o.ok_or_else(|| format!("no observation arrived for node {i}"))
-        })
-        .collect()
 }
 
 impl Executor for ProcessExecutor {
@@ -612,12 +648,16 @@ impl Executor for ProcessExecutor {
 
         let (n_slots, slot_bytes) = w.comm_shape();
         let mut ledger = CommLedger::default();
-        let mut records = Vec::new();
+        let mut records = Vec::with_capacity(rounds + 1);
+        // Reused across rounds: the observation assembly buffers and the
+        // bundle forward buffers (one per in-flight cross-shard pair).
+        let mut obs = ObsBufs::new(n);
+        let mut fwd_bufs: Vec<Vec<u8>> = Vec::new();
+        let mut fwd_dst: Vec<usize> = Vec::new();
 
         // 4. Pre-round-0 snapshot (consensus records its initial error).
-        let obs0 =
-            collect_obs(&mut conns, INIT_ROUND, n, &splan.owner, &mut wire_bytes)?;
-        if let Some(mut rec) = w.initial_record_wire(&obs0)? {
+        obs.collect(&mut conns, INIT_ROUND, &splan.owner, &mut wire_bytes)?;
+        if let Some(mut rec) = w.initial_record_wire(&obs.slots)? {
             rec.wall_seconds = t0.elapsed().as_secs_f64();
             records.push(rec);
         }
@@ -628,13 +668,17 @@ impl Executor for ProcessExecutor {
             let plan = seq.phase(r);
             let xs = &cross[pidx];
 
-            let mut forwards: Vec<(usize, Vec<u8>)> = Vec::new();
+            fwd_dst.clear();
             for s in 0..k {
                 let expected = (0..k)
                     .filter(|&t| t != s && !xs[s][t].is_empty())
                     .count();
                 for _ in 0..expected {
-                    let (kind, payload) = recv(&mut conns[s], &mut wire_bytes)
+                    if fwd_dst.len() == fwd_bufs.len() {
+                        fwd_bufs.push(Vec::new());
+                    }
+                    let buf = &mut fwd_bufs[fwd_dst.len()];
+                    let kind = recv_into(&mut conns[s], buf, &mut wire_bytes)
                         .map_err(|e| format!("round {r}: shard {s}: {e}"))?;
                     if kind != FRAME_BUNDLE {
                         return Err(format!(
@@ -642,7 +686,7 @@ impl Executor for ProcessExecutor {
                              bundle, got frame kind {kind}"
                         ));
                     }
-                    let mut br = ByteReader::new(&payload);
+                    let mut br = ByteReader::new(buf);
                     let fr = br.get_u32()? as usize;
                     let fsrc = br.get_u32()? as usize;
                     let fdst = br.get_u32()? as usize;
@@ -652,25 +696,19 @@ impl Executor for ProcessExecutor {
                              sync (round {fr}, {fsrc} → {fdst})"
                         ));
                     }
-                    forwards.push((fdst, payload));
+                    fwd_dst.push(fdst);
                 }
             }
-            for (dst, payload) in &forwards {
-                send(&mut conns[*dst], FRAME_BUNDLE, payload, &mut wire_bytes)
+            for (payload, &dst) in fwd_bufs.iter().zip(&fwd_dst) {
+                send(&mut conns[dst], FRAME_BUNDLE, payload, &mut wire_bytes)
                     .map_err(|e| {
                         format!("round {r}: forward to shard {dst}: {e}")
                     })?;
             }
 
             let eval = w.is_eval(r, rounds);
-            let obs = collect_obs(
-                &mut conns,
-                r as u32,
-                n,
-                &splan.owner,
-                &mut wire_bytes,
-            )
-            .map_err(|e| format!("round {r}: {e}"))?;
+            obs.collect(&mut conns, r as u32, &splan.owner, &mut wire_bytes)
+                .map_err(|e| format!("round {r}: {e}"))?;
 
             // α–β accounting — identical to the analytic backend, so the
             // simulated-seconds column stays comparable across backends;
@@ -680,7 +718,7 @@ impl Executor for ProcessExecutor {
             }
             ledger.bytes_on_wire = wire_bytes;
             let mut rec = w
-                .observe_wire(&obs, r, eval)
+                .observe_wire(&obs.slots, r, eval)
                 .map_err(|e| format!("round {r}: {e}"))?;
             rec.cum_messages = ledger.messages;
             rec.cum_bytes = ledger.bytes;
@@ -871,9 +909,10 @@ fn send_obs<W: Workload>(
     nodes: &[Option<W::Node>],
     marker: u32,
     full: bool,
+    ow: &mut ByteWriter,
     sink: &mut u64,
 ) -> Result<(), String> {
-    let mut ow = ByteWriter::new();
+    ow.clear();
     ow.put_u32(marker);
     ow.put_usize(members.len());
     for &i in members {
@@ -881,7 +920,7 @@ fn send_obs<W: Workload>(
         let node = nodes[i].as_ref().expect("member node");
         ow.put_bytes(&w.node_to_wire(node, full)?);
     }
-    send(conn, FRAME_OBS, &ow.finish(), sink)
+    send(conn, FRAME_OBS, ow.as_slice(), sink)
 }
 
 /// The worker's round loop: local steps and combines for this shard's
@@ -889,6 +928,15 @@ fn send_obs<W: Workload>(
 /// snapshots back to the coordinator. Same phases, same snapshot
 /// discipline, same neighbor-list order as the in-process lock-step
 /// engine — which is exactly why the results are bit-identical.
+///
+/// Buffers are round-persistent: payload snapshots are written in place
+/// ([`Workload::make_payload_into`]), cross-shard bundles are encoded
+/// straight into one reused frame writer
+/// ([`Workload::payload_wire_into`]), received bundles decode into
+/// per-node reused payload buffers ([`Workload::payload_from_wire_into`],
+/// freshness-stamped per round so a protocol desync still surfaces), and
+/// combines run through the slot-indexed availability table into one
+/// recycled scratch.
 fn worker_loop<W: Workload>(
     w: &mut W,
     conn: &mut Conn,
@@ -904,33 +952,53 @@ fn worker_loop<W: Workload>(
         .collect();
     let members: Vec<usize> =
         (0..n).filter(|&i| ctx.owner[i] == me).collect();
+    // Which sources cross which shard boundary, per phase. Intra-shard
+    // gossip reads the in-memory snapshot, so on block-local topologies
+    // (contiguous shards on Base-(k+1)) most rounds encode almost
+    // nothing.
     let cross: Vec<Vec<Vec<Vec<usize>>>> = ctx
         .seq
         .phases
         .iter()
         .map(|p| cross_shard_sources(p, &ctx.owner, ctx.k))
         .collect();
-    // Which of our nodes' payloads some *other* shard consumes, per
-    // phase — only these get serialized. Intra-shard gossip reads the
-    // in-memory snapshot, so on block-local topologies (contiguous
-    // shards on Base-(k+1)) most rounds encode almost nothing.
-    let wire_needed: Vec<Vec<bool>> = cross
+    // Per phase: which of our sources feed *more than one* remote shard —
+    // those are worth encoding once into a cached buffer and splicing
+    // per bundle; single-consumer sources encode straight into the
+    // bundle frame (no intermediate copy at all).
+    let multi_consumer: Vec<Vec<bool>> = cross
         .iter()
         .map(|xs| {
-            let mut need = vec![false; n];
+            let mut cnt = vec![0u8; n];
             for (t, bucket) in xs[me].iter().enumerate() {
                 if t != me {
                     for &i in bucket {
-                        need[i] = true;
+                        cnt[i] = cnt[i].saturating_add(1);
                     }
                 }
             }
-            need
+            cnt.into_iter().map(|c| c > 1).collect()
         })
         .collect();
     let mut sink = 0u64;
 
-    send_obs(w, conn, &members, &nodes, INIT_ROUND, false, &mut sink)?;
+    // Round-persistent buffers (see the function docs).
+    let mut payloads: Vec<Option<W::Payload>> =
+        (0..n).map(|_| None).collect();
+    let mut remote: Vec<Option<W::Payload>> = (0..n).map(|_| None).collect();
+    let mut remote_round: Vec<usize> = vec![usize::MAX; n];
+    let mut avail: AvailTable<W::Payload> = AvailTable::new();
+    let mut mix_scratch: Option<W::Payload> = None;
+    let mut frame_w = ByteWriter::new();
+    let mut frame_buf: Vec<u8> = Vec::new();
+    // Encode-once cache for multi-consumer sources, round-stamped.
+    let mut enc: Vec<ByteWriter> = (0..n).map(|_| ByteWriter::new()).collect();
+    let mut enc_round: Vec<usize> = vec![usize::MAX; n];
+
+    send_obs(
+        w, conn, &members, &nodes, INIT_ROUND, false, &mut frame_w,
+        &mut sink,
+    )?;
 
     for r in 0..ctx.rounds {
         if ctx.crash_round == Some(r) {
@@ -948,55 +1016,63 @@ fn worker_loop<W: Workload>(
                 .map_err(|e| format!("node {i} round {r}: {e}"))?;
         }
 
-        // Snapshot payloads once; encode only what crosses a process
-        // boundary this phase (once per source, however many shards
-        // consume it).
-        let mut payloads: Vec<Option<W::Payload>> =
-            (0..n).map(|_| None).collect();
-        let mut encoded: Vec<Option<Vec<u8>>> =
-            (0..n).map(|_| None).collect();
+        // Snapshot payloads in place; bundles encode straight out of
+        // these buffers below.
         for &i in &members {
-            let p = w.make_payload(nodes[i].as_ref().expect("member"));
-            if wire_needed[pidx][i] {
-                encoded[i] = Some(w.payload_to_wire(&p)?);
+            let node = nodes[i].as_ref().expect("member node");
+            let slot = &mut payloads[i];
+            match slot {
+                Some(buf) => w.make_payload_into(node, buf),
+                None => *slot = Some(w.make_payload(node)),
             }
-            payloads[i] = Some(p);
         }
 
-        // One bundle per destination shard that needs anything of ours.
+        // One bundle per destination shard that needs anything of ours,
+        // encoded into the reused frame writer.
         for t in 0..ctx.k {
             if t == me || xs[me][t].is_empty() {
                 continue;
             }
             let srcs = &xs[me][t];
-            let mut bw = ByteWriter::new();
-            bw.put_u32(r as u32);
-            bw.put_u32(me as u32);
-            bw.put_u32(t as u32);
-            bw.put_usize(srcs.len());
+            frame_w.clear();
+            frame_w.put_u32(r as u32);
+            frame_w.put_u32(me as u32);
+            frame_w.put_u32(t as u32);
+            frame_w.put_usize(srcs.len());
             for &i in srcs {
-                bw.put_u32(i as u32);
-                bw.put_bytes(encoded[i].as_ref().expect("member payload"));
+                frame_w.put_u32(i as u32);
+                let p = payloads[i].as_ref().expect("member payload");
+                if multi_consumer[pidx][i] {
+                    // Encode once per round, splice per bundle.
+                    if enc_round[i] != r {
+                        enc[i].clear();
+                        w.payload_wire_into(p, &mut enc[i])?;
+                        enc_round[i] = r;
+                    }
+                    frame_w.put_raw(enc[i].as_slice());
+                } else {
+                    w.payload_wire_into(p, &mut frame_w)?;
+                }
             }
-            send(conn, FRAME_BUNDLE, &bw.finish(), &mut sink)
+            send(conn, FRAME_BUNDLE, frame_w.as_slice(), &mut sink)
                 .map_err(|e| format!("round {r}: send bundle → {t}: {e}"))?;
         }
 
-        // Receive the bundles other shards addressed to us.
+        // Receive the bundles other shards addressed to us, decoding
+        // into the reused per-node buffers (stamped with this round).
         let expected = (0..ctx.k)
             .filter(|&s| s != me && !xs[s][me].is_empty())
             .count();
-        let mut remote: HashMap<usize, W::Payload> = HashMap::new();
         for _ in 0..expected {
-            let (kind, payload) =
-                recv(conn, &mut sink).map_err(|e| format!("round {r}: {e}"))?;
+            let kind = recv_into(conn, &mut frame_buf, &mut sink)
+                .map_err(|e| format!("round {r}: {e}"))?;
             if kind != FRAME_BUNDLE {
                 return Err(format!(
                     "round {r}: expected a payload bundle, got frame kind \
                      {kind}"
                 ));
             }
-            let mut br = ByteReader::new(&payload);
+            let mut br = ByteReader::new(&frame_buf);
             let fr = br.get_u32()? as usize;
             let fsrc = br.get_u32()? as usize;
             let fdst = br.get_u32()? as usize;
@@ -1015,39 +1091,53 @@ fn worker_loop<W: Workload>(
                         "round {r}: bundle entry for foreign node {node}"
                     ));
                 }
-                remote.insert(node, w.payload_from_wire(bytes)?);
+                let slot = &mut remote[node];
+                match slot {
+                    Some(buf) => w.payload_from_wire_into(bytes, buf)?,
+                    None => *slot = Some(w.payload_from_wire(bytes)?),
+                }
+                remote_round[node] = r;
             }
             br.expect_end()?;
         }
 
-        // Combine from snapshots: intra-shard from memory, cross-shard
-        // from the decoded bundles. Lock-step ideal network — every
+        // Combine from snapshots through the availability table:
+        // intra-shard from memory, cross-shard from the decoded bundles
+        // (only if stamped fresh this round). Only this shard's member
+        // rows are resolved — the others' would be O(total edges) of
+        // wasted lookups per worker. Lock-step ideal network — every
         // neighbor payload must be present.
+        avail.fill_rows(plan, &members, |_, _, j| {
+            if ctx.owner[j] == me {
+                payloads[j].as_ref()
+            } else if remote_round[j] == r {
+                remote[j].as_ref()
+            } else {
+                None
+            }
+        });
         for &i in &members {
-            let row = plan.neighbors(i);
-            let avail: Vec<Option<&W::Payload>> = row
-                .iter()
-                .map(|&(j, _)| {
-                    if ctx.owner[j] == me {
-                        payloads[j].as_ref()
-                    } else {
-                        remote.get(&j)
-                    }
-                })
-                .collect();
-            if let Some(pos) = avail.iter().position(|a| a.is_none()) {
+            let row = avail.row(plan, i);
+            if let Some(pos) = row.iter().position(|a| a.is_none()) {
                 return Err(format!(
                     "round {r}: node {i} never received neighbor {}'s \
                      payload — protocol desync",
-                    row[pos].0
+                    plan.neighbors(i)[pos].0
                 ));
             }
             let node = nodes[i].as_mut().expect("member node");
-            w.combine(node, i, r, plan, &avail);
+            if mix_scratch.is_none() {
+                mix_scratch = Some(w.alloc_payload(node));
+            }
+            let scr = mix_scratch.as_mut().expect("scratch");
+            w.combine_into(node, i, r, plan, row, scr);
         }
 
         let eval = w.is_eval(r, ctx.rounds);
-        send_obs(w, conn, &members, &nodes, r as u32, eval, &mut sink)?;
+        send_obs(
+            w, conn, &members, &nodes, r as u32, eval, &mut frame_w,
+            &mut sink,
+        )?;
     }
 
     let mut fw = ByteWriter::new();

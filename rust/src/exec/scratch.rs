@@ -1,0 +1,211 @@
+//! Round-scratch machinery shared by the lock-step backends: the
+//! slot-indexed payload **availability table** that replaces the fresh
+//! `Vec<Option<&Payload>>` every engine used to collect per node per
+//! round.
+//!
+//! The table is laid out flat in the plan's CSR coordinates
+//! ([`GossipPlan::row_range`]): entry `row_range(i).start + k` answers
+//! "did neighbor-slot `k` of node `i` deliver this round, and where is
+//! its payload?". It is rebuilt once per round ([`AvailTable::fill`]) and
+//! read back as per-node `&[Option<&P>]` rows ([`AvailTable::row`]) —
+//! allocation-free once every phase of the sequence has been seen, and
+//! shareable read-only across the thread pool's workers.
+//!
+//! # Why raw pointers
+//!
+//! A borrow-typed `Vec<Option<&Payload>>` cannot be *kept* across rounds:
+//! its element lifetime would tie the buffer to one round's mailbox
+//! borrow, forcing a fresh allocation per round — the exact churn this
+//! module exists to remove. The table therefore stores `NonNull<P>`
+//! internally and re-labels rows as `&[Option<&P>]` on read, under the
+//! contract documented on [`AvailTable::row`]. This is the same
+//! lifetime-erasure trade the thread pool's `for_each_mut` makes, and it
+//! is confined to this module.
+
+use std::ptr::NonNull;
+
+use crate::topology::GossipPlan;
+
+/// Flat per-round payload availability, slot-indexed per node. See the
+/// module docs for layout and the safety contract.
+pub(crate) struct AvailTable<P> {
+    slots: Vec<Option<NonNull<P>>>,
+}
+
+// SAFETY: the table only ever stores pointers derived from shared `&P`
+// references handed to `fill`, and `row` only reads them back as shared
+// references — sharing the table across threads is exactly sharing `&P`,
+// which is what `P: Sync` licenses.
+unsafe impl<P: Sync> Sync for AvailTable<P> {}
+
+impl<P> Default for AvailTable<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> AvailTable<P> {
+    pub fn new() -> Self {
+        AvailTable { slots: Vec::new() }
+    }
+
+    /// Rebuild the table for one round of `plan`: for every node `i` and
+    /// neighbor slot `k` (peer `j`), store `get(i, k, j)` — `None` marks
+    /// a dropped or still-in-flight payload. Capacity is retained across
+    /// calls, so refills allocate nothing once the largest phase of the
+    /// sequence has been seen.
+    pub fn fill<'a>(
+        &mut self,
+        plan: &GossipPlan,
+        mut get: impl FnMut(usize, usize, usize) -> Option<&'a P>,
+    ) where
+        P: 'a,
+    {
+        self.slots.clear();
+        for i in 0..plan.n() {
+            for (k, &(j, _)) in plan.neighbors(i).iter().enumerate() {
+                self.slots.push(get(i, k, j).map(NonNull::from));
+            }
+        }
+    }
+
+    /// Like [`AvailTable::fill`], but resolves payloads only for the
+    /// listed `rows` (every other slot is reset to `None`) — the process
+    /// worker's form, where each shard combines only its own members and
+    /// resolving the other shards' rows would cost O(total edges) of
+    /// wasted `get` calls per worker per round. Row ranges stay laid out
+    /// for the whole plan, so [`AvailTable::row`] keeps working for any
+    /// listed row.
+    pub fn fill_rows<'a>(
+        &mut self,
+        plan: &GossipPlan,
+        rows: &[usize],
+        mut get: impl FnMut(usize, usize, usize) -> Option<&'a P>,
+    ) where
+        P: 'a,
+    {
+        self.slots.clear();
+        self.slots.resize(plan.messages(), None);
+        for &i in rows {
+            let range = plan.row_range(i);
+            let row = plan.neighbors(i);
+            for (slot, (k, &(j, _))) in
+                self.slots[range].iter_mut().zip(row.iter().enumerate())
+            {
+                *slot = get(i, k, j).map(NonNull::from);
+            }
+        }
+    }
+
+    /// Node `i`'s availability row, aligned with `plan.neighbors(i)` —
+    /// `plan` must be the plan the latest [`AvailTable::fill`] ran over.
+    ///
+    /// # Contract (crate-internal)
+    ///
+    /// The returned references are the ones passed to the **latest**
+    /// `fill`. Callers must re-`fill` before reading rows for a new round
+    /// and must not mutate or drop the pointed-to payloads while a row is
+    /// live. Every engine in this crate satisfies this by construction:
+    /// payload mailboxes are written only in the publish phase, strictly
+    /// before `fill`, and rows never outlive that round's combine phase.
+    pub fn row(&self, plan: &GossipPlan, i: usize) -> &[Option<&P>] {
+        let s = &self.slots[plan.row_range(i)];
+        // SAFETY: `Option<NonNull<P>>` and `Option<&P>` have identical
+        // layout (guaranteed null-pointer optimization); every stored
+        // pointer came from a live `&P` during the latest `fill`, and the
+        // contract above keeps the pointees alive, unmutated and shared
+        // for as long as the row is used.
+        unsafe {
+            std::slice::from_raw_parts(
+                s.as_ptr() as *const Option<&P>,
+                s.len(),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_mirror_the_plan_and_mark_missing_payloads() {
+        let plan = GossipPlan::from_undirected(
+            4,
+            &[(0, 1, 0.25), (0, 2, 0.25), (1, 3, 0.25)],
+        );
+        let payloads: Vec<Vec<f64>> =
+            (0..4).map(|i| vec![i as f64]).collect();
+        let mut table: AvailTable<Vec<f64>> = AvailTable::new();
+        // Everything present: each slot points at its peer's payload.
+        table.fill(&plan, |_, _, j| Some(&payloads[j]));
+        for i in 0..4 {
+            let row = table.row(&plan, i);
+            assert_eq!(row.len(), plan.degree(i));
+            for (k, &(j, _)) in plan.neighbors(i).iter().enumerate() {
+                assert_eq!(row[k].unwrap()[0], j as f64, "node {i} slot {k}");
+            }
+        }
+        // Refill with node 0's slot 1 (peer 2) missing; the table must
+        // reflect exactly that hole and nothing else.
+        table.fill(&plan, |i, k, j| {
+            if i == 0 && k == 1 {
+                None
+            } else {
+                Some(&payloads[j])
+            }
+        });
+        let row0 = table.row(&plan, 0);
+        assert_eq!(row0[0].unwrap()[0], 1.0);
+        assert!(row0[1].is_none());
+        assert_eq!(table.row(&plan, 1).len(), 2);
+        // Degree-0 rows are empty slices, not errors.
+        let lonely = GossipPlan::from_undirected(2, &[]);
+        let mut t: AvailTable<Vec<f64>> = AvailTable::new();
+        t.fill(&lonely, |_, _, _| None);
+        assert!(t.row(&lonely, 0).is_empty());
+    }
+
+    #[test]
+    fn fill_rows_resolves_only_listed_rows() {
+        let plan = GossipPlan::from_undirected(
+            4,
+            &[(0, 1, 0.25), (1, 2, 0.25), (2, 3, 0.25)],
+        );
+        let xs: Vec<Vec<f64>> = (0..4).map(|i| vec![i as f64]).collect();
+        let mut table: AvailTable<Vec<f64>> = AvailTable::new();
+        // Poison every slot first, then fill only rows {1, 2}: listed
+        // rows must match a full fill, unlisted rows must be reset.
+        table.fill(&plan, |_, _, j| Some(&xs[j]));
+        table.fill_rows(&plan, &[1, 2], |_, _, j| Some(&xs[j]));
+        for i in [1usize, 2] {
+            let row = table.row(&plan, i);
+            for (k, &(j, _)) in plan.neighbors(i).iter().enumerate() {
+                assert_eq!(row[k].unwrap()[0], j as f64, "row {i} slot {k}");
+            }
+        }
+        for i in [0usize, 3] {
+            assert!(
+                table.row(&plan, i).iter().all(|s| s.is_none()),
+                "unlisted row {i} must be cleared"
+            );
+        }
+    }
+
+    #[test]
+    fn refills_reuse_capacity() {
+        let plan = GossipPlan::from_undirected(
+            3,
+            &[(0, 1, 0.5), (1, 2, 0.25), (0, 2, 0.125)],
+        );
+        let xs: Vec<Vec<f64>> = (0..3).map(|i| vec![i as f64]).collect();
+        let mut table: AvailTable<Vec<f64>> = AvailTable::new();
+        table.fill(&plan, |_, _, j| Some(&xs[j]));
+        let cap = table.slots.capacity();
+        assert!(cap >= plan.messages());
+        for _ in 0..10 {
+            table.fill(&plan, |_, _, j| Some(&xs[j]));
+            assert_eq!(table.slots.capacity(), cap, "refill reallocated");
+        }
+    }
+}

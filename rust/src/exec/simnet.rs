@@ -23,6 +23,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::scratch::AvailTable;
 use super::{ExecTrace, Executor, Workload};
 use crate::comm::CommLedger;
 use crate::metrics::RunResult;
@@ -97,6 +98,17 @@ impl Executor for SimnetExecutor {
             match self.sim.mode {
                 ExecMode::BulkSynchronous => {
                     let mut clock = 0.0f64;
+                    // Round-persistent scratch: arrival flags, the payload
+                    // mailbox (written in place after warmup), the
+                    // slot-indexed availability table and one shared
+                    // combine scratch (the event loop is single-threaded)
+                    // — reused every round instead of re-collected.
+                    let mut arrived: Vec<Vec<bool>> = vec![Vec::new(); n];
+                    let mut mail: Vec<Option<W::Payload>> =
+                        (0..n).map(|_| None).collect();
+                    let mut avail: AvailTable<W::Payload> =
+                        AvailTable::new();
+                    let mut mix_scratch: Option<W::Payload> = None;
                     for r in 0..rounds {
                         let pidx = r % seq.len();
                         let plan = &seq.phases[pidx];
@@ -109,9 +121,10 @@ impl Executor for SimnetExecutor {
                         }
                         // arrived[i][k] <=> the payload of
                         // plan.neighbors(i)[k] made it through this phase.
-                        let mut arrived: Vec<Vec<bool>> = (0..n)
-                            .map(|i| vec![false; plan.degree(i)])
-                            .collect();
+                        for (i, flags) in arrived.iter_mut().enumerate() {
+                            flags.clear();
+                            flags.resize(plan.degree(i), false);
+                        }
                         let mut barrier_t = clock;
                         let mut failure: Option<String> = None;
                         while let Some(ev) = q.pop() {
@@ -181,25 +194,30 @@ impl Executor for SimnetExecutor {
                         for _ in 0..n_slots {
                             ledger.bump_round();
                         }
-                        // Barrier mix: snapshot every node's payload,
-                        // combine the survivors.
-                        let payloads: Vec<W::Payload> =
-                            nodes.iter().map(|nd| w.make_payload(nd)).collect();
+                        // Barrier mix: snapshot every node's payload into
+                        // the reused mailbox, combine the survivors
+                        // through the slot-indexed table.
+                        for (slot, node) in mail.iter_mut().zip(&nodes) {
+                            match slot {
+                                Some(buf) => w.make_payload_into(node, buf),
+                                None => *slot = Some(w.make_payload(node)),
+                            }
+                        }
+                        avail.fill(plan, |i, k, j| {
+                            if arrived[i][k] {
+                                mail[j].as_ref()
+                            } else {
+                                None
+                            }
+                        });
                         for (i, node) in nodes.iter_mut().enumerate() {
-                            let row = plan.neighbors(i);
-                            let flags = &arrived[i];
-                            let avail: Vec<Option<&W::Payload>> = row
-                                .iter()
-                                .enumerate()
-                                .map(|(k, &(j, _))| {
-                                    if flags[k] {
-                                        Some(&payloads[j])
-                                    } else {
-                                        None
-                                    }
-                                })
-                                .collect();
-                            w.combine(node, i, r, plan, &avail);
+                            let row = avail.row(plan, i);
+                            if mix_scratch.is_none() {
+                                mix_scratch = Some(w.alloc_payload(node));
+                            }
+                            let scr =
+                                mix_scratch.as_mut().expect("scratch");
+                            w.combine_into(node, i, r, plan, row, scr);
                         }
                         let eval = w.is_eval(r, rounds);
                         let mut rec = w.observe(&nodes, r, eval)?;
@@ -217,6 +235,9 @@ impl Executor for SimnetExecutor {
                     // currently in the air).
                     let mut store: HashMap<usize, Rc<W::Payload>> =
                         HashMap::new();
+                    // One combine scratch, recycled across every node's
+                    // mix (the event loop is single-threaded).
+                    let mut mix_scratch: Option<W::Payload> = None;
                     let mut next_msg = 0usize;
                     let mut mailbox: Vec<BTreeMap<usize, Rc<W::Payload>>> =
                         vec![BTreeMap::new(); n];
@@ -286,12 +307,20 @@ impl Executor for SimnetExecutor {
                                         .iter()
                                         .map(|o| o.as_deref())
                                         .collect();
-                                w.combine(
+                                if mix_scratch.is_none() {
+                                    mix_scratch =
+                                        Some(w.alloc_payload(&nodes[node]));
+                                }
+                                let scr = mix_scratch
+                                    .as_mut()
+                                    .expect("scratch");
+                                w.combine_into(
                                     &mut nodes[node],
                                     node,
                                     round,
                                     plan,
                                     &avail,
+                                    scr,
                                 );
                                 completed[round] += 1;
                                 if completed[round] == n {

@@ -5,11 +5,16 @@
 //! Each round, every node is claimed by a [`ThreadPool`] worker (one node
 //! per worker when `threads >= n`; work-stealing over an atomic counter
 //! otherwise). Payloads move through a double-buffered mailbox array —
-//! the coordinator publishes snapshots into the back buffer, the buffers
-//! swap at the barrier, worker combines read the front buffer — and the
-//! pool's latch is a real barrier: no node starts round r+1 until every
-//! node committed round r. This is the BSP discipline of the simnet
-//! engine executed on hardware; its process-boundary sibling is
+//! the coordinator publishes snapshots into the back buffer (in place,
+//! via [`Workload::make_payload_into`], so payload publishing never
+//! touches the allocator in steady state; the pool's per-dispatch job
+//! boxes are the remaining per-round allocation on parallel paths), the
+//! buffers swap at the barrier, worker combines
+//! read the front buffer through the shared slot-indexed availability
+//! table and mix into per-node recycled scratch — and the pool's latch is
+//! a real barrier: no node starts round r+1 until every node committed
+//! round r. This is the BSP discipline of the simnet engine executed on
+//! hardware; its process-boundary sibling is
 //! [`ProcessExecutor`](super::ProcessExecutor), which runs the same
 //! lock-step protocol across OS processes and real sockets.
 //!

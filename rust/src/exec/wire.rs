@@ -137,6 +137,18 @@ fn read_exact_or(
 /// mismatch each produce a distinct, clean error — never a hang on
 /// garbage, never a silent partial payload.
 pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>, u64), String> {
+    let mut payload = Vec::new();
+    let (kind, bytes) = read_frame_into(r, &mut payload)?;
+    Ok((kind, payload, bytes))
+}
+
+/// [`read_frame`] into a caller-owned buffer, reusing its allocation
+/// across frames — the process backend's per-round receive path. Returns
+/// `(kind, wire_bytes)`; on success `buf` holds exactly the payload.
+pub fn read_frame_into(
+    r: &mut impl Read,
+    buf: &mut Vec<u8>,
+) -> Result<(u8, u64), String> {
     let mut header = [0u8; 7];
     read_exact_or(r, &mut header, "frame header")?;
     if header[0] != MAGIC {
@@ -158,19 +170,20 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>, u64), String> {
     if len > MAX_FRAME {
         return Err(format!("frame length {len} exceeds limit {MAX_FRAME}"));
     }
-    let mut payload = vec![0u8; len as usize];
-    read_exact_or(r, &mut payload, "frame payload")?;
+    buf.clear();
+    buf.resize(len as usize, 0);
+    read_exact_or(r, buf, "frame payload")?;
     let mut crc_buf = [0u8; 4];
     read_exact_or(r, &mut crc_buf, "frame checksum")?;
     let want = u32::from_le_bytes(crc_buf);
-    let got = crc32(&payload);
+    let got = crc32(buf);
     if want != got {
         return Err(format!(
             "frame checksum mismatch (kind {kind}): got 0x{got:08X}, \
              frame says 0x{want:08X}"
         ));
     }
-    Ok((kind, payload, 7 + len as u64 + 4))
+    Ok((kind, 7 + len as u64 + 4))
 }
 
 // ---------------------------------------------------------------------------
@@ -210,6 +223,26 @@ impl ByteWriter {
         self.buf
     }
 
+    /// Drop the contents but keep the capacity — the buffer-reuse form
+    /// the process backend's per-round frame writers rely on (`clear`,
+    /// encode, [`ByteWriter::as_slice`], send, repeat).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// The bytes encoded so far, without consuming the writer.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
     pub fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
     }
@@ -238,6 +271,13 @@ impl ByteWriter {
 
     pub fn put_bytes(&mut self, b: &[u8]) {
         self.put_usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Append raw bytes with **no** length prefix — for splicing an
+    /// already-encoded region (e.g. a cached `payload_wire_into` result)
+    /// into a larger frame.
+    pub fn put_raw(&mut self, b: &[u8]) {
         self.buf.extend_from_slice(b);
     }
 
@@ -346,6 +386,36 @@ impl<'a> ByteReader<'a> {
             v.push(self.get_f32()?);
         }
         Ok(v)
+    }
+
+    /// [`ByteReader::get_vec_f64`] into an existing buffer, reusing its
+    /// allocation (steady-state decodes of same-shaped payloads touch the
+    /// heap zero times). Leaves `out` equal to what `get_vec_f64` returns.
+    pub fn get_vec_f64_into(
+        &mut self,
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        let n = self.get_usize()?;
+        out.clear();
+        out.reserve(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(())
+    }
+
+    /// f32 twin of [`ByteReader::get_vec_f64_into`].
+    pub fn get_vec_f32_into(
+        &mut self,
+        out: &mut Vec<f32>,
+    ) -> Result<(), String> {
+        let n = self.get_usize()?;
+        out.clear();
+        out.reserve(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(())
     }
 
     /// Assert the payload is fully consumed (layout drift detector).
@@ -515,6 +585,51 @@ mod tests {
         let mut short = ByteReader::new(&b);
         short.get_u8().unwrap();
         assert!(short.expect_end().unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn reuse_apis_match_their_allocating_twins() {
+        // read_frame_into: same kind/payload/bytes, buffer reused.
+        let mut stream = Vec::new();
+        let n1 = write_frame(&mut stream, 4, b"first-payload").unwrap();
+        let n2 = write_frame(&mut stream, 5, b"xy").unwrap();
+        let mut rd: &[u8] = &stream;
+        let mut buf = Vec::new();
+        let (k1, g1) = read_frame_into(&mut rd, &mut buf).unwrap();
+        assert_eq!((k1, buf.as_slice(), g1), (4, b"first-payload".as_slice(), n1));
+        let cap = buf.capacity();
+        let (k2, g2) = read_frame_into(&mut rd, &mut buf).unwrap();
+        assert_eq!((k2, buf.as_slice(), g2), (5, b"xy".as_slice(), n2));
+        assert_eq!(buf.capacity(), cap, "smaller frame reallocated");
+        // ByteWriter clear/as_slice: reusable across frames.
+        let mut w = ByteWriter::new();
+        w.put_str("round-1");
+        assert_eq!(w.len(), 8 + 7);
+        assert!(!w.is_empty());
+        let first = w.as_slice().to_vec();
+        w.clear();
+        assert!(w.is_empty());
+        w.put_str("round-1");
+        assert_eq!(w.as_slice(), first.as_slice());
+        // get_vec_*_into: equal values, reused capacity.
+        let mut enc = ByteWriter::new();
+        enc.put_vec_f64(&[1.0, -0.5, 3.25]);
+        enc.put_vec_f32(&[0.5, 2.0]);
+        let bytes = enc.finish();
+        let mut r = ByteReader::new(&bytes);
+        let mut v64 = vec![9.0f64; 16];
+        let c64 = v64.capacity();
+        r.get_vec_f64_into(&mut v64).unwrap();
+        assert_eq!(v64, vec![1.0, -0.5, 3.25]);
+        assert_eq!(v64.capacity(), c64);
+        let mut v32 = vec![9.0f32; 16];
+        r.get_vec_f32_into(&mut v32).unwrap();
+        assert_eq!(v32, vec![0.5, 2.0]);
+        r.expect_end().unwrap();
+        // Truncated input is still a clean error.
+        let mut r = ByteReader::new(&bytes[..bytes.len() - 1]);
+        r.get_vec_f64_into(&mut v64).unwrap();
+        assert!(r.get_vec_f32_into(&mut v32).is_err());
     }
 
     #[test]

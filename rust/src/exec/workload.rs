@@ -41,7 +41,9 @@ use crate::runtime::batch::Batch;
 use crate::runtime::provider::{GradProvider, QuadraticModel};
 use crate::topology::GossipPlan;
 use crate::train::node_data::{FixedBatch, NodeData};
-use crate::train::{average_params, evaluate, gossip_combine, TrainConfig};
+use crate::train::{
+    average_params, evaluate, gossip_combine_slots, TrainConfig,
+};
 
 /// One decentralized problem, expressed in executor-agnostic pieces.
 ///
@@ -102,6 +104,60 @@ pub trait Workload: Sync {
         avail: &[Option<&Self::Payload>],
     );
 
+    // -----------------------------------------------------------------
+    // Scratch-buffer pipeline — the zero-allocation round engine.
+    //
+    // Steady-state rounds used to spend their time in the allocator:
+    // `make_payload` cloned the full node state every round and `combine`
+    // built fresh output buffers. The three methods below are the
+    // write-into-scratch variants the executors call instead; their
+    // defaults delegate to the allocating methods above, so existing
+    // external `Workload` impls keep compiling *and* keep producing
+    // bit-identical results — they just do not get the allocation-free
+    // fast path until they override these. (Migration: override
+    // `make_payload_into` and `combine_into`, and give `alloc_payload` a
+    // cheap shape-only constructor; `make_payload_into` must remain a
+    // pure snapshot, exactly like `make_payload` — executors may still
+    // take it at any point between the local step and the first delivery
+    // of that round.)
+    // -----------------------------------------------------------------
+
+    /// Allocate a payload-shaped scratch buffer for `node`. Called once
+    /// per buffer at warmup; the contents need not be meaningful (every
+    /// user of the buffer overwrites it in full before reading). The
+    /// default takes a real snapshot — correct, if wasteful.
+    fn alloc_payload(&self, node: &Self::Node) -> Self::Payload {
+        self.make_payload(node)
+    }
+
+    /// Snapshot the message node `i` sends this round into `out`, reusing
+    /// `out`'s allocation — the steady-state form of
+    /// [`Workload::make_payload`]. Must write the identical value
+    /// `make_payload` would return, and must remain a *pure snapshot* of
+    /// the node (rule 3 of the module's determinism rules).
+    fn make_payload_into(&self, node: &Self::Node, out: &mut Self::Payload) {
+        *out = self.make_payload(node);
+    }
+
+    /// [`Workload::combine`] with a caller-owned scratch payload buffer
+    /// for the mixing intermediates. `scratch` is dedicated to this call
+    /// while it runs and handed back (possibly holding recycled
+    /// allocations) for the caller to pass in again next round; its
+    /// contents carry no meaning across calls. Must commit bit-identical
+    /// state to `combine`.
+    fn combine_into(
+        &self,
+        node: &mut Self::Node,
+        i: usize,
+        r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Self::Payload>],
+        scratch: &mut Self::Payload,
+    ) {
+        let _ = scratch;
+        self.combine(node, i, r, plan, avail);
+    }
+
     /// A round-0 record describing the initial state, if the workload
     /// tracks one (consensus does; training starts at round 1).
     fn initial_record(&self, nodes: &[Self::Node]) -> Option<RoundRecord> {
@@ -152,6 +208,32 @@ pub trait Workload: Sync {
     /// Decode one payload off the wire.
     fn payload_from_wire(&self, _b: &[u8]) -> Result<Self::Payload, String> {
         Err(not_wire(self.label()))
+    }
+
+    /// Append the wire encoding of `p` into `w`, length-prefixed — byte
+    /// for byte what `w.put_bytes(&self.payload_to_wire(p)?)` produces,
+    /// without the intermediate `Vec<u8>`. The process backend's bundle
+    /// writer calls this on the hot path; the default pays the temporary.
+    fn payload_wire_into(
+        &self,
+        p: &Self::Payload,
+        w: &mut ByteWriter,
+    ) -> Result<(), String> {
+        let b = self.payload_to_wire(p)?;
+        w.put_bytes(&b);
+        Ok(())
+    }
+
+    /// Decode one payload off the wire into an existing buffer, reusing
+    /// its allocation — must leave `out` equal to what
+    /// [`Workload::payload_from_wire`] returns for the same bytes.
+    fn payload_from_wire_into(
+        &self,
+        b: &[u8],
+        out: &mut Self::Payload,
+    ) -> Result<(), String> {
+        *out = self.payload_from_wire(b)?;
+        Ok(())
     }
 
     /// Encode the observation snapshot of one node: everything
@@ -265,24 +347,43 @@ impl Workload for ConsensusWorkload {
         &self,
         node: &mut Vec<f64>,
         i: usize,
-        _r: usize,
+        r: usize,
         plan: &GossipPlan,
         avail: &[Option<&Vec<f64>>],
     ) {
-        let row = plan.neighbors(i);
-        let mut out = vec![0.0f64; node.len()];
-        plan.gossip_row_partial(
+        let mut scratch = vec![0.0f64; node.len()];
+        self.combine_into(node, i, r, plan, avail, &mut scratch);
+    }
+
+    fn alloc_payload(&self, node: &Vec<f64>) -> Vec<f64> {
+        vec![0.0; node.len()]
+    }
+
+    fn make_payload_into(&self, node: &Vec<f64>, out: &mut Vec<f64>) {
+        out.clone_from(node);
+    }
+
+    fn combine_into(
+        &self,
+        node: &mut Vec<f64>,
+        i: usize,
+        _r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Vec<f64>>],
+        scratch: &mut Vec<f64>,
+    ) {
+        // `avail` is slot-indexed in neighbor-row order, so `avail[k]` IS
+        // slot k — no per-neighbor peer-id search. Gossip into the
+        // scratch buffer, then swap it in as the node's new value (the
+        // node's old buffer becomes next round's scratch).
+        scratch.resize(node.len(), 0.0);
+        plan.gossip_row_slots(
             i,
             node,
-            |j| {
-                row.binary_search_by_key(&j, |&(p, _)| p)
-                    .ok()
-                    .and_then(|k| avail[k])
-                    .map(|v| v.as_slice())
-            },
-            &mut out,
+            |k| avail[k].map(|v| v.as_slice()),
+            scratch,
         );
-        *node = out;
+        std::mem::swap(node, scratch);
     }
 
     fn initial_record(&self, nodes: &[Vec<f64>]) -> Option<RoundRecord> {
@@ -343,6 +444,28 @@ impl Workload for ConsensusWorkload {
         let v = r.get_vec_f64()?;
         r.expect_end()?;
         Ok(v)
+    }
+
+    fn payload_wire_into(
+        &self,
+        p: &Vec<f64>,
+        w: &mut ByteWriter,
+    ) -> Result<(), String> {
+        // Byte-identical to put_bytes(payload_to_wire(p)): the encoding
+        // is one u64 count + the f64 bits, so its length is closed-form.
+        w.put_usize(8 + 8 * p.len());
+        w.put_vec_f64(p);
+        Ok(())
+    }
+
+    fn payload_from_wire_into(
+        &self,
+        b: &[u8],
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        let mut r = ByteReader::new(b);
+        r.get_vec_f64_into(out)?;
+        r.expect_end()
     }
 
     fn node_to_wire(
@@ -514,34 +637,68 @@ impl Workload for TrainingWorkload<'_> {
         plan: &GossipPlan,
         avail: &[Option<&Vec<Vec<f32>>>],
     ) {
+        let mut scratch = Vec::with_capacity(self.n_msgs);
+        self.combine_into(node, i, r, plan, avail, &mut scratch);
+    }
+
+    fn alloc_payload(&self, _node: &TrainNode) -> Vec<Vec<f32>> {
+        Vec::with_capacity(self.n_msgs)
+    }
+
+    fn make_payload_into(&self, node: &TrainNode, out: &mut Vec<Vec<f32>>) {
+        // clone_from reuses both the slot vector and each slot's
+        // allocation when shapes match (every steady-state round).
+        out.clone_from(&node.pending);
+    }
+
+    fn combine_into(
+        &self,
+        node: &mut TrainNode,
+        i: usize,
+        r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Vec<Vec<f32>>>],
+        scratch: &mut Vec<Vec<f32>>,
+    ) {
         let lr = self.cfg.lr_at(r) as f32;
-        let row = plan.neighbors(i);
-        let mut mixed = Vec::with_capacity(self.n_msgs);
+        // Shape the persistent mix buffers (no-op in steady state: the
+        // recycled buffers below already have length d).
+        scratch.truncate(self.n_msgs);
+        while scratch.len() < self.n_msgs {
+            scratch.push(Vec::new());
+        }
         let mut used_any = 0usize;
-        for m in 0..self.n_msgs {
-            let mut out = vec![0.0f32; self.d];
-            let used = gossip_combine(
+        for (m, out) in scratch.iter_mut().enumerate() {
+            out.resize(self.d, 0.0);
+            // `avail` is slot-indexed in neighbor-row order: `avail[k]`
+            // IS slot k — no per-neighbor peer-id search.
+            let used = gossip_combine_slots(
                 plan,
                 i,
                 self.damping,
                 &node.pending[m],
-                |j| {
-                    row.binary_search_by_key(&j, |&(p, _)| p)
-                        .ok()
-                        .and_then(|k| avail[k])
-                        .and_then(|b| b.get(m))
-                        .map(|v| v.as_slice())
+                |k| {
+                    avail[k].and_then(|b| b.get(m)).map(|v| v.as_slice())
                 },
-                &mut out,
+                out,
             );
             used_any = used_any.max(used);
-            mixed.push(out);
         }
-        node.pending = Vec::new();
         // A node is "active" when at least one neighbor payload mixed in
-        // (identical to `plan.is_active` under full delivery).
+        // (identical to `plan.is_active` under full delivery). post_mix
+        // consumes the mixed buffers by value; the node's previous
+        // parameter vector is recycled as next round's first mix buffer,
+        // so one-message optimizers (the DSGD family default) allocate no
+        // d-sized buffer in steady state. Multi-message optimizers
+        // (gradient tracking) retain their extra mixed buffers in
+        // optimizer state, so the extra slots are re-allocated each round
+        // until the pre_mix/post_mix contract learns buffer reuse (see
+        // ROADMAP "Optimizer-message buffer reuse"); the small
+        // message-list header also still crosses post_mix by value.
+        let mixed = std::mem::take(scratch);
         let new = node.opt.post_mix(mixed, &node.params, lr, used_any > 0);
-        node.params = new;
+        let old = std::mem::replace(&mut node.params, new);
+        scratch.push(old);
     }
 
     fn is_eval(&self, r: usize, rounds: usize) -> bool {
@@ -621,6 +778,41 @@ impl Workload for TrainingWorkload<'_> {
         }
         r.expect_end()?;
         Ok(p)
+    }
+
+    fn payload_wire_into(
+        &self,
+        p: &Vec<Vec<f32>>,
+        w: &mut ByteWriter,
+    ) -> Result<(), String> {
+        // Byte-identical to put_bytes(payload_to_wire(p)): one u64 slot
+        // count plus, per slot, a u64 count and the f32 bits.
+        let len = 8 + p.iter().map(|s| 8 + 4 * s.len()).sum::<usize>();
+        w.put_usize(len);
+        w.put_usize(p.len());
+        for slot in p {
+            w.put_vec_f32(slot);
+        }
+        Ok(())
+    }
+
+    fn payload_from_wire_into(
+        &self,
+        b: &[u8],
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<(), String> {
+        let mut r = ByteReader::new(b);
+        let slots = r.get_usize()?;
+        out.truncate(slots);
+        // Grow read-driven (a hostile slot count errors on the first
+        // missing vector instead of pre-reserving).
+        for m in 0..slots {
+            match out.get_mut(m) {
+                Some(buf) => r.get_vec_f32_into(buf)?,
+                None => out.push(r.get_vec_f32()?),
+            }
+        }
+        r.expect_end()
     }
 
     fn node_to_wire(
@@ -847,6 +1039,95 @@ pub(crate) fn decode_wire_spec(bytes: &[u8]) -> Result<DecodedSpec, String> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Legacy-path forwarder
+// ---------------------------------------------------------------------------
+
+/// Forwards a workload's *allocating* methods only, hiding its
+/// scratch-buffer overrides so every executor falls back on the legacy
+/// defaults (`alloc_payload`/`make_payload_into`/`combine_into` delegate
+/// to `make_payload`/`combine`, exactly as an un-migrated external
+/// `Workload` impl would behave).
+///
+/// Two users: `basegraph bench` measures it against the scratch path to
+/// report the engine speedup, and `tests/exec_equivalence.rs` pins that
+/// the two paths are bit-identical. Wire methods are deliberately not
+/// forwarded — the process backend refuses this wrapper, which is fine
+/// for both users.
+pub struct AllocatingWorkload<W: Workload>(W);
+
+impl<W: Workload> AllocatingWorkload<W> {
+    pub fn new(inner: W) -> Self {
+        AllocatingWorkload(inner)
+    }
+}
+
+impl<W: Workload> Workload for AllocatingWorkload<W> {
+    type Node = W::Node;
+    type Payload = W::Payload;
+
+    fn label(&self) -> String {
+        format!("{} [alloc]", self.0.label())
+    }
+
+    fn init_nodes(&mut self, n: usize) -> Result<Vec<Self::Node>, String> {
+        self.0.init_nodes(n)
+    }
+
+    fn comm_shape(&self) -> (usize, u64) {
+        self.0.comm_shape()
+    }
+
+    fn parallel_hint(&self) -> bool {
+        self.0.parallel_hint()
+    }
+
+    fn local_step(
+        &self,
+        node: &mut Self::Node,
+        i: usize,
+        r: usize,
+    ) -> Result<(), String> {
+        self.0.local_step(node, i, r)
+    }
+
+    fn make_payload(&self, node: &Self::Node) -> Self::Payload {
+        self.0.make_payload(node)
+    }
+
+    fn combine(
+        &self,
+        node: &mut Self::Node,
+        i: usize,
+        r: usize,
+        plan: &GossipPlan,
+        avail: &[Option<&Self::Payload>],
+    ) {
+        self.0.combine(node, i, r, plan, avail)
+    }
+
+    fn initial_record(&self, nodes: &[Self::Node]) -> Option<RoundRecord> {
+        self.0.initial_record(nodes)
+    }
+
+    fn is_eval(&self, r: usize, rounds: usize) -> bool {
+        self.0.is_eval(r, rounds)
+    }
+
+    fn observe(
+        &self,
+        nodes: &[Self::Node],
+        r: usize,
+        eval: bool,
+    ) -> Result<RoundRecord, String> {
+        self.0.observe(nodes, r, eval)
+    }
+
+    fn finals(&self, nodes: &[Self::Node]) -> Vec<Vec<f64>> {
+        self.0.finals(nodes)
+    }
+}
+
 /// The deterministic quadratic benchmark the cross-backend tests and the
 /// process-backend worker registry share: node `i` minimizes
 /// `0.5‖x − c_i‖²` with all targets `c_i ~ N(0, 3²)` drawn from one
@@ -999,6 +1280,159 @@ mod tests {
         let mut br = ByteReader::new(&bytes);
         assert_eq!(TrainSpec::decode(&mut br).unwrap(), spec);
         br.expect_end().unwrap();
+    }
+
+    #[test]
+    fn consensus_scratch_path_matches_allocating_path() {
+        let plan = GossipPlan::from_undirected(
+            3,
+            &[(0, 1, 0.25), (0, 2, 0.25)],
+        );
+        let xs: Vec<Vec<f64>> = vec![vec![1.0, -3.0], vec![5.0, 0.5],
+            vec![9.0, 2.0]];
+        let w = ConsensusWorkload::new(xs.clone());
+        for avail in [
+            vec![Some(&xs[1]), Some(&xs[2])],
+            vec![Some(&xs[1]), None],
+            vec![None, None],
+        ] {
+            let mut legacy = xs[0].clone();
+            w.combine(&mut legacy, 0, 0, &plan, &avail);
+            let mut node = xs[0].clone();
+            let mut scratch = w.alloc_payload(&node);
+            assert_eq!(scratch.len(), node.len());
+            w.combine_into(&mut node, 0, 0, &plan, &avail, &mut scratch);
+            assert_eq!(node, legacy, "scratch path diverged");
+            // The swap hands the node's old buffer back as scratch; a
+            // second use (fresh avail) must still be correct.
+            w.combine_into(&mut node, 0, 0, &plan, &avail, &mut scratch);
+            let mut twice = legacy.clone();
+            w.combine(&mut twice, 0, 0, &plan, &avail);
+            assert_eq!(node, twice, "reused scratch diverged");
+        }
+        // make_payload_into reuses the buffer and snapshots exactly.
+        let mut buf = vec![0.0; 7];
+        w.make_payload_into(&xs[2], &mut buf);
+        assert_eq!(buf, xs[2]);
+        assert_eq!(buf, w.make_payload(&xs[2]));
+    }
+
+    #[test]
+    fn training_scratch_path_matches_allocating_path() {
+        for optimizer in [
+            OptimizerKind::Dsgdm { momentum: 0.9 },
+            OptimizerKind::GradientTracking,
+            OptimizerKind::D2,
+        ] {
+            let n = 4;
+            let cfg = TrainConfig {
+                rounds: 6,
+                lr: 0.3,
+                warmup: 1,
+                cosine: true,
+                optimizer,
+                eval_every: 0,
+                threads: 1,
+                ..Default::default()
+            };
+            let plan = GossipPlan::from_undirected(
+                n,
+                &[(0, 1, 0.25), (1, 2, 0.25), (2, 3, 0.25), (0, 3, 0.25)],
+            );
+            // Walk both paths over several rounds with full delivery and
+            // with a dropped payload; params must agree to the bit.
+            let run = |scratch_path: bool| -> Vec<Vec<f32>> {
+                let (model, data) = quadratic_fixed_targets(n, 3, 9);
+                let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+                let mut nodes = w.init_nodes(n).unwrap();
+                let mut scratches: Vec<Vec<Vec<f32>>> =
+                    (0..n).map(|_| Vec::new()).collect();
+                for r in 0..cfg.rounds {
+                    for (i, node) in nodes.iter_mut().enumerate() {
+                        w.local_step(node, i, r).unwrap();
+                    }
+                    let payloads: Vec<Vec<Vec<f32>>> =
+                        nodes.iter().map(|s| w.make_payload(s)).collect();
+                    for i in 0..n {
+                        let row = plan.neighbors(i);
+                        let avail: Vec<Option<&Vec<Vec<f32>>>> = row
+                            .iter()
+                            .enumerate()
+                            .map(|(k, &(j, _))| {
+                                // Drop slot 1 of node 0 in round 2.
+                                if r == 2 && i == 0 && k == 1 {
+                                    None
+                                } else {
+                                    Some(&payloads[j])
+                                }
+                            })
+                            .collect();
+                        if scratch_path {
+                            w.combine_into(
+                                &mut nodes[i],
+                                i,
+                                r,
+                                &plan,
+                                &avail,
+                                &mut scratches[i],
+                            );
+                        } else {
+                            w.combine(&mut nodes[i], i, r, &plan, &avail);
+                        }
+                    }
+                }
+                nodes.iter().map(|s| s.params.clone()).collect()
+            };
+            let legacy = run(false);
+            let scratch = run(true);
+            assert_eq!(
+                legacy,
+                scratch,
+                "{}: scratch path diverged",
+                cfg.optimizer.label()
+            );
+        }
+    }
+
+    #[test]
+    fn payload_wire_into_matches_allocating_codec() {
+        // Consensus: encoding and re-decode-into round-trip exactly.
+        let init = vec![vec![1.5, -2.25], vec![0.0, 9.0]];
+        let w = ConsensusWorkload::new(init.clone());
+        let mut bw = ByteWriter::new();
+        w.payload_wire_into(&init[0], &mut bw).unwrap();
+        let mut expect = ByteWriter::new();
+        expect.put_bytes(&w.payload_to_wire(&init[0]).unwrap());
+        assert_eq!(bw.finish(), expect.finish());
+        let enc = w.payload_to_wire(&init[0]).unwrap();
+        let mut buf = vec![7.0; 9];
+        w.payload_from_wire_into(&enc, &mut buf).unwrap();
+        assert_eq!(buf, init[0]);
+        // Training: same, including the multi-slot layout.
+        let cfg = TrainConfig {
+            optimizer: OptimizerKind::GradientTracking,
+            threads: 1,
+            ..Default::default()
+        };
+        let (model, data) = quadratic_fixed_targets(2, 3, 1);
+        let mut tw = TrainingWorkload::new(&model, &cfg, data, &[]);
+        let mut nodes = tw.init_nodes(2).unwrap();
+        tw.local_step(&mut nodes[0], 0, 0).unwrap();
+        let p = tw.make_payload(&nodes[0]);
+        assert_eq!(p.len(), 2, "gradient tracking sends two slots");
+        let mut bw = ByteWriter::new();
+        tw.payload_wire_into(&p, &mut bw).unwrap();
+        let mut expect = ByteWriter::new();
+        expect.put_bytes(&tw.payload_to_wire(&p).unwrap());
+        assert_eq!(bw.finish(), expect.finish());
+        let enc = tw.payload_to_wire(&p).unwrap();
+        let mut buf: Vec<Vec<f32>> = vec![vec![0.0; 8]; 5];
+        tw.payload_from_wire_into(&enc, &mut buf).unwrap();
+        assert_eq!(buf, p);
+        // Truncated bytes stay clean errors on the into-path too.
+        assert!(tw
+            .payload_from_wire_into(&enc[..enc.len() - 2], &mut buf)
+            .is_err());
     }
 
     #[test]

@@ -7,13 +7,18 @@
 //!   train      run one decentralized training job (native or PJRT engine)
 //!   simnet     race topologies on a simulated network (stragglers, drops)
 //!   repro      regenerate a paper table/figure (see DESIGN.md index)
+//!   bench      time the round engine (rounds/sec, bytes/round) and write
+//!              BENCH_rounds.json — the perf trajectory's data points
 //!   info       show the artifacts manifest and runtime status
 //!
 //! Run `basegraph <cmd> --help` for per-command flags.
 
 use basegraph::comm::CostModel;
 use basegraph::consensus;
-use basegraph::exec::ExecutorKind;
+use basegraph::exec::{
+    quadratic_fixed_targets, AllocatingWorkload, ConsensusWorkload,
+    ExecTrace, ExecutorKind, TrainingWorkload,
+};
 use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
@@ -21,7 +26,9 @@ use basegraph::repro::common::{
 };
 use basegraph::simnet::{ExecMode, LinkModel, Scenario};
 use basegraph::topology::{self, TopologyKind};
+use basegraph::train::TrainConfig;
 use basegraph::util::cli::Args;
+use basegraph::util::json::{self, Json};
 use basegraph::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -58,6 +65,8 @@ USAGE:
                       [--executor analytic|simnet|threaded|process]
                       [--threads N] [--shards N]
                       [--shard-balance contiguous|degree]
+  basegraph bench     [--ns 64,256] [--ds 1000,100000] [--rounds R]
+                      [--fast] [--seed S] [--out BENCH_rounds.json]
   basegraph info      [--artifacts DIR]
 
 Topology names: ring, torus, exp, onepeer-exp, onepeer-hypercube, complete,
@@ -113,6 +122,7 @@ fn main() {
         "train" => cmd_train(&args),
         "simnet" => cmd_simnet(&args),
         "repro" => repro::run(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(&args),
         other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
     };
@@ -637,6 +647,188 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             "unknown simnet workload {other:?} (consensus|train)"
         )),
     }
+}
+
+/// `basegraph bench`: the round-engine perf harness behind the BENCH
+/// trajectory. Times rounds/sec and bytes/round for the consensus and
+/// training workloads over Base-4, at every (n, d) in the grid, on the
+/// analytic and threaded backends — each cell run twice: once through
+/// the scratch-buffer pipeline (the shipping engine) and once through
+/// [`AllocatingWorkload`], which hides the scratch overrides and restores
+/// the legacy clone-per-round path. The per-cell `speedup` column is the
+/// allocation churn's measured price; results land in `--out`
+/// (`BENCH_rounds.json`).
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let out = args.str_or("out", "BENCH_rounds.json");
+    let fast = args.flag("fast");
+    let seed = args.u64_or("seed", 42)?;
+    let rounds = args.usize_or("rounds", 20)?;
+    let def_ns: &[usize] = if fast { &[64] } else { &[64, 256] };
+    let def_ds: &[usize] = if fast { &[1_000] } else { &[1_000, 100_000] };
+    let ns = args.usize_list_or("ns", def_ns)?;
+    let ds = args.usize_list_or("ds", def_ds)?;
+    if rounds == 0 {
+        return Err("--rounds must be >= 1".into());
+    }
+
+    let mut cells = Vec::new();
+    let mut rows = Vec::new();
+    for &n in &ns {
+        for &d in &ds {
+            for backend in ["analytic", "threaded"] {
+                for workload in ["consensus", "train"] {
+                    let kind = TopologyKind::Base { m: 4 };
+                    let seq = kind.build(n, seed)?;
+                    let exec = ExecutorKind::parse(backend)?;
+                    let run = |alloc: bool| -> Result<ExecTrace, String> {
+                        if workload == "consensus" {
+                            let mut rng = Rng::new(seed);
+                            let init = consensus::gaussian_init(
+                                n, d, &mut rng,
+                            );
+                            if alloc {
+                                let mut w = AllocatingWorkload::new(
+                                    ConsensusWorkload::new(init),
+                                );
+                                exec.run(&mut w, &seq, rounds)
+                            } else {
+                                let mut w = ConsensusWorkload::new(init);
+                                exec.run(&mut w, &seq, rounds)
+                            }
+                        } else {
+                            let cfg = TrainConfig {
+                                rounds,
+                                lr: 0.05,
+                                warmup: 0,
+                                cosine: false,
+                                optimizer: OptimizerKind::Dsgdm {
+                                    momentum: 0.9,
+                                },
+                                eval_every: 0,
+                                threads: 0,
+                                cost: CostModel::default(),
+                            };
+                            let (model, data) =
+                                quadratic_fixed_targets(n, d, seed);
+                            if alloc {
+                                let mut w = AllocatingWorkload::new(
+                                    TrainingWorkload::new(
+                                        &model, &cfg, data, &[],
+                                    ),
+                                );
+                                exec.run(&mut w, &seq, rounds)
+                            } else {
+                                let mut w = TrainingWorkload::new(
+                                    &model, &cfg, data, &[],
+                                );
+                                exec.run(&mut w, &seq, rounds)
+                            }
+                        }
+                    };
+                    // Rate of the round loop itself: per-record wall
+                    // clocks bracket exactly the rounds between the
+                    // first and last record, excluding the identical
+                    // one-time setup (init_nodes clones the full n×d
+                    // state) that would otherwise dilute the engine
+                    // comparison. Falls back to the whole-run clock on
+                    // degenerate traces.
+                    let loop_rate = |tr: &ExecTrace| -> f64 {
+                        let rec = &tr.run.records;
+                        match (rec.first(), rec.last()) {
+                            (Some(a), Some(b))
+                                if b.round > a.round
+                                    && b.wall_seconds > a.wall_seconds =>
+                            {
+                                (b.round - a.round) as f64
+                                    / (b.wall_seconds - a.wall_seconds)
+                            }
+                            _ => {
+                                rounds as f64 / tr.wall_seconds.max(1e-12)
+                            }
+                        }
+                    };
+                    // Two interleaved passes per engine, best rate kept:
+                    // the first alloc pass warms page/file caches for
+                    // everyone, so neither engine gets a cold-start
+                    // penalty and one noisy sample cannot decide the
+                    // speedup column.
+                    let mut ta_wall = f64::INFINITY;
+                    let mut ts_wall = f64::INFINITY;
+                    let mut rps_a = 0.0f64;
+                    let mut rps_s = 0.0f64;
+                    let mut bpr = 0.0f64;
+                    for _ in 0..2 {
+                        let ta = run(true)?;
+                        let ts = run(false)?;
+                        rps_a = rps_a.max(loop_rate(&ta));
+                        rps_s = rps_s.max(loop_rate(&ts));
+                        ta_wall = ta_wall.min(ta.wall_seconds);
+                        ts_wall = ts_wall.min(ts.wall_seconds);
+                        bpr = ts.ledger.bytes as f64 / rounds as f64;
+                    }
+                    let speedup = rps_s / rps_a.max(1e-12);
+                    rows.push(vec![
+                        workload.to_string(),
+                        n.to_string(),
+                        d.to_string(),
+                        backend.to_string(),
+                        format!("{rps_a:.1}"),
+                        format!("{rps_s:.1}"),
+                        format!("{speedup:.2}×"),
+                        format!("{:.2}", bpr / 1e6),
+                    ]);
+                    cells.push(Json::obj(vec![
+                        ("workload", Json::str(workload)),
+                        ("topology", Json::str("base-4")),
+                        ("n", Json::num(n as f64)),
+                        ("d", Json::num(d as f64)),
+                        ("backend", Json::str(backend)),
+                        ("rounds", Json::num(rounds as f64)),
+                        ("wall_seconds_alloc", Json::num(ta_wall)),
+                        ("wall_seconds_scratch", Json::num(ts_wall)),
+                        ("rounds_per_sec_alloc", Json::num(rps_a)),
+                        ("rounds_per_sec_scratch", Json::num(rps_s)),
+                        ("speedup", Json::num(speedup)),
+                        ("bytes_per_round", Json::num(bpr)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("name", Json::str("BENCH_rounds")),
+        (
+            "generated_by",
+            Json::str("basegraph bench (alloc = legacy allocating engine \
+                       via AllocatingWorkload, scratch = shipping \
+                       zero-allocation engine)"),
+        ),
+        ("seed", Json::num(seed as f64)),
+        ("cells", Json::arr(cells)),
+    ]);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(&out, json::write(&doc) + "\n")
+        .map_err(|e| format!("write {out}: {e}"))?;
+    print_table(
+        &format!("round-engine bench, {rounds} rounds/cell (JSON: {out})"),
+        &[
+            "workload",
+            "n",
+            "d",
+            "backend",
+            "rounds/s alloc",
+            "rounds/s scratch",
+            "speedup",
+            "MB/round",
+        ],
+        &rows,
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<(), String> {

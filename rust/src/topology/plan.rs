@@ -192,6 +192,15 @@ impl GossipPlan {
         &self.entries[self.offsets[i]..self.offsets[i + 1]]
     }
 
+    /// The range node `i`'s row occupies in the flat CSR entry array —
+    /// the coordinates of its neighbor *slots*. Slot `k` of node `i` is
+    /// `neighbors(i)[k]`; the executors' availability tables are laid out
+    /// flat in exactly these ranges.
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+
     /// Node `i`'s self-weight (the diagonal entry of the dense view).
     #[inline]
     pub fn self_weight(&self, i: usize) -> f64 {
@@ -277,10 +286,27 @@ impl GossipPlan {
         out: &mut [f64],
     ) -> usize {
         let row = self.neighbors(i);
+        self.gossip_row_slots(i, own, |k| get(row[k].0), out)
+    }
+
+    /// The slot-indexed twin of [`GossipPlan::gossip_row_partial`]:
+    /// `get(k)` is keyed by *neighbor-slot position* `k` (the index into
+    /// `neighbors(i)` / [`GossipPlan::row_range`]) instead of by peer id —
+    /// the form the executors' availability tables serve directly, with no
+    /// per-neighbor peer-id lookup. Arithmetic (including the missing-peer
+    /// renormalization) is bit-identical to the peer-keyed form.
+    pub fn gossip_row_slots<'a>(
+        &self,
+        i: usize,
+        own: &[f64],
+        get: impl Fn(usize) -> Option<&'a [f64]>,
+        out: &mut [f64],
+    ) -> usize {
+        let row = self.neighbors(i);
         let mut missing = 0.0f64;
         let mut any_missing = false;
-        for &(j, w) in row {
-            if get(j).is_none() {
+        for (k, &(_, w)) in row.iter().enumerate() {
+            if get(k).is_none() {
                 missing += w;
                 any_missing = true;
             }
@@ -301,8 +327,8 @@ impl GossipPlan {
             *o = sw * x;
         }
         let mut used = 0;
-        for &(j, w) in row {
-            if let Some(xj) = get(j) {
+        for (k, &(_, w)) in row.iter().enumerate() {
+            if let Some(xj) = get(k) {
                 let wj = w * scale;
                 for (o, &x) in out.iter_mut().zip(xj) {
                     *o += wj * x;
@@ -539,6 +565,47 @@ mod tests {
             &mut out,
         );
         assert!((out[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slot_indexed_gossip_matches_peer_keyed() {
+        let p = GossipPlan::from_undirected(
+            4,
+            &[(0, 1, 0.25), (0, 2, 0.25), (0, 3, 0.125), (1, 2, 0.25)],
+        );
+        let xs: Vec<Vec<f64>> =
+            (0..4).map(|i| vec![i as f64 * 0.9 - 1.1, 2.5]).collect();
+        for i in 0..4 {
+            let row = p.neighbors(i);
+            assert_eq!(p.row_range(i).len(), row.len());
+            // All present, and with slot 0 missing: slot-keyed and
+            // peer-keyed forms must agree to the bit.
+            for drop_slot in [None, Some(0usize)] {
+                let by_peer = |j: usize| {
+                    let k = row
+                        .binary_search_by_key(&j, |&(pj, _)| pj)
+                        .expect("peer in row");
+                    if drop_slot == Some(k) {
+                        None
+                    } else {
+                        Some(xs[j].as_slice())
+                    }
+                };
+                let by_slot = |k: usize| {
+                    if drop_slot == Some(k) {
+                        None
+                    } else {
+                        Some(xs[row[k].0].as_slice())
+                    }
+                };
+                let mut a = vec![0.0; 2];
+                let mut b = vec![0.0; 2];
+                let ua = p.gossip_row_partial(i, &xs[i], by_peer, &mut a);
+                let ub = p.gossip_row_slots(i, &xs[i], by_slot, &mut b);
+                assert_eq!(ua, ub, "row {i}");
+                assert_eq!(a, b, "row {i} drop={drop_slot:?}");
+            }
+        }
     }
 
     #[test]

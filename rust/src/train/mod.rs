@@ -42,13 +42,30 @@ pub fn gossip_combine<'a>(
     get: impl Fn(usize) -> Option<&'a [f32]>,
     out: &mut [f32],
 ) -> usize {
+    let row = plan.neighbors(i);
+    gossip_combine_slots(plan, i, damping, own, |k| get(row[k].0), out)
+}
+
+/// The slot-indexed twin of [`gossip_combine`]: `get(k)` is keyed by
+/// *neighbor-slot position* `k` (the index into `plan.neighbors(i)`)
+/// instead of by peer id — the form the executors' availability tables
+/// serve directly, so the hot combine does no per-neighbor peer-id
+/// lookup. Arithmetic is bit-identical to the peer-keyed form.
+pub fn gossip_combine_slots<'a>(
+    plan: &GossipPlan,
+    i: usize,
+    damping: f32,
+    own: &[f32],
+    get: impl Fn(usize) -> Option<&'a [f32]>,
+    out: &mut [f32],
+) -> usize {
     let sw0 = plan.self_weight(i) as f32 * (1.0 - damping) + damping;
     let row = plan.neighbors(i);
     let mut missing = 0.0f32;
     let mut any_missing = false;
-    for &(j, wij) in row {
+    for (k, &(_, wij)) in row.iter().enumerate() {
         let wf = wij as f32 * (1.0 - damping);
-        if wf != 0.0 && get(j).is_none() {
+        if wf != 0.0 && get(k).is_none() {
             missing += wf;
             any_missing = true;
         }
@@ -68,12 +85,12 @@ pub fn gossip_combine<'a>(
         *o = sw * s;
     }
     let mut used = 0;
-    for &(j, wij) in row {
+    for (k, &(_, wij)) in row.iter().enumerate() {
         let wf = wij as f32 * (1.0 - damping);
         if wf == 0.0 {
             continue;
         }
-        if let Some(src) = get(j) {
+        if let Some(src) = get(k) {
             let w = wf * scale;
             for (o, &s) in out.iter_mut().zip(src) {
                 *o += w * s;

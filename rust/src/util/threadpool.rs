@@ -79,31 +79,53 @@ impl ThreadPool {
         self.size
     }
 
-    /// Run `f(i, &mut items[i])` for every element, in parallel, then join.
-    ///
-    /// SAFETY argument for the lifetime erasure below: each index in
-    /// 0..n is claimed by exactly one worker via the atomic counter, so
-    /// no element is aliased; the latch blocks this frame until every
-    /// job has finished, so the borrows of `items` and `f` cannot escape.
+    /// Run `f(i, &mut items[i])` for every element, in parallel, then
+    /// join. Thin wrapper over [`ThreadPool::for_each_mut2`] with a
+    /// zero-sized second slice (free — `Vec<()>` never allocates and the
+    /// pointer arithmetic on it is a no-op), so the unsafe dispatch
+    /// machinery exists exactly once.
     pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
     where
         T: Send,
         F: Fn(usize, &mut T) + Sync,
     {
-        let n = items.len();
+        let mut units = vec![(); items.len()];
+        self.for_each_mut2(items, &mut units, |i, item, _| f(i, item));
+    }
+
+    /// Run `f(i, &mut a[i], &mut b[i])` for every index, in parallel, then
+    /// join — the core dispatch ([`ThreadPool::for_each_mut`] is a
+    /// zero-cost wrapper over this). The lock-step engines use the
+    /// two-slice form to pair each node with its persistent
+    /// combine-scratch buffer without zipping into a fresh Vec per round.
+    ///
+    /// SAFETY argument for the lifetime erasure below: every index in
+    /// 0..n is claimed by exactly one worker via the atomic counter, the
+    /// two slices are checked equal-length and their elements are
+    /// disjoint, and the latch blocks this frame until every job has
+    /// finished, so the borrows of `a`, `b` and `f` cannot escape.
+    pub fn for_each_mut2<T, U, F>(&self, a: &mut [T], b: &mut [U], f: F)
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut T, &mut U) + Sync,
+    {
+        let n = a.len();
+        assert_eq!(n, b.len(), "for_each_mut2: slice lengths differ");
         if n == 0 {
             return;
         }
         let workers = self.size.min(n);
         if workers == 1 {
-            for (i, item) in items.iter_mut().enumerate() {
-                f(i, item);
+            for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                f(i, x, y);
             }
             return;
         }
         let next = Arc::new(AtomicUsize::new(0));
         let latch = Latch::new(workers);
-        let base = items.as_mut_ptr() as usize;
+        let base_a = a.as_mut_ptr() as usize;
+        let base_b = b.as_mut_ptr() as usize;
         let f_addr = &f as *const F as usize;
         let sender = self.sender.as_ref().expect("pool alive");
         for _ in 0..workers {
@@ -118,8 +140,9 @@ impl ThreadPool {
                     if i >= n {
                         break;
                     }
-                    let item = unsafe { &mut *(base as *mut T).add(i) };
-                    f(i, item);
+                    let x = unsafe { &mut *(base_a as *mut T).add(i) };
+                    let y = unsafe { &mut *(base_b as *mut U).add(i) };
+                    f(i, x, y);
                 }
                 latch.count_down();
             });
@@ -162,6 +185,39 @@ mod tests {
         for (i, x) in items.iter().enumerate() {
             assert_eq!(*x, i as u64 + 1);
         }
+    }
+
+    #[test]
+    fn for_each_mut2_pairs_slices_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let mut a = vec![0u64; 513];
+        let mut b: Vec<u64> = (0..513).collect();
+        pool.for_each_mut2(&mut a, &mut b, |i, x, y| {
+            *x = i as u64 + *y;
+            *y += 1;
+        });
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(*x, 2 * i as u64);
+            assert_eq!(*y, i as u64 + 1);
+        }
+        // Single-worker and empty paths.
+        let solo = ThreadPool::new(1);
+        let mut a = vec![0u8; 3];
+        let mut b = vec![0u8; 3];
+        solo.for_each_mut2(&mut a, &mut b, |i, x, _| *x = i as u8);
+        assert_eq!(a, vec![0, 1, 2]);
+        let mut e1: Vec<u8> = vec![];
+        let mut e2: Vec<u8> = vec![];
+        pool.for_each_mut2(&mut e1, &mut e2, |_, _, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "slice lengths differ")]
+    fn for_each_mut2_rejects_mismatched_lengths() {
+        let pool = ThreadPool::new(2);
+        let mut a = vec![0u8; 4];
+        let mut b = vec![0u8; 5];
+        pool.for_each_mut2(&mut a, &mut b, |_, _, _| {});
     }
 
     #[test]

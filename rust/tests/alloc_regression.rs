@@ -1,0 +1,95 @@
+//! Allocation regression: steady-state rounds of the analytic backend on
+//! the consensus workload must not touch the heap.
+//!
+//! A counting allocator wraps the system one and the pin is
+//! *differential*: two runs that differ only in extra steady-state rounds
+//! must perform exactly the same number of heap allocations — every
+//! buffer (mailboxes, combine scratch, availability table, the records
+//! vector's reserved capacity) is created at warmup and reused
+//! thereafter, so the extra rounds cost zero allocations. An absolute
+//! count would be brittle against unrelated one-time costs; the delta is
+//! exact.
+//!
+//! This file deliberately holds a single test: the counter is global to
+//! the test binary, and a concurrently running test would pollute it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use basegraph::consensus::gaussian_init;
+use basegraph::exec::{AnalyticExecutor, ConsensusWorkload, Executor};
+use basegraph::topology::TopologyKind;
+use basegraph::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_consensus_rounds_allocate_nothing() {
+    let n = 32;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let sweep = seq.len();
+    let mut rng = Rng::new(11);
+    let init = gaussian_init(n, 16, &mut rng);
+
+    // Allocations of one full run at `rounds` rounds. Everything inside
+    // differs between calls only by the number of steady-state rounds:
+    // same init clone, same warmup (first sweep), same single
+    // reserved-records allocation, same finals/label epilogue.
+    let count = |rounds: usize| -> u64 {
+        let mut w = ConsensusWorkload::new(init.clone());
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let tr = AnalyticExecutor::serial().run(&mut w, &seq, rounds).unwrap();
+        let after = ALLOCS.load(Ordering::SeqCst);
+        // Keep the run honest before any drop happens.
+        assert_eq!(tr.run.records.len(), rounds + 1);
+        assert!(tr.final_error().is_finite());
+        after - before
+    };
+
+    // One throwaway run first so lazily initialized runtime state (stdio
+    // locks, timer calibration, …) cannot skew the comparison.
+    let _ = count(2 * sweep);
+    let base = count(2 * sweep);
+    let longer = count(6 * sweep);
+    assert_eq!(
+        longer, base,
+        "steady-state rounds hit the allocator: a {}-round run cost \
+         {longer} allocations vs {base} for {} rounds — the scratch \
+         pipeline regressed",
+        6 * sweep,
+        2 * sweep
+    );
+    // Sanity: the harness is actually counting (warmup does allocate).
+    assert!(base > 0);
+}

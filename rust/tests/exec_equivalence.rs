@@ -10,8 +10,8 @@
 
 use basegraph::consensus::gaussian_init;
 use basegraph::exec::{
-    quadratic_fixed_targets, ConsensusWorkload, ExecTrace, ExecutorKind,
-    TrainSpec, TrainingWorkload,
+    quadratic_fixed_targets, AllocatingWorkload, ConsensusWorkload,
+    ExecTrace, ExecutorKind, TrainSpec, TrainingWorkload,
 };
 use basegraph::optim::OptimizerKind;
 use basegraph::simnet::SimConfig;
@@ -114,6 +114,88 @@ fn training_final_params_are_bit_identical_across_backends() {
                     "{} vs {}: loss diverged at round {}",
                     a.backend, b.backend, x.round
                 );
+                assert_eq!(
+                    x.consensus_error.is_nan(),
+                    y.consensus_error.is_nan()
+                );
+                if !x.consensus_error.is_nan() {
+                    assert_eq!(x.consensus_error, y.consensus_error);
+                }
+            }
+        }
+    }
+}
+
+/// The scratch-buffer pipeline may not change a single output bit: a
+/// workload stripped of its scratch overrides (`AllocatingWorkload` —
+/// every engine then falls back to the legacy allocating defaults, the
+/// path an un-migrated external `Workload` impl takes) must produce
+/// bit-identical finals, error curves and per-round records on every
+/// in-process backend.
+#[test]
+fn scratch_and_legacy_allocating_paths_are_bit_identical() {
+    let in_process = || {
+        vec![
+            ExecutorKind::analytic(),
+            ExecutorKind::Simnet(SimConfig::ideal()),
+            ExecutorKind::threaded(3),
+        ]
+    };
+    for n in [8usize, 64] {
+        let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+        // Consensus.
+        let mut rng = Rng::new(13);
+        let init = gaussian_init(n, 3, &mut rng);
+        let iters = 2 * seq.len();
+        for exec in in_process() {
+            let s = exec
+                .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+                .unwrap();
+            let a = exec
+                .run(
+                    &mut AllocatingWorkload::new(ConsensusWorkload::new(
+                        init.clone(),
+                    )),
+                    &seq,
+                    iters,
+                )
+                .unwrap();
+            assert_eq!(
+                s.finals, a.finals,
+                "{}: consensus scratch path diverged at n={n}",
+                s.backend
+            );
+            assert_eq!(s.errors(), a.errors(), "{} n={n}", s.backend);
+        }
+        // Training (momentum exercises multi-buffer post_mix recycling).
+        let cfg = TrainConfig {
+            rounds: 12,
+            lr: 0.2,
+            warmup: 2,
+            cosine: true,
+            optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+            eval_every: 4,
+            threads: 2,
+            ..Default::default()
+        };
+        for exec in in_process() {
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+            let s = exec.run(&mut w, &seq, cfg.rounds).unwrap();
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = AllocatingWorkload::new(TrainingWorkload::new(
+                &model, &cfg, data, &[],
+            ));
+            let a = exec.run(&mut w, &seq, cfg.rounds).unwrap();
+            assert_eq!(
+                s.finals, a.finals,
+                "{}: training scratch path diverged at n={n}",
+                s.backend
+            );
+            assert_eq!(s.run.records.len(), a.run.records.len());
+            for (x, y) in s.run.records.iter().zip(&a.run.records) {
+                assert_eq!(x.round, y.round);
+                assert_eq!(x.train_loss, y.train_loss);
                 assert_eq!(
                     x.consensus_error.is_nan(),
                     y.consensus_error.is_nan()
