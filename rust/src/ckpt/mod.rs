@@ -1,0 +1,698 @@
+//! Checkpoint/resume: round-boundary snapshots with a deterministic
+//! replay contract.
+//!
+//! A [`Snapshot`] captures everything a run needs to continue
+//! **bit-exactly** from a round boundary: per-node workload states
+//! (opaque byte blobs produced by
+//! [`Workload::node_ckpt`](crate::exec::Workload::node_ckpt)), the
+//! [`CommLedger`] (including measured `bytes_on_wire` and the simulated
+//! clock), the record prefix of the eventual
+//! [`ExecTrace`](crate::exec::ExecTrace), and — for the event-driven
+//! backend — the virtual clock plus the network RNG cursor. The on-disk
+//! format follows the wire-protocol conventions of `exec/wire.rs`: a
+//! magic byte, a version byte, a frame kind, a little-endian length,
+//! exact f64/f32 bit patterns in the body, and a CRC-32 over the body.
+//!
+//! ```text
+//!  offset  size  field
+//!  0       1     CKPT_MAGIC (0xC6)
+//!  1       1     CKPT_VERSION (1)
+//!  2       1     kind (KIND_SNAPSHOT = 1)
+//!  3       4     body length, u32 LE
+//!  7       len   body (ByteWriter layout, exact bit patterns)
+//!  7+len   4     CRC-32 over the body, u32 LE
+//! ```
+//!
+//! Corruption is a **typed** error ([`CkptError`]), never a panic or
+//! silent garbage: wrong magic, wrong version, truncation at any offset
+//! and a flipped body byte each map to their own variant — mirroring the
+//! wire-protocol negative tests.
+//!
+//! # Determinism contract
+//!
+//! A run checkpointed at round *r* and resumed from that snapshot is
+//! bit-identical to the uninterrupted run — final states, records, and
+//! the ledger's model columns (`messages`, `bytes`, `sim_seconds`,
+//! `rounds`). The *measured* columns (`wall_seconds`,
+//! `bytes_on_wire` / `cum_wire_bytes`) are clocks and byte counters of
+//! what physically happened, so a resumed process-backend run pays a
+//! second handshake and its wire counter differs; everything the
+//! arithmetic touches is pinned by `tests/exec_equivalence.rs`.
+
+use std::path::{Path, PathBuf};
+
+use crate::comm::CommLedger;
+use crate::exec::wire::{crc32, ByteReader, ByteWriter};
+use crate::metrics::RoundRecord;
+
+/// First byte of every checkpoint file (the wire protocol uses 0xB6).
+pub const CKPT_MAGIC: u8 = 0xC6;
+/// Bump on any body-layout change; old snapshots then fail loudly with
+/// [`CkptError::VersionMismatch`] instead of decoding garbage.
+pub const CKPT_VERSION: u8 = 1;
+/// Frame kind of a full run snapshot (room for future kinds).
+pub const KIND_SNAPSHOT: u8 = 1;
+
+/// Typed checkpoint-format errors — the contract of the negative tests:
+/// every way a snapshot file can be wrong has a name.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CkptError {
+    /// First byte is not [`CKPT_MAGIC`] — not a checkpoint file.
+    BadMagic(u8),
+    /// A checkpoint written by a different format version.
+    VersionMismatch { found: u8 },
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// The file ends before the declared layout does.
+    Truncated { what: &'static str },
+    /// CRC-32 over the body does not match the stored checksum.
+    ChecksumMismatch,
+    /// Header and checksum are fine but the body does not decode.
+    Malformed(String),
+    /// Filesystem-level failure (open/read/write/rename).
+    Io(String),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::BadMagic(b) => write!(
+                f,
+                "bad checkpoint magic 0x{b:02X} (expected 0x{CKPT_MAGIC:02X} \
+                 — not a basegraph checkpoint)"
+            ),
+            CkptError::VersionMismatch { found } => write!(
+                f,
+                "checkpoint format version mismatch: file is v{found}, \
+                 this binary reads v{CKPT_VERSION}"
+            ),
+            CkptError::BadKind(k) => {
+                write!(f, "unknown checkpoint frame kind {k}")
+            }
+            CkptError::Truncated { what } => write!(
+                f,
+                "truncated checkpoint ({what}): file ends before the \
+                 declared layout does"
+            ),
+            CkptError::ChecksumMismatch => write!(
+                f,
+                "checkpoint checksum mismatch — the snapshot body is \
+                 corrupt"
+            ),
+            CkptError::Malformed(e) => {
+                write!(f, "malformed checkpoint body: {e}")
+            }
+            CkptError::Io(e) => write!(f, "checkpoint io: {e}"),
+        }
+    }
+}
+
+impl From<CkptError> for String {
+    fn from(e: CkptError) -> String {
+        e.to_string()
+    }
+}
+
+/// Everything a run needs to continue bit-exactly from a round boundary.
+///
+/// `nodes[i]` is the opaque per-node state blob produced by
+/// [`Workload::node_ckpt`](crate::exec::Workload::node_ckpt) — the
+/// snapshot layer never interprets it, so new workloads get durable
+/// snapshots by implementing two methods. `round` counts *completed*
+/// rounds: a resumed run starts its loop at `round`.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Topology name (`GraphSequence::name`); validated on resume.
+    pub topology: String,
+    pub n: usize,
+    /// Rounds completed when the snapshot was taken; resume starts here.
+    pub round: usize,
+    /// Per-node workload state blobs, in node order (`len == n`).
+    pub nodes: Vec<Vec<u8>>,
+    /// Communication ledger at the boundary (model columns exact; the
+    /// measured `bytes_on_wire` is a counter of what physically
+    /// happened and restarts semantics on resume — see module docs).
+    pub ledger: CommLedger,
+    /// The record prefix of the eventual `ExecTrace`.
+    pub records: Vec<RoundRecord>,
+    /// Simnet BSP virtual clock at the boundary (0 elsewhere). The BSP
+    /// event queue is empty at every round boundary by construction, so
+    /// the clock plus the RNG cursor below *is* the full event state.
+    pub clock: f64,
+    /// Network RNG cursor (xoshiro256++ state words + the cached
+    /// Box–Muller spare), present for snapshots taken by the simnet
+    /// backend.
+    pub rng: Option<([u64; 4], Option<f64>)>,
+}
+
+fn put_record(w: &mut ByteWriter, r: &RoundRecord) {
+    w.put_usize(r.round);
+    w.put_f64(r.train_loss);
+    w.put_f64(r.consensus_error);
+    w.put_f64(r.test_loss);
+    w.put_f64(r.test_acc);
+    w.put_u64(r.cum_messages);
+    w.put_u64(r.cum_bytes);
+    w.put_u64(r.cum_wire_bytes);
+    w.put_f64(r.sim_seconds);
+    w.put_f64(r.wall_seconds);
+}
+
+fn get_record(r: &mut ByteReader) -> Result<RoundRecord, String> {
+    Ok(RoundRecord {
+        round: r.get_usize()?,
+        train_loss: r.get_f64()?,
+        consensus_error: r.get_f64()?,
+        test_loss: r.get_f64()?,
+        test_acc: r.get_f64()?,
+        cum_messages: r.get_u64()?,
+        cum_bytes: r.get_u64()?,
+        cum_wire_bytes: r.get_u64()?,
+        sim_seconds: r.get_f64()?,
+        wall_seconds: r.get_f64()?,
+    })
+}
+
+impl Snapshot {
+    /// Encode the snapshot as complete file bytes (header + body + CRC).
+    pub fn to_file_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_str(&self.topology);
+        w.put_usize(self.n);
+        w.put_usize(self.round);
+        w.put_u64(self.ledger.messages);
+        w.put_u64(self.ledger.bytes);
+        w.put_f64(self.ledger.sim_seconds);
+        w.put_u64(self.ledger.rounds);
+        w.put_u64(self.ledger.bytes_on_wire);
+        w.put_f64(self.clock);
+        match &self.rng {
+            None => w.put_u8(0),
+            Some((s, spare)) => {
+                w.put_u8(1);
+                for &word in s {
+                    w.put_u64(word);
+                }
+                match spare {
+                    None => w.put_u8(0),
+                    Some(z) => {
+                        w.put_u8(1);
+                        w.put_f64(*z);
+                    }
+                }
+            }
+        }
+        w.put_usize(self.records.len());
+        for rec in &self.records {
+            put_record(&mut w, rec);
+        }
+        w.put_usize(self.nodes.len());
+        for blob in &self.nodes {
+            w.put_bytes(blob);
+        }
+        let body = w.finish();
+        let mut out = Vec::with_capacity(11 + body.len());
+        out.push(CKPT_MAGIC);
+        out.push(CKPT_VERSION);
+        out.push(KIND_SNAPSHOT);
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out
+    }
+
+    fn decode_body(body: &[u8]) -> Result<Snapshot, String> {
+        let mut r = ByteReader::new(body);
+        let topology = r.get_str()?.to_string();
+        let n = r.get_usize()?;
+        let round = r.get_usize()?;
+        let ledger = CommLedger {
+            messages: r.get_u64()?,
+            bytes: r.get_u64()?,
+            sim_seconds: r.get_f64()?,
+            rounds: r.get_u64()?,
+            bytes_on_wire: r.get_u64()?,
+        };
+        let clock = r.get_f64()?;
+        let rng = match r.get_u8()? {
+            0 => None,
+            1 => {
+                let mut s = [0u64; 4];
+                for word in &mut s {
+                    *word = r.get_u64()?;
+                }
+                let spare = match r.get_u8()? {
+                    0 => None,
+                    1 => Some(r.get_f64()?),
+                    other => {
+                        return Err(format!("bad rng spare flag {other}"))
+                    }
+                };
+                Some((s, spare))
+            }
+            other => return Err(format!("bad rng presence flag {other}")),
+        };
+        let n_records = r.get_usize()?;
+        let mut records = Vec::with_capacity(n_records.min(1 << 20));
+        for _ in 0..n_records {
+            records.push(get_record(&mut r)?);
+        }
+        let n_nodes = r.get_usize()?;
+        if n_nodes != n {
+            return Err(format!(
+                "snapshot stores {n_nodes} node states for n = {n}"
+            ));
+        }
+        let mut nodes = Vec::with_capacity(n_nodes.min(1 << 20));
+        for _ in 0..n_nodes {
+            nodes.push(r.get_bytes()?.to_vec());
+        }
+        r.expect_end()?;
+        Ok(Snapshot {
+            topology,
+            n,
+            round,
+            nodes,
+            ledger,
+            records,
+            clock,
+            rng,
+        })
+    }
+
+    /// Decode complete file bytes, with every corruption mode a typed
+    /// error.
+    pub fn from_file_bytes(buf: &[u8]) -> Result<Snapshot, CkptError> {
+        if buf.is_empty() {
+            return Err(CkptError::Truncated { what: "header" });
+        }
+        if buf[0] != CKPT_MAGIC {
+            return Err(CkptError::BadMagic(buf[0]));
+        }
+        if buf.len() < 2 {
+            return Err(CkptError::Truncated { what: "header" });
+        }
+        if buf[1] != CKPT_VERSION {
+            return Err(CkptError::VersionMismatch { found: buf[1] });
+        }
+        if buf.len() < 7 {
+            return Err(CkptError::Truncated { what: "header" });
+        }
+        if buf[2] != KIND_SNAPSHOT {
+            return Err(CkptError::BadKind(buf[2]));
+        }
+        let len =
+            u32::from_le_bytes([buf[3], buf[4], buf[5], buf[6]]) as usize;
+        let total = 7usize
+            .checked_add(len)
+            .and_then(|x| x.checked_add(4))
+            .ok_or(CkptError::Truncated { what: "length field" })?;
+        if buf.len() < total {
+            return Err(CkptError::Truncated { what: "body" });
+        }
+        if buf.len() > total {
+            return Err(CkptError::Malformed(format!(
+                "{} trailing bytes after the checksum",
+                buf.len() - total
+            )));
+        }
+        let body = &buf[7..7 + len];
+        let stored = u32::from_le_bytes([
+            buf[7 + len],
+            buf[8 + len],
+            buf[9 + len],
+            buf[10 + len],
+        ]);
+        if crc32(body) != stored {
+            return Err(CkptError::ChecksumMismatch);
+        }
+        Snapshot::decode_body(body).map_err(CkptError::Malformed)
+    }
+
+    /// Load and fully validate a snapshot file.
+    pub fn load(path: &Path) -> Result<Snapshot, CkptError> {
+        let buf = std::fs::read(path).map_err(|e| {
+            CkptError::Io(format!("read {}: {e}", path.display()))
+        })?;
+        Snapshot::from_file_bytes(&buf)
+    }
+
+    /// Check a loaded snapshot against the run it is asked to continue.
+    /// `rounds` is the total round count of the resumed run.
+    pub fn validate(
+        &self,
+        n: usize,
+        topology: &str,
+        rounds: usize,
+    ) -> Result<(), String> {
+        if self.n != n {
+            return Err(format!(
+                "snapshot is for n = {} nodes, run has n = {n}",
+                self.n
+            ));
+        }
+        if self.topology != topology {
+            return Err(format!(
+                "snapshot is for topology {:?}, run uses {topology:?}",
+                self.topology
+            ));
+        }
+        if self.round > rounds {
+            return Err(format!(
+                "snapshot is at round {} but the run only has {rounds} \
+                 rounds",
+                self.round
+            ));
+        }
+        if self.nodes.len() != self.n {
+            return Err(format!(
+                "snapshot stores {} node states for n = {}",
+                self.nodes.len(),
+                self.n
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// When and where to write snapshots: every `every_n_rounds` completed
+/// rounds, into `dir`, keeping the `keep_last` newest files.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Snapshot after every this many completed rounds (0 disables).
+    pub every_n_rounds: usize,
+    pub dir: PathBuf,
+    /// How many snapshot files to retain (0 = keep everything).
+    pub keep_last: usize,
+}
+
+impl CheckpointPolicy {
+    /// Is a snapshot due after round `r` completes? (Round indices are
+    /// 0-based: `due(r)` ⇔ `r + 1` is a multiple of the cadence.)
+    pub fn due(&self, r: usize) -> bool {
+        self.every_n_rounds > 0 && (r + 1) % self.every_n_rounds == 0
+    }
+
+    /// Canonical file path for a snapshot taken after `round` completed
+    /// rounds — zero-padded so lexicographic order is round order.
+    pub fn path_for(&self, round: usize) -> PathBuf {
+        self.dir.join(format!("ckpt-{round:08}.bgc"))
+    }
+
+    /// Write a snapshot atomically (temp file + rename) and rotate old
+    /// files down to `keep_last`.
+    pub fn save(&self, snap: &Snapshot) -> Result<PathBuf, String> {
+        std::fs::create_dir_all(&self.dir).map_err(|e| {
+            format!("create checkpoint dir {}: {e}", self.dir.display())
+        })?;
+        let path = self.path_for(snap.round);
+        let tmp = self.dir.join(format!(".ckpt-{:08}.tmp", snap.round));
+        std::fs::write(&tmp, snap.to_file_bytes())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            format!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })?;
+        self.rotate()?;
+        Ok(path)
+    }
+
+    fn rotate(&self) -> Result<(), String> {
+        if self.keep_last == 0 {
+            return Ok(());
+        }
+        let mut snaps: Vec<PathBuf> = std::fs::read_dir(&self.dir)
+            .map_err(|e| {
+                format!("list checkpoint dir {}: {e}", self.dir.display())
+            })?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|f| f.to_str())
+                    .map(|f| f.starts_with("ckpt-") && f.ends_with(".bgc"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        // Zero-padded round numbers: name order is round order.
+        snaps.sort();
+        while snaps.len() > self.keep_last {
+            let old = snaps.remove(0);
+            std::fs::remove_file(&old).map_err(|e| {
+                format!("rotate checkpoint {}: {e}", old.display())
+            })?;
+        }
+        Ok(())
+    }
+}
+
+/// The checkpoint/resume knobs of one run: an optional write policy and
+/// an optional snapshot to resume from. The all-`None` default is a
+/// plain run; every executor accepts that for free.
+#[derive(Debug, Clone, Default)]
+pub struct CkptConfig {
+    pub policy: Option<CheckpointPolicy>,
+    pub resume: Option<PathBuf>,
+}
+
+impl CkptConfig {
+    /// Does this config ask the executor to do anything at all?
+    pub fn is_active(&self) -> bool {
+        self.policy.is_some() || self.resume.is_some()
+    }
+
+    /// Parse the CLI surface shared by `train`, `simnet` and `repro`:
+    /// `--checkpoint-every N` (0 = off), `--checkpoint-dir PATH`
+    /// (default `checkpoints`), `--checkpoint-keep K` (default 3) and
+    /// `--resume <ckpt file>`.
+    pub fn from_args(
+        args: &crate::util::cli::Args,
+    ) -> Result<CkptConfig, String> {
+        let every = args.usize_or("checkpoint-every", 0)?;
+        let keep = args.usize_or("checkpoint-keep", 3)?;
+        let dir = args.str_or("checkpoint-dir", "checkpoints");
+        let policy = (every > 0).then(|| CheckpointPolicy {
+            every_n_rounds: every,
+            dir: PathBuf::from(dir),
+            keep_last: keep,
+        });
+        let resume = args.get("resume").map(PathBuf::from);
+        Ok(CkptConfig { policy, resume })
+    }
+
+    /// Scope this config to one run of a multi-run sweep: the checkpoint
+    /// dir (and a directory-valued `resume`) gain a sanitized `label`
+    /// subdirectory, so concurrent runs in one sweep never rotate each
+    /// other's `ckpt-NNNNNNNN.bgc` files. A file-valued `resume` is left
+    /// alone (it already names one specific snapshot). Inactive configs
+    /// scope to themselves — zero cost on the default path.
+    pub fn scoped(&self, label: &str) -> CkptConfig {
+        if !self.is_active() {
+            return self.clone();
+        }
+        let sub: String = label
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || "._-".contains(c) {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        CkptConfig {
+            policy: self.policy.as_ref().map(|p| CheckpointPolicy {
+                every_n_rounds: p.every_n_rounds,
+                dir: p.dir.join(&sub),
+                keep_last: p.keep_last,
+            }),
+            resume: self.resume.as_ref().map(|r| {
+                if r.is_dir() {
+                    r.join(&sub)
+                } else {
+                    r.clone()
+                }
+            }),
+        }
+    }
+
+    /// Load and validate the snapshot named by `--resume`, if any.
+    ///
+    /// A *file* path must exist and parse — resuming from a named
+    /// snapshot that is gone is an error. A *directory* path is the
+    /// lenient crash-recovery form: the newest `ckpt-*.bgc` inside is
+    /// loaded, and an empty or missing directory simply starts fresh
+    /// (that is what "resume whatever progress exists" means on the
+    /// first attempt).
+    pub fn load_resume(
+        &self,
+        n: usize,
+        topology: &str,
+        rounds: usize,
+    ) -> Result<Option<Snapshot>, String> {
+        let path = match &self.resume {
+            None => return Ok(None),
+            Some(path) => path,
+        };
+        let file = if path.is_dir() {
+            match newest_snapshot_in(path)? {
+                Some(f) => f,
+                None => return Ok(None),
+            }
+        } else if path.exists() {
+            path.clone()
+        } else if self.resume_dir_like(path) {
+            return Ok(None);
+        } else {
+            return Err(format!(
+                "resume checkpoint {} does not exist",
+                path.display()
+            ));
+        };
+        let snap = Snapshot::load(&file).map_err(String::from)?;
+        snap.validate(n, topology, rounds)?;
+        Ok(Some(snap))
+    }
+
+    /// Does a missing resume path look like a directory request (no
+    /// `.bgc` extension)? Those start fresh instead of erroring, so
+    /// `--resume <dir>` works on the very first attempt of a run.
+    fn resume_dir_like(&self, path: &Path) -> bool {
+        path.extension().map(|e| e != "bgc").unwrap_or(true)
+    }
+}
+
+/// The lexicographically last `ckpt-*.bgc` in `dir` — zero-padded round
+/// numbers make that the newest snapshot.
+fn newest_snapshot_in(dir: &Path) -> Result<Option<PathBuf>, String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("list resume dir {}: {e}", dir.display()))?;
+    Ok(entries
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|f| f.to_str())
+                .map(|f| f.starts_with("ckpt-") && f.ends_with(".bgc"))
+                .unwrap_or(false)
+        })
+        .max())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        let ledger = CommLedger {
+            messages: 42,
+            bytes: 4200,
+            sim_seconds: 0.125,
+            rounds: 6,
+            bytes_on_wire: 999,
+        };
+        Snapshot {
+            topology: "Base-4 Graph".into(),
+            n: 3,
+            round: 6,
+            nodes: vec![vec![1, 2, 3], vec![], vec![255; 9]],
+            ledger,
+            records: vec![
+                RoundRecord {
+                    round: 5,
+                    train_loss: 0.5,
+                    consensus_error: f64::NAN,
+                    test_loss: f64::NAN,
+                    test_acc: f64::NAN,
+                    cum_messages: 42,
+                    cum_bytes: 4200,
+                    cum_wire_bytes: 999,
+                    sim_seconds: 0.125,
+                    wall_seconds: 0.001,
+                },
+            ],
+            clock: 1.5,
+            rng: Some(([1, 2, 3, 4], Some(-0.25))),
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly() {
+        let s = sample_snapshot();
+        let bytes = s.to_file_bytes();
+        let back = Snapshot::from_file_bytes(&bytes).unwrap();
+        assert_eq!(back.topology, s.topology);
+        assert_eq!(back.n, s.n);
+        assert_eq!(back.round, s.round);
+        assert_eq!(back.nodes, s.nodes);
+        assert_eq!(back.ledger.messages, s.ledger.messages);
+        assert_eq!(back.ledger.bytes, s.ledger.bytes);
+        assert_eq!(
+            back.ledger.sim_seconds.to_bits(),
+            s.ledger.sim_seconds.to_bits()
+        );
+        assert_eq!(back.ledger.rounds, s.ledger.rounds);
+        assert_eq!(back.ledger.bytes_on_wire, s.ledger.bytes_on_wire);
+        assert_eq!(back.clock.to_bits(), s.clock.to_bits());
+        assert_eq!(back.rng, s.rng);
+        assert_eq!(back.records.len(), 1);
+        let (a, b) = (&back.records[0], &s.records[0]);
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert!(a.consensus_error.is_nan());
+        assert_eq!(a.cum_wire_bytes, b.cum_wire_bytes);
+        assert!(back.validate(3, "Base-4 Graph", 10).is_ok());
+        assert!(back.validate(4, "Base-4 Graph", 10).is_err());
+        assert!(back.validate(3, "Ring", 10).is_err());
+        assert!(back.validate(3, "Base-4 Graph", 5).is_err());
+    }
+
+    #[test]
+    fn policy_due_and_paths() {
+        let p = CheckpointPolicy {
+            every_n_rounds: 3,
+            dir: PathBuf::from("/tmp/x"),
+            keep_last: 2,
+        };
+        assert!(!p.due(0));
+        assert!(!p.due(1));
+        assert!(p.due(2)); // 3 rounds completed
+        assert!(p.due(5));
+        assert_eq!(
+            p.path_for(12),
+            PathBuf::from("/tmp/x/ckpt-00000012.bgc")
+        );
+        let off = CheckpointPolicy { every_n_rounds: 0, ..p };
+        assert!(!off.due(0) && !off.due(99));
+    }
+
+    #[test]
+    fn config_parses_cli_flags() {
+        let raw: Vec<String> = [
+            "--checkpoint-every",
+            "5",
+            "--checkpoint-dir",
+            "/tmp/ck",
+            "--checkpoint-keep",
+            "7",
+            "--resume",
+            "/tmp/ck/ckpt-00000005.bgc",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = crate::util::cli::Args::parse(&raw, &[]).unwrap();
+        let c = CkptConfig::from_args(&args).unwrap();
+        assert!(c.is_active());
+        let p = c.policy.unwrap();
+        assert_eq!(p.every_n_rounds, 5);
+        assert_eq!(p.dir, PathBuf::from("/tmp/ck"));
+        assert_eq!(p.keep_last, 7);
+        assert_eq!(
+            c.resume,
+            Some(PathBuf::from("/tmp/ck/ckpt-00000005.bgc"))
+        );
+        let none = CkptConfig::from_args(
+            &crate::util::cli::Args::parse(&[], &[]).unwrap(),
+        )
+        .unwrap();
+        assert!(!none.is_active());
+    }
+}

@@ -140,9 +140,31 @@ pub fn consensus_experiment(
     seed: u64,
     exec: &ExecutorKind,
 ) -> Result<ExecTrace, String> {
+    consensus_experiment_ckpt(
+        seq,
+        iters,
+        seed,
+        exec,
+        &crate::ckpt::CkptConfig::default(),
+    )
+}
+
+/// [`consensus_experiment`] with checkpoint/resume: `ckpt.policy` writes
+/// round-boundary snapshots, `ckpt.resume` restores one and continues.
+/// The Gaussian init is always re-derived from `seed` — a resumed run
+/// overwrites it from the snapshot, so the seed must match the original
+/// run for the replay to be meaningful (the snapshot pins topology, n
+/// and round budget itself).
+pub fn consensus_experiment_ckpt(
+    seq: &GraphSequence,
+    iters: usize,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+) -> Result<ExecTrace, String> {
     let mut rng = Rng::new(seed);
     let init = gaussian_init(seq.n, 1, &mut rng);
-    exec.run(&mut ConsensusWorkload::new(init), seq, iters)
+    exec.run_ckpt(&mut ConsensusWorkload::new(init), seq, iters, ckpt)
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@ use std::time::Instant;
 
 use super::scratch::AvailTable;
 use super::{ExecTrace, Executor, Workload};
+use crate::ckpt::{CkptConfig, Snapshot};
 use crate::comm::{CommLedger, CostModel};
 use crate::metrics::RunResult;
 use crate::simnet::event::Trace;
@@ -54,6 +55,16 @@ impl Executor for AnalyticExecutor {
         seq: &GraphSequence,
         rounds: usize,
     ) -> Result<ExecTrace, String> {
+        self.run_ckpt(w, seq, rounds, &CkptConfig::default())
+    }
+
+    fn run_ckpt<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
         let (_, slot_bytes) = w.comm_shape();
         let pool = if w.parallel_hint() && self.threads != 1 {
             Some(if self.threads == 0 {
@@ -75,6 +86,7 @@ impl Executor for AnalyticExecutor {
             pool.as_ref(),
             parallel_combine,
             "analytic",
+            ckpt,
         )
     }
 }
@@ -97,6 +109,14 @@ impl Executor for AnalyticExecutor {
 /// ([`AvailTable`]) instead of collecting a fresh `Vec<Option<&Payload>>`
 /// per node. The allocation-regression test (`tests/alloc_regression.rs`)
 /// pins this.
+///
+/// Checkpointing: `ckpt.resume` restores node states, ledger and record
+/// history from a round-boundary [`Snapshot`] and continues at its round
+/// (the initial record is part of the restored history, never re-taken);
+/// `ckpt.policy` writes snapshots after due rounds commit. The lock-step
+/// clock is implicit (the α–β ledger), so a snapshot's `clock`/`rng`
+/// fields stay at their inert defaults here.
+#[allow(clippy::too_many_arguments)] // internal engine; callers are the two backends
 pub(super) fn run_lockstep<W: Workload>(
     w: &mut W,
     seq: &GraphSequence,
@@ -105,6 +125,7 @@ pub(super) fn run_lockstep<W: Workload>(
     pool: Option<&ThreadPool>,
     parallel_combine: bool,
     backend: &'static str,
+    ckpt: &CkptConfig,
 ) -> Result<ExecTrace, String> {
     let n = seq.n;
     if n == 0 {
@@ -121,9 +142,22 @@ pub(super) fn run_lockstep<W: Workload>(
     let (n_slots, slot_bytes) = w.comm_shape();
     let mut ledger = CommLedger::default();
     let mut records = Vec::with_capacity(rounds + 1);
-    if let Some(mut rec) = w.initial_record(&nodes) {
-        rec.wall_seconds = t0.elapsed().as_secs_f64();
-        records.push(rec);
+    let mut start_round = 0usize;
+    match ckpt.load_resume(n, &seq.name, rounds)? {
+        Some(snap) => {
+            for (node, blob) in nodes.iter_mut().zip(&snap.nodes) {
+                w.node_restore(node, blob)?;
+            }
+            ledger = snap.ledger;
+            records = snap.records;
+            start_round = snap.round;
+        }
+        None => {
+            if let Some(mut rec) = w.initial_record(&nodes) {
+                rec.wall_seconds = t0.elapsed().as_secs_f64();
+                records.push(rec);
+            }
+        }
     }
     // Double-buffered mailboxes: `front` is what every node reads this
     // round, `back` is where fresh payloads are published; they swap at
@@ -137,7 +171,7 @@ pub(super) fn run_lockstep<W: Workload>(
     let mut avail: AvailTable<W::Payload> = AvailTable::new();
     let failure: Mutex<Option<(usize, String)>> = Mutex::new(None);
 
-    for r in 0..rounds {
+    for r in start_round..rounds {
         let plan = seq.phase(r);
 
         // 1. Local step on every node.
@@ -223,6 +257,24 @@ pub(super) fn run_lockstep<W: Workload>(
         rec.sim_seconds = ledger.sim_seconds;
         rec.wall_seconds = t0.elapsed().as_secs_f64();
         records.push(rec);
+
+        // 7. Round-boundary snapshot, when due.
+        if let Some(pol) = ckpt.policy.as_ref().filter(|p| p.due(r)) {
+            let snap = Snapshot {
+                topology: seq.name.clone(),
+                n,
+                round: r + 1,
+                nodes: nodes
+                    .iter()
+                    .map(|s| w.node_ckpt(s))
+                    .collect::<Result<_, String>>()?,
+                ledger: ledger.clone(),
+                records: records.clone(),
+                clock: 0.0,
+                rng: None,
+            };
+            pol.save(&snap)?;
+        }
     }
 
     let finals = w.finals(&nodes);

@@ -54,10 +54,11 @@
 //! # Buffer ownership
 //!
 //! Steady-state rounds allocate nothing in the engines themselves —
-//! zero heap allocations end to end for consensus on the serial analytic
-//! backend (pinned by `tests/alloc_regression.rs`); training still pays
-//! the optimizer-contract allocations (`pre_mix` returns fresh message
-//! vectors — see ROADMAP) and the parallel paths pay per-dispatch job
+//! zero heap allocations end to end for both consensus and training on
+//! the serial analytic backend (pinned by `tests/alloc_regression.rs`;
+//! the optimizer contract's borrowing variants
+//! `pre_mix_into`/`post_mix_into` closed the last d-sized training
+//! allocations) — the parallel paths pay only per-dispatch job
 //! boxes. Executors own the payload mailboxes and per-node combine
 //! scratch, workloads write into them via
 //! the scratch-buffer methods ([`Workload::alloc_payload`],
@@ -109,6 +110,7 @@ pub use workload::{
     TrainNode, TrainSpec, TrainingWorkload, Workload,
 };
 
+use crate::ckpt::CkptConfig;
 use crate::comm::{CommLedger, CostModel};
 use crate::metrics::{RoundRecord, RunResult, TimeToTarget};
 use crate::simnet::event::Trace;
@@ -233,6 +235,32 @@ pub trait Executor {
         seq: &GraphSequence,
         rounds: usize,
     ) -> Result<ExecTrace, String>;
+
+    /// [`Executor::run`] under a checkpoint/resume configuration: honor
+    /// `ckpt.resume` by restoring a [`crate::ckpt::Snapshot`] before the
+    /// first executed round, and `ckpt.policy` by writing round-boundary
+    /// snapshots as they come due. The resumed run must be bit-identical
+    /// to the uninterrupted one in every model column (finals, records,
+    /// ledger counts — `tests/exec_equivalence.rs` pins it); only the
+    /// measured columns (`wall_seconds`, `bytes_on_wire`) may differ.
+    ///
+    /// The default runs plainly when checkpointing is inactive and
+    /// refuses cleanly otherwise, so backends opt in explicitly.
+    fn run_ckpt<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
+        if ckpt.is_active() {
+            return Err(format!(
+                "the {} backend does not support checkpoint/resume",
+                self.backend()
+            ));
+        }
+        self.run(w, seq, rounds)
+    }
 }
 
 /// CLI-facing backend selector:
@@ -413,21 +441,36 @@ impl ExecutorKind {
         seq: &GraphSequence,
         rounds: usize,
     ) -> Result<ExecTrace, String> {
+        self.run_ckpt(w, seq, rounds, &CkptConfig::default())
+    }
+
+    /// Dispatch with a checkpoint/resume configuration (the CLI's
+    /// `--checkpoint-every`/`--resume` path; see [`CkptConfig`]).
+    pub fn run_ckpt<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
         match self {
             ExecutorKind::Analytic { cost, threads } => {
                 AnalyticExecutor { cost: *cost, threads: *threads }
-                    .run(w, seq, rounds)
+                    .run_ckpt(w, seq, rounds, ckpt)
             }
             ExecutorKind::Simnet(sim) => {
-                SimnetExecutor::new(sim.clone()).run(w, seq, rounds)
+                SimnetExecutor::new(sim.clone())
+                    .run_ckpt(w, seq, rounds, ckpt)
             }
             ExecutorKind::Threaded { cost, threads } => {
-                ThreadedExecutor::new(*cost, *threads).run(w, seq, rounds)
+                ThreadedExecutor::new(*cost, *threads)
+                    .run_ckpt(w, seq, rounds, ckpt)
             }
             ExecutorKind::Process { cost, shards, balanced, worker_bin } => {
                 let mut ex = ProcessExecutor::new(*cost, *shards)
                     .with_balanced(*balanced);
                 ex.worker_bin = worker_bin.clone();
+                ex.ckpt = ckpt.clone();
                 ex.run(w, seq, rounds)
             }
         }

@@ -40,7 +40,14 @@
 //!
 //! A worker crash, a truncated frame, a checksum mismatch or a silent
 //! hang all surface as clean errors on the coordinator (per-frame read
-//! timeout, [`ProcessExecutor::io_timeout`]) — never a deadlock. The
+//! timeout, [`ProcessExecutor::io_timeout`]) — never a deadlock. With a
+//! checkpoint policy set ([`ProcessExecutor::ckpt`]), worker death is a
+//! *recovery* instead: OBS frames at due round boundaries carry each
+//! node's checkpoint blob, the coordinator assembles them into a
+//! [`Snapshot`](crate::ckpt::Snapshot), and on failure it kills the
+//! remaining workers, respawns every shard with the snapshot's states in
+//! the CONFIG frame, and replays forward from that consistent cut —
+//! bit-identical to the uninterrupted run on every model column. The
 //! listener lives on a shared namespace (temp-dir UDS path / loopback
 //! port), so every worker must echo a per-run handshake token (passed
 //! through the environment, not argv) before it is seated.
@@ -87,8 +94,9 @@ use super::workload::{
 use super::{
     ConsensusWorkload, ExecTrace, Executor, TrainingWorkload, Workload,
 };
+use crate::ckpt::{CkptConfig, Snapshot};
 use crate::comm::{CommLedger, CostModel};
-use crate::metrics::RunResult;
+use crate::metrics::{RoundRecord, RunResult};
 use crate::repro::common::{
     classification_workload, partitioned_node_data, Engine,
 };
@@ -353,8 +361,22 @@ pub struct ProcessExecutor {
     /// binaries and `target/*/examples`).
     pub worker_bin: Option<PathBuf>,
     /// Fault injection for the crash-path tests: `(shard, round)` at
-    /// which that worker aborts without a goodbye frame.
+    /// which that worker aborts at the round boundary, without a goodbye
+    /// frame.
     pub fault_crash: Option<(usize, usize)>,
+    /// Fault injection *mid-round*: `(shard, round)` at which that worker
+    /// aborts after sending its payload bundles but before receiving its
+    /// neighbors' — the worst consistent-cut violation a crash can make.
+    pub fault_crash_mid: Option<(usize, usize)>,
+    /// Checkpoint/resume configuration. With a policy set, worker death
+    /// becomes a *recovery*: the coordinator respawns the workers from
+    /// the last round-boundary snapshot and replays forward (see
+    /// [`ProcessExecutor::max_respawns`]); without one it stays a clean
+    /// abort.
+    pub ckpt: CkptConfig,
+    /// How many crash-recovery respawns one run may use before the
+    /// failure propagates as an error.
+    pub max_respawns: usize,
 }
 
 impl ProcessExecutor {
@@ -367,6 +389,9 @@ impl ProcessExecutor {
             force_tcp: false,
             worker_bin: None,
             fault_crash: None,
+            fault_crash_mid: None,
+            ckpt: CkptConfig::default(),
+            max_respawns: 2,
         }
     }
 
@@ -481,6 +506,261 @@ impl ProcessExecutor {
         }
         Ok(slots.into_iter().map(|c| c.expect("accepted")).collect())
     }
+
+    /// One spawn → configure → lock-step → finals attempt over a fresh
+    /// set of worker processes, starting at `last_snap`'s round (0 when
+    /// none). Shared accounting (`ledger`, `records`, `wire_bytes`) is
+    /// mutated in place; on `Err` the caller restores the model columns
+    /// from `last_snap` before retrying — `wire_bytes` deliberately keeps
+    /// the failed attempt's traffic, it is a *measured* column. Snapshots
+    /// taken at due round boundaries are written through the policy (when
+    /// one is set) and parked in `last_snap` for in-run recovery.
+    #[allow(clippy::too_many_arguments)] // internal engine; sole caller is run()
+    fn run_attempt<W: Workload>(
+        &self,
+        w: &W,
+        seq: &GraphSequence,
+        rounds: usize,
+        spec: &[u8],
+        splan: &ShardPlan,
+        cross: &[Vec<Vec<Vec<usize>>>],
+        faults: (Option<(usize, usize)>, Option<(usize, usize)>),
+        ckpt_every: usize,
+        t0: Instant,
+        wire_bytes: &mut u64,
+        ledger: &mut CommLedger,
+        records: &mut Vec<RoundRecord>,
+        last_snap: &mut Option<Snapshot>,
+    ) -> Result<Vec<Vec<f64>>, String> {
+        let n = seq.n;
+        let k = self.shards.clamp(1, n);
+        let start_round = last_snap.as_ref().map(|s| s.round).unwrap_or(0);
+        let (fault_crash, fault_crash_mid) = faults;
+
+        // 1. Listen, spawn, handshake.
+        let (listener, addr) = Listener::bind(self.force_tcp)?;
+        let bin = self.resolve_worker_bin()?;
+        let token = handshake_token();
+        let mut procs = WorkerProcs { children: Vec::with_capacity(k) };
+        for s in 0..k {
+            let child = Command::new(&bin)
+                .arg("--worker")
+                .arg(&addr)
+                .arg(s.to_string())
+                .env(TOKEN_ENV, format!("{token:016x}"))
+                .stdin(Stdio::null())
+                .spawn()
+                .map_err(|e| {
+                    format!("spawn worker {s} ({}): {e}", bin.display())
+                })?;
+            procs.children.push(child);
+        }
+        let mut conns = self.accept_workers(
+            &listener,
+            &mut procs,
+            k,
+            token,
+            wire_bytes,
+        )?;
+
+        // 2. Configuration: topology, shard map, workload spec, faults,
+        //    checkpoint cadence, and — when resuming — the shard's node
+        //    states from the snapshot.
+        let mut sw = ByteWriter::new();
+        wire::encode_seq(seq, &mut sw);
+        let seq_bytes = sw.finish();
+        for (s, conn) in conns.iter_mut().enumerate() {
+            let mut cw = ByteWriter::new();
+            cw.put_usize(n);
+            cw.put_usize(rounds);
+            cw.put_usize(k);
+            cw.put_usize(s);
+            for &o in &splan.owner {
+                cw.put_u32(o as u32);
+            }
+            cw.put_bytes(&seq_bytes);
+            cw.put_bytes(spec);
+            let crash = match fault_crash {
+                Some((fs, r)) if fs == s => r as u64,
+                _ => u64::MAX,
+            };
+            cw.put_u64(crash);
+            let crash_mid = match fault_crash_mid {
+                Some((fs, r)) if fs == s => r as u64,
+                _ => u64::MAX,
+            };
+            cw.put_u64(crash_mid);
+            cw.put_u64(ckpt_every as u64);
+            cw.put_u64(start_round as u64);
+            match last_snap.as_ref().filter(|_| start_round > 0) {
+                Some(snap) => {
+                    let members =
+                        (0..n).filter(|&i| splan.owner[i] == s);
+                    cw.put_usize(members.clone().count());
+                    for i in members {
+                        cw.put_u32(i as u32);
+                        cw.put_bytes(&snap.nodes[i]);
+                    }
+                }
+                None => cw.put_usize(0),
+            }
+            send(conn, FRAME_CONFIG, &cw.finish(), wire_bytes)
+                .map_err(|e| format!("configure shard {s}: {e}"))?;
+        }
+
+        let (n_slots, slot_bytes) = w.comm_shape();
+        // Reused across rounds: the observation assembly buffers and the
+        // bundle forward buffers (one per in-flight cross-shard pair).
+        let mut obs = ObsBufs::new(n);
+        let mut fwd_bufs: Vec<Vec<u8>> = Vec::new();
+        let mut fwd_dst: Vec<usize> = Vec::new();
+
+        // 3. Pre-round-0 snapshot (consensus records its initial error).
+        //    A resumed run's round-0 record is part of the restored
+        //    history — never re-taken.
+        if start_round == 0 {
+            obs.collect(
+                &mut conns,
+                INIT_ROUND,
+                &splan.owner,
+                false,
+                wire_bytes,
+            )?;
+            if let Some(mut rec) = w.initial_record_wire(&obs.slots)? {
+                rec.wall_seconds = t0.elapsed().as_secs_f64();
+                records.push(rec);
+            }
+        }
+
+        // 4. Lock-step rounds: collect bundles → forward → observe.
+        for r in start_round..rounds {
+            let pidx = r % seq.len();
+            let plan = seq.phase(r);
+            let xs = &cross[pidx];
+
+            fwd_dst.clear();
+            for s in 0..k {
+                let expected = (0..k)
+                    .filter(|&t| t != s && !xs[s][t].is_empty())
+                    .count();
+                for _ in 0..expected {
+                    if fwd_dst.len() == fwd_bufs.len() {
+                        fwd_bufs.push(Vec::new());
+                    }
+                    let buf = &mut fwd_bufs[fwd_dst.len()];
+                    let kind = recv_into(&mut conns[s], buf, wire_bytes)
+                        .map_err(|e| format!("round {r}: shard {s}: {e}"))?;
+                    if kind != FRAME_BUNDLE {
+                        return Err(format!(
+                            "round {r}: shard {s}: expected a payload \
+                             bundle, got frame kind {kind}"
+                        ));
+                    }
+                    let mut br = ByteReader::new(buf);
+                    let fr = br.get_u32()? as usize;
+                    let fsrc = br.get_u32()? as usize;
+                    let fdst = br.get_u32()? as usize;
+                    if fr != r || fsrc != s || fdst >= k || fdst == s {
+                        return Err(format!(
+                            "round {r}: shard {s}: bundle header out of \
+                             sync (round {fr}, {fsrc} → {fdst})"
+                        ));
+                    }
+                    fwd_dst.push(fdst);
+                }
+            }
+            for (payload, &dst) in fwd_bufs.iter().zip(&fwd_dst) {
+                send(&mut conns[dst], FRAME_BUNDLE, payload, wire_bytes)
+                    .map_err(|e| {
+                        format!("round {r}: forward to shard {dst}: {e}")
+                    })?;
+            }
+
+            let eval = w.is_eval(r, rounds);
+            let due = ckpt_every > 0 && (r + 1) % ckpt_every == 0;
+            obs.collect(&mut conns, r as u32, &splan.owner, due, wire_bytes)
+                .map_err(|e| format!("round {r}: {e}"))?;
+
+            // α–β accounting — identical to the analytic backend, so the
+            // simulated-seconds column stays comparable across backends;
+            // the measured counterpart is bytes_on_wire below.
+            for _ in 0..n_slots {
+                ledger.record_round_bytes(plan, slot_bytes, &self.cost);
+            }
+            ledger.bytes_on_wire = *wire_bytes;
+            let mut rec = w
+                .observe_wire(&obs.slots, r, eval)
+                .map_err(|e| format!("round {r}: {e}"))?;
+            rec.cum_messages = ledger.messages;
+            rec.cum_bytes = ledger.bytes;
+            rec.cum_wire_bytes = ledger.bytes_on_wire;
+            rec.sim_seconds = ledger.sim_seconds;
+            rec.wall_seconds = t0.elapsed().as_secs_f64();
+            records.push(rec);
+
+            // 5. Round-boundary snapshot, when due: assembled from the
+            //    OBS frames' state sections, persisted through the
+            //    policy, parked in memory for in-run crash recovery.
+            if due {
+                let snap = Snapshot {
+                    topology: seq.name.clone(),
+                    n,
+                    round: r + 1,
+                    nodes: obs.states.clone(),
+                    ledger: ledger.clone(),
+                    records: records.clone(),
+                    clock: 0.0,
+                    rng: None,
+                };
+                if let Some(pol) = self.ckpt.policy.as_ref() {
+                    pol.save(&snap)?;
+                }
+                *last_snap = Some(snap);
+            }
+        }
+
+        // 6. Finals, shutdown, reap.
+        let mut fin: Vec<Option<Vec<u8>>> = vec![None; n];
+        for (s, conn) in conns.iter_mut().enumerate() {
+            let (kind, payload) = recv(conn, wire_bytes)
+                .map_err(|e| format!("finals: shard {s}: {e}"))?;
+            if kind != FRAME_FINALS {
+                return Err(format!(
+                    "finals: shard {s}: got frame kind {kind}"
+                ));
+            }
+            let mut fr = ByteReader::new(&payload);
+            let count = fr.get_usize()?;
+            for _ in 0..count {
+                let node = fr.get_u32()? as usize;
+                if node >= n || splan.owner[node] != s {
+                    return Err(format!(
+                        "finals: shard {s}: foreign node {node}"
+                    ));
+                }
+                fin[node] = Some(fr.get_bytes()?.to_vec());
+            }
+            fr.expect_end()?;
+        }
+        let fin: Vec<Vec<u8>> = fin
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| {
+                o.ok_or_else(|| format!("no final state for node {i}"))
+            })
+            .collect::<Result<_, String>>()?;
+        let finals = w.finals_wire(&fin)?;
+        for (s, conn) in conns.iter_mut().enumerate() {
+            send(conn, FRAME_SHUTDOWN, &[], wire_bytes)
+                .map_err(|e| format!("shutdown shard {s}: {e}"))?;
+        }
+        drop(conns);
+        for c in &mut procs.children {
+            let _ = c.wait();
+        }
+        procs.children.clear();
+        Ok(finals)
+    }
 }
 
 /// Per-round observation assembly state, reused across rounds: one
@@ -490,6 +770,10 @@ struct ObsBufs {
     /// Per-node snapshot blobs, in node order; valid after a successful
     /// [`ObsBufs::collect`] until the next one overwrites them.
     slots: Vec<Vec<u8>>,
+    /// Per-node checkpoint blobs ([`Workload::node_ckpt`] form), filled
+    /// only by collects that expect the OBS frames' state section — i.e.
+    /// at checkpoint-due round boundaries.
+    states: Vec<Vec<u8>>,
     seen: Vec<bool>,
     frame: Vec<u8>,
 }
@@ -498,18 +782,22 @@ impl ObsBufs {
     fn new(n: usize) -> Self {
         ObsBufs {
             slots: vec![Vec::new(); n],
+            states: vec![Vec::new(); n],
             seen: vec![false; n],
             frame: Vec::new(),
         }
     }
 
     /// Read one OBS frame from every shard and assemble per-node snapshot
-    /// blobs in node order, reusing every buffer.
+    /// blobs in node order, reusing every buffer. `expect_states` must
+    /// match the workers' checkpoint cadence: both sides derive it from
+    /// the same `(r + 1) % every == 0` rule, so a mismatch is a desync.
     fn collect(
         &mut self,
         conns: &mut [Conn],
         marker: u32,
         owner: &[usize],
+        expect_states: bool,
         wire_bytes: &mut u64,
     ) -> Result<(), String> {
         let n = self.slots.len();
@@ -542,6 +830,29 @@ impl ObsBufs {
                 self.slots[node].clear();
                 self.slots[node].extend_from_slice(bytes);
                 self.seen[node] = true;
+            }
+            let has_states = r.get_u8()? != 0;
+            if has_states != expect_states {
+                return Err(format!(
+                    "shard {s}: checkpoint-state section {} when the \
+                     coordinator expected the opposite — cadence desync",
+                    if has_states { "present" } else { "absent" }
+                ));
+            }
+            if has_states {
+                let count = r.get_usize()?;
+                for _ in 0..count {
+                    let node = r.get_u32()? as usize;
+                    if node >= n || owner[node] != s {
+                        return Err(format!(
+                            "shard {s}: checkpoint state for foreign node \
+                             {node}"
+                        ));
+                    }
+                    let bytes = r.get_bytes()?;
+                    self.states[node].clear();
+                    self.states[node].extend_from_slice(bytes);
+                }
             }
             r.expect_end()?;
         }
@@ -587,208 +898,106 @@ impl Executor for ProcessExecutor {
             ShardPlan::contiguous(n, k)
         };
         let t0 = Instant::now();
-        let mut wire_bytes = 0u64;
-
-        // 1. Listen, spawn, handshake.
-        let (listener, addr) = Listener::bind(self.force_tcp)?;
-        let bin = self.resolve_worker_bin()?;
-        let token = handshake_token();
-        let mut procs = WorkerProcs { children: Vec::with_capacity(k) };
-        for s in 0..k {
-            let child = Command::new(&bin)
-                .arg("--worker")
-                .arg(&addr)
-                .arg(s.to_string())
-                .env(TOKEN_ENV, format!("{token:016x}"))
-                .stdin(Stdio::null())
-                .spawn()
-                .map_err(|e| {
-                    format!("spawn worker {s} ({}): {e}", bin.display())
-                })?;
-            procs.children.push(child);
-        }
-        let mut conns = self.accept_workers(
-            &listener,
-            &mut procs,
-            k,
-            token,
-            &mut wire_bytes,
-        )?;
-
-        // 2. Configuration: topology, shard map, workload spec, fault.
-        let mut sw = ByteWriter::new();
-        wire::encode_seq(seq, &mut sw);
-        let seq_bytes = sw.finish();
-        for (s, conn) in conns.iter_mut().enumerate() {
-            let mut cw = ByteWriter::new();
-            cw.put_usize(n);
-            cw.put_usize(rounds);
-            cw.put_usize(k);
-            cw.put_usize(s);
-            for &o in &splan.owner {
-                cw.put_u32(o as u32);
-            }
-            cw.put_bytes(&seq_bytes);
-            cw.put_bytes(&spec);
-            let crash = match self.fault_crash {
-                Some((fs, r)) if fs == s => r as u64,
-                _ => u64::MAX,
-            };
-            cw.put_u64(crash);
-            send(conn, FRAME_CONFIG, &cw.finish(), &mut wire_bytes)
-                .map_err(|e| format!("configure shard {s}: {e}"))?;
-        }
-
-        // 3. Per-phase cross-shard batches (what crosses which boundary).
+        // Per-phase cross-shard batches (what crosses which boundary).
         let cross: Vec<Vec<Vec<Vec<usize>>>> = seq
             .phases
             .iter()
             .map(|p| cross_shard_sources(p, &splan.owner, k))
             .collect();
 
-        let (n_slots, slot_bytes) = w.comm_shape();
+        // Resume from disk, when configured. `bytes_on_wire` is a
+        // *measured* column: it continues from the snapshot's count (the
+        // interrupted run's post-snapshot traffic died with its
+        // coordinator), so a resumed trace reports real bytes moved, not
+        // the uninterrupted run's number — the equivalence pins compare
+        // model columns only.
         let mut ledger = CommLedger::default();
-        let mut records = Vec::with_capacity(rounds + 1);
-        // Reused across rounds: the observation assembly buffers and the
-        // bundle forward buffers (one per in-flight cross-shard pair).
-        let mut obs = ObsBufs::new(n);
-        let mut fwd_bufs: Vec<Vec<u8>> = Vec::new();
-        let mut fwd_dst: Vec<usize> = Vec::new();
-
-        // 4. Pre-round-0 snapshot (consensus records its initial error).
-        obs.collect(&mut conns, INIT_ROUND, &splan.owner, &mut wire_bytes)?;
-        if let Some(mut rec) = w.initial_record_wire(&obs.slots)? {
-            rec.wall_seconds = t0.elapsed().as_secs_f64();
-            records.push(rec);
+        let mut records: Vec<RoundRecord> = Vec::with_capacity(rounds + 1);
+        let mut wire_bytes = 0u64;
+        let mut last_snap = self.ckpt.load_resume(n, &seq.name, rounds)?;
+        if let Some(snap) = &last_snap {
+            ledger = snap.ledger.clone();
+            records = snap.records.clone();
+            wire_bytes = snap.ledger.bytes_on_wire;
         }
+        let ckpt_every = self
+            .ckpt
+            .policy
+            .as_ref()
+            .map(|p| p.every_n_rounds)
+            .unwrap_or(0);
 
-        // 5. Lock-step rounds: collect bundles → forward → observe.
-        for r in 0..rounds {
-            let pidx = r % seq.len();
-            let plan = seq.phase(r);
-            let xs = &cross[pidx];
-
-            fwd_dst.clear();
-            for s in 0..k {
-                let expected = (0..k)
-                    .filter(|&t| t != s && !xs[s][t].is_empty())
-                    .count();
-                for _ in 0..expected {
-                    if fwd_dst.len() == fwd_bufs.len() {
-                        fwd_bufs.push(Vec::new());
-                    }
-                    let buf = &mut fwd_bufs[fwd_dst.len()];
-                    let kind = recv_into(&mut conns[s], buf, &mut wire_bytes)
-                        .map_err(|e| format!("round {r}: shard {s}: {e}"))?;
-                    if kind != FRAME_BUNDLE {
-                        return Err(format!(
-                            "round {r}: shard {s}: expected a payload \
-                             bundle, got frame kind {kind}"
-                        ));
-                    }
-                    let mut br = ByteReader::new(buf);
-                    let fr = br.get_u32()? as usize;
-                    let fsrc = br.get_u32()? as usize;
-                    let fdst = br.get_u32()? as usize;
-                    if fr != r || fsrc != s || fdst >= k || fdst == s {
-                        return Err(format!(
-                            "round {r}: shard {s}: bundle header out of \
-                             sync (round {fr}, {fsrc} → {fdst})"
-                        ));
-                    }
-                    fwd_dst.push(fdst);
+        // Crash recovery: every attempt runs on fresh worker processes;
+        // a failed attempt that left a round-boundary snapshot is
+        // replayed from it (all shards respawn — survivors cannot be
+        // rewound mid-round, so the whole group restarts from the same
+        // consistent cut). Fault injections fire once, then clear, which
+        // is exactly what makes the fault tests *recovery* tests.
+        let w: &W = w;
+        let mut faults = (self.fault_crash, self.fault_crash_mid);
+        let mut respawns_left = self.max_respawns;
+        loop {
+            match self.run_attempt(
+                w,
+                seq,
+                rounds,
+                &spec,
+                &splan,
+                &cross,
+                faults,
+                ckpt_every,
+                t0,
+                &mut wire_bytes,
+                &mut ledger,
+                &mut records,
+                &mut last_snap,
+            ) {
+                Ok(finals) => {
+                    ledger.bytes_on_wire = wire_bytes;
+                    return Ok(ExecTrace {
+                        backend: "process",
+                        topology: seq.name.clone(),
+                        n,
+                        max_degree: seq.max_degree(),
+                        run: RunResult {
+                            label: format!(
+                                "{} × {} [process ×{k}]",
+                                w.label(),
+                                seq.name
+                            ),
+                            records: std::mem::take(&mut records),
+                        },
+                        ledger,
+                        drops: 0,
+                        trace: Trace::new(false),
+                        wall_seconds: t0.elapsed().as_secs_f64(),
+                        finals,
+                    });
+                }
+                Err(e) => {
+                    let snap = match (&last_snap, respawns_left) {
+                        (Some(s), left) if left > 0 => s,
+                        _ => return Err(e),
+                    };
+                    respawns_left -= 1;
+                    faults = (None, None);
+                    ledger = snap.ledger.clone();
+                    records = snap.records.clone();
                 }
             }
-            for (payload, &dst) in fwd_bufs.iter().zip(&fwd_dst) {
-                send(&mut conns[dst], FRAME_BUNDLE, payload, &mut wire_bytes)
-                    .map_err(|e| {
-                        format!("round {r}: forward to shard {dst}: {e}")
-                    })?;
-            }
-
-            let eval = w.is_eval(r, rounds);
-            obs.collect(&mut conns, r as u32, &splan.owner, &mut wire_bytes)
-                .map_err(|e| format!("round {r}: {e}"))?;
-
-            // α–β accounting — identical to the analytic backend, so the
-            // simulated-seconds column stays comparable across backends;
-            // the measured counterpart is bytes_on_wire below.
-            for _ in 0..n_slots {
-                ledger.record_round_bytes(plan, slot_bytes, &self.cost);
-            }
-            ledger.bytes_on_wire = wire_bytes;
-            let mut rec = w
-                .observe_wire(&obs.slots, r, eval)
-                .map_err(|e| format!("round {r}: {e}"))?;
-            rec.cum_messages = ledger.messages;
-            rec.cum_bytes = ledger.bytes;
-            rec.cum_wire_bytes = ledger.bytes_on_wire;
-            rec.sim_seconds = ledger.sim_seconds;
-            rec.wall_seconds = t0.elapsed().as_secs_f64();
-            records.push(rec);
         }
+    }
 
-        // 6. Finals, shutdown, reap.
-        let mut fin: Vec<Option<Vec<u8>>> = vec![None; n];
-        for (s, conn) in conns.iter_mut().enumerate() {
-            let (kind, payload) = recv(conn, &mut wire_bytes)
-                .map_err(|e| format!("finals: shard {s}: {e}"))?;
-            if kind != FRAME_FINALS {
-                return Err(format!(
-                    "finals: shard {s}: got frame kind {kind}"
-                ));
-            }
-            let mut fr = ByteReader::new(&payload);
-            let count = fr.get_usize()?;
-            for _ in 0..count {
-                let node = fr.get_u32()? as usize;
-                if node >= n || splan.owner[node] != s {
-                    return Err(format!(
-                        "finals: shard {s}: foreign node {node}"
-                    ));
-                }
-                fin[node] = Some(fr.get_bytes()?.to_vec());
-            }
-            fr.expect_end()?;
-        }
-        let fin: Vec<Vec<u8>> = fin
-            .into_iter()
-            .enumerate()
-            .map(|(i, o)| {
-                o.ok_or_else(|| format!("no final state for node {i}"))
-            })
-            .collect::<Result<_, String>>()?;
-        let finals = w.finals_wire(&fin)?;
-        for (s, conn) in conns.iter_mut().enumerate() {
-            send(conn, FRAME_SHUTDOWN, &[], &mut wire_bytes)
-                .map_err(|e| format!("shutdown shard {s}: {e}"))?;
-        }
-        drop(conns);
-        for c in &mut procs.children {
-            let _ = c.wait();
-        }
-        procs.children.clear();
-
-        ledger.bytes_on_wire = wire_bytes;
-        Ok(ExecTrace {
-            backend: "process",
-            topology: seq.name.clone(),
-            n,
-            max_degree: seq.max_degree(),
-            run: RunResult {
-                label: format!(
-                    "{} × {} [process ×{k}]",
-                    w.label(),
-                    seq.name
-                ),
-                records,
-            },
-            ledger,
-            drops: 0,
-            trace: Trace::new(false),
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            finals,
-        })
+    fn run_ckpt<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
+        let mut ex = self.clone();
+        ex.ckpt = ckpt.clone();
+        Executor::run(&ex, w, seq, rounds)
     }
 }
 
@@ -804,6 +1013,18 @@ struct WorkerCtx {
     owner: Vec<usize>,
     seq: GraphSequence,
     crash_round: Option<usize>,
+    /// Mid-round fault injection: abort after sending this round's
+    /// bundles, before receiving the neighbors'.
+    crash_mid: Option<usize>,
+    /// Checkpoint cadence (0 = off): at due boundaries the OBS frame
+    /// carries each member node's [`Workload::node_ckpt`] blob.
+    ckpt_every: usize,
+    /// First round to execute; > 0 means a resume — skip the INIT
+    /// observation (the coordinator restored that history) and restore
+    /// member nodes from `resume` before the loop.
+    start_round: usize,
+    /// Per-member `(node, node_ckpt blob)` pairs when resuming.
+    resume: Vec<(usize, Vec<u8>)>,
 }
 
 /// Entry point of the hidden `basegraph --worker <addr> <shard>` mode —
@@ -859,6 +1080,16 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
     let seq_bytes = r.get_bytes()?;
     let spec_bytes = r.get_bytes()?;
     let crash = r.get_u64()?;
+    let crash_mid = r.get_u64()?;
+    let ckpt_every = r.get_u64()? as usize;
+    let start_round = r.get_u64()? as usize;
+    let resume_count = r.get_usize()?;
+    let mut resume = Vec::with_capacity(resume_count);
+    for _ in 0..resume_count {
+        let node = r.get_u32()? as usize;
+        let blob = r.get_bytes()?.to_vec();
+        resume.push((node, blob));
+    }
     r.expect_end()?;
     let mut sr = ByteReader::new(seq_bytes);
     let seq = wire::decode_seq(&mut sr)?;
@@ -874,6 +1105,10 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
         owner,
         seq,
         crash_round: (crash != u64::MAX).then_some(crash as usize),
+        crash_mid: (crash_mid != u64::MAX).then_some(crash_mid as usize),
+        ckpt_every,
+        start_round,
+        resume,
     };
     match decode_wire_spec(spec_bytes)? {
         DecodedSpec::Consensus { init } => {
@@ -902,6 +1137,11 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
     }
 }
 
+/// Ship one observation frame: per-member metric snapshots, then the
+/// state section — a flag byte, plus (at checkpoint-due boundaries) each
+/// member's full [`Workload::node_ckpt`] blob for the coordinator's
+/// snapshot assembly.
+#[allow(clippy::too_many_arguments)] // frame codec; sole caller is worker_loop
 fn send_obs<W: Workload>(
     w: &W,
     conn: &mut Conn,
@@ -909,6 +1149,7 @@ fn send_obs<W: Workload>(
     nodes: &[Option<W::Node>],
     marker: u32,
     full: bool,
+    states: bool,
     ow: &mut ByteWriter,
     sink: &mut u64,
 ) -> Result<(), String> {
@@ -919,6 +1160,15 @@ fn send_obs<W: Workload>(
         ow.put_u32(i as u32);
         let node = nodes[i].as_ref().expect("member node");
         ow.put_bytes(&w.node_to_wire(node, full)?);
+    }
+    ow.put_u8(u8::from(states));
+    if states {
+        ow.put_usize(members.len());
+        for &i in members {
+            ow.put_u32(i as u32);
+            let node = nodes[i].as_ref().expect("member node");
+            ow.put_bytes(&w.node_ckpt(node)?);
+        }
     }
     send(conn, FRAME_OBS, ow.as_slice(), sink)
 }
@@ -952,6 +1202,20 @@ fn worker_loop<W: Workload>(
         .collect();
     let members: Vec<usize> =
         (0..n).filter(|&i| ctx.owner[i] == me).collect();
+    // Resume: overwrite this shard's deterministically re-initialized
+    // nodes with the snapshot's states before any round runs.
+    if ctx.start_round > 0 {
+        for (i, blob) in &ctx.resume {
+            let node = nodes
+                .get_mut(*i)
+                .and_then(|s| s.as_mut())
+                .ok_or_else(|| {
+                    format!("resume state for foreign node {i}")
+                })?;
+            w.node_restore(node, blob)
+                .map_err(|e| format!("restore node {i}: {e}"))?;
+        }
+    }
     // Which sources cross which shard boundary, per phase. Intra-shard
     // gossip reads the in-memory snapshot, so on block-local topologies
     // (contiguous shards on Base-(k+1)) most rounds encode almost
@@ -995,12 +1259,14 @@ fn worker_loop<W: Workload>(
     let mut enc: Vec<ByteWriter> = (0..n).map(|_| ByteWriter::new()).collect();
     let mut enc_round: Vec<usize> = vec![usize::MAX; n];
 
-    send_obs(
-        w, conn, &members, &nodes, INIT_ROUND, false, &mut frame_w,
-        &mut sink,
-    )?;
+    if ctx.start_round == 0 {
+        send_obs(
+            w, conn, &members, &nodes, INIT_ROUND, false, false,
+            &mut frame_w, &mut sink,
+        )?;
+    }
 
-    for r in 0..ctx.rounds {
+    for r in ctx.start_round..ctx.rounds {
         if ctx.crash_round == Some(r) {
             // Fault injection: abort with no goodbye — the coordinator
             // must turn the dead socket into a clean error.
@@ -1056,6 +1322,14 @@ fn worker_loop<W: Workload>(
             }
             send(conn, FRAME_BUNDLE, frame_w.as_slice(), &mut sink)
                 .map_err(|e| format!("round {r}: send bundle → {t}: {e}"))?;
+        }
+
+        if ctx.crash_mid == Some(r) {
+            // Mid-round fault injection: die *between* send and receive —
+            // our bundles are in flight, our neighbors' never arrive. The
+            // coordinator must recover from the last round-boundary
+            // snapshot, not from this torn cut.
+            std::process::exit(87);
         }
 
         // Receive the bundles other shards addressed to us, decoding
@@ -1134,8 +1408,9 @@ fn worker_loop<W: Workload>(
         }
 
         let eval = w.is_eval(r, ctx.rounds);
+        let due = ctx.ckpt_every > 0 && (r + 1) % ctx.ckpt_every == 0;
         send_obs(
-            w, conn, &members, &nodes, r as u32, eval, &mut frame_w,
+            w, conn, &members, &nodes, r as u32, eval, due, &mut frame_w,
             &mut sink,
         )?;
     }

@@ -25,6 +25,7 @@ use std::time::Instant;
 
 use super::scratch::AvailTable;
 use super::{ExecTrace, Executor, Workload};
+use crate::ckpt::{CkptConfig, Snapshot};
 use crate::comm::CommLedger;
 use crate::metrics::RunResult;
 use crate::simnet::event::{EventKind, EventQueue, Trace};
@@ -68,6 +69,25 @@ impl Executor for SimnetExecutor {
         seq: &GraphSequence,
         rounds: usize,
     ) -> Result<ExecTrace, String> {
+        self.run_ckpt(w, seq, rounds, &CkptConfig::default())
+    }
+
+    fn run_ckpt<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
+        // Snapshots capture round boundaries; the async discipline has
+        // none (nodes free-run), so checkpointing is BSP-only.
+        if ckpt.is_active() && matches!(self.sim.mode, ExecMode::Async) {
+            return Err(
+                "checkpoint/resume needs round boundaries — the async \
+                 simnet mode has none (run bulk-synchronous instead)"
+                    .into(),
+            );
+        }
         let n = seq.n;
         if n == 0 {
             return Err("simnet executor needs n >= 1".into());
@@ -87,9 +107,30 @@ impl Executor for SimnetExecutor {
         let mut ledger = CommLedger::default();
         let mut drops = 0u64;
         let mut records = Vec::new();
-        if let Some(mut rec) = w.initial_record(&nodes) {
-            rec.wall_seconds = t0.elapsed().as_secs_f64();
-            records.push(rec);
+        let mut start_round = 0usize;
+        let mut resume_clock = 0.0f64;
+        match ckpt.load_resume(n, &seq.name, rounds)? {
+            Some(snap) => {
+                for (node, blob) in nodes.iter_mut().zip(&snap.nodes) {
+                    w.node_restore(node, blob)?;
+                }
+                ledger = snap.ledger;
+                records = snap.records;
+                start_round = snap.round;
+                resume_clock = snap.clock;
+                // The straggler subset is seed-derived and rebuilt by
+                // `self.sim.network(n)` above; the RNG cursor continues
+                // the exact compute-jitter/drop stream.
+                if let Some((s, spare)) = snap.rng {
+                    net.restore_rng(s, spare);
+                }
+            }
+            None => {
+                if let Some(mut rec) = w.initial_record(&nodes) {
+                    rec.wall_seconds = t0.elapsed().as_secs_f64();
+                    records.push(rec);
+                }
+            }
         }
 
         if rounds > 0 {
@@ -97,7 +138,7 @@ impl Executor for SimnetExecutor {
                 seq.phases.iter().map(out_adjacency).collect();
             match self.sim.mode {
                 ExecMode::BulkSynchronous => {
-                    let mut clock = 0.0f64;
+                    let mut clock = resume_clock;
                     // Round-persistent scratch: arrival flags, the payload
                     // mailbox (written in place after warmup), the
                     // slot-indexed availability table and one shared
@@ -109,7 +150,7 @@ impl Executor for SimnetExecutor {
                     let mut avail: AvailTable<W::Payload> =
                         AvailTable::new();
                     let mut mix_scratch: Option<W::Payload> = None;
-                    for r in 0..rounds {
+                    for r in start_round..rounds {
                         let pidx = r % seq.len();
                         let plan = &seq.phases[pidx];
                         let mut q = EventQueue::new();
@@ -226,6 +267,29 @@ impl Executor for SimnetExecutor {
                         rec.sim_seconds = ledger.sim_seconds;
                         rec.wall_seconds = t0.elapsed().as_secs_f64();
                         records.push(rec);
+                        // Round-boundary snapshot, when due. The event
+                        // queue is empty here (the barrier drained it),
+                        // so the virtual clock + net RNG cursor are the
+                        // only engine state to carry.
+                        if let Some(pol) =
+                            ckpt.policy.as_ref().filter(|p| p.due(r))
+                        {
+                            let (s, spare) = net.rng_state();
+                            let snap = Snapshot {
+                                topology: seq.name.clone(),
+                                n,
+                                round: r + 1,
+                                nodes: nodes
+                                    .iter()
+                                    .map(|nd| w.node_ckpt(nd))
+                                    .collect::<Result<_, String>>()?,
+                                ledger: ledger.clone(),
+                                records: records.clone(),
+                                clock,
+                                rng: Some((s, spare)),
+                            };
+                            pol.save(&snap)?;
+                        }
                     }
                 }
                 ExecMode::Async => {

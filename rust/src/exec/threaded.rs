@@ -24,6 +24,7 @@
 
 use super::analytic::run_lockstep;
 use super::{ExecTrace, Executor, Workload};
+use crate::ckpt::CkptConfig;
 use crate::comm::CostModel;
 use crate::topology::GraphSequence;
 use crate::util::threadpool::ThreadPool;
@@ -66,9 +67,28 @@ impl Executor for ThreadedExecutor {
         seq: &GraphSequence,
         rounds: usize,
     ) -> Result<ExecTrace, String> {
+        self.run_ckpt(w, seq, rounds, &CkptConfig::default())
+    }
+
+    fn run_ckpt<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
         let pool = ThreadPool::new(self.pool_size(seq.n));
         // Always parallel — physically running the nodes is the point.
-        run_lockstep(w, seq, rounds, &self.cost, Some(&pool), true, "threaded")
+        run_lockstep(
+            w,
+            seq,
+            rounds,
+            &self.cost,
+            Some(&pool),
+            true,
+            "threaded",
+            ckpt,
+        )
     }
 }
 

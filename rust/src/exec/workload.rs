@@ -36,7 +36,7 @@ use super::wire::{ByteReader, ByteWriter};
 use crate::comm::CostModel;
 use crate::consensus::consensus_error;
 use crate::metrics::RoundRecord;
-use crate::optim::{DecentralizedOptimizer, OptimizerKind};
+use crate::optim::{DecentralizedOptimizer, OptState, OptimizerKind};
 use crate::runtime::batch::Batch;
 use crate::runtime::provider::{GradProvider, QuadraticModel};
 use crate::topology::GossipPlan;
@@ -272,12 +272,48 @@ pub trait Workload: Sync {
     fn finals_wire(&self, _obs: &[Vec<u8>]) -> Result<Vec<Vec<f64>>, String> {
         Err(not_wire(self.label()))
     }
+
+    // -----------------------------------------------------------------
+    // Checkpoint support — the per-node codec behind `crate::ckpt`.
+    //
+    // A snapshot captures everything a node needs to continue
+    // bit-exactly: state, in-flight message buffers, optimizer memory.
+    // Exact bit patterns only (same convention as the wire codecs) —
+    // resumed runs must be indistinguishable from uninterrupted ones.
+    // Scratch buffers whose contents are rebuilt every round (batch and
+    // gradient scratch) are deliberately NOT captured.
+    // -----------------------------------------------------------------
+
+    /// Encode node-local state for a round-boundary snapshot; the
+    /// default politely refuses checkpointing for workloads that have
+    /// not defined their codec.
+    fn node_ckpt(&self, _node: &Self::Node) -> Result<Vec<u8>, String> {
+        Err(not_ckpt(self.label()))
+    }
+
+    /// Restore a node from [`Workload::node_ckpt`] bytes. Called on a
+    /// freshly built node (`init_nodes`), so non-checkpointed resources
+    /// (data streams, scratch) are already in place.
+    fn node_restore(
+        &self,
+        _node: &mut Self::Node,
+        _bytes: &[u8],
+    ) -> Result<(), String> {
+        Err(not_ckpt(self.label()))
+    }
 }
 
 fn not_wire(label: String) -> String {
     format!(
         "workload {label:?} has no wire form — the process backend needs \
          wire_spec and the payload/observation codecs (see exec::process)"
+    )
+}
+
+fn not_ckpt(label: String) -> String {
+    format!(
+        "workload {label:?} has no checkpoint form — resume needs the \
+         node_ckpt/node_restore codec (see crate::ckpt)"
     )
 }
 
@@ -497,6 +533,24 @@ impl Workload for ConsensusWorkload {
     fn finals_wire(&self, obs: &[Vec<u8>]) -> Result<Vec<Vec<f64>>, String> {
         decode_f64_states(self, obs)
     }
+
+    // --- checkpoint support: the node vector is the whole state ---
+
+    fn node_ckpt(&self, node: &Vec<f64>) -> Result<Vec<u8>, String> {
+        let mut w = ByteWriter::new();
+        w.put_vec_f64(node);
+        Ok(w.finish())
+    }
+
+    fn node_restore(
+        &self,
+        node: &mut Vec<f64>,
+        bytes: &[u8],
+    ) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes);
+        r.get_vec_f64_into(node)?;
+        r.expect_end()
+    }
 }
 
 fn decode_f64_states(
@@ -517,6 +571,13 @@ pub struct TrainNode {
     data: Box<dyn NodeData>,
     last_loss: f64,
     pending: Vec<Vec<f32>>,
+    /// Batch scratch, refilled by `next_train_batch_into` each round.
+    /// Pure scratch — overwritten before every read, so it is not part
+    /// of the checkpointed state.
+    batch: Batch,
+    /// Gradient scratch, refilled by `train_step_into` each round. Also
+    /// not checkpointed.
+    grads: Vec<f32>,
 }
 
 /// Decentralized DSGD-family training as a [`Workload`] — the single
@@ -603,6 +664,8 @@ impl Workload for TrainingWorkload<'_> {
                 data,
                 last_loss: f64::NAN,
                 pending: Vec::new(),
+                batch: Batch::empty(),
+                grads: Vec::new(),
             })
             .collect())
     }
@@ -618,10 +681,16 @@ impl Workload for TrainingWorkload<'_> {
         r: usize,
     ) -> Result<(), String> {
         let lr = self.cfg.lr_at(r) as f32;
-        let batch = node.data.next_train_batch();
-        let (loss, grads) = self.provider.train_step(&node.params, &batch)?;
-        node.last_loss = loss as f64;
-        node.pending = node.opt.pre_mix(&node.params, &grads, lr);
+        // Destructure for disjoint borrows: the batch/grad scratch is
+        // refilled in place, and pre_mix writes its messages into the
+        // node's pending buffers — the whole step reuses last round's
+        // allocations (pinned by tests/alloc_regression.rs).
+        let TrainNode { params, opt, data, last_loss, pending, batch, grads } =
+            node;
+        data.next_train_batch_into(batch);
+        let loss = self.provider.train_step_into(params, batch, grads)?;
+        *last_loss = loss as f64;
+        opt.pre_mix_into(params, grads, lr, pending);
         Ok(())
     }
 
@@ -685,20 +754,14 @@ impl Workload for TrainingWorkload<'_> {
             used_any = used_any.max(used);
         }
         // A node is "active" when at least one neighbor payload mixed in
-        // (identical to `plan.is_active` under full delivery). post_mix
-        // consumes the mixed buffers by value; the node's previous
-        // parameter vector is recycled as next round's first mix buffer,
-        // so one-message optimizers (the DSGD family default) allocate no
-        // d-sized buffer in steady state. Multi-message optimizers
-        // (gradient tracking) retain their extra mixed buffers in
-        // optimizer state, so the extra slots are re-allocated each round
-        // until the pre_mix/post_mix contract learns buffer reuse (see
-        // ROADMAP "Optimizer-message buffer reuse"); the small
-        // message-list header also still crosses post_mix by value.
-        let mixed = std::mem::take(scratch);
-        let new = node.opt.post_mix(mixed, &node.params, lr, used_any > 0);
-        let old = std::mem::replace(&mut node.params, new);
-        scratch.push(old);
+        // (identical to `plan.is_active` under full delivery).
+        // post_mix_into commits the mixed buffers in place and recycles
+        // every retired d-sized buffer — including the node's previous
+        // parameter vector and any buffers the optimizer swapped out of
+        // its own state — back into `scratch` for next round, so the
+        // steady-state round allocates nothing for any shipped optimizer
+        // (pinned by tests/alloc_regression.rs).
+        node.opt.post_mix_into(scratch, &mut node.params, lr, used_any > 0);
     }
 
     fn is_eval(&self, r: usize, rounds: usize) -> bool {
@@ -885,6 +948,75 @@ impl Workload for TrainingWorkload<'_> {
                     })
             })
             .collect()
+    }
+
+    // --- checkpoint support ---
+    //
+    // Captured: params, last_loss, the pending message buffers (a
+    // snapshot is taken at a round boundary, after combine, so pending
+    // holds the *already mixed-in* messages of the finished round — the
+    // next round's local_step overwrites them) and the optimizer's
+    // opaque state vectors. NOT captured: the batch/grad scratch
+    // (rebuilt each round) and the NodeData cursor — resumable training
+    // runs use round-deterministic data sources ([`FixedBatch`], the
+    // quadratic recipe); sampling shards would replay a shifted batch
+    // stream after resume.
+
+    fn node_ckpt(&self, node: &TrainNode) -> Result<Vec<u8>, String> {
+        let mut w = ByteWriter::new();
+        w.put_vec_f32(&node.params);
+        w.put_f64(node.last_loss);
+        w.put_usize(node.pending.len());
+        for slot in &node.pending {
+            w.put_vec_f32(slot);
+        }
+        let st = node.opt.state_save();
+        w.put_usize(st.vecs.len());
+        for v in &st.vecs {
+            w.put_vec_f32(v);
+        }
+        w.put_usize(st.flags.len());
+        for &f in &st.flags {
+            w.put_u8(u8::from(f));
+        }
+        Ok(w.finish())
+    }
+
+    fn node_restore(
+        &self,
+        node: &mut TrainNode,
+        bytes: &[u8],
+    ) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes);
+        r.get_vec_f32_into(&mut node.params)?;
+        if node.params.len() != self.d {
+            return Err(format!(
+                "checkpointed params have {} entries, model expects {}",
+                node.params.len(),
+                self.d
+            ));
+        }
+        node.last_loss = r.get_f64()?;
+        let slots = r.get_usize()?;
+        node.pending.truncate(slots);
+        for m in 0..slots {
+            match node.pending.get_mut(m) {
+                Some(buf) => r.get_vec_f32_into(buf)?,
+                None => node.pending.push(r.get_vec_f32()?),
+            }
+        }
+        let nv = r.get_usize()?;
+        let mut vecs = Vec::with_capacity(nv.min(1 << 10));
+        for _ in 0..nv {
+            vecs.push(r.get_vec_f32()?);
+        }
+        let nf = r.get_usize()?;
+        let mut flags = Vec::with_capacity(nf.min(1 << 10));
+        for _ in 0..nf {
+            flags.push(r.get_u8()? != 0);
+        }
+        r.expect_end()?;
+        node.opt.state_load(OptState { vecs, flags })
     }
 }
 
@@ -1460,5 +1592,52 @@ mod tests {
         // An eval observe over cheap snapshots is a clean error.
         let err = w.observe_wire(&[cheap.clone(), cheap], 0, true);
         assert!(err.unwrap_err().contains("missing node params"));
+    }
+
+    #[test]
+    fn consensus_node_ckpt_round_trips() {
+        let init = vec![vec![1.5, -2.25], vec![0.0, 9.0]];
+        let w = ConsensusWorkload::new(init.clone());
+        let blob = w.node_ckpt(&init[0]).unwrap();
+        let mut node = vec![7.0; 5];
+        w.node_restore(&mut node, &blob).unwrap();
+        assert_eq!(node, init[0]);
+        assert!(w.node_restore(&mut node, &blob[..blob.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn training_node_ckpt_round_trips_params_pending_and_opt_state() {
+        // Gradient tracking carries both optimizer vectors and a
+        // two-slot pending buffer — the richest node state we ship.
+        let cfg = TrainConfig {
+            optimizer: OptimizerKind::GradientTracking,
+            threads: 1,
+            ..Default::default()
+        };
+        let (model, data) = quadratic_fixed_targets(2, 3, 5);
+        let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+        let mut nodes = w.init_nodes(2).unwrap();
+        w.local_step(&mut nodes[0], 0, 0).unwrap();
+        let blob = w.node_ckpt(&nodes[0]).unwrap();
+        // Restore into the *other* fresh node: everything checkpointed
+        // must match node 0 exactly, bit for bit.
+        let (a, b) = {
+            let (l, r) = nodes.split_at_mut(1);
+            (&mut l[0], &mut r[0])
+        };
+        w.node_restore(b, &blob).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.pending, b.pending);
+        assert_eq!(a.last_loss.to_bits(), b.last_loss.to_bits());
+        assert_eq!(a.opt.state_save(), b.opt.state_save());
+        // A truncated blob is a clean error, not garbage state.
+        assert!(w.node_restore(b, &blob[..blob.len() - 2]).is_err());
+        // A wrong-dimension blob is rejected before touching opt state.
+        let cfg2 = TrainConfig { threads: 1, ..Default::default() };
+        let (model2, data2) = quadratic_fixed_targets(1, 7, 5);
+        let mut w2 = TrainingWorkload::new(&model2, &cfg2, data2, &[]);
+        let mut other = w2.init_nodes(1).unwrap();
+        let err = w2.node_restore(&mut other[0], &blob).unwrap_err();
+        assert!(err.contains("model expects"), "{err}");
     }
 }

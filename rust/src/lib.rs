@@ -35,6 +35,7 @@
 //! rules and the full CLI reference — lives in `docs/ARCHITECTURE.md`
 //! at the repository root.
 
+pub mod ckpt;
 pub mod comm;
 pub mod consensus;
 pub mod data;

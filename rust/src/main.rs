@@ -13,6 +13,7 @@
 //!
 //! Run `basegraph <cmd> --help` for per-command flags.
 
+use basegraph::ckpt::CkptConfig;
 use basegraph::comm::CostModel;
 use basegraph::consensus;
 use basegraph::exec::{
@@ -22,7 +23,7 @@ use basegraph::exec::{
 use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
-    classification_workload, print_table, run_training_exec, Engine,
+    classification_workload, print_table, run_training_exec_ckpt, Engine,
 };
 use basegraph::simnet::{ExecMode, LinkModel, Scenario};
 use basegraph::topology::{self, TopologyKind};
@@ -46,6 +47,8 @@ USAGE:
                       [--threads N] [--shards N]
                       [--shard-balance contiguous|degree]
                       [--net-alpha SEC] [--net-beta SEC_PER_BYTE]
+                      [--checkpoint-every N] [--checkpoint-dir DIR]
+                      [--checkpoint-keep K] [--resume CKPT]
                       [--out results]
   basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
                       [--mode bsp|async] [--workload consensus|train]
@@ -55,6 +58,8 @@ USAGE:
                       [--topos a,b,c] [--n N] [--seed S] [--out results]
                       [--alpha SEC] [--beta SEC_PER_BYTE] [--drop-rate P]
                       [--straggler-factor F]
+                      [--checkpoint-every N] [--checkpoint-dir DIR]
+                      [--checkpoint-keep K] [--resume CKPT]
                       consensus: [--iters I] [--tol T]
                       train:     [--rounds R] [--lr LR] [--optimizer O]
                                  [--momentum M] [--engine E] [--dirichlet A]
@@ -65,8 +70,11 @@ USAGE:
                       [--executor analytic|simnet|threaded|process]
                       [--threads N] [--shards N]
                       [--shard-balance contiguous|degree]
+                      [--checkpoint-every N] [--checkpoint-dir DIR]
+                      [--checkpoint-keep K] [--resume CKPT]
   basegraph bench     [--ns 64,256] [--ds 1000,100000] [--rounds R]
-                      [--fast] [--seed S] [--out BENCH_rounds.json]
+                      [--shards-list 2,4] [--fast] [--seed S]
+                      [--out BENCH_rounds.json]
   basegraph info      [--artifacts DIR]
 
 Topology names: ring, torus, exp, onepeer-exp, onepeer-hypercube, complete,
@@ -82,6 +90,14 @@ Executors: analytic (ideal lock-step loop, α–β model clock), simnet
 Notes: in `simnet`, --alpha/--beta are the per-link α–β cost overrides and
   --dirichlet is the data-heterogeneity knob; in `train`, --alpha keeps its
   historical Dirichlet meaning and --net-alpha/--net-beta set the α–β cost.
+Checkpointing: --checkpoint-every N snapshots every N rounds into
+  --checkpoint-dir (rotating to --checkpoint-keep files); --resume takes a
+  snapshot file, or a directory whose newest snapshot is used (an empty
+  directory starts fresh — the crash-recovery form). Multi-run sweeps
+  (simnet topology lists, repro figures) scope each run to its own
+  subdirectory automatically; resumed runs replay bit-identically on all
+  model columns (see docs/ARCHITECTURE.md, \"Checkpoint format &
+  recovery\").
 Docs: docs/ARCHITECTURE.md is the full tour (layers, backends, wire
   protocol, determinism rules) with a complete CLI flag reference.
 Help: `basegraph --help` (or any subcommand with --help) prints this.";
@@ -326,6 +342,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     // Execution backend: ideal analytic loop (default), event-driven
     // simnet, real threads, or one worker process per node shard.
     let exec = ExecutorKind::from_args(args, "analytic")?.with_cost(cost);
+    let ckpt = CkptConfig::from_args(args)?;
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let workload = classification_workload(&engine, seed)?;
@@ -338,8 +355,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         optimizer.label(),
         exec.label()
     );
-    let res = run_training_exec(
+    let res = run_training_exec_ckpt(
         &workload, kind, n, alpha, optimizer, rounds, lr, seed, &exec,
+        &ckpt,
     )?;
     let path = format!(
         "{out_dir}/train_{}_n{n}.csv",
@@ -480,6 +498,10 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
         }
     }
     let exec = exec.with_cost(lockstep_cost).with_sim(sim.clone());
+    // Checkpoint/resume: racing several topologies in one invocation
+    // scopes each run to its own subdirectory (see CkptConfig::scoped),
+    // so a sweep's snapshots never rotate each other away.
+    let ckpt = CkptConfig::from_args(args)?;
 
     match args.str_or("workload", "consensus").as_str() {
         "consensus" => {
@@ -490,8 +512,13 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
                 let seq = kind.build(n, seed)?;
-                let tr =
-                    consensus::consensus_experiment(&seq, iters, seed, &exec)?;
+                let tr = consensus::consensus_experiment_ckpt(
+                    &seq,
+                    iters,
+                    seed,
+                    &exec,
+                    &ckpt.scoped(t),
+                )?;
                 rows.push(vec![
                     kind.label(),
                     seq.max_degree().to_string(),
@@ -571,9 +598,9 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             let mut csv = Vec::new();
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
-                let res = run_training_exec(
+                let res = run_training_exec_ckpt(
                     &workload, kind, n, dirichlet, optimizer, rounds, lr,
-                    seed, &exec,
+                    seed, &exec, &ckpt.scoped(t),
                 )?;
                 let tta = res.run.time_to_accuracy(target);
                 rows.push(vec![
@@ -656,8 +683,10 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
 /// the scratch-buffer pipeline (the shipping engine) and once through
 /// [`AllocatingWorkload`], which hides the scratch overrides and restores
 /// the legacy clone-per-round path. The per-cell `speedup` column is the
-/// allocation churn's measured price; results land in `--out`
-/// (`BENCH_rounds.json`).
+/// allocation churn's measured price. Process-backend cells
+/// (`--shards-list`, default 2 and 4 worker processes) run each workload
+/// over real sockets and add the measured `wire_bytes_per_round` column.
+/// Results land in `--out` (`BENCH_rounds.json`).
 fn cmd_bench(args: &Args) -> Result<(), String> {
     let out = args.str_or("out", "BENCH_rounds.json");
     let fast = args.flag("fast");
@@ -665,8 +694,10 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let rounds = args.usize_or("rounds", 20)?;
     let def_ns: &[usize] = if fast { &[64] } else { &[64, 256] };
     let def_ds: &[usize] = if fast { &[1_000] } else { &[1_000, 100_000] };
+    let def_shards: &[usize] = if fast { &[2] } else { &[2, 4] };
     let ns = args.usize_list_or("ns", def_ns)?;
     let ds = args.usize_list_or("ds", def_ds)?;
+    let shards_list = args.usize_list_or("shards-list", def_shards)?;
     if rounds == 0 {
         return Err("--rounds must be >= 1".into());
     }
@@ -792,6 +823,109 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                         ("bytes_per_round", Json::num(bpr)),
                     ]));
                 }
+            }
+        }
+    }
+
+    // Process-backend cells: the only backend with real IPC cost, so its
+    // cells carry a measured wire_bytes_per_round column next to the α–β
+    // model's bytes_per_round. One d per n (the first in the grid) keeps
+    // worker-spawn overhead bounded; the alloc/scratch duality does not
+    // apply (workers always run the scratch engine), so those fields are
+    // null — trend gates skip null-valued columns.
+    let d = *ds.first().ok_or("--ds must name at least one d")?;
+    for &n in &ns {
+        for &shards in &shards_list {
+            for workload in ["consensus", "train"] {
+                let kind = TopologyKind::Base { m: 4 };
+                let seq = kind.build(n, seed)?;
+                let exec = ExecutorKind::process(shards);
+                let run = || -> Result<ExecTrace, String> {
+                    if workload == "consensus" {
+                        let mut rng = Rng::new(seed);
+                        let init = consensus::gaussian_init(n, d, &mut rng);
+                        let mut w = ConsensusWorkload::new(init);
+                        exec.run(&mut w, &seq, rounds)
+                    } else {
+                        let cfg = TrainConfig {
+                            rounds,
+                            lr: 0.05,
+                            warmup: 0,
+                            cosine: false,
+                            optimizer: OptimizerKind::Dsgdm {
+                                momentum: 0.9,
+                            },
+                            eval_every: 0,
+                            threads: 0,
+                            cost: CostModel::default(),
+                        };
+                        let (model, data) =
+                            quadratic_fixed_targets(n, d, seed);
+                        let mut w =
+                            TrainingWorkload::new(&model, &cfg, data, &[])
+                                .with_wire(
+                                    basegraph::exec::TrainSpec::Quadratic {
+                                        d,
+                                        seed,
+                                    },
+                                );
+                        exec.run(&mut w, &seq, rounds)
+                    }
+                };
+                // Per-record wall clocks bracket the round loop, which
+                // excludes the (identical) spawn + handshake setup; two
+                // passes, best rate kept, as for the in-process cells.
+                let loop_rate = |tr: &ExecTrace| -> f64 {
+                    let rec = &tr.run.records;
+                    match (rec.first(), rec.last()) {
+                        (Some(a), Some(b))
+                            if b.round > a.round
+                                && b.wall_seconds > a.wall_seconds =>
+                        {
+                            (b.round - a.round) as f64
+                                / (b.wall_seconds - a.wall_seconds)
+                        }
+                        _ => rounds as f64 / tr.wall_seconds.max(1e-12),
+                    }
+                };
+                let mut rps = 0.0f64;
+                let mut wall = f64::INFINITY;
+                let mut bpr = 0.0f64;
+                let mut wire_bpr = 0.0f64;
+                for _ in 0..2 {
+                    let tr = run()?;
+                    rps = rps.max(loop_rate(&tr));
+                    wall = wall.min(tr.wall_seconds);
+                    bpr = tr.ledger.bytes as f64 / rounds as f64;
+                    wire_bpr =
+                        tr.ledger.bytes_on_wire as f64 / rounds as f64;
+                }
+                rows.push(vec![
+                    workload.to_string(),
+                    n.to_string(),
+                    d.to_string(),
+                    format!("process×{shards}"),
+                    "-".to_string(),
+                    format!("{rps:.1}"),
+                    "-".to_string(),
+                    format!("{:.2}", wire_bpr / 1e6),
+                ]);
+                cells.push(Json::obj(vec![
+                    ("workload", Json::str(workload)),
+                    ("topology", Json::str("base-4")),
+                    ("n", Json::num(n as f64)),
+                    ("d", Json::num(d as f64)),
+                    ("backend", Json::str("process")),
+                    ("shards", Json::num(shards as f64)),
+                    ("rounds", Json::num(rounds as f64)),
+                    ("wall_seconds_alloc", Json::Null),
+                    ("wall_seconds_scratch", Json::num(wall)),
+                    ("rounds_per_sec_alloc", Json::Null),
+                    ("rounds_per_sec_scratch", Json::num(rps)),
+                    ("speedup", Json::Null),
+                    ("bytes_per_round", Json::num(bpr)),
+                    ("wire_bytes_per_round", Json::num(wire_bpr)),
+                ]));
             }
         }
     }

@@ -46,6 +46,87 @@ pub trait DecentralizedOptimizer: Send {
         lr: f32,
         active: bool,
     ) -> Vec<f32>;
+
+    /// Borrowing variant of [`pre_mix`](Self::pre_mix): write the
+    /// message(s) into `out`, reusing its buffers. The default delegates
+    /// to the allocating method (external impls keep working unchanged);
+    /// the shipped optimizers override it with in-place writes so the
+    /// steady-state training round allocates nothing. Must produce
+    /// bit-identical messages to `pre_mix`.
+    fn pre_mix_into(
+        &mut self,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut Vec<Vec<f32>>,
+    ) {
+        *out = self.pre_mix(params, grads, lr);
+    }
+
+    /// Borrowing variant of [`post_mix`](Self::post_mix). On entry
+    /// `params` holds the parameters that produced the messages and
+    /// `mixed` the mixed message(s); on exit `params` holds the *new*
+    /// parameters and `mixed` holds recyclable buffers whose contents
+    /// are unspecified. Must leave `params` bit-identical to what
+    /// `post_mix` returns for the same inputs.
+    fn post_mix_into(
+        &mut self,
+        mixed: &mut Vec<Vec<f32>>,
+        params: &mut Vec<f32>,
+        lr: f32,
+        active: bool,
+    ) {
+        let taken = std::mem::take(mixed);
+        let new = self.post_mix(taken, params, lr, active);
+        let old = std::mem::replace(params, new);
+        mixed.push(old);
+    }
+
+    /// Export the optimizer's mutable state as plain data for
+    /// checkpointing. An optimizer rebuilt by `OptimizerKind::build` and
+    /// fed this state through [`state_load`](Self::state_load) continues
+    /// the exact same trajectory. The default (stateless) export is
+    /// empty.
+    fn state_save(&self) -> OptState {
+        OptState::default()
+    }
+
+    /// Restore state exported by [`state_save`](Self::state_save). The
+    /// default accepts only the empty (stateless) export.
+    fn state_load(&mut self, state: OptState) -> Result<(), String> {
+        if state.vecs.is_empty() && state.flags.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "optimizer {} carries no state but the checkpoint \
+                 stores some — optimizer mismatch?",
+                self.name()
+            ))
+        }
+    }
+}
+
+/// Plain-data snapshot of one optimizer's mutable state: a list of
+/// f32 vectors plus presence flags for `Option` fields. Deliberately
+/// schema-free so `optim` stays independent of the wire/checkpoint
+/// encoding layers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptState {
+    pub vecs: Vec<Vec<f32>>,
+    pub flags: Vec<bool>,
+}
+
+/// Shape `out` to exactly `k` cleared slots, each with capacity ≥ `d`
+/// (allocation-free once warm).
+fn shape_messages(out: &mut Vec<Vec<f32>>, k: usize, d: usize) {
+    out.truncate(k);
+    while out.len() < k {
+        out.push(Vec::with_capacity(d));
+    }
+    for slot in out.iter_mut() {
+        slot.clear();
+        slot.reserve(d);
+    }
 }
 
 /// Which optimizer to build (CLI-facing).
@@ -114,11 +195,19 @@ impl DecentralizedOptimizer for Dsgd {
     }
     fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
         -> Vec<Vec<f32>> {
-        vec![params
-            .iter()
-            .zip(grads)
-            .map(|(p, g)| p - lr * g)
-            .collect()]
+        let mut out = Vec::new();
+        self.pre_mix_into(params, grads, lr, &mut out);
+        out
+    }
+    fn pre_mix_into(
+        &mut self,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut Vec<Vec<f32>>,
+    ) {
+        shape_messages(out, 1, params.len());
+        out[0].extend(params.iter().zip(grads).map(|(p, g)| p - lr * g));
     }
     fn post_mix(
         &mut self,
@@ -128,6 +217,17 @@ impl DecentralizedOptimizer for Dsgd {
         _active: bool,
     ) -> Vec<f32> {
         mixed.pop().expect("one message")
+    }
+    fn post_mix_into(
+        &mut self,
+        mixed: &mut Vec<Vec<f32>>,
+        params: &mut Vec<f32>,
+        _lr: f32,
+        _active: bool,
+    ) {
+        let mut new = mixed.pop().expect("one message");
+        std::mem::swap(params, &mut new);
+        mixed.push(new);
     }
 }
 
@@ -152,14 +252,22 @@ impl DecentralizedOptimizer for Dsgdm {
     }
     fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
         -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        self.pre_mix_into(params, grads, lr, &mut out);
+        out
+    }
+    fn pre_mix_into(
+        &mut self,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut Vec<Vec<f32>>,
+    ) {
         for (v, g) in self.v.iter_mut().zip(grads) {
             *v = self.beta * *v + g;
         }
-        vec![params
-            .iter()
-            .zip(&self.v)
-            .map(|(p, v)| p - lr * v)
-            .collect()]
+        shape_messages(out, 1, params.len());
+        out[0].extend(params.iter().zip(&self.v).map(|(p, v)| p - lr * v));
     }
     fn post_mix(
         &mut self,
@@ -169,6 +277,30 @@ impl DecentralizedOptimizer for Dsgdm {
         _active: bool,
     ) -> Vec<f32> {
         mixed.pop().expect("one message")
+    }
+    fn post_mix_into(
+        &mut self,
+        mixed: &mut Vec<Vec<f32>>,
+        params: &mut Vec<f32>,
+        _lr: f32,
+        _active: bool,
+    ) {
+        let mut new = mixed.pop().expect("one message");
+        std::mem::swap(params, &mut new);
+        mixed.push(new);
+    }
+    fn state_save(&self) -> OptState {
+        OptState { vecs: vec![self.v.clone()], flags: Vec::new() }
+    }
+    fn state_load(&mut self, state: OptState) -> Result<(), String> {
+        let OptState { mut vecs, flags } = state;
+        match (vecs.pop(), vecs.is_empty(), flags.is_empty()) {
+            (Some(v), true, true) if v.len() == self.v.len() => {
+                self.v = v;
+                Ok(())
+            }
+            _ => Err("dsgdm checkpoint state has the wrong shape".into()),
+        }
     }
 }
 
@@ -199,29 +331,70 @@ impl DecentralizedOptimizer for QgDsgdm {
     }
     fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
         -> Vec<Vec<f32>> {
-        vec![params
-            .iter()
-            .zip(grads)
-            .zip(&self.m)
-            .map(|((p, g), m)| p - lr * (g + self.beta * m))
-            .collect()]
+        let mut out = Vec::new();
+        self.pre_mix_into(params, grads, lr, &mut out);
+        out
+    }
+    fn pre_mix_into(
+        &mut self,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut Vec<Vec<f32>>,
+    ) {
+        shape_messages(out, 1, params.len());
+        let beta = self.beta;
+        out[0].extend(
+            params
+                .iter()
+                .zip(grads)
+                .zip(&self.m)
+                .map(|((p, g), m)| p - lr * (g + beta * m)),
+        );
     }
     fn post_mix(
         &mut self,
         mut mixed: Vec<Vec<f32>>,
         prev: &[f32],
         lr: f32,
-        _active: bool,
+        active: bool,
     ) -> Vec<f32> {
-        let new = mixed.pop().expect("one message");
+        let mut params = prev.to_vec();
+        self.post_mix_into(&mut mixed, &mut params, lr, active);
+        params
+    }
+    fn post_mix_into(
+        &mut self,
+        mixed: &mut Vec<Vec<f32>>,
+        params: &mut Vec<f32>,
+        lr: f32,
+        _active: bool,
+    ) {
+        let mut new = mixed.pop().expect("one message");
         let inv_lr = if lr > 0.0 { 1.0 / lr } else { 0.0 };
         for ((m, p_old), p_new) in
-            self.m.iter_mut().zip(prev).zip(&new)
+            self.m.iter_mut().zip(params.iter()).zip(&new)
         {
             *m = self.beta * *m
                 + (1.0 - self.beta) * (p_old - p_new) * inv_lr;
         }
-        new
+        std::mem::swap(params, &mut new);
+        mixed.push(new);
+    }
+    fn state_save(&self) -> OptState {
+        OptState { vecs: vec![self.m.clone()], flags: Vec::new() }
+    }
+    fn state_load(&mut self, state: OptState) -> Result<(), String> {
+        let OptState { mut vecs, flags } = state;
+        match (vecs.pop(), vecs.is_empty(), flags.is_empty()) {
+            (Some(m), true, true) if m.len() == self.m.len() => {
+                self.m = m;
+                Ok(())
+            }
+            _ => {
+                Err("qg-dsgdm checkpoint state has the wrong shape".into())
+            }
+        }
     }
 }
 
@@ -255,40 +428,102 @@ impl DecentralizedOptimizer for D2 {
     }
     fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
         -> Vec<Vec<f32>> {
-        let msg: Vec<f32> = match (&self.prev_x, &self.prev_eta_g) {
-            (Some(px), Some(peg)) => params
-                .iter()
-                .zip(grads)
-                .zip(px.iter().zip(peg))
-                .map(|((x, g), (xp, eg))| 2.0 * x - xp - lr * g + eg)
-                .collect(),
+        let mut out = Vec::new();
+        self.pre_mix_into(params, grads, lr, &mut out);
+        out
+    }
+    fn pre_mix_into(
+        &mut self,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut Vec<Vec<f32>>,
+    ) {
+        shape_messages(out, 1, params.len());
+        match (&self.prev_x, &self.prev_eta_g) {
+            (Some(px), Some(peg)) => out[0].extend(
+                params
+                    .iter()
+                    .zip(grads)
+                    .zip(px.iter().zip(peg))
+                    .map(|((x, g), (xp, eg))| 2.0 * x - xp - lr * g + eg),
+            ),
             // First round: plain DSGD half-step.
-            _ => params.iter().zip(grads).map(|(x, g)| x - lr * g).collect(),
-        };
-        self.prev_eta_g =
-            Some(grads.iter().map(|g| lr * g).collect());
-        vec![msg]
+            _ => out[0]
+                .extend(params.iter().zip(grads).map(|(x, g)| x - lr * g)),
+        }
+        match &mut self.prev_eta_g {
+            Some(eg) => {
+                eg.clear();
+                eg.extend(grads.iter().map(|g| lr * g));
+            }
+            None => {
+                self.prev_eta_g =
+                    Some(grads.iter().map(|g| lr * g).collect());
+            }
+        }
     }
     fn post_mix(
         &mut self,
         mut mixed: Vec<Vec<f32>>,
         prev: &[f32],
-        _lr: f32,
+        lr: f32,
         active: bool,
     ) -> Vec<f32> {
-        self.prev_x = Some(prev.to_vec());
+        let mut params = prev.to_vec();
+        self.post_mix_into(&mut mixed, &mut params, lr, active);
+        params
+    }
+    fn post_mix_into(
+        &mut self,
+        mixed: &mut Vec<Vec<f32>>,
+        params: &mut Vec<f32>,
+        _lr: f32,
+        active: bool,
+    ) {
+        match &mut self.prev_x {
+            Some(px) => {
+                px.clear();
+                px.extend_from_slice(params);
+            }
+            None => self.prev_x = Some(params.clone()),
+        }
         if active {
-            mixed.pop().expect("one message")
+            let mut new = mixed.pop().expect("one message");
+            std::mem::swap(params, &mut new);
+            mixed.push(new);
         } else {
             // Idle phase: the D² extrapolation is unstable without real
             // averaging (double unit root); take the plain SGD step
             // x^{t+1} = x^t − η_t g^t instead. The recursion re-enters
             // consistently next round (ψ-form telescoping).
-            prev.iter()
-                .zip(self.prev_eta_g.as_ref().expect("set in pre_mix"))
-                .map(|(x, eg)| x - eg)
-                .collect()
+            let eg = self.prev_eta_g.as_ref().expect("set in pre_mix");
+            for (x, e) in params.iter_mut().zip(eg) {
+                *x -= e;
+            }
         }
+    }
+    fn state_save(&self) -> OptState {
+        let flags = vec![self.prev_x.is_some(), self.prev_eta_g.is_some()];
+        let mut vecs = Vec::new();
+        if let Some(px) = &self.prev_x {
+            vecs.push(px.clone());
+        }
+        if let Some(eg) = &self.prev_eta_g {
+            vecs.push(eg.clone());
+        }
+        OptState { vecs, flags }
+    }
+    fn state_load(&mut self, state: OptState) -> Result<(), String> {
+        let OptState { vecs, flags } = state;
+        let want = flags.iter().filter(|&&f| f).count();
+        if flags.len() != 2 || vecs.len() != want {
+            return Err("d2 checkpoint state has the wrong shape".into());
+        }
+        let mut it = vecs.into_iter();
+        self.prev_x = if flags[0] { it.next() } else { None };
+        self.prev_eta_g = if flags[1] { it.next() } else { None };
+        Ok(())
     }
 }
 
@@ -323,6 +558,17 @@ impl DecentralizedOptimizer for GradientTracking {
     }
     fn pre_mix(&mut self, params: &[f32], grads: &[f32], lr: f32)
         -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        self.pre_mix_into(params, grads, lr, &mut out);
+        out
+    }
+    fn pre_mix_into(
+        &mut self,
+        params: &[f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut Vec<Vec<f32>>,
+    ) {
         // Fold the fresh gradient into the tracker: y += g^t − g^{t−1}
         // (y^0 = g^0).
         match &self.prev_g {
@@ -335,25 +581,62 @@ impl DecentralizedOptimizer for GradientTracking {
                 }
             }
         }
-        self.prev_g = Some(grads.to_vec());
-        let half: Vec<f32> = params
-            .iter()
-            .zip(&self.y)
-            .map(|(p, y)| p - lr * y)
-            .collect();
-        vec![half, self.y.clone()]
+        match &mut self.prev_g {
+            Some(pg) => {
+                pg.clear();
+                pg.extend_from_slice(grads);
+            }
+            None => self.prev_g = Some(grads.to_vec()),
+        }
+        shape_messages(out, 2, params.len());
+        out[0].extend(params.iter().zip(&self.y).map(|(p, y)| p - lr * y));
+        out[1].extend_from_slice(&self.y);
     }
     fn post_mix(
         &mut self,
         mut mixed: Vec<Vec<f32>>,
-        _prev: &[f32],
+        prev: &[f32],
+        lr: f32,
+        active: bool,
+    ) -> Vec<f32> {
+        let mut params = prev.to_vec();
+        self.post_mix_into(&mut mixed, &mut params, lr, active);
+        params
+    }
+    fn post_mix_into(
+        &mut self,
+        mixed: &mut Vec<Vec<f32>>,
+        params: &mut Vec<f32>,
         _lr: f32,
         _active: bool,
-    ) -> Vec<f32> {
+    ) {
         let y_mixed = mixed.pop().expect("two messages");
-        let x_new = mixed.pop().expect("two messages");
-        self.y = y_mixed;
-        x_new
+        let mut x_new = mixed.pop().expect("two messages");
+        let y_old = std::mem::replace(&mut self.y, y_mixed);
+        std::mem::swap(params, &mut x_new);
+        mixed.push(x_new); // previous params buffer, recyclable
+        mixed.push(y_old); // previous tracker buffer, recyclable
+    }
+    fn state_save(&self) -> OptState {
+        let flags = vec![self.prev_g.is_some()];
+        let mut vecs = vec![self.y.clone()];
+        if let Some(pg) = &self.prev_g {
+            vecs.push(pg.clone());
+        }
+        OptState { vecs, flags }
+    }
+    fn state_load(&mut self, state: OptState) -> Result<(), String> {
+        let OptState { vecs, flags } = state;
+        if flags.len() != 1 || vecs.len() != 1 + usize::from(flags[0]) {
+            return Err(
+                "gradient-tracking checkpoint state has the wrong shape"
+                    .into(),
+            );
+        }
+        let mut it = vecs.into_iter();
+        self.y = it.next().expect("length checked above");
+        self.prev_g = if flags[0] { it.next() } else { None };
+        Ok(())
     }
 }
 
@@ -449,6 +732,100 @@ mod tests {
         let x = opt.post_mix(vec![vec![0.6]], &[1.0], 0.1, true);
         assert!((x[0] - 0.6).abs() < 1e-6);
         assert!((opt.m[0] - 2.0).abs() < 1e-5, "m={}", opt.m[0]);
+    }
+
+    fn all_kinds() -> [OptimizerKind; 5] {
+        [
+            OptimizerKind::Dsgd,
+            OptimizerKind::Dsgdm { momentum: 0.9 },
+            OptimizerKind::QgDsgdm { momentum: 0.9 },
+            OptimizerKind::D2,
+            OptimizerKind::GradientTracking,
+        ]
+    }
+
+    /// Deterministic pseudo-gradient for round `r`, element `i`.
+    fn grad_at(r: usize, i: usize, x: f32) -> f32 {
+        x - (((i * 31 + r * 17) % 13) as f32 * 0.1 - 0.6)
+    }
+
+    /// The borrowing variants are the same arithmetic as the allocating
+    /// path — bit-for-bit, across rounds, including idle (inactive)
+    /// phases and the buffer-recycling contract.
+    #[test]
+    fn borrowing_variants_match_allocating_path_bitwise() {
+        let d = 6;
+        for kind in all_kinds() {
+            let mut a = kind.build(d); // allocating path
+            let mut b = kind.build(d); // borrowing path
+            let mut xa = vec![0.25f32; d];
+            let mut xb = vec![0.25f32; d];
+            let mut msgs_b: Vec<Vec<f32>> = Vec::new();
+            for r in 0..8 {
+                let lr = 0.1 / (1.0 + r as f32 * 0.25);
+                let active = r % 3 != 2; // exercise the idle branch too
+                let ga: Vec<f32> =
+                    (0..d).map(|i| grad_at(r, i, xa[i])).collect();
+                let gb: Vec<f32> =
+                    (0..d).map(|i| grad_at(r, i, xb[i])).collect();
+                assert_eq!(ga, gb, "{:?} r{r}: params drifted", kind);
+                let mut msgs_a = a.pre_mix(&xa, &ga, lr);
+                b.pre_mix_into(&xb, &gb, lr, &mut msgs_b);
+                assert_eq!(msgs_a, msgs_b, "{:?} r{r}: messages", kind);
+                // Stand-in for gossip: damp every message slightly.
+                for m in msgs_a.iter_mut().chain(msgs_b.iter_mut()) {
+                    for v in m.iter_mut() {
+                        *v *= 0.875;
+                    }
+                }
+                xa = a.post_mix(msgs_a, &xa, lr, active);
+                b.post_mix_into(&mut msgs_b, &mut xb, lr, active);
+                assert_eq!(xa, xb, "{:?} r{r}: params after mix", kind);
+            }
+        }
+    }
+
+    /// state_save/state_load is a faithful snapshot: a fresh optimizer
+    /// fed a mid-run state continues the exact trajectory.
+    #[test]
+    fn state_roundtrip_resumes_identically() {
+        let d = 5;
+        for kind in all_kinds() {
+            let mut a = kind.build(d);
+            let mut x = vec![0.5f32; d];
+            let step = |opt: &mut Box<dyn DecentralizedOptimizer>,
+                        x: &Vec<f32>,
+                        r: usize| {
+                let g: Vec<f32> =
+                    (0..d).map(|i| grad_at(r, i, x[i])).collect();
+                let msgs = opt.pre_mix(x, &g, 0.1);
+                opt.post_mix(msgs, x, 0.1, true)
+            };
+            for r in 0..4 {
+                x = step(&mut a, &x, r);
+            }
+            let mut resumed = kind.build(d);
+            resumed.state_load(a.state_save()).unwrap();
+            let mut xr = x.clone();
+            for r in 4..8 {
+                x = step(&mut a, &x, r);
+                xr = step(&mut resumed, &xr, r);
+                assert_eq!(x, xr, "{:?} r{r}: resumed drifted", kind);
+            }
+        }
+    }
+
+    #[test]
+    fn state_load_rejects_mismatched_shapes() {
+        // A stateless optimizer rejects a stateful export…
+        let mut dsgd = Dsgd;
+        assert!(dsgd
+            .state_load(Dsgdm::new(3, 0.9).state_save())
+            .is_err());
+        // …and a stateful one rejects the wrong vector length.
+        let mut m = Dsgdm::new(3, 0.9);
+        assert!(m.state_load(Dsgdm::new(4, 0.9).state_save()).is_err());
+        assert!(m.state_load(Dsgdm::new(3, 0.5).state_save()).is_ok());
     }
 
     #[test]

@@ -270,6 +270,39 @@ pub fn run_training_exec(
     seed: u64,
     exec: &ExecutorKind,
 ) -> Result<ExecTrace, String> {
+    run_training_exec_ckpt(
+        workload,
+        kind,
+        n,
+        alpha,
+        optimizer,
+        rounds,
+        lr,
+        seed,
+        exec,
+        &crate::ckpt::CkptConfig::default(),
+    )
+}
+
+/// [`run_training_exec`] with checkpoint/resume: `ckpt.policy` writes
+/// round-boundary snapshots, `ckpt.resume` restores one and continues.
+/// Node params, optimizer slots and gossip-pending buffers round-trip
+/// bit-exactly; the classification data samplers' shuffle cursors do
+/// not (they are re-derived from `seed`), so bit-exact resume holds for
+/// fixed-batch providers — see the ckpt module docs for the contract.
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_exec_ckpt(
+    workload: &TrainWorkload,
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+) -> Result<ExecTrace, String> {
     let node_data = partitioned_node_data(workload, n, alpha, seed);
     let seq = kind.build(n, seed)?;
     let cfg = repro_train_config(optimizer, rounds, lr, &CostModel::default());
@@ -287,7 +320,7 @@ pub fn run_training_exec(
         alpha,
         seed,
     });
-    exec.run(&mut w, &seq, cfg.rounds)
+    exec.run_ckpt(&mut w, &seq, cfg.rounds, ckpt)
 }
 
 /// [`run_training_exec`] keeping only the per-round records — what the

@@ -33,6 +33,12 @@ pub fn run(args: &Args) -> Result<(), String> {
     // (`--executor analytic|simnet|threaded|process`, `--threads N`,
     // `--shards N`, `--shard-balance contiguous|degree`).
     let exec = ExecutorKind::from_args(args, "analytic")?;
+    // Checkpoint/resume for the long training sweeps: each (figure,
+    // topology, lr, seed) run is scoped to its own subdirectory, so
+    // `--checkpoint-every N --resume <dir>` re-run after a crash skips
+    // every finished round. Consensus-only figures ignore it (they are
+    // seconds-long).
+    let ckpt = crate::ckpt::CkptConfig::from_args(args)?;
     // The paper repeats each training run over 3 seeds.
     let seeds: Vec<u64> = if fast {
         vec![seed]
@@ -83,19 +89,19 @@ pub fn run(args: &Args) -> Result<(), String> {
                 &out_dir,
             ),
             "fig7" => training_exps::fig7(
-                &engine, n, rounds, &seeds, &out_dir, &exec,
+                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt,
             ),
             "fig8" => training_exps::fig8(
-                &engine, &ns, rounds, &seeds, &out_dir, &exec,
+                &engine, &ns, rounds, &seeds, &out_dir, &exec, &ckpt,
             ),
             "fig9" => training_exps::fig9(
-                &engine, n, rounds, &seeds, &out_dir, &exec,
+                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt,
             ),
             "fig22" => training_exps::fig22(
-                &engine, n, rounds, &seeds, &out_dir, &exec,
+                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt,
             ),
             "fig25" => training_exps::fig25(
-                &engine, rounds, &seeds, &out_dir, &exec,
+                &engine, rounds, &seeds, &out_dir, &exec, &ckpt,
             ),
             "fig26" => training_exps::fig26(
                 &engine_deep,
@@ -104,6 +110,7 @@ pub fn run(args: &Args) -> Result<(), String> {
                 &seeds,
                 &out_dir,
                 &exec,
+                &ckpt,
             ),
             other => return Err(format!("unknown experiment {other:?}")),
         }

@@ -4,14 +4,15 @@
 //! classification with Dirichlet(α) label skew. The comparisons are the
 //! paper's: topology roster × heterogeneity level × optimizer.
 
+use crate::ckpt::CkptConfig;
 use crate::exec::ExecutorKind;
 use crate::optim::OptimizerKind;
 use crate::topology::TopologyKind;
 use crate::util::write_csv;
 
 use super::common::{
-    classification_workload, out_path, print_table, run_training,
-    standard_roster, Engine,
+    classification_workload, out_path, print_table,
+    run_training_exec_ckpt, standard_roster, Engine,
 };
 
 /// The paper tunes the step size by grid search per topology (Sec. H);
@@ -35,6 +36,7 @@ fn roster_run(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     let mut rows = Vec::new();
     for &kind in kinds {
@@ -55,10 +57,19 @@ fn roster_run(
                         break;
                     }
                 };
-                match run_training(
+                // Scope each (topology, lr, seed) run to its own
+                // checkpoint subdirectory so sweep runs never rotate
+                // each other's snapshots.
+                let scope = ckpt.scoped(&format!(
+                    "{tag}_{}_lr{lr_eff}_s{seed}",
+                    kind.to_cli_name()
+                ));
+                match run_training_exec_ckpt(
                     &workload, kind, n, alpha, optimizer, rounds, lr_eff,
-                    seed, exec,
-                ) {
+                    seed, exec, &scope,
+                )
+                .map(|t| t.run)
+                {
                     Ok(res) => {
                         finals.push(res.final_acc());
                         bests.push(res.best_acc());
@@ -151,6 +162,7 @@ pub fn fig7(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     for &alpha in &[10.0, 0.1] {
         roster_run(
@@ -166,6 +178,7 @@ pub fn fig7(
             seeds,
             out_dir,
             exec,
+            ckpt,
         );
     }
 }
@@ -179,6 +192,7 @@ pub fn fig8(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     for &n in ns {
         let mut kinds = vec![TopologyKind::Exp, TopologyKind::OnePeerExp];
@@ -198,6 +212,7 @@ pub fn fig8(
             seeds,
             out_dir,
             exec,
+            ckpt,
         );
     }
 }
@@ -210,6 +225,7 @@ pub fn fig9(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -235,6 +251,7 @@ pub fn fig9(
             seeds,
             out_dir,
             exec,
+            ckpt,
         );
     }
 }
@@ -247,6 +264,7 @@ pub fn fig22(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     let mut kinds = vec![
         TopologyKind::Base { m: 2 },
@@ -272,6 +290,7 @@ pub fn fig22(
             seeds,
             out_dir,
             exec,
+            ckpt,
         );
     }
 }
@@ -283,6 +302,7 @@ pub fn fig25(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -305,6 +325,7 @@ pub fn fig25(
         seeds,
         out_dir,
         exec,
+        ckpt,
     );
 }
 
@@ -317,6 +338,7 @@ pub fn fig26(
     seeds: &[u64],
     out_dir: &str,
     exec: &ExecutorKind,
+    ckpt: &CkptConfig,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -338,6 +360,7 @@ pub fn fig26(
         seeds,
         out_dir,
         exec,
+        ckpt,
     );
 }
 
@@ -364,6 +387,7 @@ mod tests {
             &[1],
             d,
             &ExecutorKind::analytic(),
+            &CkptConfig::default(),
         );
         assert!(std::path::Path::new(&format!("{d}/fig7_smoke.csv"))
             .exists());

@@ -1,10 +1,28 @@
 //! The batch type flowing between the data pipeline and gradient providers.
 
 /// Feature tensor payload: f32 for MLP/CNN inputs, i32 for LM token ids.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum Features {
     F32(Vec<f32>),
     I32(Vec<i32>),
+}
+
+// Manual Clone so `clone_from` reuses the destination buffer when the
+// dtype matches — the derive's default `clone_from` reallocates.
+impl Clone for Features {
+    fn clone(&self) -> Self {
+        match self {
+            Features::F32(v) => Features::F32(v.clone()),
+            Features::I32(v) => Features::I32(v.clone()),
+        }
+    }
+    fn clone_from(&mut self, src: &Self) {
+        match (self, src) {
+            (Features::F32(d), Features::F32(s)) => d.clone_from(s),
+            (Features::I32(d), Features::I32(s)) => d.clone_from(s),
+            (d, s) => *d = s.clone(),
+        }
+    }
 }
 
 impl Features {
@@ -26,7 +44,7 @@ impl Features {
 }
 
 /// One training/eval batch with explicit shapes (row-major).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct Batch {
     pub x: Features,
     pub x_shape: Vec<usize>,
@@ -35,7 +53,38 @@ pub struct Batch {
     pub y_shape: Vec<usize>,
 }
 
+// Manual Clone so `clone_from` reuses every destination buffer — this is
+// what lets a per-node batch scratch absorb a fresh batch each round
+// without allocating.
+impl Clone for Batch {
+    fn clone(&self) -> Self {
+        Batch {
+            x: self.x.clone(),
+            x_shape: self.x_shape.clone(),
+            y: self.y.clone(),
+            y_shape: self.y_shape.clone(),
+        }
+    }
+    fn clone_from(&mut self, src: &Self) {
+        self.x.clone_from(&src.x);
+        self.x_shape.clone_from(&src.x_shape);
+        self.y.clone_from(&src.y);
+        self.y_shape.clone_from(&src.y_shape);
+    }
+}
+
 impl Batch {
+    /// A zero-example placeholder, for scratch slots filled later via
+    /// `clone_from` / `NodeData::next_train_batch_into`.
+    pub fn empty() -> Batch {
+        Batch {
+            x: Features::F32(Vec::new()),
+            x_shape: Vec::new(),
+            y: Vec::new(),
+            y_shape: Vec::new(),
+        }
+    }
+
     /// Number of examples (leading axis).
     pub fn batch_size(&self) -> usize {
         *self.x_shape.first().unwrap_or(&0)

@@ -20,6 +20,21 @@ pub trait GradProvider: Send + Sync {
     /// `(loss, grads)` on one batch.
     fn train_step(&self, params: &[f32], batch: &Batch)
         -> Result<(f32, Vec<f32>), String>;
+    /// Borrowing variant of [`train_step`](Self::train_step): write the
+    /// gradient into `grads` (reshaped as needed, buffers reused) and
+    /// return the loss. The default delegates to the allocating method;
+    /// hot-path providers override it so the steady-state training round
+    /// allocates nothing.
+    fn train_step_into(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+    ) -> Result<f32, String> {
+        let (loss, g) = self.train_step(params, batch)?;
+        *grads = g;
+        Ok(loss)
+    }
     /// `(loss, correct_count)` on one eval batch.
     fn eval_step(&self, params: &[f32], batch: &Batch)
         -> Result<(f32, f64), String>;
@@ -69,6 +84,16 @@ impl GradProvider for QuadraticModel {
         params: &[f32],
         batch: &Batch,
     ) -> Result<(f32, Vec<f32>), String> {
+        let mut grads = Vec::new();
+        let loss = self.train_step_into(params, batch, &mut grads)?;
+        Ok((loss, grads))
+    }
+    fn train_step_into(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+    ) -> Result<f32, String> {
         let c = match &batch.x {
             Features::F32(v) => v,
             _ => return Err("quadratic model expects f32 targets".into()),
@@ -81,14 +106,15 @@ impl GradProvider for QuadraticModel {
                 params.len()
             ));
         }
+        grads.clear();
+        grads.resize(self.d, 0.0);
         let mut loss = 0.0f64;
-        let mut grads = vec![0.0f32; self.d];
         for i in 0..self.d {
             let diff = params[i] - c[i];
             loss += 0.5 * (diff as f64) * (diff as f64);
             grads[i] = diff;
         }
-        Ok((loss as f32, grads))
+        Ok(loss as f32)
     }
     fn eval_step(
         &self,

@@ -151,6 +151,20 @@ impl NetworkModel {
     pub fn dropped(&mut self) -> bool {
         self.drop_rate > 0.0 && self.rng.chance(self.drop_rate)
     }
+
+    /// Export the RNG cursor for checkpointing. The straggler subset is
+    /// a pure function of the seed (recomputed by [`NetworkModel::new`]
+    /// on resume), so the cursor is the only mutable state the physical
+    /// layer carries between rounds.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Overwrite the RNG cursor with one exported by
+    /// [`NetworkModel::rng_state`], continuing the exact draw stream.
+    pub fn restore_rng(&mut self, s: [u64; 4], gauss_spare: Option<f64>) {
+        self.rng = Rng::from_state(s, gauss_spare);
+    }
 }
 
 #[cfg(test)]

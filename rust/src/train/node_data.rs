@@ -9,6 +9,16 @@ use crate::runtime::batch::Batch;
 /// A node's stream of training batches.
 pub trait NodeData: Send {
     fn next_train_batch(&mut self) -> Batch;
+
+    /// Borrowing variant of [`next_train_batch`](Self::next_train_batch):
+    /// write the round's batch into `out`, reusing its buffers. The
+    /// default delegates to the allocating method; sources with stable
+    /// batch shapes (e.g. [`FixedBatch`]) override it so the
+    /// steady-state training round allocates nothing.
+    fn next_train_batch_into(&mut self, out: &mut Batch) {
+        *out = self.next_train_batch();
+    }
+
     /// Number of local examples (for diagnostics).
     fn shard_size(&self) -> usize;
 }
@@ -27,6 +37,9 @@ impl FixedBatch {
 impl NodeData for FixedBatch {
     fn next_train_batch(&mut self) -> Batch {
         self.batch.clone()
+    }
+    fn next_train_batch_into(&mut self, out: &mut Batch) {
+        out.clone_from(&self.batch);
     }
     fn shard_size(&self) -> usize {
         self.batch.batch_size()

@@ -35,6 +35,19 @@ impl Rng {
         Rng { s, gauss_spare: None }
     }
 
+    /// Export the full generator state — the four xoshiro256++ state
+    /// words plus the cached Box–Muller spare — for checkpointing. A
+    /// generator rebuilt with [`Rng::from_state`] continues the exact
+    /// same stream.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator mid-stream from an exported [`Rng::state`].
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Rng {
+        Rng { s, gauss_spare }
+    }
+
     /// Derive an independent child stream (e.g. one per node).
     pub fn fork(&mut self, tag: u64) -> Rng {
         let mix = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);

@@ -1,24 +1,30 @@
 //! Allocation regression: steady-state rounds of the analytic backend on
-//! the consensus workload must not touch the heap.
+//! the consensus *and training* workloads must not touch the heap.
 //!
 //! A counting allocator wraps the system one and the pin is
 //! *differential*: two runs that differ only in extra steady-state rounds
 //! must perform exactly the same number of heap allocations — every
-//! buffer (mailboxes, combine scratch, availability table, the records
-//! vector's reserved capacity) is created at warmup and reused
-//! thereafter, so the extra rounds cost zero allocations. An absolute
-//! count would be brittle against unrelated one-time costs; the delta is
-//! exact.
+//! buffer (mailboxes, combine scratch, availability table, optimizer
+//! slots, batch scratch, the records vector's reserved capacity) is
+//! created at warmup and reused thereafter, so the extra rounds cost
+//! zero allocations. An absolute count would be brittle against
+//! unrelated one-time costs; the delta is exact.
 //!
 //! This file deliberately holds a single test: the counter is global to
 //! the test binary, and a concurrently running test would pollute it.
+//! Both cells therefore live in that one function, sequentially.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use basegraph::consensus::gaussian_init;
-use basegraph::exec::{AnalyticExecutor, ConsensusWorkload, Executor};
+use basegraph::exec::{
+    quadratic_fixed_targets, AnalyticExecutor, ConsensusWorkload, Executor,
+    TrainingWorkload,
+};
+use basegraph::optim::OptimizerKind;
 use basegraph::topology::TopologyKind;
+use basegraph::train::TrainConfig;
 use basegraph::util::rng::Rng;
 
 struct CountingAlloc;
@@ -92,4 +98,42 @@ fn steady_state_consensus_rounds_allocate_nothing() {
     );
     // Sanity: the harness is actually counting (warmup does allocate).
     assert!(base > 0);
+
+    // The training cell: the same differential on the DSGDm path.
+    // Momentum exercises the optimizer's borrowed pre/post-mix scratch
+    // (`pre_mix_into` and friends) — the last d-sized allocation on the
+    // training round path is pinned out here. Eval is off so the delta
+    // isolates the gradient → mix → optimizer-step cycle.
+    let n = 16;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 48,
+        lr: 0.2,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 0,
+        threads: 1,
+        ..Default::default()
+    };
+    let count_train = |rounds: usize| -> u64 {
+        let (model, data) = quadratic_fixed_targets(n, 8, 3);
+        let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let tr =
+            AnalyticExecutor::serial().run(&mut w, &seq, rounds).unwrap();
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(tr.run.records.len(), rounds + 1);
+        after - before
+    };
+    let _ = count_train(12);
+    let train_base = count_train(12);
+    let train_longer = count_train(48);
+    assert_eq!(
+        train_longer, train_base,
+        "steady-state training rounds hit the allocator: a 48-round run \
+         cost {train_longer} allocations vs {train_base} for 12 rounds — \
+         the borrowing optimizer path regressed"
+    );
+    assert!(train_base > 0);
 }

@@ -1,0 +1,250 @@
+//! Checkpoint format negative tests — the typed-error contract of
+//! `ckpt::Snapshot`, mirroring the wire-protocol negative tests: every
+//! way a snapshot file can be wrong (bad magic, foreign version,
+//! unknown kind, truncation at any offset, a flipped body byte,
+//! trailing garbage) maps to its own `CkptError` variant, never a panic
+//! and never silently-decoded garbage. Plus the policy mechanics the
+//! recovery path leans on: rotation, directory resume, and the
+//! backends that refuse checkpointing outright.
+
+use std::path::PathBuf;
+
+use basegraph::ckpt::{
+    CheckpointPolicy, CkptConfig, CkptError, Snapshot, CKPT_MAGIC,
+    CKPT_VERSION,
+};
+use basegraph::comm::CommLedger;
+use basegraph::consensus::gaussian_init;
+use basegraph::exec::{ConsensusWorkload, ExecutorKind};
+use basegraph::simnet::{ExecMode, SimConfig};
+use basegraph::topology::TopologyKind;
+use basegraph::util::rng::Rng;
+
+fn uniq_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "basegraph_ckpt_fmt_{tag}_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small but fully populated snapshot (every optional section
+/// present) — corruption anywhere in the layout is reachable.
+fn sample(round: usize) -> Snapshot {
+    Snapshot {
+        topology: "Base-2 Graph".into(),
+        n: 4,
+        round,
+        nodes: vec![vec![9, 8, 7], vec![], vec![0; 5], vec![1]],
+        ledger: CommLedger {
+            messages: 12,
+            bytes: 1200,
+            sim_seconds: 0.5,
+            rounds: round as u64,
+            bytes_on_wire: 77,
+        },
+        records: Vec::new(),
+        clock: 2.25,
+        rng: Some(([5, 6, 7, 8], None)),
+    }
+}
+
+#[test]
+fn truncation_at_every_prefix_is_a_typed_error() {
+    let bytes = sample(4).to_file_bytes();
+    // Every strict prefix — header cuts, mid-body cuts, missing CRC
+    // bytes — must fail loudly as Truncated, never panic or decode.
+    for k in 0..bytes.len() {
+        let err = Snapshot::from_file_bytes(&bytes[..k]).unwrap_err();
+        assert!(
+            matches!(err, CkptError::Truncated { .. }),
+            "prefix of {k} bytes gave {err:?}, expected Truncated"
+        );
+    }
+    // The untruncated file still parses (the loop above is meaningful).
+    assert!(Snapshot::from_file_bytes(&bytes).is_ok());
+}
+
+#[test]
+fn flipped_body_byte_is_a_checksum_mismatch() {
+    let good = sample(4).to_file_bytes();
+    let body_start = 7;
+    let body_end = good.len() - 4;
+    for at in [body_start, (body_start + body_end) / 2, body_end - 1] {
+        let mut bad = good.clone();
+        bad[at] ^= 0x40;
+        let err = Snapshot::from_file_bytes(&bad).unwrap_err();
+        assert_eq!(
+            err,
+            CkptError::ChecksumMismatch,
+            "flip at byte {at} gave {err:?}"
+        );
+    }
+}
+
+#[test]
+fn foreign_version_is_a_version_mismatch() {
+    let mut bad = sample(4).to_file_bytes();
+    bad[1] = CKPT_VERSION + 1;
+    match Snapshot::from_file_bytes(&bad).unwrap_err() {
+        CkptError::VersionMismatch { found } => {
+            assert_eq!(found, CKPT_VERSION + 1)
+        }
+        other => panic!("expected VersionMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn wrong_magic_and_kind_are_typed_errors() {
+    let good = sample(4).to_file_bytes();
+    let mut bad = good.clone();
+    bad[0] = CKPT_MAGIC ^ 0xFF;
+    assert!(matches!(
+        Snapshot::from_file_bytes(&bad).unwrap_err(),
+        CkptError::BadMagic(_)
+    ));
+    let mut bad = good.clone();
+    bad[2] = 99;
+    assert_eq!(
+        Snapshot::from_file_bytes(&bad).unwrap_err(),
+        CkptError::BadKind(99)
+    );
+    // Trailing garbage after the checksum: the length field promised
+    // less than the file holds.
+    let mut bad = good;
+    bad.extend_from_slice(&[0, 0, 0]);
+    assert!(matches!(
+        Snapshot::from_file_bytes(&bad).unwrap_err(),
+        CkptError::Malformed(_)
+    ));
+}
+
+#[test]
+fn corrupt_file_on_disk_loads_as_error_not_panic() {
+    let dir = uniq_dir("disk");
+    let path = dir.join("ckpt-00000004.bgc");
+    let mut bytes = sample(4).to_file_bytes();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 1;
+    std::fs::write(&path, &bytes).unwrap();
+    assert_eq!(
+        Snapshot::load(&path).unwrap_err(),
+        CkptError::ChecksumMismatch
+    );
+    // And a missing file is Io, not a panic.
+    assert!(matches!(
+        Snapshot::load(&dir.join("ckpt-99999999.bgc")).unwrap_err(),
+        CkptError::Io(_)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rotation_keeps_only_the_newest_snapshots() {
+    let dir = uniq_dir("rotate");
+    let policy = CheckpointPolicy {
+        every_n_rounds: 1,
+        dir: dir.clone(),
+        keep_last: 2,
+    };
+    for round in 1..=5 {
+        policy.save(&sample(round)).unwrap();
+    }
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["ckpt-00000004.bgc", "ckpt-00000005.bgc"],
+        "keep_last = 2 must retain exactly the two newest"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn directory_resume_picks_newest_and_tolerates_empty() {
+    let dir = uniq_dir("dirresume");
+    let policy = CheckpointPolicy {
+        every_n_rounds: 1,
+        dir: dir.clone(),
+        keep_last: 0,
+    };
+    // Empty directory: the lenient crash-recovery form starts fresh.
+    let cfg = CkptConfig { policy: None, resume: Some(dir.clone()) };
+    assert!(cfg.load_resume(4, "Base-2 Graph", 10).unwrap().is_none());
+    // A missing dir-like path (no .bgc extension) also starts fresh…
+    let cfg_missing = CkptConfig {
+        policy: None,
+        resume: Some(dir.join("not_yet_created")),
+    };
+    assert!(cfg_missing
+        .load_resume(4, "Base-2 Graph", 10)
+        .unwrap()
+        .is_none());
+    // …but a missing *file* path is an error: the caller named one
+    // specific snapshot and it is gone.
+    let cfg_file = CkptConfig {
+        policy: None,
+        resume: Some(dir.join("ckpt-00000009.bgc")),
+    };
+    assert!(cfg_file.load_resume(4, "Base-2 Graph", 10).is_err());
+    // With snapshots present, the newest (highest round) wins.
+    policy.save(&sample(2)).unwrap();
+    policy.save(&sample(6)).unwrap();
+    let snap = cfg.load_resume(4, "Base-2 Graph", 10).unwrap().unwrap();
+    assert_eq!(snap.round, 6);
+    // Validation still applies on the directory path.
+    assert!(cfg.load_resume(5, "Base-2 Graph", 10).is_err());
+    assert!(cfg.load_resume(4, "Ring", 10).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn async_simnet_refuses_checkpointing_cleanly() {
+    let n = 6;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(3);
+    let init = gaussian_init(n, 2, &mut rng);
+    let mut sim = SimConfig::ideal();
+    sim.mode = ExecMode::Async;
+    let exec = ExecutorKind::Simnet(sim);
+    let dir = uniq_dir("async");
+    let ckpt = CkptConfig {
+        policy: Some(CheckpointPolicy {
+            every_n_rounds: 2,
+            dir: dir.clone(),
+            keep_last: 0,
+        }),
+        resume: None,
+    };
+    let err = exec
+        .run_ckpt(
+            &mut ConsensusWorkload::new(init.clone()),
+            &seq,
+            seq.len(),
+            &ckpt,
+        )
+        .unwrap_err();
+    assert!(err.contains("round boundaries"), "got {err:?}");
+    // Inactive config: the same async run is fine.
+    assert!(ExecutorKind::Simnet({
+        let mut s = SimConfig::ideal();
+        s.mode = ExecMode::Async;
+        s
+    })
+    .run_ckpt(
+        &mut ConsensusWorkload::new(init),
+        &seq,
+        seq.len(),
+        &CkptConfig::default(),
+    )
+    .is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}

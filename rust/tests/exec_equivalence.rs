@@ -8,6 +8,7 @@
 //! across backends: any wall-clock, event-clock or bytes-on-wire
 //! difference is attributable to the backend, never to the arithmetic.
 
+use basegraph::ckpt::{CheckpointPolicy, CkptConfig};
 use basegraph::consensus::gaussian_init;
 use basegraph::exec::{
     quadratic_fixed_targets, AllocatingWorkload, ConsensusWorkload,
@@ -204,6 +205,200 @@ fn scratch_and_legacy_allocating_paths_are_bit_identical() {
                     assert_eq!(x.consensus_error, y.consensus_error);
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint/resume determinism contract (pinned).
+//
+// A run snapshotted at round r and resumed from that snapshot must be
+// bit-identical to the uninterrupted run on every backend — final
+// states, the per-round records' *model* columns, and the ledger's
+// model columns. The *measured* columns (`wall_seconds`,
+// `cum_wire_bytes` / `bytes_on_wire`) are clocks and physical byte
+// counters: a resumed run pays a second process handshake and its own
+// wall clock, so those legitimately differ and are excluded here.
+// ---------------------------------------------------------------------
+
+/// A fresh per-call checkpoint directory under the system temp dir, so
+/// concurrent tests (and backends within one test) never rotate each
+/// other's snapshot files.
+fn uniq_ckpt_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "basegraph_ckpt_eqv_{tag}_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Bit-exact equality on everything the arithmetic determines; measured
+/// wall-clock and wire-byte columns excluded by design (see above).
+fn assert_model_columns_eq(a: &ExecTrace, b: &ExecTrace, what: &str) {
+    assert_eq!(a.finals, b.finals, "{what}: final states diverged");
+    assert_eq!(
+        a.run.records.len(),
+        b.run.records.len(),
+        "{what}: record counts differ"
+    );
+    for (x, y) in a.run.records.iter().zip(&b.run.records) {
+        assert_eq!(x.round, y.round, "{what}: round index");
+        let r = x.round;
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{what}: train_loss at round {r}"
+        );
+        assert_eq!(
+            x.consensus_error.to_bits(),
+            y.consensus_error.to_bits(),
+            "{what}: consensus_error at round {r}"
+        );
+        assert_eq!(
+            x.test_loss.to_bits(),
+            y.test_loss.to_bits(),
+            "{what}: test_loss at round {r}"
+        );
+        assert_eq!(
+            x.test_acc.to_bits(),
+            y.test_acc.to_bits(),
+            "{what}: test_acc at round {r}"
+        );
+        assert_eq!(
+            x.cum_messages, y.cum_messages,
+            "{what}: cum_messages at round {r}"
+        );
+        assert_eq!(
+            x.cum_bytes, y.cum_bytes,
+            "{what}: cum_bytes at round {r}"
+        );
+        assert_eq!(
+            x.sim_seconds.to_bits(),
+            y.sim_seconds.to_bits(),
+            "{what}: sim_seconds at round {r}"
+        );
+    }
+    assert_eq!(a.ledger.messages, b.ledger.messages, "{what}: ledger");
+    assert_eq!(a.ledger.bytes, b.ledger.bytes, "{what}: ledger bytes");
+    assert_eq!(
+        a.ledger.sim_seconds.to_bits(),
+        b.ledger.sim_seconds.to_bits(),
+        "{what}: ledger sim_seconds"
+    );
+    assert_eq!(a.ledger.rounds, b.ledger.rounds, "{what}: ledger rounds");
+}
+
+#[test]
+fn consensus_checkpoint_resume_is_bit_identical_on_every_backend() {
+    for n in [8usize, 64] {
+        let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+        let mut rng = Rng::new(7);
+        let init = gaussian_init(n, 3, &mut rng);
+        let iters = 2 * seq.len();
+        let every = iters / 2;
+        for exec in backends() {
+            let base = exec
+                .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+                .unwrap();
+            let tag = format!("{} n={n} consensus", base.backend);
+            // Snapshotting must not perturb the run it observes.
+            let dir = uniq_ckpt_dir("cons");
+            let policy = CheckpointPolicy {
+                every_n_rounds: every,
+                dir: dir.clone(),
+                keep_last: 0,
+            };
+            let writing = CkptConfig {
+                policy: Some(policy.clone()),
+                resume: None,
+            };
+            let full = exec
+                .run_ckpt(
+                    &mut ConsensusWorkload::new(init.clone()),
+                    &seq,
+                    iters,
+                    &writing,
+                )
+                .unwrap();
+            assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
+            // Resume from the mid-run snapshot: bit-identical tail.
+            let snap = policy.path_for(every);
+            assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
+            let resuming =
+                CkptConfig { policy: None, resume: Some(snap) };
+            let resumed = exec
+                .run_ckpt(
+                    &mut ConsensusWorkload::new(init.clone()),
+                    &seq,
+                    iters,
+                    &resuming,
+                )
+                .unwrap();
+            assert_model_columns_eq(
+                &base,
+                &resumed,
+                &format!("{tag} (resumed)"),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn training_checkpoint_resume_is_bit_identical_on_every_backend() {
+    for n in [8usize, 64] {
+        let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+        let cfg = TrainConfig {
+            rounds: 12,
+            lr: 0.2,
+            warmup: 2,
+            cosine: true,
+            optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+            eval_every: 4,
+            threads: 2,
+            ..Default::default()
+        };
+        let every = cfg.rounds / 2;
+        // Quadratic fixed-batch data: every per-node cursor round-trips
+        // through node_ckpt/node_restore (the bit-exact resume surface).
+        let fresh = |exec: &ExecutorKind,
+                     ckpt: &CkptConfig|
+         -> ExecTrace {
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                .with_wire(TrainSpec::Quadratic { d: 5, seed: 3 });
+            exec.run_ckpt(&mut w, &seq, cfg.rounds, ckpt).unwrap()
+        };
+        for exec in backends() {
+            let base = fresh(&exec, &CkptConfig::default());
+            let tag = format!("{} n={n} training", base.backend);
+            let dir = uniq_ckpt_dir("train");
+            let policy = CheckpointPolicy {
+                every_n_rounds: every,
+                dir: dir.clone(),
+                keep_last: 0,
+            };
+            let writing = CkptConfig {
+                policy: Some(policy.clone()),
+                resume: None,
+            };
+            let full = fresh(&exec, &writing);
+            assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
+            let snap = policy.path_for(every);
+            assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
+            let resuming =
+                CkptConfig { policy: None, resume: Some(snap) };
+            let resumed = fresh(&exec, &resuming);
+            assert_model_columns_eq(
+                &base,
+                &resumed,
+                &format!("{tag} (resumed)"),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
         }
     }
 }

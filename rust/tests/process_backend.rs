@@ -5,6 +5,7 @@
 
 use std::time::Duration;
 
+use basegraph::ckpt::{CheckpointPolicy, CkptConfig};
 use basegraph::comm::CostModel;
 use basegraph::consensus::gaussian_init;
 use basegraph::exec::{
@@ -133,9 +134,23 @@ fn shard_count_clamps_to_n() {
     assert_eq!(tr.finals, a.finals);
 }
 
-/// The crash satellite: a worker that dies mid-run (fault injection, no
-/// goodbye frame) becomes a clean coordinator error naming the shard —
-/// within the io timeout, never a hang.
+/// A fresh per-call checkpoint directory under the system temp dir.
+fn uniq_ckpt_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "basegraph_ckpt_proc_{tag}_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// With no snapshot to fall back on, a worker that dies mid-run (fault
+/// injection, no goodbye frame) stays a clean coordinator error naming
+/// the shard — within the io timeout, never a hang. (With checkpoints
+/// enabled the same crash becomes a recovery; see the tests below.)
 #[test]
 fn worker_crash_surfaces_clean_error_not_hang() {
     let n = 8;
@@ -157,6 +172,127 @@ fn worker_crash_surfaces_clean_error_not_hang() {
         t0.elapsed() < Duration::from_secs(25),
         "crash detection must not eat the whole timeout"
     );
+}
+
+/// The recovery scenario, kill at a round boundary: shard 1 dies
+/// entering round 4, exactly where a snapshot (cadence 2) was just
+/// written. The coordinator respawns every shard from that snapshot and
+/// the completed run is bit-identical to the analytic backend.
+#[test]
+fn worker_crash_at_round_boundary_recovers_bit_identical() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(6);
+    let init = gaussian_init(n, 2, &mut rng);
+    let iters = 2 * seq.len();
+    let dir = uniq_ckpt_dir("boundary");
+    let mut ex = process(2);
+    ex.io_timeout = Duration::from_secs(30);
+    ex.fault_crash = Some((1, 4)); // shard 1 aborts entering round 4
+    ex.ckpt = CkptConfig {
+        policy: Some(CheckpointPolicy {
+            every_n_rounds: 2,
+            dir: dir.clone(),
+            keep_last: 3,
+        }),
+        resume: None,
+    };
+    let p = ex
+        .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+        .unwrap();
+    let a = AnalyticExecutor::serial()
+        .run(&mut ConsensusWorkload::new(init), &seq, iters)
+        .unwrap();
+    assert_eq!(p.finals, a.finals, "recovered run must be bit-identical");
+    assert_eq!(p.errors(), a.errors());
+    assert_eq!(p.ledger.messages, a.ledger.messages);
+    assert_eq!(p.ledger.bytes, a.ledger.bytes);
+    assert_eq!(p.ledger.rounds, a.ledger.rounds);
+    // The wire counter is measured: both attempts' frames count.
+    assert!(p.ledger.bytes_on_wire > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The recovery scenario, kill mid-round: shard 0 dies *inside* round 5
+/// (after sending its gossip bundles, before receiving). Survivors
+/// cannot be rewound mid-round, so the coordinator kills them all and
+/// respawns every shard from the round-4 snapshot; the replayed run is
+/// bit-identical to the analytic backend.
+#[test]
+fn worker_crash_mid_round_recovers_bit_identical() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 10,
+        lr: 0.2,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 5,
+        threads: 1,
+        ..Default::default()
+    };
+    let dir = uniq_ckpt_dir("midround");
+    let mut ex = process(2);
+    ex.io_timeout = Duration::from_secs(30);
+    ex.fault_crash_mid = Some((0, 5)); // shard 0 dies inside round 5
+    ex.ckpt = CkptConfig {
+        policy: Some(CheckpointPolicy {
+            every_n_rounds: 2,
+            dir: dir.clone(),
+            keep_last: 3,
+        }),
+        resume: None,
+    };
+    let (model, data) = quadratic_fixed_targets(n, 4, 9);
+    let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+        .with_wire(TrainSpec::Quadratic { d: 4, seed: 9 });
+    let p = ex.run(&mut w, &seq, cfg.rounds).unwrap();
+    let (model, data) = quadratic_fixed_targets(n, 4, 9);
+    let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+    let a = AnalyticExecutor::new(cfg.cost, 1)
+        .run(&mut w, &seq, cfg.rounds)
+        .unwrap();
+    assert_eq!(p.finals, a.finals, "recovered run must be bit-identical");
+    assert_eq!(p.run.records.len(), a.run.records.len());
+    for (x, y) in p.run.records.iter().zip(&a.run.records) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.cum_messages, y.cum_messages);
+        assert_eq!(x.cum_bytes, y.cum_bytes);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Respawns are bounded: a crash with checkpoints enabled but a fault
+/// that would fire before the first snapshot exists still surfaces as a
+/// clean error (there is nothing to recover from).
+#[test]
+fn crash_before_first_snapshot_is_still_a_clean_error() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(2);
+    let init = gaussian_init(n, 2, &mut rng);
+    let dir = uniq_ckpt_dir("nosnap");
+    let mut ex = process(2);
+    ex.io_timeout = Duration::from_secs(30);
+    ex.fault_crash = Some((0, 1)); // dies before the cadence-4 snapshot
+    ex.ckpt = CkptConfig {
+        policy: Some(CheckpointPolicy {
+            every_n_rounds: 4,
+            dir: dir.clone(),
+            keep_last: 3,
+        }),
+        resume: None,
+    };
+    let err = ex
+        .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
+        .unwrap_err();
+    assert!(
+        err.contains("shard") || err.contains("worker"),
+        "error should name the failing worker: {err:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
