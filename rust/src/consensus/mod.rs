@@ -162,9 +162,31 @@ pub fn consensus_experiment_ckpt(
     exec: &ExecutorKind,
     ckpt: &crate::ckpt::CkptConfig,
 ) -> Result<ExecTrace, String> {
+    consensus_experiment_tel(
+        seq,
+        iters,
+        seed,
+        exec,
+        ckpt,
+        &crate::telemetry::Telemetry::off(),
+    )
+}
+
+/// [`consensus_experiment_ckpt`] with a live telemetry handle: every
+/// round emits onto `tele`'s NDJSON stream / HTTP feed. Pass
+/// [`Telemetry::off`](crate::telemetry::Telemetry::off) to opt out — the
+/// off path adds nothing to the round loop.
+pub fn consensus_experiment_tel(
+    seq: &GraphSequence,
+    iters: usize,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+    tele: &crate::telemetry::Telemetry,
+) -> Result<ExecTrace, String> {
     let mut rng = Rng::new(seed);
     let init = gaussian_init(seq.n, 1, &mut rng);
-    exec.run_ckpt(&mut ConsensusWorkload::new(init), seq, iters, ckpt)
+    exec.run_tel(&mut ConsensusWorkload::new(init), seq, iters, ckpt, tele)
 }
 
 #[cfg(test)]

@@ -20,6 +20,7 @@ use crate::ckpt::{CkptConfig, Snapshot};
 use crate::comm::{CommLedger, CostModel};
 use crate::metrics::RunResult;
 use crate::simnet::event::Trace;
+use crate::telemetry::{Event, Telemetry};
 use crate::topology::GraphSequence;
 use crate::util::threadpool::ThreadPool;
 
@@ -65,6 +66,17 @@ impl Executor for AnalyticExecutor {
         rounds: usize,
         ckpt: &CkptConfig,
     ) -> Result<ExecTrace, String> {
+        self.run_tel(w, seq, rounds, ckpt, &Telemetry::off())
+    }
+
+    fn run_tel<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+        tele: &Telemetry,
+    ) -> Result<ExecTrace, String> {
         let (_, slot_bytes) = w.comm_shape();
         let pool = if w.parallel_hint() && self.threads != 1 {
             Some(if self.threads == 0 {
@@ -87,6 +99,7 @@ impl Executor for AnalyticExecutor {
             parallel_combine,
             "analytic",
             ckpt,
+            tele,
         )
     }
 }
@@ -116,6 +129,13 @@ impl Executor for AnalyticExecutor {
 /// `ckpt.policy` writes snapshots after due rounds commit. The lock-step
 /// clock is implicit (the α–β ledger), so a snapshot's `clock`/`rng`
 /// fields stay at their inert defaults here.
+///
+/// Telemetry: `run_started` after resume handling, `round_completed`
+/// after each record commits (on the coordinator thread, outside the
+/// pool dispatch), `checkpoint_written` after each snapshot rename,
+/// `run_finished` with the final ledger totals. With [`Telemetry::off`]
+/// every hook is a single branch — the steady-state round stays
+/// allocation-free.
 #[allow(clippy::too_many_arguments)] // internal engine; callers are the two backends
 pub(super) fn run_lockstep<W: Workload>(
     w: &mut W,
@@ -126,6 +146,7 @@ pub(super) fn run_lockstep<W: Workload>(
     parallel_combine: bool,
     backend: &'static str,
     ckpt: &CkptConfig,
+    tele: &Telemetry,
 ) -> Result<ExecTrace, String> {
     let n = seq.n;
     if n == 0 {
@@ -159,6 +180,14 @@ pub(super) fn run_lockstep<W: Workload>(
             }
         }
     }
+    tele.emit_with(|| Event::RunStarted {
+        label: w.label(),
+        backend,
+        topology: seq.name.clone(),
+        n,
+        rounds,
+        start_round,
+    });
     // Double-buffered mailboxes: `front` is what every node reads this
     // round, `back` is where fresh payloads are published; they swap at
     // the barrier between the publish and combine phases, so a combine
@@ -257,6 +286,8 @@ pub(super) fn run_lockstep<W: Workload>(
         rec.sim_seconds = ledger.sim_seconds;
         rec.wall_seconds = t0.elapsed().as_secs_f64();
         records.push(rec);
+        let committed = records.last().expect("pushed above");
+        tele.emit_with(|| Event::round(committed));
 
         // 7. Round-boundary snapshot, when due.
         if let Some(pol) = ckpt.policy.as_ref().filter(|p| p.due(r)) {
@@ -273,10 +304,22 @@ pub(super) fn run_lockstep<W: Workload>(
                 clock: 0.0,
                 rng: None,
             };
-            pol.save(&snap)?;
+            let path = pol.save(&snap)?;
+            tele.emit_with(|| Event::CheckpointWritten {
+                round: r + 1,
+                path: path.display().to_string(),
+            });
         }
     }
 
+    tele.emit_with(|| Event::RunFinished {
+        rounds,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        messages: ledger.messages,
+        bytes: ledger.bytes,
+        wire_bytes: ledger.bytes_on_wire,
+        drops: tele.dropped(),
+    });
     let finals = w.finals(&nodes);
     Ok(ExecTrace {
         backend,
@@ -291,6 +334,7 @@ pub(super) fn run_lockstep<W: Workload>(
         drops: 0,
         trace: Trace::new(false),
         wall_seconds: t0.elapsed().as_secs_f64(),
+        wire_matrix: Vec::new(),
         finals,
     })
 }

@@ -115,6 +115,7 @@ use crate::comm::{CommLedger, CostModel};
 use crate::metrics::{RoundRecord, RunResult, TimeToTarget};
 use crate::simnet::event::Trace;
 use crate::simnet::SimConfig;
+use crate::telemetry::Telemetry;
 use crate::topology::GraphSequence;
 
 /// The unified result of one executed run, whatever the backend.
@@ -144,6 +145,11 @@ pub struct ExecTrace {
     pub trace: Trace,
     /// Measured wall-clock seconds for the whole run.
     pub wall_seconds: f64,
+    /// Process backend only: measured wire bytes routed through the
+    /// coordinator per (src, dst) shard pair — `wire_matrix[src][dst]`
+    /// counts both hops of every bundle (src → coordinator → dst).
+    /// Empty for the in-process backends, which have no wire.
+    pub wire_matrix: Vec<Vec<u64>>,
     /// Final per-node states, widened losslessly to f64.
     pub finals: Vec<Vec<f64>>,
 }
@@ -260,6 +266,33 @@ pub trait Executor {
             ));
         }
         self.run(w, seq, rounds)
+    }
+
+    /// [`Executor::run_ckpt`] with a live [`Telemetry`] handle: emit
+    /// `run_started`, one `round_completed` per round,
+    /// `checkpoint_written` on every snapshot and `run_finished` at the
+    /// end (plus worker/bundle events on the process backend). Emission
+    /// happens after the round's parallel section, and two same-seed
+    /// runs must emit identical streams modulo the measured fields
+    /// ([`crate::telemetry::MEASURED_FIELDS`]).
+    ///
+    /// The default runs plainly when telemetry is off and refuses
+    /// cleanly otherwise, so backends opt in explicitly.
+    fn run_tel<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+        tele: &Telemetry,
+    ) -> Result<ExecTrace, String> {
+        if tele.is_on() {
+            return Err(format!(
+                "the {} backend does not support telemetry",
+                self.backend()
+            ));
+        }
+        self.run_ckpt(w, seq, rounds, ckpt)
     }
 }
 
@@ -453,24 +486,41 @@ impl ExecutorKind {
         rounds: usize,
         ckpt: &CkptConfig,
     ) -> Result<ExecTrace, String> {
+        self.run_tel(w, seq, rounds, ckpt, &Telemetry::off())
+    }
+
+    /// Dispatch with checkpointing *and* a telemetry handle (the CLI's
+    /// `--telemetry`/`--telemetry-http` path; see
+    /// [`crate::telemetry`]). All four backends emit the shared event
+    /// set; [`Telemetry::off`] makes this identical to
+    /// [`ExecutorKind::run_ckpt`].
+    pub fn run_tel<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+        tele: &Telemetry,
+    ) -> Result<ExecTrace, String> {
         match self {
             ExecutorKind::Analytic { cost, threads } => {
                 AnalyticExecutor { cost: *cost, threads: *threads }
-                    .run_ckpt(w, seq, rounds, ckpt)
+                    .run_tel(w, seq, rounds, ckpt, tele)
             }
             ExecutorKind::Simnet(sim) => {
                 SimnetExecutor::new(sim.clone())
-                    .run_ckpt(w, seq, rounds, ckpt)
+                    .run_tel(w, seq, rounds, ckpt, tele)
             }
             ExecutorKind::Threaded { cost, threads } => {
                 ThreadedExecutor::new(*cost, *threads)
-                    .run_ckpt(w, seq, rounds, ckpt)
+                    .run_tel(w, seq, rounds, ckpt, tele)
             }
             ExecutorKind::Process { cost, shards, balanced, worker_bin } => {
                 let mut ex = ProcessExecutor::new(*cost, *shards)
                     .with_balanced(*balanced);
                 ex.worker_bin = worker_bin.clone();
                 ex.ckpt = ckpt.clone();
+                ex.tele = tele.clone();
                 ex.run(w, seq, rounds)
             }
         }
@@ -492,6 +542,7 @@ mod tests {
             drops: 0,
             trace: Trace::new(false),
             wall_seconds: 0.0,
+            wire_matrix: Vec::new(),
             finals: Vec::new(),
         }
     }

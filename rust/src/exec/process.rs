@@ -101,6 +101,7 @@ use crate::repro::common::{
     classification_workload, partitioned_node_data, Engine,
 };
 use crate::simnet::event::Trace;
+use crate::telemetry::{Event, Telemetry};
 use crate::topology::GraphSequence;
 
 // Frame kinds of the coordinator ↔ worker protocol.
@@ -377,6 +378,13 @@ pub struct ProcessExecutor {
     /// How many crash-recovery respawns one run may use before the
     /// failure propagates as an error.
     pub max_respawns: usize,
+    /// Live-run telemetry. The coordinator is the only emitter (workers
+    /// stay mute): besides the shared run/round/checkpoint events it
+    /// reports worker lifecycle (spawn pid, death, respawn), one
+    /// `shard_bundle` per routed cross-shard bundle (measured bytes of
+    /// both hops + frame round-trip latency) and per-shard heartbeat
+    /// ages — all from data it already holds while routing.
+    pub tele: Telemetry,
 }
 
 impl ProcessExecutor {
@@ -392,6 +400,7 @@ impl ProcessExecutor {
             fault_crash_mid: None,
             ckpt: CkptConfig::default(),
             max_respawns: 2,
+            tele: Telemetry::off(),
         }
     }
 
@@ -528,6 +537,7 @@ impl ProcessExecutor {
         ckpt_every: usize,
         t0: Instant,
         wire_bytes: &mut u64,
+        pair_bytes: &mut [u64],
         ledger: &mut CommLedger,
         records: &mut Vec<RoundRecord>,
         last_snap: &mut Option<Snapshot>,
@@ -553,6 +563,11 @@ impl ProcessExecutor {
                 .map_err(|e| {
                     format!("spawn worker {s} ({}): {e}", bin.display())
                 })?;
+            self.tele.emit_with(|| Event::WorkerSpawned {
+                shard: s,
+                nodes: splan.owner.iter().filter(|&&o| o == s).count(),
+                pid: child.id() as u64,
+            });
             procs.children.push(child);
         }
         let mut conns = self.accept_workers(
@@ -614,6 +629,13 @@ impl ProcessExecutor {
         let mut obs = ObsBufs::new(n);
         let mut fwd_bufs: Vec<Vec<u8>> = Vec::new();
         let mut fwd_dst: Vec<usize> = Vec::new();
+        // Per-bundle source shard and inbound-hop bytes, parallel to
+        // `fwd_dst` — feeds the (src,dst) wire matrix and telemetry.
+        let mut fwd_src: Vec<usize> = Vec::new();
+        let mut fwd_in: Vec<u64> = Vec::new();
+        // When the coordinator last heard a frame from each shard
+        // (telemetry heartbeat ages; measured, never a model column).
+        let mut last_heard: Vec<Instant> = vec![Instant::now(); k];
 
         // 3. Pre-round-0 snapshot (consensus records its initial error).
         //    A resumed run's round-0 record is part of the restored
@@ -634,11 +656,14 @@ impl ProcessExecutor {
 
         // 4. Lock-step rounds: collect bundles → forward → observe.
         for r in start_round..rounds {
+            let round_t0 = Instant::now();
             let pidx = r % seq.len();
             let plan = seq.phase(r);
             let xs = &cross[pidx];
 
             fwd_dst.clear();
+            fwd_src.clear();
+            fwd_in.clear();
             for s in 0..k {
                 let expected = (0..k)
                     .filter(|&t| t != s && !xs[s][t].is_empty())
@@ -648,6 +673,7 @@ impl ProcessExecutor {
                         fwd_bufs.push(Vec::new());
                     }
                     let buf = &mut fwd_bufs[fwd_dst.len()];
+                    let before = *wire_bytes;
                     let kind = recv_into(&mut conns[s], buf, wire_bytes)
                         .map_err(|e| format!("round {r}: shard {s}: {e}"))?;
                     if kind != FRAME_BUNDLE {
@@ -666,20 +692,59 @@ impl ProcessExecutor {
                              sync (round {fr}, {fsrc} → {fdst})"
                         ));
                     }
+                    let in_bytes = *wire_bytes - before;
+                    pair_bytes[s * k + fdst] += in_bytes;
+                    last_heard[s] = Instant::now();
                     fwd_dst.push(fdst);
+                    fwd_src.push(s);
+                    fwd_in.push(in_bytes);
                 }
             }
-            for (payload, &dst) in fwd_bufs.iter().zip(&fwd_dst) {
+            for (i, (payload, &dst)) in
+                fwd_bufs.iter().zip(&fwd_dst).enumerate()
+            {
+                let before = *wire_bytes;
                 send(&mut conns[dst], FRAME_BUNDLE, payload, wire_bytes)
                     .map_err(|e| {
                         format!("round {r}: forward to shard {dst}: {e}")
                     })?;
+                let out_bytes = *wire_bytes - before;
+                let src = fwd_src[i];
+                pair_bytes[src * k + dst] += out_bytes;
+                self.tele.emit_with(|| Event::ShardBundle {
+                    round: r,
+                    src,
+                    dst,
+                    bytes: fwd_in[i] + out_bytes,
+                    rtt_seconds: round_t0.elapsed().as_secs_f64(),
+                });
             }
 
             let eval = w.is_eval(r, rounds);
             let due = ckpt_every > 0 && (r + 1) % ckpt_every == 0;
+            // Heartbeat ages are sampled just before the blocking OBS
+            // collect — the point in the round where a silent worker
+            // would stall the coordinator. Gated so the off path never
+            // touches the clock vector.
+            let ages: Vec<f64> = if self.tele.is_on() {
+                let now = Instant::now();
+                last_heard
+                    .iter()
+                    .map(|t| now.duration_since(*t).as_secs_f64())
+                    .collect()
+            } else {
+                Vec::new()
+            };
             obs.collect(&mut conns, r as u32, &splan.owner, due, wire_bytes)
                 .map_err(|e| format!("round {r}: {e}"))?;
+            for (s, last) in last_heard.iter_mut().enumerate() {
+                *last = Instant::now();
+                self.tele.emit_with(|| Event::WorkerHeartbeat {
+                    round: r,
+                    shard: s,
+                    heartbeat_age_seconds: ages[s],
+                });
+            }
 
             // α–β accounting — identical to the analytic backend, so the
             // simulated-seconds column stays comparable across backends;
@@ -697,6 +762,8 @@ impl ProcessExecutor {
             rec.sim_seconds = ledger.sim_seconds;
             rec.wall_seconds = t0.elapsed().as_secs_f64();
             records.push(rec);
+            let committed = records.last().expect("pushed above");
+            self.tele.emit_with(|| Event::round(committed));
 
             // 5. Round-boundary snapshot, when due: assembled from the
             //    OBS frames' state sections, persisted through the
@@ -713,7 +780,11 @@ impl ProcessExecutor {
                     rng: None,
                 };
                 if let Some(pol) = self.ckpt.policy.as_ref() {
-                    pol.save(&snap)?;
+                    let path = pol.save(&snap)?;
+                    self.tele.emit_with(|| Event::CheckpointWritten {
+                        round: r + 1,
+                        path: path.display().to_string(),
+                    });
                 }
                 *last_snap = Some(snap);
             }
@@ -926,6 +997,18 @@ impl Executor for ProcessExecutor {
             .as_ref()
             .map(|p| p.every_n_rounds)
             .unwrap_or(0);
+        // Measured wire bytes per (src, dst) shard pair, flat k×k. Counts
+        // both hops of every routed bundle and survives respawns (like
+        // `wire_bytes`: real traffic, including the attempts that died).
+        let mut pair_bytes = vec![0u64; k * k];
+        self.tele.emit_with(|| Event::RunStarted {
+            label: w.label(),
+            backend: "process",
+            topology: seq.name.clone(),
+            n,
+            rounds,
+            start_round: last_snap.as_ref().map(|s| s.round).unwrap_or(0),
+        });
 
         // Crash recovery: every attempt runs on fresh worker processes;
         // a failed attempt that left a round-boundary snapshot is
@@ -948,12 +1031,21 @@ impl Executor for ProcessExecutor {
                 ckpt_every,
                 t0,
                 &mut wire_bytes,
+                &mut pair_bytes,
                 &mut ledger,
                 &mut records,
                 &mut last_snap,
             ) {
                 Ok(finals) => {
                     ledger.bytes_on_wire = wire_bytes;
+                    self.tele.emit_with(|| Event::RunFinished {
+                        rounds,
+                        wall_seconds: t0.elapsed().as_secs_f64(),
+                        messages: ledger.messages,
+                        bytes: ledger.bytes,
+                        wire_bytes,
+                        drops: self.tele.dropped(),
+                    });
                     return Ok(ExecTrace {
                         backend: "process",
                         topology: seq.name.clone(),
@@ -971,6 +1063,9 @@ impl Executor for ProcessExecutor {
                         drops: 0,
                         trace: Trace::new(false),
                         wall_seconds: t0.elapsed().as_secs_f64(),
+                        wire_matrix: (0..k)
+                            .map(|s| pair_bytes[s * k..(s + 1) * k].to_vec())
+                            .collect(),
                         finals,
                     });
                 }
@@ -979,7 +1074,16 @@ impl Executor for ProcessExecutor {
                         (Some(s), left) if left > 0 => s,
                         _ => return Err(e),
                     };
+                    let resume_round = snap.round;
+                    self.tele.emit_with(|| Event::WorkerDied {
+                        error: e.clone(),
+                        respawns_left,
+                    });
                     respawns_left -= 1;
+                    self.tele.emit_with(|| Event::WorkerRespawned {
+                        start_round: resume_round,
+                        attempt: self.max_respawns - respawns_left,
+                    });
                     faults = (None, None);
                     ledger = snap.ledger.clone();
                     records = snap.records.clone();
@@ -997,6 +1101,20 @@ impl Executor for ProcessExecutor {
     ) -> Result<ExecTrace, String> {
         let mut ex = self.clone();
         ex.ckpt = ckpt.clone();
+        Executor::run(&ex, w, seq, rounds)
+    }
+
+    fn run_tel<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+        tele: &Telemetry,
+    ) -> Result<ExecTrace, String> {
+        let mut ex = self.clone();
+        ex.ckpt = ckpt.clone();
+        ex.tele = tele.clone();
         Executor::run(&ex, w, seq, rounds)
     }
 }

@@ -30,6 +30,7 @@ use crate::comm::CommLedger;
 use crate::metrics::RunResult;
 use crate::simnet::event::{EventKind, EventQueue, Trace};
 use crate::simnet::{ExecMode, SimConfig};
+use crate::telemetry::{Event, Telemetry};
 use crate::topology::{GossipPlan, GraphSequence};
 
 /// Per-phase reverse adjacency: `out[src]` lists every `dst` whose
@@ -78,6 +79,17 @@ impl Executor for SimnetExecutor {
         seq: &GraphSequence,
         rounds: usize,
         ckpt: &CkptConfig,
+    ) -> Result<ExecTrace, String> {
+        self.run_tel(w, seq, rounds, ckpt, &Telemetry::off())
+    }
+
+    fn run_tel<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+        tele: &Telemetry,
     ) -> Result<ExecTrace, String> {
         // Snapshots capture round boundaries; the async discipline has
         // none (nodes free-run), so checkpointing is BSP-only.
@@ -132,6 +144,14 @@ impl Executor for SimnetExecutor {
                 }
             }
         }
+        tele.emit_with(|| Event::RunStarted {
+            label: w.label(),
+            backend: "simnet",
+            topology: seq.name.clone(),
+            n,
+            rounds,
+            start_round,
+        });
 
         if rounds > 0 {
             let out_adj: Vec<Vec<Vec<usize>>> =
@@ -267,6 +287,9 @@ impl Executor for SimnetExecutor {
                         rec.sim_seconds = ledger.sim_seconds;
                         rec.wall_seconds = t0.elapsed().as_secs_f64();
                         records.push(rec);
+                        let committed =
+                            records.last().expect("pushed above");
+                        tele.emit_with(|| Event::round(committed));
                         // Round-boundary snapshot, when due. The event
                         // queue is empty here (the barrier drained it),
                         // so the virtual clock + net RNG cursor are the
@@ -288,7 +311,11 @@ impl Executor for SimnetExecutor {
                                 clock,
                                 rng: Some((s, spare)),
                             };
-                            pol.save(&snap)?;
+                            let path = pol.save(&snap)?;
+                            tele.emit_with(|| Event::CheckpointWritten {
+                                round: r + 1,
+                                path: path.display().to_string(),
+                            });
                         }
                     }
                 }
@@ -401,6 +428,12 @@ impl Executor for SimnetExecutor {
                                     rec.wall_seconds =
                                         t0.elapsed().as_secs_f64();
                                     records.push(rec);
+                                    let committed = records
+                                        .last()
+                                        .expect("pushed above");
+                                    tele.emit_with(|| {
+                                        Event::round(committed)
+                                    });
                                 }
                                 if round + 1 < rounds {
                                     q.push(
@@ -424,6 +457,14 @@ impl Executor for SimnetExecutor {
             }
         }
 
+        tele.emit_with(|| Event::RunFinished {
+            rounds,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            messages: ledger.messages,
+            bytes: ledger.bytes,
+            wire_bytes: ledger.bytes_on_wire,
+            drops: tele.dropped(),
+        });
         let finals = w.finals(&nodes);
         Ok(ExecTrace {
             backend: "simnet",
@@ -443,6 +484,7 @@ impl Executor for SimnetExecutor {
             drops,
             trace,
             wall_seconds: t0.elapsed().as_secs_f64(),
+            wire_matrix: Vec::new(),
             finals,
         })
     }

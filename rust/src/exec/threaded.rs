@@ -26,6 +26,7 @@ use super::analytic::run_lockstep;
 use super::{ExecTrace, Executor, Workload};
 use crate::ckpt::CkptConfig;
 use crate::comm::CostModel;
+use crate::telemetry::Telemetry;
 use crate::topology::GraphSequence;
 use crate::util::threadpool::ThreadPool;
 
@@ -77,6 +78,17 @@ impl Executor for ThreadedExecutor {
         rounds: usize,
         ckpt: &CkptConfig,
     ) -> Result<ExecTrace, String> {
+        self.run_tel(w, seq, rounds, ckpt, &Telemetry::off())
+    }
+
+    fn run_tel<W: Workload>(
+        &self,
+        w: &mut W,
+        seq: &GraphSequence,
+        rounds: usize,
+        ckpt: &CkptConfig,
+        tele: &Telemetry,
+    ) -> Result<ExecTrace, String> {
         let pool = ThreadPool::new(self.pool_size(seq.n));
         // Always parallel — physically running the nodes is the point.
         run_lockstep(
@@ -88,6 +100,7 @@ impl Executor for ThreadedExecutor {
             true,
             "threaded",
             ckpt,
+            tele,
         )
     }
 }

@@ -45,6 +45,7 @@ pub mod optim;
 pub mod repro;
 pub mod runtime;
 pub mod simnet;
+pub mod telemetry;
 pub mod train;
 pub mod topology;
 pub mod util;

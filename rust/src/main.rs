@@ -23,9 +23,10 @@ use basegraph::exec::{
 use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
-    classification_workload, print_table, run_training_exec_ckpt, Engine,
+    classification_workload, print_table, run_training_exec_tel, Engine,
 };
 use basegraph::simnet::{ExecMode, LinkModel, Scenario};
+use basegraph::telemetry::TelemetryConfig;
 use basegraph::topology::{self, TopologyKind};
 use basegraph::train::TrainConfig;
 use basegraph::util::cli::Args;
@@ -49,6 +50,7 @@ USAGE:
                       [--net-alpha SEC] [--net-beta SEC_PER_BYTE]
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
+                      [--telemetry FILE|-] [--telemetry-http ADDR]
                       [--out results]
   basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
                       [--mode bsp|async] [--workload consensus|train]
@@ -60,6 +62,7 @@ USAGE:
                       [--straggler-factor F]
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
+                      [--telemetry FILE|-] [--telemetry-http ADDR]
                       consensus: [--iters I] [--tol T]
                       train:     [--rounds R] [--lr LR] [--optimizer O]
                                  [--momentum M] [--engine E] [--dirichlet A]
@@ -72,8 +75,10 @@ USAGE:
                       [--shard-balance contiguous|degree]
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
+                      [--telemetry FILE|-] [--telemetry-http ADDR]
   basegraph bench     [--ns 64,256] [--ds 1000,100000] [--rounds R]
                       [--shards-list 2,4] [--fast] [--seed S]
+                      [--telemetry FILE|-] [--telemetry-http ADDR]
                       [--out BENCH_rounds.json]
   basegraph info      [--artifacts DIR]
 
@@ -98,6 +103,15 @@ Checkpointing: --checkpoint-every N snapshots every N rounds into
   subdirectory automatically; resumed runs replay bit-identically on all
   model columns (see docs/ARCHITECTURE.md, \"Checkpoint format &
   recovery\").
+Telemetry: --telemetry FILE streams one NDJSON event per line (`-` =
+  stdout; versioned schema, byte-identical across same-seed runs modulo
+  wall-clock fields); --telemetry-http ADDR serves GET /status (JSON
+  snapshot: round, rolling rounds/sec, worker liveness, last checkpoint)
+  and GET /events?since=SEQ from a dedicated thread — a slow scraper
+  drops events past a bounded buffer, it never stalls the round loop.
+  Multi-run sweeps scope each run to its own stream file, exactly like
+  checkpoint subdirectories (see docs/ARCHITECTURE.md, \"Telemetry &
+  live observability\").
 Docs: docs/ARCHITECTURE.md is the full tour (layers, backends, wire
   protocol, determinism rules) with a complete CLI flag reference.
 Help: `basegraph --help` (or any subcommand with --help) prints this.";
@@ -343,6 +357,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     // simnet, real threads, or one worker process per node shard.
     let exec = ExecutorKind::from_args(args, "analytic")?.with_cost(cost);
     let ckpt = CkptConfig::from_args(args)?;
+    let tsession = TelemetryConfig::from_args(args).session()?;
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let workload = classification_workload(&engine, seed)?;
@@ -355,9 +370,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         optimizer.label(),
         exec.label()
     );
-    let res = run_training_exec_ckpt(
+    let res = run_training_exec_tel(
         &workload, kind, n, alpha, optimizer, rounds, lr, seed, &exec,
-        &ckpt,
+        &ckpt, &tsession.run("")?,
     )?;
     let path = format!(
         "{out_dir}/train_{}_n{n}.csv",
@@ -399,7 +414,37 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         res.ledger.sim_seconds,
         res.ledger.messages
     );
+    print_wire_matrix(&res);
     Ok(())
+}
+
+/// Process-backend wire summary: measured bytes routed through the
+/// coordinator per (src, dst) shard pair (both hops of every bundle).
+/// Empty on the in-process backends, so this prints nothing there.
+fn print_wire_matrix(res: &ExecTrace) {
+    if res.wire_matrix.is_empty() {
+        return;
+    }
+    let k = res.wire_matrix.len();
+    let header: Vec<String> = std::iter::once("src \\ dst (MB)".to_string())
+        .chain((0..k).map(|d| format!("→{d}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Vec<String>> = res
+        .wire_matrix
+        .iter()
+        .enumerate()
+        .map(|(s, row)| {
+            std::iter::once(format!("shard {s}"))
+                .chain(row.iter().map(|&b| format!("{:.2}", b as f64 / 1e6)))
+                .collect()
+        })
+        .collect();
+    print_table(
+        "coordinator wire matrix (measured MB per shard pair)",
+        &header_refs,
+        &rows,
+    );
 }
 
 /// `basegraph simnet`: race topologies on the simulated network — scenario
@@ -502,6 +547,10 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
     // scopes each run to its own subdirectory (see CkptConfig::scoped),
     // so a sweep's snapshots never rotate each other away.
     let ckpt = CkptConfig::from_args(args)?;
+    // Telemetry mirrors the checkpoint scoping: one session (seq counter
+    // + HTTP listener) per invocation, one scoped NDJSON stream per
+    // raced topology.
+    let tsession = TelemetryConfig::from_args(args).session()?;
 
     match args.str_or("workload", "consensus").as_str() {
         "consensus" => {
@@ -512,12 +561,13 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
                 let seq = kind.build(n, seed)?;
-                let tr = consensus::consensus_experiment_ckpt(
+                let tr = consensus::consensus_experiment_tel(
                     &seq,
                     iters,
                     seed,
                     &exec,
                     &ckpt.scoped(t),
+                    &tsession.run(t)?,
                 )?;
                 rows.push(vec![
                     kind.label(),
@@ -598,9 +648,9 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             let mut csv = Vec::new();
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
-                let res = run_training_exec_ckpt(
+                let res = run_training_exec_tel(
                     &workload, kind, n, dirichlet, optimizer, rounds, lr,
-                    seed, &exec, &ckpt.scoped(t),
+                    seed, &exec, &ckpt.scoped(t), &tsession.run(t)?,
                 )?;
                 let tta = res.run.time_to_accuracy(target);
                 rows.push(vec![
@@ -701,6 +751,10 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if rounds == 0 {
         return Err("--rounds must be >= 1".into());
     }
+    // One telemetry session for the whole grid; each cell gets its own
+    // scoped NDJSON stream (the alloc passes stay untelemetered so the
+    // engine-rate comparison is not perturbed on one side only).
+    let tsession = TelemetryConfig::from_args(args).session()?;
 
     let mut cells = Vec::new();
     let mut rows = Vec::new();
@@ -711,6 +765,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                     let kind = TopologyKind::Base { m: 4 };
                     let seq = kind.build(n, seed)?;
                     let exec = ExecutorKind::parse(backend)?;
+                    let tele = tsession
+                        .run(&format!("{workload}_n{n}_d{d}_{backend}"))?;
                     let run = |alloc: bool| -> Result<ExecTrace, String> {
                         if workload == "consensus" {
                             let mut rng = Rng::new(seed);
@@ -724,7 +780,13 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                                 exec.run(&mut w, &seq, rounds)
                             } else {
                                 let mut w = ConsensusWorkload::new(init);
-                                exec.run(&mut w, &seq, rounds)
+                                exec.run_tel(
+                                    &mut w,
+                                    &seq,
+                                    rounds,
+                                    &CkptConfig::default(),
+                                    &tele,
+                                )
                             }
                         } else {
                             let cfg = TrainConfig {
@@ -752,7 +814,13 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                                 let mut w = TrainingWorkload::new(
                                     &model, &cfg, data, &[],
                                 );
-                                exec.run(&mut w, &seq, rounds)
+                                exec.run_tel(
+                                    &mut w,
+                                    &seq,
+                                    rounds,
+                                    &CkptConfig::default(),
+                                    &tele,
+                                )
                             }
                         }
                     };
@@ -840,12 +908,20 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 let kind = TopologyKind::Base { m: 4 };
                 let seq = kind.build(n, seed)?;
                 let exec = ExecutorKind::process(shards);
+                let tele = tsession
+                    .run(&format!("{workload}_n{n}_process{shards}"))?;
                 let run = || -> Result<ExecTrace, String> {
                     if workload == "consensus" {
                         let mut rng = Rng::new(seed);
                         let init = consensus::gaussian_init(n, d, &mut rng);
                         let mut w = ConsensusWorkload::new(init);
-                        exec.run(&mut w, &seq, rounds)
+                        exec.run_tel(
+                            &mut w,
+                            &seq,
+                            rounds,
+                            &CkptConfig::default(),
+                            &tele,
+                        )
                     } else {
                         let cfg = TrainConfig {
                             rounds,
@@ -869,7 +945,13 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                                         seed,
                                     },
                                 );
-                        exec.run(&mut w, &seq, rounds)
+                        exec.run_tel(
+                            &mut w,
+                            &seq,
+                            rounds,
+                            &CkptConfig::default(),
+                            &tele,
+                        )
                     }
                 };
                 // Per-record wall clocks bracket the round loop, which
@@ -927,6 +1009,110 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                     ("wire_bytes_per_round", Json::num(wire_bpr)),
                 ]));
             }
+        }
+    }
+
+    // Simnet cells: the same workloads driven through the event-driven
+    // network simulator under the `lan` scenario — this times the BSP
+    // event loop (queue churn, per-link latency draws) rather than the
+    // bare lock-step engine, which none of the other cells cover. The
+    // alloc/scratch duality does not apply (the simulator always runs
+    // the scratch engine), so those columns are null — the trend gate
+    // compares the scratch rate only — and the α–β column is joined by
+    // the scenario's virtual clock (`sim_seconds`).
+    for &n in &ns {
+        for workload in ["consensus", "train"] {
+            let kind = TopologyKind::Base { m: 4 };
+            let seq = kind.build(n, seed)?;
+            let exec = ExecutorKind::parse("simnet")?
+                .with_sim(Scenario::Lan.config(seed));
+            let tele =
+                tsession.run(&format!("{workload}_n{n}_simnet_lan"))?;
+            let run = || -> Result<ExecTrace, String> {
+                if workload == "consensus" {
+                    let mut rng = Rng::new(seed);
+                    let init = consensus::gaussian_init(n, d, &mut rng);
+                    let mut w = ConsensusWorkload::new(init);
+                    exec.run_tel(
+                        &mut w,
+                        &seq,
+                        rounds,
+                        &CkptConfig::default(),
+                        &tele,
+                    )
+                } else {
+                    let cfg = TrainConfig {
+                        rounds,
+                        lr: 0.05,
+                        warmup: 0,
+                        cosine: false,
+                        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+                        eval_every: 0,
+                        threads: 0,
+                        cost: CostModel::default(),
+                    };
+                    let (model, data) = quadratic_fixed_targets(n, d, seed);
+                    let mut w =
+                        TrainingWorkload::new(&model, &cfg, data, &[]);
+                    exec.run_tel(
+                        &mut w,
+                        &seq,
+                        rounds,
+                        &CkptConfig::default(),
+                        &tele,
+                    )
+                }
+            };
+            let loop_rate = |tr: &ExecTrace| -> f64 {
+                let rec = &tr.run.records;
+                match (rec.first(), rec.last()) {
+                    (Some(a), Some(b))
+                        if b.round > a.round
+                            && b.wall_seconds > a.wall_seconds =>
+                    {
+                        (b.round - a.round) as f64
+                            / (b.wall_seconds - a.wall_seconds)
+                    }
+                    _ => rounds as f64 / tr.wall_seconds.max(1e-12),
+                }
+            };
+            let mut rps = 0.0f64;
+            let mut wall = f64::INFINITY;
+            let mut bpr = 0.0f64;
+            let mut sim_s = 0.0f64;
+            for _ in 0..2 {
+                let tr = run()?;
+                rps = rps.max(loop_rate(&tr));
+                wall = wall.min(tr.wall_seconds);
+                bpr = tr.ledger.bytes as f64 / rounds as f64;
+                sim_s = tr.ledger.sim_seconds;
+            }
+            rows.push(vec![
+                workload.to_string(),
+                n.to_string(),
+                d.to_string(),
+                "simnet (lan)".to_string(),
+                "-".to_string(),
+                format!("{rps:.1}"),
+                "-".to_string(),
+                format!("{:.2}", bpr / 1e6),
+            ]);
+            cells.push(Json::obj(vec![
+                ("workload", Json::str(workload)),
+                ("topology", Json::str("base-4")),
+                ("n", Json::num(n as f64)),
+                ("d", Json::num(d as f64)),
+                ("backend", Json::str("simnet")),
+                ("scenario", Json::str("lan")),
+                ("rounds", Json::num(rounds as f64)),
+                ("wall_seconds_alloc", Json::Null),
+                ("wall_seconds_scratch", Json::num(wall)),
+                ("rounds_per_sec_alloc", Json::Null),
+                ("rounds_per_sec_scratch", Json::num(rps)),
+                ("speedup", Json::Null),
+                ("bytes_per_round", Json::num(bpr)),
+                ("sim_seconds", Json::num(sim_s)),
+            ]));
         }
     }
 

@@ -303,6 +303,39 @@ pub fn run_training_exec_ckpt(
     exec: &ExecutorKind,
     ckpt: &crate::ckpt::CkptConfig,
 ) -> Result<ExecTrace, String> {
+    run_training_exec_tel(
+        workload,
+        kind,
+        n,
+        alpha,
+        optimizer,
+        rounds,
+        lr,
+        seed,
+        exec,
+        ckpt,
+        &crate::telemetry::Telemetry::off(),
+    )
+}
+
+/// [`run_training_exec_ckpt`] with a live telemetry handle: the run
+/// streams round/checkpoint/worker events onto `tele`. Pass
+/// [`Telemetry::off`](crate::telemetry::Telemetry::off) to opt out — the
+/// off path adds nothing to the round loop.
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_exec_tel(
+    workload: &TrainWorkload,
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+    tele: &crate::telemetry::Telemetry,
+) -> Result<ExecTrace, String> {
     let node_data = partitioned_node_data(workload, n, alpha, seed);
     let seq = kind.build(n, seed)?;
     let cfg = repro_train_config(optimizer, rounds, lr, &CostModel::default());
@@ -320,7 +353,7 @@ pub fn run_training_exec_ckpt(
         alpha,
         seed,
     });
-    exec.run_ckpt(&mut w, &seq, cfg.rounds, ckpt)
+    exec.run_tel(&mut w, &seq, cfg.rounds, ckpt, tele)
 }
 
 /// [`run_training_exec`] keeping only the per-round records — what the

@@ -39,6 +39,11 @@ pub fn run(args: &Args) -> Result<(), String> {
     // every finished round. Consensus-only figures ignore it (they are
     // seconds-long).
     let ckpt = crate::ckpt::CkptConfig::from_args(args)?;
+    // Live telemetry for the training sweeps: one session (HTTP listener
+    // + event-seq counter) per invocation, one scoped NDJSON stream per
+    // (figure, topology, lr, seed) cell — the same scoping rule as the
+    // checkpoint subdirectories. Consensus-only figures ignore it.
+    let tel = crate::telemetry::TelemetryConfig::from_args(args).session()?;
     // The paper repeats each training run over 3 seeds.
     let seeds: Vec<u64> = if fast {
         vec![seed]
@@ -89,19 +94,20 @@ pub fn run(args: &Args) -> Result<(), String> {
                 &out_dir,
             ),
             "fig7" => training_exps::fig7(
-                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt,
+                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
             ),
             "fig8" => training_exps::fig8(
                 &engine, &ns, rounds, &seeds, &out_dir, &exec, &ckpt,
+                &tel,
             ),
             "fig9" => training_exps::fig9(
-                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt,
+                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
             ),
             "fig22" => training_exps::fig22(
-                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt,
+                &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
             ),
             "fig25" => training_exps::fig25(
-                &engine, rounds, &seeds, &out_dir, &exec, &ckpt,
+                &engine, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
             ),
             "fig26" => training_exps::fig26(
                 &engine_deep,
@@ -111,6 +117,7 @@ pub fn run(args: &Args) -> Result<(), String> {
                 &out_dir,
                 &exec,
                 &ckpt,
+                &tel,
             ),
             other => return Err(format!("unknown experiment {other:?}")),
         }

@@ -7,12 +7,13 @@
 use crate::ckpt::CkptConfig;
 use crate::exec::ExecutorKind;
 use crate::optim::OptimizerKind;
+use crate::telemetry::{Telemetry, TelemetrySession};
 use crate::topology::TopologyKind;
 use crate::util::write_csv;
 
 use super::common::{
-    classification_workload, out_path, print_table,
-    run_training_exec_ckpt, standard_roster, Engine,
+    classification_workload, out_path, print_table, run_training_exec_tel,
+    standard_roster, Engine,
 };
 
 /// The paper tunes the step size by grid search per topology (Sec. H);
@@ -37,6 +38,7 @@ fn roster_run(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     let mut rows = Vec::new();
     for &kind in kinds {
@@ -59,14 +61,21 @@ fn roster_run(
                 };
                 // Scope each (topology, lr, seed) run to its own
                 // checkpoint subdirectory so sweep runs never rotate
-                // each other's snapshots.
-                let scope = ckpt.scoped(&format!(
-                    "{tag}_{}_lr{lr_eff}_s{seed}",
-                    kind.to_cli_name()
-                ));
-                match run_training_exec_ckpt(
+                // each other's snapshots; the telemetry stream scopes
+                // by the same label.
+                let cell =
+                    format!("{tag}_{}_lr{lr_eff}_s{seed}", kind.to_cli_name());
+                let scope = ckpt.scoped(&cell);
+                let tele = match tel.run(&cell) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        println!("telemetry disabled for {cell}: {e}");
+                        Telemetry::off()
+                    }
+                };
+                match run_training_exec_tel(
                     &workload, kind, n, alpha, optimizer, rounds, lr_eff,
-                    seed, exec, &scope,
+                    seed, exec, &scope, &tele,
                 )
                 .map(|t| t.run)
                 {
@@ -163,6 +172,7 @@ pub fn fig7(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     for &alpha in &[10.0, 0.1] {
         roster_run(
@@ -179,6 +189,7 @@ pub fn fig7(
             out_dir,
             exec,
             ckpt,
+            tel,
         );
     }
 }
@@ -193,6 +204,7 @@ pub fn fig8(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     for &n in ns {
         let mut kinds = vec![TopologyKind::Exp, TopologyKind::OnePeerExp];
@@ -213,6 +225,7 @@ pub fn fig8(
             out_dir,
             exec,
             ckpt,
+            tel,
         );
     }
 }
@@ -226,6 +239,7 @@ pub fn fig9(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -252,6 +266,7 @@ pub fn fig9(
             out_dir,
             exec,
             ckpt,
+            tel,
         );
     }
 }
@@ -265,6 +280,7 @@ pub fn fig22(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     let mut kinds = vec![
         TopologyKind::Base { m: 2 },
@@ -291,6 +307,7 @@ pub fn fig22(
             out_dir,
             exec,
             ckpt,
+            tel,
         );
     }
 }
@@ -303,6 +320,7 @@ pub fn fig25(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -326,6 +344,7 @@ pub fn fig25(
         out_dir,
         exec,
         ckpt,
+        tel,
     );
 }
 
@@ -339,6 +358,7 @@ pub fn fig26(
     out_dir: &str,
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
+    tel: &TelemetrySession,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -361,6 +381,7 @@ pub fn fig26(
         out_dir,
         exec,
         ckpt,
+        tel,
     );
 }
 
@@ -388,6 +409,9 @@ mod tests {
             d,
             &ExecutorKind::analytic(),
             &CkptConfig::default(),
+            &crate::telemetry::TelemetryConfig::default()
+                .session()
+                .unwrap(),
         );
         assert!(std::path::Path::new(&format!("{d}/fig7_smoke.csv"))
             .exists());

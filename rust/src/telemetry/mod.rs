@@ -1,0 +1,1049 @@
+//! Live-run telemetry: a versioned event stream out of every executor.
+//!
+//! Every backend (analytic, threaded, simnet, process) emits the same
+//! structured [`Event`]s — run lifecycle, one record per completed
+//! round, checkpoint writes, and (process backend only) worker
+//! lifecycle plus per-(src,dst)-shard bundle traffic. Two sinks ship
+//! behind CLI flags:
+//!
+//! * `--telemetry <path|->` — NDJSON: one JSON object per line,
+//!   append-friendly, written **synchronously and losslessly** as each
+//!   round completes (a line is flushed before the next round starts,
+//!   so `tail -f` sees live progress and a crash loses at most the
+//!   line being written).
+//! * `--telemetry-http <addr>` — a tiny dependency-free HTTP endpoint:
+//!   `GET /status` returns a JSON snapshot (current round, rolling
+//!   rounds/sec, per-worker liveness, last checkpoint), and
+//!   `GET /events?since=<seq>` tails the recent event ring. The server
+//!   runs on its own thread and is fed through a **bounded** channel:
+//!   when the feed is full the event is counted in
+//!   [`Telemetry::dropped`] and the round loop moves on — a stalled
+//!   scraper can never apply backpressure to the run (the channel
+//!   holds [`FEED_CAPACITY`] events).
+//!
+//! # Schema and determinism contract
+//!
+//! Every line is a flat JSON object with `"v"` ([`SCHEMA_VERSION`]),
+//! `"seq"` (a session-wide monotonic counter — sweep cells share it, so
+//! `/events?since=` cursors stay valid across runs) and `"event"` (the
+//! variant name). Adding a field is backwards-compatible; removing or
+//! re-typing one bumps `SCHEMA_VERSION`. Keys are emitted sorted
+//! (`util::json` stores objects in a `BTreeMap`), so two same-seed runs
+//! produce **byte-identical** streams once the measured fields —
+//! [`MEASURED_FIELDS`]: wall clocks, frame latencies, heartbeat ages,
+//! PIDs — are masked; everything else is covered by the repo's
+//! determinism contract. Non-finite floats (a consensus-only run has no
+//! train loss) serialize as `null`, keeping every line valid JSON.
+//!
+//! # Hot-path contract
+//!
+//! With telemetry off, [`Telemetry::emit_with`] is a single `Option`
+//! check — no event is constructed, no allocation happens; the
+//! steady-state round loop stays allocation-free
+//! (`tests/alloc_regression.rs`). With it on, events are built and
+//! serialized *after* the round's parallel section, on the coordinator
+//! thread, outside any lock the workers contend on.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::RoundRecord;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Version stamped into every event line as `"v"`. Bump on any
+/// breaking schema change (removing or re-typing a field); adding
+/// fields is compatible and does not bump it.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Bounded capacity of the channel feeding the HTTP thread. When the
+/// feed is full, `emit_with` drops the event for the HTTP sink only
+/// (the NDJSON sink is lossless) and bumps the drop counter.
+pub const FEED_CAPACITY: usize = 1024;
+
+/// Event fields that measure what *physically* happened (clocks,
+/// latencies, OS identifiers) rather than what the deterministic model
+/// computed. The golden-file test masks exactly these before comparing
+/// same-seed streams; everything else must be byte-identical.
+pub const MEASURED_FIELDS: &[&str] =
+    &["wall_seconds", "rtt_seconds", "heartbeat_age_seconds", "pid"];
+
+/// One telemetry event. Serialized as a flat JSON object with the
+/// variant name under `"event"` (see the module docs for the schema
+/// rules).
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A run began (emitted after resume handling, so `start_round` is
+    /// the first round the loop will actually execute).
+    RunStarted {
+        label: String,
+        backend: &'static str,
+        topology: String,
+        n: usize,
+        rounds: usize,
+        start_round: usize,
+    },
+    /// One round finished; mirrors the run's `RoundRecord`.
+    RoundCompleted {
+        round: usize,
+        consensus_error: f64,
+        train_loss: f64,
+        sim_seconds: f64,
+        wall_seconds: f64,
+        cum_messages: u64,
+        cum_bytes: u64,
+        cum_wire_bytes: u64,
+    },
+    /// A snapshot file hit disk (after the atomic rename).
+    CheckpointWritten { round: usize, path: String },
+    /// Process backend: a worker process was launched for a shard.
+    WorkerSpawned { shard: usize, nodes: usize, pid: u64 },
+    /// Process backend: an attempt failed; `respawns_left` respawn
+    /// budget remains.
+    WorkerDied { error: String, respawns_left: usize },
+    /// Process backend: all shards were relaunched from the last
+    /// snapshot and the run resumes at `start_round`.
+    WorkerRespawned { start_round: usize, attempt: usize },
+    /// Process backend: one cross-shard bundle was routed
+    /// src-shard → coordinator → dst-shard. `bytes` is the measured
+    /// wire footprint of both hops; `rtt_seconds` is the latency from
+    /// the start of the round's exchange to this bundle being
+    /// forwarded.
+    ShardBundle {
+        round: usize,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        rtt_seconds: f64,
+    },
+    /// Process backend: shard `shard` reported its round-`round`
+    /// observation; `heartbeat_age_seconds` is the time since the
+    /// coordinator last heard from it.
+    WorkerHeartbeat {
+        round: usize,
+        shard: usize,
+        heartbeat_age_seconds: f64,
+    },
+    /// The run completed; totals from the final ledger. `drops` is the
+    /// HTTP feed's backpressure counter ([`Telemetry::dropped`]) — the
+    /// NDJSON stream is lossless, so a nonzero value means only that a
+    /// scraper fell behind, never that this file is missing events.
+    RunFinished {
+        rounds: usize,
+        wall_seconds: f64,
+        messages: u64,
+        bytes: u64,
+        wire_bytes: u64,
+        drops: u64,
+    },
+}
+
+/// `NaN`/`±inf` have no JSON spelling; they serialize as `null`.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn unum(x: u64) -> Json {
+    Json::num(x as f64)
+}
+
+impl Event {
+    /// The variant name stamped under `"event"`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStarted { .. } => "run_started",
+            Event::RoundCompleted { .. } => "round_completed",
+            Event::CheckpointWritten { .. } => "checkpoint_written",
+            Event::WorkerSpawned { .. } => "worker_spawned",
+            Event::WorkerDied { .. } => "worker_died",
+            Event::WorkerRespawned { .. } => "worker_respawned",
+            Event::ShardBundle { .. } => "shard_bundle",
+            Event::WorkerHeartbeat { .. } => "worker_heartbeat",
+            Event::RunFinished { .. } => "run_finished",
+        }
+    }
+
+    /// Build a `RoundCompleted` from the record the executor just
+    /// pushed.
+    pub fn round(rec: &RoundRecord) -> Event {
+        Event::RoundCompleted {
+            round: rec.round,
+            consensus_error: rec.consensus_error,
+            train_loss: rec.train_loss,
+            sim_seconds: rec.sim_seconds,
+            wall_seconds: rec.wall_seconds,
+            cum_messages: rec.cum_messages,
+            cum_bytes: rec.cum_bytes,
+            cum_wire_bytes: rec.cum_wire_bytes,
+        }
+    }
+
+    /// Serialize as one flat JSON object (keys sorted by the writer).
+    pub fn to_json(&self, seq: u64) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("v", unum(SCHEMA_VERSION)),
+            ("seq", unum(seq)),
+            ("event", Json::str(self.kind())),
+        ];
+        match self {
+            Event::RunStarted {
+                label,
+                backend,
+                topology,
+                n,
+                rounds,
+                start_round,
+            } => {
+                pairs.push(("label", Json::str(label)));
+                pairs.push(("backend", Json::str(backend)));
+                pairs.push(("topology", Json::str(topology)));
+                pairs.push(("n", unum(*n as u64)));
+                pairs.push(("rounds", unum(*rounds as u64)));
+                pairs.push(("start_round", unum(*start_round as u64)));
+            }
+            Event::RoundCompleted {
+                round,
+                consensus_error,
+                train_loss,
+                sim_seconds,
+                wall_seconds,
+                cum_messages,
+                cum_bytes,
+                cum_wire_bytes,
+            } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("consensus_error", num_or_null(*consensus_error)));
+                pairs.push(("train_loss", num_or_null(*train_loss)));
+                pairs.push(("sim_seconds", num_or_null(*sim_seconds)));
+                pairs.push(("wall_seconds", num_or_null(*wall_seconds)));
+                pairs.push(("cum_messages", unum(*cum_messages)));
+                pairs.push(("cum_bytes", unum(*cum_bytes)));
+                pairs.push(("cum_wire_bytes", unum(*cum_wire_bytes)));
+            }
+            Event::CheckpointWritten { round, path } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("path", Json::str(path)));
+            }
+            Event::WorkerSpawned { shard, nodes, pid } => {
+                pairs.push(("shard", unum(*shard as u64)));
+                pairs.push(("nodes", unum(*nodes as u64)));
+                pairs.push(("pid", unum(*pid)));
+            }
+            Event::WorkerDied { error, respawns_left } => {
+                pairs.push(("error", Json::str(error)));
+                pairs.push(("respawns_left", unum(*respawns_left as u64)));
+            }
+            Event::WorkerRespawned { start_round, attempt } => {
+                pairs.push(("start_round", unum(*start_round as u64)));
+                pairs.push(("attempt", unum(*attempt as u64)));
+            }
+            Event::ShardBundle { round, src, dst, bytes, rtt_seconds } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("src", unum(*src as u64)));
+                pairs.push(("dst", unum(*dst as u64)));
+                pairs.push(("bytes", unum(*bytes)));
+                pairs.push(("rtt_seconds", num_or_null(*rtt_seconds)));
+            }
+            Event::WorkerHeartbeat {
+                round,
+                shard,
+                heartbeat_age_seconds,
+            } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("shard", unum(*shard as u64)));
+                pairs.push((
+                    "heartbeat_age_seconds",
+                    num_or_null(*heartbeat_age_seconds),
+                ));
+            }
+            Event::RunFinished {
+                rounds,
+                wall_seconds,
+                messages,
+                bytes,
+                wire_bytes,
+                drops,
+            } => {
+                pairs.push(("rounds", unum(*rounds as u64)));
+                pairs.push(("wall_seconds", num_or_null(*wall_seconds)));
+                pairs.push(("messages", unum(*messages)));
+                pairs.push(("bytes", unum(*bytes)));
+                pairs.push(("wire_bytes", unum(*wire_bytes)));
+                pairs.push(("drops", unum(*drops)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration and session
+// ---------------------------------------------------------------------------
+
+/// The telemetry CLI surface shared by `train`, `simnet`, `repro` and
+/// `bench`: `--telemetry <path|->` (NDJSON stream; `-` = stdout) and
+/// `--telemetry-http <addr>` (status endpoint, e.g. `127.0.0.1:8600`).
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryConfig {
+    pub path: Option<String>,
+    pub http: Option<String>,
+}
+
+impl TelemetryConfig {
+    pub fn from_args(args: &Args) -> TelemetryConfig {
+        TelemetryConfig {
+            path: args.get("telemetry").map(|s| s.to_string()),
+            http: args.get("telemetry-http").map(|s| s.to_string()),
+        }
+    }
+
+    /// Does this config ask for any sink at all?
+    pub fn is_active(&self) -> bool {
+        self.path.is_some() || self.http.is_some()
+    }
+
+    /// Open the session: binds the HTTP listener **once** per CLI
+    /// invocation (a malformed or unavailable address fails here, not
+    /// mid-run), then hands out per-run [`Telemetry`] handles via
+    /// [`TelemetrySession::run`].
+    pub fn session(&self) -> Result<TelemetrySession, String> {
+        let http = match &self.http {
+            None => None,
+            Some(addr) => Some(Arc::new(HttpServer::bind(addr)?)),
+        };
+        Ok(TelemetrySession {
+            config: self.clone(),
+            seq: Arc::new(AtomicU64::new(0)),
+            http,
+        })
+    }
+}
+
+/// One CLI invocation's telemetry context. Sweeps call
+/// [`TelemetrySession::run`] once per cell with the cell's label (the
+/// same label that scopes its checkpoint directory): each cell gets its
+/// own NDJSON file, while the HTTP endpoint and the `seq` counter are
+/// shared so event cursors stay monotonic across the whole sweep.
+pub struct TelemetrySession {
+    config: TelemetryConfig,
+    seq: Arc<AtomicU64>,
+    http: Option<Arc<HttpServer>>,
+}
+
+/// Insert a sanitized label before the path's extension:
+/// `out.ndjson` + `fig7_base-4` → `out.fig7_base-4.ndjson`. An empty
+/// label (single-run commands) keeps the path as-is.
+fn scoped_path(base: &str, label: &str) -> String {
+    if label.is_empty() {
+        return base.to_string();
+    }
+    let sub: String = label
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || "._-".contains(c) {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    match base.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() && !ext.contains('/') => {
+            format!("{stem}.{sub}.{ext}")
+        }
+        _ => format!("{base}.{sub}"),
+    }
+}
+
+impl TelemetrySession {
+    /// The address the HTTP listener actually bound (resolves `:0`).
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http.as_ref().map(|h| h.addr)
+    }
+
+    /// Open the telemetry handle for one run. `label` scopes the
+    /// NDJSON file name in multi-run sweeps (empty = use the path
+    /// verbatim); `-` streams to stdout regardless of label. An
+    /// inactive session returns [`Telemetry::off`].
+    pub fn run(&self, label: &str) -> Result<Telemetry, String> {
+        if !self.config.is_active() {
+            return Ok(Telemetry::off());
+        }
+        let ndjson = match self.config.path.as_deref() {
+            None => None,
+            Some("-") => Some(NdjsonSink {
+                out: Mutex::new(Box::new(std::io::stdout())),
+                failed: AtomicBool::new(false),
+            }),
+            Some(base) => {
+                let path = scoped_path(base, label);
+                if let Some(dir) = Path::new(&path).parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir).map_err(|e| {
+                            format!(
+                                "--telemetry: create {}: {e}",
+                                dir.display()
+                            )
+                        })?;
+                    }
+                }
+                let file = std::fs::File::create(&path)
+                    .map_err(|e| format!("--telemetry: create {path}: {e}"))?;
+                Some(NdjsonSink {
+                    out: Mutex::new(Box::new(std::io::BufWriter::new(file))),
+                    failed: AtomicBool::new(false),
+                })
+            }
+        };
+        let http = self.http.as_ref().map(|h| HttpFeed {
+            tx: h.tx.clone(),
+            dropped: h.dropped.clone(),
+        });
+        Ok(Telemetry(Some(Arc::new(TelemetryInner {
+            seq: self.seq.clone(),
+            ndjson,
+            http,
+        }))))
+    }
+}
+
+impl Drop for TelemetrySession {
+    fn drop(&mut self) {
+        if let Some(h) = &self.http {
+            h.shutdown.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The per-run handle
+// ---------------------------------------------------------------------------
+
+struct NdjsonSink {
+    out: Mutex<Box<dyn Write + Send>>,
+    /// Set after the first write error so the warning prints once.
+    failed: AtomicBool,
+}
+
+impl NdjsonSink {
+    fn write_line(&self, line: &str) {
+        let mut out = match self.out.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let res = out
+            .write_all(line.as_bytes())
+            .and_then(|_| out.write_all(b"\n"))
+            .and_then(|_| out.flush());
+        if let Err(e) = res {
+            if !self.failed.swap(true, Ordering::Relaxed) {
+                eprintln!("telemetry: ndjson sink failed, disabling: {e}");
+            }
+        }
+    }
+}
+
+struct HttpFeed {
+    tx: SyncSender<(u64, Event, String)>,
+    dropped: Arc<AtomicU64>,
+}
+
+struct TelemetryInner {
+    seq: Arc<AtomicU64>,
+    ndjson: Option<NdjsonSink>,
+    http: Option<HttpFeed>,
+}
+
+/// A cheap, cloneable per-run telemetry handle. [`Telemetry::off`] is
+/// the default everywhere: a `None` inner, so `emit_with` is one branch
+/// and the closure — and any allocation inside it — never runs.
+#[derive(Clone, Default)]
+pub struct Telemetry(Option<Arc<TelemetryInner>>);
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Telemetry({})",
+            if self.0.is_some() { "on" } else { "off" }
+        )
+    }
+}
+
+impl Telemetry {
+    /// The no-op handle: telemetry disabled.
+    pub fn off() -> Telemetry {
+        Telemetry(None)
+    }
+
+    /// Is any sink attached?
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Emit one event. The closure only runs when a sink is attached —
+    /// call sites pay a single `Option` check (and zero allocations)
+    /// when telemetry is off. NDJSON is written synchronously
+    /// (lossless); the HTTP feed uses `try_send` on the bounded channel
+    /// and counts the event as dropped when it is full.
+    pub fn emit_with<F: FnOnce() -> Event>(&self, build: F) {
+        let inner = match &self.0 {
+            Some(i) => i,
+            None => return,
+        };
+        let ev = build();
+        let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+        let line = json::write(&ev.to_json(seq));
+        if let Some(nd) = &inner.ndjson {
+            nd.write_line(&line);
+        }
+        if let Some(http) = &inner.http {
+            match http.tx.try_send((seq, ev, line)) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                    http.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Events dropped by the bounded HTTP feed so far (0 without an
+    /// HTTP sink). The NDJSON sink never drops.
+    pub fn dropped(&self) -> u64 {
+        match &self.0 {
+            Some(i) => i
+                .http
+                .as_ref()
+                .map(|h| h.dropped.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            None => 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP status endpoint
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct WorkerView {
+    shard: usize,
+    nodes: usize,
+    pid: u64,
+    alive: bool,
+    last_round: Option<usize>,
+}
+
+/// Mutable state behind `/status`, updated by the pump thread.
+#[derive(Default)]
+struct Status {
+    label: String,
+    backend: String,
+    topology: String,
+    n: usize,
+    rounds_total: usize,
+    /// Rounds completed so far (`round + 1` of the last record).
+    round: usize,
+    finished: bool,
+    last_checkpoint: Option<String>,
+    workers: Vec<WorkerView>,
+    /// Completion instants of recent rounds, for the rolling rate.
+    round_times: VecDeque<Instant>,
+    /// Recent `(seq, line)` pairs served by `/events?since=`.
+    ring: VecDeque<(u64, String)>,
+    last_seq: u64,
+}
+
+const RING_CAPACITY: usize = 4096;
+const RATE_WINDOW: usize = 64;
+
+impl Status {
+    fn apply(&mut self, seq: u64, ev: &Event, line: String) {
+        self.last_seq = seq;
+        match ev {
+            Event::RunStarted {
+                label,
+                backend,
+                topology,
+                n,
+                rounds,
+                start_round,
+            } => {
+                self.label = label.clone();
+                self.backend = (*backend).to_string();
+                self.topology = topology.clone();
+                self.n = *n;
+                self.rounds_total = *rounds;
+                self.round = *start_round;
+                self.finished = false;
+                self.workers.clear();
+                self.round_times.clear();
+            }
+            Event::RoundCompleted { round, .. } => {
+                self.round = *round + 1;
+                if self.round_times.len() == RATE_WINDOW {
+                    self.round_times.pop_front();
+                }
+                self.round_times.push_back(Instant::now());
+            }
+            Event::CheckpointWritten { path, .. } => {
+                self.last_checkpoint = Some(path.clone());
+            }
+            Event::WorkerSpawned { shard, nodes, pid } => {
+                self.workers.retain(|w| w.shard != *shard);
+                self.workers.push(WorkerView {
+                    shard: *shard,
+                    nodes: *nodes,
+                    pid: *pid,
+                    alive: true,
+                    last_round: None,
+                });
+                self.workers.sort_by_key(|w| w.shard);
+            }
+            Event::WorkerDied { .. } => {
+                for w in &mut self.workers {
+                    w.alive = false;
+                }
+            }
+            Event::WorkerRespawned { .. } => {}
+            Event::ShardBundle { .. } => {}
+            Event::WorkerHeartbeat { round, shard, .. } => {
+                if let Some(w) =
+                    self.workers.iter_mut().find(|w| w.shard == *shard)
+                {
+                    w.alive = true;
+                    w.last_round = Some(*round);
+                }
+            }
+            Event::RunFinished { .. } => {
+                self.finished = true;
+            }
+        }
+        if self.ring.len() == RING_CAPACITY {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((seq, line));
+    }
+
+    /// Rolling rounds/sec over the recent completion window.
+    fn rounds_per_sec(&self) -> f64 {
+        let (first, last) =
+            match (self.round_times.front(), self.round_times.back()) {
+                (Some(f), Some(l)) if self.round_times.len() >= 2 => (f, l),
+                _ => return f64::NAN,
+            };
+        let dt = last.duration_since(*first).as_secs_f64();
+        if dt <= 0.0 {
+            return f64::NAN;
+        }
+        (self.round_times.len() - 1) as f64 / dt
+    }
+
+    fn snapshot(&self, dropped: u64) -> Json {
+        Json::obj(vec![
+            ("v", unum(SCHEMA_VERSION)),
+            ("label", Json::str(&self.label)),
+            ("backend", Json::str(&self.backend)),
+            ("topology", Json::str(&self.topology)),
+            ("n", unum(self.n as u64)),
+            ("rounds_total", unum(self.rounds_total as u64)),
+            ("round", unum(self.round as u64)),
+            ("rounds_per_sec", num_or_null(self.rounds_per_sec())),
+            ("finished", Json::Bool(self.finished)),
+            (
+                "last_checkpoint",
+                match &self.last_checkpoint {
+                    Some(p) => Json::str(p),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "workers",
+                Json::arr(self.workers.iter().map(|w| {
+                    Json::obj(vec![
+                        ("shard", unum(w.shard as u64)),
+                        ("nodes", unum(w.nodes as u64)),
+                        ("pid", unum(w.pid)),
+                        ("alive", Json::Bool(w.alive)),
+                        (
+                            "last_round",
+                            match w.last_round {
+                                Some(r) => unum(r as u64),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                })),
+            ),
+            ("events_dropped", unum(dropped)),
+            ("last_seq", unum(self.last_seq)),
+        ])
+    }
+}
+
+struct HttpServer {
+    tx: SyncSender<(u64, Event, String)>,
+    dropped: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl HttpServer {
+    /// Bind `addr` and start the pump + accept threads. Fails fast on a
+    /// malformed address or an unavailable port.
+    fn bind(addr: &str) -> Result<HttpServer, String> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("--telemetry-http {addr}: {e}"))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| format!("--telemetry-http {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("--telemetry-http {addr}: {e}"))?;
+
+        let (tx, rx) = sync_channel::<(u64, Event, String)>(FEED_CAPACITY);
+        let status = Arc::new(Mutex::new(Status::default()));
+        let dropped = Arc::new(AtomicU64::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let pump_status = status.clone();
+        std::thread::Builder::new()
+            .name("telemetry-pump".into())
+            .spawn(move || pump_loop(rx, pump_status))
+            .map_err(|e| format!("--telemetry-http: spawn pump: {e}"))?;
+
+        let accept_status = status;
+        let accept_dropped = dropped.clone();
+        let accept_shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("telemetry-http".into())
+            .spawn(move || {
+                accept_loop(
+                    listener,
+                    accept_status,
+                    accept_dropped,
+                    accept_shutdown,
+                )
+            })
+            .map_err(|e| format!("--telemetry-http: spawn server: {e}"))?;
+
+        Ok(HttpServer { tx, dropped, shutdown, addr: bound })
+    }
+}
+
+/// Drain the bounded feed into the status snapshot + event ring. Exits
+/// when every sender (session + run handles) is gone.
+fn pump_loop(
+    rx: Receiver<(u64, Event, String)>,
+    status: Arc<Mutex<Status>>,
+) {
+    while let Ok((seq, ev, line)) = rx.recv() {
+        let mut st = match status.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        st.apply(seq, &ev, line);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    status: Arc<Mutex<Status>>,
+    dropped: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Connections are handled serially with short socket
+                // timeouts: a stalled scraper costs at most one timeout
+                // on this thread and never touches the round loop.
+                let _ = handle_conn(stream, &status, &dropped);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    status: &Arc<Mutex<Status>>,
+    dropped: &Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read just enough of the request to get the request line.
+    let mut buf = [0u8; 1024];
+    let mut used = 0;
+    let path = loop {
+        if used == buf.len() {
+            break None;
+        }
+        let got = match std::io::Read::read(&mut stream, &mut buf[used..]) {
+            Ok(0) => break None,
+            Ok(g) => g,
+            Err(_) => break None,
+        };
+        used += got;
+        let head = &buf[..used];
+        if let Some(eol) = head.iter().position(|&b| b == b'\n') {
+            let line = String::from_utf8_lossy(&head[..eol]);
+            let mut parts = line.split_whitespace();
+            break match (parts.next(), parts.next()) {
+                (Some("GET"), Some(p)) => Some(p.to_string()),
+                _ => None,
+            };
+        }
+    };
+    let (code, body) = match path.as_deref() {
+        Some("/status") => {
+            let snap = {
+                let st = match status.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                st.snapshot(dropped.load(Ordering::Relaxed))
+            };
+            ("200 OK", json::write(&snap) + "\n")
+        }
+        Some(p) if p == "/events" || p.starts_with("/events?") => {
+            let since: u64 = p
+                .split_once("since=")
+                .and_then(|(_, v)| {
+                    v.split('&').next().and_then(|v| v.parse().ok())
+                })
+                .unwrap_or(0);
+            let body = {
+                let st = match status.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                let mut out = String::new();
+                for (seq, line) in &st.ring {
+                    if *seq >= since {
+                        out.push_str(line);
+                        out.push('\n');
+                    }
+                }
+                out
+            };
+            ("200 OK", body)
+        }
+        _ => ("404 Not Found", "not found\n".to_string()),
+    };
+    let ctype = if code.starts_with("200") {
+        "application/json"
+    } else {
+        "text/plain"
+    };
+    let resp = format!(
+        "HTTP/1.1 {code}\r\nContent-Type: {ctype}\r\nContent-Length: \
+         {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_line(line: &str) -> Json {
+        json::parse(line).expect("telemetry line must be valid JSON")
+    }
+
+    #[test]
+    fn event_lines_carry_version_seq_and_kind() {
+        let ev = Event::RunStarted {
+            label: "demo".into(),
+            backend: "analytic",
+            topology: "Base-2 Graph".into(),
+            n: 8,
+            rounds: 10,
+            start_round: 0,
+        };
+        let v = parse_line(&json::write(&ev.to_json(7)));
+        assert_eq!(v.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("seq").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("run_started"));
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        let rec = RoundRecord {
+            round: 3,
+            train_loss: f64::NAN,
+            consensus_error: 0.5,
+            cum_messages: 12,
+            ..RoundRecord::default()
+        };
+        let line = json::write(&Event::round(&rec).to_json(0));
+        let v = parse_line(&line);
+        assert_eq!(v.get("train_loss"), Some(&Json::Null));
+        assert_eq!(v.get("consensus_error").unwrap().as_f64(), Some(0.5));
+        assert_eq!(v.get("cum_messages").unwrap().as_usize(), Some(12));
+    }
+
+    #[test]
+    fn off_handle_never_builds_the_event() {
+        let tele = Telemetry::off();
+        assert!(!tele.is_on());
+        let mut built = false;
+        tele.emit_with(|| {
+            built = true;
+            Event::RunFinished {
+                rounds: 0,
+                wall_seconds: 0.0,
+                messages: 0,
+                bytes: 0,
+                wire_bytes: 0,
+                drops: 0,
+            }
+        });
+        assert!(!built);
+        assert_eq!(tele.dropped(), 0);
+    }
+
+    #[test]
+    fn scoped_paths_sanitize_like_checkpoints() {
+        assert_eq!(scoped_path("out.ndjson", ""), "out.ndjson");
+        assert_eq!(
+            scoped_path("out.ndjson", "fig7 base/4"),
+            "out.fig7_base_4.ndjson"
+        );
+        assert_eq!(scoped_path("stream", "cell1"), "stream.cell1");
+        assert_eq!(
+            scoped_path("a/b.dir/stream", "x"),
+            "a/b.dir/stream.x"
+        );
+    }
+
+    /// The backpressure contract: a full bounded feed drops events (for
+    /// the HTTP sink only) instead of blocking the emitting thread.
+    #[test]
+    fn full_http_feed_drops_instead_of_blocking() {
+        let (tx, rx) = sync_channel::<(u64, Event, String)>(4);
+        let tele = Telemetry(Some(Arc::new(TelemetryInner {
+            seq: Arc::new(AtomicU64::new(0)),
+            ndjson: None,
+            http: Some(HttpFeed {
+                tx,
+                dropped: Arc::new(AtomicU64::new(0)),
+            }),
+        })));
+        // Nobody drains `rx`: after 4 buffered sends, every further
+        // emit must return immediately and count a drop.
+        for i in 0..10 {
+            tele.emit_with(|| Event::CheckpointWritten {
+                round: i,
+                path: "x".into(),
+            });
+        }
+        assert_eq!(tele.dropped(), 6);
+        drop(rx);
+        // Disconnected channel also counts as dropped, never panics.
+        tele.emit_with(|| Event::CheckpointWritten {
+            round: 99,
+            path: "x".into(),
+        });
+        assert_eq!(tele.dropped(), 7);
+    }
+
+    #[test]
+    fn malformed_http_addr_fails_at_session_open() {
+        let cfg = TelemetryConfig {
+            path: None,
+            http: Some("not-an-address".into()),
+        };
+        let err = cfg.session().err().expect("bad addr must fail");
+        assert!(err.contains("--telemetry-http"), "{err}");
+    }
+
+    #[test]
+    fn status_tracks_round_checkpoint_and_workers() {
+        let mut st = Status::default();
+        let apply = |st: &mut Status, seq: u64, ev: Event| {
+            let line = json::write(&ev.to_json(seq));
+            st.apply(seq, &ev, line);
+        };
+        apply(
+            &mut st,
+            0,
+            Event::RunStarted {
+                label: "t".into(),
+                backend: "process",
+                topology: "Base-2 Graph".into(),
+                n: 8,
+                rounds: 20,
+                start_round: 0,
+            },
+        );
+        apply(
+            &mut st,
+            1,
+            Event::WorkerSpawned { shard: 0, nodes: 4, pid: 100 },
+        );
+        apply(
+            &mut st,
+            2,
+            Event::WorkerSpawned { shard: 1, nodes: 4, pid: 101 },
+        );
+        apply(&mut st, 3, Event::round(&RoundRecord::default()));
+        apply(
+            &mut st,
+            4,
+            Event::CheckpointWritten { round: 1, path: "c/k.bgc".into() },
+        );
+        apply(
+            &mut st,
+            5,
+            Event::WorkerHeartbeat {
+                round: 0,
+                shard: 1,
+                heartbeat_age_seconds: 0.0,
+            },
+        );
+        let snap = st.snapshot(2);
+        assert_eq!(snap.get("round").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            snap.get("last_checkpoint").unwrap().as_str(),
+            Some("c/k.bgc")
+        );
+        assert_eq!(snap.get("events_dropped").unwrap().as_usize(), Some(2));
+        let workers = snap.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[1].get("last_round").unwrap().as_usize(), Some(0));
+        assert_eq!(st.ring.len(), 6);
+        // `/events?since=N` serves seq >= N (pass last_seq + 1 to tail).
+        let served: Vec<u64> = st
+            .ring
+            .iter()
+            .filter(|(s, _)| *s >= 4)
+            .map(|(s, _)| *s)
+            .collect();
+        assert_eq!(served, vec![4, 5]);
+    }
+}

@@ -1,0 +1,283 @@
+//! Telemetry acceptance tests: the NDJSON stream's golden-file
+//! determinism contract (same seed ⇒ byte-identical modulo the measured
+//! fields), the process backend's worker/bundle events and wire matrix,
+//! and the HTTP endpoint (status mid-run, event tailing, malformed
+//! address). The backpressure drop-counter contract is unit-tested next
+//! to the bounded channel in `telemetry::tests`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use basegraph::ckpt::CkptConfig;
+use basegraph::comm::CostModel;
+use basegraph::consensus::consensus_experiment_tel;
+use basegraph::exec::{
+    quadratic_fixed_targets, Executor, ExecutorKind, ProcessExecutor,
+    TrainSpec, TrainingWorkload,
+};
+use basegraph::optim::OptimizerKind;
+use basegraph::telemetry::{TelemetryConfig, MEASURED_FIELDS};
+use basegraph::topology::TopologyKind;
+use basegraph::train::TrainConfig;
+use basegraph::util::json::{self, Json};
+
+fn uniq_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "basegraph_tele_{tag}_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Re-serialize an NDJSON stream with every measured field nulled —
+/// what the golden-file comparison operates on.
+fn masked(stream: &str) -> Vec<String> {
+    stream
+        .lines()
+        .map(|line| {
+            let v = json::parse(line).expect("stream line must be JSON");
+            let mut m = match v {
+                Json::Obj(m) => m,
+                other => panic!("expected an object line, got {other:?}"),
+            };
+            for &field in MEASURED_FIELDS {
+                if let Some(slot) = m.get_mut(field) {
+                    *slot = Json::Null;
+                }
+            }
+            json::write(&Json::Obj(m))
+        })
+        .collect()
+}
+
+/// One NDJSON-only consensus run; returns the stream contents.
+fn consensus_stream(dir: &PathBuf, tag: &str, seed: u64) -> String {
+    let path = dir.join(format!("{tag}.ndjson"));
+    let cfg = TelemetryConfig {
+        path: Some(path.to_str().unwrap().to_string()),
+        http: None,
+    };
+    let session = cfg.session().unwrap();
+    let seq = TopologyKind::Base { m: 3 }.build(16, seed).unwrap();
+    consensus_experiment_tel(
+        &seq,
+        12,
+        seed,
+        &ExecutorKind::analytic(),
+        &CkptConfig::default(),
+        &session.run("").unwrap(),
+    )
+    .unwrap();
+    std::fs::read_to_string(&path).unwrap()
+}
+
+#[test]
+fn same_seed_streams_are_byte_identical_after_masking() {
+    let dir = uniq_dir("golden");
+    let a = consensus_stream(&dir, "a", 7);
+    let b = consensus_stream(&dir, "b", 7);
+    assert_eq!(
+        masked(&a),
+        masked(&b),
+        "same-seed streams must agree on every non-measured byte"
+    );
+    // The stream itself is well-formed: versioned, seq strictly
+    // increasing, bracketed by run_started/run_finished, one
+    // round_completed per round.
+    let lines: Vec<Json> =
+        a.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert!(lines.len() >= 14, "12 rounds + lifecycle, got {}", lines.len());
+    for (i, v) in lines.iter().enumerate() {
+        assert_eq!(v.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("seq").unwrap().as_usize(), Some(i));
+    }
+    assert_eq!(
+        lines.first().unwrap().get("event").unwrap().as_str(),
+        Some("run_started")
+    );
+    assert_eq!(
+        lines.last().unwrap().get("event").unwrap().as_str(),
+        Some("run_finished")
+    );
+    let rounds = lines
+        .iter()
+        .filter(|v| v.get("event").unwrap().as_str() == Some("round_completed"))
+        .count();
+    assert_eq!(rounds, 12);
+    // A different seed must change the masked stream (the contract is
+    // determinism, not insensitivity).
+    let c = consensus_stream(&dir, "c", 8);
+    assert_ne!(masked(&a), masked(&c));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn process_backend_streams_worker_and_bundle_events() {
+    let dir = uniq_dir("process");
+    let path = dir.join("proc.ndjson");
+    let cfg = TelemetryConfig {
+        path: Some(path.to_str().unwrap().to_string()),
+        http: None,
+    };
+    let session = cfg.session().unwrap();
+    let tele = session.run("").unwrap();
+
+    let n = 16;
+    let shards = 2;
+    let rounds = 6;
+    let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds,
+        lr: 0.2,
+        warmup: 0,
+        cosine: false,
+        optimizer: OptimizerKind::Dsgd,
+        eval_every: 0,
+        threads: 1,
+        ..Default::default()
+    };
+    let (model, data) = quadratic_fixed_targets(n, 4, 3);
+    let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+        .with_wire(TrainSpec::Quadratic { d: 4, seed: 3 });
+    let ex = ProcessExecutor::new(CostModel::default(), shards)
+        .with_worker_bin(env!("CARGO_BIN_EXE_basegraph"));
+    let tr = ex
+        .run_tel(&mut w, &seq, rounds, &CkptConfig::default(), &tele)
+        .unwrap();
+
+    // Satellite: the coordinator's per-(src,dst) wire matrix — square,
+    // zero diagonal (a shard never routes to itself), and its total is
+    // exactly the bundle traffic the stream reported.
+    assert_eq!(tr.wire_matrix.len(), shards);
+    let mut matrix_total = 0u64;
+    for (s, row) in tr.wire_matrix.iter().enumerate() {
+        assert_eq!(row.len(), shards);
+        assert_eq!(row[s], 0, "diagonal must be empty");
+        matrix_total += row.iter().sum::<u64>();
+    }
+    assert!(matrix_total > 0, "cross-shard bundles must be measured");
+    assert!(matrix_total <= tr.ledger.bytes_on_wire);
+
+    let stream = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> =
+        stream.lines().map(|l| json::parse(l).unwrap()).collect();
+    let count = |kind: &str| {
+        lines
+            .iter()
+            .filter(|v| v.get("event").unwrap().as_str() == Some(kind))
+            .count()
+    };
+    assert_eq!(count("worker_spawned"), shards);
+    assert_eq!(count("round_completed"), rounds);
+    assert_eq!(count("worker_heartbeat"), shards * rounds);
+    assert_eq!(count("run_finished"), 1);
+    let bundle_total: u64 = lines
+        .iter()
+        .filter(|v| v.get("event").unwrap().as_str() == Some("shard_bundle"))
+        .map(|v| v.get("bytes").unwrap().as_f64().unwrap() as u64)
+        .sum();
+    assert!(bundle_total > 0);
+    assert_eq!(bundle_total, matrix_total);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn malformed_http_addr_is_a_clean_error() {
+    let cfg = TelemetryConfig {
+        path: None,
+        http: Some("definitely:not:an:addr".into()),
+    };
+    let err = cfg.session().err().expect("must fail at session open");
+    assert!(err.contains("--telemetry-http"), "{err}");
+}
+
+/// Minimal HTTP/1.1 GET against the status endpoint.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> Option<String> {
+    let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2))
+        .ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(2))).ok()?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").ok()?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).ok()?;
+    let (head, body) = resp.split_once("\r\n\r\n")?;
+    head.starts_with("HTTP/1.1 200").then(|| body.to_string())
+}
+
+#[test]
+fn http_status_tracks_a_live_run() {
+    let cfg = TelemetryConfig {
+        path: None,
+        http: Some("127.0.0.1:0".into()),
+    };
+    let session = cfg.session().unwrap();
+    let addr = session.http_addr().expect("listener must be bound");
+    let tele = session.run("").unwrap();
+
+    // The endpoint answers before any run has started (empty snapshot)
+    // — this also guarantees the scraper is provably up concurrently
+    // with the run below, however fast the run finishes.
+    let body = http_get(addr, "/status").expect("status must answer");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("finished"), Some(&Json::Bool(false)));
+    assert_eq!(v.get("round").unwrap().as_usize(), Some(0));
+
+    let iters = 400;
+    let runner = std::thread::spawn(move || {
+        let seq = TopologyKind::Base { m: 2 }.build(32, 1).unwrap();
+        consensus_experiment_tel(
+            &seq,
+            iters,
+            1,
+            &ExecutorKind::analytic(),
+            &CkptConfig::default(),
+            &tele,
+        )
+        .unwrap()
+    });
+    // Poll /status while the run progresses (best-effort: the analytic
+    // run may outpace the scraper); the pump is asynchronous, so keep
+    // polling after the join until it reports completion.
+    while !runner.is_finished() {
+        if let Some(body) = http_get(addr, "/status") {
+            let v = json::parse(&body).unwrap();
+            assert!(v.get("round").unwrap().as_usize().is_some());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    runner.join().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let final_status = loop {
+        let body = http_get(addr, "/status").expect("status must answer");
+        let v = json::parse(&body).unwrap();
+        if v.get("finished") == Some(&Json::Bool(true)) {
+            break v;
+        }
+        assert!(Instant::now() < deadline, "run never reported finished");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(final_status.get("round").unwrap().as_usize(), Some(iters));
+    assert_eq!(
+        final_status.get("backend").unwrap().as_str(),
+        Some("analytic")
+    );
+
+    // /events?since= tails the ring: a zero cursor replays recent
+    // events (every line valid JSON), a cursor past the end is empty.
+    let body = http_get(addr, "/events?since=0").expect("events must answer");
+    let events: Vec<Json> =
+        body.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert!(!events.is_empty());
+    let last_seq =
+        final_status.get("last_seq").unwrap().as_usize().unwrap();
+    let tail = http_get(addr, &format!("/events?since={}", last_seq + 1))
+        .expect("events must answer");
+    assert!(tail.is_empty(), "past-the-end cursor must be empty");
+    // Unknown paths 404 (http_get returns None on non-200).
+    assert!(http_get(addr, "/nope").is_none());
+}
