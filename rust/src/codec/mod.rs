@@ -1,0 +1,920 @@
+//! Gossip payload codecs: the compressed wire under the `Workload` layer.
+//!
+//! Every payload the executors ship is a sequence of *slots* (one per
+//! optimizer message family; consensus ships one f64 slot). A [`Codec`]
+//! compresses a slot in two cooperating stages:
+//!
+//! 1. **Source transform** ([`Codec::transform_f32`] /
+//!    [`Codec::transform_f64`]): the quantizer runs *at the sending node*,
+//!    identically on every backend, replacing the slot values with their
+//!    quantized images (optionally through an error-feedback residual:
+//!    `q = Q(x + e)`, `e ← x + e − q`). Because the transform is a pure
+//!    function of the values, even the lossy codecs stay **bit-identical
+//!    across analytic / simnet / threaded / process** — the executors never
+//!    disagree about what was sent.
+//! 2. **Wire encode** ([`Codec::encode_slot_f32`] /
+//!    [`Codec::decode_slot_f32_into`]): the process backend serializes the
+//!    already-transformed (in-image) values in the codec's compact format.
+//!    Re-encoding an in-image value is *exact* — decode(encode(x)) == x
+//!    bit-for-bit when x came out of the transform — so the socket hop
+//!    cannot introduce a second rounding.
+//!
+//! # Slot wire format (versioned, self-describing)
+//!
+//! ```text
+//! ┌─────────┬────┬──────────┬──────────────────────────────────────────┐
+//! │ version │ id │ elems:u64│ body (codec-specific, exact byte count)  │
+//! │  u8=1   │ u8 │    LE    │                                          │
+//! └─────────┴────┴──────────┴──────────────────────────────────────────┘
+//! body(identity) : elems × u32 f32 bits        (f64 slots: elems × u64)
+//! body(bf16)     : elems × u16                 (high half of the f32)
+//! body(f16)      : elems × u16                 (IEEE binary16 bits)
+//! body(int8)     : per 256-chunk: u8 exponent (i8, power-of-two scale)
+//!                  then chunk-len × u8 codes (i8)
+//! body(top-k)    : u32 k, then k × (u32 index, u32 f32 bits),
+//!                  indices strictly increasing (zero-padded to exactly k)
+//! ```
+//!
+//! Byte counts are closed-form ([`Codec::encoded_slot_bytes`],
+//! [`Codec::slot_data_bytes`]) so `CommLedger` model accounting and the
+//! simnet per-link policy charge *exactly* what the encoder emits.
+//!
+//! # Determinism notes
+//!
+//! - bf16 is truncation (low 16 bits dropped) — re-encode is trivially
+//!   exact, and f32 data that already fits bf16 round-trips losslessly.
+//! - int8 uses a **power-of-two shared exponent per 256-element chunk**
+//!   derived from the chunk max by bit inspection (no `log2` libm call):
+//!   dequantization `code · 2^e` is exact in f32, and the canonical
+//!   exponent is recoverable from the dequantized chunk, which is what
+//!   makes re-encode bit-exact. The cost is ≤2× coarser resolution than a
+//!   free-form scale — a deliberate trade for cross-process bit-identity.
+//! - top-k keeps the k largest-|x| entries (ties: smaller index wins) and
+//!   pads with explicit zero entries to *exactly* k pairs, so the wire
+//!   size is a constant of (d, k), never data-dependent.
+
+use crate::exec::wire::{ByteReader, ByteWriter};
+
+/// Version byte leading every encoded slot; bumped on layout change.
+pub const CODEC_WIRE_VERSION: u8 = 1;
+/// int8 shared-exponent chunk length.
+pub const INT8_CHUNK: usize = 256;
+/// `--codec topk` without an explicit permille keeps the top 10%.
+pub const DEFAULT_TOPK_PERMILLE: u32 = 100;
+
+/// A gossip payload compression scheme. `Identity` is today's full-width
+/// behavior and the default everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Full-width f32/f64 — the exact pre-codec wire.
+    Identity,
+    /// Truncate each f32 to its high 16 bits (bfloat16).
+    Bf16,
+    /// IEEE binary16 with round-to-nearest-even.
+    F16,
+    /// i8 codes with a shared power-of-two exponent per 256-chunk.
+    Int8,
+    /// Keep the top `permille`/1000 entries by |x| (min 1), zero the rest.
+    TopK { permille: u32 },
+}
+
+impl Default for Codec {
+    fn default() -> Self {
+        Codec::Identity
+    }
+}
+
+impl Codec {
+    /// Parse a CLI name: `identity` (aliases `f32`, `none`), `bf16`,
+    /// `f16`, `int8`, `topk` (10%), or `topk<permille>` / `topk:<permille>`.
+    pub fn parse(s: &str) -> Result<Codec, String> {
+        let s = s.trim();
+        match s {
+            "identity" | "f32" | "none" => return Ok(Codec::Identity),
+            "bf16" => return Ok(Codec::Bf16),
+            "f16" => return Ok(Codec::F16),
+            "int8" => return Ok(Codec::Int8),
+            "topk" => {
+                return Ok(Codec::TopK { permille: DEFAULT_TOPK_PERMILLE })
+            }
+            _ => {}
+        }
+        if let Some(p) = s.strip_prefix("topk") {
+            let p = p.strip_prefix(':').unwrap_or(p);
+            let permille: u32 = p.parse().map_err(|_| {
+                format!("codec {s:?}: bad top-k permille {p:?}")
+            })?;
+            if permille == 0 || permille > 1000 {
+                return Err(format!(
+                    "codec {s:?}: permille must be in 1..=1000"
+                ));
+            }
+            return Ok(Codec::TopK { permille });
+        }
+        Err(format!(
+            "unknown codec {s:?} (expected identity|bf16|f16|int8|\
+             topk[<permille>])"
+        ))
+    }
+
+    /// CLI/CSV name; round-trips through [`Codec::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            Codec::Identity => "identity".into(),
+            Codec::Bf16 => "bf16".into(),
+            Codec::F16 => "f16".into(),
+            Codec::Int8 => "int8".into(),
+            Codec::TopK { permille } => format!("topk{permille}"),
+        }
+    }
+
+    /// Wire id (the second header byte of every encoded slot).
+    pub fn id(&self) -> u8 {
+        match self {
+            Codec::Identity => 0,
+            Codec::Bf16 => 1,
+            Codec::F16 => 2,
+            Codec::Int8 => 3,
+            Codec::TopK { .. } => 4,
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        matches!(self, Codec::Identity)
+    }
+
+    /// The default roster for bench / Pareto sweeps.
+    pub fn all_default() -> Vec<Codec> {
+        vec![
+            Codec::Identity,
+            Codec::Bf16,
+            Codec::F16,
+            Codec::Int8,
+            Codec::TopK { permille: DEFAULT_TOPK_PERMILLE },
+        ]
+    }
+
+    /// Number of (index, value) pairs a top-k slot ships for `elems`
+    /// elements (min 1, capped at `elems`); `elems` for every other codec.
+    pub fn topk_k(&self, elems: usize) -> usize {
+        match self {
+            Codec::TopK { permille } => {
+                if elems == 0 {
+                    return 0;
+                }
+                let k = (elems as u64 * *permille as u64 / 1000) as usize;
+                k.clamp(1, elems)
+            }
+            _ => elems,
+        }
+    }
+
+    /// Model-accounting data bytes for one slot — what `CommLedger`
+    /// charges per message (pure payload data, like the pre-codec
+    /// `d × width` convention; identity is exactly `elems × width`).
+    pub fn slot_data_bytes(&self, elems: usize, width: u8) -> u64 {
+        match self {
+            Codec::Identity => elems as u64 * width as u64,
+            Codec::Bf16 | Codec::F16 => 2 * elems as u64,
+            Codec::Int8 => {
+                elems as u64 + elems.div_ceil(INT8_CHUNK) as u64
+            }
+            Codec::TopK { .. } => 8 * self.topk_k(elems) as u64,
+        }
+    }
+
+    /// Exact serialized bytes of one encoded slot, header included —
+    /// closed form, pinned equal to the real encoder by unit test.
+    pub fn encoded_slot_bytes(&self, elems: usize, width: u8) -> u64 {
+        let hdr = 2 + 8; // version + id + elems:u64
+        match self {
+            Codec::Identity => hdr + elems as u64 * width as u64,
+            Codec::Bf16 | Codec::F16 => hdr + 2 * elems as u64,
+            Codec::Int8 => {
+                hdr + elems.div_ceil(INT8_CHUNK) as u64 + elems as u64
+            }
+            Codec::TopK { .. } => hdr + 4 + 8 * self.topk_k(elems) as u64,
+        }
+    }
+
+    /// Encode the codec choice itself (process-backend CONFIG frame).
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(self.id());
+        if let Codec::TopK { permille } = self {
+            w.put_u32(*permille);
+        }
+    }
+
+    /// Inverse of [`Codec::encode`].
+    pub fn decode(r: &mut ByteReader) -> Result<Codec, String> {
+        match r.get_u8()? {
+            0 => Ok(Codec::Identity),
+            1 => Ok(Codec::Bf16),
+            2 => Ok(Codec::F16),
+            3 => Ok(Codec::Int8),
+            4 => {
+                let permille = r.get_u32()?;
+                if permille == 0 || permille > 1000 {
+                    return Err(format!(
+                        "codec config: permille {permille} out of 1..=1000"
+                    ));
+                }
+                Ok(Codec::TopK { permille })
+            }
+            id => Err(format!("unknown codec id {id} on the wire")),
+        }
+    }
+
+    /// Source transform: replace `x` with its quantized image, in place.
+    /// With `ef` (same length), the error-feedback update runs:
+    /// `q = Q(x + e)`, `e ← x + e − q` — the residual re-enters the next
+    /// round's payload, which is what keeps lossy training convergent.
+    pub fn transform_f32(&self, x: &mut [f32], mut ef: Option<&mut [f32]>) {
+        if self.is_identity() {
+            return;
+        }
+        if let Some(e) = ef.as_deref_mut() {
+            debug_assert_eq!(e.len(), x.len());
+            for (v, r) in x.iter_mut().zip(e.iter_mut()) {
+                *v += *r; // x' = x + e
+                *r = *v; // stash x' so the residual can be x' − q
+            }
+        }
+        self.quantize_f32(x);
+        if let Some(e) = ef.as_deref_mut() {
+            for (v, r) in x.iter().zip(e.iter_mut()) {
+                *r -= *v; // e = x' − Q(x')
+            }
+        }
+    }
+
+    /// f64 twin (consensus payloads): narrows through f32, quantizes, and
+    /// widens back — so the image is exactly the f32 image, and the wire
+    /// can ship the compact f32 body. Stateless (no error feedback):
+    /// consensus payloads are state snapshots, not accumulating gradients.
+    pub fn transform_f64(&self, x: &mut [f64]) {
+        if self.is_identity() {
+            return;
+        }
+        let mut tmp: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        self.quantize_f32(&mut tmp);
+        for (o, v) in x.iter_mut().zip(&tmp) {
+            *o = *v as f64;
+        }
+    }
+
+    fn quantize_f32(&self, x: &mut [f32]) {
+        match self {
+            Codec::Identity => {}
+            Codec::Bf16 => {
+                for v in x.iter_mut() {
+                    *v = f32::from_bits(v.to_bits() & 0xFFFF_0000);
+                }
+            }
+            Codec::F16 => {
+                for v in x.iter_mut() {
+                    *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+                }
+            }
+            Codec::Int8 => {
+                for chunk in x.chunks_mut(INT8_CHUNK) {
+                    let s = pow2f(chunk_exp_of(chunk));
+                    for v in chunk.iter_mut() {
+                        *v = int8_code(*v, s) as f32 * s;
+                    }
+                }
+            }
+            Codec::TopK { .. } => {
+                let k = self.topk_k(x.len());
+                if k < x.len() {
+                    let keep = topk_indices(x, k);
+                    let mut ki = 0usize;
+                    for (i, v) in x.iter_mut().enumerate() {
+                        if ki < keep.len() && keep[ki] as usize == i {
+                            ki += 1;
+                        } else {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn write_header(&self, w: &mut ByteWriter, elems: usize) {
+        w.put_u8(CODEC_WIRE_VERSION);
+        w.put_u8(self.id());
+        w.put_u64(elems as u64);
+    }
+
+    fn check_header(&self, r: &mut ByteReader) -> Result<usize, String> {
+        let ver = r.get_u8()?;
+        if ver != CODEC_WIRE_VERSION {
+            return Err(format!(
+                "codec wire version mismatch: slot says v{ver}, this \
+                 binary speaks v{CODEC_WIRE_VERSION}"
+            ));
+        }
+        let id = r.get_u8()?;
+        if id == self.id() {
+            // fallthrough
+        } else if id > 4 {
+            return Err(format!("unknown codec id {id} on the wire"));
+        } else {
+            return Err(format!(
+                "codec id mismatch: slot encoded with id {id}, negotiated \
+                 {} ({})",
+                self.id(),
+                self.label()
+            ));
+        }
+        let n = r.get_u64()?;
+        if n > (1 << 30) {
+            return Err(format!("implausible codec slot length {n}"));
+        }
+        Ok(n as usize)
+    }
+
+    /// Serialize one slot of *already transformed* (in-image) values.
+    /// Emits exactly [`Codec::encoded_slot_bytes`] bytes.
+    pub fn encode_slot_f32(&self, x: &[f32], w: &mut ByteWriter) {
+        self.write_header(w, x.len());
+        match self {
+            Codec::Identity => {
+                for &v in x {
+                    w.put_f32(v);
+                }
+            }
+            Codec::Bf16 => {
+                for &v in x {
+                    w.put_u16((v.to_bits() >> 16) as u16);
+                }
+            }
+            Codec::F16 => {
+                for &v in x {
+                    w.put_u16(f32_to_f16_bits(v));
+                }
+            }
+            Codec::Int8 => {
+                for chunk in x.chunks(INT8_CHUNK) {
+                    let e = chunk_exp_of(chunk);
+                    let s = pow2f(e);
+                    w.put_u8(e as u8);
+                    for &v in chunk {
+                        w.put_u8(int8_code(v, s) as u8);
+                    }
+                }
+            }
+            Codec::TopK { .. } => {
+                let k = self.topk_k(x.len());
+                let idxs = topk_indices(x, k);
+                w.put_u32(k as u32);
+                for &i in &idxs {
+                    w.put_u32(i);
+                    w.put_f32(x[i as usize]);
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`Codec::encode_slot_f32`], into a reused buffer.
+    /// Validates the header (version, id) and, for top-k, that indices
+    /// are in range and strictly increasing.
+    pub fn decode_slot_f32_into(
+        &self,
+        r: &mut ByteReader,
+        out: &mut Vec<f32>,
+    ) -> Result<(), String> {
+        let n = self.check_header(r)?;
+        out.clear();
+        out.reserve(n.min(1 << 20));
+        match self {
+            Codec::Identity => {
+                for _ in 0..n {
+                    out.push(r.get_f32()?);
+                }
+            }
+            Codec::Bf16 => {
+                for _ in 0..n {
+                    out.push(f32::from_bits((r.get_u16()? as u32) << 16));
+                }
+            }
+            Codec::F16 => {
+                for _ in 0..n {
+                    out.push(f16_bits_to_f32(r.get_u16()?));
+                }
+            }
+            Codec::Int8 => {
+                let mut left = n;
+                while left > 0 {
+                    let c = left.min(INT8_CHUNK);
+                    let s = pow2f(r.get_u8()? as i8);
+                    for _ in 0..c {
+                        out.push((r.get_u8()? as i8) as f32 * s);
+                    }
+                    left -= c;
+                }
+            }
+            Codec::TopK { .. } => {
+                let k = r.get_u32()? as usize;
+                if k > n {
+                    return Err(format!(
+                        "top-k slot claims k={k} > {n} elements"
+                    ));
+                }
+                out.resize(n, 0.0);
+                let mut prev: Option<usize> = None;
+                for _ in 0..k {
+                    let idx = r.get_u32()? as usize;
+                    let val = r.get_f32()?;
+                    if idx >= n {
+                        return Err(format!(
+                            "top-k index {idx} out of range (slot has {n} \
+                             elements)"
+                        ));
+                    }
+                    if let Some(p) = prev {
+                        if idx <= p {
+                            return Err(format!(
+                                "top-k indices not strictly increasing \
+                                 at {idx}"
+                            ));
+                        }
+                    }
+                    prev = Some(idx);
+                    out[idx] = val;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// f64-slot encoder (consensus). Identity ships exact f64 bit
+    /// patterns; every other codec narrows to f32 (exact — the transform
+    /// already put the values in the f32 image) and uses the f32 body.
+    pub fn encode_slot_f64(&self, x: &[f64], w: &mut ByteWriter) {
+        match self {
+            Codec::Identity => {
+                self.write_header(w, x.len());
+                for &v in x {
+                    w.put_f64(v);
+                }
+            }
+            _ => {
+                let tmp: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                self.encode_slot_f32(&tmp, w);
+            }
+        }
+    }
+
+    /// Inverse of [`Codec::encode_slot_f64`], into a reused buffer.
+    pub fn decode_slot_f64_into(
+        &self,
+        r: &mut ByteReader,
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        match self {
+            Codec::Identity => {
+                let n = self.check_header(r)?;
+                out.clear();
+                out.reserve(n.min(1 << 20));
+                for _ in 0..n {
+                    out.push(r.get_f64()?);
+                }
+                Ok(())
+            }
+            _ => {
+                let mut tmp = Vec::new();
+                self.decode_slot_f32_into(r, &mut tmp)?;
+                out.clear();
+                out.extend(tmp.iter().map(|&v| v as f64));
+                Ok(())
+            }
+        }
+    }
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// NaN payloads preserved in the top mantissa bit).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN: keep NaN-ness (quiet bit) explicitly.
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e <= 0 {
+        // Subnormal half (or zero). Values below the smallest subnormal
+        // round to ±0.
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // 24-bit significand → ≤10 bits
+        let half = 1u32 << (shift - 1);
+        let rem = man & ((1u32 << shift) - 1);
+        let mut h = man >> shift;
+        if rem > half || (rem == half && (h & 1) == 1) {
+            h += 1; // may carry into the smallest normal — correct
+        }
+        return sign | h as u16;
+    }
+    let man16 = man >> 13;
+    let rem = man & 0x1FFF;
+    let mut h = ((e as u32) << 10) | man16;
+    if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+        h += 1; // mantissa carry rounds into the next exponent / inf
+    }
+    sign | h as u16
+}
+
+/// IEEE binary16 bits → f32 (exact — every f16 is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e: i32 = 113; // 127 − 15 + 1
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Shared power-of-two exponent for an int8 chunk, from the max-|x| by
+/// bit inspection: `2^e` is the largest scale with `maxabs/2^e < 128`
+/// (clamped to the i8-storable, f32-exact range).
+fn chunk_exp_of(chunk: &[f32]) -> i8 {
+    let mut maxabs = 0.0f32;
+    for &v in chunk {
+        let a = v.abs();
+        if a > maxabs {
+            maxabs = a; // NaN compares false → skipped
+        }
+    }
+    if maxabs == 0.0 {
+        return 0;
+    }
+    let biased = ((maxabs.to_bits() >> 23) & 0xFF) as i32;
+    let exp2 = if biased == 0 { -127 } else { biased - 127 };
+    (exp2 - 6).clamp(-127, 121) as i8
+}
+
+/// `2^e` as f32 for `e ∈ [−127, 121]` (−127 is the one subnormal case).
+fn pow2f(e: i8) -> f32 {
+    let e = e as i32;
+    if e >= -126 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        f32::from_bits(1u32 << 22) // 2^−127
+    }
+}
+
+/// Quantize one value against a power-of-two scale (NaN → 0).
+fn int8_code(v: f32, s: f32) -> i8 {
+    let c = (v / s).round();
+    if c.is_nan() {
+        0
+    } else {
+        c.clamp(-127.0, 127.0) as i8
+    }
+}
+
+/// Indices of the k largest-|x| entries, ties broken toward the smaller
+/// index, returned ascending. Deterministic: the sort key embeds the
+/// index, so no two keys compare equal.
+fn topk_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let n = x.len();
+    let mut keys: Vec<u64> = (0..n as u32)
+        .map(|i| {
+            let ab = (x[i as usize].to_bits() & 0x7FFF_FFFF) as u64;
+            (ab << 32) | (u32::MAX - i) as u64
+        })
+        .collect();
+    keys.sort_unstable_by(|a, b| b.cmp(a));
+    let mut idxs: Vec<u32> =
+        keys[..k.min(n)].iter().map(|&kk| u32::MAX - (kk as u32)).collect();
+    idxs.sort_unstable();
+    idxs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.3).collect()
+    }
+
+    #[test]
+    fn parse_label_round_trip_and_errors() {
+        for c in Codec::all_default() {
+            assert_eq!(Codec::parse(&c.label()).unwrap(), c);
+        }
+        assert_eq!(Codec::parse("f32").unwrap(), Codec::Identity);
+        assert_eq!(Codec::parse("none").unwrap(), Codec::Identity);
+        assert_eq!(
+            Codec::parse("topk:250").unwrap(),
+            Codec::TopK { permille: 250 }
+        );
+        assert_eq!(
+            Codec::parse("topk250").unwrap(),
+            Codec::TopK { permille: 250 }
+        );
+        assert!(Codec::parse("topk0").is_err());
+        assert!(Codec::parse("topk1001").is_err());
+        assert!(Codec::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn config_encode_decode_round_trip() {
+        for c in [
+            Codec::Identity,
+            Codec::Bf16,
+            Codec::F16,
+            Codec::Int8,
+            Codec::TopK { permille: 7 },
+        ] {
+            let mut w = ByteWriter::new();
+            c.encode(&mut w);
+            let b = w.finish();
+            let mut r = ByteReader::new(&b);
+            assert_eq!(Codec::decode(&mut r).unwrap(), c);
+            r.expect_end().unwrap();
+        }
+        let mut r = ByteReader::new(&[9u8]);
+        assert!(Codec::decode(&mut r).unwrap_err().contains("unknown"));
+    }
+
+    #[test]
+    fn f16_known_vectors() {
+        // Exact values survive the round trip.
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 65504.0, 6.1035156e-5] {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f16_bits_to_f32(h).to_bits(), v.to_bits(), "{v}");
+        }
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        // Overflow → inf; tiny → zero; inf/NaN preserved.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Subnormal halves round-trip exactly.
+        let sub = f16_bits_to_f32(0x0001);
+        assert_eq!(f32_to_f16_bits(sub), 0x0001);
+        // Round-to-nearest-even: 1 + 2^-11 is exactly halfway between
+        // 1.0 and the next f16 — must round to even (1.0).
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn quantized_values_are_fixed_points() {
+        // Q(Q(x)) == Q(x) for every codec: the transform image is closed,
+        // which is what makes the wire re-encode exact.
+        for c in Codec::all_default() {
+            for n in [1usize, 7, 255, 256, 257, 1000] {
+                let mut x = sample(n, 42);
+                c.transform_f32(&mut x, None);
+                let mut y = x.clone();
+                c.transform_f32(&mut y, None);
+                for (a, b) in x.iter().zip(&y) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{:?} n={n}", c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slot_round_trip_is_bit_exact_on_image_values() {
+        for c in Codec::all_default() {
+            for n in [0usize, 1, 255, 256, 257, 1000] {
+                let mut x = sample(n, 7);
+                c.transform_f32(&mut x, None);
+                let mut w = ByteWriter::new();
+                c.encode_slot_f32(&x, &mut w);
+                let bytes = w.finish();
+                assert_eq!(
+                    bytes.len() as u64,
+                    c.encoded_slot_bytes(n, 4),
+                    "{:?} n={n}",
+                    c
+                );
+                let mut r = ByteReader::new(&bytes);
+                let mut back = Vec::new();
+                c.decode_slot_f32_into(&mut r, &mut back).unwrap();
+                r.expect_end().unwrap();
+                assert_eq!(back.len(), n);
+                for (a, b) in x.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{:?} n={n}", c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f64_slot_round_trip_is_bit_exact_on_image_values() {
+        for c in Codec::all_default() {
+            let mut x: Vec<f64> =
+                sample(300, 3).iter().map(|&v| v as f64).collect();
+            c.transform_f64(&mut x);
+            let mut w = ByteWriter::new();
+            c.encode_slot_f64(&x, &mut w);
+            let bytes = w.finish();
+            assert_eq!(bytes.len() as u64, c.encoded_slot_bytes(300, 8));
+            let mut r = ByteReader::new(&bytes);
+            let mut back = Vec::new();
+            c.decode_slot_f64_into(&mut r, &mut back).unwrap();
+            r.expect_end().unwrap();
+            for (a, b) in x.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", c);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_is_lossless_on_representable_data() {
+        let x0: Vec<f32> = (0..100)
+            .map(|i| f32::from_bits(((i as u32 * 977) % 0xFFFF) << 16))
+            .collect();
+        let mut x = x0.clone();
+        Codec::Bf16.transform_f32(&mut x, None);
+        for (a, b) in x0.iter().zip(&x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_error_feedback_recovers_the_mean() {
+        // A constant signal sent through int8+EF: the quantization error
+        // is re-fed each round, so the time-average of what was sent
+        // converges to the true value — the EF property the convergence
+        // tests lean on.
+        let d = 64;
+        let truth = 0.3f32;
+        let mut ef = vec![0.0f32; d];
+        let mut sum = vec![0.0f64; d];
+        let rounds = 200;
+        for _ in 0..rounds {
+            let mut x = vec![truth; d];
+            Codec::Int8.transform_f32(&mut x, Some(&mut ef));
+            for (s, v) in sum.iter_mut().zip(&x) {
+                *s += *v as f64;
+            }
+        }
+        for s in &sum {
+            let avg = s / rounds as f64;
+            assert!(
+                (avg - truth as f64).abs() < 1e-3,
+                "EF mean drifted: {avg} vs {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_breaks_ties_by_index() {
+        let mut x = vec![0.5f32, -3.0, 2.0, 2.0, 0.1, -2.0];
+        let c = Codec::TopK { permille: 500 }; // k = 3
+        assert_eq!(c.topk_k(x.len()), 3);
+        c.transform_f32(&mut x, None);
+        // |−3| then the tie at |2| → index 2 wins over 3 and 5.
+        assert_eq!(x, vec![0.0, -3.0, 2.0, 2.0, 0.0, 0.0][..6].to_vec());
+    }
+
+    #[test]
+    fn topk_pads_to_exactly_k_pairs() {
+        // Fewer nonzeros than k: the wire still ships exactly k pairs.
+        let c = Codec::TopK { permille: 500 };
+        let x = vec![0.0f32, 7.0, 0.0, 0.0, 0.0, 0.0]; // k = 3, 1 nonzero
+        let mut w = ByteWriter::new();
+        c.encode_slot_f32(&x, &mut w);
+        let bytes = w.finish();
+        assert_eq!(bytes.len() as u64, c.encoded_slot_bytes(6, 4));
+        let mut r = ByteReader::new(&bytes);
+        let mut back = Vec::new();
+        c.decode_slot_f32_into(&mut r, &mut back).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn malformed_slots_error_cleanly() {
+        let c = Codec::Int8;
+        let mut x = sample(300, 1);
+        c.transform_f32(&mut x, None);
+        let mut w = ByteWriter::new();
+        c.encode_slot_f32(&x, &mut w);
+        let good = w.finish();
+
+        // Foreign version byte.
+        let mut bad = good.clone();
+        bad[0] = CODEC_WIRE_VERSION + 1;
+        let mut out = Vec::new();
+        let err = c
+            .decode_slot_f32_into(&mut ByteReader::new(&bad), &mut out)
+            .unwrap_err();
+        assert!(err.contains("version"), "{err}");
+
+        // Unknown id vs mismatched-but-known id: distinct errors.
+        let mut bad = good.clone();
+        bad[1] = 9;
+        let err = c
+            .decode_slot_f32_into(&mut ByteReader::new(&bad), &mut out)
+            .unwrap_err();
+        assert!(err.contains("unknown codec id"), "{err}");
+        let mut bad = good.clone();
+        bad[1] = Codec::Bf16.id();
+        let err = c
+            .decode_slot_f32_into(&mut ByteReader::new(&bad), &mut out)
+            .unwrap_err();
+        assert!(err.contains("mismatch"), "{err}");
+
+        // Truncation anywhere in the chunk scales / codes region.
+        for cut in [2usize, 10, 11, 120, good.len() - 1] {
+            let err = c
+                .decode_slot_f32_into(
+                    &mut ByteReader::new(&good[..cut]),
+                    &mut out,
+                )
+                .unwrap_err();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+        }
+
+        // Top-k: out-of-range index, non-increasing indices, k > n.
+        let t = Codec::TopK { permille: 500 };
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        t.transform_f32(&mut y, None);
+        let mut w = ByteWriter::new();
+        t.encode_slot_f32(&y, &mut w);
+        let good = w.finish();
+        // Layout: ver, id, n:u64, k:u32, then (idx:u32, val:u32) pairs.
+        let first_idx = 2 + 8 + 4;
+        let mut bad = good.clone();
+        bad[first_idx..first_idx + 4]
+            .copy_from_slice(&99u32.to_le_bytes());
+        let err = t
+            .decode_slot_f32_into(&mut ByteReader::new(&bad), &mut out)
+            .unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let second_idx = first_idx + 8;
+        let mut bad = good.clone();
+        let dup = bad[first_idx..first_idx + 4].to_vec();
+        bad[second_idx..second_idx + 4].copy_from_slice(&dup);
+        let err = t
+            .decode_slot_f32_into(&mut ByteReader::new(&bad), &mut out)
+            .unwrap_err();
+        assert!(err.contains("strictly increasing"), "{err}");
+        let mut bad = good.clone();
+        bad[10..14].copy_from_slice(&200u32.to_le_bytes());
+        let err = t
+            .decode_slot_f32_into(&mut ByteReader::new(&bad), &mut out)
+            .unwrap_err();
+        assert!(err.contains("k="), "{err}");
+    }
+
+    #[test]
+    fn byte_accounting_closed_forms() {
+        // slot_data_bytes: identity matches the historic d × width model.
+        assert_eq!(Codec::Identity.slot_data_bytes(1000, 4), 4000);
+        assert_eq!(Codec::Identity.slot_data_bytes(1000, 8), 8000);
+        assert_eq!(Codec::Bf16.slot_data_bytes(1000, 4), 2000);
+        assert_eq!(Codec::Int8.slot_data_bytes(1000, 4), 1004);
+        assert_eq!(Codec::Int8.slot_data_bytes(256, 4), 257);
+        let t = Codec::TopK { permille: 100 };
+        assert_eq!(t.slot_data_bytes(1000, 4), 800); // k=100 × 8
+        assert_eq!(t.topk_k(3), 1); // floor would be 0 → min 1
+        // Every compressing codec beats identity on a real dim.
+        for c in Codec::all_default() {
+            if !c.is_identity() {
+                assert!(
+                    c.slot_data_bytes(1000, 4)
+                        < Codec::Identity.slot_data_bytes(1000, 4),
+                    "{:?}",
+                    c
+                );
+            }
+        }
+    }
+}

@@ -184,9 +184,35 @@ pub fn consensus_experiment_tel(
     ckpt: &crate::ckpt::CkptConfig,
     tele: &crate::telemetry::Telemetry,
 ) -> Result<ExecTrace, String> {
+    consensus_experiment_codec_tel(
+        seq,
+        iters,
+        seed,
+        exec,
+        ckpt,
+        tele,
+        crate::codec::Codec::Identity,
+    )
+}
+
+/// [`consensus_experiment_tel`] with a gossip wire codec — the CLI
+/// `--codec` path. Payload snapshots are quantized at the source
+/// (stateless: consensus has no error-feedback stream), so the exact
+/// finite-time property degrades gracefully to a quantization floor
+/// while bytes per round drop by the codec's ratio.
+pub fn consensus_experiment_codec_tel(
+    seq: &GraphSequence,
+    iters: usize,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+    tele: &crate::telemetry::Telemetry,
+    codec: crate::codec::Codec,
+) -> Result<ExecTrace, String> {
     let mut rng = Rng::new(seed);
     let init = gaussian_init(seq.n, 1, &mut rng);
-    exec.run_tel(&mut ConsensusWorkload::new(init), seq, iters, ckpt, tele)
+    let mut w = ConsensusWorkload::new(init).with_codec(codec);
+    exec.run_tel(&mut w, seq, iters, ckpt, tele)
 }
 
 #[cfg(test)]

@@ -175,6 +175,67 @@ impl NodeSampler {
         let idx = self.next_indices(bsz);
         ds.gather(&idx)
     }
+
+    /// Serialize the shuffle cursor — the permuted index order, the
+    /// position within it and the RNG mid-stream state — so a resumed
+    /// run replays the exact same batch sequence (exact bit patterns,
+    /// same convention as the checkpoint codecs).
+    pub fn state_save(&self, w: &mut crate::exec::wire::ByteWriter) {
+        w.put_usize(self.indices.len());
+        for &i in &self.indices {
+            w.put_usize(i);
+        }
+        w.put_usize(self.pos);
+        let (s, spare) = self.rng.state();
+        for word in s {
+            w.put_u64(word);
+        }
+        match spare {
+            Some(g) => {
+                w.put_u8(1);
+                w.put_f64(g);
+            }
+            None => w.put_u8(0),
+        }
+    }
+
+    /// Restore a cursor written by [`NodeSampler::state_save`]. The shard
+    /// contents must match the freshly built sampler (same dataset
+    /// partition); only the order/position/RNG are checkpoint state.
+    pub fn state_load(
+        &mut self,
+        r: &mut crate::exec::wire::ByteReader,
+    ) -> Result<(), String> {
+        let len = r.get_usize()?;
+        if len != self.indices.len() {
+            return Err(format!(
+                "sampler cursor has {len} indices, shard has {}",
+                self.indices.len()
+            ));
+        }
+        for slot in self.indices.iter_mut() {
+            *slot = r.get_usize()?;
+        }
+        let pos = r.get_usize()?;
+        if pos > self.indices.len() {
+            return Err(format!(
+                "sampler cursor position {pos} past shard end {}",
+                self.indices.len()
+            ));
+        }
+        self.pos = pos;
+        let mut s = [0u64; 4];
+        for word in s.iter_mut() {
+            *word = r.get_u64()?;
+        }
+        let spare = match r.get_u8()? {
+            0 => None,
+            1 => Some(r.get_f64()?),
+            t => return Err(format!("bad sampler gauss-spare tag {t}")),
+        };
+        self.rng = Rng::from_state(s, spare);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

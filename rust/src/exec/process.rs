@@ -1229,14 +1229,15 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
         resume,
     };
     match decode_wire_spec(spec_bytes)? {
-        DecodedSpec::Consensus { init } => {
-            let mut w = ConsensusWorkload::new(init);
+        DecodedSpec::Consensus { init, codec } => {
+            let mut w = ConsensusWorkload::new(init).with_codec(codec);
             worker_loop(&mut w, conn, &ctx)
         }
-        DecodedSpec::Training { spec, cfg } => match spec {
+        DecodedSpec::Training { spec, cfg, codec } => match spec {
             TrainSpec::Quadratic { d, seed } => {
                 let (model, data) = quadratic_fixed_targets(ctx.n, d, seed);
-                let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
+                let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                    .with_codec(codec);
                 worker_loop(&mut w, conn, &ctx)
             }
             TrainSpec::Classification { engine, alpha, seed } => {
@@ -1248,7 +1249,8 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
                     &cfg,
                     data,
                     &[],
-                );
+                )
+                .with_codec(codec);
                 worker_loop(&mut w, conn, &ctx)
             }
         },

@@ -113,7 +113,25 @@ impl Executor for SimnetExecutor {
         let mut nodes = w.init_nodes(n)?;
         let w: &W = w;
         let (n_slots, slot_bytes) = w.comm_shape();
-        let bundle_bytes = n_slots as u64 * slot_bytes;
+        // Per-link codec policy: transcode in-flight copies crossing
+        // remote-class links and charge those links the transcoded byte
+        // count. Needs the workload's slot shape — workloads that opt
+        // out via `slot_elems` keep run-codec bytes on every link.
+        let policy = self.sim.codec_policy;
+        let (slot_elems, elem_width) = w.slot_elems();
+        let link_codec = move |src: usize, dst: usize| {
+            if slot_elems == 0 {
+                None
+            } else {
+                policy.link_codec(src, dst)
+            }
+        };
+        let link_slot_bytes = move |src: usize, dst: usize| match link_codec(
+            src, dst,
+        ) {
+            Some(c) => c.slot_data_bytes(slot_elems, elem_width),
+            None => slot_bytes,
+        };
         let mut net = self.sim.network(n);
         let mut trace = Trace::new(self.sim.record_trace);
         let mut ledger = CommLedger::default();
@@ -167,6 +185,11 @@ impl Executor for SimnetExecutor {
                     let mut arrived: Vec<Vec<bool>> = vec![Vec::new(); n];
                     let mut mail: Vec<Option<W::Payload>> =
                         (0..n).map(|_| None).collect();
+                    // Remote-link transcodes of `mail`, filled only when
+                    // the per-link codec policy is active (one recode per
+                    // sender per round — every remote link shares it).
+                    let mut mail_remote: Vec<Option<W::Payload>> =
+                        (0..n).map(|_| None).collect();
                     let mut avail: AvailTable<W::Payload> =
                         AvailTable::new();
                     let mut mix_scratch: Option<W::Payload> = None;
@@ -204,13 +227,15 @@ impl Executor for SimnetExecutor {
                                     }
                                     let mut t_free = ev.t;
                                     for &dst in &out_adj[pidx][node] {
+                                        let sb =
+                                            link_slot_bytes(node, dst);
                                         t_free += net.links.send_seconds(
                                             node,
                                             dst,
-                                            bundle_bytes,
+                                            n_slots as u64 * sb,
                                         );
                                         ledger.record_payload_sends(
-                                            n_slots, slot_bytes,
+                                            n_slots, sb,
                                         );
                                         if net.dropped() {
                                             // One lost bundle loses all
@@ -264,11 +289,33 @@ impl Executor for SimnetExecutor {
                                 None => *slot = Some(w.make_payload(node)),
                             }
                         }
+                        if let Some(c) =
+                            policy.remote.filter(|_| slot_elems > 0)
+                        {
+                            for (out, src) in
+                                mail_remote.iter_mut().zip(&mail)
+                            {
+                                let src =
+                                    src.as_ref().expect("mail filled");
+                                match out {
+                                    Some(buf) => {
+                                        w.payload_recode(src, c, buf)
+                                    }
+                                    None => {
+                                        let mut buf = src.clone();
+                                        w.payload_recode(src, c, &mut buf);
+                                        *out = Some(buf);
+                                    }
+                                }
+                            }
+                        }
                         avail.fill(plan, |i, k, j| {
-                            if arrived[i][k] {
-                                mail[j].as_ref()
-                            } else {
+                            if !arrived[i][k] {
                                 None
+                            } else if link_codec(j, i).is_some() {
+                                mail_remote[j].as_ref()
+                            } else {
+                                mail[j].as_ref()
                             }
                         });
                         for (i, node) in nodes.iter_mut().enumerate() {
@@ -357,22 +404,48 @@ impl Executor for SimnetExecutor {
                                 // Snapshot and send the pre-mix payload.
                                 let payload =
                                     Rc::new(w.make_payload(&nodes[node]));
+                                // Remote-link transcode, built once per
+                                // send fan-out and shared by every
+                                // remote destination.
+                                let mut remote: Option<Rc<W::Payload>> =
+                                    None;
                                 let mut t_free = ev.t.max(nic_free[node]);
                                 for &dst in &out_adj[pidx][node] {
+                                    let lc = link_codec(node, dst);
+                                    let sb = match lc {
+                                        Some(c) => c.slot_data_bytes(
+                                            slot_elems, elem_width,
+                                        ),
+                                        None => slot_bytes,
+                                    };
                                     t_free += net.links.send_seconds(
                                         node,
                                         dst,
-                                        bundle_bytes,
+                                        n_slots as u64 * sb,
                                     );
                                     ledger.record_payload_sends(
-                                        n_slots, slot_bytes,
+                                        n_slots, sb,
                                     );
                                     if net.dropped() {
                                         drops += n_slots as u64;
                                     } else {
                                         let msg = next_msg;
                                         next_msg += 1;
-                                        store.insert(msg, payload.clone());
+                                        let p = match lc {
+                                            Some(c) => remote
+                                                .get_or_insert_with(|| {
+                                                    let mut buf = (*payload)
+                                                        .clone();
+                                                    w.payload_recode(
+                                                        &payload, c,
+                                                        &mut buf,
+                                                    );
+                                                    Rc::new(buf)
+                                                })
+                                                .clone(),
+                                            None => payload.clone(),
+                                        };
+                                        store.insert(msg, p);
                                         q.push(
                                             t_free,
                                             EventKind::MessageArrive {
@@ -725,6 +798,62 @@ mod tests {
         assert_eq!(base_h.errors(), again.errors());
         assert_eq!(base_h.times(), again.times());
         assert_eq!(base_h.drops, again.drops);
+    }
+
+    #[test]
+    fn per_link_codec_policy_charges_exact_bytes_and_transcodes() {
+        use crate::codec::Codec;
+        use crate::simnet::CodecPolicy;
+        let n = 8;
+        let seq = baselines::ring(n);
+        let d = 6;
+        let mut rng = Rng::new(4);
+        let init = gaussian_init(n, d, &mut rng);
+        let iters = 6;
+        let run = |policy: CodecPolicy| {
+            let mut cfg = Scenario::Lan.config(3);
+            cfg.codec_policy = policy;
+            SimnetExecutor::new(cfg)
+                .run(
+                    &mut ConsensusWorkload::new(init.clone()),
+                    &seq,
+                    iters,
+                )
+                .unwrap()
+        };
+        let plain = run(CodecPolicy::off());
+        let racks = run(CodecPolicy::remote_links(Codec::Bf16, 4));
+        // Exact per-link accounting: rack-crossing links carry 2-byte
+        // bf16 elements, rack-local links the full 8-byte f64.
+        let mut expect = 0u64;
+        for r in 0..iters {
+            let plan = &seq.phases[r % seq.len()];
+            for (dst, src, _w) in plan.directed_edges() {
+                expect += if src / 4 != dst / 4 {
+                    2 * d as u64
+                } else {
+                    8 * d as u64
+                };
+            }
+        }
+        assert_eq!(racks.ledger.bytes, expect);
+        assert!(racks.ledger.bytes < plain.ledger.bytes);
+        // Remote links deliver transcoded (lossy) values —
+        // deterministically per seed.
+        assert_ne!(racks.finals, plain.finals);
+        let again = run(CodecPolicy::remote_links(Codec::Bf16, 4));
+        assert_eq!(racks.finals, again.finals);
+        // rack_size 0 compresses every link: the all-bf16 byte floor.
+        let wan = run(CodecPolicy::remote_links(Codec::Bf16, 0));
+        assert_eq!(wan.ledger.bytes, plain.ledger.bytes / 4);
+        // Async mode takes the same policy path.
+        let mut cfg = Scenario::Lan.config(3);
+        cfg.mode = ExecMode::Async;
+        cfg.codec_policy = CodecPolicy::remote_links(Codec::Bf16, 4);
+        let async_tr = SimnetExecutor::new(cfg)
+            .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+            .unwrap();
+        assert_eq!(async_tr.ledger.bytes, expect);
     }
 
     #[test]

@@ -247,6 +247,10 @@ impl ByteWriter {
         self.buf.push(v);
     }
 
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -335,6 +339,11 @@ impl<'a> ByteReader<'a> {
         Ok(self.take(1, "u8")?[0])
     }
 
+    pub fn get_u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2, "u16")?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
     pub fn get_u32(&mut self) -> Result<u32, String> {
         let b = self.take(4, "u32")?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -416,6 +425,12 @@ impl<'a> ByteReader<'a> {
             out.push(self.get_f32()?);
         }
         Ok(())
+    }
+
+    /// Bytes not yet consumed — lets decoders with optional tagged tail
+    /// sections (e.g. checkpoint blobs) loop until the payload runs dry.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     /// Assert the payload is fully consumed (layout drift detector).

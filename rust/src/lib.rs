@@ -36,6 +36,7 @@
 //! at the repository root.
 
 pub mod ckpt;
+pub mod codec;
 pub mod comm;
 pub mod consensus;
 pub mod data;
@@ -50,6 +51,7 @@ pub mod train;
 pub mod topology;
 pub mod util;
 
+pub use codec::Codec;
 pub use exec::{ExecTrace, Executor, ExecutorKind, Workload};
 pub use simnet::SimConfig;
 pub use topology::{GossipPlan, GraphSequence, MixingMatrix, TopologyKind};

@@ -14,6 +14,7 @@
 //! Run `basegraph <cmd> --help` for per-command flags.
 
 use basegraph::ckpt::CkptConfig;
+use basegraph::codec::Codec;
 use basegraph::comm::CostModel;
 use basegraph::consensus;
 use basegraph::exec::{
@@ -23,9 +24,10 @@ use basegraph::exec::{
 use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
-    classification_workload, print_table, run_training_exec_tel, Engine,
+    classification_workload, print_table, run_training_exec_codec_tel,
+    Engine,
 };
-use basegraph::simnet::{ExecMode, LinkModel, Scenario};
+use basegraph::simnet::{CodecPolicy, ExecMode, LinkModel, Scenario};
 use basegraph::telemetry::TelemetryConfig;
 use basegraph::topology::{self, TopologyKind};
 use basegraph::train::TrainConfig;
@@ -51,6 +53,7 @@ USAGE:
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
                       [--telemetry FILE|-] [--telemetry-http ADDR]
+                      [--codec identity|bf16|f16|int8|topk[:permille]]
                       [--out results]
   basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
                       [--mode bsp|async] [--workload consensus|train]
@@ -60,6 +63,7 @@ USAGE:
                       [--topos a,b,c] [--n N] [--seed S] [--out results]
                       [--alpha SEC] [--beta SEC_PER_BYTE] [--drop-rate P]
                       [--straggler-factor F]
+                      [--codec C] [--codec-remote C] [--codec-rack-size N]
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
                       [--telemetry FILE|-] [--telemetry-http ADDR]
@@ -73,11 +77,13 @@ USAGE:
                       [--executor analytic|simnet|threaded|process]
                       [--threads N] [--shards N]
                       [--shard-balance contiguous|degree]
+                      [--codec C]
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
                       [--telemetry FILE|-] [--telemetry-http ADDR]
   basegraph bench     [--ns 64,256] [--ds 1000,100000] [--rounds R]
                       [--shards-list 2,4] [--fast] [--seed S]
+                      [--codec identity,bf16,f16,int8,topk100]
                       [--telemetry FILE|-] [--telemetry-http ADDR]
                       [--out BENCH_rounds.json]
   basegraph info      [--artifacts DIR]
@@ -103,6 +109,16 @@ Checkpointing: --checkpoint-every N snapshots every N rounds into
   subdirectory automatically; resumed runs replay bit-identically on all
   model columns (see docs/ARCHITECTURE.md, \"Checkpoint format &
   recovery\").
+Codecs: --codec compresses every gossip payload at the source (identity =
+  raw f32/f64; bf16/f16 = truncated floats; int8 = per-256-chunk shared-
+  exponent bytes; topk[:permille] = sparse index+value pairs, default
+  100‰). Training runs keep an error-feedback residual per neighbor slot
+  so lossy codecs still converge; observations (losses, consensus error)
+  stay full fidelity, and byte ledgers report exact compressed wire
+  bytes. In `simnet`, --codec-remote C --codec-rack-size N additionally
+  transcode payloads crossing rack boundaries (N=0 = every link) through
+  a heavier codec, stateless per link. In `bench`, --codec takes a
+  comma-separated roster for the codec cells.
 Telemetry: --telemetry FILE streams one NDJSON event per line (`-` =
   stdout; versioned schema, byte-identical across same-seed runs modulo
   wall-clock fields); --telemetry-http ADDR serves GET /status (JSON
@@ -356,6 +372,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     // Execution backend: ideal analytic loop (default), event-driven
     // simnet, real threads, or one worker process per node shard.
     let exec = ExecutorKind::from_args(args, "analytic")?.with_cost(cost);
+    let codec = Codec::parse(&args.str_or("codec", "identity"))?;
     let ckpt = CkptConfig::from_args(args)?;
     let tsession = TelemetryConfig::from_args(args).session()?;
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
@@ -363,16 +380,17 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let workload = classification_workload(&engine, seed)?;
     println!(
         "training {} on {} (n={n}, α={alpha}, {} rounds, lr={lr}, {}, \
-         executor {})",
+         executor {}, codec {})",
         workload.provider.name(),
         kind.label(),
         rounds,
         optimizer.label(),
-        exec.label()
+        exec.label(),
+        codec.label()
     );
-    let res = run_training_exec_tel(
+    let res = run_training_exec_codec_tel(
         &workload, kind, n, alpha, optimizer, rounds, lr, seed, &exec,
-        &ckpt, &tsession.run("")?,
+        &ckpt, &tsession.run("")?, codec,
     )?;
     let path = format!(
         "{out_dir}/train_{}_n{n}.csv",
@@ -500,6 +518,18 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             sim.compute.mean_seconds = 5e-3;
         }
     }
+    // Gossip wire codec: --codec compresses every payload at the source
+    // (all backends); --codec-remote + --codec-rack-size additionally
+    // transcode payloads that cross rack boundaries inside the
+    // event-driven simulator (rack size 0 = every link is remote).
+    let codec = Codec::parse(&args.str_or("codec", "identity"))?;
+    if let Some(c) = args.get("codec-remote") {
+        let remote = Codec::parse(c)?;
+        let rack = args.usize_or("codec-rack-size", 0)?;
+        sim.codec_policy = CodecPolicy::remote_links(remote, rack);
+    } else if args.get("codec-rack-size").is_some() {
+        return Err("--codec-rack-size requires --codec-remote".into());
+    }
     let topos = args.str_list_or(
         "topos",
         &["ring", "exp", "onepeer-exp", "base-2", "base-4"],
@@ -541,6 +571,15 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
                 exec.label()
             ));
         }
+        // Per-link transcoding happens inside the event engine's
+        // delivery path; the lock-step backends have no per-link hook.
+        if sim.codec_policy.remote.is_some() {
+            return Err(format!(
+                "--codec-remote requires --executor simnet (the {} \
+                 backend has no per-link delivery path)",
+                exec.label()
+            ));
+        }
     }
     let exec = exec.with_cost(lockstep_cost).with_sim(sim.clone());
     // Checkpoint/resume: racing several topologies in one invocation
@@ -561,13 +600,14 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
                 let seq = kind.build(n, seed)?;
-                let tr = consensus::consensus_experiment_tel(
+                let tr = consensus::consensus_experiment_codec_tel(
                     &seq,
                     iters,
                     seed,
                     &exec,
                     &ckpt.scoped(t),
                     &tsession.run(t)?,
+                    codec,
                 )?;
                 rows.push(vec![
                     kind.label(),
@@ -648,9 +688,9 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             let mut csv = Vec::new();
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
-                let res = run_training_exec_tel(
+                let res = run_training_exec_codec_tel(
                     &workload, kind, n, dirichlet, optimizer, rounds, lr,
-                    seed, &exec, &ckpt.scoped(t), &tsession.run(t)?,
+                    seed, &exec, &ckpt.scoped(t), &tsession.run(t)?, codec,
                 )?;
                 let tta = res.run.time_to_accuracy(target);
                 rows.push(vec![
@@ -748,6 +788,16 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let ns = args.usize_list_or("ns", def_ns)?;
     let ds = args.usize_list_or("ds", def_ds)?;
     let shards_list = args.usize_list_or("shards-list", def_shards)?;
+    // Gossip-codec roster for the codec cells (`--codec a,b,c`
+    // restricts it; default = every built-in codec).
+    let codecs: Vec<Codec> = match args.get("codec") {
+        None => Codec::all_default(),
+        Some(_) => args
+            .str_list_or("codec", &[])
+            .iter()
+            .map(|s| Codec::parse(s))
+            .collect::<Result<_, _>>()?,
+    };
     if rounds == 0 {
         return Err("--rounds must be >= 1".into());
     }
@@ -1112,6 +1162,91 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 ("speedup", Json::Null),
                 ("bytes_per_round", Json::num(bpr)),
                 ("sim_seconds", Json::num(sim_s)),
+            ]));
+        }
+    }
+
+    // Codec cells: the training workload re-run once per gossip codec on
+    // the analytic backend — rounds/sec prices the source transform +
+    // error-feedback pass, bytes_per_round is the codec-compressed byte
+    // charge (the Pareto axis the repro simnet sweep plots). The
+    // alloc/scratch duality does not apply, so those columns are null
+    // and trend gates skip them; cells are keyed by their `codec` field.
+    for &n in &ns {
+        for &codec in &codecs {
+            let kind = TopologyKind::Base { m: 4 };
+            let seq = kind.build(n, seed)?;
+            let exec = ExecutorKind::parse("analytic")?;
+            let tele = tsession
+                .run(&format!("train_n{n}_codec_{}", codec.label()))?;
+            let run = || -> Result<ExecTrace, String> {
+                let cfg = TrainConfig {
+                    rounds,
+                    lr: 0.05,
+                    warmup: 0,
+                    cosine: false,
+                    optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+                    eval_every: 0,
+                    threads: 0,
+                    cost: CostModel::default(),
+                };
+                let (model, data) = quadratic_fixed_targets(n, d, seed);
+                let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                    .with_codec(codec);
+                exec.run_tel(
+                    &mut w,
+                    &seq,
+                    rounds,
+                    &CkptConfig::default(),
+                    &tele,
+                )
+            };
+            let loop_rate = |tr: &ExecTrace| -> f64 {
+                let rec = &tr.run.records;
+                match (rec.first(), rec.last()) {
+                    (Some(a), Some(b))
+                        if b.round > a.round
+                            && b.wall_seconds > a.wall_seconds =>
+                    {
+                        (b.round - a.round) as f64
+                            / (b.wall_seconds - a.wall_seconds)
+                    }
+                    _ => rounds as f64 / tr.wall_seconds.max(1e-12),
+                }
+            };
+            let mut rps = 0.0f64;
+            let mut wall = f64::INFINITY;
+            let mut bpr = 0.0f64;
+            for _ in 0..2 {
+                let tr = run()?;
+                rps = rps.max(loop_rate(&tr));
+                wall = wall.min(tr.wall_seconds);
+                bpr = tr.ledger.bytes as f64 / rounds as f64;
+            }
+            rows.push(vec![
+                "train".to_string(),
+                n.to_string(),
+                d.to_string(),
+                format!("analytic {}", codec.label()),
+                "-".to_string(),
+                format!("{rps:.1}"),
+                "-".to_string(),
+                format!("{:.2}", bpr / 1e6),
+            ]);
+            cells.push(Json::obj(vec![
+                ("workload", Json::str("train")),
+                ("topology", Json::str("base-4")),
+                ("n", Json::num(n as f64)),
+                ("d", Json::num(d as f64)),
+                ("backend", Json::str("analytic")),
+                ("codec", Json::str(&codec.label())),
+                ("rounds", Json::num(rounds as f64)),
+                ("wall_seconds_alloc", Json::Null),
+                ("wall_seconds_scratch", Json::num(wall)),
+                ("rounds_per_sec_alloc", Json::Null),
+                ("rounds_per_sec_scratch", Json::num(rps)),
+                ("speedup", Json::Null),
+                ("bytes_per_round", Json::num(bpr)),
             ]));
         }
     }

@@ -286,10 +286,10 @@ pub fn run_training_exec(
 
 /// [`run_training_exec`] with checkpoint/resume: `ckpt.policy` writes
 /// round-boundary snapshots, `ckpt.resume` restores one and continues.
-/// Node params, optimizer slots and gossip-pending buffers round-trip
-/// bit-exactly; the classification data samplers' shuffle cursors do
-/// not (they are re-derived from `seed`), so bit-exact resume holds for
-/// fixed-batch providers — see the ckpt module docs for the contract.
+/// Node params, optimizer slots, gossip-pending buffers, error-feedback
+/// residuals and the classification samplers' shuffle cursors all
+/// round-trip bit-exactly, so a resumed run replays the uninterrupted
+/// one to the bit on every provider.
 #[allow(clippy::too_many_arguments)]
 pub fn run_training_exec_ckpt(
     workload: &TrainWorkload,
@@ -336,6 +336,39 @@ pub fn run_training_exec_tel(
     ckpt: &crate::ckpt::CkptConfig,
     tele: &crate::telemetry::Telemetry,
 ) -> Result<ExecTrace, String> {
+    run_training_exec_codec_tel(
+        workload,
+        kind,
+        n,
+        alpha,
+        optimizer,
+        rounds,
+        lr,
+        seed,
+        exec,
+        ckpt,
+        tele,
+        crate::codec::Codec::Identity,
+    )
+}
+
+/// [`run_training_exec_tel`] with a gossip wire codec — the full-option
+/// entry point the CLI `--codec` paths and the Pareto sweep call.
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_exec_codec_tel(
+    workload: &TrainWorkload,
+    kind: TopologyKind,
+    n: usize,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    rounds: usize,
+    lr: f64,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+    tele: &crate::telemetry::Telemetry,
+    codec: crate::codec::Codec,
+) -> Result<ExecTrace, String> {
     let node_data = partitioned_node_data(workload, n, alpha, seed);
     let seq = kind.build(n, seed)?;
     let cfg = repro_train_config(optimizer, rounds, lr, &CostModel::default());
@@ -352,7 +385,8 @@ pub fn run_training_exec_tel(
         engine: workload.engine.clone(),
         alpha,
         seed,
-    });
+    })
+    .with_codec(codec);
     exec.run_tel(&mut w, &seq, cfg.rounds, ckpt, tele)
 }
 

@@ -33,6 +33,12 @@ pub fn run(args: &Args) -> Result<(), String> {
     // (`--executor analytic|simnet|threaded|process`, `--threads N`,
     // `--shards N`, `--shard-balance contiguous|degree`).
     let exec = ExecutorKind::from_args(args, "analytic")?;
+    // Gossip wire codec for the training sweeps (`--codec`): every
+    // payload is compressed at the source with per-node error feedback;
+    // identity (the default) is the uncompressed baseline. The simnet
+    // target additionally sweeps the whole codec roster for its
+    // bytes-vs-accuracy Pareto CSV, independent of this flag.
+    let codec = crate::codec::Codec::parse(&args.str_or("codec", "identity"))?;
     // Checkpoint/resume for the long training sweeps: each (figure,
     // topology, lr, seed) run is scoped to its own subdirectory, so
     // `--checkpoint-every N --resume <dir>` re-run after a crash skips
@@ -62,13 +68,22 @@ pub fn run(args: &Args) -> Result<(), String> {
             "table2" => tables::table2(n, 0.01, seed, &out_dir),
             "equistatic" => tables::equistatic_table(n, seed, &out_dir),
             "frontier" => tables::base_family_frontier(n, seed, &out_dir),
-            // The simnet straggler/drop sweep over the standard roster.
-            "simnet" => simnet_exps::simnet_sweep(
-                n,
-                if fast { 40 } else { 100 },
-                seed,
-                &out_dir,
-            )?,
+            // The simnet straggler/drop sweep over the standard roster,
+            // plus the codec bytes-vs-accuracy Pareto sweep.
+            "simnet" => {
+                simnet_exps::simnet_sweep(
+                    n,
+                    if fast { 40 } else { 100 },
+                    seed,
+                    &out_dir,
+                )?;
+                simnet_exps::codec_pareto(
+                    n,
+                    if fast { 40 } else { 100 },
+                    seed,
+                    &out_dir,
+                )?;
+            }
             "fig5" => consensus_exps::fig5(
                 if fast { 100 } else { 300 },
                 &[1, 2, 3, 4],
@@ -95,19 +110,23 @@ pub fn run(args: &Args) -> Result<(), String> {
             ),
             "fig7" => training_exps::fig7(
                 &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
+                codec,
             ),
             "fig8" => training_exps::fig8(
                 &engine, &ns, rounds, &seeds, &out_dir, &exec, &ckpt,
-                &tel,
+                &tel, codec,
             ),
             "fig9" => training_exps::fig9(
                 &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
+                codec,
             ),
             "fig22" => training_exps::fig22(
                 &engine, n, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
+                codec,
             ),
             "fig25" => training_exps::fig25(
                 &engine, rounds, &seeds, &out_dir, &exec, &ckpt, &tel,
+                codec,
             ),
             "fig26" => training_exps::fig26(
                 &engine_deep,
@@ -118,6 +137,7 @@ pub fn run(args: &Args) -> Result<(), String> {
                 &exec,
                 &ckpt,
                 &tel,
+                codec,
             ),
             other => return Err(format!("unknown experiment {other:?}")),
         }

@@ -8,13 +8,22 @@
 //! — the quantity the analytic α–β model can only approximate and a lossy
 //! or straggling network actively distorts.
 
+use crate::codec::Codec;
 use crate::consensus::consensus_experiment;
 use crate::exec::ExecutorKind;
-use crate::repro::common::{out_path, print_table, standard_roster};
+use crate::optim::OptimizerKind;
+use crate::repro::common::{
+    classification_workload, out_path, print_table,
+    run_training_exec_codec_tel, standard_roster, Engine,
+};
 use crate::simnet::{ExecMode, Scenario};
+use crate::topology::TopologyKind;
 
 /// Consensus tolerance the sweep races to.
 const SWEEP_TOL: f64 = 1e-9;
+
+/// Test accuracy the codec Pareto sweep races to.
+const PARETO_TARGET_ACC: f64 = 0.6;
 
 /// `basegraph repro --exp simnet`: scenario × roster × mode sweep.
 pub fn simnet_sweep(
@@ -114,6 +123,108 @@ pub fn simnet_sweep(
     Ok(())
 }
 
+/// The codec dimension of `repro --exp simnet`: every built-in gossip
+/// codec races the same training run (Dirichlet classification,
+/// native-linear, LAN scenario, bulk-synchronous) on two representative
+/// topologies. Each CSV row is one point on the bytes-vs-accuracy
+/// Pareto frontier: the model byte charge is codec-compressed exactly,
+/// and `seconds_to_target` is the simulated clock when the run first
+/// clears [`PARETO_TARGET_ACC`].
+pub fn codec_pareto(
+    n: usize,
+    rounds: usize,
+    seed: u64,
+    out_dir: &str,
+) -> Result<(), String> {
+    let engine = Engine::NativeLinear;
+    let workload = classification_workload(&engine, seed)?;
+    let kinds = [TopologyKind::Base { m: 2 }, TopologyKind::OnePeerExp];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for kind in kinds {
+        let seq = match kind.build(n, seed) {
+            Ok(s) => s,
+            Err(_) => continue, // unbuildable at this n
+        };
+        for codec in Codec::all_default() {
+            let exec = ExecutorKind::Simnet(Scenario::Lan.config(seed));
+            let tr = run_training_exec_codec_tel(
+                &workload,
+                kind,
+                n,
+                10.0,
+                OptimizerKind::Dsgdm { momentum: 0.9 },
+                rounds,
+                0.5,
+                seed,
+                &exec,
+                &crate::ckpt::CkptConfig::default(),
+                &crate::telemetry::Telemetry::off(),
+                codec,
+            )?;
+            let tta = tr.run.time_to_accuracy(PARETO_TARGET_ACC);
+            rows.push(vec![
+                codec.label(),
+                kind.label(),
+                tta.map(|t| format!("{:.4}", t.sim_seconds))
+                    .unwrap_or_else(|| "never".into()),
+                tta.map(|t| format!("{:.2}", t.cum_bytes as f64 / 1e6))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.2}", 100.0 * tr.run.best_acc()),
+                format!("{:.4}", tr.ledger.sim_seconds),
+                format!("{:.2}", tr.ledger.bytes as f64 / 1e6),
+            ]);
+            csv.push(vec![
+                codec.label(),
+                kind.to_cli_name(),
+                seq.max_degree().to_string(),
+                tta.map(|t| format!("{:.6e}", t.sim_seconds))
+                    .unwrap_or_else(|| "inf".into()),
+                tta.map(|t| t.cum_bytes.to_string())
+                    .unwrap_or_else(|| "inf".into()),
+                format!("{:.4}", tr.run.best_acc()),
+                format!("{:.6e}", tr.ledger.sim_seconds),
+                tr.ledger.bytes.to_string(),
+            ]);
+        }
+    }
+    print_table(
+        &format!(
+            "codec Pareto — LAN, n={n}, {rounds} rounds, target acc \
+             {:.0}%",
+            100.0 * PARETO_TARGET_ACC
+        ),
+        &[
+            "codec",
+            "topology",
+            "t→target (s)",
+            "MB→target",
+            "best acc %",
+            "sim s",
+            "comm MB",
+        ],
+        &rows,
+    );
+    let path = out_path(out_dir, &format!("codec_pareto_n{n}.csv"));
+    crate::util::write_csv(
+        &path,
+        &[
+            "codec",
+            "topology",
+            "max_degree",
+            "seconds_to_target",
+            "bytes_to_target",
+            "best_acc",
+            "sim_seconds",
+            "bytes",
+        ],
+        &csv,
+    )
+    .map_err(|e| e.to_string())?;
+    println!("CSV: {path}");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +240,36 @@ mod tests {
         assert!(csv.lines().count() > 8, "csv should have many rows");
         assert!(csv.starts_with("scenario,topology,mode"));
         assert!(csv.contains("hostile"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The Pareto CSV has one row per (topology, codec) and its byte
+    /// column shrinks when the codec does: bf16 charges half of
+    /// identity's f32 bytes on the same run.
+    #[test]
+    fn codec_pareto_writes_frontier_csv() {
+        let dir = std::env::temp_dir().join("basegraph_codec_pareto_test");
+        let out = dir.to_str().unwrap().to_string();
+        codec_pareto(6, 10, 3, &out).unwrap();
+        let csv =
+            std::fs::read_to_string(format!("{out}/codec_pareto_n6.csv"))
+                .unwrap();
+        assert!(csv.starts_with("codec,topology,max_degree"));
+        let bytes_of = |codec: &str| -> u64 {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("{codec},base-2")))
+                .unwrap_or_else(|| panic!("no {codec} row"))
+                .rsplit(',')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        let identity = bytes_of("identity");
+        assert_eq!(bytes_of("bf16") * 2, identity);
+        assert_eq!(bytes_of("f16") * 2, identity);
+        assert!(bytes_of("int8") < identity / 3);
+        assert!(bytes_of("topk100") < identity / 4);
         let _ = std::fs::remove_dir_all(dir);
     }
 }

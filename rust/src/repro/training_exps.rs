@@ -5,6 +5,7 @@
 //! paper's: topology roster × heterogeneity level × optimizer.
 
 use crate::ckpt::CkptConfig;
+use crate::codec::Codec;
 use crate::exec::ExecutorKind;
 use crate::optim::OptimizerKind;
 use crate::telemetry::{Telemetry, TelemetrySession};
@@ -12,8 +13,8 @@ use crate::topology::TopologyKind;
 use crate::util::write_csv;
 
 use super::common::{
-    classification_workload, out_path, print_table, run_training_exec_tel,
-    standard_roster, Engine,
+    classification_workload, out_path, print_table,
+    run_training_exec_codec_tel, standard_roster, Engine,
 };
 
 /// The paper tunes the step size by grid search per topology (Sec. H);
@@ -39,6 +40,7 @@ fn roster_run(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     let mut rows = Vec::new();
     for &kind in kinds {
@@ -73,9 +75,9 @@ fn roster_run(
                         Telemetry::off()
                     }
                 };
-                match run_training_exec_tel(
+                match run_training_exec_codec_tel(
                     &workload, kind, n, alpha, optimizer, rounds, lr_eff,
-                    seed, exec, &scope, &tele,
+                    seed, exec, &scope, &tele, codec,
                 )
                 .map(|t| t.run)
                 {
@@ -164,6 +166,7 @@ fn roster_run(
 }
 
 /// Fig. 7: DSGDm across topologies at n=25, α ∈ {10, 0.1}.
+#[allow(clippy::too_many_arguments)]
 pub fn fig7(
     engine: &Engine,
     n: usize,
@@ -173,6 +176,7 @@ pub fn fig7(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     for &alpha in &[10.0, 0.1] {
         roster_run(
@@ -190,12 +194,14 @@ pub fn fig7(
             exec,
             ckpt,
             tel,
+            codec,
         );
     }
 }
 
 /// Fig. 8 / 24: accuracy for n ∈ {21..25}, α = 0.1 — Base family vs the
 /// exponential graphs.
+#[allow(clippy::too_many_arguments)]
 pub fn fig8(
     engine: &Engine,
     ns: &[usize],
@@ -205,6 +211,7 @@ pub fn fig8(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     for &n in ns {
         let mut kinds = vec![TopologyKind::Exp, TopologyKind::OnePeerExp];
@@ -226,11 +233,13 @@ pub fn fig8(
             exec,
             ckpt,
             tel,
+            codec,
         );
     }
 }
 
 /// Fig. 9: heterogeneity-robust methods (D², QG-DSGDm) on the roster.
+#[allow(clippy::too_many_arguments)]
 pub fn fig9(
     engine: &Engine,
     n: usize,
@@ -240,6 +249,7 @@ pub fn fig9(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -267,11 +277,13 @@ pub fn fig9(
             exec,
             ckpt,
             tel,
+            codec,
         );
     }
 }
 
 /// Fig. 22: Base-(k+1) vs U/D-EquiStatic at matched degrees.
+#[allow(clippy::too_many_arguments)]
 pub fn fig22(
     engine: &Engine,
     n: usize,
@@ -281,6 +293,7 @@ pub fn fig22(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     let mut kinds = vec![
         TopologyKind::Base { m: 2 },
@@ -308,11 +321,13 @@ pub fn fig22(
             exec,
             ckpt,
             tel,
+            codec,
         );
     }
 }
 
 /// Fig. 25: n = 16 (power of two) — 1-peer exp matches Base-2.
+#[allow(clippy::too_many_arguments)]
 pub fn fig25(
     engine: &Engine,
     rounds: usize,
@@ -321,6 +336,7 @@ pub fn fig25(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -345,11 +361,13 @@ pub fn fig25(
         exec,
         ckpt,
         tel,
+        codec,
     );
 }
 
 /// Fig. 26: a deeper model (paper: ResNet-18; here the deeper native MLP or
 /// the PJRT CNN when artifacts exist).
+#[allow(clippy::too_many_arguments)]
 pub fn fig26(
     engine: &Engine,
     n: usize,
@@ -359,6 +377,7 @@ pub fn fig26(
     exec: &ExecutorKind,
     ckpt: &CkptConfig,
     tel: &TelemetrySession,
+    codec: Codec,
 ) {
     let kinds = vec![
         TopologyKind::Ring,
@@ -382,6 +401,7 @@ pub fn fig26(
         exec,
         ckpt,
         tel,
+        codec,
     );
 }
 
@@ -412,6 +432,7 @@ mod tests {
             &crate::telemetry::TelemetryConfig::default()
                 .session()
                 .unwrap(),
+            Codec::Identity,
         );
         assert!(std::path::Path::new(&format!("{d}/fig7_smoke.csv"))
             .exists());

@@ -82,7 +82,7 @@ pub mod scenario;
 
 pub use event::{Event, EventKind, EventQueue, Trace};
 pub use net::{ComputeModel, LinkModel, NetworkModel};
-pub use scenario::Scenario;
+pub use scenario::{CodecPolicy, Scenario};
 
 /// Execution discipline of the event-driven drivers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,6 +126,10 @@ pub struct SimConfig {
     pub seed: u64,
     /// Record the full event trace (determinism tests, debugging).
     pub record_trace: bool,
+    /// Per-link compression: transcode payloads crossing remote-class
+    /// links through a heavier codec (disabled by default — the run
+    /// codec, if any, lives in the workload).
+    pub codec_policy: scenario::CodecPolicy,
 }
 
 impl SimConfig {
@@ -140,6 +144,7 @@ impl SimConfig {
             mode: ExecMode::BulkSynchronous,
             seed: 0,
             record_trace: false,
+            codec_policy: scenario::CodecPolicy::off(),
         }
     }
 

@@ -4,7 +4,48 @@
 //! `--straggler-factor`, `--alpha`, `--beta`) layer on top.
 
 use super::{ComputeModel, ExecMode, LinkModel, SimConfig};
+use crate::codec::Codec;
 use crate::comm::CostModel;
+
+/// Per-link compression policy: run a heavier codec on remote-class
+/// links only (the WAN / cross-rack links where bytes actually hurt),
+/// leaving rack-local traffic at the run codec's fidelity.
+///
+/// Link classification mirrors [`LinkModel::Racks`]: nodes `i` and `j`
+/// are rack-local when `i / rack_size == j / rack_size`. `rack_size: 0`
+/// classifies *every* link as remote (the uniform-WAN policy). The
+/// transcode is stateless by contract — `Q(payload)` on the in-flight
+/// copy, no error feedback (the sender's state is not involved) — and
+/// the simulator charges the remote link the transcoded byte count, so
+/// `bytes_on_wire` stays exact per link class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecPolicy {
+    /// Codec applied on remote-class links; `None` disables the policy.
+    pub remote: Option<Codec>,
+    /// Rack width for link classification (0 = all links remote).
+    pub rack_size: usize,
+}
+
+impl CodecPolicy {
+    /// The disabled policy (every link carries the run codec's payload).
+    pub fn off() -> Self {
+        CodecPolicy { remote: None, rack_size: 0 }
+    }
+
+    /// Compress rack-crossing links (racks of `rack_size`; 0 = every
+    /// link) through `codec`.
+    pub fn remote_links(codec: Codec, rack_size: usize) -> Self {
+        CodecPolicy { remote: Some(codec), rack_size }
+    }
+
+    /// The codec to apply on the `src → dst` link, if any.
+    pub fn link_codec(&self, src: usize, dst: usize) -> Option<Codec> {
+        let codec = self.remote?;
+        let remote = self.rack_size == 0
+            || src / self.rack_size != dst / self.rack_size;
+        remote.then_some(codec)
+    }
+}
 
 /// A named network scenario.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,6 +130,7 @@ impl Scenario {
             mode: ExecMode::BulkSynchronous,
             seed,
             record_trace: false,
+            codec_policy: CodecPolicy::off(),
         };
         match self {
             Scenario::Ideal => {
@@ -135,6 +177,22 @@ mod tests {
             assert_eq!(Scenario::parse(sc.label()).unwrap(), sc);
         }
         assert!(Scenario::parse("chaos-monkey").is_err());
+    }
+
+    #[test]
+    fn codec_policy_classifies_links() {
+        let off = CodecPolicy::off();
+        assert_eq!(off.link_codec(0, 9), None);
+        // rack_size 0: every link is remote.
+        let wan = CodecPolicy::remote_links(Codec::Int8, 0);
+        assert_eq!(wan.link_codec(0, 1), Some(Codec::Int8));
+        // racks of 4: 0↔3 local, 0↔4 remote, both directions.
+        let racks = CodecPolicy::remote_links(Codec::Bf16, 4);
+        assert_eq!(racks.link_codec(0, 3), None);
+        assert_eq!(racks.link_codec(0, 4), Some(Codec::Bf16));
+        assert_eq!(racks.link_codec(4, 0), Some(Codec::Bf16));
+        // Presets ship with the policy off.
+        assert_eq!(Scenario::Hostile.config(0).codec_policy, off);
     }
 
     #[test]

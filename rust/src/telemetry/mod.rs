@@ -14,7 +14,9 @@
 //! * `--telemetry-http <addr>` — a tiny dependency-free HTTP endpoint:
 //!   `GET /status` returns a JSON snapshot (current round, rolling
 //!   rounds/sec, per-worker liveness, last checkpoint), and
-//!   `GET /events?since=<seq>` tails the recent event ring. The server
+//!   `GET /events?since=<seq>&kind=<k1,k2>` tails the recent event
+//!   ring, optionally filtered server-side to the named event kinds
+//!   (comma-separated [`Event::kind`] values). The server
 //!   runs on its own thread and is fed through a **bounded** channel:
 //!   when the feed is full the event is counted in
 //!   [`Telemetry::dropped`] and the round loop moves on — a stalled
@@ -559,8 +561,10 @@ struct Status {
     workers: Vec<WorkerView>,
     /// Completion instants of recent rounds, for the rolling rate.
     round_times: VecDeque<Instant>,
-    /// Recent `(seq, line)` pairs served by `/events?since=`.
-    ring: VecDeque<(u64, String)>,
+    /// Recent `(seq, kind, line)` triples served by `/events?since=`;
+    /// the kind tag powers server-side `?kind=` filtering without
+    /// re-parsing the JSON line.
+    ring: VecDeque<(u64, &'static str, String)>,
     last_seq: u64,
 }
 
@@ -632,7 +636,7 @@ impl Status {
         if self.ring.len() == RING_CAPACITY {
             self.ring.pop_front();
         }
-        self.ring.push_back((seq, line));
+        self.ring.push_back((seq, ev.kind(), line));
     }
 
     /// Rolling rounds/sec over the recent completion window.
@@ -828,25 +832,12 @@ fn handle_conn(
             ("200 OK", json::write(&snap) + "\n")
         }
         Some(p) if p == "/events" || p.starts_with("/events?") => {
-            let since: u64 = p
-                .split_once("since=")
-                .and_then(|(_, v)| {
-                    v.split('&').next().and_then(|v| v.parse().ok())
-                })
-                .unwrap_or(0);
             let body = {
                 let st = match status.lock() {
                     Ok(g) => g,
                     Err(p) => p.into_inner(),
                 };
-                let mut out = String::new();
-                for (seq, line) in &st.ring {
-                    if *seq >= since {
-                        out.push_str(line);
-                        out.push('\n');
-                    }
-                }
-                out
+                events_body(&st, p)
             };
             ("200 OK", body)
         }
@@ -864,6 +855,39 @@ fn handle_conn(
     );
     stream.write_all(resp.as_bytes())?;
     stream.flush()
+}
+
+/// Serve the event ring for a `/events` request path. Two query
+/// parameters, both optional and conjunctive:
+///
+/// * `since=<seq>` — only events with sequence number `>= seq`;
+/// * `kind=<k1,k2,...>` — only events whose [`Event::kind`] is in the
+///   comma-separated list (an empty list matches nothing).
+fn events_body(st: &Status, path: &str) -> String {
+    let since: u64 = path
+        .split_once("since=")
+        .and_then(|(_, v)| v.split('&').next().and_then(|v| v.parse().ok()))
+        .unwrap_or(0);
+    let kinds: Option<Vec<&str>> = path.split_once("kind=").map(|(_, v)| {
+        v.split('&')
+            .next()
+            .unwrap_or("")
+            .split(',')
+            .filter(|k| !k.is_empty())
+            .collect()
+    });
+    let mut out = String::new();
+    for (seq, kind, line) in &st.ring {
+        let kind_ok = kinds
+            .as_ref()
+            .map(|ks| ks.iter().any(|k| k == kind))
+            .unwrap_or(true);
+        if *seq >= since && kind_ok {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -1041,9 +1065,93 @@ mod tests {
         let served: Vec<u64> = st
             .ring
             .iter()
-            .filter(|(s, _)| *s >= 4)
-            .map(|(s, _)| *s)
+            .filter(|(s, _, _)| *s >= 4)
+            .map(|(s, _, _)| *s)
             .collect();
         assert_eq!(served, vec![4, 5]);
+    }
+
+    /// `/events?kind=` filters the ring server-side by event kind, with
+    /// comma-separated lists, and composes with `since=` in either
+    /// parameter order.
+    #[test]
+    fn events_endpoint_filters_by_kind_and_since() {
+        let mut st = Status::default();
+        let apply = |st: &mut Status, seq: u64, ev: Event| {
+            let line = json::write(&ev.to_json(seq));
+            st.apply(seq, &ev, line);
+        };
+        apply(
+            &mut st,
+            0,
+            Event::RunStarted {
+                label: "t".into(),
+                backend: "simnet",
+                topology: "ring".into(),
+                n: 4,
+                rounds: 3,
+                start_round: 0,
+            },
+        );
+        apply(&mut st, 1, Event::round(&RoundRecord::default()));
+        apply(
+            &mut st,
+            2,
+            Event::CheckpointWritten { round: 0, path: "c/k.bgc".into() },
+        );
+        apply(&mut st, 3, Event::round(&RoundRecord::default()));
+        apply(
+            &mut st,
+            4,
+            Event::RunFinished {
+                rounds: 3,
+                wall_seconds: 0.5,
+                messages: 24,
+                bytes: 4096,
+                wire_bytes: 4096,
+                drops: 0,
+            },
+        );
+
+        let seqs = |body: String| -> Vec<u64> {
+            body.lines()
+                .map(|l| {
+                    let v = parse_line(l);
+                    v.get("seq").unwrap().as_usize().unwrap() as u64
+                })
+                .collect()
+        };
+        // No query: the whole ring.
+        assert_eq!(seqs(events_body(&st, "/events")), vec![0, 1, 2, 3, 4]);
+        // Single kind.
+        assert_eq!(
+            seqs(events_body(&st, "/events?kind=round_completed")),
+            vec![1, 3]
+        );
+        // Comma-separated list.
+        assert_eq!(
+            seqs(events_body(
+                &st,
+                "/events?kind=checkpoint_written,run_finished"
+            )),
+            vec![2, 4]
+        );
+        // Composes with since=, in either parameter order.
+        assert_eq!(
+            seqs(events_body(
+                &st,
+                "/events?since=2&kind=round_completed"
+            )),
+            vec![3]
+        );
+        assert_eq!(
+            seqs(events_body(
+                &st,
+                "/events?kind=round_completed&since=2"
+            )),
+            vec![3]
+        );
+        // Unknown kind matches nothing (empty body, not an error).
+        assert_eq!(events_body(&st, "/events?kind=nonsense"), "");
     }
 }

@@ -4,6 +4,7 @@ use std::sync::Arc;
 
 use crate::data::corpus::CharCorpus;
 use crate::data::synth::{ClassificationDataset, NodeSampler};
+use crate::exec::wire::{ByteReader, ByteWriter};
 use crate::runtime::batch::Batch;
 
 /// A node's stream of training batches.
@@ -21,6 +22,23 @@ pub trait NodeData: Send {
 
     /// Number of local examples (for diagnostics).
     fn shard_size(&self) -> usize;
+
+    /// Whether this source carries resume-relevant cursor state. Sources
+    /// that answer `true` get a tagged cursor section in the node
+    /// checkpoint ([`cursor_save`](Self::cursor_save) /
+    /// [`cursor_load`](Self::cursor_load)); round-deterministic sources
+    /// ([`FixedBatch`]) keep the default `false` and stay out of the blob.
+    fn has_cursor(&self) -> bool {
+        false
+    }
+
+    /// Serialize the batch-stream cursor (exact bit patterns).
+    fn cursor_save(&self, _w: &mut ByteWriter) {}
+
+    /// Restore a cursor written by [`cursor_save`](Self::cursor_save).
+    fn cursor_load(&mut self, _r: &mut ByteReader) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// Always returns the same batch (quadratic targets, overfit probes).
@@ -76,6 +94,15 @@ impl NodeData for ClassificationShard {
     fn shard_size(&self) -> usize {
         self.sampler.shard_size()
     }
+    fn has_cursor(&self) -> bool {
+        true
+    }
+    fn cursor_save(&self, w: &mut ByteWriter) {
+        self.sampler.state_save(w);
+    }
+    fn cursor_load(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        self.sampler.state_load(r)
+    }
 }
 
 /// LM shard over corpus documents.
@@ -108,6 +135,15 @@ impl NodeData for CorpusShard {
     fn shard_size(&self) -> usize {
         self.sampler.shard_size()
     }
+    fn has_cursor(&self) -> bool {
+        true
+    }
+    fn cursor_save(&self, w: &mut ByteWriter) {
+        self.sampler.state_save(w);
+    }
+    fn cursor_load(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        self.sampler.state_load(r)
+    }
 }
 
 #[cfg(test)]
@@ -137,6 +173,49 @@ mod tests {
         let b = shard.next_train_batch();
         assert_eq!(b.x_shape, vec![4, 32]);
         assert_eq!(b.y_shape, vec![4, 32]);
+    }
+
+    #[test]
+    fn shard_cursor_round_trips_and_replays_the_batch_stream() {
+        let mut rng = Rng::new(3);
+        let ds = Arc::new(gaussian_mixture(120, 6, 3, 1.0, 0.2, &mut rng));
+        let mut shard =
+            ClassificationShard::new(ds.clone(), (0..60).collect(), 16, 9);
+        assert!(shard.has_cursor());
+        // Advance mid-epoch (and past a reshuffle) before snapshotting.
+        for _ in 0..5 {
+            shard.next_train_batch();
+        }
+        let mut w = ByteWriter::new();
+        shard.cursor_save(&mut w);
+        let bytes = w.finish();
+        // A freshly built shard + cursor restore must replay the exact
+        // same stream the original produces from here on.
+        let mut resumed =
+            ClassificationShard::new(ds, (0..60).collect(), 16, 9);
+        let mut r = ByteReader::new(&bytes);
+        resumed.cursor_load(&mut r).unwrap();
+        r.expect_end().unwrap();
+        for _ in 0..8 {
+            assert_eq!(resumed.next_train_batch(), shard.next_train_batch());
+        }
+        // A cursor from a different shard size is a clean error.
+        let mut wrong = ClassificationShard::new(
+            Arc::new(gaussian_mixture(120, 6, 3, 1.0, 0.2, &mut rng)),
+            (0..30).collect(),
+            16,
+            9,
+        );
+        let mut r = ByteReader::new(&bytes);
+        let err = wrong.cursor_load(&mut r).unwrap_err();
+        assert!(err.contains("shard has"), "{err}");
+        // FixedBatch stays cursor-free.
+        let fb = FixedBatch::new(
+            crate::runtime::provider::QuadraticModel::target_batch(vec![
+                1.0,
+            ]),
+        );
+        assert!(!fb.has_cursor());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use basegraph::codec::Codec;
 use basegraph::consensus::gaussian_init;
 use basegraph::exec::{
     quadratic_fixed_targets, AnalyticExecutor, ConsensusWorkload, Executor,
@@ -136,4 +137,39 @@ fn steady_state_consensus_rounds_allocate_nothing() {
          the borrowing optimizer path regressed"
     );
     assert!(train_base > 0);
+
+    // The codec cells. Identity must be literally free: `local_step`
+    // skips the transform block outright, no error-feedback state is
+    // ever created, and byte accounting is closed-form — an explicit
+    // `.with_codec(Codec::Identity)` run costs exactly what the
+    // pre-codec path costs, allocation for allocation.
+    let count_codec = |codec: Codec, rounds: usize| -> u64 {
+        let (model, data) = quadratic_fixed_targets(n, 8, 3);
+        let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+            .with_codec(codec);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let tr =
+            AnalyticExecutor::serial().run(&mut w, &seq, rounds).unwrap();
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(tr.run.records.len(), rounds + 1);
+        after - before
+    };
+    let id_base = count_codec(Codec::Identity, 12);
+    assert_eq!(
+        id_base, train_base,
+        "an explicit identity codec allocated ({id_base} vs \
+         {train_base}): the identity wire path must be byte-for-byte \
+         the pre-codec path"
+    );
+    // Int8 + error feedback: the EF buffers are sized once at warmup
+    // (first `local_step`) and the quantizer runs in place thereafter —
+    // steady-state lossy rounds are allocation-free too.
+    let _ = count_codec(Codec::Int8, 12);
+    let q8_base = count_codec(Codec::Int8, 12);
+    let q8_longer = count_codec(Codec::Int8, 48);
+    assert_eq!(
+        q8_longer, q8_base,
+        "steady-state int8 rounds hit the allocator: the error-feedback \
+         scratch must be warmup-only"
+    );
 }

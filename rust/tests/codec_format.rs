@@ -1,0 +1,243 @@
+//! Codec slot-format negative tests — the typed-error contract of the
+//! compressed gossip wire, mirroring `ckpt_format.rs`: every way an
+//! encoded slot can be wrong (foreign version, unknown or mismatched
+//! codec id, implausible length, truncation at any offset, out-of-range
+//! or unsorted top-k indices, hostile config frames) maps to an `Err`
+//! with a pointed message — never a panic and never silently-decoded
+//! garbage. A slot decoder feeds on bytes from another *process*; this
+//! suite is what lets it trust nothing.
+
+use basegraph::codec::{Codec, CODEC_WIRE_VERSION, INT8_CHUNK};
+use basegraph::exec::wire::{ByteReader, ByteWriter};
+
+/// One transformed (in-image) slot long enough to cross an int8 chunk
+/// boundary, encoded by `codec`.
+fn sample_slot(codec: Codec) -> (Vec<f32>, Vec<u8>) {
+    let n = INT8_CHUNK + 44;
+    let mut x: Vec<f32> =
+        (0..n).map(|i| (i as f32 - 150.0) * 0.37).collect();
+    codec.transform_f32(&mut x, None);
+    let mut w = ByteWriter::new();
+    codec.encode_slot_f32(&x, &mut w);
+    (x, w.finish())
+}
+
+fn decode(codec: Codec, bytes: &[u8]) -> Result<Vec<f32>, String> {
+    let mut out = Vec::new();
+    codec.decode_slot_f32_into(&mut ByteReader::new(bytes), &mut out)?;
+    Ok(out)
+}
+
+#[test]
+fn every_codec_round_trips_in_image_values_bit_exactly() {
+    for codec in Codec::all_default() {
+        let (x, bytes) = sample_slot(codec);
+        assert_eq!(
+            bytes.len() as u64,
+            codec.encoded_slot_bytes(x.len(), 4),
+            "{}: closed-form byte count drifted from the encoder",
+            codec.label()
+        );
+        let got = decode(codec, &bytes).unwrap();
+        let want: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "{}: re-encode was not exact", codec.label());
+    }
+}
+
+#[test]
+fn truncation_at_every_prefix_is_an_error_never_a_panic() {
+    for codec in Codec::all_default() {
+        let (_, bytes) = sample_slot(codec);
+        for k in 0..bytes.len() {
+            assert!(
+                decode(codec, &bytes[..k]).is_err(),
+                "{}: a {k}-byte prefix of a {}-byte slot decoded",
+                codec.label(),
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn foreign_version_byte_is_rejected() {
+    let (_, mut bytes) = sample_slot(Codec::Bf16);
+    bytes[0] = CODEC_WIRE_VERSION + 1;
+    let err = decode(Codec::Bf16, &bytes).unwrap_err();
+    assert!(err.contains("version"), "got {err:?}");
+}
+
+#[test]
+fn unknown_and_mismatched_codec_ids_are_rejected() {
+    let (_, mut bytes) = sample_slot(Codec::Bf16);
+    // An id this binary has never heard of.
+    bytes[1] = 9;
+    let err = decode(Codec::Bf16, &bytes).unwrap_err();
+    assert!(err.contains("unknown codec id"), "got {err:?}");
+    // A known id that disagrees with the negotiated codec: the slot says
+    // bf16, the link was negotiated f16 — refusing beats misreading the
+    // body bytes as the wrong format.
+    let (_, bytes) = sample_slot(Codec::Bf16);
+    let err = decode(Codec::F16, &bytes).unwrap_err();
+    assert!(err.contains("mismatch"), "got {err:?}");
+}
+
+#[test]
+fn implausible_slot_length_is_rejected_before_allocation() {
+    let mut w = ByteWriter::new();
+    w.put_u8(CODEC_WIRE_VERSION);
+    w.put_u8(Codec::Bf16.id());
+    w.put_u64((1 << 30) + 1);
+    let err = decode(Codec::Bf16, &w.finish()).unwrap_err();
+    assert!(err.contains("implausible"), "got {err:?}");
+}
+
+#[test]
+fn int8_truncated_chunk_is_an_error() {
+    let (_, bytes) = sample_slot(Codec::Int8);
+    // Cut after the first full chunk (header + scale + 256 codes): the
+    // second chunk's shared exponent is missing.
+    let cut = 10 + 1 + INT8_CHUNK;
+    let err = decode(Codec::Int8, &bytes[..cut]).unwrap_err();
+    assert!(err.contains("truncated"), "got {err:?}");
+}
+
+/// Hand-craft a top-k slot: `elems` in the header, then `pairs` verbatim.
+fn topk_slot(elems: u64, k: u32, pairs: &[(u32, f32)]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(CODEC_WIRE_VERSION);
+    w.put_u8(4);
+    w.put_u64(elems);
+    w.put_u32(k);
+    for &(i, v) in pairs {
+        w.put_u32(i);
+        w.put_f32(v);
+    }
+    w.finish()
+}
+
+#[test]
+fn hostile_topk_bodies_are_rejected() {
+    let codec = Codec::TopK { permille: 500 };
+    // k larger than the slot itself.
+    let err = decode(codec, &topk_slot(10, 11, &[])).unwrap_err();
+    assert!(err.contains("k=11"), "got {err:?}");
+    // An index past the end of the slot.
+    let err =
+        decode(codec, &topk_slot(10, 2, &[(3, 1.0), (10, 2.0)]))
+            .unwrap_err();
+    assert!(err.contains("out of range"), "got {err:?}");
+    // Duplicate and decreasing indices: both violate the
+    // strictly-increasing contract (a duplicate would silently
+    // overwrite; decreasing hides a reordered or spliced body).
+    for pairs in
+        [[(3, 1.0f32), (3, 2.0f32)], [(5, 1.0f32), (2, 2.0f32)]]
+    {
+        let err = decode(codec, &topk_slot(10, 2, &pairs)).unwrap_err();
+        assert!(
+            err.contains("strictly increasing"),
+            "pairs {pairs:?} gave {err:?}"
+        );
+    }
+    // The same shape with the indices in order is fine.
+    let ok =
+        decode(codec, &topk_slot(10, 2, &[(2, 2.0), (5, 1.0)])).unwrap();
+    assert_eq!(ok.len(), 10);
+    assert_eq!(ok[2], 2.0);
+    assert_eq!(ok[5], 1.0);
+    assert_eq!(ok.iter().filter(|&&v| v == 0.0).count(), 8);
+}
+
+#[test]
+fn hostile_codec_config_frames_are_rejected() {
+    // The CONFIG-frame form (`Codec::encode`/`decode`) that rides the
+    // process backend's negotiation: unknown id, out-of-range permille,
+    // truncated frame.
+    let mut w = ByteWriter::new();
+    w.put_u8(9);
+    let err = Codec::decode(&mut ByteReader::new(&w.finish())).unwrap_err();
+    assert!(err.contains("unknown codec id"), "got {err:?}");
+    for permille in [0u32, 1001] {
+        let mut w = ByteWriter::new();
+        w.put_u8(4);
+        w.put_u32(permille);
+        let err =
+            Codec::decode(&mut ByteReader::new(&w.finish())).unwrap_err();
+        assert!(err.contains("permille"), "got {err:?}");
+    }
+    assert!(Codec::decode(&mut ByteReader::new(&[])).is_err());
+    // Truncated top-k config: id byte present, permille missing.
+    assert!(Codec::decode(&mut ByteReader::new(&[4u8])).is_err());
+    // And the round trip for every roster member plus a non-default k.
+    for codec in Codec::all_default()
+        .into_iter()
+        .chain([Codec::TopK { permille: 250 }])
+    {
+        let mut w = ByteWriter::new();
+        codec.encode(&mut w);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(Codec::decode(&mut r).unwrap(), codec);
+    }
+}
+
+#[test]
+fn cli_parse_rejects_malformed_names_and_round_trips_labels() {
+    for bad in ["", "int4", "bf8", "topk0", "topk1001", "topkx", "topk:"] {
+        assert!(Codec::parse(bad).is_err(), "{bad:?} parsed");
+    }
+    for codec in Codec::all_default()
+        .into_iter()
+        .chain([Codec::TopK { permille: 250 }])
+    {
+        assert_eq!(Codec::parse(&codec.label()).unwrap(), codec);
+    }
+    // The colon alias and the bare default.
+    assert_eq!(
+        Codec::parse("topk:250").unwrap(),
+        Codec::TopK { permille: 250 }
+    );
+    assert!(matches!(
+        Codec::parse("topk").unwrap(),
+        Codec::TopK { permille: basegraph::codec::DEFAULT_TOPK_PERMILLE }
+    ));
+}
+
+#[test]
+fn f64_slots_share_the_same_negative_contract() {
+    // Identity ships f64 bit patterns; lossy codecs narrow through the
+    // f32 body. Both paths refuse truncation and header corruption.
+    for codec in [Codec::Identity, Codec::Int8] {
+        let mut x: Vec<f64> =
+            (0..300).map(|i| (i as f64 - 150.0) * 0.37).collect();
+        codec.transform_f64(&mut x);
+        let mut w = ByteWriter::new();
+        codec.encode_slot_f64(&x, &mut w);
+        let bytes = w.finish();
+        let mut out = Vec::new();
+        codec
+            .decode_slot_f64_into(&mut ByteReader::new(&bytes), &mut out)
+            .unwrap();
+        let want: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "{}: f64 round trip", codec.label());
+        for k in [0, 1, 5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                codec
+                    .decode_slot_f64_into(
+                        &mut ByteReader::new(&bytes[..k]),
+                        &mut out
+                    )
+                    .is_err(),
+                "{}: {k}-byte f64 prefix decoded",
+                codec.label()
+            );
+        }
+        let mut bad = bytes.clone();
+        bad[0] = CODEC_WIRE_VERSION + 3;
+        assert!(codec
+            .decode_slot_f64_into(&mut ByteReader::new(&bad), &mut out)
+            .is_err());
+    }
+}

@@ -9,6 +9,7 @@
 //! difference is attributable to the backend, never to the arithmetic.
 
 use basegraph::ckpt::{CheckpointPolicy, CkptConfig};
+use basegraph::codec::Codec;
 use basegraph::consensus::gaussian_init;
 use basegraph::exec::{
     quadratic_fixed_targets, AllocatingWorkload, ConsensusWorkload,
@@ -446,4 +447,292 @@ fn threaded_reports_measured_wall_clock_at_n64() {
         .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
         .unwrap();
     assert!(tr.reached(1e-12), "Base-4 must reach exact consensus");
+}
+
+// ---------------------------------------------------------------------
+// Gossip codec contract (pinned).
+//
+// Codecs transform payload values at the SOURCE, identically on every
+// backend; the process backend's wire carries a canonical re-encoding of
+// the already-transformed values (exact, because quantization is a fixed
+// point on its own image). Consequence: even LOSSY codecs are bit-exact
+// across all four backends — the codec changes what the arithmetic
+// computes, never which backend computes it.
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_codec_trains_bit_identically_across_backends() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 10,
+        lr: 0.2,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut identity_bytes = 0u64;
+    for codec in Codec::all_default() {
+        let run = |exec: &ExecutorKind| -> ExecTrace {
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                .with_wire(TrainSpec::Quadratic { d: 5, seed: 3 })
+                .with_codec(codec);
+            exec.run(&mut w, &seq, cfg.rounds).unwrap()
+        };
+        let runs: Vec<ExecTrace> = backends().iter().map(run).collect();
+        let a = &runs[0];
+        for b in &runs[1..] {
+            assert_eq!(
+                a.finals,
+                b.finals,
+                "{} vs {} diverged under codec {}",
+                a.backend,
+                b.backend,
+                codec.label()
+            );
+            for (x, y) in a.run.records.iter().zip(&b.run.records) {
+                assert_eq!(
+                    x.train_loss.to_bits(),
+                    y.train_loss.to_bits(),
+                    "{} vs {}: loss diverged at round {} under {}",
+                    a.backend,
+                    b.backend,
+                    x.round,
+                    codec.label()
+                );
+            }
+            // The α–β model charges codec-compressed bytes identically
+            // on every in-process backend.
+            assert_eq!(
+                a.ledger.bytes,
+                b.ledger.bytes,
+                "{} vs {}: model bytes differ under {}",
+                a.backend,
+                b.backend,
+                codec.label()
+            );
+        }
+        if codec.is_identity() {
+            identity_bytes = a.ledger.bytes;
+        } else {
+            assert!(
+                a.ledger.bytes < identity_bytes,
+                "codec {} must charge fewer bytes than identity \
+                 ({} vs {identity_bytes})",
+                codec.label(),
+                a.ledger.bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn every_codec_reaches_consensus_bit_identically_across_backends() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(7);
+    let init = gaussian_init(n, 3, &mut rng);
+    let iters = 2 * seq.len();
+    for codec in Codec::all_default() {
+        let runs: Vec<ExecTrace> = backends()
+            .iter()
+            .map(|e| {
+                let mut w = ConsensusWorkload::new(init.clone())
+                    .with_codec(codec);
+                e.run(&mut w, &seq, iters).unwrap()
+            })
+            .collect();
+        let a = &runs[0];
+        for b in &runs[1..] {
+            assert_eq!(
+                a.finals,
+                b.finals,
+                "{} vs {} diverged under codec {}",
+                a.backend,
+                b.backend,
+                codec.label()
+            );
+            assert_eq!(
+                a.errors(),
+                b.errors(),
+                "{} vs {} error curves differ under codec {}",
+                a.backend,
+                b.backend,
+                codec.label()
+            );
+        }
+    }
+}
+
+/// Lossy codecs are deterministic per seed and their error-feedback
+/// state checkpoints exactly: a mid-run snapshot + resume replays the
+/// tail bit-identically on every backend (the EF residual is nonzero at
+/// the snapshot round, so this pins the `node_ckpt` EF tail section).
+#[test]
+fn lossy_codec_resume_is_bit_identical_on_every_backend() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 12,
+        lr: 0.2,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let every = cfg.rounds / 2;
+    for codec in [Codec::Int8, Codec::TopK { permille: 250 }] {
+        let fresh = |exec: &ExecutorKind,
+                     ckpt: &CkptConfig|
+         -> ExecTrace {
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                .with_wire(TrainSpec::Quadratic { d: 5, seed: 3 })
+                .with_codec(codec);
+            exec.run_ckpt(&mut w, &seq, cfg.rounds, ckpt).unwrap()
+        };
+        for exec in backends() {
+            let base = fresh(&exec, &CkptConfig::default());
+            let tag =
+                format!("{} codec {}", base.backend, codec.label());
+            // Same seed ⇒ same run: lossy ≠ nondeterministic.
+            let again = fresh(&exec, &CkptConfig::default());
+            assert_model_columns_eq(&base, &again, &format!("{tag} (rerun)"));
+            let dir = uniq_ckpt_dir("codec");
+            let policy = CheckpointPolicy {
+                every_n_rounds: every,
+                dir: dir.clone(),
+                keep_last: 0,
+            };
+            let writing = CkptConfig {
+                policy: Some(policy.clone()),
+                resume: None,
+            };
+            let full = fresh(&exec, &writing);
+            assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
+            let snap = policy.path_for(every);
+            assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
+            let resuming =
+                CkptConfig { policy: None, resume: Some(snap) };
+            let resumed = fresh(&exec, &resuming);
+            assert_model_columns_eq(
+                &base,
+                &resumed,
+                &format!("{tag} (resumed)"),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Classification training resumes bit-exactly: the `NodeSampler`
+/// shuffle cursors ride `node_ckpt`/`node_restore`, so the resumed run
+/// draws the exact batch stream the uninterrupted run would have.
+#[test]
+fn classification_resume_replays_sampler_cursors_bit_exactly() {
+    use basegraph::repro::common::{
+        classification_workload, run_training_exec_codec_tel, Engine,
+    };
+    use basegraph::telemetry::Telemetry;
+    let n = 8;
+    let rounds = 8;
+    let every = rounds / 2;
+    let workload =
+        classification_workload(&Engine::NativeLinear, 3).unwrap();
+    for codec in [Codec::Identity, Codec::Int8] {
+        for exec in backends() {
+            let run = |ckpt: &CkptConfig| -> ExecTrace {
+                run_training_exec_codec_tel(
+                    &workload,
+                    TopologyKind::Base { m: 2 },
+                    n,
+                    10.0,
+                    OptimizerKind::Dsgdm { momentum: 0.9 },
+                    rounds,
+                    0.3,
+                    3,
+                    &exec,
+                    ckpt,
+                    &Telemetry::off(),
+                    codec,
+                )
+                .unwrap()
+            };
+            let base = run(&CkptConfig::default());
+            let tag = format!(
+                "{} classification codec {}",
+                base.backend,
+                codec.label()
+            );
+            let dir = uniq_ckpt_dir("cls");
+            let policy = CheckpointPolicy {
+                every_n_rounds: every,
+                dir: dir.clone(),
+                keep_last: 0,
+            };
+            let writing = CkptConfig {
+                policy: Some(policy.clone()),
+                resume: None,
+            };
+            let full = run(&writing);
+            assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
+            let snap = policy.path_for(every);
+            assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
+            let resuming =
+                CkptConfig { policy: None, resume: Some(snap) };
+            let resumed = run(&resuming);
+            assert_model_columns_eq(
+                &base,
+                &resumed,
+                &format!("{tag} (resumed)"),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// The convergence contract of int8 + error feedback on the quadratic:
+/// the compensated quantizer tracks the uncompressed trajectory — loss
+/// still collapses far below its starting point instead of stalling at
+/// a quantization floor.
+#[test]
+fn int8_error_feedback_converges_on_the_quadratic() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 40,
+        lr: 0.1,
+        warmup: 0,
+        cosine: false,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 0,
+        threads: 1,
+        ..Default::default()
+    };
+    let run = |codec: Codec| -> ExecTrace {
+        let (model, data) = quadratic_fixed_targets(n, 8, 5);
+        let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+            .with_codec(codec);
+        ExecutorKind::analytic().run(&mut w, &seq, cfg.rounds).unwrap()
+    };
+    let id = run(Codec::Identity);
+    let q8 = run(Codec::Int8);
+    let first = id.run.records.first().unwrap().train_loss;
+    let id_last = id.run.records.last().unwrap().train_loss;
+    let q8_last = q8.run.records.last().unwrap().train_loss;
+    assert!(
+        id_last < 0.25 * first,
+        "identity baseline failed to converge: {first} -> {id_last}"
+    );
+    assert!(
+        q8_last.is_finite() && q8_last < 0.25 * first,
+        "int8+EF failed to converge: {first} -> {q8_last} \
+         (identity reached {id_last})"
+    );
 }
