@@ -143,7 +143,16 @@ pub struct Snapshot {
     /// Box–Muller spare), present for snapshots taken by the simnet
     /// backend.
     pub rng: Option<([u64; 4], Option<f64>)>,
+    /// Live roster at the boundary (ascending node ids within the fixed
+    /// id capacity `0..n`), present for elastic-membership runs.
+    /// Encoded as an optional tagged tail section, so `None`-roster
+    /// snapshots stay byte-identical to the pre-elastic format and
+    /// legacy files load as `None`.
+    pub roster: Option<Vec<u32>>,
 }
+
+/// Optional snapshot tail section tag: the live roster.
+pub const SNAP_TAG_ROSTER: u8 = 1;
 
 fn put_record(w: &mut ByteWriter, r: &RoundRecord) {
     w.put_usize(r.round);
@@ -210,6 +219,13 @@ impl Snapshot {
         for blob in &self.nodes {
             w.put_bytes(blob);
         }
+        if let Some(roster) = &self.roster {
+            w.put_u8(SNAP_TAG_ROSTER);
+            w.put_usize(roster.len());
+            for &id in roster {
+                w.put_u32(id);
+            }
+        }
         let body = w.finish();
         let mut out = Vec::with_capacity(11 + body.len());
         out.push(CKPT_MAGIC);
@@ -267,6 +283,25 @@ impl Snapshot {
         for _ in 0..n_nodes {
             nodes.push(r.get_bytes()?.to_vec());
         }
+        // Optional tagged tail sections (absent in pre-elastic files).
+        let mut roster = None;
+        while r.remaining() > 0 {
+            match r.get_u8()? {
+                SNAP_TAG_ROSTER => {
+                    let m = r.get_usize()?;
+                    let mut ids = Vec::with_capacity(m.min(1 << 20));
+                    for _ in 0..m {
+                        ids.push(r.get_u32()?);
+                    }
+                    roster = Some(ids);
+                }
+                t => {
+                    return Err(format!(
+                        "unknown snapshot tail section tag {t}"
+                    ))
+                }
+            }
+        }
         r.expect_end()?;
         Ok(Snapshot {
             topology,
@@ -277,6 +312,7 @@ impl Snapshot {
             records,
             clock,
             rng,
+            roster,
         })
     }
 
@@ -371,6 +407,21 @@ impl Snapshot {
                 self.n
             ));
         }
+        if let Some(roster) = &self.roster {
+            if roster.is_empty() {
+                return Err("snapshot roster is empty".into());
+            }
+            if roster.windows(2).any(|w| w[1] <= w[0])
+                || roster.last().map(|&id| id as usize >= self.n)
+                    == Some(true)
+            {
+                return Err(format!(
+                    "snapshot roster is not a strictly ascending id set \
+                     within 0..{}",
+                    self.n
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -384,13 +435,20 @@ pub struct CheckpointPolicy {
     pub dir: PathBuf,
     /// How many snapshot files to retain (0 = keep everything).
     pub keep_last: usize,
+    /// One extra forced snapshot after exactly this many completed
+    /// rounds, regardless of cadence — how the elastic driver pins a
+    /// segment-end boundary without disturbing the user's
+    /// `--checkpoint-every` rhythm. `None` for plain runs.
+    pub force_at: Option<usize>,
 }
 
 impl CheckpointPolicy {
     /// Is a snapshot due after round `r` completes? (Round indices are
-    /// 0-based: `due(r)` ⇔ `r + 1` is a multiple of the cadence.)
+    /// 0-based: `due(r)` ⇔ `r + 1` is a multiple of the cadence, or
+    /// `r + 1` is the forced boundary.)
     pub fn due(&self, r: usize) -> bool {
-        self.every_n_rounds > 0 && (r + 1) % self.every_n_rounds == 0
+        (self.every_n_rounds > 0 && (r + 1) % self.every_n_rounds == 0)
+            || self.force_at == Some(r + 1)
     }
 
     /// Canonical file path for a snapshot taken after `round` completed
@@ -451,6 +509,10 @@ impl CheckpointPolicy {
 pub struct CkptConfig {
     pub policy: Option<CheckpointPolicy>,
     pub resume: Option<PathBuf>,
+    /// Live roster the executor should stamp into every snapshot it
+    /// writes (and expect back on resume). `None` for full-roster runs;
+    /// set by the elastic driver per segment.
+    pub roster: Option<Vec<u32>>,
 }
 
 impl CkptConfig {
@@ -473,9 +535,10 @@ impl CkptConfig {
             every_n_rounds: every,
             dir: PathBuf::from(dir),
             keep_last: keep,
+            force_at: None,
         });
         let resume = args.get("resume").map(PathBuf::from);
-        Ok(CkptConfig { policy, resume })
+        Ok(CkptConfig { policy, resume, roster: None })
     }
 
     /// Scope this config to one run of a multi-run sweep: the checkpoint
@@ -503,6 +566,7 @@ impl CkptConfig {
                 every_n_rounds: p.every_n_rounds,
                 dir: p.dir.join(&sub),
                 keep_last: p.keep_last,
+                force_at: p.force_at,
             }),
             resume: self.resume.as_ref().map(|r| {
                 if r.is_dir() {
@@ -511,6 +575,7 @@ impl CkptConfig {
                     r.clone()
                 }
             }),
+            roster: self.roster.clone(),
         }
     }
 
@@ -549,6 +614,14 @@ impl CkptConfig {
         };
         let snap = Snapshot::load(&file).map_err(String::from)?;
         snap.validate(n, topology, rounds)?;
+        if let (Some(want), Some(have)) = (&self.roster, &snap.roster) {
+            if want != have {
+                return Err(format!(
+                    "resume snapshot carries roster {have:?}, run expects \
+                     {want:?}"
+                ));
+            }
+        }
         Ok(Some(snap))
     }
 
@@ -610,6 +683,7 @@ mod tests {
             ],
             clock: 1.5,
             rng: Some(([1, 2, 3, 4], Some(-0.25))),
+            roster: None,
         }
     }
 
@@ -650,6 +724,7 @@ mod tests {
             every_n_rounds: 3,
             dir: PathBuf::from("/tmp/x"),
             keep_last: 2,
+            force_at: None,
         };
         assert!(!p.due(0));
         assert!(!p.due(1));
@@ -659,8 +734,69 @@ mod tests {
             p.path_for(12),
             PathBuf::from("/tmp/x/ckpt-00000012.bgc")
         );
-        let off = CheckpointPolicy { every_n_rounds: 0, ..p };
+        let off = CheckpointPolicy { every_n_rounds: 0, ..p.clone() };
         assert!(!off.due(0) && !off.due(99));
+        // force_at adds one boundary on top of the cadence (and works
+        // with the cadence off entirely).
+        let forced = CheckpointPolicy { force_at: Some(5), ..p };
+        assert!(forced.due(2) && forced.due(4) && forced.due(5));
+        assert!(!forced.due(3));
+        let only = CheckpointPolicy {
+            every_n_rounds: 0,
+            dir: PathBuf::from("/tmp/x"),
+            keep_last: 0,
+            force_at: Some(7),
+        };
+        assert!(only.due(6));
+        assert!(!only.due(5) && !only.due(7));
+    }
+
+    #[test]
+    fn roster_tail_round_trips_and_stays_legacy_compatible() {
+        // None-roster snapshots are byte-identical to the pre-elastic
+        // format (no tail section at all).
+        let plain = sample_snapshot();
+        let bytes = plain.to_file_bytes();
+        let mut tailed = plain.clone();
+        tailed.roster = Some(vec![0, 2]);
+        let tailed_bytes = tailed.to_file_bytes();
+        assert!(tailed_bytes.len() > bytes.len());
+        let back = Snapshot::from_file_bytes(&tailed_bytes).unwrap();
+        assert_eq!(back.roster, Some(vec![0, 2]));
+        assert_eq!(
+            Snapshot::from_file_bytes(&bytes).unwrap().roster,
+            None
+        );
+        // validate() rejects malformed rosters.
+        assert!(back.validate(3, "Base-4 Graph", 10).is_ok());
+        let mut bad = plain.clone();
+        bad.roster = Some(vec![2, 0]);
+        assert!(bad.validate(3, "Base-4 Graph", 10).is_err());
+        bad.roster = Some(vec![0, 7]);
+        assert!(bad.validate(3, "Base-4 Graph", 10).is_err());
+        bad.roster = Some(Vec::new());
+        assert!(bad.validate(3, "Base-4 Graph", 10).is_err());
+        // An unknown tail tag is a clean Malformed error.
+        let mut corrupt = plain.to_file_bytes();
+        // Rebuild with a bogus tail: append tag 9 to the body by hand.
+        let len = u32::from_le_bytes([
+            corrupt[3], corrupt[4], corrupt[5], corrupt[6],
+        ]) as usize;
+        let mut body = corrupt[7..7 + len].to_vec();
+        body.push(9);
+        corrupt = Vec::new();
+        corrupt.push(CKPT_MAGIC);
+        corrupt.push(CKPT_VERSION);
+        corrupt.push(KIND_SNAPSHOT);
+        corrupt.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        corrupt.extend_from_slice(&body);
+        corrupt.extend_from_slice(&crc32(&body).to_le_bytes());
+        match Snapshot::from_file_bytes(&corrupt) {
+            Err(CkptError::Malformed(e)) => {
+                assert!(e.contains("tail section"), "{e}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
     }
 
     #[test]

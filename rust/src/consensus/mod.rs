@@ -215,6 +215,35 @@ pub fn consensus_experiment_codec_tel(
     exec.run_tel(&mut w, seq, iters, ckpt, tele)
 }
 
+/// The Sec. 6.1 experiment under elastic membership: the same Gaussian
+/// scalar init over the schedule's full id capacity, driven through
+/// [`run_elastic`](crate::exec::run_elastic) — per-segment static runs
+/// with joiner warm starts at every splice. The factory re-derives the
+/// init from `seed` on every segment; only segment 0 actually runs from
+/// it (later segments restore from the boundary snapshot), which is
+/// what keeps resumed and uninterrupted churn runs bit-identical.
+pub fn consensus_experiment_elastic(
+    schedule: &crate::topology::resequence::ElasticSchedule,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+    tele: &crate::telemetry::Telemetry,
+    codec: crate::codec::Codec,
+) -> Result<ExecTrace, String> {
+    let capacity = schedule.capacity;
+    crate::exec::run_elastic(
+        exec,
+        move || {
+            let mut rng = Rng::new(seed);
+            let init = gaussian_init(capacity, 1, &mut rng);
+            Ok(ConsensusWorkload::new(init).with_codec(codec))
+        },
+        schedule,
+        ckpt,
+        tele,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -303,6 +303,7 @@ pub(super) fn run_lockstep<W: Workload>(
                 records: records.clone(),
                 clock: 0.0,
                 rng: None,
+                roster: ckpt.roster.clone(),
             };
             let path = pol.save(&snap)?;
             tele.emit_with(|| Event::CheckpointWritten {

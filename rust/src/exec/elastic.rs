@@ -1,0 +1,259 @@
+//! The elastic-membership driver: churn as a sequence of static runs.
+//!
+//! [`run_elastic`] executes an [`ElasticSchedule`] — the deterministic
+//! segment list produced by online Base-(k+1) resequencing
+//! ([`crate::topology::resequence`]) — on *any* backend, by running each
+//! segment as an ordinary fixed-topology run and carrying state across
+//! the splice boundaries through the checkpoint machinery:
+//!
+//! ```text
+//!   segment i                     boundary                segment i+1
+//!   inner run over seg.seq   ──►  snapshot at seg.end ──► inner run,
+//!   (force_at = seg.end)          · warm-start joiners    resumed from
+//!                                 · stamp next roster     the rewritten
+//!                                 · save (same path)      snapshot
+//! ```
+//!
+//! The inner executor never learns about churn: each segment's
+//! [`GraphSequence`] is embedded at full capacity (ghost nodes get
+//! identity rows), rotation-aligned so `phase(r) = phases[r % len]`
+//! keeps working with global round numbers, and shares one sequence
+//! name across segments so snapshot topology validation holds through a
+//! splice. Joiner warm starts call
+//! [`Workload::node_warm_start`] with the donor blobs picked by
+//! [`warm_start_donors`] — survivors' states are never touched, which
+//! is what makes surviving-node columns bit-identical across backends
+//! and across scheduled-vs-evicted churn at roster-change granularity.
+//!
+//! When the caller has no checkpoint policy of their own, boundary
+//! snapshots go to a scratch directory under the system temp dir that
+//! is removed when the run completes.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::ckpt::{CheckpointPolicy, CkptConfig, Snapshot};
+use crate::exec::{ExecTrace, ExecutorKind, Workload};
+use crate::telemetry::{Event, Telemetry};
+use crate::topology::resequence::{warm_start_donors, ElasticSchedule};
+
+/// Distinguishes concurrent scratch directories within one process
+/// (integration tests run several elastic drivers in parallel).
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_dir() -> PathBuf {
+    let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "basegraph-elastic-{}-{seq}",
+        std::process::id()
+    ))
+}
+
+fn roster_u32(roster: &[usize]) -> Vec<u32> {
+    roster.iter().map(|&i| i as u32).collect()
+}
+
+/// Run an [`ElasticSchedule`] on `exec`, building a fresh workload per
+/// segment via `make` (deterministic construction is the factory's
+/// contract: every call must produce identically-initialized nodes —
+/// restores overwrite them, but segment 0 runs from them directly).
+///
+/// `ckpt` is the *user's* checkpoint surface: its cadence and directory
+/// are honored inside every segment, `resume` may point into any
+/// segment (the driver fast-forwards past completed splices without
+/// re-emitting their events), and segment-boundary snapshots are forced
+/// on top via [`CheckpointPolicy::force_at`]. The returned trace is the
+/// final segment's — its records, ledger and finals cover the whole run
+/// because the record prefix rides in every snapshot.
+///
+/// Emits `node_left` (reason `"scheduled"`), `node_joined` and
+/// `roster_resequenced` on `tele` at every boundary actually crossed.
+pub fn run_elastic<W, F>(
+    exec: &ExecutorKind,
+    mut make: F,
+    schedule: &ElasticSchedule,
+    ckpt: &CkptConfig,
+    tele: &Telemetry,
+) -> Result<ExecTrace, String>
+where
+    W: Workload,
+    F: FnMut() -> Result<W, String>,
+{
+    let nseg = schedule.segments.len();
+    let (user_every, user_keep, dir, scratch) = match &ckpt.policy {
+        Some(p) => (p.every_n_rounds, p.keep_last, p.dir.clone(), None),
+        None => {
+            let d = scratch_dir();
+            // keep_last 0 = keep everything: boundary files must
+            // survive until the driver consumes them.
+            (0, 0, d.clone(), Some(d))
+        }
+    };
+
+    // Where does the run start? Probe the user's resume snapshot (if
+    // any) for its round, then map that to a segment. The probe skips
+    // the roster check — the inner run re-validates against its own
+    // segment roster.
+    let probe = CkptConfig {
+        policy: None,
+        resume: ckpt.resume.clone(),
+        roster: None,
+    };
+    let first = match probe.load_resume(
+        schedule.capacity,
+        &schedule.name,
+        schedule.rounds,
+    )? {
+        Some(snap) => schedule.segment_index_for_resume(snap.round),
+        None => 0,
+    };
+
+    let mut resume = ckpt.resume.clone();
+    let mut result: Option<ExecTrace> = None;
+    for (i, seg) in schedule.segments.iter().enumerate().skip(first) {
+        let inner_policy = CheckpointPolicy {
+            every_n_rounds: user_every,
+            dir: dir.clone(),
+            keep_last: user_keep,
+            force_at: (i + 1 < nseg).then_some(seg.end),
+        };
+        let use_policy =
+            ckpt.policy.is_some() || inner_policy.force_at.is_some();
+        let inner = CkptConfig {
+            policy: use_policy.then(|| inner_policy.clone()),
+            resume: resume.take(),
+            roster: Some(roster_u32(&seg.roster)),
+        };
+        let mut w = make()?;
+        let trace = exec.run_tel(&mut w, &seg.seq, seg.end, &inner, tele)?;
+        if i + 1 == nseg {
+            result = Some(trace);
+            break;
+        }
+
+        // Splice: rewrite the boundary snapshot for the next roster.
+        let next = &schedule.segments[i + 1];
+        let path = inner_policy.path_for(seg.end);
+        let mut snap = Snapshot::load(&path).map_err(|e| {
+            format!(
+                "elastic splice at round {}: {e} (expected the forced \
+                 segment-end snapshot at {})",
+                seg.end,
+                path.display()
+            )
+        })?;
+        for &j in &next.joined {
+            let donors = warm_start_donors(next, &seg.roster, j);
+            let blobs: Vec<&[u8]> =
+                donors.iter().map(|&d| snap.nodes[d].as_slice()).collect();
+            snap.nodes[j] = w.node_warm_start(&blobs).map_err(|e| {
+                format!("warm start of joining node {j}: {e}")
+            })?;
+        }
+        snap.roster = Some(roster_u32(&next.roster));
+        inner_policy.save(&snap)?;
+        resume = Some(path);
+
+        for &d in &next.left {
+            tele.emit_with(|| Event::NodeLeft {
+                round: seg.end,
+                node: d,
+                reason: "scheduled",
+            });
+        }
+        for &j in &next.joined {
+            tele.emit_with(|| Event::NodeJoined { round: seg.end, node: j });
+        }
+        tele.emit_with(|| Event::RosterResequenced {
+            round: seg.end,
+            epoch: i + 1,
+            n_live: next.roster.len(),
+        });
+    }
+
+    if let Some(d) = scratch {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+    result.ok_or_else(|| "elastic schedule has no segments".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::gaussian_init;
+    use crate::exec::ConsensusWorkload;
+    use crate::topology::resequence::RosterEvent;
+    use crate::util::rng::Rng;
+
+    fn consensus_factory(
+        n: usize,
+        seed: u64,
+    ) -> impl FnMut() -> Result<ConsensusWorkload, String> {
+        move || {
+            let mut rng = Rng::new(seed);
+            Ok(ConsensusWorkload::new(gaussian_init(n, 1, &mut rng)))
+        }
+    }
+
+    #[test]
+    fn fixed_schedule_matches_plain_run() {
+        let n = 8;
+        let sched = ElasticSchedule::fixed(n, 1, 12).unwrap();
+        let exec = ExecutorKind::analytic();
+        let elastic = run_elastic(
+            &exec,
+            consensus_factory(n, 5),
+            &sched,
+            &CkptConfig::default(),
+            &Telemetry::off(),
+        )
+        .unwrap();
+        let mut w = consensus_factory(n, 5)().unwrap();
+        let plain =
+            exec.run(&mut w, &sched.segments[0].seq, 12).unwrap();
+        assert_eq!(elastic.finals, plain.finals);
+        assert_eq!(
+            elastic.run.records.len(),
+            plain.run.records.len()
+        );
+    }
+
+    #[test]
+    fn churn_run_keeps_survivors_exact_and_warm_starts_joiners() {
+        let n = 8;
+        let events =
+            [RosterEvent::leave(2, 6), RosterEvent::join(7, 6)];
+        let sched = ElasticSchedule::build(n, 1, 18, &events).unwrap();
+        assert!(sched.segments.len() >= 3, "{:?}", sched.segments.len());
+        let exec = ExecutorKind::analytic();
+        let trace = run_elastic(
+            &exec,
+            consensus_factory(n, 11),
+            &sched,
+            &CkptConfig::default(),
+            &Telemetry::off(),
+        )
+        .unwrap();
+        // Finite-time consensus holds per segment: by the end every
+        // live node of the final roster agrees exactly.
+        let last = sched.segments.last().unwrap();
+        let lead = trace.finals[last.roster[0]][0];
+        for &i in &last.roster {
+            assert!(
+                (trace.finals[i][0] - lead).abs() < 1e-9,
+                "live node {i}: {} vs {lead}",
+                trace.finals[i][0]
+            );
+        }
+        // Determinism: a second identical run is bit-identical.
+        let again = run_elastic(
+            &exec,
+            consensus_factory(n, 11),
+            &sched,
+            &CkptConfig::default(),
+            &Telemetry::off(),
+        )
+        .unwrap();
+        assert_eq!(trace.finals, again.finals);
+    }
+}

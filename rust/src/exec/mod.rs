@@ -92,6 +92,7 @@
 //! [`ExecutorKind`]).
 
 pub mod analytic;
+pub mod elastic;
 pub mod process;
 mod scratch;
 pub mod shard;
@@ -101,7 +102,8 @@ pub mod wire;
 pub mod workload;
 
 pub use analytic::AnalyticExecutor;
-pub use process::ProcessExecutor;
+pub use elastic::run_elastic;
+pub use process::{EvictSpec, ProcessExecutor};
 pub use shard::ShardPlan;
 pub use simnet::SimnetExecutor;
 pub use threaded::ThreadedExecutor;
@@ -312,6 +314,14 @@ pub enum ExecutorKind {
         /// Worker binary override (tests/examples; the CLI re-execs
         /// itself).
         worker_bin: Option<std::path::PathBuf>,
+        /// Heartbeat eviction (`--churn-evict`): on worker death,
+        /// evict the dead shard's nodes and resequence the survivors
+        /// at this Base-(k+1) degree (see
+        /// [`ProcessExecutor::evict`]).
+        evict: Option<usize>,
+        /// Fault injection (`--churn-kill <shard>@<round>`): that
+        /// worker aborts at the given round boundary.
+        kill: Option<(usize, usize)>,
     },
 }
 
@@ -333,6 +343,8 @@ impl ExecutorKind {
             shards,
             balanced: false,
             worker_bin: None,
+            evict: None,
+            kill: None,
         }
     }
 
@@ -405,9 +417,21 @@ impl ExecutorKind {
     /// Set the worker-process count (no-op for the other backends).
     pub fn with_shards(self, shards: usize) -> Self {
         match self {
-            ExecutorKind::Process { cost, balanced, worker_bin, .. } => {
-                ExecutorKind::Process { cost, shards, balanced, worker_bin }
-            }
+            ExecutorKind::Process {
+                cost,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+                ..
+            } => ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+            },
             other => other,
         }
     }
@@ -415,9 +439,67 @@ impl ExecutorKind {
     /// Choose degree-balanced sharding (no-op for the other backends).
     pub fn with_shard_balance(self, balanced: bool) -> Self {
         match self {
-            ExecutorKind::Process { cost, shards, worker_bin, .. } => {
-                ExecutorKind::Process { cost, shards, balanced, worker_bin }
-            }
+            ExecutorKind::Process {
+                cost,
+                shards,
+                worker_bin,
+                evict,
+                kill,
+                ..
+            } => ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+            },
+            other => other,
+        }
+    }
+
+    /// Enable heartbeat eviction at Base-(k+1) degree `k` on the
+    /// process backend (`--churn-evict`; no-op for the others).
+    pub fn with_evict(self, evict: Option<usize>) -> Self {
+        match self {
+            ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                kill,
+                ..
+            } => ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+            },
+            other => other,
+        }
+    }
+
+    /// Inject a worker abort at `(shard, round)` on the process backend
+    /// (`--churn-kill`; no-op for the others).
+    pub fn with_kill(self, kill: Option<(usize, usize)>) -> Self {
+        match self {
+            ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                ..
+            } => ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+            },
             other => other,
         }
     }
@@ -427,14 +509,21 @@ impl ExecutorKind {
     /// `basegraph` CLI (no-op for the other backends).
     pub fn with_worker_bin(self, bin: impl Into<std::path::PathBuf>) -> Self {
         match self {
-            ExecutorKind::Process { cost, shards, balanced, .. } => {
-                ExecutorKind::Process {
-                    cost,
-                    shards,
-                    balanced,
-                    worker_bin: Some(bin.into()),
-                }
-            }
+            ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                evict,
+                kill,
+                ..
+            } => ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin: Some(bin.into()),
+                evict,
+                kill,
+            },
             other => other,
         }
     }
@@ -449,9 +538,21 @@ impl ExecutorKind {
             ExecutorKind::Threaded { threads, .. } => {
                 ExecutorKind::Threaded { cost, threads }
             }
-            ExecutorKind::Process { shards, balanced, worker_bin, .. } => {
-                ExecutorKind::Process { cost, shards, balanced, worker_bin }
-            }
+            ExecutorKind::Process {
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+                ..
+            } => ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+            },
             ExecutorKind::Simnet(mut sim) => {
                 sim.links.override_cost(Some(cost.alpha), Some(cost.beta));
                 ExecutorKind::Simnet(sim)
@@ -515,10 +616,19 @@ impl ExecutorKind {
                 ThreadedExecutor::new(*cost, *threads)
                     .run_tel(w, seq, rounds, ckpt, tele)
             }
-            ExecutorKind::Process { cost, shards, balanced, worker_bin } => {
+            ExecutorKind::Process {
+                cost,
+                shards,
+                balanced,
+                worker_bin,
+                evict,
+                kill,
+            } => {
                 let mut ex = ProcessExecutor::new(*cost, *shards)
                     .with_balanced(*balanced);
                 ex.worker_bin = worker_bin.clone();
+                ex.evict = evict.map(|k| EvictSpec { k });
+                ex.fault_crash = *kill;
                 ex.ckpt = ckpt.clone();
                 ex.tele = tele.clone();
                 ex.run(w, seq, rounds)

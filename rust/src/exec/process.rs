@@ -102,6 +102,7 @@ use crate::repro::common::{
 };
 use crate::simnet::event::Trace;
 use crate::telemetry::{Event, Telemetry};
+use crate::topology::resequence::{embedded_base, MIN_LIVE};
 use crate::topology::GraphSequence;
 
 // Frame kinds of the coordinator ↔ worker protocol.
@@ -337,6 +338,13 @@ impl Drop for WorkerProcs {
     }
 }
 
+/// Parameters of heartbeat-timeout eviction ([`ProcessExecutor::evict`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictSpec {
+    /// Base-(k+1) maximum degree used to resequence the survivors.
+    pub k: usize,
+}
+
 /// One OS process per node shard behind the [`Executor`] trait: re-execs
 /// this binary in a hidden `--worker` mode and runs lock-step rounds over
 /// length-prefixed, checksummed socket frames (see the module docs).
@@ -378,6 +386,17 @@ pub struct ProcessExecutor {
     /// How many crash-recovery respawns one run may use before the
     /// failure propagates as an error.
     pub max_respawns: usize,
+    /// Heartbeat eviction (`--churn-evict`): on worker death with a
+    /// round-boundary snapshot available and the dead shard attributed,
+    /// that shard's live nodes are *evicted* instead of replayed — the
+    /// embedded Base-(k+1) sequence is rebuilt over the survivors
+    /// (rotation-aligned at the snapshot round), every shard respawns
+    /// at the next epoch, and the run resumes from the same consistent
+    /// cut. The evicted shard respawns too: its nodes carry on as
+    /// isolated ghosts (identity rows), exactly like a scheduled leave
+    /// at that boundary. Emits `node_left` (reason `"evicted"`) and
+    /// `roster_resequenced` telemetry.
+    pub evict: Option<EvictSpec>,
     /// Live-run telemetry. The coordinator is the only emitter (workers
     /// stay mute): besides the shared run/round/checkpoint events it
     /// reports worker lifecycle (spawn pid, death, respawn), one
@@ -400,6 +419,7 @@ impl ProcessExecutor {
             fault_crash_mid: None,
             ckpt: CkptConfig::default(),
             max_respawns: 2,
+            evict: None,
             tele: Telemetry::off(),
         }
     }
@@ -450,6 +470,7 @@ impl ProcessExecutor {
         k: usize,
         token: u64,
         wire_bytes: &mut u64,
+        culprit: &mut Option<usize>,
     ) -> Result<Vec<Conn>, String> {
         let mut slots: Vec<Option<Conn>> = (0..k).map(|_| None).collect();
         let deadline = Instant::now() + self.io_timeout;
@@ -494,6 +515,7 @@ impl ProcessExecutor {
                 {
                     for (s, c) in procs.children.iter_mut().enumerate() {
                         if let Ok(Some(status)) = c.try_wait() {
+                            *culprit = Some(s);
                             return Err(format!(
                                 "worker {s} exited during handshake \
                                  ({status})"
@@ -535,17 +557,22 @@ impl ProcessExecutor {
         cross: &[Vec<Vec<Vec<usize>>>],
         faults: (Option<(usize, usize)>, Option<(usize, usize)>),
         ckpt_every: usize,
+        ckpt_force: Option<usize>,
+        epoch: u32,
+        roster: &Option<Vec<u32>>,
         t0: Instant,
         wire_bytes: &mut u64,
         pair_bytes: &mut [u64],
         ledger: &mut CommLedger,
         records: &mut Vec<RoundRecord>,
         last_snap: &mut Option<Snapshot>,
+        culprit: &mut Option<usize>,
     ) -> Result<Vec<Vec<f64>>, String> {
         let n = seq.n;
         let k = self.shards.clamp(1, n);
         let start_round = last_snap.as_ref().map(|s| s.round).unwrap_or(0);
         let (fault_crash, fault_crash_mid) = faults;
+        *culprit = None;
 
         // 1. Listen, spawn, handshake.
         let (listener, addr) = Listener::bind(self.force_tcp)?;
@@ -576,6 +603,7 @@ impl ProcessExecutor {
             k,
             token,
             wire_bytes,
+            culprit,
         )?;
 
         // 2. Configuration: topology, shard map, workload spec, faults,
@@ -590,6 +618,7 @@ impl ProcessExecutor {
             cw.put_usize(rounds);
             cw.put_usize(k);
             cw.put_usize(s);
+            cw.put_u32(epoch);
             for &o in &splan.owner {
                 cw.put_u32(o as u32);
             }
@@ -606,6 +635,7 @@ impl ProcessExecutor {
             };
             cw.put_u64(crash_mid);
             cw.put_u64(ckpt_every as u64);
+            cw.put_u64(ckpt_force.map(|r| r as u64).unwrap_or(u64::MAX));
             cw.put_u64(start_round as u64);
             match last_snap.as_ref().filter(|_| start_round > 0) {
                 Some(snap) => {
@@ -615,6 +645,18 @@ impl ProcessExecutor {
                     for i in members {
                         cw.put_u32(i as u32);
                         cw.put_bytes(&snap.nodes[i]);
+                    }
+                }
+                None => cw.put_usize(0),
+            }
+            // Live roster (0 = full): the worker validates the subset;
+            // membership itself is enforced by the plan's identity rows
+            // (ghost nodes simply have no neighbors).
+            match roster {
+                Some(ids) => {
+                    cw.put_usize(ids.len());
+                    for &i in ids {
+                        cw.put_u32(i);
                     }
                 }
                 None => cw.put_usize(0),
@@ -644,9 +686,11 @@ impl ProcessExecutor {
             obs.collect(
                 &mut conns,
                 INIT_ROUND,
+                epoch,
                 &splan.owner,
                 false,
                 wire_bytes,
+                culprit,
             )?;
             if let Some(mut rec) = w.initial_record_wire(&obs.slots)? {
                 rec.wall_seconds = t0.elapsed().as_secs_f64();
@@ -675,7 +719,10 @@ impl ProcessExecutor {
                     let buf = &mut fwd_bufs[fwd_dst.len()];
                     let before = *wire_bytes;
                     let kind = recv_into(&mut conns[s], buf, wire_bytes)
-                        .map_err(|e| format!("round {r}: shard {s}: {e}"))?;
+                        .map_err(|e| {
+                            *culprit = Some(s);
+                            format!("round {r}: shard {s}: {e}")
+                        })?;
                     if kind != FRAME_BUNDLE {
                         return Err(format!(
                             "round {r}: shard {s}: expected a payload \
@@ -683,6 +730,14 @@ impl ProcessExecutor {
                         ));
                     }
                     let mut br = ByteReader::new(buf);
+                    let fe = br.get_u32()?;
+                    if fe != epoch {
+                        *culprit = Some(s);
+                        return Err(format!(
+                            "round {r}: shard {s}: stale-epoch bundle \
+                             (frame epoch {fe}, coordinator at {epoch})"
+                        ));
+                    }
                     let fr = br.get_u32()? as usize;
                     let fsrc = br.get_u32()? as usize;
                     let fdst = br.get_u32()? as usize;
@@ -706,6 +761,7 @@ impl ProcessExecutor {
                 let before = *wire_bytes;
                 send(&mut conns[dst], FRAME_BUNDLE, payload, wire_bytes)
                     .map_err(|e| {
+                        *culprit = Some(dst);
                         format!("round {r}: forward to shard {dst}: {e}")
                     })?;
                 let out_bytes = *wire_bytes - before;
@@ -721,7 +777,8 @@ impl ProcessExecutor {
             }
 
             let eval = w.is_eval(r, rounds);
-            let due = ckpt_every > 0 && (r + 1) % ckpt_every == 0;
+            let due = (ckpt_every > 0 && (r + 1) % ckpt_every == 0)
+                || ckpt_force == Some(r + 1);
             // Heartbeat ages are sampled just before the blocking OBS
             // collect — the point in the round where a silent worker
             // would stall the coordinator. Gated so the off path never
@@ -735,8 +792,16 @@ impl ProcessExecutor {
             } else {
                 Vec::new()
             };
-            obs.collect(&mut conns, r as u32, &splan.owner, due, wire_bytes)
-                .map_err(|e| format!("round {r}: {e}"))?;
+            obs.collect(
+                &mut conns,
+                r as u32,
+                epoch,
+                &splan.owner,
+                due,
+                wire_bytes,
+                culprit,
+            )
+            .map_err(|e| format!("round {r}: {e}"))?;
             for (s, last) in last_heard.iter_mut().enumerate() {
                 *last = Instant::now();
                 self.tele.emit_with(|| Event::WorkerHeartbeat {
@@ -778,6 +843,7 @@ impl ProcessExecutor {
                     records: records.clone(),
                     clock: 0.0,
                     rng: None,
+                    roster: roster.clone(),
                 };
                 if let Some(pol) = self.ckpt.policy.as_ref() {
                     let path = pol.save(&snap)?;
@@ -793,8 +859,10 @@ impl ProcessExecutor {
         // 6. Finals, shutdown, reap.
         let mut fin: Vec<Option<Vec<u8>>> = vec![None; n];
         for (s, conn) in conns.iter_mut().enumerate() {
-            let (kind, payload) = recv(conn, wire_bytes)
-                .map_err(|e| format!("finals: shard {s}: {e}"))?;
+            let (kind, payload) = recv(conn, wire_bytes).map_err(|e| {
+                *culprit = Some(s);
+                format!("finals: shard {s}: {e}")
+            })?;
             if kind != FRAME_FINALS {
                 return Err(format!(
                     "finals: shard {s}: got frame kind {kind}"
@@ -862,26 +930,43 @@ impl ObsBufs {
     /// Read one OBS frame from every shard and assemble per-node snapshot
     /// blobs in node order, reusing every buffer. `expect_states` must
     /// match the workers' checkpoint cadence: both sides derive it from
-    /// the same `(r + 1) % every == 0` rule, so a mismatch is a desync.
+    /// the same `(r + 1) % every == 0 || force_at == r + 1` rule, so a
+    /// mismatch is a desync. Frames from another worker generation
+    /// (`epoch`) are rejected as stale; `culprit` records the shard a
+    /// failure is attributable to, feeding heartbeat eviction.
+    #[allow(clippy::too_many_arguments)] // frame codec; two call sites
     fn collect(
         &mut self,
         conns: &mut [Conn],
         marker: u32,
+        epoch: u32,
         owner: &[usize],
         expect_states: bool,
         wire_bytes: &mut u64,
+        culprit: &mut Option<usize>,
     ) -> Result<(), String> {
         let n = self.slots.len();
         self.seen.fill(false);
         for (s, conn) in conns.iter_mut().enumerate() {
             let kind = recv_into(conn, &mut self.frame, wire_bytes)
-                .map_err(|e| format!("shard {s}: {e}"))?;
+                .map_err(|e| {
+                    *culprit = Some(s);
+                    format!("shard {s}: {e}")
+                })?;
             if kind != FRAME_OBS {
                 return Err(format!(
                     "shard {s}: expected observation frame, got kind {kind}"
                 ));
             }
             let mut r = ByteReader::new(&self.frame);
+            let fe = r.get_u32()?;
+            if fe != epoch {
+                *culprit = Some(s);
+                return Err(format!(
+                    "shard {s}: stale-epoch observation (frame epoch \
+                     {fe}, coordinator at {epoch})"
+                ));
+            }
             let got = r.get_u32()?;
             if got != marker {
                 return Err(format!(
@@ -997,6 +1082,8 @@ impl Executor for ProcessExecutor {
             .as_ref()
             .map(|p| p.every_n_rounds)
             .unwrap_or(0);
+        let ckpt_force =
+            self.ckpt.policy.as_ref().and_then(|p| p.force_at);
         // Measured wire bytes per (src, dst) shard pair, flat k×k. Counts
         // both hops of every routed bundle and survives respawns (like
         // `wire_bytes`: real traffic, including the attempts that died).
@@ -1019,22 +1106,37 @@ impl Executor for ProcessExecutor {
         let w: &W = w;
         let mut faults = (self.fault_crash, self.fault_crash_mid);
         let mut respawns_left = self.max_respawns;
+        // Epoch fencing state: every (re)spawned worker generation gets
+        // the next epoch, and frames stamped with an older one are
+        // rejected as stale on both sides of the protocol. Heartbeat
+        // eviction may additionally swap in a resequenced topology and
+        // a reduced roster between attempts.
+        let mut epoch: u32 = 0;
+        let mut cur_roster: Option<Vec<u32>> = self.ckpt.roster.clone();
+        let mut cur_seq: Option<GraphSequence> = None;
+        let mut cross = cross;
+        let mut culprit: Option<usize> = None;
         loop {
+            let sref = cur_seq.as_ref().unwrap_or(seq);
             match self.run_attempt(
                 w,
-                seq,
+                sref,
                 rounds,
                 &spec,
                 &splan,
                 &cross,
                 faults,
                 ckpt_every,
+                ckpt_force,
+                epoch,
+                &cur_roster,
                 t0,
                 &mut wire_bytes,
                 &mut pair_bytes,
                 &mut ledger,
                 &mut records,
                 &mut last_snap,
+                &mut culprit,
             ) {
                 Ok(finals) => {
                     ledger.bytes_on_wire = wire_bytes;
@@ -1070,23 +1172,89 @@ impl Executor for ProcessExecutor {
                     });
                 }
                 Err(e) => {
-                    let snap = match (&last_snap, respawns_left) {
-                        (Some(s), left) if left > 0 => s,
-                        _ => return Err(e),
-                    };
-                    let resume_round = snap.round;
+                    let (resume_round, snap_ledger, snap_records) =
+                        match (&last_snap, respawns_left) {
+                            (Some(s), left) if left > 0 => (
+                                s.round,
+                                s.ledger.clone(),
+                                s.records.clone(),
+                            ),
+                            _ => return Err(e),
+                        };
                     self.tele.emit_with(|| Event::WorkerDied {
                         error: e.clone(),
                         respawns_left,
                     });
                     respawns_left -= 1;
+                    epoch += 1;
+                    // Heartbeat eviction: with a policy set and the dead
+                    // shard attributed, its live nodes leave the roster
+                    // and the Base-(k+1) sequence is rebuilt over the
+                    // survivors, rotation-aligned at the snapshot round.
+                    // The evicted shard still respawns — its nodes carry
+                    // on as isolated ghosts (identity rows), exactly
+                    // like a scheduled leave at the same boundary.
+                    if let (Some(ev), Some(dead)) = (&self.evict, culprit)
+                    {
+                        let live: Vec<u32> = cur_roster
+                            .clone()
+                            .unwrap_or_else(|| (0..n as u32).collect());
+                        let (gone, kept): (Vec<u32>, Vec<u32>) =
+                            live.iter().copied().partition(|&i| {
+                                splan.owner[i as usize] == dead
+                            });
+                        if !gone.is_empty() && kept.len() >= MIN_LIVE {
+                            let ids: Vec<usize> = kept
+                                .iter()
+                                .map(|&i| i as usize)
+                                .collect();
+                            let new_seq = embedded_base(
+                                n,
+                                &ids,
+                                ev.k,
+                                resume_round,
+                                &seq.name,
+                            )?;
+                            cross = new_seq
+                                .phases
+                                .iter()
+                                .map(|p| {
+                                    cross_shard_sources(
+                                        p,
+                                        &splan.owner,
+                                        k,
+                                    )
+                                })
+                                .collect();
+                            for &d in &gone {
+                                self.tele.emit_with(|| Event::NodeLeft {
+                                    round: resume_round,
+                                    node: d as usize,
+                                    reason: "evicted",
+                                });
+                            }
+                            self.tele.emit_with(|| {
+                                Event::RosterResequenced {
+                                    round: resume_round,
+                                    epoch: epoch as usize,
+                                    n_live: kept.len(),
+                                }
+                            });
+                            cur_roster = Some(kept);
+                            cur_seq = Some(new_seq);
+                            if let Some(snap) = last_snap.as_mut() {
+                                snap.roster = cur_roster.clone();
+                            }
+                        }
+                    }
                     self.tele.emit_with(|| Event::WorkerRespawned {
                         start_round: resume_round,
                         attempt: self.max_respawns - respawns_left,
                     });
                     faults = (None, None);
-                    ledger = snap.ledger.clone();
-                    records = snap.records.clone();
+                    ledger = snap_ledger;
+                    records = snap_records;
+                    culprit = None;
                 }
             }
         }
@@ -1137,6 +1305,12 @@ struct WorkerCtx {
     /// Checkpoint cadence (0 = off): at due boundaries the OBS frame
     /// carries each member node's [`Workload::node_ckpt`] blob.
     ckpt_every: usize,
+    /// One-shot forced checkpoint round (elastic segment ends): ORed
+    /// into the due rule exactly like the coordinator's.
+    ckpt_force: Option<usize>,
+    /// Worker generation, fenced on every BUNDLE/OBS frame: frames
+    /// stamped with another generation are rejected as stale.
+    epoch: u32,
     /// First round to execute; > 0 means a resume — skip the INIT
     /// observation (the coordinator restored that history) and restore
     /// member nodes from `resume` before the loop.
@@ -1191,6 +1365,7 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
     if echo != shard {
         return Err(format!("config addressed to shard {echo}, I am {shard}"));
     }
+    let epoch = r.get_u32()?;
     let mut owner = Vec::with_capacity(n);
     for _ in 0..n {
         owner.push(r.get_u32()? as usize);
@@ -1200,6 +1375,8 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
     let crash = r.get_u64()?;
     let crash_mid = r.get_u64()?;
     let ckpt_every = r.get_u64()? as usize;
+    let force_raw = r.get_u64()?;
+    let ckpt_force = (force_raw != u64::MAX).then_some(force_raw as usize);
     let start_round = r.get_u64()? as usize;
     let resume_count = r.get_usize()?;
     let mut resume = Vec::with_capacity(resume_count);
@@ -1207,6 +1384,21 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
         let node = r.get_u32()? as usize;
         let blob = r.get_bytes()?.to_vec();
         resume.push((node, blob));
+    }
+    // Live roster (0 entries = full). Validated here so a joiner
+    // configured against the wrong capacity fails cleanly; membership
+    // itself is enforced by the plan's identity rows.
+    let roster_count = r.get_usize()?;
+    let mut prev_id: Option<u32> = None;
+    for _ in 0..roster_count {
+        let id = r.get_u32()?;
+        if id as usize >= n || prev_id.is_some_and(|p| p >= id) {
+            return Err(format!(
+                "config roster is not a strictly ascending subset of \
+                 0..{n} (id {id})"
+            ));
+        }
+        prev_id = Some(id);
     }
     r.expect_end()?;
     let mut sr = ByteReader::new(seq_bytes);
@@ -1225,6 +1417,8 @@ fn run_worker(conn: &mut Conn, shard: usize) -> Result<(), String> {
         crash_round: (crash != u64::MAX).then_some(crash as usize),
         crash_mid: (crash_mid != u64::MAX).then_some(crash_mid as usize),
         ckpt_every,
+        ckpt_force,
+        epoch,
         start_round,
         resume,
     };
@@ -1268,12 +1462,14 @@ fn send_obs<W: Workload>(
     members: &[usize],
     nodes: &[Option<W::Node>],
     marker: u32,
+    epoch: u32,
     full: bool,
     states: bool,
     ow: &mut ByteWriter,
     sink: &mut u64,
 ) -> Result<(), String> {
     ow.clear();
+    ow.put_u32(epoch);
     ow.put_u32(marker);
     ow.put_usize(members.len());
     for &i in members {
@@ -1381,7 +1577,7 @@ fn worker_loop<W: Workload>(
 
     if ctx.start_round == 0 {
         send_obs(
-            w, conn, &members, &nodes, INIT_ROUND, false, false,
+            w, conn, &members, &nodes, INIT_ROUND, ctx.epoch, false, false,
             &mut frame_w, &mut sink,
         )?;
     }
@@ -1421,6 +1617,7 @@ fn worker_loop<W: Workload>(
             }
             let srcs = &xs[me][t];
             frame_w.clear();
+            frame_w.put_u32(ctx.epoch);
             frame_w.put_u32(r as u32);
             frame_w.put_u32(me as u32);
             frame_w.put_u32(t as u32);
@@ -1467,6 +1664,14 @@ fn worker_loop<W: Workload>(
                 ));
             }
             let mut br = ByteReader::new(&frame_buf);
+            let fe = br.get_u32()?;
+            if fe != ctx.epoch {
+                return Err(format!(
+                    "round {r}: stale-epoch bundle (frame epoch {fe}, \
+                     worker at {})",
+                    ctx.epoch
+                ));
+            }
             let fr = br.get_u32()? as usize;
             let fsrc = br.get_u32()? as usize;
             let fdst = br.get_u32()? as usize;
@@ -1528,10 +1733,11 @@ fn worker_loop<W: Workload>(
         }
 
         let eval = w.is_eval(r, ctx.rounds);
-        let due = ctx.ckpt_every > 0 && (r + 1) % ctx.ckpt_every == 0;
+        let due = (ctx.ckpt_every > 0 && (r + 1) % ctx.ckpt_every == 0)
+            || ctx.ckpt_force == Some(r + 1);
         send_obs(
-            w, conn, &members, &nodes, r as u32, eval, due, &mut frame_w,
-            &mut sink,
+            w, conn, &members, &nodes, r as u32, ctx.epoch, eval, due,
+            &mut frame_w, &mut sink,
         )?;
     }
 

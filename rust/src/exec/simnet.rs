@@ -357,6 +357,7 @@ impl Executor for SimnetExecutor {
                                 records: records.clone(),
                                 clock,
                                 rng: Some((s, spare)),
+                                roster: ckpt.roster.clone(),
                             };
                             let path = pol.save(&snap)?;
                             tele.emit_with(|| Event::CheckpointWritten {

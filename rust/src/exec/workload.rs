@@ -326,6 +326,21 @@ pub trait Workload: Sync {
     ) -> Result<(), String> {
         Err(not_ckpt(self.label()))
     }
+
+    /// Build a joiner's initial state from its warm-start donors — the
+    /// [`Workload::node_ckpt`] blobs of the surviving neighbors the
+    /// elastic driver selected (ascending node id; see
+    /// `topology::resequence::warm_start_donors`). Returns
+    /// `node_ckpt`-shaped bytes for the joiner, which the driver feeds
+    /// to [`Workload::node_restore`]. The contract is an elementwise
+    /// average accumulated in donor order (deterministic across
+    /// backends); per-donor transients that make no sense averaged
+    /// (error-feedback residuals, sampler cursors) are dropped, so the
+    /// joiner starts them fresh. The default refuses, so workloads opt
+    /// in explicitly.
+    fn node_warm_start(&self, _donors: &[&[u8]]) -> Result<Vec<u8>, String> {
+        Err(not_warm(self.label()))
+    }
 }
 
 fn not_wire(label: String) -> String {
@@ -339,6 +354,13 @@ fn not_ckpt(label: String) -> String {
     format!(
         "workload {label:?} has no checkpoint form — resume needs the \
          node_ckpt/node_restore codec (see crate::ckpt)"
+    )
+}
+
+fn not_warm(label: String) -> String {
+    format!(
+        "workload {label:?} has no warm-start rule — elastic joins need \
+         node_warm_start (see topology::resequence)"
     )
 }
 
@@ -605,6 +627,38 @@ impl Workload for ConsensusWorkload {
         let mut r = ByteReader::new(bytes);
         r.get_vec_f64_into(node)?;
         r.expect_end()
+    }
+
+    fn node_warm_start(&self, donors: &[&[u8]]) -> Result<Vec<u8>, String> {
+        if donors.is_empty() {
+            return Err("warm start needs at least one donor".into());
+        }
+        let mut avg: Vec<f64> = Vec::new();
+        for (k, blob) in donors.iter().enumerate() {
+            let mut r = ByteReader::new(blob);
+            let v = r.get_vec_f64()?;
+            r.expect_end()?;
+            if k == 0 {
+                avg = v;
+            } else if v.len() != avg.len() {
+                return Err(format!(
+                    "warm-start donor {k} has {} entries, donor 0 has {}",
+                    v.len(),
+                    avg.len()
+                ));
+            } else {
+                for (a, x) in avg.iter_mut().zip(v) {
+                    *a += x;
+                }
+            }
+        }
+        let inv = 1.0 / donors.len() as f64;
+        for a in &mut avg {
+            *a *= inv;
+        }
+        let mut w = ByteWriter::new();
+        w.put_vec_f64(&avg);
+        Ok(w.finish())
     }
 }
 
@@ -1181,6 +1235,113 @@ impl Workload for TrainingWorkload<'_> {
         }
         r.expect_end()?;
         node.opt.state_load(OptState { vecs, flags })
+    }
+
+    // Warm start: elementwise average of the donors' params, last_loss,
+    // pending message slots and optimizer vectors (f32 sums accumulated
+    // in donor order, then divided — deterministic on every backend);
+    // optimizer flags come from the first donor. The tagged tail
+    // sections (error-feedback residuals, sampler cursor) are per-donor
+    // transients and are dropped — the joiner starts them fresh.
+    fn node_warm_start(&self, donors: &[&[u8]]) -> Result<Vec<u8>, String> {
+        if donors.is_empty() {
+            return Err("warm start needs at least one donor".into());
+        }
+        struct Prefix {
+            params: Vec<f32>,
+            last_loss: f64,
+            pending: Vec<Vec<f32>>,
+            vecs: Vec<Vec<f32>>,
+            flags: Vec<bool>,
+        }
+        fn prefix(blob: &[u8]) -> Result<Prefix, String> {
+            let mut r = ByteReader::new(blob);
+            let params = r.get_vec_f32()?;
+            let last_loss = r.get_f64()?;
+            let slots = r.get_usize()?;
+            let mut pending = Vec::with_capacity(slots.min(1 << 10));
+            for _ in 0..slots {
+                pending.push(r.get_vec_f32()?);
+            }
+            let nv = r.get_usize()?;
+            let mut vecs = Vec::with_capacity(nv.min(1 << 10));
+            for _ in 0..nv {
+                vecs.push(r.get_vec_f32()?);
+            }
+            let nf = r.get_usize()?;
+            let mut flags = Vec::with_capacity(nf.min(1 << 10));
+            for _ in 0..nf {
+                flags.push(r.get_u8()? != 0);
+            }
+            // Tagged tails (EF residuals, sampler cursor) deliberately
+            // left unread: they are not averaged.
+            Ok(Prefix { params, last_loss, pending, vecs, flags })
+        }
+        fn add(acc: &mut [f32], x: &[f32], what: &str) -> Result<(), String> {
+            if acc.len() != x.len() {
+                return Err(format!(
+                    "warm-start donors disagree on {what} length \
+                     ({} vs {})",
+                    acc.len(),
+                    x.len()
+                ));
+            }
+            for (a, &v) in acc.iter_mut().zip(x) {
+                *a += v;
+            }
+            Ok(())
+        }
+        let mut acc = prefix(donors[0])?;
+        for blob in &donors[1..] {
+            let p = prefix(blob)?;
+            add(&mut acc.params, &p.params, "params")?;
+            acc.last_loss += p.last_loss;
+            if p.pending.len() != acc.pending.len()
+                || p.vecs.len() != acc.vecs.len()
+            {
+                return Err(
+                    "warm-start donors disagree on slot counts".into()
+                );
+            }
+            for (a, x) in acc.pending.iter_mut().zip(&p.pending) {
+                add(a, x, "pending slot")?;
+            }
+            for (a, x) in acc.vecs.iter_mut().zip(&p.vecs) {
+                add(a, x, "optimizer vector")?;
+            }
+        }
+        let inv32 = 1.0 / donors.len() as f32;
+        let inv64 = 1.0 / donors.len() as f64;
+        for a in &mut acc.params {
+            *a *= inv32;
+        }
+        acc.last_loss *= inv64;
+        for slot in &mut acc.pending {
+            for a in slot.iter_mut() {
+                *a *= inv32;
+            }
+        }
+        for v in &mut acc.vecs {
+            for a in v.iter_mut() {
+                *a *= inv32;
+            }
+        }
+        let mut w = ByteWriter::new();
+        w.put_vec_f32(&acc.params);
+        w.put_f64(acc.last_loss);
+        w.put_usize(acc.pending.len());
+        for slot in &acc.pending {
+            w.put_vec_f32(slot);
+        }
+        w.put_usize(acc.vecs.len());
+        for v in &acc.vecs {
+            w.put_vec_f32(v);
+        }
+        w.put_usize(acc.flags.len());
+        for &f in &acc.flags {
+            w.put_u8(u8::from(f));
+        }
+        Ok(w.finish())
     }
 }
 
@@ -1927,5 +2088,67 @@ mod tests {
         }
         assert_eq!(blob, lw.finish(), "identity blob layout drifted");
         w.node_restore(&mut nodes[0], &blob).unwrap();
+    }
+
+    #[test]
+    fn consensus_warm_start_averages_donors() {
+        let init = vec![vec![1.0, 3.0], vec![2.0, -1.0], vec![6.0, 4.0]];
+        let w = ConsensusWorkload::new(init.clone());
+        let blobs: Vec<Vec<u8>> =
+            init.iter().map(|x| w.node_ckpt(x).unwrap()).collect();
+        let donors: Vec<&[u8]> = blobs.iter().map(|b| b.as_slice()).collect();
+        let blob = w.node_warm_start(&donors).unwrap();
+        let mut joiner = vec![0.0; 2];
+        w.node_restore(&mut joiner, &blob).unwrap();
+        assert_eq!(joiner, vec![3.0, 2.0]);
+        // One donor = an exact copy; zero donors is a clean error.
+        let one = w.node_warm_start(&donors[..1]).unwrap();
+        assert_eq!(one, blobs[0]);
+        assert!(w.node_warm_start(&[]).is_err());
+        // Shape-mismatched donors are rejected.
+        let short = w.node_ckpt(&vec![1.0]).unwrap();
+        assert!(w
+            .node_warm_start(&[blobs[0].as_slice(), short.as_slice()])
+            .is_err());
+    }
+
+    #[test]
+    fn training_warm_start_averages_and_drops_transients() {
+        // Int8 codec leaves EF residual tails on the donor blobs; the
+        // warm-started joiner must average the persistent state and
+        // start the transients fresh.
+        let cfg = TrainConfig {
+            optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+            threads: 1,
+            ..Default::default()
+        };
+        let (model, data) = quadratic_fixed_targets(3, 4, 11);
+        let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+            .with_codec(Codec::Int8);
+        let mut nodes = w.init_nodes(3).unwrap();
+        for (i, node) in nodes.iter_mut().enumerate() {
+            w.local_step(node, i, 0).unwrap();
+        }
+        let blobs: Vec<Vec<u8>> = nodes[..2]
+            .iter()
+            .map(|s| w.node_ckpt(s).unwrap())
+            .collect();
+        let donors: Vec<&[u8]> = blobs.iter().map(|b| b.as_slice()).collect();
+        let blob = w.node_warm_start(&donors).unwrap();
+        w.node_restore(&mut nodes[2], &blob).unwrap();
+        for j in 0..4 {
+            let want = (nodes[0].params[j] + nodes[1].params[j]) / 2.0;
+            assert_eq!(nodes[2].params[j], want);
+        }
+        assert_eq!(
+            nodes[2].last_loss,
+            (nodes[0].last_loss + nodes[1].last_loss) / 2.0
+        );
+        assert!(
+            nodes[2].ef.iter().all(|e| e.iter().all(|&x| x == 0.0)),
+            "EF residuals must start fresh on the joiner"
+        );
+        // Warm start is deterministic: same donors, same bytes.
+        assert_eq!(blob, w.node_warm_start(&donors).unwrap());
     }
 }

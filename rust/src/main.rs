@@ -25,9 +25,11 @@ use basegraph::optim::OptimizerKind;
 use basegraph::repro;
 use basegraph::repro::common::{
     classification_workload, print_table, run_training_exec_codec_tel,
-    Engine,
+    run_training_exec_elastic, Engine,
 };
-use basegraph::simnet::{CodecPolicy, ExecMode, LinkModel, Scenario};
+use basegraph::simnet::{
+    ChurnPreset, ChurnSpec, CodecPolicy, ExecMode, LinkModel, Scenario,
+};
 use basegraph::telemetry::TelemetryConfig;
 use basegraph::topology::{self, TopologyKind};
 use basegraph::train::TrainConfig;
@@ -54,8 +56,11 @@ USAGE:
                       [--checkpoint-keep K] [--resume CKPT]
                       [--telemetry FILE|-] [--telemetry-http ADDR]
                       [--codec identity|bf16|f16|int8|topk[:permille]]
+                      [--churn light|heavy|partition] [--churn-seed S]
+                      [--churn-evict K] [--churn-kill SHARD@ROUND]
                       [--out results]
-  basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|hostile]
+  basegraph simnet    [--scenario ideal|lan|wan|straggler|lossy|racks|
+                                  hostile|churn-light|churn-heavy|partition]
                       [--mode bsp|async] [--workload consensus|train]
                       [--executor analytic|simnet|threaded|process]
                       [--threads N] [--shards N]
@@ -64,6 +69,8 @@ USAGE:
                       [--alpha SEC] [--beta SEC_PER_BYTE] [--drop-rate P]
                       [--straggler-factor F]
                       [--codec C] [--codec-remote C] [--codec-rack-size N]
+                      [--churn light|heavy|partition] [--churn-seed S]
+                      [--churn-evict K] [--churn-kill SHARD@ROUND]
                       [--checkpoint-every N] [--checkpoint-dir DIR]
                       [--checkpoint-keep K] [--resume CKPT]
                       [--telemetry FILE|-] [--telemetry-http ADDR]
@@ -119,6 +126,18 @@ Codecs: --codec compresses every gossip payload at the source (identity =
   transcode payloads crossing rack boundaries (N=0 = every link) through
   a heavier codec, stateless per link. In `bench`, --codec takes a
   comma-separated roster for the codec cells.
+Churn: --churn <preset> (or a churn-* simnet scenario) runs the workload
+  under elastic membership — a seeded leave/join trace (--churn-seed,
+  default = run seed) resolved into deterministic roster segments, the
+  Base-(k+1) sequence resequenced online at every splice and joiners
+  warm-started from surviving neighbors. Requires a base-<m> topology
+  and bulk-synchronous execution; nodes outside the roster compute solo
+  (ghost cohort) and rejoin by warm start. On --executor process,
+  --churn-evict K additionally evicts a dead worker's nodes on
+  heartbeat timeout and resequences the survivors at degree K, and
+  --churn-kill SHARD@ROUND aborts one worker at a round boundary (fault
+  injection for recovery drills). Events stream as node_left /
+  node_joined / roster_resequenced telemetry.
 Telemetry: --telemetry FILE streams one NDJSON event per line (`-` =
   stdout; versioned schema, byte-identical across same-seed runs modulo
   wall-clock fields); --telemetry-http ADDR serves GET /status (JSON
@@ -351,6 +370,82 @@ fn cmd_consensus(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse the `--churn-*` surface shared by `train` and `simnet`: the
+/// preset override (`--churn`, re-seeded by `--churn-seed`), the
+/// heartbeat-eviction degree (`--churn-evict`) and the fault-injection
+/// kill point (`--churn-kill <shard>@<round>`).
+#[allow(clippy::type_complexity)]
+fn churn_args(
+    args: &Args,
+    default_seed: u64,
+) -> Result<
+    (Option<ChurnSpec>, Option<usize>, Option<(usize, usize)>),
+    String,
+> {
+    let spec = match args.get("churn") {
+        None => None,
+        Some(p) => Some(ChurnSpec::new(
+            ChurnPreset::parse(p)?,
+            args.u64_or("churn-seed", default_seed)?,
+        )),
+    };
+    let evict = match args.get("churn-evict") {
+        None => None,
+        Some(_) => {
+            let k = args.usize_or("churn-evict", 0)?;
+            if k == 0 {
+                return Err("--churn-evict must be >= 1".into());
+            }
+            Some(k)
+        }
+    };
+    let kill = match args.get("churn-kill") {
+        None => None,
+        Some(v) => {
+            let (s, r) = v.split_once('@').ok_or_else(|| {
+                format!("--churn-kill expects <shard>@<round>, got {v:?}")
+            })?;
+            let shard = s.trim().parse::<usize>().map_err(|_| {
+                format!("--churn-kill shard: expected integer, got {s:?}")
+            })?;
+            let round = r.trim().parse::<usize>().map_err(|_| {
+                format!("--churn-kill round: expected integer, got {r:?}")
+            })?;
+            Some((shard, round))
+        }
+    };
+    Ok((spec, evict, kill))
+}
+
+/// Resolve a churn spec into the elastic schedule for one topology.
+/// Online resequencing rebuilds the Base-(k+1) construction per roster,
+/// so only `base-<m>` topologies qualify.
+fn churn_schedule(
+    kind: &TopologyKind,
+    n: usize,
+    rounds: usize,
+    spec: ChurnSpec,
+) -> Result<basegraph::topology::resequence::ElasticSchedule, String> {
+    let k = match kind {
+        TopologyKind::Base { m } if *m >= 2 => *m - 1,
+        other => {
+            return Err(format!(
+                "churn runs resequence online via the Base-(k+1) \
+                 construction, which needs a base-<m> topology (m >= 2); \
+                 got {}",
+                other.label()
+            ))
+        }
+    };
+    let trace = spec.resolve(n, rounds);
+    basegraph::topology::resequence::ElasticSchedule::build(
+        n,
+        k,
+        rounds,
+        &trace.events,
+    )
+}
+
 fn cmd_train(args: &Args) -> Result<(), String> {
     let kind = TopologyKind::parse(&args.str_or("topo", "base-2"))?;
     let n = args.usize_or("n", 25)?;
@@ -371,7 +466,11 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     };
     // Execution backend: ideal analytic loop (default), event-driven
     // simnet, real threads, or one worker process per node shard.
-    let exec = ExecutorKind::from_args(args, "analytic")?.with_cost(cost);
+    let (churn, evict, kill) = churn_args(args, seed)?;
+    let exec = ExecutorKind::from_args(args, "analytic")?
+        .with_cost(cost)
+        .with_evict(evict)
+        .with_kill(kill);
     let codec = Codec::parse(&args.str_or("codec", "identity"))?;
     let ckpt = CkptConfig::from_args(args)?;
     let tsession = TelemetryConfig::from_args(args).session()?;
@@ -388,10 +487,26 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         exec.label(),
         codec.label()
     );
-    let res = run_training_exec_codec_tel(
-        &workload, kind, n, alpha, optimizer, rounds, lr, seed, &exec,
-        &ckpt, &tsession.run("")?, codec,
-    )?;
+    let res = match churn {
+        Some(spec) => {
+            let schedule = churn_schedule(&kind, n, rounds, spec)?;
+            println!(
+                "churn preset {} (seed {}): {} roster segment(s) over \
+                 {rounds} rounds",
+                spec.preset.label(),
+                spec.seed,
+                schedule.segments.len()
+            );
+            run_training_exec_elastic(
+                &workload, &schedule, alpha, optimizer, lr, seed, &exec,
+                &ckpt, &tsession.run("")?, codec,
+            )?
+        }
+        None => run_training_exec_codec_tel(
+            &workload, kind, n, alpha, optimizer, rounds, lr, seed, &exec,
+            &ckpt, &tsession.run("")?, codec,
+        )?,
+    };
     let path = format!(
         "{out_dir}/train_{}_n{n}.csv",
         args.str_or("topo", "base-2")
@@ -530,10 +645,33 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
     } else if args.get("codec-rack-size").is_some() {
         return Err("--codec-rack-size requires --codec-remote".into());
     }
-    let topos = args.str_list_or(
-        "topos",
-        &["ring", "exp", "onepeer-exp", "base-2", "base-4"],
-    );
+    // Elastic membership: churn-* scenarios carry a seeded trace spec;
+    // --churn layers one over any scenario, and --churn-seed re-seeds
+    // either form. The elastic driver resolves the spec against each
+    // run's (n, rounds) — see docs/ARCHITECTURE.md, "Elastic membership
+    // & resequencing".
+    let (churn_flag, evict, kill) = churn_args(args, seed)?;
+    if let Some(spec) = churn_flag {
+        sim.churn = Some(spec);
+    } else if let Some(spec) = sim.churn.as_mut() {
+        spec.seed = args.u64_or("churn-seed", spec.seed)?;
+    }
+    let churn = sim.churn;
+    if churn.is_some() && mode == ExecMode::Async {
+        return Err(
+            "churn requires --mode bsp: roster splices happen at \
+             bulk-synchronous round boundaries"
+                .into(),
+        );
+    }
+    // Churn runs can only race topologies that resequence (base-<m>),
+    // so the default roster narrows accordingly.
+    let default_topos: &[&str] = if churn.is_some() {
+        &["base-2", "base-4"]
+    } else {
+        &["ring", "exp", "onepeer-exp", "base-2", "base-4"]
+    };
+    let topos = args.str_list_or("topos", default_topos);
     // Backend selection: the event-driven simulator is the default here;
     // `--executor analytic|threaded|process` races the same workload on
     // the ideal lock-step loop, on real threads, or on real worker
@@ -581,7 +719,11 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             ));
         }
     }
-    let exec = exec.with_cost(lockstep_cost).with_sim(sim.clone());
+    let exec = exec
+        .with_cost(lockstep_cost)
+        .with_sim(sim.clone())
+        .with_evict(evict)
+        .with_kill(kill);
     // Checkpoint/resume: racing several topologies in one invocation
     // scopes each run to its own subdirectory (see CkptConfig::scoped),
     // so a sweep's snapshots never rotate each other away.
@@ -600,15 +742,28 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
                 let seq = kind.build(n, seed)?;
-                let tr = consensus::consensus_experiment_codec_tel(
-                    &seq,
-                    iters,
-                    seed,
-                    &exec,
-                    &ckpt.scoped(t),
-                    &tsession.run(t)?,
-                    codec,
-                )?;
+                let tr = match churn {
+                    Some(spec) => {
+                        let schedule = churn_schedule(&kind, n, iters, spec)?;
+                        consensus::consensus_experiment_elastic(
+                            &schedule,
+                            seed,
+                            &exec,
+                            &ckpt.scoped(t),
+                            &tsession.run(t)?,
+                            codec,
+                        )?
+                    }
+                    None => consensus::consensus_experiment_codec_tel(
+                        &seq,
+                        iters,
+                        seed,
+                        &exec,
+                        &ckpt.scoped(t),
+                        &tsession.run(t)?,
+                        codec,
+                    )?,
+                };
                 rows.push(vec![
                     kind.label(),
                     seq.max_degree().to_string(),
@@ -688,10 +843,29 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
             let mut csv = Vec::new();
             for t in &topos {
                 let kind = TopologyKind::parse(t)?;
-                let res = run_training_exec_codec_tel(
-                    &workload, kind, n, dirichlet, optimizer, rounds, lr,
-                    seed, &exec, &ckpt.scoped(t), &tsession.run(t)?, codec,
-                )?;
+                let res = match churn {
+                    Some(spec) => {
+                        let schedule =
+                            churn_schedule(&kind, n, rounds, spec)?;
+                        run_training_exec_elastic(
+                            &workload,
+                            &schedule,
+                            dirichlet,
+                            optimizer,
+                            lr,
+                            seed,
+                            &exec,
+                            &ckpt.scoped(t),
+                            &tsession.run(t)?,
+                            codec,
+                        )?
+                    }
+                    None => run_training_exec_codec_tel(
+                        &workload, kind, n, dirichlet, optimizer, rounds,
+                        lr, seed, &exec, &ckpt.scoped(t),
+                        &tsession.run(t)?, codec,
+                    )?,
+                };
                 let tta = res.run.time_to_accuracy(target);
                 rows.push(vec![
                     kind.label(),

@@ -390,6 +390,57 @@ pub fn run_training_exec_codec_tel(
     exec.run_tel(&mut w, &seq, cfg.rounds, ckpt, tele)
 }
 
+/// Decentralized training under elastic membership: the schedule's
+/// per-segment embedded Base-(k+1) sequences replace the fixed topology,
+/// and every splice warm-starts joiners from their surviving phase-0
+/// neighbors (params, optimizer slots and loss averaged; samplers and
+/// error-feedback residuals restart cold — see
+/// [`Workload::node_warm_start`](crate::exec::Workload::node_warm_start)).
+/// The node-data partition is always built at full id capacity, so a
+/// ghost node's shard is untouched while it is out of the roster.
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_exec_elastic(
+    workload: &TrainWorkload,
+    schedule: &crate::topology::resequence::ElasticSchedule,
+    alpha: f64,
+    optimizer: OptimizerKind,
+    lr: f64,
+    seed: u64,
+    exec: &ExecutorKind,
+    ckpt: &crate::ckpt::CkptConfig,
+    tele: &crate::telemetry::Telemetry,
+    codec: crate::codec::Codec,
+) -> Result<ExecTrace, String> {
+    let n = schedule.capacity;
+    let cfg = repro_train_config(
+        optimizer,
+        schedule.rounds,
+        lr,
+        &CostModel::default(),
+    );
+    crate::exec::run_elastic(
+        exec,
+        || {
+            let node_data = partitioned_node_data(workload, n, alpha, seed);
+            Ok(TrainingWorkload::new(
+                workload.provider.as_ref(),
+                &cfg,
+                node_data,
+                &workload.eval_batches,
+            )
+            .with_wire(crate::exec::TrainSpec::Classification {
+                engine: workload.engine.clone(),
+                alpha,
+                seed,
+            })
+            .with_codec(codec))
+        },
+        schedule,
+        ckpt,
+        tele,
+    )
+}
+
 /// [`run_training_exec`] keeping only the per-round records — what the
 /// figure sweeps consume.
 #[allow(clippy::too_many_arguments)]

@@ -1,0 +1,282 @@
+//! Deterministic churn traces: seeded leave/join/flap/rack-outage event
+//! schedules for elastic-membership runs.
+//!
+//! A [`ChurnSpec`] is the *compact* form carried on configs and CLIs: a
+//! preset family plus a seed. [`ChurnSpec::resolve`] expands it into a
+//! concrete [`ChurnTrace`] — a list of
+//! [`RosterEvent`](crate::topology::resequence::RosterEvent)s at
+//! requested round boundaries — once the run's `n` and round count are
+//! known. The same `(preset, seed, n, rounds)` always yields the same
+//! trace; different seeds diverge. Splicing the requested rounds onto
+//! phase boundaries is the schedule builder's job
+//! ([`ElasticSchedule::build`](crate::topology::resequence::ElasticSchedule::build)),
+//! not this module's.
+//!
+//! Presets:
+//!
+//! * **light** — a handful of single-node flaps (leave, rejoin later).
+//! * **heavy** — many flaps, a few permanent leaves, and one rack
+//!   outage (a contiguous id block leaves together and returns).
+//! * **partition** — a minority group leaves at ~⅓ of the run and heals
+//!   at ~⅔. Intra-partition gossip on the minority side is *not*
+//!   simulated: each partitioned node computes solo until the heal
+//!   (the ghost-cohort rule; see `docs/ARCHITECTURE.md`).
+
+use crate::topology::resequence::RosterEvent;
+use crate::util::rng::Rng;
+
+/// The churn scenario families (`--churn <preset>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnPreset {
+    Light,
+    Heavy,
+    Partition,
+}
+
+impl ChurnPreset {
+    /// Parse a CLI preset name (`light` / `heavy` / `partition`, with
+    /// the scenario-style `churn-` prefix accepted too).
+    pub fn parse(s: &str) -> Result<ChurnPreset, String> {
+        match s.trim().to_lowercase().as_str() {
+            "light" | "churn-light" => Ok(ChurnPreset::Light),
+            "heavy" | "churn-heavy" => Ok(ChurnPreset::Heavy),
+            "partition" => Ok(ChurnPreset::Partition),
+            other => Err(format!(
+                "unknown churn preset {other:?} (expected light, heavy \
+                 or partition)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnPreset::Light => "light",
+            ChurnPreset::Heavy => "heavy",
+            ChurnPreset::Partition => "partition",
+        }
+    }
+
+    /// Domain-separation tag mixed into the trace RNG so two presets
+    /// with the same seed never share a stream.
+    fn tag(&self) -> u64 {
+        match self {
+            ChurnPreset::Light => 0xC0A1,
+            ChurnPreset::Heavy => 0xC0A2,
+            ChurnPreset::Partition => 0xC0A3,
+        }
+    }
+}
+
+/// Compact churn description: preset family + trace seed. `Copy`, so
+/// configs can carry it by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnSpec {
+    pub preset: ChurnPreset,
+    pub seed: u64,
+}
+
+impl ChurnSpec {
+    pub fn new(preset: ChurnPreset, seed: u64) -> ChurnSpec {
+        ChurnSpec { preset, seed }
+    }
+
+    /// Expand into the concrete event trace for a run of `n` nodes and
+    /// `rounds` rounds. Deterministic in `(preset, seed, n, rounds)`.
+    pub fn resolve(&self, n: usize, rounds: usize) -> ChurnTrace {
+        let mut rng = Rng::new(self.seed ^ self.preset.tag());
+        let mut events: Vec<RosterEvent> = Vec::new();
+        if n < 3 || rounds < 2 {
+            return ChurnTrace { events };
+        }
+        match self.preset {
+            ChurnPreset::Light => {
+                let flaps = (n / 8).max(1);
+                for _ in 0..flaps {
+                    push_flap(&mut events, &mut rng, n, rounds);
+                }
+            }
+            ChurnPreset::Heavy => {
+                let flaps = (n / 3).max(2);
+                for _ in 0..flaps {
+                    push_flap(&mut events, &mut rng, n, rounds);
+                }
+                // A few permanent leaves.
+                for _ in 0..(n / 8).max(1) {
+                    let node = rng.below(n);
+                    let at = rng.range(1, rounds);
+                    events.push(RosterEvent::leave(at, node));
+                }
+                // One rack outage: a contiguous block leaves together
+                // and returns together.
+                let rack = 8usize.min(n / 2).max(2);
+                let start = rng.below(n - rack + 1);
+                let out = rng.range(1, (rounds / 2).max(2));
+                let back = rng.range(out + 1, rounds + 1);
+                for node in start..start + rack {
+                    events.push(RosterEvent::leave(out, node));
+                    events.push(RosterEvent::join(back, node));
+                }
+            }
+            ChurnPreset::Partition => {
+                let minority = (n / 3).max(1);
+                let cut = (rounds / 3).max(1);
+                let heal = (2 * rounds / 3).max(cut + 1);
+                for node in rng.choose_k(n, minority) {
+                    events.push(RosterEvent::leave(cut, node));
+                    events.push(RosterEvent::join(heal, node));
+                }
+            }
+        }
+        ChurnTrace { events }
+    }
+}
+
+/// One seeded leave-then-rejoin pair for a random node.
+fn push_flap(
+    events: &mut Vec<RosterEvent>,
+    rng: &mut Rng,
+    n: usize,
+    rounds: usize,
+) {
+    let node = rng.below(n);
+    let out = rng.range(1, rounds);
+    events.push(RosterEvent::leave(out, node));
+    if out + 1 <= rounds {
+        let back = rng.range(out + 1, rounds + 1);
+        events.push(RosterEvent::join(back, node));
+    }
+}
+
+/// A concrete churn event trace: roster-change requests at round
+/// boundaries, in generation order. Feed it to
+/// [`ElasticSchedule::build`](crate::topology::resequence::ElasticSchedule::build)
+/// (which sorts, legality-checks and splices) — or build one by hand
+/// for targeted tests.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ChurnTrace {
+    pub events: Vec<RosterEvent>,
+}
+
+impl ChurnTrace {
+    pub fn new(events: Vec<RosterEvent>) -> ChurnTrace {
+        ChurnTrace { events }
+    }
+
+    /// A fully random trace (the fuzz generator): a seeded mix of
+    /// leaves and joins at arbitrary rounds and nodes. Illegal requests
+    /// are intentionally *not* filtered here — the schedule builder
+    /// must skip them deterministically.
+    pub fn random(n: usize, rounds: usize, seed: u64) -> ChurnTrace {
+        let mut rng = Rng::new(seed ^ 0xFA22);
+        let mut events = Vec::new();
+        if n == 0 || rounds == 0 {
+            return ChurnTrace { events };
+        }
+        let count = rng.range(1, (n + rounds).min(24) + 1);
+        for _ in 0..count {
+            let node = rng.below(n);
+            let round = rng.below(rounds + 1);
+            if rng.chance(0.5) {
+                events.push(RosterEvent::leave(round, node));
+            } else {
+                events.push(RosterEvent::join(round, node));
+            }
+        }
+        ChurnTrace { events }
+    }
+
+    /// Compact debug rendering, used by the fuzz determinism tests to
+    /// byte-compare traces.
+    pub fn fingerprint(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&format!(
+                "{}:{}{};",
+                e.round,
+                if e.join { '+' } else { '-' },
+                e.node
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_parse_round_trips() {
+        for p in
+            [ChurnPreset::Light, ChurnPreset::Heavy, ChurnPreset::Partition]
+        {
+            assert_eq!(ChurnPreset::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(
+            ChurnPreset::parse("churn-light").unwrap(),
+            ChurnPreset::Light
+        );
+        assert!(ChurnPreset::parse("medium").is_err());
+    }
+
+    #[test]
+    fn resolve_is_deterministic_and_seed_sensitive() {
+        for preset in
+            [ChurnPreset::Light, ChurnPreset::Heavy, ChurnPreset::Partition]
+        {
+            let spec = ChurnSpec::new(preset, 7);
+            let a = spec.resolve(16, 24);
+            let b = spec.resolve(16, 24);
+            assert_eq!(a, b, "{preset:?}: same seed must match");
+            assert!(!a.events.is_empty(), "{preset:?}: empty trace");
+            let c = ChurnSpec::new(preset, 8).resolve(16, 24);
+            assert_ne!(
+                a.fingerprint(),
+                c.fingerprint(),
+                "{preset:?}: different seeds should diverge"
+            );
+        }
+    }
+
+    #[test]
+    fn heavy_contains_a_rack_outage() {
+        let trace = ChurnSpec::new(ChurnPreset::Heavy, 3).resolve(32, 40);
+        // Find a contiguous block of >= 2 ids leaving at one round.
+        let mut by_round: std::collections::BTreeMap<usize, Vec<usize>> =
+            Default::default();
+        for e in &trace.events {
+            if !e.join {
+                by_round.entry(e.round).or_default().push(e.node);
+            }
+        }
+        let has_block = by_round.values().any(|nodes| {
+            let mut ns = nodes.clone();
+            ns.sort_unstable();
+            ns.windows(2).filter(|w| w[1] == w[0] + 1).count() >= 1
+        });
+        assert!(has_block, "no rack outage in {:?}", trace.events);
+    }
+
+    #[test]
+    fn partition_cuts_and_heals() {
+        let trace =
+            ChurnSpec::new(ChurnPreset::Partition, 1).resolve(12, 30);
+        let leaves: Vec<_> =
+            trace.events.iter().filter(|e| !e.join).collect();
+        let joins: Vec<_> =
+            trace.events.iter().filter(|e| e.join).collect();
+        assert_eq!(leaves.len(), 4); // n/3
+        assert_eq!(joins.len(), 4);
+        assert!(leaves.iter().all(|e| e.round == 10));
+        assert!(joins.iter().all(|e| e.round == 20));
+    }
+
+    #[test]
+    fn random_traces_differ_by_seed() {
+        let a = ChurnTrace::random(8, 12, 1);
+        let b = ChurnTrace::random(8, 12, 1);
+        let c = ChurnTrace::random(8, 12, 2);
+        assert_eq!(a, b);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -76,10 +76,12 @@
 //! gone; the unified [`ExecTrace`](crate::exec::ExecTrace) carries the
 //! same information with total, consistent accessors.
 
+pub mod churn;
 pub mod event;
 pub mod net;
 pub mod scenario;
 
+pub use churn::{ChurnPreset, ChurnSpec, ChurnTrace};
 pub use event::{Event, EventKind, EventQueue, Trace};
 pub use net::{ComputeModel, LinkModel, NetworkModel};
 pub use scenario::{CodecPolicy, Scenario};
@@ -130,6 +132,10 @@ pub struct SimConfig {
     /// links through a heavier codec (disabled by default — the run
     /// codec, if any, lives in the workload).
     pub codec_policy: scenario::CodecPolicy,
+    /// Elastic membership: a seeded churn trace to resolve against the
+    /// run's `(n, rounds)` and drive through the elastic executor
+    /// (`--churn <preset>`; BSP-mode only, Base-(k+1) topologies only).
+    pub churn: Option<churn::ChurnSpec>,
 }
 
 impl SimConfig {
@@ -145,6 +151,7 @@ impl SimConfig {
             seed: 0,
             record_trace: false,
             codec_policy: scenario::CodecPolicy::off(),
+            churn: None,
         }
     }
 

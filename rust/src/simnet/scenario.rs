@@ -3,6 +3,7 @@
 //! starting [`SimConfig`]; individual knobs (`--drop-rate`,
 //! `--straggler-factor`, `--alpha`, `--beta`) layer on top.
 
+use super::churn::{ChurnPreset, ChurnSpec};
 use super::{ComputeModel, ExecMode, LinkModel, SimConfig};
 use crate::codec::Codec;
 use crate::comm::CostModel;
@@ -64,10 +65,18 @@ pub enum Scenario {
     Racks,
     /// Everything at once: racks, stragglers and 10% loss.
     Hostile,
+    /// LAN physics plus a light seeded churn trace (a few node flaps).
+    ChurnLight,
+    /// LAN physics plus heavy churn: many flaps, permanent leaves and a
+    /// rack outage.
+    ChurnHeavy,
+    /// LAN physics plus a network partition: a minority group leaves at
+    /// ~⅓ of the run and heals at ~⅔.
+    Partition,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 7] = [
+    pub const ALL: [Scenario; 10] = [
         Scenario::Ideal,
         Scenario::Lan,
         Scenario::Wan,
@@ -75,6 +84,9 @@ impl Scenario {
         Scenario::Lossy,
         Scenario::Racks,
         Scenario::Hostile,
+        Scenario::ChurnLight,
+        Scenario::ChurnHeavy,
+        Scenario::Partition,
     ];
 
     pub fn parse(s: &str) -> Result<Scenario, String> {
@@ -86,10 +98,14 @@ impl Scenario {
             "lossy" | "drops" => Scenario::Lossy,
             "racks" | "rack" => Scenario::Racks,
             "hostile" => Scenario::Hostile,
+            "churn-light" => Scenario::ChurnLight,
+            "churn-heavy" => Scenario::ChurnHeavy,
+            "partition" => Scenario::Partition,
             other => {
                 return Err(format!(
                     "unknown scenario {other:?} \
-                     (ideal|lan|wan|straggler|lossy|racks|hostile)"
+                     (ideal|lan|wan|straggler|lossy|racks|hostile|\
+                     churn-light|churn-heavy|partition)"
                 ))
             }
         })
@@ -104,6 +120,9 @@ impl Scenario {
             Scenario::Lossy => "lossy",
             Scenario::Racks => "racks",
             Scenario::Hostile => "hostile",
+            Scenario::ChurnLight => "churn-light",
+            Scenario::ChurnHeavy => "churn-heavy",
+            Scenario::Partition => "partition",
         }
     }
 
@@ -131,6 +150,7 @@ impl Scenario {
             seed,
             record_trace: false,
             codec_policy: CodecPolicy::off(),
+            churn: None,
         };
         match self {
             Scenario::Ideal => {
@@ -161,6 +181,18 @@ impl Scenario {
                 };
                 cfg.compute = straggling;
                 cfg.drop_rate = 0.1;
+            }
+            // Churn families: LAN physics, with a seeded churn trace for
+            // the elastic driver to resolve against (n, rounds).
+            Scenario::ChurnLight => {
+                cfg.churn = Some(ChurnSpec::new(ChurnPreset::Light, seed));
+            }
+            Scenario::ChurnHeavy => {
+                cfg.churn = Some(ChurnSpec::new(ChurnPreset::Heavy, seed));
+            }
+            Scenario::Partition => {
+                cfg.churn =
+                    Some(ChurnSpec::new(ChurnPreset::Partition, seed));
             }
         }
         cfg

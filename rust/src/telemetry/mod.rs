@@ -132,6 +132,18 @@ pub enum Event {
         shard: usize,
         heartbeat_age_seconds: f64,
     },
+    /// Elastic membership: a node joined the live roster effective at
+    /// round `round` (a phase boundary; see `topology::resequence`).
+    NodeJoined { round: usize, node: usize },
+    /// Elastic membership: a node left the live roster effective at
+    /// round `round`. `reason` is `"scheduled"` for churn-trace leaves
+    /// and `"evicted"` for heartbeat-timeout evictions on the process
+    /// backend.
+    NodeLeft { round: usize, node: usize, reason: &'static str },
+    /// Elastic membership: the Base-(k+1) sequence was rebuilt for a
+    /// changed roster, effective at round `round`. `epoch` fences stale
+    /// frames on the process backend; `n_live` is the new live count.
+    RosterResequenced { round: usize, epoch: usize, n_live: usize },
     /// The run completed; totals from the final ledger. `drops` is the
     /// HTTP feed's backpressure counter ([`Telemetry::dropped`]) — the
     /// NDJSON stream is lossless, so a nonzero value means only that a
@@ -171,6 +183,9 @@ impl Event {
             Event::WorkerRespawned { .. } => "worker_respawned",
             Event::ShardBundle { .. } => "shard_bundle",
             Event::WorkerHeartbeat { .. } => "worker_heartbeat",
+            Event::NodeJoined { .. } => "node_joined",
+            Event::NodeLeft { .. } => "node_left",
+            Event::RosterResequenced { .. } => "roster_resequenced",
             Event::RunFinished { .. } => "run_finished",
         }
     }
@@ -267,6 +282,20 @@ impl Event {
                     "heartbeat_age_seconds",
                     num_or_null(*heartbeat_age_seconds),
                 ));
+            }
+            Event::NodeJoined { round, node } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("node", unum(*node as u64)));
+            }
+            Event::NodeLeft { round, node, reason } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("node", unum(*node as u64)));
+                pairs.push(("reason", Json::str(reason)));
+            }
+            Event::RosterResequenced { round, epoch, n_live } => {
+                pairs.push(("round", unum(*round as u64)));
+                pairs.push(("epoch", unum(*epoch as u64)));
+                pairs.push(("n_live", unum(*n_live as u64)));
             }
             Event::RunFinished {
                 rounds,
@@ -621,6 +650,10 @@ impl Status {
             }
             Event::WorkerRespawned { .. } => {}
             Event::ShardBundle { .. } => {}
+            Event::NodeJoined { .. } | Event::NodeLeft { .. } => {}
+            Event::RosterResequenced { n_live, .. } => {
+                self.n = *n_live;
+            }
             Event::WorkerHeartbeat { round, shard, .. } => {
                 if let Some(w) =
                     self.workers.iter_mut().find(|w| w.shard == *shard)
@@ -913,6 +946,32 @@ mod tests {
         assert_eq!(v.get("seq").unwrap().as_usize(), Some(7));
         assert_eq!(v.get("event").unwrap().as_str(), Some("run_started"));
         assert_eq!(v.get("n").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn elastic_membership_events_serialize_flat() {
+        let left = Event::NodeLeft { round: 6, node: 3, reason: "evicted" };
+        let v = parse_line(&json::write(&left.to_json(11)));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("node_left"));
+        assert_eq!(v.get("round").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("node").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("reason").unwrap().as_str(), Some("evicted"));
+        let joined = Event::NodeJoined { round: 12, node: 3 };
+        let v = parse_line(&json::write(&joined.to_json(12)));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("node_joined"));
+        let reseq =
+            Event::RosterResequenced { round: 6, epoch: 1, n_live: 7 };
+        let v = parse_line(&json::write(&reseq.to_json(13)));
+        assert_eq!(
+            v.get("event").unwrap().as_str(),
+            Some("roster_resequenced")
+        );
+        assert_eq!(v.get("epoch").unwrap().as_usize(), Some(1));
+        // /status tracks the live count through resequencing.
+        let mut st = Status::default();
+        let line = json::write(&reseq.to_json(13));
+        st.apply(13, &reseq, line);
+        assert_eq!(st.n, 7);
     }
 
     #[test]

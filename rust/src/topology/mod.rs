@@ -48,6 +48,7 @@ pub mod hyper_hypercube;
 pub mod matrix;
 pub mod one_peer;
 pub mod plan;
+pub mod resequence;
 pub mod simple_base;
 
 pub use matrix::MixingMatrix;

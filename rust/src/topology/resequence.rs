@@ -1,0 +1,490 @@
+//! Online Base-(k+1) resequencing: finite-time gossip schedules for
+//! rosters that change mid-run.
+//!
+//! The Base-(k+1) Graph reaches *exact* consensus in O(log_{k+1} n)
+//! phases for **any** n and any maximum degree k — which is precisely
+//! what makes it rebuildable on the fly when the live roster changes.
+//! This module turns a list of [`RosterEvent`]s (leaves and joins at
+//! requested rounds) into an [`ElasticSchedule`]: a deterministic list
+//! of static segments, each carrying the Base-(k+1) Graph of its live
+//! roster *embedded* in the fixed id space `0..capacity`.
+//!
+//! # The three determinism rules
+//!
+//! 1. **Fixed capacity.** Node ids never shift: the roster is always a
+//!    subset of `0..capacity`, and every segment's [`GraphSequence`]
+//!    has `n == capacity`. Nodes outside the roster get identity rows
+//!    (self-weight 1, no neighbors) — they keep computing in isolation
+//!    ("ghost cohort") and their drift never reaches a live node.
+//! 2. **Phase-boundary splicing.** A roster change requested at round
+//!    `t` becomes *effective* at the next multiple of the current
+//!    segment's phase-sequence length (relative to the segment start):
+//!    [`splice_round`]. Every segment therefore begins on a full-sweep
+//!    boundary of its predecessor, where the live nodes are exactly
+//!    consensual in the gossip sense — the cleanest possible cut.
+//! 3. **Rotation.** Executors index phases as `phase(r) = phases[r %
+//!    len]` with the *global* round r. A segment starting at round
+//!    `start` stores its phase vector rotated so that global round
+//!    `start` lands on the Base graph's original phase 0 — splicing
+//!    never changes the executors' indexing rule.
+//!
+//! Joiner warm starts are a *workload* concern
+//! ([`Workload::node_warm_start`](crate::exec::Workload::node_warm_start));
+//! this module only answers "who donates": the joiner's phase-0
+//! neighbors in the new plan that survived the splice, in ascending id
+//! order, falling back to all survivors ([`warm_start_donors`]).
+
+use super::{base, Edge, GraphSequence, GossipPlan};
+
+/// One requested roster change: `node` leaves or (re)joins at round
+/// boundary `round` (i.e. before round `round` executes). Requests are
+/// deferred to the next phase boundary by [`ElasticSchedule::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RosterEvent {
+    pub round: usize,
+    pub node: usize,
+    /// `true` = join (re-add), `false` = leave.
+    pub join: bool,
+}
+
+impl RosterEvent {
+    pub fn leave(round: usize, node: usize) -> RosterEvent {
+        RosterEvent { round, node, join: false }
+    }
+
+    pub fn join(round: usize, node: usize) -> RosterEvent {
+        RosterEvent { round, node, join: true }
+    }
+}
+
+/// The smallest roster a schedule will shrink to: leaves that would
+/// drop the live count below this are deferred forever (skipped).
+pub const MIN_LIVE: usize = 2;
+
+/// The canonical sequence name of an elastic run. All segments share
+/// it, so snapshots written before a splice stay valid afterwards.
+pub fn elastic_name(capacity: usize, k: usize) -> String {
+    format!("base-{}(n={capacity})+elastic", k + 1)
+}
+
+/// First round `>= requested` at which a roster change may take effect:
+/// the next multiple of the current segment's sequence length `len`,
+/// counted from the segment's `start`. Requests at or before `start`
+/// splice at `start` itself.
+pub fn splice_round(start: usize, len: usize, requested: usize) -> usize {
+    let len = len.max(1);
+    if requested <= start {
+        return start;
+    }
+    let over = requested - start;
+    start + over.div_ceil(len) * len
+}
+
+/// The Base-(k+1) Graph of `roster`, embedded in the id space
+/// `0..capacity` and rotated so that global round `start` uses the
+/// graph's original phase 0.
+///
+/// `roster` must be strictly ascending, with every id `< capacity` and
+/// at least [`MIN_LIVE`] entries. Ids outside the roster get identity
+/// rows in every phase.
+pub fn embedded_base(
+    capacity: usize,
+    roster: &[usize],
+    k: usize,
+    start: usize,
+    name: &str,
+) -> Result<GraphSequence, String> {
+    let m = roster.len();
+    if m < MIN_LIVE {
+        return Err(format!(
+            "elastic roster has {m} live nodes; need >= {MIN_LIVE}"
+        ));
+    }
+    if roster.windows(2).any(|w| w[0] >= w[1]) {
+        return Err("elastic roster must be strictly ascending".into());
+    }
+    if roster[m - 1] >= capacity {
+        return Err(format!(
+            "elastic roster node {} out of capacity {capacity}",
+            roster[m - 1]
+        ));
+    }
+    if k == 0 {
+        return Err("maximum degree k must be >= 1".into());
+    }
+    let k_eff = k.min(m - 1).max(1);
+    // Base phases over the *compact* ids 0..m, then remapped to global
+    // ids. `GossipPlan::from_undirected` gives every unconnected id an
+    // identity row — exactly the ghost-cohort isolation rule.
+    let compact = base::phases(m, k_eff);
+    let plans: Vec<GossipPlan> = compact
+        .iter()
+        .map(|edges| {
+            let mapped: Vec<Edge> = edges
+                .iter()
+                .map(|&(a, b, w)| (roster[a], roster[b], w))
+                .collect();
+            GossipPlan::from_undirected(capacity, &mapped)
+        })
+        .collect();
+    let len = plans.len().max(1);
+    // Rotate so that phases[(start + t) % len] is original phase t.
+    let shift = start % len;
+    let rotated: Vec<GossipPlan> = (0..plans.len())
+        .map(|j| plans[(j + len - shift) % len].clone())
+        .collect();
+    Ok(GraphSequence::new(capacity, name.to_string(), rotated))
+}
+
+/// One static stretch of an elastic run: rounds `[start, end)` over a
+/// fixed live roster, with the embedded rotated Base-(k+1) sequence.
+#[derive(Debug, Clone)]
+pub struct RosterSegment {
+    /// First global round of this segment.
+    pub start: usize,
+    /// One past the last global round (exclusive).
+    pub end: usize,
+    /// Live node ids, strictly ascending.
+    pub roster: Vec<usize>,
+    /// Nodes that joined at `start` (need a warm start).
+    pub joined: Vec<usize>,
+    /// Nodes that left at `start` (become ghosts).
+    pub left: Vec<usize>,
+    /// Embedded-at-capacity, rotation-aligned gossip sequence.
+    pub seq: GraphSequence,
+}
+
+/// A churn trace resolved into deterministic static segments.
+#[derive(Debug, Clone)]
+pub struct ElasticSchedule {
+    pub capacity: usize,
+    /// Maximum degree of every rebuilt Base-(k+1) plan.
+    pub k: usize,
+    /// Shared sequence name (snapshot validation key).
+    pub name: String,
+    /// Total rounds of the run.
+    pub rounds: usize,
+    /// At least one segment; starts at 0, ends at `rounds`, contiguous.
+    pub segments: Vec<RosterSegment>,
+}
+
+impl ElasticSchedule {
+    /// Resolve requested roster events into spliced segments.
+    ///
+    /// Events are sorted by `(round, node, join)`; illegal requests are
+    /// skipped deterministically (leave of a dead node, join of a live
+    /// one, a join beyond capacity, or a leave that would shrink the
+    /// roster below [`MIN_LIVE`]). Events whose splice point lands at
+    /// or past `rounds` never apply.
+    pub fn build(
+        capacity: usize,
+        k: usize,
+        rounds: usize,
+        events: &[RosterEvent],
+    ) -> Result<ElasticSchedule, String> {
+        if capacity < MIN_LIVE {
+            return Err(format!(
+                "elastic runs need capacity >= {MIN_LIVE}, got {capacity}"
+            ));
+        }
+        let name = elastic_name(capacity, k);
+        let mut evs: Vec<RosterEvent> = events.to_vec();
+        evs.sort_by_key(|e| (e.round, e.node, e.join));
+
+        let mut segments: Vec<RosterSegment> = Vec::new();
+        let mut start = 0usize;
+        let mut roster: Vec<usize> = (0..capacity).collect();
+        let mut seq = embedded_base(capacity, &roster, k, 0, &name)?;
+        let mut joined: Vec<usize> = Vec::new();
+        let mut left: Vec<usize> = Vec::new();
+
+        let mut i = 0usize;
+        while i < evs.len() {
+            let len = seq.len();
+            let eff = splice_round(start, len, evs[i].round);
+            if eff >= rounds {
+                break;
+            }
+            // Apply every event that splices to this same boundary.
+            let mut next = roster.clone();
+            let mut jo: Vec<usize> = Vec::new();
+            let mut le: Vec<usize> = Vec::new();
+            while i < evs.len()
+                && splice_round(start, len, evs[i].round) == eff
+            {
+                let ev = evs[i];
+                i += 1;
+                if ev.node >= capacity {
+                    continue;
+                }
+                match next.binary_search(&ev.node) {
+                    Ok(pos) if !ev.join => {
+                        if next.len() > MIN_LIVE {
+                            next.remove(pos);
+                            le.push(ev.node);
+                        }
+                    }
+                    Err(pos) if ev.join => {
+                        next.insert(pos, ev.node);
+                        jo.push(ev.node);
+                    }
+                    _ => {} // leave of a dead node / join of a live one
+                }
+            }
+            if next == roster {
+                continue;
+            }
+            if eff > start {
+                segments.push(RosterSegment {
+                    start,
+                    end: eff,
+                    roster: roster.clone(),
+                    joined: std::mem::take(&mut joined),
+                    left: std::mem::take(&mut left),
+                    seq,
+                });
+                joined = jo;
+                left = le;
+            } else {
+                // Same boundary as the pending segment start (round-0
+                // events, or a cascade of splices to one boundary):
+                // fold the delta in without emitting an empty segment.
+                joined.extend(jo);
+                left.extend(le);
+            }
+            roster = next;
+            start = eff;
+            seq = embedded_base(capacity, &roster, k, start, &name)?;
+        }
+        segments.push(RosterSegment {
+            start,
+            end: rounds,
+            roster,
+            joined,
+            left,
+            seq,
+        });
+        Ok(ElasticSchedule {
+            capacity,
+            k,
+            name,
+            rounds,
+            segments,
+        })
+    }
+
+    /// A fixed-roster schedule (no events): one segment, full roster.
+    pub fn fixed(
+        capacity: usize,
+        k: usize,
+        rounds: usize,
+    ) -> Result<ElasticSchedule, String> {
+        ElasticSchedule::build(capacity, k, rounds, &[])
+    }
+
+    /// The segment executing global round `r` (the last one for
+    /// `r >= rounds`).
+    pub fn segment_at(&self, r: usize) -> &RosterSegment {
+        self.segments
+            .iter()
+            .rev()
+            .find(|s| s.start <= r)
+            .expect("segments start at 0")
+    }
+
+    /// The index of the segment that *begins* at round `r`, preferring
+    /// the post-splice segment when `r` is a boundary — the lookup rule
+    /// for resuming from a snapshot taken at round `r`.
+    pub fn segment_index_for_resume(&self, r: usize) -> usize {
+        self.segments
+            .iter()
+            .rposition(|s| s.start <= r)
+            .expect("segments start at 0")
+    }
+}
+
+/// Who donates a warm start to `joiner` at the start of `seg`: the
+/// joiner's phase-0 neighbors in the new plan that were live in the
+/// previous segment too (ascending id — neighbor lists are id-sorted),
+/// falling back to all such survivors when the joiner's whole
+/// neighborhood is fresh.
+pub fn warm_start_donors(
+    seg: &RosterSegment,
+    prev_roster: &[usize],
+    joiner: usize,
+) -> Vec<usize> {
+    let survives = |id: usize| {
+        prev_roster.binary_search(&id).is_ok()
+            && seg.roster.binary_search(&id).is_ok()
+    };
+    let plan = seg.seq.phase(seg.start);
+    let donors: Vec<usize> = plan
+        .neighbors(joiner)
+        .iter()
+        .map(|&(p, _)| p)
+        .filter(|&p| survives(p))
+        .collect();
+    if !donors.is_empty() {
+        return donors;
+    }
+    prev_roster
+        .iter()
+        .copied()
+        .filter(|&p| seg.roster.binary_search(&p).is_ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splice_rounds_defer_to_phase_boundaries() {
+        assert_eq!(splice_round(0, 4, 0), 0);
+        assert_eq!(splice_round(0, 4, 1), 4);
+        assert_eq!(splice_round(0, 4, 4), 4);
+        assert_eq!(splice_round(0, 4, 5), 8);
+        assert_eq!(splice_round(8, 3, 8), 8);
+        assert_eq!(splice_round(8, 3, 9), 11);
+        assert_eq!(splice_round(8, 3, 12), 14);
+    }
+
+    #[test]
+    fn embedded_base_isolates_ghosts_and_mixes_live() {
+        // Roster {0,2,3,5} in capacity 6: ghosts 1 and 4 must be
+        // identity rows in every phase; live nodes reach the live mean
+        // after one full sweep.
+        let roster = [0usize, 2, 3, 5];
+        let seq = embedded_base(6, &roster, 1, 0, "t").unwrap();
+        assert_eq!(seq.n, 6);
+        for p in &seq.phases {
+            assert!(p.is_doubly_stochastic(1e-12));
+            assert!(p.is_symmetric(1e-12));
+            for ghost in [1usize, 4] {
+                assert!(p.neighbors(ghost).is_empty());
+                assert!((p.self_weight(ghost) - 1.0).abs() < 1e-12);
+            }
+        }
+        let mut xs: Vec<Vec<f64>> =
+            (0..6).map(|i| vec![i as f64]).collect();
+        for r in 0..seq.len() {
+            xs = seq.phase(r).gossip(&xs);
+        }
+        let live_mean =
+            roster.iter().map(|&i| i as f64).sum::<f64>() / 4.0;
+        for &i in &roster {
+            assert!(
+                (xs[i][0] - live_mean).abs() < 1e-9,
+                "node {i}: {} vs {live_mean}",
+                xs[i][0]
+            );
+        }
+        assert_eq!(xs[1][0], 1.0);
+        assert_eq!(xs[4][0], 4.0);
+    }
+
+    #[test]
+    fn rotation_aligns_phase_zero_with_segment_start() {
+        let roster: Vec<usize> = (0..7).collect();
+        let plain = embedded_base(7, &roster, 2, 0, "t").unwrap();
+        let len = plain.len();
+        assert!(len > 1, "need a multi-phase sequence for this test");
+        for start in [0usize, 1, len - 1, len, 3 * len + 2] {
+            let rot = embedded_base(7, &roster, 2, start, "t").unwrap();
+            for t in 0..len {
+                let a = rot.phase(start + t).to_dense();
+                let b = plain.phases[t].to_dense();
+                assert!(
+                    a.max_abs_diff(&b) < 1e-15,
+                    "start={start} t={t}: rotation misaligned"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_build_splices_and_skips_illegal_events() {
+        // capacity 6, k=1: base-2(n=6) has 4 phases.
+        let events = [
+            RosterEvent::leave(3, 1),  // defers to round 4
+            RosterEvent::leave(3, 1),  // duplicate: skipped
+            RosterEvent::leave(3, 9),  // out of capacity: skipped
+            RosterEvent::join(6, 1),   // node 1 flaps back at 8
+        ];
+        let s = ElasticSchedule::build(6, 1, 16, &events).unwrap();
+        assert_eq!(s.segments.len(), 3);
+        assert_eq!(
+            (s.segments[0].start, s.segments[0].end),
+            (0, 4)
+        );
+        assert_eq!(s.segments[0].roster, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(s.segments[1].start, 4);
+        assert_eq!(s.segments[1].roster, vec![0, 2, 3, 4, 5]);
+        assert_eq!(s.segments[1].left, vec![1]);
+        // Join requested at 6, segment 1 starts at 4 with seq len for
+        // m=5, k=1: defers to the next boundary after 6.
+        let l1 = s.segments[1].seq.len();
+        assert_eq!(s.segments[2].start, splice_round(4, l1, 6));
+        assert_eq!(s.segments[2].roster, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(s.segments[2].joined, vec![1]);
+        assert_eq!(s.segments[2].end, 16);
+        // Contiguity.
+        for w in s.segments.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn schedule_never_shrinks_below_min_live() {
+        let events: Vec<RosterEvent> =
+            (0..6).map(|i| RosterEvent::leave(0, i)).collect();
+        let s = ElasticSchedule::build(6, 1, 8, &events).unwrap();
+        assert_eq!(s.segments.len(), 1);
+        assert_eq!(s.segments[0].roster.len(), MIN_LIVE);
+        assert_eq!(s.segments[0].roster, vec![4, 5]);
+    }
+
+    #[test]
+    fn resume_lookup_prefers_post_splice_segment() {
+        let events = [RosterEvent::leave(1, 0)];
+        let s = ElasticSchedule::build(6, 1, 12, &events).unwrap();
+        assert_eq!(s.segments.len(), 2);
+        let b = s.segments[1].start;
+        assert_eq!(s.segment_index_for_resume(b), 1);
+        assert_eq!(s.segment_index_for_resume(b - 1), 0);
+        assert_eq!(s.segment_index_for_resume(0), 0);
+    }
+
+    #[test]
+    fn donors_are_surviving_phase_zero_neighbors() {
+        let events = [
+            RosterEvent::leave(0, 1),
+            RosterEvent::join(4, 1),
+        ];
+        let s = ElasticSchedule::build(6, 2, 16, &events).unwrap();
+        let seg = s
+            .segments
+            .iter()
+            .find(|g| g.joined.contains(&1))
+            .expect("join segment");
+        let prev = s.segments[s
+            .segments
+            .iter()
+            .position(|g| g.start == seg.start)
+            .unwrap()
+            - 1]
+        .roster
+        .clone();
+        let donors = warm_start_donors(seg, &prev, 1);
+        assert!(!donors.is_empty());
+        // Every donor was live before and after the splice, and never
+        // the joiner itself.
+        for &d in &donors {
+            assert!(prev.binary_search(&d).is_ok());
+            assert!(seg.roster.binary_search(&d).is_ok());
+            assert_ne!(d, 1);
+        }
+        // Ascending order (neighbor lists are id-sorted).
+        assert!(donors.windows(2).all(|w| w[0] < w[1]));
+    }
+}

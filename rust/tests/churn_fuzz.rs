@@ -1,0 +1,212 @@
+//! Churn fuzz determinism: seeded random traces pushed through the full
+//! elastic pipeline (trace → schedule → run_elastic → telemetry). The
+//! contract under test: same seed ⇒ byte-identical event trace,
+//! bit-identical final parameters, and byte-identical telemetry NDJSON
+//! after the MEASURED_FIELDS mask; different seeds diverge; and a
+//! hand-built trace may shrink the roster to MIN_LIVE = 2 and grow it
+//! back without losing determinism.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use basegraph::ckpt::CkptConfig;
+use basegraph::codec::Codec;
+use basegraph::consensus::consensus_experiment_elastic;
+use basegraph::exec::ExecutorKind;
+use basegraph::simnet::ChurnTrace;
+use basegraph::telemetry::{Telemetry, TelemetryConfig, MEASURED_FIELDS};
+use basegraph::topology::resequence::{
+    ElasticSchedule, RosterEvent, MIN_LIVE,
+};
+use basegraph::util::json::{self, Json};
+
+const N: usize = 8;
+const K: usize = 1;
+const ROUNDS: usize = 16;
+const SEEDS: u64 = 50;
+
+fn uniq_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "basegraph_fuzz_{tag}_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Re-serialize an NDJSON stream with every measured field nulled —
+/// the byte-comparison form of the determinism contract.
+fn masked(stream: &str) -> Vec<String> {
+    stream
+        .lines()
+        .map(|line| {
+            let v = json::parse(line).expect("stream line must be JSON");
+            let mut m = match v {
+                Json::Obj(m) => m,
+                other => panic!("expected an object line, got {other:?}"),
+            };
+            for &field in MEASURED_FIELDS {
+                if let Some(slot) = m.get_mut(field) {
+                    *slot = Json::Null;
+                }
+            }
+            json::write(&Json::Obj(m))
+        })
+        .collect()
+}
+
+/// One telemetry-instrumented elastic consensus run over a fuzz trace.
+/// Returns (final parameters, raw NDJSON stream).
+fn elastic_stream(
+    dir: &Path,
+    tag: &str,
+    schedule: &ElasticSchedule,
+    seed: u64,
+) -> (Vec<Vec<f64>>, String) {
+    let path = dir.join(format!("{tag}.ndjson"));
+    let cfg = TelemetryConfig {
+        path: Some(path.to_str().unwrap().to_string()),
+        http: None,
+    };
+    let session = cfg.session().unwrap();
+    let trace = consensus_experiment_elastic(
+        schedule,
+        seed,
+        &ExecutorKind::analytic(),
+        &CkptConfig::default(),
+        &session.run("").unwrap(),
+        Codec::Identity,
+    )
+    .unwrap();
+    drop(session);
+    (trace.finals, std::fs::read_to_string(&path).unwrap())
+}
+
+#[test]
+fn fuzz_traces_are_seed_deterministic_and_seed_sensitive() {
+    let mut fingerprints = Vec::new();
+    for seed in 0..SEEDS {
+        let a = ChurnTrace::random(N, ROUNDS, seed);
+        let b = ChurnTrace::random(N, ROUNDS, seed);
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "seed {seed}: same seed must give a byte-identical trace"
+        );
+        fingerprints.push(a.fingerprint());
+    }
+    let distinct: HashSet<&String> = fingerprints.iter().collect();
+    assert!(
+        distinct.len() >= 40,
+        "only {} distinct traces across {SEEDS} seeds",
+        distinct.len()
+    );
+}
+
+#[test]
+fn fuzz_runs_are_bit_identical_per_seed() {
+    let dir = uniq_dir("runs");
+    let mut streams: Vec<(u64, usize, Vec<String>)> = Vec::new();
+    for seed in 0..SEEDS {
+        let trace = ChurnTrace::random(N, ROUNDS, seed);
+        let schedule =
+            ElasticSchedule::build(N, K, ROUNDS, &trace.events).unwrap();
+        let (fa, sa) =
+            elastic_stream(&dir, &format!("s{seed}a"), &schedule, seed);
+        let (fb, sb) =
+            elastic_stream(&dir, &format!("s{seed}b"), &schedule, seed);
+        // Bit-identical finals: compare the raw f64 bits, not values.
+        let bits = |f: &Vec<Vec<f64>>| -> Vec<Vec<u64>> {
+            f.iter()
+                .map(|r| r.iter().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+        assert_eq!(
+            bits(&fa),
+            bits(&fb),
+            "seed {seed}: same seed must give bit-identical params"
+        );
+        let ma = masked(&sa);
+        assert_eq!(
+            ma,
+            masked(&sb),
+            "seed {seed}: masked NDJSON must be byte-identical"
+        );
+        // Multi-segment schedules must narrate their splices.
+        let reseq = ma
+            .iter()
+            .filter(|l| l.contains("\"roster_resequenced\""))
+            .count();
+        assert_eq!(
+            reseq,
+            schedule.segments.len() - 1,
+            "seed {seed}: one roster_resequenced per splice"
+        );
+        streams.push((seed, schedule.segments.len(), ma));
+    }
+    // Divergence: two seeds whose schedules splice differently must
+    // produce different masked streams. Guaranteed detectable because
+    // the roster_resequenced count differs.
+    let a = streams.iter().min_by_key(|(_, nseg, _)| *nseg).unwrap();
+    let b = streams.iter().max_by_key(|(_, nseg, _)| *nseg).unwrap();
+    assert!(
+        b.1 > a.1,
+        "fuzz corpus never produced two different segment counts \
+         ({} segments for every seed) — weak corpus",
+        a.1
+    );
+    assert_ne!(
+        a.2, b.2,
+        "seeds {} and {} must diverge in the masked stream",
+        a.0, b.0
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn trace_can_shrink_to_min_live_and_grow_back() {
+    // Hand-built flap: half the roster leaves early, rejoins later.
+    // capacity 4, k = 1 — the roster bottoms out at MIN_LIVE = 2.
+    let trace = ChurnTrace::new(vec![
+        RosterEvent::leave(1, 2),
+        RosterEvent::leave(1, 3),
+        RosterEvent::join(6, 2),
+        RosterEvent::join(6, 3),
+    ]);
+    let schedule =
+        ElasticSchedule::build(4, K, 12, &trace.events).unwrap();
+    let smallest =
+        schedule.segments.iter().map(|s| s.roster.len()).min().unwrap();
+    assert_eq!(smallest, MIN_LIVE, "roster must bottom out at MIN_LIVE");
+    let last = schedule.segments.last().unwrap();
+    assert_eq!(last.roster, vec![0, 1, 2, 3], "roster must grow back");
+    assert!(last.joined.contains(&2) && last.joined.contains(&3));
+
+    let run = |seed: u64| {
+        consensus_experiment_elastic(
+            &schedule,
+            seed,
+            &ExecutorKind::analytic(),
+            &CkptConfig::default(),
+            &Telemetry::off(),
+            Codec::Identity,
+        )
+        .unwrap()
+        .finals
+    };
+    let finals = run(9);
+    // All four nodes are live again and exactly consensual per the
+    // final segment's finite-time sweep.
+    let lead = finals[0][0];
+    for (i, f) in finals.iter().enumerate() {
+        assert!(
+            (f[0] - lead).abs() < 1e-9,
+            "node {i}: {} vs {lead}",
+            f[0]
+        );
+    }
+    assert_eq!(finals, run(9), "shrink/grow run must be deterministic");
+}

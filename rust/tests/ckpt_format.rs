@@ -50,6 +50,7 @@ fn sample(round: usize) -> Snapshot {
         records: Vec::new(),
         clock: 2.25,
         rng: Some(([5, 6, 7, 8], None)),
+        roster: Some(vec![0, 2]),
     }
 }
 
@@ -150,6 +151,7 @@ fn rotation_keeps_only_the_newest_snapshots() {
         every_n_rounds: 1,
         dir: dir.clone(),
         keep_last: 2,
+        force_at: None,
     };
     for round in 1..=5 {
         policy.save(&sample(round)).unwrap();
@@ -175,14 +177,20 @@ fn directory_resume_picks_newest_and_tolerates_empty() {
         every_n_rounds: 1,
         dir: dir.clone(),
         keep_last: 0,
+        force_at: None,
     };
     // Empty directory: the lenient crash-recovery form starts fresh.
-    let cfg = CkptConfig { policy: None, resume: Some(dir.clone()) };
+    let cfg = CkptConfig {
+        policy: None,
+        resume: Some(dir.clone()),
+        roster: None,
+    };
     assert!(cfg.load_resume(4, "Base-2 Graph", 10).unwrap().is_none());
     // A missing dir-like path (no .bgc extension) also starts fresh…
     let cfg_missing = CkptConfig {
         policy: None,
         resume: Some(dir.join("not_yet_created")),
+        roster: None,
     };
     assert!(cfg_missing
         .load_resume(4, "Base-2 Graph", 10)
@@ -193,6 +201,7 @@ fn directory_resume_picks_newest_and_tolerates_empty() {
     let cfg_file = CkptConfig {
         policy: None,
         resume: Some(dir.join("ckpt-00000009.bgc")),
+        roster: None,
     };
     assert!(cfg_file.load_resume(4, "Base-2 Graph", 10).is_err());
     // With snapshots present, the newest (highest round) wins.
@@ -221,8 +230,10 @@ fn async_simnet_refuses_checkpointing_cleanly() {
             every_n_rounds: 2,
             dir: dir.clone(),
             keep_last: 0,
+            force_at: None,
         }),
         resume: None,
+        roster: None,
     };
     let err = exec
         .run_ckpt(

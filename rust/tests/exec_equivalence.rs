@@ -8,15 +8,18 @@
 //! across backends: any wall-clock, event-clock or bytes-on-wire
 //! difference is attributable to the backend, never to the arithmetic.
 
-use basegraph::ckpt::{CheckpointPolicy, CkptConfig};
+use basegraph::ckpt::{CheckpointPolicy, CkptConfig, Snapshot};
 use basegraph::codec::Codec;
 use basegraph::consensus::gaussian_init;
 use basegraph::exec::{
-    quadratic_fixed_targets, AllocatingWorkload, ConsensusWorkload,
-    ExecTrace, ExecutorKind, TrainSpec, TrainingWorkload,
+    quadratic_fixed_targets, run_elastic, AllocatingWorkload,
+    ConsensusWorkload, ExecTrace, ExecutorKind, TrainSpec,
+    TrainingWorkload,
 };
 use basegraph::optim::OptimizerKind;
-use basegraph::simnet::SimConfig;
+use basegraph::simnet::{ChurnTrace, SimConfig};
+use basegraph::telemetry::Telemetry;
+use basegraph::topology::resequence::{ElasticSchedule, RosterEvent};
 use basegraph::topology::TopologyKind;
 use basegraph::train::TrainConfig;
 use basegraph::util::rng::Rng;
@@ -312,10 +315,12 @@ fn consensus_checkpoint_resume_is_bit_identical_on_every_backend() {
                 every_n_rounds: every,
                 dir: dir.clone(),
                 keep_last: 0,
+                force_at: None,
             };
             let writing = CkptConfig {
                 policy: Some(policy.clone()),
                 resume: None,
+                roster: None,
             };
             let full = exec
                 .run_ckpt(
@@ -329,8 +334,11 @@ fn consensus_checkpoint_resume_is_bit_identical_on_every_backend() {
             // Resume from the mid-run snapshot: bit-identical tail.
             let snap = policy.path_for(every);
             assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
-            let resuming =
-                CkptConfig { policy: None, resume: Some(snap) };
+            let resuming = CkptConfig {
+                policy: None,
+                resume: Some(snap),
+                roster: None,
+            };
             let resumed = exec
                 .run_ckpt(
                     &mut ConsensusWorkload::new(init.clone()),
@@ -382,17 +390,22 @@ fn training_checkpoint_resume_is_bit_identical_on_every_backend() {
                 every_n_rounds: every,
                 dir: dir.clone(),
                 keep_last: 0,
+                force_at: None,
             };
             let writing = CkptConfig {
                 policy: Some(policy.clone()),
                 resume: None,
+                roster: None,
             };
             let full = fresh(&exec, &writing);
             assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
             let snap = policy.path_for(every);
             assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
-            let resuming =
-                CkptConfig { policy: None, resume: Some(snap) };
+            let resuming = CkptConfig {
+                policy: None,
+                resume: Some(snap),
+                roster: None,
+            };
             let resumed = fresh(&exec, &resuming);
             assert_model_columns_eq(
                 &base,
@@ -609,17 +622,22 @@ fn lossy_codec_resume_is_bit_identical_on_every_backend() {
                 every_n_rounds: every,
                 dir: dir.clone(),
                 keep_last: 0,
+                force_at: None,
             };
             let writing = CkptConfig {
                 policy: Some(policy.clone()),
                 resume: None,
+                roster: None,
             };
             let full = fresh(&exec, &writing);
             assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
             let snap = policy.path_for(every);
             assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
-            let resuming =
-                CkptConfig { policy: None, resume: Some(snap) };
+            let resuming = CkptConfig {
+                policy: None,
+                resume: Some(snap),
+                roster: None,
+            };
             let resumed = fresh(&exec, &resuming);
             assert_model_columns_eq(
                 &base,
@@ -675,17 +693,22 @@ fn classification_resume_replays_sampler_cursors_bit_exactly() {
                 every_n_rounds: every,
                 dir: dir.clone(),
                 keep_last: 0,
+                force_at: None,
             };
             let writing = CkptConfig {
                 policy: Some(policy.clone()),
                 resume: None,
+                roster: None,
             };
             let full = run(&writing);
             assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
             let snap = policy.path_for(every);
             assert!(snap.exists(), "{tag}: no snapshot at {snap:?}");
-            let resuming =
-                CkptConfig { policy: None, resume: Some(snap) };
+            let resuming = CkptConfig {
+                policy: None,
+                resume: Some(snap),
+                roster: None,
+            };
             let resumed = run(&resuming);
             assert_model_columns_eq(
                 &base,
@@ -735,4 +758,211 @@ fn int8_error_feedback_converges_on_the_quadratic() {
         "int8+EF failed to converge: {first} -> {q8_last} \
          (identity reached {id_last})"
     );
+}
+
+// ---------------------------------------------------------------------
+// Elastic membership equivalence (pinned).
+//
+// The elastic driver replays one churn trace as a sequence of static
+// runs; the inner executor never learns about churn. Consequence: one
+// `ElasticSchedule` produces bit-identical finals on every backend —
+// the acceptance pair being simnet-BSP vs the process backend, compared
+// column by surviving-node column — and a churn run under a
+// `--checkpoint-every` cadence resumes bit-exactly from any cadence or
+// spliced-boundary snapshot, with the segment roster restored from the
+// snapshot file itself.
+// ---------------------------------------------------------------------
+
+fn consensus_factory(
+    n: usize,
+    seed: u64,
+) -> impl FnMut() -> Result<ConsensusWorkload, String> {
+    move || {
+        let mut rng = Rng::new(seed);
+        Ok(ConsensusWorkload::new(gaussian_init(n, 3, &mut rng)))
+    }
+}
+
+/// The shared churn fixture: nodes 5 and 6 leave at round 2 (spliced to
+/// the phase boundary at round 3), node 6 rejoins at round 7 (spliced
+/// to 9). Three segments over 18 rounds at capacity 8, k = 1; node 5
+/// stays a frozen ghost from round 3 on.
+fn churn_schedule(n: usize, rounds: usize) -> ElasticSchedule {
+    let trace = ChurnTrace::new(vec![
+        RosterEvent::leave(2, 5),
+        RosterEvent::leave(2, 6),
+        RosterEvent::join(7, 6),
+    ]);
+    let s = ElasticSchedule::build(n, 1, rounds, &trace.events).unwrap();
+    assert_eq!(s.segments.len(), 3, "fixture must splice twice");
+    s
+}
+
+#[test]
+fn elastic_churn_finals_are_bit_identical_across_backends() {
+    let n = 8;
+    let sched = churn_schedule(n, 18);
+    let runs: Vec<ExecTrace> = backends()
+        .iter()
+        .map(|e| {
+            run_elastic(
+                e,
+                consensus_factory(n, 23),
+                &sched,
+                &CkptConfig::default(),
+                &Telemetry::off(),
+            )
+            .unwrap()
+        })
+        .collect();
+    // Full-capacity finals: survivor columns, the rejoiner's
+    // warm-started column and the frozen ghost column are all
+    // bit-identical across backends.
+    let a = &runs[0];
+    assert_eq!(a.backend, "analytic");
+    for b in &runs[1..] {
+        assert_eq!(
+            a.finals, b.finals,
+            "{} vs {} diverged under churn",
+            a.backend, b.backend
+        );
+        assert_eq!(
+            a.errors(),
+            b.errors(),
+            "{} vs {} error curves differ under churn",
+            a.backend,
+            b.backend
+        );
+    }
+    // The acceptance pair, called out per surviving-node column:
+    // simnet (BSP, ideal network) vs real worker processes.
+    let sim = runs
+        .iter()
+        .find(|t| t.backend == "simnet")
+        .expect("simnet backend in the matrix");
+    let proc = runs
+        .iter()
+        .find(|t| t.backend == "process")
+        .expect("process backend in the matrix");
+    let survivors: Vec<usize> = sched
+        .segments
+        .iter()
+        .fold(None::<Vec<usize>>, |acc, seg| {
+            Some(match acc {
+                None => seg.roster.clone(),
+                Some(prev) => prev
+                    .into_iter()
+                    .filter(|i| seg.roster.binary_search(i).is_ok())
+                    .collect(),
+            })
+        })
+        .unwrap();
+    assert!(survivors.len() >= 6, "fixture lost too many survivors");
+    for &i in &survivors {
+        let (x, y) = (&sim.finals[i], &proc.finals[i]);
+        assert_eq!(x.len(), y.len());
+        for (a, b) in x.iter().zip(y) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "simnet-BSP vs process: surviving node {i} diverged \
+                 ({a} vs {b})"
+            );
+        }
+    }
+    // Per-segment finite-time consensus holds on the last segment: all
+    // finally-live nodes agree exactly across the splices.
+    let last = sched.segments.last().unwrap();
+    let lead = a.finals[last.roster[0]][0];
+    for &i in &last.roster {
+        assert!(
+            (a.finals[i][0] - lead).abs() < 1e-9,
+            "live node {i} off consensus: {} vs {lead}",
+            a.finals[i][0]
+        );
+    }
+}
+
+#[test]
+fn elastic_churn_checkpoint_resume_is_bit_identical_on_every_backend() {
+    let n = 8;
+    let rounds = 18;
+    let every = 6;
+    let sched = churn_schedule(n, rounds);
+    for exec in backends() {
+        let run = |ckpt: &CkptConfig| -> ExecTrace {
+            run_elastic(
+                &exec,
+                consensus_factory(n, 31),
+                &sched,
+                ckpt,
+                &Telemetry::off(),
+            )
+            .unwrap()
+        };
+        let base = run(&CkptConfig::default());
+        let tag = format!("{} elastic churn", base.backend);
+        // A cadence policy on top of churn: the driver layers its
+        // forced boundary snapshots over the user's every-6 cadence.
+        let dir = uniq_ckpt_dir("elastic");
+        let policy = CheckpointPolicy {
+            every_n_rounds: every,
+            dir: dir.clone(),
+            keep_last: 0,
+            force_at: None,
+        };
+        let writing = CkptConfig {
+            policy: Some(policy.clone()),
+            resume: None,
+            roster: None,
+        };
+        let full = run(&writing);
+        assert_model_columns_eq(&base, &full, &format!("{tag} (writing)"));
+        // Cadence snapshot at round 6 — interior to the shrunken
+        // middle segment (which starts at 3 and ends past the join
+        // request at 7) — carries that segment's roster.
+        let mid = &sched.segments[1];
+        assert!(mid.start < every && every < mid.end);
+        let snap6 = policy.path_for(every);
+        assert!(snap6.exists(), "{tag}: no cadence snapshot at {snap6:?}");
+        let loaded = Snapshot::load(&snap6).unwrap();
+        assert_eq!(
+            loaded.roster,
+            Some(vec![0, 1, 2, 3, 4, 7]),
+            "{tag}: cadence snapshot must carry the shrunken roster"
+        );
+        let resumed = run(&CkptConfig {
+            policy: None,
+            resume: Some(snap6),
+            roster: None,
+        });
+        assert_model_columns_eq(
+            &base,
+            &resumed,
+            &format!("{tag} (resumed mid-segment)"),
+        );
+        // The second splice boundary's snapshot was rewritten by the
+        // driver, so it carries the *post-splice* roster (node 6
+        // rejoined) and the rejoiner's warm-started state. Resuming
+        // from it replays only the final segment.
+        let snap9 = policy.path_for(mid.end);
+        assert!(snap9.exists(), "{tag}: no boundary snapshot at {snap9:?}");
+        let loaded = Snapshot::load(&snap9).unwrap();
+        assert_eq!(
+            loaded.roster,
+            Some(vec![0, 1, 2, 3, 4, 6, 7]),
+            "{tag}: spliced snapshot must carry the post-splice roster"
+        );
+        let resumed = run(&CkptConfig {
+            policy: None,
+            resume: Some(snap9),
+            roster: None,
+        });
+        assert_model_columns_eq(
+            &base,
+            &resumed,
+            &format!("{tag} (resumed at splice)"),
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -3,18 +3,29 @@
 //! bytes-on-wire column, and the failure paths (worker crash, workloads
 //! with no wire form) surfacing as clean errors instead of hangs.
 
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
 use basegraph::ckpt::{CheckpointPolicy, CkptConfig};
 use basegraph::comm::CostModel;
 use basegraph::consensus::gaussian_init;
+use basegraph::exec::wire::{
+    self, read_frame, write_frame, ByteReader, ByteWriter,
+};
 use basegraph::exec::{
-    quadratic_fixed_targets, AnalyticExecutor, ConsensusWorkload, Executor,
-    ProcessExecutor, TrainSpec, TrainingWorkload,
+    quadratic_fixed_targets, run_elastic, AnalyticExecutor,
+    ConsensusWorkload, EvictSpec, Executor, ExecutorKind, ProcessExecutor,
+    TrainSpec, TrainingWorkload, Workload,
 };
 use basegraph::optim::OptimizerKind;
-use basegraph::topology::TopologyKind;
+use basegraph::telemetry::{Telemetry, TelemetryConfig};
+use basegraph::topology::resequence::{
+    splice_round, ElasticSchedule, RosterEvent,
+};
+use basegraph::topology::{GraphSequence, TopologyKind};
 use basegraph::train::TrainConfig;
+use basegraph::util::json;
 use basegraph::util::rng::Rng;
 
 fn process(shards: usize) -> ProcessExecutor {
@@ -194,8 +205,10 @@ fn worker_crash_at_round_boundary_recovers_bit_identical() {
             every_n_rounds: 2,
             dir: dir.clone(),
             keep_last: 3,
+            force_at: None,
         }),
         resume: None,
+        roster: None,
     };
     let p = ex
         .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
@@ -241,8 +254,10 @@ fn worker_crash_mid_round_recovers_bit_identical() {
             every_n_rounds: 2,
             dir: dir.clone(),
             keep_last: 3,
+            force_at: None,
         }),
         resume: None,
+        roster: None,
     };
     let (model, data) = quadratic_fixed_targets(n, 4, 9);
     let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
@@ -282,8 +297,10 @@ fn crash_before_first_snapshot_is_still_a_clean_error() {
             every_n_rounds: 4,
             dir: dir.clone(),
             keep_last: 3,
+            force_at: None,
         }),
         resume: None,
+        roster: None,
     };
     let err = ex
         .run(&mut ConsensusWorkload::new(init), &seq, 2 * seq.len())
@@ -306,4 +323,360 @@ fn workload_without_wire_form_is_refused_cleanly() {
     let mut w = TrainingWorkload::new(&model, &cfg, data, &[]);
     let err = process(2).run(&mut w, &seq, cfg.rounds).unwrap_err();
     assert!(err.contains("wire"), "got {err:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Elastic membership: negative protocol suite (a hand-rolled coordinator
+// speaking raw frames to a real worker) and the eviction ≡ scheduled-leave
+// equivalence.
+// ---------------------------------------------------------------------------
+
+// Protocol pins: frame kinds and the token env var of the worker wire
+// protocol. Deliberately restated here — if `exec::process` renumbers
+// them, these tests must break.
+const FRAME_HELLO: u8 = 1;
+const FRAME_CONFIG: u8 = 2;
+const FRAME_BUNDLE: u8 = 3;
+const FRAME_ERROR: u8 = 6;
+const TOKEN_ENV: &str = "BASEGRAPH_WORKER_TOKEN";
+
+/// A fake coordinator: bind a loopback listener, spawn one real
+/// `--worker` process against it, verify its HELLO, and hand the test
+/// the raw connection — so tests can send frames the real coordinator
+/// never would.
+struct FakeCoordinator {
+    child: Child,
+    conn: TcpStream,
+}
+
+impl FakeCoordinator {
+    fn spawn(shard: usize) -> FakeCoordinator {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = format!("tcp:{}", listener.local_addr().unwrap());
+        let token: u64 = 0xDEAD_BEEF_0BAD_F00D;
+        let child = Command::new(env!("CARGO_BIN_EXE_basegraph"))
+            .args(["--worker", &addr, &shard.to_string()])
+            .env(TOKEN_ENV, format!("{token:016x}"))
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        let (conn, _) = listener.accept().unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut fc = FakeCoordinator { child, conn };
+        let (kind, hello) = fc.read();
+        assert_eq!(kind, FRAME_HELLO, "worker must lead with HELLO");
+        let mut r = ByteReader::new(&hello);
+        assert_eq!(r.get_u32().unwrap() as usize, shard);
+        assert_eq!(
+            r.get_u64().unwrap(),
+            token,
+            "worker must echo the handshake token"
+        );
+        fc
+    }
+
+    fn read(&mut self) -> (u8, Vec<u8>) {
+        let (kind, payload, _) = read_frame(&mut self.conn).unwrap();
+        (kind, payload)
+    }
+
+    fn send(&mut self, kind: u8, payload: &[u8]) {
+        write_frame(&mut self.conn, kind, payload).unwrap();
+    }
+
+    /// Drain worker frames (observations, bundles) until it reports an
+    /// ERROR; the 30 s read timeout turns a missing error into a panic,
+    /// never a hang.
+    fn read_until_error(&mut self) -> String {
+        loop {
+            let (kind, payload) = self.read();
+            if kind == FRAME_ERROR {
+                return String::from_utf8_lossy(&payload).into_owned();
+            }
+        }
+    }
+}
+
+impl Drop for FakeCoordinator {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Encode a CONFIG frame in the worker wire layout (the decode order in
+/// `exec::process::run_worker`, restated as a pin).
+#[allow(clippy::too_many_arguments)]
+fn config_frame(
+    n: usize,
+    rounds: usize,
+    shards: usize,
+    shard: usize,
+    epoch: u32,
+    owner: &[usize],
+    seq: &GraphSequence,
+    spec: &[u8],
+    roster: &[u32],
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_usize(n);
+    w.put_usize(rounds);
+    w.put_usize(shards);
+    w.put_usize(shard);
+    w.put_u32(epoch);
+    for &o in owner {
+        w.put_u32(o as u32);
+    }
+    let mut sw = ByteWriter::new();
+    wire::encode_seq(seq, &mut sw);
+    w.put_bytes(&sw.finish());
+    w.put_bytes(spec);
+    w.put_u64(u64::MAX); // no crash injection
+    w.put_u64(u64::MAX); // no mid-round crash injection
+    w.put_u64(0); // checkpoint cadence off
+    w.put_u64(u64::MAX); // no forced snapshot
+    w.put_u64(0); // start round 0
+    w.put_usize(0); // no resume states
+    w.put_usize(roster.len());
+    for &id in roster {
+        w.put_u32(id);
+    }
+    w.finish()
+}
+
+fn consensus_spec(n: usize, d: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    ConsensusWorkload::new(gaussian_init(n, d, &mut rng))
+        .wire_spec()
+        .expect("consensus has a wire form")
+}
+
+/// A CONFIG whose workload spec leads with an unknown tag must come back
+/// as a clean ERROR frame, not a crash or a hang.
+#[test]
+fn config_with_unknown_spec_tag_is_a_clean_error() {
+    let n = 4;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut fc = FakeCoordinator::spawn(0);
+    let cfg =
+        config_frame(n, 4, 2, 0, 0, &[0, 0, 1, 1], &seq, &[0xEE], &[]);
+    fc.send(FRAME_CONFIG, &cfg);
+    let err = fc.read_until_error();
+    assert!(err.contains("unknown workload spec tag"), "got {err:?}");
+}
+
+/// The joiner-mismatch case: a structurally valid spec whose codec tail
+/// doesn't decode (a joiner configured with a codec this build doesn't
+/// know) gets a clean error naming the codec.
+#[test]
+fn config_with_mismatched_codec_is_a_clean_error() {
+    let n = 4;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let mut spec = consensus_spec(n, 2, 3);
+    // The codec rides at the spec tail; corrupt its tag byte.
+    *spec.last_mut().unwrap() = 0xEE;
+    let mut fc = FakeCoordinator::spawn(0);
+    let cfg = config_frame(n, 4, 2, 0, 0, &[0, 0, 1, 1], &seq, &spec, &[]);
+    fc.send(FRAME_CONFIG, &cfg);
+    let err = fc.read_until_error();
+    assert!(err.contains("unknown codec id"), "got {err:?}");
+}
+
+/// A roster that is not a strictly ascending subset of `0..n` (a joiner
+/// configured against the wrong capacity) is rejected before any round
+/// runs.
+#[test]
+fn config_with_bad_roster_is_a_clean_error() {
+    let n = 4;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let spec = consensus_spec(n, 2, 3);
+    let mut fc = FakeCoordinator::spawn(0);
+    let cfg = config_frame(
+        n,
+        4,
+        2,
+        0,
+        0,
+        &[0, 0, 1, 1],
+        &seq,
+        &spec,
+        &[2, 1], // descending: invalid
+    );
+    fc.send(FRAME_CONFIG, &cfg);
+    let err = fc.read_until_error();
+    assert!(err.contains("strictly ascending subset"), "got {err:?}");
+}
+
+/// Round-epoch fencing: a BUNDLE stamped with an older epoch than the
+/// worker's CONFIG is rejected as stale — the frame that would smuggle
+/// pre-resequence state across a roster change.
+#[test]
+fn stale_epoch_bundle_is_rejected() {
+    let n = 4;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let spec = consensus_spec(n, 2, 5);
+    let mut fc = FakeCoordinator::spawn(0);
+    let cfg = config_frame(
+        n,
+        2 * seq.len(),
+        2,
+        0,
+        3, // coordinator epoch after some resequencing
+        &[0, 0, 1, 1],
+        &seq,
+        &spec,
+        &[],
+    );
+    fc.send(FRAME_CONFIG, &cfg);
+    // The worker streams observations and, at the first cross-shard
+    // phase, its own epoch-3 bundle — then blocks on shard 1's reply.
+    // Answer with an epoch-2 frame.
+    let err = loop {
+        let (kind, payload) = fc.read();
+        assert_ne!(
+            kind, FRAME_ERROR,
+            "worker errored before the bundle exchange: {}",
+            String::from_utf8_lossy(&payload)
+        );
+        if kind == FRAME_BUNDLE {
+            let mut r = ByteReader::new(&payload);
+            assert_eq!(
+                r.get_u32().unwrap(),
+                3,
+                "worker must stamp bundles with the config epoch"
+            );
+            let round = r.get_u32().unwrap();
+            let mut b = ByteWriter::new();
+            b.put_u32(2); // stale epoch
+            b.put_u32(round);
+            b.put_u32(1); // src shard
+            b.put_u32(0); // dst shard
+            b.put_usize(0);
+            fc.send(FRAME_BUNDLE, &b.finish());
+            break fc.read_until_error();
+        }
+    };
+    assert!(err.contains("stale-epoch"), "got {err:?}");
+}
+
+/// A join requested mid-sweep must not take effect until the next phase
+/// boundary (the round-epoch fence) — asserted on the schedule and then
+/// end to end on the process backend via the `node_joined` telemetry.
+#[test]
+fn join_during_inflight_round_defers_to_the_fence() {
+    let n = 8;
+    let requested = 4;
+    let events =
+        [RosterEvent::leave(0, 6), RosterEvent::join(requested, 6)];
+    let sched = ElasticSchedule::build(n, 1, 12, &events).unwrap();
+    assert_eq!(sched.segments.len(), 2);
+    let len0 = sched.segments[0].seq.len();
+    let fence = splice_round(0, len0, requested);
+    assert_eq!(sched.segments[1].start, fence);
+    assert_eq!(sched.segments[1].joined, vec![6]);
+    assert_eq!(fence % len0, 0, "the fence is a phase boundary");
+    if requested % len0 != 0 {
+        assert_ne!(fence, requested, "mid-phase join must be deferred");
+    }
+
+    let dir = uniq_ckpt_dir("fence");
+    let path = dir.join("fence.ndjson");
+    let tcfg = TelemetryConfig {
+        path: Some(path.to_str().unwrap().to_string()),
+        http: None,
+    };
+    let session = tcfg.session().unwrap();
+    let exec = ExecutorKind::process(2)
+        .with_worker_bin(env!("CARGO_BIN_EXE_basegraph"));
+    run_elastic(
+        &exec,
+        || {
+            let mut rng = Rng::new(21);
+            Ok(ConsensusWorkload::new(gaussian_init(8, 1, &mut rng)))
+        },
+        &sched,
+        &CkptConfig::default(),
+        &session.run("").unwrap(),
+    )
+    .unwrap();
+    let stream = std::fs::read_to_string(&path).unwrap();
+    let joined: Vec<usize> = stream
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .filter(|v| v.get("event").unwrap().as_str() == Some("node_joined"))
+        .map(|v| v.get("round").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(
+        joined,
+        vec![fence],
+        "node_joined must carry the fence round, not the requested one"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Heartbeat eviction recovers bit-identically to a scheduled leave at
+/// roster-change granularity: killing shard 1 at the cadence-3 snapshot
+/// with eviction enabled must leave the survivors exactly where a
+/// scheduled leave of those nodes at the same boundary leaves them.
+#[test]
+fn heartbeat_eviction_matches_scheduled_leave_bit_identically() {
+    let n = 8;
+    let seed = 17;
+    let rounds = 9;
+    // Scheduled-leave reference: nodes 4..8 (= shard 1 under contiguous
+    // 2-way sharding) leave at round 3.
+    let events: Vec<RosterEvent> =
+        (4..8).map(|i| RosterEvent::leave(3, i)).collect();
+    let sched = ElasticSchedule::build(n, 1, rounds, &events).unwrap();
+    assert_eq!(sched.segments.len(), 2);
+    assert_eq!(
+        sched.segments[1].start,
+        3,
+        "the leave must splice exactly at the sweep boundary"
+    );
+    let scheduled = run_elastic(
+        &ExecutorKind::analytic(),
+        || {
+            let mut rng = Rng::new(seed);
+            Ok(ConsensusWorkload::new(gaussian_init(n, 2, &mut rng)))
+        },
+        &sched,
+        &CkptConfig::default(),
+        &Telemetry::off(),
+    )
+    .unwrap();
+
+    // Eviction run: same capacity-embedded sequence, shard 1 killed
+    // entering round 3 — exactly where the cadence-3 snapshot sits —
+    // with eviction at the same Base-(k+1) degree.
+    let dir = uniq_ckpt_dir("evict");
+    let mut ex = process(2);
+    ex.io_timeout = Duration::from_secs(30);
+    ex.fault_crash = Some((1, 3));
+    ex.evict = Some(EvictSpec { k: 1 });
+    ex.ckpt = CkptConfig {
+        policy: Some(CheckpointPolicy {
+            every_n_rounds: 3,
+            dir: dir.clone(),
+            keep_last: 3,
+            force_at: None,
+        }),
+        resume: None,
+        roster: None,
+    };
+    let mut rng = Rng::new(seed);
+    let mut w = ConsensusWorkload::new(gaussian_init(n, 2, &mut rng));
+    let evicted =
+        ex.run(&mut w, &sched.segments[0].seq, rounds).unwrap();
+
+    for i in 0..4 {
+        let a: Vec<u64> =
+            scheduled.finals[i].iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> =
+            evicted.finals[i].iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "survivor {i} must be bit-identical");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

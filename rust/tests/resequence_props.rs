@@ -1,0 +1,235 @@
+//! Property layer for online Base-(k+1) resequencing: randomized
+//! rosters and roster deltas, checked against the gossip-plan invariants
+//! the elastic driver relies on — every rebuilt plan doubly stochastic
+//! and symmetric at degree ≤ k, ghosts isolated on identity rows, exact
+//! consensus of the live cohort within the predicted finite horizon
+//! (one full sweep), and schedule segments that stay contiguous,
+//! phase-aligned and delta-consistent under arbitrary (including
+//! illegal) event traces.
+
+use basegraph::topology::resequence::{
+    embedded_base, warm_start_donors, ElasticSchedule, RosterEvent,
+    MIN_LIVE,
+};
+use basegraph::util::rng::Rng;
+
+/// A random strictly-ascending roster of at least MIN_LIVE ids.
+fn random_roster(rng: &mut Rng, capacity: usize) -> Vec<usize> {
+    let m = rng.range(MIN_LIVE, capacity + 1);
+    let mut ids = rng.choose_k(capacity, m);
+    ids.sort_unstable();
+    ids
+}
+
+#[test]
+fn embedded_plans_hold_gossip_invariants_for_random_rosters() {
+    // n ∈ 2..=257 spans the paper's "any n" claim across several
+    // powers-of-(k+1) boundaries; k ∈ 1..=4 covers the CLI's base-2
+    // through base-5.
+    let mut rng = Rng::new(0x5E9);
+    for trial in 0..60 {
+        let capacity = rng.range(MIN_LIVE, 258);
+        let k = rng.range(1, 5);
+        let roster = random_roster(&mut rng, capacity);
+        let start = rng.below(64);
+        let seq =
+            embedded_base(capacity, &roster, k, start, "prop").unwrap();
+        assert_eq!(seq.n, capacity);
+        for (pi, p) in seq.phases.iter().enumerate() {
+            assert!(
+                p.is_doubly_stochastic(1e-9),
+                "trial {trial} phase {pi}: not doubly stochastic"
+            );
+            assert!(
+                p.is_symmetric(1e-9),
+                "trial {trial} phase {pi}: not symmetric"
+            );
+            for i in 0..capacity {
+                let deg = p.neighbors(i).len();
+                assert!(
+                    deg <= k,
+                    "trial {trial} phase {pi}: node {i} has degree \
+                     {deg} > k = {k}"
+                );
+                if roster.binary_search(&i).is_err() {
+                    assert_eq!(
+                        deg, 0,
+                        "trial {trial}: ghost {i} has neighbors"
+                    );
+                    assert!(
+                        (p.self_weight(i) - 1.0).abs() < 1e-12,
+                        "trial {trial}: ghost {i} is not identity"
+                    );
+                }
+            }
+        }
+        // Exact consensus of the live cohort within the predicted
+        // finite horizon: one full sweep, starting from the rotation's
+        // aligned phase. Ghost values pass through bit-exactly.
+        let init: Vec<f64> =
+            (0..capacity).map(|_| rng.normal()).collect();
+        let mut xs: Vec<Vec<f64>> =
+            init.iter().map(|&v| vec![v]).collect();
+        for t in 0..seq.len() {
+            xs = seq.phase(start + t).gossip(&xs);
+        }
+        let mean = roster.iter().map(|&i| init[i]).sum::<f64>()
+            / roster.len() as f64;
+        for &i in &roster {
+            assert!(
+                (xs[i][0] - mean).abs() < 1e-9,
+                "trial {trial}: live node {i} at {} after one sweep \
+                 (mean {mean})",
+                xs[i][0]
+            );
+        }
+        for i in 0..capacity {
+            if roster.binary_search(&i).is_err() {
+                assert_eq!(
+                    xs[i][0].to_bits(),
+                    init[i].to_bits(),
+                    "trial {trial}: ghost {i} was touched"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn random_churn_schedules_keep_segment_invariants() {
+    let mut rng = Rng::new(0xA11CE);
+    for trial in 0..60 {
+        let capacity = rng.range(MIN_LIVE, 130);
+        let k = rng.range(1, 5);
+        let rounds = rng.range(1, 80);
+        let n_events = rng.below(24);
+        // Deliberately unfiltered: out-of-capacity nodes, duplicate
+        // leaves, joins of live nodes and past-the-end rounds must all
+        // be skipped deterministically by the builder.
+        let events: Vec<RosterEvent> = (0..n_events)
+            .map(|_| {
+                let node = rng.below(capacity + 2);
+                let round = rng.below(rounds + 4);
+                if rng.chance(0.5) {
+                    RosterEvent::leave(round, node)
+                } else {
+                    RosterEvent::join(round, node)
+                }
+            })
+            .collect();
+        let s =
+            ElasticSchedule::build(capacity, k, rounds, &events).unwrap();
+        assert!(!s.segments.is_empty());
+        assert_eq!(s.segments.first().unwrap().start, 0);
+        assert_eq!(s.segments.last().unwrap().end, rounds);
+        for w in s.segments.windows(2) {
+            assert_eq!(
+                w[0].end, w[1].start,
+                "trial {trial}: segments not contiguous"
+            );
+        }
+        let mut prev: Option<&basegraph::topology::resequence::RosterSegment> =
+            None;
+        for seg in &s.segments {
+            assert!(seg.roster.len() >= MIN_LIVE, "trial {trial}");
+            assert!(
+                seg.roster.windows(2).all(|w| w[0] < w[1]),
+                "trial {trial}: roster not strictly ascending"
+            );
+            assert!(*seg.roster.last().unwrap() < capacity);
+            assert_eq!(seg.seq.n, capacity);
+            // Splice rule: every non-final segment ends on a phase
+            // boundary of its own sequence.
+            if seg.end < rounds {
+                assert_eq!(
+                    (seg.end - seg.start) % seg.seq.len(),
+                    0,
+                    "trial {trial}: segment [{}, {}) not phase-aligned \
+                     (len {})",
+                    seg.start,
+                    seg.end,
+                    seg.seq.len()
+                );
+            }
+            if let Some(p) = prev {
+                // The (left, joined) delta reproduces the roster.
+                let mut expect = p.roster.clone();
+                for &l in &seg.left {
+                    let pos = expect
+                        .binary_search(&l)
+                        .expect("left node must have been live");
+                    expect.remove(pos);
+                }
+                for &j in &seg.joined {
+                    let pos = expect
+                        .binary_search(&j)
+                        .expect_err("joined node must have been dead");
+                    expect.insert(pos, j);
+                }
+                assert_eq!(
+                    expect, seg.roster,
+                    "trial {trial}: delta does not reproduce roster"
+                );
+                // Every joiner has warm-start donors that were live on
+                // both sides of the splice.
+                for &j in &seg.joined {
+                    let donors = warm_start_donors(seg, &p.roster, j);
+                    assert!(
+                        !donors.is_empty(),
+                        "trial {trial}: joiner {j} has no donors"
+                    );
+                    for &d in &donors {
+                        assert!(p.roster.binary_search(&d).is_ok());
+                        assert!(seg.roster.binary_search(&d).is_ok());
+                        assert_ne!(d, j);
+                    }
+                }
+            }
+            prev = Some(seg);
+        }
+        // Resume lookup: boundaries prefer the post-splice segment,
+        // interior rounds land in their containing segment.
+        for (i, seg) in s.segments.iter().enumerate() {
+            assert_eq!(s.segment_index_for_resume(seg.start), i);
+            if seg.end > seg.start + 1 && seg.end <= rounds {
+                assert_eq!(s.segment_index_for_resume(seg.end - 1), i);
+            }
+        }
+    }
+}
+
+#[test]
+fn schedules_are_deterministic_in_their_inputs() {
+    let mut rng = Rng::new(7);
+    for _ in 0..20 {
+        let capacity = rng.range(MIN_LIVE, 40);
+        let k = rng.range(1, 4);
+        let rounds = rng.range(2, 40);
+        let events: Vec<RosterEvent> = (0..rng.below(10))
+            .map(|_| {
+                let node = rng.below(capacity);
+                let round = rng.below(rounds);
+                if rng.chance(0.5) {
+                    RosterEvent::leave(round, node)
+                } else {
+                    RosterEvent::join(round, node)
+                }
+            })
+            .collect();
+        let a = ElasticSchedule::build(capacity, k, rounds, &events)
+            .unwrap();
+        // Same inputs — and any permutation of the event list — give
+        // the same segment structure (the builder sorts).
+        let mut shuffled = events.clone();
+        shuffled.reverse();
+        let b = ElasticSchedule::build(capacity, k, rounds, &shuffled)
+            .unwrap();
+        assert_eq!(a.segments.len(), b.segments.len());
+        for (x, y) in a.segments.iter().zip(&b.segments) {
+            assert_eq!((x.start, x.end), (y.start, y.end));
+            assert_eq!(x.roster, y.roster);
+            assert_eq!(x.joined, y.joined);
+            assert_eq!(x.left, y.left);
+        }
+    }
+}
