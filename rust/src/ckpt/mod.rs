@@ -179,6 +179,9 @@ fn get_record(r: &mut ByteReader) -> Result<RoundRecord, String> {
         cum_wire_bytes: r.get_u64()?,
         sim_seconds: r.get_f64()?,
         wall_seconds: r.get_f64()?,
+        // Diagnostic kernel timing is not persisted (keeps the snapshot
+        // format byte-identical to pre-kernel files).
+        combine_ns: 0,
     })
 }
 
@@ -679,6 +682,7 @@ mod tests {
                     cum_wire_bytes: 999,
                     sim_seconds: 0.125,
                     wall_seconds: 0.001,
+                    combine_ns: 7, // not persisted: must read back as 0
                 },
             ],
             clock: 1.5,
@@ -712,6 +716,7 @@ mod tests {
         assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
         assert!(a.consensus_error.is_nan());
         assert_eq!(a.cum_wire_bytes, b.cum_wire_bytes);
+        assert_eq!(a.combine_ns, 0, "kernel timing is not persisted");
         assert!(back.validate(3, "Base-4 Graph", 10).is_ok());
         assert!(back.validate(4, "Base-4 Graph", 10).is_err());
         assert!(back.validate(3, "Ring", 10).is_err());

@@ -54,11 +54,15 @@
 //!   size is a constant of (d, k), never data-dependent.
 
 use crate::exec::wire::{ByteReader, ByteWriter};
+use crate::kernels::{self, chunk_exp_of, pow2f};
+
+// The numeric workhorses (f16 conversion, int8 chunk exponent / codes,
+// bf16 pack) live in [`crate::kernels`] so the SIMD dispatch layer and
+// the codec share one definition; re-exported here for compatibility.
+pub use crate::kernels::{f16_bits_to_f32, f32_to_f16_bits, INT8_CHUNK};
 
 /// Version byte leading every encoded slot; bumped on layout change.
 pub const CODEC_WIRE_VERSION: u8 = 1;
-/// int8 shared-exponent chunk length.
-pub const INT8_CHUNK: usize = 256;
 /// `--codec topk` without an explicit permille keeps the top 10%.
 pub const DEFAULT_TOPK_PERMILLE: u32 = 100;
 
@@ -235,16 +239,12 @@ impl Codec {
         }
         if let Some(e) = ef.as_deref_mut() {
             debug_assert_eq!(e.len(), x.len());
-            for (v, r) in x.iter_mut().zip(e.iter_mut()) {
-                *v += *r; // x' = x + e
-                *r = *v; // stash x' so the residual can be x' − q
-            }
+            // x' = x + e; stash x' so the residual can be x' − q.
+            kernels::ef_accumulate_f32(x, e);
         }
         self.quantize_f32(x);
         if let Some(e) = ef.as_deref_mut() {
-            for (v, r) in x.iter().zip(e.iter_mut()) {
-                *r -= *v; // e = x' − Q(x')
-            }
+            kernels::ef_residual_f32(e, x); // e = x' − Q(x')
         }
     }
 
@@ -256,34 +256,18 @@ impl Codec {
         if self.is_identity() {
             return;
         }
-        let mut tmp: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut tmp = vec![0.0f32; x.len()];
+        kernels::narrow_f64(x, &mut tmp);
         self.quantize_f32(&mut tmp);
-        for (o, v) in x.iter_mut().zip(&tmp) {
-            *o = *v as f64;
-        }
+        kernels::widen_f32(&tmp, x);
     }
 
     fn quantize_f32(&self, x: &mut [f32]) {
         match self {
             Codec::Identity => {}
-            Codec::Bf16 => {
-                for v in x.iter_mut() {
-                    *v = f32::from_bits(v.to_bits() & 0xFFFF_0000);
-                }
-            }
-            Codec::F16 => {
-                for v in x.iter_mut() {
-                    *v = f16_bits_to_f32(f32_to_f16_bits(*v));
-                }
-            }
-            Codec::Int8 => {
-                for chunk in x.chunks_mut(INT8_CHUNK) {
-                    let s = pow2f(chunk_exp_of(chunk));
-                    for v in chunk.iter_mut() {
-                        *v = int8_code(*v, s) as f32 * s;
-                    }
-                }
-            }
+            Codec::Bf16 => kernels::bf16_quantize_f32(x),
+            Codec::F16 => kernels::f16_quantize_f32(x),
+            Codec::Int8 => kernels::int8_quantize_f32(x),
             Codec::TopK { .. } => {
                 let k = self.topk_k(x.len());
                 if k < x.len() {
@@ -346,9 +330,7 @@ impl Codec {
                 }
             }
             Codec::Bf16 => {
-                for &v in x {
-                    w.put_u16((v.to_bits() >> 16) as u16);
-                }
+                w.put_raw_with(2 * x.len(), |b| kernels::bf16_pack(x, b));
             }
             Codec::F16 => {
                 for &v in x {
@@ -360,9 +342,9 @@ impl Codec {
                     let e = chunk_exp_of(chunk);
                     let s = pow2f(e);
                     w.put_u8(e as u8);
-                    for &v in chunk {
-                        w.put_u8(int8_code(v, s) as u8);
-                    }
+                    w.put_raw_with(chunk.len(), |b| {
+                        kernels::int8_codes(chunk, s, b)
+                    });
                 }
             }
             Codec::TopK { .. } => {
@@ -395,9 +377,9 @@ impl Codec {
                 }
             }
             Codec::Bf16 => {
-                for _ in 0..n {
-                    out.push(f32::from_bits((r.get_u16()? as u32) << 16));
-                }
+                let raw = r.get_raw(2 * n)?;
+                out.resize(n, 0.0);
+                kernels::bf16_unpack(raw, out);
             }
             Codec::F16 => {
                 for _ in 0..n {
@@ -409,9 +391,10 @@ impl Codec {
                 while left > 0 {
                     let c = left.min(INT8_CHUNK);
                     let s = pow2f(r.get_u8()? as i8);
-                    for _ in 0..c {
-                        out.push((r.get_u8()? as i8) as f32 * s);
-                    }
+                    let codes = r.get_raw(c)?;
+                    let start = out.len();
+                    out.resize(start + c, 0.0);
+                    kernels::int8_dequant(codes, s, &mut out[start..]);
                     left -= c;
                 }
             }
@@ -461,7 +444,8 @@ impl Codec {
                 }
             }
             _ => {
-                let tmp: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                let mut tmp = vec![0.0f32; x.len()];
+                kernels::narrow_f64(x, &mut tmp);
                 self.encode_slot_f32(&tmp, w);
             }
         }
@@ -487,115 +471,11 @@ impl Codec {
                 let mut tmp = Vec::new();
                 self.decode_slot_f32_into(r, &mut tmp)?;
                 out.clear();
-                out.extend(tmp.iter().map(|&v| v as f64));
+                out.resize(tmp.len(), 0.0);
+                kernels::widen_f32(&tmp, out);
                 Ok(())
             }
         }
-    }
-}
-
-/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
-/// NaN payloads preserved in the top mantissa bit).
-pub fn f32_to_f16_bits(v: f32) -> u16 {
-    let bits = v.to_bits();
-    let sign = ((bits >> 16) & 0x8000) as u16;
-    let exp = ((bits >> 23) & 0xFF) as i32;
-    let man = bits & 0x007F_FFFF;
-    if exp == 0xFF {
-        // Inf / NaN: keep NaN-ness (quiet bit) explicitly.
-        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
-    }
-    let e = exp - 127 + 15;
-    if e >= 0x1F {
-        return sign | 0x7C00; // overflow → inf
-    }
-    if e <= 0 {
-        // Subnormal half (or zero). Values below the smallest subnormal
-        // round to ±0.
-        if e < -10 {
-            return sign;
-        }
-        let man = man | 0x0080_0000; // implicit leading 1
-        let shift = (14 - e) as u32; // 24-bit significand → ≤10 bits
-        let half = 1u32 << (shift - 1);
-        let rem = man & ((1u32 << shift) - 1);
-        let mut h = man >> shift;
-        if rem > half || (rem == half && (h & 1) == 1) {
-            h += 1; // may carry into the smallest normal — correct
-        }
-        return sign | h as u16;
-    }
-    let man16 = man >> 13;
-    let rem = man & 0x1FFF;
-    let mut h = ((e as u32) << 10) | man16;
-    if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
-        h += 1; // mantissa carry rounds into the next exponent / inf
-    }
-    sign | h as u16
-}
-
-/// IEEE binary16 bits → f32 (exact — every f16 is representable).
-pub fn f16_bits_to_f32(h: u16) -> f32 {
-    let sign = ((h & 0x8000) as u32) << 16;
-    let exp = ((h >> 10) & 0x1F) as u32;
-    let man = (h & 0x03FF) as u32;
-    let bits = if exp == 0x1F {
-        sign | 0x7F80_0000 | (man << 13)
-    } else if exp == 0 {
-        if man == 0 {
-            sign
-        } else {
-            // Subnormal half: normalize into an f32 exponent.
-            let mut e: i32 = 113; // 127 − 15 + 1
-            let mut m = man;
-            while m & 0x0400 == 0 {
-                m <<= 1;
-                e -= 1;
-            }
-            sign | ((e as u32) << 23) | ((m & 0x03FF) << 13)
-        }
-    } else {
-        sign | ((exp + 112) << 23) | (man << 13)
-    };
-    f32::from_bits(bits)
-}
-
-/// Shared power-of-two exponent for an int8 chunk, from the max-|x| by
-/// bit inspection: `2^e` is the largest scale with `maxabs/2^e < 128`
-/// (clamped to the i8-storable, f32-exact range).
-fn chunk_exp_of(chunk: &[f32]) -> i8 {
-    let mut maxabs = 0.0f32;
-    for &v in chunk {
-        let a = v.abs();
-        if a > maxabs {
-            maxabs = a; // NaN compares false → skipped
-        }
-    }
-    if maxabs == 0.0 {
-        return 0;
-    }
-    let biased = ((maxabs.to_bits() >> 23) & 0xFF) as i32;
-    let exp2 = if biased == 0 { -127 } else { biased - 127 };
-    (exp2 - 6).clamp(-127, 121) as i8
-}
-
-/// `2^e` as f32 for `e ∈ [−127, 121]` (−127 is the one subnormal case).
-fn pow2f(e: i8) -> f32 {
-    let e = e as i32;
-    if e >= -126 {
-        f32::from_bits(((e + 127) as u32) << 23)
-    } else {
-        f32::from_bits(1u32 << 22) // 2^−127
-    }
-}
-
-/// Quantize one value against a power-of-two scale (NaN → 0).
-fn int8_code(v: f32, s: f32) -> i8 {
-    let c = (v / s).round();
-    if c.is_nan() {
-        0
-    } else {
-        c.clamp(-127.0, 127.0) as i8
     }
 }
 

@@ -83,22 +83,18 @@ pub fn consensus_error(xs: &[Vec<f64>]) -> f64 {
         mean.fill(0.0);
         // `get(start..)` (not a hard slice) keeps the historical zip
         // tolerance for ragged rows: short rows contribute only the
-        // dimensions they have.
+        // dimensions they have. The accumulate and normalize passes are
+        // lane-parallel kernels; the squared-error pass keeps its single
+        // serial accumulator fed in element order (the kernel contract),
+        // so chunk accumulation order is unchanged.
         for x in xs {
             let xc = x.get(start..).unwrap_or(&[]);
-            for (m, v) in mean.iter_mut().zip(xc) {
-                *m += v;
-            }
+            crate::kernels::add_assign_f64(mean, xc);
         }
-        for m in mean.iter_mut() {
-            *m /= n as f64;
-        }
+        crate::kernels::div_assign_f64(mean, n as f64);
         for x in xs {
             let xc = x.get(start..).unwrap_or(&[]);
-            for (m, v) in mean.iter().zip(xc) {
-                let dvi = v - m;
-                err += dvi * dvi;
-            }
+            crate::kernels::sq_err_acc_f64(mean, xc, &mut err);
         }
         start += w;
     }

@@ -260,6 +260,7 @@ pub(super) fn run_lockstep<W: Workload>(
                 let scr = slot.as_mut().expect("scratch allocated above");
                 w.combine_into(node, i, r, plan, row, scr);
             };
+        let combine_t0 = Instant::now();
         match pool {
             Some(pool) if parallel_combine => {
                 pool.for_each_mut2(&mut nodes, &mut scratch, combine);
@@ -271,6 +272,7 @@ pub(super) fn run_lockstep<W: Workload>(
                 }
             }
         }
+        let combine_ns = combine_t0.elapsed().as_nanos() as u64;
 
         // 5. Comm accounting: one α–β bulk-synchronous round per slot
         //    (the busiest node serializes its sends).
@@ -285,6 +287,7 @@ pub(super) fn run_lockstep<W: Workload>(
         rec.cum_bytes = ledger.bytes;
         rec.sim_seconds = ledger.sim_seconds;
         rec.wall_seconds = t0.elapsed().as_secs_f64();
+        rec.combine_ns = combine_ns;
         records.push(rec);
         let committed = records.last().expect("pushed above");
         tele.emit_with(|| Event::round(committed));

@@ -285,6 +285,15 @@ impl ByteWriter {
         self.buf.extend_from_slice(b);
     }
 
+    /// Append `n` raw bytes filled in place by `f` — lets a bulk encoder
+    /// (the codec pack kernels) write straight into the frame buffer
+    /// instead of byte-at-a-time through the typed putters.
+    pub fn put_raw_with(&mut self, n: usize, f: impl FnOnce(&mut [u8])) {
+        let start = self.buf.len();
+        self.buf.resize(start + n, 0);
+        f(&mut self.buf[start..]);
+    }
+
     pub fn put_str(&mut self, s: &str) {
         self.put_bytes(s.as_bytes());
     }
@@ -337,6 +346,13 @@ impl<'a> ByteReader<'a> {
 
     pub fn get_u8(&mut self) -> Result<u8, String> {
         Ok(self.take(1, "u8")?[0])
+    }
+
+    /// Borrow `n` raw bytes with **no** length prefix — the inverse of
+    /// [`ByteWriter::put_raw`] / [`ByteWriter::put_raw_with`] for bulk
+    /// decoders that know the region size from their own header.
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8], String> {
+        self.take(n, "raw bytes")
     }
 
     pub fn get_u16(&mut self) -> Result<u16, String> {

@@ -1,0 +1,558 @@
+//! Runtime-dispatched SIMD kernels for the hot elementwise loops.
+//!
+//! Every O(d) inner loop on the round path — the gossip combine
+//! (`train::gossip_combine_slots`, `topology::GossipPlan::gossip_row*`),
+//! the optimizer half-steps (`optim`), the codec quantizers and wire
+//! pack/unpack (`codec`), and the `consensus_error` accumulation —
+//! routes through this module. Three backends implement each op:
+//!
+//! - [`scalar`]: the reference implementation, always available; it *is*
+//!   the semantic contract.
+//! - `x86` (x86-64): AVX2, selected at runtime via
+//!   `is_x86_feature_detected!("avx2")`.
+//! - `neon` (aarch64): NEON, baseline on aarch64 — no detection needed.
+//!
+//! # Bit-identity contract
+//!
+//! Vector and scalar paths produce **bit-identical** results, so kernel
+//! dispatch can never perturb the cross-backend equivalence suite:
+//!
+//! - Every kernel is lane-parallel elementwise — no cross-lane shuffles
+//!   feed arithmetic, and reductions (`sq_err_acc_f64`) keep a single
+//!   serial accumulator fed in element order.
+//! - **No FMA contraction**: vector code uses explicit multiply + add
+//!   intrinsics (which LLVM never fuses), and rustc does not contract
+//!   scalar `a * b + c` either. AVX2 does not imply FMA and the `fma`
+//!   feature is never enabled.
+//! - Per-element operation order and operand order are unchanged from
+//!   the scalar source (mul/add/sub/div are IEEE exact-rounded, so a
+//!   lane computes exactly what the scalar loop computed; NaN payload
+//!   propagation follows operand order, which is preserved).
+//! - The two non-obvious emulations — x86's round-half-away-from-zero
+//!   (no native instruction) and NaN/±0 handling in the int8 pipeline —
+//!   are documented at their definitions and pinned by
+//!   `tests/kernel_props.rs` on adversarial inputs (NaN, subnormals,
+//!   ±0, ±inf).
+//! - binary16 (f16) conversion is branchy round-to-nearest-even with
+//!   subnormal support; it stays scalar on every path (the dispatch is
+//!   uniform, the implementation is not worth the bit-exactness risk).
+//!
+//! # Selection
+//!
+//! The `BASEGRAPH_KERNELS` environment variable overrides dispatch:
+//! `auto` (or unset) picks the best available vector path, `scalar`
+//! forces the reference path (the CI fallback lane, and one side of the
+//! `basegraph bench` A/B columns). Anything else is a startup error.
+//! [`with_forced`] temporarily pins a path for benches and tests.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// Environment variable overriding kernel dispatch (`scalar` | `auto`).
+pub const KERNELS_ENV: &str = "BASEGRAPH_KERNELS";
+
+/// A kernel implementation path. Variants exist only on architectures
+/// that can execute them, so holding a `Path` implies compile-time
+/// availability (runtime availability is checked at dispatch-table
+/// construction, never per call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// The reference implementation (always available).
+    Scalar,
+    /// AVX2 (x86-64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Path {
+    /// Stable name for bench JSON / logs: `scalar`, `avx2`, `neon`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Path::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Path::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Path::Neon => "neon",
+        }
+    }
+}
+
+/// The best vector path this CPU can execute, if any.
+pub fn vector_path() -> Option<Path> {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return Some(Path::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    return Some(Path::Neon);
+    #[cfg(not(target_arch = "aarch64"))]
+    None
+}
+
+/// What `auto` resolves to on this CPU (ignores the env override — this
+/// is the "auto" side of a bench A/B even under a forced-scalar lane).
+pub fn auto_path() -> Path {
+    vector_path().unwrap_or(Path::Scalar)
+}
+
+/// `vector_path()` as a bench-JSON label (`avx2`/`neon`/`none`).
+pub fn vector_label() -> &'static str {
+    match vector_path() {
+        Some(p) => p.label(),
+        None => "none",
+    }
+}
+
+/// Parse a `BASEGRAPH_KERNELS` value. `Ok(true)` forces scalar,
+/// `Ok(false)` means auto-detect; anything unrecognized is an error.
+pub fn parse_env_value(v: &str) -> Result<bool, String> {
+    match v.trim() {
+        "scalar" => Ok(true),
+        "auto" | "" => Ok(false),
+        other => Err(format!(
+            "{KERNELS_ENV} must be \"scalar\" or \"auto\", got {other:?}"
+        )),
+    }
+}
+
+const PATH_UNSET: u8 = 0;
+const PATH_SCALAR: u8 = 1;
+const PATH_VECTOR: u8 = 2;
+
+/// The resolved dispatch selection. `PATH_VECTOR` is only ever stored
+/// after `vector_path()` returned `Some`, so decoding it is infallible.
+static ACTIVE: AtomicU8 = AtomicU8::new(PATH_UNSET);
+
+/// Serializes [`with_forced`] callers so concurrent tests/bench lanes
+/// can't interleave their save/restore of the global selection.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn encode_path(p: Path) -> u8 {
+    if p == Path::Scalar {
+        PATH_SCALAR
+    } else {
+        PATH_VECTOR
+    }
+}
+
+/// Resolve `BASEGRAPH_KERNELS` (+ CPU detection) and publish the
+/// selection. `basegraph` calls this first thing in `main` so a bogus
+/// value is a clean CLI error; library users hit the same resolution
+/// lazily on first kernel call (which panics with the same message —
+/// validate early if you set the variable programmatically).
+pub fn init_from_env() -> Result<Path, String> {
+    let force_scalar = match std::env::var(KERNELS_ENV) {
+        Err(std::env::VarError::NotPresent) => false,
+        Err(e) => return Err(format!("{KERNELS_ENV}: {e}")),
+        Ok(v) => parse_env_value(&v)?,
+    };
+    let path = if force_scalar { Path::Scalar } else { auto_path() };
+    ACTIVE.store(encode_path(path), Ordering::Relaxed);
+    Ok(path)
+}
+
+/// The currently selected path (resolving the environment on first use).
+pub fn active() -> Path {
+    match ACTIVE.load(Ordering::Relaxed) {
+        PATH_SCALAR => Path::Scalar,
+        PATH_VECTOR => auto_path(),
+        _ => match init_from_env() {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        },
+    }
+}
+
+/// Run `f` with dispatch pinned to `path`, restoring the previous
+/// selection afterwards — the bench A/B and differential-test hook.
+/// Callers are serialized on a global lock; concurrent kernel *users*
+/// on other threads simply see (and bit-identically tolerate) the
+/// forced path. Panics if `path` cannot execute on this CPU.
+pub fn with_forced<R>(path: Path, f: impl FnOnce() -> R) -> R {
+    assert!(
+        path == Path::Scalar || Some(path) == vector_path(),
+        "kernel path {path:?} is not available on this CPU"
+    );
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = ACTIVE.swap(encode_path(path), Ordering::Relaxed);
+    let out = f();
+    ACTIVE.store(prev, Ordering::Relaxed);
+    out
+}
+
+/// Dispatch one op to the active backend. The match is exhaustive per
+/// architecture: vector arms only exist where the modules do.
+macro_rules! dispatch {
+    ($name:ident($($arg:expr),* $(,)?)) => {
+        match active() {
+            #[cfg(target_arch = "x86_64")]
+            Path::Avx2 => unsafe { x86::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            Path::Neon => unsafe { neon::$name($($arg),*) },
+            Path::Scalar => scalar::$name($($arg),*),
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// f32 gossip/train ops (see `scalar` for exact semantics)
+// ---------------------------------------------------------------------------
+
+/// `out[j] = w * src[j]` over `min(out.len(), src.len())` elements.
+pub fn scale_f32(out: &mut [f32], src: &[f32], w: f32) {
+    dispatch!(scale_f32(out, src, w))
+}
+
+/// `out[j] += w * src[j]`.
+pub fn axpy_f32(out: &mut [f32], src: &[f32], w: f32) {
+    dispatch!(axpy_f32(out, src, w))
+}
+
+/// Fused `out = sw·own + Σ wₖ·srcₖ` (tile `srcs` at ≤ 4 per call).
+pub fn combine_f32(
+    out: &mut [f32],
+    own: &[f32],
+    sw: f32,
+    srcs: &[(&[f32], f32)],
+) {
+    dispatch!(combine_f32(out, own, sw, srcs))
+}
+
+/// Fused `out += Σ wₖ·srcₖ` (a combine continuation batch).
+pub fn axpy_many_f32(out: &mut [f32], srcs: &[(&[f32], f32)]) {
+    dispatch!(axpy_many_f32(out, srcs))
+}
+
+/// `out[j] = a[j] - s * b[j]`.
+pub fn sub_scaled_f32(out: &mut [f32], a: &[f32], b: &[f32], s: f32) {
+    dispatch!(sub_scaled_f32(out, a, b, s))
+}
+
+/// `v[j] = beta * v[j] + g[j]`.
+pub fn decay_add_f32(v: &mut [f32], g: &[f32], beta: f32) {
+    dispatch!(decay_add_f32(v, g, beta))
+}
+
+/// `out[j] = p[j] - lr * (g[j] + beta * m[j])`.
+pub fn qg_pre_f32(
+    out: &mut [f32],
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    lr: f32,
+    beta: f32,
+) {
+    dispatch!(qg_pre_f32(out, p, g, m, lr, beta))
+}
+
+/// `m[j] = beta·m[j] + (1-beta)·(p_old[j]-p_new[j])·inv_lr`.
+pub fn qg_momentum_f32(
+    m: &mut [f32],
+    p_old: &[f32],
+    p_new: &[f32],
+    beta: f32,
+    inv_lr: f32,
+) {
+    dispatch!(qg_momentum_f32(m, p_old, p_new, beta, inv_lr))
+}
+
+/// `y[j] += g[j] - gp[j]`.
+pub fn add_diff_f32(y: &mut [f32], g: &[f32], gp: &[f32]) {
+    dispatch!(add_diff_f32(y, g, gp))
+}
+
+/// Error-feedback accumulate: `x[j] += e[j]; e[j] = x[j]`.
+pub fn ef_accumulate_f32(x: &mut [f32], e: &mut [f32]) {
+    dispatch!(ef_accumulate_f32(x, e))
+}
+
+/// Error-feedback residual: `e[j] -= x[j]`.
+pub fn ef_residual_f32(e: &mut [f32], x: &[f32]) {
+    dispatch!(ef_residual_f32(e, x))
+}
+
+// ---------------------------------------------------------------------------
+// f64 consensus ops
+// ---------------------------------------------------------------------------
+
+/// `out[j] = w * src[j]`.
+pub fn scale_f64(out: &mut [f64], src: &[f64], w: f64) {
+    dispatch!(scale_f64(out, src, w))
+}
+
+/// `out[j] += w * src[j]`.
+pub fn axpy_f64(out: &mut [f64], src: &[f64], w: f64) {
+    dispatch!(axpy_f64(out, src, w))
+}
+
+/// f64 twin of [`combine_f32`].
+pub fn combine_f64(
+    out: &mut [f64],
+    own: &[f64],
+    sw: f64,
+    srcs: &[(&[f64], f64)],
+) {
+    dispatch!(combine_f64(out, own, sw, srcs))
+}
+
+/// f64 twin of [`axpy_many_f32`].
+pub fn axpy_many_f64(out: &mut [f64], srcs: &[(&[f64], f64)]) {
+    dispatch!(axpy_many_f64(out, srcs))
+}
+
+/// `acc[j] += x[j]`.
+pub fn add_assign_f64(acc: &mut [f64], x: &[f64]) {
+    dispatch!(add_assign_f64(acc, x))
+}
+
+/// `x[j] /= div` (a true division on every path).
+pub fn div_assign_f64(x: &mut [f64], div: f64) {
+    dispatch!(div_assign_f64(x, div))
+}
+
+/// `err += (x[j] - mean[j])²` in strict element order.
+pub fn sq_err_acc_f64(mean: &[f64], x: &[f64], err: &mut f64) {
+    dispatch!(sq_err_acc_f64(mean, x, err))
+}
+
+// ---------------------------------------------------------------------------
+// Codec ops
+// ---------------------------------------------------------------------------
+
+/// int8 shared-exponent chunk length (one scale byte per chunk on the
+/// wire; re-exported as `codec::INT8_CHUNK`).
+pub const INT8_CHUNK: usize = 256;
+
+/// bf16 image in place: truncate each f32 to its top 16 bits.
+pub fn bf16_quantize_f32(x: &mut [f32]) {
+    dispatch!(bf16_quantize_f32(x))
+}
+
+/// Pack f32s as little-endian bf16 wire bytes (`dst.len() == 2·src.len()`).
+pub fn bf16_pack(src: &[f32], dst: &mut [u8]) {
+    dispatch!(bf16_pack(src, dst))
+}
+
+/// Unpack little-endian bf16 wire bytes (`src.len() == 2·out.len()`).
+pub fn bf16_unpack(src: &[u8], out: &mut [f32]) {
+    dispatch!(bf16_unpack(src, out))
+}
+
+/// int8 image in place: per 256-chunk, quantize-dequantize against the
+/// chunk's shared power-of-two scale.
+pub fn int8_quantize_f32(x: &mut [f32]) {
+    for chunk in x.chunks_mut(INT8_CHUNK) {
+        let s = pow2f(chunk_exp_of(chunk));
+        int8_requant_f32(chunk, s);
+    }
+}
+
+/// Quantize-dequantize one chunk (≤ 256 elements) against scale `s`.
+pub fn int8_requant_f32(chunk: &mut [f32], s: f32) {
+    dispatch!(int8_requant_f32(chunk, s))
+}
+
+/// Quantize one chunk to wire code bytes (`dst.len() == chunk.len()`).
+pub fn int8_codes(chunk: &[f32], s: f32, dst: &mut [u8]) {
+    dispatch!(int8_codes(chunk, s, dst))
+}
+
+/// Dequantize wire code bytes (`out.len() == codes.len()`).
+pub fn int8_dequant(codes: &[u8], s: f32, out: &mut [f32]) {
+    dispatch!(int8_dequant(codes, s, out))
+}
+
+/// `out[j] = src[j] as f32` (round-to-nearest-even narrowing).
+pub fn narrow_f64(src: &[f64], out: &mut [f32]) {
+    dispatch!(narrow_f64(src, out))
+}
+
+/// `out[j] = src[j] as f64` (exact widening).
+pub fn widen_f32(src: &[f32], out: &mut [f64]) {
+    dispatch!(widen_f32(src, out))
+}
+
+/// f16 image in place. Scalar on every path (see module docs): the
+/// dispatch surface is uniform, the RNE/subnormal conversion is not
+/// profitably vectorizable without risking the bit contract.
+pub fn f16_quantize_f32(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+    }
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// NaN payloads preserved in the top mantissa bit).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN: keep NaN-ness (quiet bit) explicitly.
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e <= 0 {
+        // Subnormal half (or zero). Values below the smallest subnormal
+        // round to ±0.
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // 24-bit significand → ≤10 bits
+        let half = 1u32 << (shift - 1);
+        let rem = man & ((1u32 << shift) - 1);
+        let mut h = man >> shift;
+        if rem > half || (rem == half && (h & 1) == 1) {
+            h += 1; // may carry into the smallest normal — correct
+        }
+        return sign | h as u16;
+    }
+    let man16 = man >> 13;
+    let rem = man & 0x1FFF;
+    let mut h = ((e as u32) << 10) | man16;
+    if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+        h += 1; // mantissa carry rounds into the next exponent / inf
+    }
+    sign | h as u16
+}
+
+/// IEEE binary16 bits → f32 (exact — every f16 is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e: i32 = 113; // 127 − 15 + 1
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Shared power-of-two exponent for an int8 chunk, from the max-|x| by
+/// bit inspection: `2^e` is the largest scale with `maxabs/2^e < 128`
+/// (clamped to the i8-storable, f32-exact range). Stays scalar: the
+/// running-max scan is not elementwise (and `max_ps`-style emulation
+/// has different NaN semantics than the scalar skip).
+pub fn chunk_exp_of(chunk: &[f32]) -> i8 {
+    let mut maxabs = 0.0f32;
+    for &v in chunk {
+        let a = v.abs();
+        if a > maxabs {
+            maxabs = a; // NaN compares false → skipped
+        }
+    }
+    if maxabs == 0.0 {
+        return 0;
+    }
+    let biased = ((maxabs.to_bits() >> 23) & 0xFF) as i32;
+    let exp2 = if biased == 0 { -127 } else { biased - 127 };
+    (exp2 - 6).clamp(-127, 121) as i8
+}
+
+/// `2^e` as f32 for `e ∈ [−127, 121]` (−127 is the one subnormal case).
+pub fn pow2f(e: i8) -> f32 {
+    let e = e as i32;
+    if e >= -126 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        f32::from_bits(1u32 << 22) // 2^−127
+    }
+}
+
+/// Quantize one value against a power-of-two scale (NaN → 0).
+pub fn int8_code(v: f32, s: f32) -> i8 {
+    let c = (v / s).round();
+    if c.is_nan() {
+        0
+    } else {
+        c.clamp(-127.0, 127.0) as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_values_parse() {
+        assert_eq!(parse_env_value("scalar"), Ok(true));
+        assert_eq!(parse_env_value(" scalar "), Ok(true));
+        assert_eq!(parse_env_value("auto"), Ok(false));
+        assert_eq!(parse_env_value(""), Ok(false));
+        let err = parse_env_value("bogus").unwrap_err();
+        assert!(err.contains(KERNELS_ENV), "{err}");
+        assert!(err.contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Path::Scalar.label(), "scalar");
+        if let Some(v) = vector_path() {
+            assert!(v.label() == "avx2" || v.label() == "neon");
+            assert_eq!(vector_label(), v.label());
+        } else {
+            assert_eq!(vector_label(), "none");
+        }
+        assert_eq!(auto_path().label(), vector_label().replace("none", "scalar"));
+    }
+
+    #[test]
+    fn with_forced_restores_previous_selection() {
+        let before = active();
+        let ran = with_forced(Path::Scalar, || {
+            assert_eq!(active(), Path::Scalar);
+            17
+        });
+        assert_eq!(ran, 17);
+        assert_eq!(active(), before);
+    }
+
+    #[test]
+    fn forced_paths_agree_on_a_smoke_vector() {
+        let src: Vec<f32> = (0..37).map(|i| (i as f32) * 0.37 - 5.0).collect();
+        let own: Vec<f32> = (0..37).map(|i| 1.0 / (i as f32 + 1.0)).collect();
+        let run = |p: Path| {
+            with_forced(p, || {
+                let mut out = vec![0.0f32; 37];
+                combine_f32(&mut out, &own, 0.25, &[(&src, 0.75)]);
+                out
+            })
+        };
+        let a = run(Path::Scalar);
+        if let Some(v) = vector_path() {
+            let b = run(v);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

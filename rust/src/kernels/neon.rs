@@ -1,0 +1,486 @@
+//! NEON implementations of the kernel ops (aarch64 only, where NEON is
+//! baseline — no runtime detection needed).
+//!
+//! Same contract as [`super::x86`]: explicit `vmulq`/`vaddq` pairs (no
+//! FMA — `vfmaq` is never used), operand order preserved, scalar tails.
+//! int8 rounding uses `vrndaq_f32` (FRINTA: round half away from zero,
+//! exactly `f32::round`), and `vcvtq_s32_f32` converts NaN to 0 in
+//! hardware, matching the scalar NaN-to-0 code path.
+
+#![allow(clippy::missing_safety_doc)] // crate-internal; aarch64 NEON is baseline
+
+use super::{scalar, INT8_CHUNK};
+use std::arch::aarch64::*;
+
+const F32_LANES: usize = 4;
+const F64_LANES: usize = 2;
+
+// ---------------------------------------------------------------------------
+// f32 gossip/train ops
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_f32(out: &mut [f32], src: &[f32], w: f32) {
+    let n = out.len().min(src.len());
+    let wv = vdupq_n_f32(w);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let s = vld1q_f32(src.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vmulq_f32(wv, s));
+        j += F32_LANES;
+    }
+    scalar::scale_f32(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f32(out: &mut [f32], src: &[f32], w: f32) {
+    let n = out.len().min(src.len());
+    let wv = vdupq_n_f32(w);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let o = vld1q_f32(out.as_ptr().add(j));
+        let s = vld1q_f32(src.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vaddq_f32(o, vmulq_f32(wv, s)));
+        j += F32_LANES;
+    }
+    scalar::axpy_f32(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn combine_f32(
+    out: &mut [f32],
+    own: &[f32],
+    sw: f32,
+    srcs: &[(&[f32], f32)],
+) {
+    let n0 = out.len().min(own.len());
+    let mut m = n0;
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let swv = vdupq_n_f32(sw);
+    let mut j = 0;
+    while j + F32_LANES <= m {
+        let mut acc = vmulq_f32(swv, vld1q_f32(own.as_ptr().add(j)));
+        for &(src, w) in srcs {
+            let s = vld1q_f32(src.as_ptr().add(j));
+            acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(w), s));
+        }
+        vst1q_f32(out.as_mut_ptr().add(j), acc);
+        j += F32_LANES;
+    }
+    scalar::scale_f32(&mut out[j..n0], &own[j..n0], sw);
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f32(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_many_f32(out: &mut [f32], srcs: &[(&[f32], f32)]) {
+    let mut m = out.len();
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let mut j = 0;
+    while j + F32_LANES <= m {
+        let mut acc = vld1q_f32(out.as_ptr().add(j));
+        for &(src, w) in srcs {
+            let s = vld1q_f32(src.as_ptr().add(j));
+            acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(w), s));
+        }
+        vst1q_f32(out.as_mut_ptr().add(j), acc);
+        j += F32_LANES;
+    }
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f32(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn sub_scaled_f32(out: &mut [f32], a: &[f32], b: &[f32], s: f32) {
+    let n = out.len().min(a.len()).min(b.len());
+    let sv = vdupq_n_f32(s);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let av = vld1q_f32(a.as_ptr().add(j));
+        let bv = vld1q_f32(b.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vsubq_f32(av, vmulq_f32(sv, bv)));
+        j += F32_LANES;
+    }
+    scalar::sub_scaled_f32(&mut out[j..n], &a[j..n], &b[j..n], s);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn decay_add_f32(v: &mut [f32], g: &[f32], beta: f32) {
+    let n = v.len().min(g.len());
+    let bv = vdupq_n_f32(beta);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let x = vld1q_f32(v.as_ptr().add(j));
+        let y = vld1q_f32(g.as_ptr().add(j));
+        vst1q_f32(v.as_mut_ptr().add(j), vaddq_f32(vmulq_f32(bv, x), y));
+        j += F32_LANES;
+    }
+    scalar::decay_add_f32(&mut v[j..n], &g[j..n], beta);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn qg_pre_f32(
+    out: &mut [f32],
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    lr: f32,
+    beta: f32,
+) {
+    let n = out.len().min(p.len()).min(g.len()).min(m.len());
+    let lrv = vdupq_n_f32(lr);
+    let bv = vdupq_n_f32(beta);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let pv = vld1q_f32(p.as_ptr().add(j));
+        let gv = vld1q_f32(g.as_ptr().add(j));
+        let mv = vld1q_f32(m.as_ptr().add(j));
+        let t = vaddq_f32(gv, vmulq_f32(bv, mv));
+        vst1q_f32(out.as_mut_ptr().add(j), vsubq_f32(pv, vmulq_f32(lrv, t)));
+        j += F32_LANES;
+    }
+    scalar::qg_pre_f32(&mut out[j..n], &p[j..n], &g[j..n], &m[j..n], lr, beta);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn qg_momentum_f32(
+    m: &mut [f32],
+    p_old: &[f32],
+    p_new: &[f32],
+    beta: f32,
+    inv_lr: f32,
+) {
+    let n = m.len().min(p_old.len()).min(p_new.len());
+    let bv = vdupq_n_f32(beta);
+    let ombv = vdupq_n_f32(1.0 - beta);
+    let ilv = vdupq_n_f32(inv_lr);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let mv = vld1q_f32(m.as_ptr().add(j));
+        let po = vld1q_f32(p_old.as_ptr().add(j));
+        let pn = vld1q_f32(p_new.as_ptr().add(j));
+        let d = vmulq_f32(ombv, vsubq_f32(po, pn));
+        let r = vaddq_f32(vmulq_f32(bv, mv), vmulq_f32(d, ilv));
+        vst1q_f32(m.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::qg_momentum_f32(
+        &mut m[j..n],
+        &p_old[j..n],
+        &p_new[j..n],
+        beta,
+        inv_lr,
+    );
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn add_diff_f32(y: &mut [f32], g: &[f32], gp: &[f32]) {
+    let n = y.len().min(g.len()).min(gp.len());
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let yv = vld1q_f32(y.as_ptr().add(j));
+        let gv = vld1q_f32(g.as_ptr().add(j));
+        let gpv = vld1q_f32(gp.as_ptr().add(j));
+        vst1q_f32(y.as_mut_ptr().add(j), vaddq_f32(yv, vsubq_f32(gv, gpv)));
+        j += F32_LANES;
+    }
+    scalar::add_diff_f32(&mut y[j..n], &g[j..n], &gp[j..n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn ef_accumulate_f32(x: &mut [f32], e: &mut [f32]) {
+    let n = x.len().min(e.len());
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let xv = vld1q_f32(x.as_ptr().add(j));
+        let ev = vld1q_f32(e.as_ptr().add(j));
+        let r = vaddq_f32(xv, ev);
+        vst1q_f32(x.as_mut_ptr().add(j), r);
+        vst1q_f32(e.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::ef_accumulate_f32(&mut x[j..n], &mut e[j..n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn ef_residual_f32(e: &mut [f32], x: &[f32]) {
+    let n = e.len().min(x.len());
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let ev = vld1q_f32(e.as_ptr().add(j));
+        let xv = vld1q_f32(x.as_ptr().add(j));
+        vst1q_f32(e.as_mut_ptr().add(j), vsubq_f32(ev, xv));
+        j += F32_LANES;
+    }
+    scalar::ef_residual_f32(&mut e[j..n], &x[j..n]);
+}
+
+// ---------------------------------------------------------------------------
+// f64 consensus ops
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_f64(out: &mut [f64], src: &[f64], w: f64) {
+    let n = out.len().min(src.len());
+    let wv = vdupq_n_f64(w);
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let s = vld1q_f64(src.as_ptr().add(j));
+        vst1q_f64(out.as_mut_ptr().add(j), vmulq_f64(wv, s));
+        j += F64_LANES;
+    }
+    scalar::scale_f64(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f64(out: &mut [f64], src: &[f64], w: f64) {
+    let n = out.len().min(src.len());
+    let wv = vdupq_n_f64(w);
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let o = vld1q_f64(out.as_ptr().add(j));
+        let s = vld1q_f64(src.as_ptr().add(j));
+        vst1q_f64(out.as_mut_ptr().add(j), vaddq_f64(o, vmulq_f64(wv, s)));
+        j += F64_LANES;
+    }
+    scalar::axpy_f64(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn combine_f64(
+    out: &mut [f64],
+    own: &[f64],
+    sw: f64,
+    srcs: &[(&[f64], f64)],
+) {
+    let n0 = out.len().min(own.len());
+    let mut m = n0;
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let swv = vdupq_n_f64(sw);
+    let mut j = 0;
+    while j + F64_LANES <= m {
+        let mut acc = vmulq_f64(swv, vld1q_f64(own.as_ptr().add(j)));
+        for &(src, w) in srcs {
+            let s = vld1q_f64(src.as_ptr().add(j));
+            acc = vaddq_f64(acc, vmulq_f64(vdupq_n_f64(w), s));
+        }
+        vst1q_f64(out.as_mut_ptr().add(j), acc);
+        j += F64_LANES;
+    }
+    scalar::scale_f64(&mut out[j..n0], &own[j..n0], sw);
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f64(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_many_f64(out: &mut [f64], srcs: &[(&[f64], f64)]) {
+    let mut m = out.len();
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let mut j = 0;
+    while j + F64_LANES <= m {
+        let mut acc = vld1q_f64(out.as_ptr().add(j));
+        for &(src, w) in srcs {
+            let s = vld1q_f64(src.as_ptr().add(j));
+            acc = vaddq_f64(acc, vmulq_f64(vdupq_n_f64(w), s));
+        }
+        vst1q_f64(out.as_mut_ptr().add(j), acc);
+        j += F64_LANES;
+    }
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f64(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn add_assign_f64(acc: &mut [f64], x: &[f64]) {
+    let n = acc.len().min(x.len());
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let a = vld1q_f64(acc.as_ptr().add(j));
+        let v = vld1q_f64(x.as_ptr().add(j));
+        vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, v));
+        j += F64_LANES;
+    }
+    scalar::add_assign_f64(&mut acc[j..n], &x[j..n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn div_assign_f64(x: &mut [f64], div: f64) {
+    let dv = vdupq_n_f64(div);
+    let n = x.len();
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let v = vld1q_f64(x.as_ptr().add(j));
+        vst1q_f64(x.as_mut_ptr().add(j), vdivq_f64(v, dv));
+        j += F64_LANES;
+    }
+    scalar::div_assign_f64(&mut x[j..], div);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn sq_err_acc_f64(mean: &[f64], x: &[f64], err: &mut f64) {
+    let n = mean.len().min(x.len());
+    let mut buf = [0.0f64; F64_LANES];
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let m = vld1q_f64(mean.as_ptr().add(j));
+        let v = vld1q_f64(x.as_ptr().add(j));
+        let d = vsubq_f64(v, m);
+        vst1q_f64(buf.as_mut_ptr(), vmulq_f64(d, d));
+        for &t in &buf {
+            *err += t;
+        }
+        j += F64_LANES;
+    }
+    scalar::sq_err_acc_f64(&mean[j..n], &x[j..n], err);
+}
+
+// ---------------------------------------------------------------------------
+// Codec ops
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_quantize_f32(x: &mut [f32]) {
+    let mask = vdupq_n_u32(0xFFFF_0000);
+    let n = x.len();
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = vld1q_u32(x.as_ptr().add(j) as *const u32);
+        vst1q_u32(x.as_mut_ptr().add(j) as *mut u32, vandq_u32(v, mask));
+        j += F32_LANES;
+    }
+    scalar::bf16_quantize_f32(&mut x[j..]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_pack(src: &[f32], dst: &mut [u8]) {
+    let n = src.len().min(dst.len() / 2);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let bits = vld1q_u32(src.as_ptr().add(j) as *const u32);
+        let h = vshrq_n_u32::<16>(bits);
+        let half = vmovn_u32(h);
+        vst1_u16(dst.as_mut_ptr().add(2 * j) as *mut u16, half);
+        j += F32_LANES;
+    }
+    scalar::bf16_pack(&src[j..n], &mut dst[2 * j..2 * n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_unpack(src: &[u8], out: &mut [f32]) {
+    let n = out.len().min(src.len() / 2);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let half = vld1_u16(src.as_ptr().add(2 * j) as *const u16);
+        let w = vmovl_u16(half);
+        let bits = vshlq_n_u32::<16>(w);
+        vst1q_f32(out.as_mut_ptr().add(j), vreinterpretq_f32_u32(bits));
+        j += F32_LANES;
+    }
+    scalar::bf16_unpack(&src[2 * j..2 * n], &mut out[j..n]);
+}
+
+/// The int8 code pipeline on `q = v / s`: FRINTA rounds half away from
+/// zero (exactly `f32::round`), ordered compares leave NaN unclamped,
+/// and FCVTZS maps NaN to 0 — each step matching the scalar path.
+#[target_feature(enable = "neon")]
+unsafe fn int8_codes_s32(q: float32x4_t) -> int32x4_t {
+    let r = vrndaq_f32(q);
+    let lo = vdupq_n_f32(-127.0);
+    let hi = vdupq_n_f32(127.0);
+    let r = vbslq_f32(vcltq_f32(r, lo), lo, r);
+    let r = vbslq_f32(vcgtq_f32(r, hi), hi, r);
+    vcvtq_s32_f32(r)
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn int8_requant_f32(chunk: &mut [f32], s: f32) {
+    debug_assert!(chunk.len() <= INT8_CHUNK);
+    let sv = vdupq_n_f32(s);
+    let n = chunk.len();
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = vld1q_f32(chunk.as_ptr().add(j));
+        let codes = int8_codes_s32(vdivq_f32(v, sv));
+        let cf = vcvtq_f32_s32(codes);
+        vst1q_f32(chunk.as_mut_ptr().add(j), vmulq_f32(cf, sv));
+        j += F32_LANES;
+    }
+    scalar::int8_requant_f32(&mut chunk[j..], s);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn int8_codes(chunk: &[f32], s: f32, dst: &mut [u8]) {
+    let n = chunk.len().min(dst.len());
+    let sv = vdupq_n_f32(s);
+    let mut buf = [0i32; F32_LANES];
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = vld1q_f32(chunk.as_ptr().add(j));
+        let codes = int8_codes_s32(vdivq_f32(v, sv));
+        vst1q_s32(buf.as_mut_ptr(), codes);
+        for (b, &c) in dst[j..j + F32_LANES].iter_mut().zip(&buf) {
+            *b = c as u8;
+        }
+        j += F32_LANES;
+    }
+    scalar::int8_codes(&chunk[j..n], s, &mut dst[j..n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn int8_dequant(codes: &[u8], s: f32, out: &mut [f32]) {
+    let n = codes.len().min(out.len());
+    let sv = vdupq_n_f32(s);
+    let mut j = 0;
+    while j + 8 <= n {
+        let b = vld1_s8(codes.as_ptr().add(j) as *const i8);
+        let w16 = vmovl_s8(b);
+        let lo = vmovl_s16(vget_low_s16(w16));
+        let hi = vmovl_s16(vget_high_s16(w16));
+        let flo = vmulq_f32(vcvtq_f32_s32(lo), sv);
+        let fhi = vmulq_f32(vcvtq_f32_s32(hi), sv);
+        vst1q_f32(out.as_mut_ptr().add(j), flo);
+        vst1q_f32(out.as_mut_ptr().add(j + 4), fhi);
+        j += 8;
+    }
+    scalar::int8_dequant(&codes[j..n], s, &mut out[j..n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn narrow_f64(src: &[f64], out: &mut [f32]) {
+    let n = src.len().min(out.len());
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let v = vld1q_f64(src.as_ptr().add(j));
+        vst1_f32(out.as_mut_ptr().add(j), vcvt_f32_f64(v));
+        j += F64_LANES;
+    }
+    scalar::narrow_f64(&src[j..n], &mut out[j..n]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn widen_f32(src: &[f32], out: &mut [f64]) {
+    let n = src.len().min(out.len());
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let v = vld1_f32(src.as_ptr().add(j));
+        vst1q_f64(out.as_mut_ptr().add(j), vcvt_f64_f32(v));
+        j += F64_LANES;
+    }
+    scalar::widen_f32(&src[j..n], &mut out[j..n]);
+}

@@ -1,0 +1,253 @@
+//! Scalar reference implementations of every kernel op.
+//!
+//! Each function here **is** the semantic contract: it reproduces, op for
+//! op and in per-element order, the loop it replaced at its original call
+//! site (train combine, topology gossip, consensus error, codec
+//! transforms). The vector backends ([`super::x86`], [`super::neon`])
+//! must produce bit-identical results — same multiplies, same adds, same
+//! operand order, no FMA contraction — which `tests/kernel_props.rs`
+//! pins differentially and `tests/exec_equivalence.rs` pins end to end.
+//!
+//! All two-slice ops use `zip` length semantics: they process
+//! `min(len_a, len_b)` elements and leave any excess untouched, exactly
+//! like the `iter_mut().zip(..)` loops they replace.
+
+use super::{int8_code, INT8_CHUNK};
+
+// ---------------------------------------------------------------------------
+// f32 gossip/train ops
+// ---------------------------------------------------------------------------
+
+/// `out[j] = w * src[j]`.
+pub fn scale_f32(out: &mut [f32], src: &[f32], w: f32) {
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o = w * s;
+    }
+}
+
+/// `out[j] += w * src[j]`.
+pub fn axpy_f32(out: &mut [f32], src: &[f32], w: f32) {
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o += w * s;
+    }
+}
+
+/// Fused gossip combine: `out = sw·own`, then `out += wₖ·srcₖ` for every
+/// `(srcₖ, wₖ)` in order. Callers tile `srcs` at ≤ 4 sources per call so
+/// the vector backends keep the accumulator in registers.
+pub fn combine_f32(
+    out: &mut [f32],
+    own: &[f32],
+    sw: f32,
+    srcs: &[(&[f32], f32)],
+) {
+    scale_f32(out, own, sw);
+    for &(src, w) in srcs {
+        axpy_f32(out, src, w);
+    }
+}
+
+/// `out += wₖ·srcₖ` for every source in order (a combine continuation
+/// batch — the scale half already ran).
+pub fn axpy_many_f32(out: &mut [f32], srcs: &[(&[f32], f32)]) {
+    for &(src, w) in srcs {
+        axpy_f32(out, src, w);
+    }
+}
+
+/// `out[j] = a[j] - s * b[j]` — the DSGD/DSGDm/GT half-step.
+pub fn sub_scaled_f32(out: &mut [f32], a: &[f32], b: &[f32], s: f32) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - s * y;
+    }
+}
+
+/// `v[j] = beta * v[j] + g[j]` — heavy-ball momentum decay.
+pub fn decay_add_f32(v: &mut [f32], g: &[f32], beta: f32) {
+    for (x, &y) in v.iter_mut().zip(g) {
+        *x = beta * *x + y;
+    }
+}
+
+/// `out[j] = p[j] - lr * (g[j] + beta * m[j])` — the QG-DSGDm half-step.
+pub fn qg_pre_f32(
+    out: &mut [f32],
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    lr: f32,
+    beta: f32,
+) {
+    for (((o, &pv), &gv), &mv) in out.iter_mut().zip(p).zip(g).zip(m) {
+        *o = pv - lr * (gv + beta * mv);
+    }
+}
+
+/// `m[j] = beta * m[j] + (1 - beta) * (p_old[j] - p_new[j]) * inv_lr` —
+/// the quasi-global momentum update from the mixed displacement.
+pub fn qg_momentum_f32(
+    m: &mut [f32],
+    p_old: &[f32],
+    p_new: &[f32],
+    beta: f32,
+    inv_lr: f32,
+) {
+    let omb = 1.0 - beta;
+    for ((mv, &po), &pn) in m.iter_mut().zip(p_old).zip(p_new) {
+        *mv = beta * *mv + omb * (po - pn) * inv_lr;
+    }
+}
+
+/// `y[j] += g[j] - gp[j]` — the gradient-tracking tracker fold.
+pub fn add_diff_f32(y: &mut [f32], g: &[f32], gp: &[f32]) {
+    for ((yv, &gv), &gpv) in y.iter_mut().zip(g).zip(gp) {
+        *yv += gv - gpv;
+    }
+}
+
+/// Error-feedback accumulate: `x[j] += e[j]; e[j] = x[j]` (stash `x'` so
+/// the residual can be `x' − Q(x')` after quantization).
+pub fn ef_accumulate_f32(x: &mut [f32], e: &mut [f32]) {
+    for (v, r) in x.iter_mut().zip(e.iter_mut()) {
+        *v += *r;
+        *r = *v;
+    }
+}
+
+/// Error-feedback residual: `e[j] -= x[j]` (`e = x' − Q(x')`).
+pub fn ef_residual_f32(e: &mut [f32], x: &[f32]) {
+    for (r, &v) in e.iter_mut().zip(x) {
+        *r -= v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 consensus ops
+// ---------------------------------------------------------------------------
+
+/// `out[j] = w * src[j]`.
+pub fn scale_f64(out: &mut [f64], src: &[f64], w: f64) {
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o = w * s;
+    }
+}
+
+/// `out[j] += w * src[j]`.
+pub fn axpy_f64(out: &mut [f64], src: &[f64], w: f64) {
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o += w * s;
+    }
+}
+
+/// f64 twin of [`combine_f32`].
+pub fn combine_f64(
+    out: &mut [f64],
+    own: &[f64],
+    sw: f64,
+    srcs: &[(&[f64], f64)],
+) {
+    scale_f64(out, own, sw);
+    for &(src, w) in srcs {
+        axpy_f64(out, src, w);
+    }
+}
+
+/// f64 twin of [`axpy_many_f32`].
+pub fn axpy_many_f64(out: &mut [f64], srcs: &[(&[f64], f64)]) {
+    for &(src, w) in srcs {
+        axpy_f64(out, src, w);
+    }
+}
+
+/// `acc[j] += x[j]` — the consensus-mean row accumulate.
+pub fn add_assign_f64(acc: &mut [f64], x: &[f64]) {
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}
+
+/// `x[j] /= div` — the consensus-mean normalize (kept as a division, not
+/// a reciprocal multiply: both paths must round identically).
+pub fn div_assign_f64(x: &mut [f64], div: f64) {
+    for v in x.iter_mut() {
+        *v /= div;
+    }
+}
+
+/// `err += (x[j] - mean[j])²`, accumulated **in element order** — the
+/// reduction order is part of `consensus_error`'s bit-identity contract,
+/// so even the vector backends feed a single serial accumulator.
+pub fn sq_err_acc_f64(mean: &[f64], x: &[f64], err: &mut f64) {
+    for (&m, &v) in mean.iter().zip(x) {
+        let d = v - m;
+        *err += d * d;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec ops
+// ---------------------------------------------------------------------------
+
+/// bf16 image: truncate each f32 to its top 16 bits.
+pub fn bf16_quantize_f32(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = f32::from_bits(v.to_bits() & 0xFFFF_0000);
+    }
+}
+
+/// Pack f32s as little-endian bf16 (`bits >> 16`) wire bytes.
+/// `dst.len()` must be `2 * src.len()`.
+pub fn bf16_pack(src: &[f32], dst: &mut [u8]) {
+    for (&v, b) in src.iter().zip(dst.chunks_exact_mut(2)) {
+        let h = (v.to_bits() >> 16) as u16;
+        b.copy_from_slice(&h.to_le_bytes());
+    }
+}
+
+/// Unpack little-endian bf16 wire bytes back to f32 (`bits << 16`).
+/// `src.len()` must be `2 * out.len()`.
+pub fn bf16_unpack(src: &[u8], out: &mut [f32]) {
+    for (b, o) in src.chunks_exact(2).zip(out.iter_mut()) {
+        let h = u16::from_le_bytes([b[0], b[1]]);
+        *o = f32::from_bits((h as u32) << 16);
+    }
+}
+
+/// Requantize one int8 chunk in place against its shared power-of-two
+/// scale: `v = round(v/s) clamped to ±127, times s` (NaN → 0).
+pub fn int8_requant_f32(chunk: &mut [f32], s: f32) {
+    debug_assert!(chunk.len() <= INT8_CHUNK);
+    for v in chunk.iter_mut() {
+        *v = int8_code(*v, s) as f32 * s;
+    }
+}
+
+/// Quantize one int8 chunk to its wire code bytes.
+/// `dst.len()` must equal `chunk.len()`.
+pub fn int8_codes(chunk: &[f32], s: f32, dst: &mut [u8]) {
+    for (&v, b) in chunk.iter().zip(dst.iter_mut()) {
+        *b = int8_code(v, s) as u8;
+    }
+}
+
+/// Dequantize int8 wire code bytes: `out[j] = (codes[j] as i8) * s`.
+/// `out.len()` must equal `codes.len()`.
+pub fn int8_dequant(codes: &[u8], s: f32, out: &mut [f32]) {
+    for (&c, o) in codes.iter().zip(out.iter_mut()) {
+        *o = (c as i8) as f32 * s;
+    }
+}
+
+/// `out[j] = src[j] as f32` (IEEE round-to-nearest-even narrowing).
+pub fn narrow_f64(src: &[f64], out: &mut [f32]) {
+    for (&v, o) in src.iter().zip(out.iter_mut()) {
+        *o = v as f32;
+    }
+}
+
+/// `out[j] = src[j] as f64` (exact widening).
+pub fn widen_f32(src: &[f32], out: &mut [f64]) {
+    for (&v, o) in src.iter().zip(out.iter_mut()) {
+        *o = v as f64;
+    }
+}

@@ -1,0 +1,527 @@
+//! AVX2 implementations of the kernel ops (x86-64 only).
+//!
+//! Every function mirrors its scalar twin in [`super::scalar`] op for op:
+//! explicit `_mm256_mul_*` + `_mm256_add_*` pairs (never FMA — AVX2 does
+//! not imply FMA and the intrinsics below cannot be contracted), operand
+//! order preserved, remainders handled by the scalar code itself. The
+//! only nontrivial emulation is int8's round-half-away-from-zero (see
+//! [`round_half_away`]), which x86 has no single instruction for.
+//!
+//! All functions are `unsafe fn` with `#[target_feature(enable =
+//! "avx2")]`: callers must have verified `is_x86_feature_detected!
+//! ("avx2")`, which the dispatcher in [`super`] does exactly once.
+
+#![allow(clippy::missing_safety_doc)] // crate-internal; safety = "+avx2 verified by dispatcher"
+
+use super::{scalar, INT8_CHUNK};
+use std::arch::x86_64::*;
+
+const F32_LANES: usize = 8;
+const F64_LANES: usize = 4;
+
+// ---------------------------------------------------------------------------
+// f32 gossip/train ops
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_f32(out: &mut [f32], src: &[f32], w: f32) {
+    let n = out.len().min(src.len());
+    let wv = _mm256_set1_ps(w);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_mul_ps(wv, s));
+        j += F32_LANES;
+    }
+    scalar::scale_f32(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f32(out: &mut [f32], src: &[f32], w: f32) {
+    let n = out.len().min(src.len());
+    let wv = _mm256_set1_ps(w);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let o = _mm256_loadu_ps(out.as_ptr().add(j));
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        let r = _mm256_add_ps(o, _mm256_mul_ps(wv, s));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::axpy_f32(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn combine_f32(
+    out: &mut [f32],
+    own: &[f32],
+    sw: f32,
+    srcs: &[(&[f32], f32)],
+) {
+    // The fused tile only covers the prefix every operand reaches; the
+    // ragged remainders are exactly the scalar composition's tails, so
+    // replay them through the scalar twin (see super::combine_f32 docs).
+    let n0 = out.len().min(own.len());
+    let mut m = n0;
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let swv = _mm256_set1_ps(sw);
+    let mut j = 0;
+    while j + F32_LANES <= m {
+        let mut acc =
+            _mm256_mul_ps(swv, _mm256_loadu_ps(own.as_ptr().add(j)));
+        for &(src, w) in srcs {
+            let s = _mm256_loadu_ps(src.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(w), s));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), acc);
+        j += F32_LANES;
+    }
+    scalar::scale_f32(&mut out[j..n0], &own[j..n0], sw);
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f32(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_many_f32(out: &mut [f32], srcs: &[(&[f32], f32)]) {
+    let mut m = out.len();
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let mut j = 0;
+    while j + F32_LANES <= m {
+        let mut acc = _mm256_loadu_ps(out.as_ptr().add(j));
+        for &(src, w) in srcs {
+            let s = _mm256_loadu_ps(src.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(w), s));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), acc);
+        j += F32_LANES;
+    }
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f32(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn sub_scaled_f32(out: &mut [f32], a: &[f32], b: &[f32], s: f32) {
+    let n = out.len().min(a.len()).min(b.len());
+    let sv = _mm256_set1_ps(s);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        let r = _mm256_sub_ps(av, _mm256_mul_ps(sv, bv));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::sub_scaled_f32(&mut out[j..n], &a[j..n], &b[j..n], s);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn decay_add_f32(v: &mut [f32], g: &[f32], beta: f32) {
+    let n = v.len().min(g.len());
+    let bv = _mm256_set1_ps(beta);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let x = _mm256_loadu_ps(v.as_ptr().add(j));
+        let y = _mm256_loadu_ps(g.as_ptr().add(j));
+        let r = _mm256_add_ps(_mm256_mul_ps(bv, x), y);
+        _mm256_storeu_ps(v.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::decay_add_f32(&mut v[j..n], &g[j..n], beta);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn qg_pre_f32(
+    out: &mut [f32],
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    lr: f32,
+    beta: f32,
+) {
+    let n = out.len().min(p.len()).min(g.len()).min(m.len());
+    let lrv = _mm256_set1_ps(lr);
+    let bv = _mm256_set1_ps(beta);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let pv = _mm256_loadu_ps(p.as_ptr().add(j));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(j));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(j));
+        let t = _mm256_add_ps(gv, _mm256_mul_ps(bv, mv));
+        let r = _mm256_sub_ps(pv, _mm256_mul_ps(lrv, t));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::qg_pre_f32(&mut out[j..n], &p[j..n], &g[j..n], &m[j..n], lr, beta);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn qg_momentum_f32(
+    m: &mut [f32],
+    p_old: &[f32],
+    p_new: &[f32],
+    beta: f32,
+    inv_lr: f32,
+) {
+    let n = m.len().min(p_old.len()).min(p_new.len());
+    let bv = _mm256_set1_ps(beta);
+    let ombv = _mm256_set1_ps(1.0 - beta);
+    let ilv = _mm256_set1_ps(inv_lr);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let mv = _mm256_loadu_ps(m.as_ptr().add(j));
+        let po = _mm256_loadu_ps(p_old.as_ptr().add(j));
+        let pn = _mm256_loadu_ps(p_new.as_ptr().add(j));
+        let d = _mm256_mul_ps(ombv, _mm256_sub_ps(po, pn));
+        let r = _mm256_add_ps(_mm256_mul_ps(bv, mv), _mm256_mul_ps(d, ilv));
+        _mm256_storeu_ps(m.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::qg_momentum_f32(
+        &mut m[j..n],
+        &p_old[j..n],
+        &p_new[j..n],
+        beta,
+        inv_lr,
+    );
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn add_diff_f32(y: &mut [f32], g: &[f32], gp: &[f32]) {
+    let n = y.len().min(g.len()).min(gp.len());
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(j));
+        let gpv = _mm256_loadu_ps(gp.as_ptr().add(j));
+        let r = _mm256_add_ps(yv, _mm256_sub_ps(gv, gpv));
+        _mm256_storeu_ps(y.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::add_diff_f32(&mut y[j..n], &g[j..n], &gp[j..n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn ef_accumulate_f32(x: &mut [f32], e: &mut [f32]) {
+    let n = x.len().min(e.len());
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+        let ev = _mm256_loadu_ps(e.as_ptr().add(j));
+        let r = _mm256_add_ps(xv, ev);
+        _mm256_storeu_ps(x.as_mut_ptr().add(j), r);
+        _mm256_storeu_ps(e.as_mut_ptr().add(j), r);
+        j += F32_LANES;
+    }
+    scalar::ef_accumulate_f32(&mut x[j..n], &mut e[j..n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn ef_residual_f32(e: &mut [f32], x: &[f32]) {
+    let n = e.len().min(x.len());
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let ev = _mm256_loadu_ps(e.as_ptr().add(j));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+        _mm256_storeu_ps(e.as_mut_ptr().add(j), _mm256_sub_ps(ev, xv));
+        j += F32_LANES;
+    }
+    scalar::ef_residual_f32(&mut e[j..n], &x[j..n]);
+}
+
+// ---------------------------------------------------------------------------
+// f64 consensus ops
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_f64(out: &mut [f64], src: &[f64], w: f64) {
+    let n = out.len().min(src.len());
+    let wv = _mm256_set1_pd(w);
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let s = _mm256_loadu_pd(src.as_ptr().add(j));
+        _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_mul_pd(wv, s));
+        j += F64_LANES;
+    }
+    scalar::scale_f64(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f64(out: &mut [f64], src: &[f64], w: f64) {
+    let n = out.len().min(src.len());
+    let wv = _mm256_set1_pd(w);
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let o = _mm256_loadu_pd(out.as_ptr().add(j));
+        let s = _mm256_loadu_pd(src.as_ptr().add(j));
+        let r = _mm256_add_pd(o, _mm256_mul_pd(wv, s));
+        _mm256_storeu_pd(out.as_mut_ptr().add(j), r);
+        j += F64_LANES;
+    }
+    scalar::axpy_f64(&mut out[j..n], &src[j..n], w);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn combine_f64(
+    out: &mut [f64],
+    own: &[f64],
+    sw: f64,
+    srcs: &[(&[f64], f64)],
+) {
+    let n0 = out.len().min(own.len());
+    let mut m = n0;
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let swv = _mm256_set1_pd(sw);
+    let mut j = 0;
+    while j + F64_LANES <= m {
+        let mut acc =
+            _mm256_mul_pd(swv, _mm256_loadu_pd(own.as_ptr().add(j)));
+        for &(src, w) in srcs {
+            let s = _mm256_loadu_pd(src.as_ptr().add(j));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(w), s));
+        }
+        _mm256_storeu_pd(out.as_mut_ptr().add(j), acc);
+        j += F64_LANES;
+    }
+    scalar::scale_f64(&mut out[j..n0], &own[j..n0], sw);
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f64(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_many_f64(out: &mut [f64], srcs: &[(&[f64], f64)]) {
+    let mut m = out.len();
+    for &(src, _) in srcs {
+        m = m.min(src.len());
+    }
+    let mut j = 0;
+    while j + F64_LANES <= m {
+        let mut acc = _mm256_loadu_pd(out.as_ptr().add(j));
+        for &(src, w) in srcs {
+            let s = _mm256_loadu_pd(src.as_ptr().add(j));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(w), s));
+        }
+        _mm256_storeu_pd(out.as_mut_ptr().add(j), acc);
+        j += F64_LANES;
+    }
+    for &(src, w) in srcs {
+        let e = src.len().min(out.len());
+        scalar::axpy_f64(&mut out[j..e], &src[j..e], w);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn add_assign_f64(acc: &mut [f64], x: &[f64]) {
+    let n = acc.len().min(x.len());
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+        let v = _mm256_loadu_pd(x.as_ptr().add(j));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, v));
+        j += F64_LANES;
+    }
+    scalar::add_assign_f64(&mut acc[j..n], &x[j..n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn div_assign_f64(x: &mut [f64], div: f64) {
+    let dv = _mm256_set1_pd(div);
+    let n = x.len();
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let v = _mm256_loadu_pd(x.as_ptr().add(j));
+        _mm256_storeu_pd(x.as_mut_ptr().add(j), _mm256_div_pd(v, dv));
+        j += F64_LANES;
+    }
+    scalar::div_assign_f64(&mut x[j..], div);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn sq_err_acc_f64(mean: &[f64], x: &[f64], err: &mut f64) {
+    // Squares vectorize; the += reduction stays a single serial
+    // accumulator fed in element order (the bit-identity contract).
+    let n = mean.len().min(x.len());
+    let mut buf = [0.0f64; F64_LANES];
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let m = _mm256_loadu_pd(mean.as_ptr().add(j));
+        let v = _mm256_loadu_pd(x.as_ptr().add(j));
+        let d = _mm256_sub_pd(v, m);
+        _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_mul_pd(d, d));
+        for &t in &buf {
+            *err += t;
+        }
+        j += F64_LANES;
+    }
+    scalar::sq_err_acc_f64(&mean[j..n], &x[j..n], err);
+}
+
+// ---------------------------------------------------------------------------
+// Codec ops
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_quantize_f32(x: &mut [f32]) {
+    let mask = _mm256_set1_epi32(0xFFFF_0000u32 as i32);
+    let n = x.len();
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = _mm256_loadu_si256(x.as_ptr().add(j) as *const __m256i);
+        let r = _mm256_and_si256(v, mask);
+        _mm256_storeu_si256(x.as_mut_ptr().add(j) as *mut __m256i, r);
+        j += F32_LANES;
+    }
+    scalar::bf16_quantize_f32(&mut x[j..]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_pack(src: &[f32], dst: &mut [u8]) {
+    // Per 128-bit lane, gather the high two bytes of each f32 (exactly
+    // `bits >> 16` in little-endian order) into the lane's low 8 bytes.
+    let ctrl = _mm256_setr_epi8(
+        2, 3, 6, 7, 10, 11, 14, 15, -1, -1, -1, -1, -1, -1, -1, -1, //
+        2, 3, 6, 7, 10, 11, 14, 15, -1, -1, -1, -1, -1, -1, -1, -1,
+    );
+    let n = src.len().min(dst.len() / 2);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = _mm256_loadu_si256(src.as_ptr().add(j) as *const __m256i);
+        let sh = _mm256_shuffle_epi8(v, ctrl);
+        let lo = _mm256_extract_epi64::<0>(sh) as u64;
+        let hi = _mm256_extract_epi64::<2>(sh) as u64;
+        dst[2 * j..2 * j + 8].copy_from_slice(&lo.to_le_bytes());
+        dst[2 * j + 8..2 * j + 16].copy_from_slice(&hi.to_le_bytes());
+        j += F32_LANES;
+    }
+    scalar::bf16_pack(&src[j..n], &mut dst[2 * j..2 * n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_unpack(src: &[u8], out: &mut [f32]) {
+    let n = out.len().min(src.len() / 2);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let h = _mm_loadu_si128(src.as_ptr().add(2 * j) as *const __m128i);
+        let w = _mm256_cvtepu16_epi32(h);
+        let bits = _mm256_slli_epi32::<16>(w);
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_castsi256_ps(bits));
+        j += F32_LANES;
+    }
+    scalar::bf16_unpack(&src[2 * j..2 * n], &mut out[j..n]);
+}
+
+/// Round to nearest, ties away from zero — `f32::round` semantics, which
+/// AVX2 has no direct instruction for. `trunc` + exact `q - trunc(q)`
+/// (Sterbenz) + a ±1 correction where `|frac| >= 0.5`; NaN and ±inf fall
+/// through untouched (the GE compare is ordered, `inf - inf = NaN` has
+/// no `>= 0.5` fraction).
+#[target_feature(enable = "avx2")]
+unsafe fn round_half_away(q: __m256) -> __m256 {
+    let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(q);
+    let frac = _mm256_sub_ps(q, t);
+    let signbit = _mm256_set1_ps(-0.0);
+    let absf = _mm256_andnot_ps(signbit, frac);
+    let half = _mm256_cmp_ps::<_CMP_GE_OQ>(absf, _mm256_set1_ps(0.5));
+    let one =
+        _mm256_or_ps(_mm256_and_ps(q, signbit), _mm256_set1_ps(1.0));
+    _mm256_add_ps(t, _mm256_and_ps(half, one))
+}
+
+/// The int8 code pipeline on rounded values: clamp to ±127 (NaN falls
+/// through the ordered compares), zero NaNs, convert to i32. The i32
+/// image is exact for every reachable value, matching the scalar
+/// `clamp(..).  as i8` + NaN-to-0 path bit for bit.
+#[target_feature(enable = "avx2")]
+unsafe fn int8_codes_epi32(q: __m256) -> __m256i {
+    let r = round_half_away(q);
+    let lo = _mm256_set1_ps(-127.0);
+    let hi = _mm256_set1_ps(127.0);
+    let r = _mm256_blendv_ps(r, lo, _mm256_cmp_ps::<_CMP_LT_OQ>(r, lo));
+    let r = _mm256_blendv_ps(r, hi, _mm256_cmp_ps::<_CMP_GT_OQ>(r, hi));
+    let ord = _mm256_cmp_ps::<_CMP_ORD_Q>(q, q);
+    _mm256_cvtps_epi32(_mm256_and_ps(r, ord))
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn int8_requant_f32(chunk: &mut [f32], s: f32) {
+    debug_assert!(chunk.len() <= INT8_CHUNK);
+    let sv = _mm256_set1_ps(s);
+    let n = chunk.len();
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = _mm256_loadu_ps(chunk.as_ptr().add(j));
+        let codes = int8_codes_epi32(_mm256_div_ps(v, sv));
+        let cf = _mm256_cvtepi32_ps(codes);
+        _mm256_storeu_ps(chunk.as_mut_ptr().add(j), _mm256_mul_ps(cf, sv));
+        j += F32_LANES;
+    }
+    scalar::int8_requant_f32(&mut chunk[j..], s);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn int8_codes(chunk: &[f32], s: f32, dst: &mut [u8]) {
+    let n = chunk.len().min(dst.len());
+    let sv = _mm256_set1_ps(s);
+    let mut buf = [0i32; F32_LANES];
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let v = _mm256_loadu_ps(chunk.as_ptr().add(j));
+        let codes = int8_codes_epi32(_mm256_div_ps(v, sv));
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, codes);
+        for (b, &c) in dst[j..j + F32_LANES].iter_mut().zip(&buf) {
+            *b = c as u8;
+        }
+        j += F32_LANES;
+    }
+    scalar::int8_codes(&chunk[j..n], s, &mut dst[j..n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn int8_dequant(codes: &[u8], s: f32, out: &mut [f32]) {
+    let n = codes.len().min(out.len());
+    let sv = _mm256_set1_ps(s);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let b = _mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i);
+        let w = _mm256_cvtepi8_epi32(b);
+        let f = _mm256_cvtepi32_ps(w);
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_mul_ps(f, sv));
+        j += F32_LANES;
+    }
+    scalar::int8_dequant(&codes[j..n], s, &mut out[j..n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn narrow_f64(src: &[f64], out: &mut [f32]) {
+    let n = src.len().min(out.len());
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let v = _mm256_loadu_pd(src.as_ptr().add(j));
+        _mm_storeu_ps(out.as_mut_ptr().add(j), _mm256_cvtpd_ps(v));
+        j += F64_LANES;
+    }
+    scalar::narrow_f64(&src[j..n], &mut out[j..n]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn widen_f32(src: &[f32], out: &mut [f64]) {
+    let n = src.len().min(out.len());
+    let mut j = 0;
+    while j + F64_LANES <= n {
+        let v = _mm_loadu_ps(src.as_ptr().add(j));
+        _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_cvtps_pd(v));
+        j += F64_LANES;
+    }
+    scalar::widen_f32(&src[j..n], &mut out[j..n]);
+}

@@ -41,6 +41,7 @@ pub mod comm;
 pub mod consensus;
 pub mod data;
 pub mod exec;
+pub mod kernels;
 pub mod metrics;
 pub mod optim;
 pub mod repro;

@@ -126,6 +126,12 @@ Codecs: --codec compresses every gossip payload at the source (identity =
   transcode payloads crossing rack boundaries (N=0 = every link) through
   a heavier codec, stateless per link. In `bench`, --codec takes a
   comma-separated roster for the codec cells.
+Kernels: the hot elementwise loops (gossip combine, optimizer half-steps,
+  codec quantize/pack) dispatch at runtime to AVX2 (x86-64) or NEON
+  (aarch64) with a scalar fallback; vector and scalar paths are
+  bit-identical by contract. BASEGRAPH_KERNELS=scalar forces the
+  reference path (auto = detect, the default); `bench` emits per-cell
+  scalar-vs-auto kernel columns.
 Churn: --churn <preset> (or a churn-* simnet scenario) runs the workload
   under elastic membership — a seeded leave/join trace (--churn-seed,
   default = run seed) resolved into deterministic roster segments, the
@@ -152,6 +158,12 @@ Docs: docs/ARCHITECTURE.md is the full tour (layers, backends, wire
 Help: `basegraph --help` (or any subcommand with --help) prints this.";
 
 fn main() {
+    // Resolve BASEGRAPH_KERNELS before anything touches a kernel, so a
+    // bogus value is a clean CLI error instead of a mid-run panic.
+    if let Err(e) = basegraph::kernels::init_from_env() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let raw: Vec<String> = std::env::args().skip(1).collect();
     // Hidden re-exec mode of the process-parallel executor: the
     // coordinator spawns `basegraph --worker <addr> <shard>` per node
@@ -950,7 +962,9 @@ fn cmd_simnet(args: &Args) -> Result<(), String> {
 /// allocation churn's measured price. Process-backend cells
 /// (`--shards-list`, default 2 and 4 worker processes) run each workload
 /// over real sockets and add the measured `wire_bytes_per_round` column.
-/// Results land in `--out` (`BENCH_rounds.json`).
+/// Kernel cells A/B the SIMD dispatch (forced scalar vs auto) per
+/// workload at d ∈ {1k, 100k, 1M}. Results land in `--out`
+/// (`BENCH_rounds.json`).
 fn cmd_bench(args: &Args) -> Result<(), String> {
     let out = args.str_or("out", "BENCH_rounds.json");
     let fast = args.flag("fast");
@@ -1425,15 +1439,113 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         }
     }
 
+    // Kernel A/B cells: the same workloads with the SIMD dispatch pinned
+    // to the scalar reference vs. `auto` (the best vector path this CPU
+    // has), on the serial analytic backend so the kernel is the only
+    // variable. Dimensions are fixed at {1k, 100k, 1M} regardless of
+    // --ds (the point is the d-scaling of the combine loop, and these
+    // cells run in --fast mode too); results are bit-identical by the
+    // kernel contract, so only the rate may differ. `kernel_speedup` is
+    // auto/scalar; on a CPU with no vector path both sides run scalar
+    // and the column hovers at 1.
+    {
+        use basegraph::kernels;
+        let kn = 16usize;
+        for &kd in &[1_000usize, 100_000, 1_000_000] {
+            for workload in ["consensus", "train"] {
+                let kind = TopologyKind::Base { m: 4 };
+                let seq = kind.build(kn, seed)?;
+                let exec = ExecutorKind::parse("analytic")?;
+                let run = |path: kernels::Path| -> Result<ExecTrace, String> {
+                    kernels::with_forced(path, || {
+                        if workload == "consensus" {
+                            let mut rng = Rng::new(seed);
+                            let init =
+                                consensus::gaussian_init(kn, kd, &mut rng);
+                            let mut w = ConsensusWorkload::new(init);
+                            exec.run(&mut w, &seq, rounds)
+                        } else {
+                            let cfg = TrainConfig {
+                                rounds,
+                                lr: 0.05,
+                                warmup: 0,
+                                cosine: false,
+                                optimizer: OptimizerKind::Dsgdm {
+                                    momentum: 0.9,
+                                },
+                                eval_every: 0,
+                                threads: 1,
+                                cost: CostModel::default(),
+                            };
+                            let (model, data) =
+                                quadratic_fixed_targets(kn, kd, seed);
+                            let mut w = TrainingWorkload::new(
+                                &model, &cfg, data, &[],
+                            );
+                            exec.run(&mut w, &seq, rounds)
+                        }
+                    })
+                };
+                let loop_rate = |tr: &ExecTrace| -> f64 {
+                    let rec = &tr.run.records;
+                    match (rec.first(), rec.last()) {
+                        (Some(a), Some(b))
+                            if b.round > a.round
+                                && b.wall_seconds > a.wall_seconds =>
+                        {
+                            (b.round - a.round) as f64
+                                / (b.wall_seconds - a.wall_seconds)
+                        }
+                        _ => rounds as f64 / tr.wall_seconds.max(1e-12),
+                    }
+                };
+                let mut rps_scalar = 0.0f64;
+                let mut rps_auto = 0.0f64;
+                for _ in 0..2 {
+                    let ts = run(kernels::Path::Scalar)?;
+                    let ta = run(kernels::auto_path())?;
+                    rps_scalar = rps_scalar.max(loop_rate(&ts));
+                    rps_auto = rps_auto.max(loop_rate(&ta));
+                }
+                let kernel_speedup = rps_auto / rps_scalar.max(1e-12);
+                rows.push(vec![
+                    workload.to_string(),
+                    kn.to_string(),
+                    kd.to_string(),
+                    format!("kernels {}", kernels::vector_label()),
+                    format!("{rps_scalar:.1}"),
+                    format!("{rps_auto:.1}"),
+                    format!("{kernel_speedup:.2}×"),
+                    "-".to_string(),
+                ]);
+                cells.push(Json::obj(vec![
+                    ("workload", Json::str(workload)),
+                    ("topology", Json::str("base-4")),
+                    ("n", Json::num(kn as f64)),
+                    ("d", Json::num(kd as f64)),
+                    ("backend", Json::str("analytic")),
+                    ("kernels", Json::str("ab")),
+                    ("vector", Json::str(kernels::vector_label())),
+                    ("rounds", Json::num(rounds as f64)),
+                    ("rounds_per_sec_scalar", Json::num(rps_scalar)),
+                    ("rounds_per_sec_auto", Json::num(rps_auto)),
+                    ("kernel_speedup", Json::num(kernel_speedup)),
+                ]));
+            }
+        }
+    }
+
     let doc = Json::obj(vec![
         ("name", Json::str("BENCH_rounds")),
         (
             "generated_by",
             Json::str("basegraph bench (alloc = legacy allocating engine \
                        via AllocatingWorkload, scratch = shipping \
-                       zero-allocation engine)"),
+                       zero-allocation engine; kernels cells A/B the \
+                       scalar vs auto SIMD dispatch)"),
         ),
         ("seed", Json::num(seed as f64)),
+        ("kernels_vector", Json::str(basegraph::kernels::vector_label())),
         ("cells", Json::arr(cells)),
     ]);
     if let Some(dir) = std::path::Path::new(&out).parent() {
@@ -1450,8 +1562,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             "n",
             "d",
             "backend",
-            "rounds/s alloc",
-            "rounds/s scratch",
+            "rounds/s alloc|scalar",
+            "rounds/s scratch|auto",
             "speedup",
             "MB/round",
         ],

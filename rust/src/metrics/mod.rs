@@ -24,6 +24,9 @@ pub struct RoundRecord {
     /// Measured wall-clock seconds since the run started (0 for paths
     /// that predate the executor layer).
     pub wall_seconds: f64,
+    /// Measured nanoseconds spent in the gossip-combine kernels this
+    /// round (analytic executor; 0 where not instrumented).
+    pub combine_ns: u64,
 }
 
 impl RoundRecord {
@@ -39,6 +42,7 @@ impl RoundRecord {
             "cum_wire_bytes",
             "sim_seconds",
             "wall_seconds",
+            "combine_ns",
         ]
     }
 
@@ -54,6 +58,7 @@ impl RoundRecord {
             self.cum_wire_bytes.to_string(),
             format!("{:.6}", self.sim_seconds),
             format!("{:.6}", self.wall_seconds),
+            self.combine_ns.to_string(),
         ]
     }
 
@@ -69,6 +74,7 @@ impl RoundRecord {
             ("cum_wire_bytes", Json::num(self.cum_wire_bytes as f64)),
             ("sim_seconds", Json::num(self.sim_seconds)),
             ("wall_seconds", Json::num(self.wall_seconds)),
+            ("combine_ns", Json::num(self.combine_ns as f64)),
         ])
     }
 }

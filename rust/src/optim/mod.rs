@@ -12,6 +12,8 @@
 //! 4. [`DecentralizedOptimizer::post_mix`] consumes the mixed messages and
 //!    produces the new parameters.
 
+use crate::kernels;
+
 /// Per-node optimizer state machine. One instance per node.
 pub trait DecentralizedOptimizer: Send {
     fn name(&self) -> String;
@@ -207,7 +209,8 @@ impl DecentralizedOptimizer for Dsgd {
         out: &mut Vec<Vec<f32>>,
     ) {
         shape_messages(out, 1, params.len());
-        out[0].extend(params.iter().zip(grads).map(|(p, g)| p - lr * g));
+        out[0].resize(params.len(), 0.0);
+        kernels::sub_scaled_f32(&mut out[0], params, grads, lr);
     }
     fn post_mix(
         &mut self,
@@ -263,11 +266,10 @@ impl DecentralizedOptimizer for Dsgdm {
         lr: f32,
         out: &mut Vec<Vec<f32>>,
     ) {
-        for (v, g) in self.v.iter_mut().zip(grads) {
-            *v = self.beta * *v + g;
-        }
+        kernels::decay_add_f32(&mut self.v, grads, self.beta);
         shape_messages(out, 1, params.len());
-        out[0].extend(params.iter().zip(&self.v).map(|(p, v)| p - lr * v));
+        out[0].resize(params.len(), 0.0);
+        kernels::sub_scaled_f32(&mut out[0], params, &self.v, lr);
     }
     fn post_mix(
         &mut self,
@@ -343,13 +345,14 @@ impl DecentralizedOptimizer for QgDsgdm {
         out: &mut Vec<Vec<f32>>,
     ) {
         shape_messages(out, 1, params.len());
-        let beta = self.beta;
-        out[0].extend(
-            params
-                .iter()
-                .zip(grads)
-                .zip(&self.m)
-                .map(|((p, g), m)| p - lr * (g + beta * m)),
+        out[0].resize(params.len(), 0.0);
+        kernels::qg_pre_f32(
+            &mut out[0],
+            params,
+            grads,
+            &self.m,
+            lr,
+            self.beta,
         );
     }
     fn post_mix(
@@ -372,12 +375,13 @@ impl DecentralizedOptimizer for QgDsgdm {
     ) {
         let mut new = mixed.pop().expect("one message");
         let inv_lr = if lr > 0.0 { 1.0 / lr } else { 0.0 };
-        for ((m, p_old), p_new) in
-            self.m.iter_mut().zip(params.iter()).zip(&new)
-        {
-            *m = self.beta * *m
-                + (1.0 - self.beta) * (p_old - p_new) * inv_lr;
-        }
+        kernels::qg_momentum_f32(
+            &mut self.m,
+            params,
+            &new,
+            self.beta,
+            inv_lr,
+        );
         std::mem::swap(params, &mut new);
         mixed.push(new);
     }
@@ -405,6 +409,9 @@ impl DecentralizedOptimizer for QgDsgdm {
 // recursion telescopes to exact SGD on the consensus subspace only if each
 // gradient keeps the η it was applied with (the original paper uses a
 // constant step; this is the schedule-safe generalization).
+//
+// D² keeps its scalar loops: the 4-term extrapolation has no kernel twin,
+// and its first-round / idle-phase branches dominate the shape.
 // ---------------------------------------------------------------------------
 
 pub struct D2 {
@@ -576,9 +583,7 @@ impl DecentralizedOptimizer for GradientTracking {
                 self.y.copy_from_slice(grads);
             }
             Some(pg) => {
-                for ((y, g), gp) in self.y.iter_mut().zip(grads).zip(pg) {
-                    *y += g - gp;
-                }
+                kernels::add_diff_f32(&mut self.y, grads, pg);
             }
         }
         match &mut self.prev_g {
@@ -589,7 +594,8 @@ impl DecentralizedOptimizer for GradientTracking {
             None => self.prev_g = Some(grads.to_vec()),
         }
         shape_messages(out, 2, params.len());
-        out[0].extend(params.iter().zip(&self.y).map(|(p, y)| p - lr * y));
+        out[0].resize(params.len(), 0.0);
+        kernels::sub_scaled_f32(&mut out[0], params, &self.y, lr);
         out[1].extend_from_slice(&self.y);
     }
     fn post_mix(

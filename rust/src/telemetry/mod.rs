@@ -73,8 +73,13 @@ pub const FEED_CAPACITY: usize = 1024;
 /// latencies, OS identifiers) rather than what the deterministic model
 /// computed. The golden-file test masks exactly these before comparing
 /// same-seed streams; everything else must be byte-identical.
-pub const MEASURED_FIELDS: &[&str] =
-    &["wall_seconds", "rtt_seconds", "heartbeat_age_seconds", "pid"];
+pub const MEASURED_FIELDS: &[&str] = &[
+    "wall_seconds",
+    "rtt_seconds",
+    "heartbeat_age_seconds",
+    "pid",
+    "combine_ns",
+];
 
 /// One telemetry event. Serialized as a flat JSON object with the
 /// variant name under `"event"` (see the module docs for the schema
@@ -101,6 +106,9 @@ pub enum Event {
         cum_messages: u64,
         cum_bytes: u64,
         cum_wire_bytes: u64,
+        /// Measured ns in the gossip-combine kernels this round (0 on
+        /// backends that don't instrument the combine phase).
+        combine_ns: u64,
     },
     /// A snapshot file hit disk (after the atomic rename).
     CheckpointWritten { round: usize, path: String },
@@ -202,6 +210,7 @@ impl Event {
             cum_messages: rec.cum_messages,
             cum_bytes: rec.cum_bytes,
             cum_wire_bytes: rec.cum_wire_bytes,
+            combine_ns: rec.combine_ns,
         }
     }
 
@@ -237,6 +246,7 @@ impl Event {
                 cum_messages,
                 cum_bytes,
                 cum_wire_bytes,
+                combine_ns,
             } => {
                 pairs.push(("round", unum(*round as u64)));
                 pairs.push(("consensus_error", num_or_null(*consensus_error)));
@@ -246,6 +256,7 @@ impl Event {
                 pairs.push(("cum_messages", unum(*cum_messages)));
                 pairs.push(("cum_bytes", unum(*cum_bytes)));
                 pairs.push(("cum_wire_bytes", unum(*cum_wire_bytes)));
+                pairs.push(("combine_ns", unum(*combine_ns)));
             }
             Event::CheckpointWritten { round, path } => {
                 pairs.push(("round", unum(*round as u64)));
@@ -586,6 +597,9 @@ struct Status {
     /// Rounds completed so far (`round + 1` of the last record).
     round: usize,
     finished: bool,
+    /// Measured combine-kernel ns of the most recent round (None until
+    /// an instrumented backend reports one).
+    last_combine_ns: Option<u64>,
     last_checkpoint: Option<String>,
     workers: Vec<WorkerView>,
     /// Completion instants of recent rounds, for the rolling rate.
@@ -622,8 +636,9 @@ impl Status {
                 self.workers.clear();
                 self.round_times.clear();
             }
-            Event::RoundCompleted { round, .. } => {
+            Event::RoundCompleted { round, combine_ns, .. } => {
                 self.round = *round + 1;
+                self.last_combine_ns = Some(*combine_ns);
                 if self.round_times.len() == RATE_WINDOW {
                     self.round_times.pop_front();
                 }
@@ -696,6 +711,13 @@ impl Status {
             ("rounds_total", unum(self.rounds_total as u64)),
             ("round", unum(self.round as u64)),
             ("rounds_per_sec", num_or_null(self.rounds_per_sec())),
+            (
+                "last_combine_ns",
+                match self.last_combine_ns {
+                    Some(ns) => unum(ns),
+                    None => Json::Null,
+                },
+            ),
             ("finished", Json::Bool(self.finished)),
             (
                 "last_checkpoint",

@@ -260,15 +260,19 @@ impl GossipPlan {
     pub fn gossip_row(&self, i: usize, xs: &[Vec<f64>], out: &mut [f64]) {
         let sw = self.self_w[i];
         let xi = &xs[i];
-        for (o, &x) in out.iter_mut().zip(xi) {
-            *o = sw * x;
-        }
-        for &(j, w) in self.neighbors(i) {
-            let xj = &xs[j];
-            for (o, &x) in out.iter_mut().zip(xj) {
-                *o += w * x;
+        let row = self.neighbors(i);
+        let mut batch: [(&[f64], f64); 4] = [(xi, 0.0); 4];
+        let mut nb = 0usize;
+        let mut scaled = false;
+        for &(j, w) in row {
+            batch[nb] = (&xs[j], w);
+            nb += 1;
+            if nb == batch.len() {
+                flush_combine64(out, xi, sw, &batch[..nb], &mut scaled);
+                nb = 0;
             }
         }
+        flush_combine64(out, xi, sw, &batch[..nb], &mut scaled);
     }
 
     /// Like [`GossipPlan::gossip_row`], but tolerant of missing neighbor
@@ -303,39 +307,84 @@ impl GossipPlan {
         out: &mut [f64],
     ) -> usize {
         let row = self.neighbors(i);
+        // Optimistic single pass (see `train::gossip_combine_slots` for
+        // the scheme): no missing payload means no renormalization, so
+        // skip the pre-scan and fuse the row through the combine kernel.
+        // Unlike the f32 form this row keeps no zero-weight guard — any
+        // missing slot (even weight 0) routes to the renorm path, and
+        // every present slot counts as used, exactly as before.
+        let mut batch: [(&[f64], f64); 4] = [(own, 0.0); 4];
+        let mut nb = 0usize;
+        let mut scaled = false;
+        let mut used = 0usize;
+        for (k, &(_, w)) in row.iter().enumerate() {
+            match get(k) {
+                None => {
+                    return self.row_slots_renorm(i, own, get, out);
+                }
+                Some(xj) => {
+                    batch[nb] = (xj, w);
+                    nb += 1;
+                    used += 1;
+                    if nb == batch.len() {
+                        flush_combine64(
+                            out,
+                            own,
+                            self.self_w[i],
+                            &batch[..nb],
+                            &mut scaled,
+                        );
+                        nb = 0;
+                    }
+                }
+            }
+        }
+        flush_combine64(out, own, self.self_w[i], &batch[..nb], &mut scaled);
+        used
+    }
+
+    /// The renormalizing slow path of [`GossipPlan::gossip_row_slots`]:
+    /// pre-scan the row for the surviving mass (accumulated in slot
+    /// order, as always), rescale, and mix.
+    #[cold]
+    fn row_slots_renorm<'a>(
+        &self,
+        i: usize,
+        own: &[f64],
+        get: impl Fn(usize) -> Option<&'a [f64]>,
+        out: &mut [f64],
+    ) -> usize {
+        let row = self.neighbors(i);
         let mut missing = 0.0f64;
-        let mut any_missing = false;
         for (k, &(_, w)) in row.iter().enumerate() {
             if get(k).is_none() {
                 missing += w;
-                any_missing = true;
             }
         }
-        let (sw, scale) = if !any_missing {
-            (self.self_w[i], 1.0)
+        let total = 1.0 - missing;
+        let (sw, scale) = if total <= f64::EPSILON {
+            // Everything (including self weight) was on lost peers:
+            // keep the old value.
+            (1.0, 0.0)
         } else {
-            let total = 1.0 - missing;
-            if total <= f64::EPSILON {
-                // Everything (including self weight) was on lost peers:
-                // keep the old value.
-                (1.0, 0.0)
-            } else {
-                (self.self_w[i] / total, 1.0 / total)
-            }
+            (self.self_w[i] / total, 1.0 / total)
         };
-        for (o, &x) in out.iter_mut().zip(own) {
-            *o = sw * x;
-        }
-        let mut used = 0;
+        let mut batch: [(&[f64], f64); 4] = [(own, 0.0); 4];
+        let mut nb = 0usize;
+        let mut scaled = false;
+        let mut used = 0usize;
         for (k, &(_, w)) in row.iter().enumerate() {
             if let Some(xj) = get(k) {
-                let wj = w * scale;
-                for (o, &x) in out.iter_mut().zip(xj) {
-                    *o += wj * x;
-                }
+                batch[nb] = (xj, w * scale);
+                nb += 1;
                 used += 1;
+                if nb == batch.len() {
+                    flush_combine64(out, own, sw, &batch[..nb], &mut scaled);
+                    nb = 0;
+                }
             }
         }
+        flush_combine64(out, own, sw, &batch[..nb], &mut scaled);
         used
     }
 
@@ -391,6 +440,23 @@ impl GossipPlan {
             }
         }
         m
+    }
+}
+
+/// Emit one f64 combine tile: the first flush folds the `sw·own` scale
+/// into the fused kernel, later flushes are pure multi-source axpys.
+fn flush_combine64(
+    out: &mut [f64],
+    own: &[f64],
+    sw: f64,
+    srcs: &[(&[f64], f64)],
+    scaled: &mut bool,
+) {
+    if *scaled {
+        crate::kernels::axpy_many_f64(out, srcs);
+    } else {
+        crate::kernels::combine_f64(out, own, sw, srcs);
+        *scaled = true;
     }
 }
 

@@ -61,43 +61,108 @@ pub fn gossip_combine_slots<'a>(
 ) -> usize {
     let sw0 = plan.self_weight(i) as f32 * (1.0 - damping) + damping;
     let row = plan.neighbors(i);
+    // Optimistic single pass: with every payload present (the
+    // analytic/threaded/process common case) there is no renormalizing
+    // to do, so skip the missing-weight pre-scan entirely and stream
+    // the row through the fused combine kernel, four sources per tile.
+    // The weights are wf·1.0 == wf bit-for-bit, so this is exactly the
+    // two-pass arithmetic. On the first missing payload `out` (not yet
+    // fully written) is abandoned and the slow path recomputes it from
+    // scratch.
+    let mut batch: [(&[f32], f32); 4] = [(own, 0.0); 4];
+    let mut nb = 0usize;
+    let mut scaled = false;
+    let mut used = 0usize;
+    for (k, &(_, wij)) in row.iter().enumerate() {
+        let wf = wij as f32 * (1.0 - damping);
+        if wf == 0.0 {
+            continue;
+        }
+        match get(k) {
+            None => {
+                return combine_slots_renorm(plan, i, damping, own, get, out);
+            }
+            Some(src) => {
+                batch[nb] = (src, wf);
+                nb += 1;
+                used += 1;
+                if nb == batch.len() {
+                    flush_combine(out, own, sw0, &batch[..nb], &mut scaled);
+                    nb = 0;
+                }
+            }
+        }
+    }
+    flush_combine(out, own, sw0, &batch[..nb], &mut scaled);
+    used
+}
+
+/// Emit one combine tile: the first flush folds the `sw·own` scale into
+/// the fused kernel, later flushes are pure multi-source axpys.
+fn flush_combine(
+    out: &mut [f32],
+    own: &[f32],
+    sw: f32,
+    srcs: &[(&[f32], f32)],
+    scaled: &mut bool,
+) {
+    if *scaled {
+        crate::kernels::axpy_many_f32(out, srcs);
+    } else {
+        crate::kernels::combine_f32(out, own, sw, srcs);
+        *scaled = true;
+    }
+}
+
+/// The renormalizing slow path: at least one nonzero-weight payload is
+/// missing, so pre-scan the row for the surviving mass, rescale, and
+/// mix. Arithmetic (including the pre-scan's accumulation order) is the
+/// original two-pass form, kernelized.
+#[cold]
+fn combine_slots_renorm<'a>(
+    plan: &GossipPlan,
+    i: usize,
+    damping: f32,
+    own: &[f32],
+    get: impl Fn(usize) -> Option<&'a [f32]>,
+    out: &mut [f32],
+) -> usize {
+    let sw0 = plan.self_weight(i) as f32 * (1.0 - damping) + damping;
+    let row = plan.neighbors(i);
     let mut missing = 0.0f32;
-    let mut any_missing = false;
     for (k, &(_, wij)) in row.iter().enumerate() {
         let wf = wij as f32 * (1.0 - damping);
         if wf != 0.0 && get(k).is_none() {
             missing += wf;
-            any_missing = true;
         }
     }
-    let (sw, scale) = if !any_missing {
-        (sw0, 1.0f32)
+    let total = 1.0 - missing;
+    let (sw, scale) = if total <= f32::EPSILON {
+        // Every surviving weight vanished: keep the old value.
+        (1.0, 0.0)
     } else {
-        let total = 1.0 - missing;
-        if total <= f32::EPSILON {
-            // Every surviving weight vanished: keep the old value.
-            (1.0, 0.0)
-        } else {
-            (sw0 / total, 1.0 / total)
-        }
+        (sw0 / total, 1.0 / total)
     };
-    for (o, &s) in out.iter_mut().zip(own) {
-        *o = sw * s;
-    }
-    let mut used = 0;
+    let mut batch: [(&[f32], f32); 4] = [(own, 0.0); 4];
+    let mut nb = 0usize;
+    let mut scaled = false;
+    let mut used = 0usize;
     for (k, &(_, wij)) in row.iter().enumerate() {
         let wf = wij as f32 * (1.0 - damping);
         if wf == 0.0 {
             continue;
         }
         if let Some(src) = get(k) {
-            let w = wf * scale;
-            for (o, &s) in out.iter_mut().zip(src) {
-                *o += w * s;
-            }
+            batch[nb] = (src, wf * scale);
+            nb += 1;
             used += 1;
+            if nb == batch.len() {
+                flush_combine(out, own, sw, &batch[..nb], &mut scaled);
+                nb = 0;
+            }
         }
     }
+    flush_combine(out, own, sw, &batch[..nb], &mut scaled);
     used
 }
 

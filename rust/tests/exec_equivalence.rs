@@ -16,6 +16,7 @@ use basegraph::exec::{
     ConsensusWorkload, ExecTrace, ExecutorKind, TrainSpec,
     TrainingWorkload,
 };
+use basegraph::kernels::{self, Path};
 use basegraph::optim::OptimizerKind;
 use basegraph::simnet::{ChurnTrace, SimConfig};
 use basegraph::telemetry::Telemetry;
@@ -758,6 +759,142 @@ fn int8_error_feedback_converges_on_the_quadratic() {
         "int8+EF failed to converge: {first} -> {q8_last} \
          (identity reached {id_last})"
     );
+}
+
+// ---------------------------------------------------------------------
+// SIMD kernel dispatch contract (pinned).
+//
+// The runtime-dispatched vector kernels (AVX2/NEON) are bit-identical
+// to the scalar reference path: a forced-scalar run reproduces the
+// dispatched run bit for bit on every backend, for both workloads and
+// every codec (lossy included). On a CPU with no vector unit the
+// dispatched path *is* the scalar path and these comparisons hold
+// trivially; CI runs a dedicated `BASEGRAPH_KERNELS=scalar` lane so
+// both sides of the dispatch stay exercised.
+// ---------------------------------------------------------------------
+
+/// Bitwise equality on final per-node states (stricter than `==`:
+/// distinguishes −0.0 from 0.0 and compares NaN payloads).
+fn assert_finals_bits_eq(a: &ExecTrace, b: &ExecTrace, what: &str) {
+    assert_eq!(a.finals.len(), b.finals.len(), "{what}: node count");
+    for (i, (x, y)) in a.finals.iter().zip(&b.finals).enumerate() {
+        assert_eq!(x.len(), y.len(), "{what}: node {i} dimension");
+        for (j, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{what}: node {i} lane {j}: {p} vs {q}"
+            );
+        }
+    }
+}
+
+#[test]
+fn consensus_is_kernel_path_invariant_on_every_backend() {
+    let n = 16;
+    let seq = TopologyKind::Base { m: 4 }.build(n, 0).unwrap();
+    let mut rng = Rng::new(7);
+    let init = gaussian_init(n, 3, &mut rng);
+    let iters = 2 * seq.len();
+    // Reference: the scalar path, forced, on the analytic engine.
+    let scalar = kernels::with_forced(Path::Scalar, || {
+        ExecutorKind::analytic()
+            .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+            .unwrap()
+    });
+    for exec in backends() {
+        let auto = exec
+            .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+            .unwrap();
+        let what =
+            format!("scalar-analytic vs dispatch-{}", auto.backend);
+        assert_finals_bits_eq(&scalar, &auto, &what);
+        let (ea, eb) = (scalar.errors(), auto.errors());
+        assert_eq!(ea.len(), eb.len(), "{what}: error curve length");
+        for (k, (x, y)) in ea.iter().zip(&eb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: error curve at round {k}"
+            );
+        }
+    }
+    // The other direction on the process backend: `with_forced` stops
+    // at the process boundary, but workers inherit the environment, so
+    // BASEGRAPH_KERNELS=scalar forces *their* kernels. (Harmless to any
+    // concurrently spawned worker — scalar is bit-identical anyway.)
+    let prev = std::env::var(kernels::KERNELS_ENV).ok();
+    std::env::set_var(kernels::KERNELS_ENV, "scalar");
+    let proc_scalar = process_backend(2)
+        .run(&mut ConsensusWorkload::new(init.clone()), &seq, iters)
+        .unwrap();
+    match prev {
+        Some(v) => std::env::set_var(kernels::KERNELS_ENV, v),
+        None => std::env::remove_var(kernels::KERNELS_ENV),
+    }
+    assert_finals_bits_eq(
+        &scalar,
+        &proc_scalar,
+        "scalar-analytic vs scalar-process",
+    );
+}
+
+#[test]
+fn training_with_codecs_is_kernel_path_invariant_on_every_backend() {
+    let n = 8;
+    let seq = TopologyKind::Base { m: 2 }.build(n, 0).unwrap();
+    let cfg = TrainConfig {
+        rounds: 10,
+        lr: 0.2,
+        warmup: 2,
+        cosine: true,
+        optimizer: OptimizerKind::Dsgdm { momentum: 0.9 },
+        eval_every: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    for codec in Codec::all_default() {
+        let run = |exec: &ExecutorKind| -> ExecTrace {
+            let (model, data) = quadratic_fixed_targets(n, 5, 3);
+            let mut w = TrainingWorkload::new(&model, &cfg, data, &[])
+                .with_wire(TrainSpec::Quadratic { d: 5, seed: 3 })
+                .with_codec(codec);
+            exec.run(&mut w, &seq, cfg.rounds).unwrap()
+        };
+        let scalar = kernels::with_forced(Path::Scalar, || {
+            run(&ExecutorKind::analytic())
+        });
+        for exec in backends() {
+            let auto = run(&exec);
+            let what = format!(
+                "codec {}: scalar-analytic vs dispatch-{}",
+                codec.label(),
+                auto.backend
+            );
+            assert_finals_bits_eq(&scalar, &auto, &what);
+            assert_eq!(
+                scalar.run.records.len(),
+                auto.run.records.len(),
+                "{what}: record counts"
+            );
+            for (x, y) in
+                scalar.run.records.iter().zip(&auto.run.records)
+            {
+                assert_eq!(
+                    x.train_loss.to_bits(),
+                    y.train_loss.to_bits(),
+                    "{what}: train_loss at round {}",
+                    x.round
+                );
+                assert_eq!(
+                    x.consensus_error.to_bits(),
+                    y.consensus_error.to_bits(),
+                    "{what}: consensus_error at round {}",
+                    x.round
+                );
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

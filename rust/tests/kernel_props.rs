@@ -1,0 +1,393 @@
+//! Kernel differential property suite: the scalar reference path and
+//! the runtime-selected vector path (AVX2/NEON) must be **bit-identical**
+//! on every op, every length (lane remainders included), unaligned
+//! sub-slices, and adversarial values (NaN, ±inf, subnormals, ±0).
+//! On a CPU with no vector path the comparisons degenerate to
+//! scalar-vs-scalar and pass trivially — the CI scalar lane still
+//! exercises every assertion.
+//!
+//! Also pins the `BASEGRAPH_KERNELS` misuse contract: an unrecognized
+//! value is a clean CLI error naming the variable, not a panic.
+
+use basegraph::kernels::{self, Path, INT8_CHUNK};
+use basegraph::util::rng::Rng;
+
+/// Lengths around every lane boundary (f32 ×8/×4, f64 ×4/×2), plus
+/// empty, singleton, and int8-chunk edges.
+const LENS: &[usize] = &[
+    0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 100, 255, 256,
+    257, 513, 1000,
+];
+
+/// Random values with specials (NaN, ±inf, subnormal, ±0, f16/bf16
+/// overflow bait) sprinkled at deterministic positions.
+fn vec_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let specials = [
+        0.0f32,
+        -0.0,
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE / 4.0, // subnormal
+        -f32::MIN_POSITIVE,
+        6.5e4,
+        -1.0e38,
+        1.0e-40, // subnormal
+    ];
+    (0..n)
+        .map(|i| {
+            if i % 7 == 3 {
+                specials[(i / 7) % specials.len()]
+            } else {
+                rng.normal() as f32 * 3.0
+            }
+        })
+        .collect()
+}
+
+fn vec_f64(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let specials = [
+        0.0f64,
+        -0.0,
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::MIN_POSITIVE / 4.0,
+        -1.0e300,
+    ];
+    (0..n)
+        .map(|i| {
+            if i % 7 == 3 {
+                specials[(i / 7) % specials.len()]
+            } else {
+                rng.normal() * 3.0
+            }
+        })
+        .collect()
+}
+
+/// Run `f` under the forced scalar path, then (when this CPU has one)
+/// under the forced vector path.
+fn run_both<R>(f: impl Fn() -> R) -> (R, Option<R>) {
+    let s = kernels::with_forced(Path::Scalar, &f);
+    let v = kernels::vector_path().map(|p| kernels::with_forced(p, &f));
+    (s, v)
+}
+
+fn assert_bits_f32(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: lane {i}: scalar {x:?} vs vector {y:?}"
+        );
+    }
+}
+
+fn assert_bits_f64(tag: &str, a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: lane {i}: scalar {x:?} vs vector {y:?}"
+        );
+    }
+}
+
+#[test]
+fn f32_elementwise_family_bit_identical() {
+    let mut rng = Rng::new(11);
+    for &n in LENS {
+        let src = vec_f32(&mut rng, n);
+        let base = vec_f32(&mut rng, n);
+        let aux = vec_f32(&mut rng, n);
+        for w in [0.0f32, -0.0, 0.37, -1.25, f32::INFINITY, f32::NAN] {
+            let (s, v) = run_both(|| {
+                let mut out = base.clone();
+                kernels::scale_f32(&mut out, &src, w);
+                kernels::axpy_f32(&mut out, &aux, -w);
+                let mut o2 = base.clone();
+                kernels::sub_scaled_f32(&mut o2, &src, &aux, w);
+                out.extend_from_slice(&o2);
+                out
+            });
+            if let Some(v) = v {
+                assert_bits_f32(&format!("scale/axpy n={n} w={w}"), &s, &v);
+            }
+        }
+    }
+}
+
+#[test]
+fn optimizer_kernels_bit_identical() {
+    let mut rng = Rng::new(22);
+    for &n in LENS {
+        let p = vec_f32(&mut rng, n);
+        let g = vec_f32(&mut rng, n);
+        let m0 = vec_f32(&mut rng, n);
+        let (s, v) = run_both(|| {
+            let mut momentum = m0.clone();
+            kernels::decay_add_f32(&mut momentum, &g, 0.9);
+            let mut half = vec![0.0f32; n];
+            kernels::qg_pre_f32(&mut half, &p, &g, &m0, 0.05, 0.9);
+            let mut m = m0.clone();
+            kernels::qg_momentum_f32(&mut m, &p, &half, 0.9, 20.0);
+            let mut y = m0.clone();
+            kernels::add_diff_f32(&mut y, &g, &p);
+            (momentum, half, m, y)
+        });
+        if let Some(v) = v {
+            assert_bits_f32(&format!("decay_add n={n}"), &s.0, &v.0);
+            assert_bits_f32(&format!("qg_pre n={n}"), &s.1, &v.1);
+            assert_bits_f32(&format!("qg_momentum n={n}"), &s.2, &v.2);
+            assert_bits_f32(&format!("add_diff n={n}"), &s.3, &v.3);
+        }
+    }
+}
+
+#[test]
+fn error_feedback_kernels_bit_identical() {
+    let mut rng = Rng::new(33);
+    for &n in LENS {
+        let x0 = vec_f32(&mut rng, n);
+        let e0 = vec_f32(&mut rng, n);
+        let (s, v) = run_both(|| {
+            let mut x = x0.clone();
+            let mut e = e0.clone();
+            kernels::ef_accumulate_f32(&mut x, &mut e);
+            kernels::ef_residual_f32(&mut e, &x);
+            (x, e)
+        });
+        if let Some(v) = v {
+            assert_bits_f32(&format!("ef x n={n}"), &s.0, &v.0);
+            assert_bits_f32(&format!("ef e n={n}"), &s.1, &v.1);
+        }
+    }
+}
+
+/// Fused combine with 0..=5 sources of ragged lengths — exercises the
+/// ≤4-source tiling, the `min(len)` zip semantics, and `axpy_many`.
+#[test]
+fn combine_families_bit_identical_on_ragged_sources() {
+    let mut rng = Rng::new(44);
+    for &n in LENS {
+        let own32 = vec_f32(&mut rng, n);
+        let own64 = vec_f64(&mut rng, n);
+        let srcs32: Vec<Vec<f32>> = (0..5)
+            .map(|k| vec_f32(&mut rng, n.saturating_sub(k % 3)))
+            .collect();
+        let srcs64: Vec<Vec<f64>> = (0..5)
+            .map(|k| vec_f64(&mut rng, n.saturating_sub(k % 3)))
+            .collect();
+        for take in 0..=srcs32.len() {
+            let pairs32: Vec<(&[f32], f32)> = srcs32[..take]
+                .iter()
+                .enumerate()
+                .map(|(k, s)| (s.as_slice(), 0.11 * (k as f32 + 1.0)))
+                .collect();
+            let pairs64: Vec<(&[f64], f64)> = srcs64[..take]
+                .iter()
+                .enumerate()
+                .map(|(k, s)| (s.as_slice(), 0.11 * (k as f64 + 1.0)))
+                .collect();
+            let (s, v) = run_both(|| {
+                let mut out32 = vec![7.0f32; n];
+                kernels::combine_f32(&mut out32, &own32, 0.4, &pairs32);
+                kernels::axpy_many_f32(&mut out32, &pairs32);
+                let mut out64 = vec![7.0f64; n];
+                kernels::combine_f64(&mut out64, &own64, 0.4, &pairs64);
+                kernels::axpy_many_f64(&mut out64, &pairs64);
+                (out32, out64)
+            });
+            if let Some(v) = v {
+                let tag = format!("combine n={n} srcs={take}");
+                assert_bits_f32(&tag, &s.0, &v.0);
+                assert_bits_f64(&tag, &s.1, &v.1);
+            }
+        }
+    }
+}
+
+#[test]
+fn consensus_f64_kernels_bit_identical() {
+    let mut rng = Rng::new(55);
+    for &n in LENS {
+        let x = vec_f64(&mut rng, n);
+        let acc0 = vec_f64(&mut rng, n);
+        let (s, v) = run_both(|| {
+            let mut acc = acc0.clone();
+            kernels::add_assign_f64(&mut acc, &x);
+            kernels::div_assign_f64(&mut acc, 3.0);
+            let mut err = 0.25f64;
+            kernels::sq_err_acc_f64(&acc, &x, &mut err);
+            (acc, err)
+        });
+        if let Some(v) = v {
+            assert_bits_f64(&format!("add/div n={n}"), &s.0, &v.0);
+            assert_eq!(
+                s.1.to_bits(),
+                v.1.to_bits(),
+                "sq_err n={n}: scalar {} vs vector {}",
+                s.1,
+                v.1
+            );
+        }
+    }
+}
+
+#[test]
+fn codec_kernels_bit_identical() {
+    let mut rng = Rng::new(66);
+    for &n in LENS {
+        let x = vec_f32(&mut rng, n);
+        let codes0: Vec<u8> = (0..n).map(|i| (i * 37) as u8).collect();
+        let (s, v) = run_both(|| {
+            let mut bq = x.clone();
+            kernels::bf16_quantize_f32(&mut bq);
+            let mut packed = vec![0u8; 2 * n];
+            kernels::bf16_pack(&x, &mut packed);
+            let mut unpacked = vec![0.0f32; n];
+            kernels::bf16_unpack(&packed, &mut unpacked);
+            let mut iq = x.clone();
+            kernels::int8_quantize_f32(&mut iq);
+            let mut deq = vec![0.0f32; n];
+            // A scale of 2^-3 keeps dequantization exact in f32.
+            kernels::int8_dequant(&codes0, 0.125, &mut deq);
+            let mut f16 = x.clone();
+            kernels::f16_quantize_f32(&mut f16);
+            (bq, packed, unpacked, iq, deq, f16)
+        });
+        if let Some(v) = v {
+            assert_bits_f32(&format!("bf16_quant n={n}"), &s.0, &v.0);
+            assert_eq!(s.1, v.1, "bf16_pack n={n}");
+            assert_bits_f32(&format!("bf16_unpack n={n}"), &s.2, &v.2);
+            assert_bits_f32(&format!("int8_quant n={n}"), &s.3, &v.3);
+            assert_bits_f32(&format!("int8_dequant n={n}"), &s.4, &v.4);
+            assert_bits_f32(&format!("f16_quant n={n}"), &s.5, &v.5);
+        }
+    }
+}
+
+/// Per-chunk int8 code bytes on adversarial chunks: the rounding
+/// (half-away-from-zero), the ±127 clamp, NaN→0 and −0→0 must match the
+/// scalar `int8_code` exactly, byte for byte.
+#[test]
+fn int8_codes_bit_identical_on_adversarial_chunks() {
+    let mut rng = Rng::new(77);
+    for &n in &[1usize, 7, 8, 9, 31, 100, 255, INT8_CHUNK] {
+        let mut chunk = vec_f32(&mut rng, n);
+        // Bait the clamp and the .5 rounding boundary explicitly.
+        for (i, v) in chunk.iter_mut().enumerate() {
+            match i % 11 {
+                0 => *v = 126.5,
+                1 => *v = -126.5,
+                2 => *v = 127.49,
+                3 => *v = 1.0e30,  // clamp high
+                4 => *v = -1.0e30, // clamp low
+                5 => *v = 0.5,
+                6 => *v = -0.5,
+                _ => {}
+            }
+        }
+        for s in [1.0f32, 0.125, kernels::pow2f(-127)] {
+            let (a, b) = run_both(|| {
+                let mut codes = vec![0u8; chunk.len()];
+                kernels::int8_codes(&chunk, s, &mut codes);
+                let mut rq = chunk.clone();
+                kernels::int8_requant_f32(&mut rq, s);
+                (codes, rq)
+            });
+            if let Some(b) = b {
+                assert_eq!(a.0, b.0, "int8_codes n={n} s={s}");
+                assert_bits_f32(&format!("int8_requant n={n} s={s}"), &a.1, &b.1);
+            }
+        }
+    }
+}
+
+#[test]
+fn narrow_widen_bit_identical() {
+    let mut rng = Rng::new(88);
+    for &n in LENS {
+        let x64 = vec_f64(&mut rng, n);
+        let x32 = vec_f32(&mut rng, n);
+        let (s, v) = run_both(|| {
+            let mut narrow = vec![0.0f32; n];
+            kernels::narrow_f64(&x64, &mut narrow);
+            let mut wide = vec![0.0f64; n];
+            kernels::widen_f32(&x32, &mut wide);
+            (narrow, wide)
+        });
+        if let Some(v) = v {
+            assert_bits_f32(&format!("narrow n={n}"), &s.0, &v.0);
+            assert_bits_f64(&format!("widen n={n}"), &s.1, &v.1);
+        }
+    }
+}
+
+/// Unaligned sub-slices: `&x[1..]` shifts every pointer off the 32-byte
+/// (AVX2) / 16-byte (NEON) boundary; the kernels use unaligned loads,
+/// so results must not change by a bit.
+#[test]
+fn unaligned_subslices_bit_identical() {
+    let mut rng = Rng::new(99);
+    for &n in &[2usize, 9, 17, 33, 258, 1001] {
+        let src = vec_f32(&mut rng, n);
+        let base = vec_f32(&mut rng, n);
+        let src64 = vec_f64(&mut rng, n);
+        let base64 = vec_f64(&mut rng, n);
+        let (s, v) = run_both(|| {
+            let mut out = base.clone();
+            kernels::scale_f32(&mut out[1..], &src[1..], 1.5);
+            kernels::axpy_f32(&mut out[1..], &src[1..], -0.75);
+            let mut out64 = base64.clone();
+            kernels::add_assign_f64(&mut out64[1..], &src64[1..]);
+            kernels::div_assign_f64(&mut out64[1..], 7.0);
+            let mut packed = vec![0u8; 2 * (n - 1)];
+            kernels::bf16_pack(&src[1..], &mut packed);
+            (out, out64, packed)
+        });
+        if let Some(v) = v {
+            assert_bits_f32(&format!("unaligned f32 n={n}"), &s.0, &v.0);
+            assert_bits_f64(&format!("unaligned f64 n={n}"), &s.1, &v.1);
+            assert_eq!(s.2, v.2, "unaligned bf16_pack n={n}");
+        }
+    }
+}
+
+/// `BASEGRAPH_KERNELS=bogus` must be a clean startup error naming the
+/// variable and the bad value — not a panic, not a silent fallback.
+#[test]
+fn bogus_kernels_env_is_a_clean_cli_error() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_basegraph"))
+        .arg("list")
+        .env("BASEGRAPH_KERNELS", "bogus")
+        .output()
+        .expect("spawn basegraph");
+    assert!(!out.status.success(), "bogus kernel env must fail");
+    assert_eq!(out.status.code(), Some(2), "usage-error exit code");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("BASEGRAPH_KERNELS"), "stderr: {err}");
+    assert!(err.contains("bogus"), "stderr: {err}");
+    assert!(!err.contains("panicked"), "stderr: {err}");
+}
+
+/// The two accepted values both start the binary normally.
+#[test]
+fn scalar_and_auto_env_values_are_accepted() {
+    for val in ["scalar", "auto"] {
+        let out =
+            std::process::Command::new(env!("CARGO_BIN_EXE_basegraph"))
+                .arg("list")
+                .env("BASEGRAPH_KERNELS", val)
+                .output()
+                .expect("spawn basegraph");
+        assert!(
+            out.status.success(),
+            "{val}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}

@@ -110,6 +110,16 @@ fn same_seed_streams_are_byte_identical_after_masking() {
         .filter(|v| v.get("event").unwrap().as_str() == Some("round_completed"))
         .count();
     assert_eq!(rounds, 12);
+    // Every round_completed carries the measured combine_ns field (its
+    // value is masked above — it's wall-clock, not model output).
+    for v in &lines {
+        if v.get("event").unwrap().as_str() == Some("round_completed") {
+            assert!(
+                v.get("combine_ns").unwrap().as_f64().is_some(),
+                "round_completed must report combine_ns"
+            );
+        }
+    }
     // A different seed must change the masked stream (the contract is
     // determinism, not insensitivity).
     let c = consensus_stream(&dir, "c", 8);
@@ -265,6 +275,12 @@ fn http_status_tracks_a_live_run() {
     assert_eq!(
         final_status.get("backend").unwrap().as_str(),
         Some("analytic")
+    );
+    // The analytic engine instruments its combine phase; after a run
+    // the status snapshot reports the last round's measurement.
+    assert!(
+        final_status.get("last_combine_ns").unwrap().as_f64().is_some(),
+        "status must surface last_combine_ns after an analytic run"
     );
 
     // /events?since= tails the ring: a zero cursor replays recent
